@@ -1,0 +1,176 @@
+//! End-to-end driver: exercises the full three-layer system on a real
+//! small workload and reports the paper's headline metric (processing-
+//! time gain without accuracy loss). Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Pipeline covered:
+//!   1. AOT artifacts (JAX/Pallas → HLO text) loaded via PJRT and
+//!      cross-validated against the native oracle (L1/L2 ⇄ L3 seam);
+//!   2. the paper's sweep protocol (γ × ρ grid, fast vs origin) on the
+//!      synthetic workload — gains + Theorem-2 objective equality;
+//!   3. a real downstream task: digits domain adaptation, accuracy vs
+//!      the label-blind entropic baseline;
+//!   4. the TCP service handling batched requests.
+//!
+//! Run: `cargo run --release --example end_to_end`
+
+use grpot::benchlib::Table;
+use grpot::coordinator::config::{DatasetSpec, Method, SweepConfig};
+use grpot::coordinator::metrics::Metrics;
+use grpot::coordinator::{service, sweep};
+use grpot::eval;
+use grpot::jsonlite::Value;
+use grpot::ot::dual::{DualOracle, DualParams, OtProblem};
+use grpot::ot::plan::recover_plan;
+use grpot::prelude::*;
+use grpot::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== grpot end-to-end driver ===\n");
+
+    // ---------------------------------------------------------------
+    // 1. AOT seam: artifacts → PJRT → numerics check vs native oracle.
+    // ---------------------------------------------------------------
+    println!("[1/4] AOT artifact validation");
+    match grpot::runtime::Manifest::load(&grpot::runtime::artifact_dir()) {
+        Ok(manifest) => {
+            let runtime = grpot::runtime::PjrtRuntime::cpu()?;
+            let entry = manifest.entries.iter().min_by_key(|e| e.m * e.n).unwrap();
+            let (l, g, n) = (entry.num_groups, entry.group_size, entry.n);
+            let mut rng = Pcg64::new(1);
+            let m = l * g;
+            let cost = grpot::linalg::Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+            let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+            let prob = OtProblem::from_parts(
+                vec![1.0 / m as f64; m],
+                vec![1.0 / n as f64; n],
+                &cost,
+                &labels,
+            );
+            let params = DualParams::new(0.5, 0.5);
+            let mut oracle = grpot::runtime::XlaDualOracle::from_problem(
+                &runtime,
+                &prob,
+                &params,
+                &grpot::runtime::artifact_dir(),
+            )?;
+            let x: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.3, 0.5)).collect();
+            let mut gx = vec![0.0; prob.dim()];
+            let fx = oracle.eval(&x, &mut gx);
+            let mut gr = vec![0.0; prob.dim()];
+            let (fr, _) = grpot::ot::dual::eval_dense(&prob, &params, &x, &mut gr);
+            println!(
+                "  artifact {} vs native: obj err {:.2e} (platform {})",
+                entry.name,
+                (fx - fr).abs(),
+                runtime.platform()
+            );
+            anyhow::ensure!((fx - fr).abs() < 1e-9, "AOT numerics mismatch");
+        }
+        Err(_) => println!("  (artifacts not built — run `make artifacts`; skipping seam check)"),
+    }
+
+    // ---------------------------------------------------------------
+    // 2. Paper sweep: gains on the synthetic workload.
+    // ---------------------------------------------------------------
+    println!("\n[2/4] paper sweep (synthetic |L|=40, g=10 → m=n=400)");
+    let cfg = SweepConfig {
+        dataset: DatasetSpec {
+            family: "synthetic".into(),
+            param1: 40,
+            param2: 10,
+            ..Default::default()
+        },
+        gammas: vec![0.01, 0.1, 1.0, 10.0],
+        rhos: vec![0.2, 0.4, 0.6, 0.8],
+        methods: vec![Method::Fast, Method::Origin],
+        r: 10,
+        threads: 1,
+        max_iters: 400,
+    };
+    let metrics = Metrics::new();
+    let report = sweep::run_sweep(&cfg, &metrics)?;
+    let mut table = Table::new(
+        "end-to-end sweep: per-γ totals over ρ ∈ {0.2,0.4,0.6,0.8}",
+        &["gamma", "t_origin[s]", "t_fast[s]", "gain"],
+    );
+    for a in &report.aggregates {
+        let t = |m: Method| {
+            a.totals.iter().find(|(x, _)| *x == m).map(|&(_, t)| t).unwrap_or(f64::NAN)
+        };
+        table.row(vec![
+            format!("{}", a.gamma),
+            format!("{:.3}", t(Method::Origin)),
+            format!("{:.3}", t(Method::Fast)),
+            a.gain.map_or("-".into(), |g| format!("{g:.2}x")),
+        ]);
+    }
+    table.emit(&grpot::benchlib::report_dir(), "end_to_end_sweep");
+    // Theorem 2 on the whole grid.
+    for gamma in &cfg.gammas {
+        for rho in &cfg.rhos {
+            let get = |m: Method| {
+                report
+                    .records
+                    .iter()
+                    .find(|r| r.method == m && r.gamma == *gamma && r.rho == *rho)
+                    .unwrap()
+                    .dual_objective
+            };
+            anyhow::ensure!(
+                get(Method::Fast) == get(Method::Origin),
+                "objective mismatch at gamma={gamma} rho={rho}"
+            );
+        }
+    }
+    println!("  Theorem 2 verified on all {} grid points", cfg.gammas.len() * cfg.rhos.len());
+
+    // ---------------------------------------------------------------
+    // 3. Downstream accuracy: digits adaptation.
+    // ---------------------------------------------------------------
+    println!("\n[3/4] digits adaptation (U→M, 300 samples/domain)");
+    let pair = grpot::data::digits::usps_to_mnist(300, 0xE2E);
+    let prob = OtProblem::from_dataset(&pair);
+    let base = eval::no_adaptation_accuracy(&pair);
+    let sol_cfg = FastOtConfig { gamma: 0.01, rho: 0.6, ..Default::default() };
+    let res = solve_fast_ot(&prob, &sol_cfg);
+    let plan = recover_plan(&prob, &sol_cfg.params(), &res.x);
+    let acc = eval::otda_accuracy(&pair, &prob, &plan);
+    println!("  no adaptation  : {base:.3}");
+    println!("  group-sparse OT: {acc:.3} (solve {:.2}s, {:.1}% grads skipped)",
+        res.wall_time_s,
+        100.0 * res.stats.grads_skipped as f64
+            / (res.stats.grads_computed + res.stats.grads_skipped).max(1) as f64);
+
+    // ---------------------------------------------------------------
+    // 4. Service: batched requests.
+    // ---------------------------------------------------------------
+    println!("\n[4/4] TCP service smoke");
+    let handle = service::serve("127.0.0.1:0", 2)?;
+    let mut client = service::Client::connect(&handle.addr)?;
+    let resp = client.call(
+        &Value::obj()
+            .set("op", "solve")
+            .set(
+                "dataset",
+                Value::obj()
+                    .set("family", "synthetic")
+                    .set("param1", 10usize)
+                    .set("param2", 10usize)
+                    .set("seed", 3usize),
+            )
+            .set("gamma", 0.1)
+            .set("rho", 0.6)
+            .set("method", "fast"),
+    )?;
+    anyhow::ensure!(resp.get("ok").and_then(Value::as_bool) == Some(true), "{resp}");
+    println!(
+        "  service solve: dual={:.6} wall={:.3}s",
+        resp.get("dual_objective").and_then(Value::as_f64).unwrap(),
+        resp.get("wall_time_s").and_then(Value::as_f64).unwrap()
+    );
+    handle.shutdown();
+
+    println!("\nend_to_end OK — see reports/end_to_end_sweep.md");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Serving demo: start the TCP OT service, fire concurrent solve
+//! requests from client threads, and report latency / throughput — the
+//! "OT-as-a-service" deployment shape, with Python nowhere on the
+//! request path.
+//!
+//! Run: `cargo run --release --example serve`
+
+use grpot::benchlib::Summary;
+use grpot::coordinator::service::{serve, Client};
+use grpot::jsonlite::Value;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let handle = serve("127.0.0.1:0", 4)?;
+    let addr = handle.addr;
+    println!("service up on {addr}");
+
+    // Warm the dataset cache with one request.
+    let mut warm = Client::connect(&addr)?;
+    assert!(warm.ping()?);
+    let req = |gamma: f64, rho: f64| {
+        Value::obj()
+            .set("op", "solve")
+            .set(
+                "dataset",
+                Value::obj()
+                    .set("family", "synthetic")
+                    .set("param1", 10usize)
+                    .set("param2", 10usize)
+                    .set("seed", 7usize),
+            )
+            .set("gamma", gamma)
+            .set("rho", rho)
+            .set("method", "fast")
+    };
+    let first = warm.call(&req(0.1, 0.6))?;
+    anyhow::ensure!(
+        first.get("ok").and_then(Value::as_bool) == Some(true),
+        "warmup failed: {first}"
+    );
+    println!(
+        "warmup solve: dual={:.6} acc={:.3}",
+        first.get("dual_objective").and_then(Value::as_f64).unwrap(),
+        first.get("otda_accuracy").and_then(Value::as_f64).unwrap()
+    );
+
+    // Concurrent clients sweeping (γ, ρ) pairs.
+    let clients = 4;
+    let per_client = 6;
+    let latencies = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let latencies = Arc::clone(&latencies);
+            let req = &req;
+            s.spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                for k in 0..per_client {
+                    let gamma = [0.05, 0.1, 0.5][(c + k) % 3];
+                    let rho = [0.4, 0.6, 0.8][(c * 2 + k) % 3];
+                    let t = Instant::now();
+                    let resp = client.call(&req(gamma, rho)).expect("call");
+                    let dt = t.elapsed().as_secs_f64();
+                    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp}");
+                    latencies.lock().unwrap().push(dt);
+                }
+            });
+        }
+    });
+    let total = t0.elapsed().as_secs_f64();
+    let lats = latencies.lock().unwrap().clone();
+    let s = Summary::from_samples(&lats);
+    println!("\n== serving stats ({} requests, {clients} concurrent clients) ==", lats.len());
+    println!("throughput : {:.2} req/s", lats.len() as f64 / total);
+    println!(
+        "latency    : median {:.1} ms | p90 {:.1} ms | max {:.1} ms",
+        s.median * 1e3,
+        s.p90 * 1e3,
+        s.max * 1e3
+    );
+
+    // Metrics from the server itself.
+    let metrics = warm.call(&Value::obj().set("op", "metrics"))?;
+    let hits = metrics
+        .get_path(&["metrics", "counters", "service.cache_hits"])
+        .and_then(Value::as_usize)
+        .unwrap_or(0);
+    println!("cache hits : {hits} (cost matrix generated once, reused after)");
+    assert!(hits >= clients * per_client - 1);
+
+    handle.shutdown();
+    println!("\nserve OK");
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT lowering: JAX/Pallas dual oracle → HLO text + manifest.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: the
+image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-instruction-id
+protos, while the text parser reassigns ids cleanly (see
+/opt/xla-example/README.md).
+
+Each problem shape gets its own artifact (XLA programs are
+shape-specialized); ``manifest.json`` indexes them so the Rust runtime
+can pick the artifact matching a problem at load time. Hyperparameters
+``tau``/``lambda_quad`` are *runtime scalar inputs*, so one artifact
+serves the whole (γ, ρ) sweep grid.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (see Makefile).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from .model import dual_obj_grad
+
+# Default shape set: matched to the Rust xla_backend bench and the
+# quickstart example (synthetic controlled dataset, n = m = L·g).
+DEFAULT_SHAPES = [
+    # (num_groups, group_size, n)
+    (4, 5, 20),
+    (10, 10, 100),
+    (20, 10, 200),
+    (40, 10, 400),
+]
+
+DTYPE = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_shape(num_groups: int, group_size: int, n: int) -> str:
+    m = num_groups * group_size
+    s = lambda *shape: jax.ShapeDtypeStruct(shape, DTYPE)  # noqa: E731
+    lowered = jax.jit(
+        lambda alpha, beta, a, b, cost, tau, lq: dual_obj_grad(
+            alpha, beta, a, b, cost, tau, lq,
+            num_groups=num_groups, group_size=group_size, use_pallas=True,
+        )
+    ).lower(s(m), s(n), s(m), s(n), s(m, n), s(), s())
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, shapes) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for num_groups, group_size, n in shapes:
+        m = num_groups * group_size
+        name = f"dual_obj_grad_L{num_groups}_g{group_size}_n{n}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_shape(num_groups, group_size, n)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kind": "dual_obj_grad",
+                "num_groups": num_groups,
+                "group_size": group_size,
+                "m": m,
+                "n": n,
+                "dtype": "f64",
+                "file": os.path.basename(path),
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                # Input order the Rust runtime must follow:
+                "inputs": ["alpha[m]", "beta[n]", "a[m]", "b[n]", "cost[m,n]",
+                           "tau[]", "lambda_quad[]"],
+                "outputs": ["neg_obj[]", "grad_alpha[m]", "grad_beta[n]"],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')} ({len(entries)} entries)")
+    return manifest
+
+
+def parse_shapes(spec: str):
+    """Parse 'L,g,n;L,g,n;…'."""
+    shapes = []
+    for part in spec.split(";"):
+        l, g, n = (int(tok) for tok in part.split(","))
+        shapes.append((l, g, n))
+    return shapes
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument(
+        "--shapes",
+        default=None,
+        help="semicolon-separated L,g,n triples (default: built-in set)",
+    )
+    args = p.parse_args()
+    shapes = parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPES
+    build(args.out, shapes)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

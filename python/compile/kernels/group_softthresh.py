@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: grouped soft-threshold transport-plan gradient.
+
+One program instance handles one ``(group, column-tile)`` block of the
+plan: it materializes the ``g × TJ`` tile of ``F = alpha ⊕ beta − C``,
+reduces the positive part to the per-column group norm ``z``, applies
+the soft threshold (Eq. 5 of the paper) and writes both the plan tile
+and the ``z`` row.
+
+TPU shaping notes (DESIGN.md §Hardware-Adaptation): the kernel is pure
+VPU work (no matmul), so the design target is the HBM↔VMEM schedule.
+The BlockSpec streams one ``g × TJ`` cost tile per step (the only O(mn)
+operand); ``alpha``/``beta`` tiles are O(g + TJ) and stay resident.
+With f32 and the default TJ ≤ 256, the live tile set is
+``g·TJ·(2 copies) + g + TJ`` floats — a few hundred KB for g ≤ 256,
+comfortably inside one core's ~16 MB VMEM, leaving headroom for
+double-buffering the cost stream. ``interpret=True`` everywhere: the
+CPU PJRT plugin cannot execute Mosaic custom-calls, and all numerics
+are validated through this path (pytest vs ``ref.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(alpha_ref, beta_ref, tau_ref, lq_ref, c_ref, t_ref, z_ref):
+    """One (group, column-tile) program.
+
+    alpha_ref: (g,)     — this group's alpha slice
+    beta_ref:  (tj,)    — this tile's beta slice
+    tau_ref:   (1, 1)   — skip threshold  tau = gamma*rho
+    lq_ref:    (1, 1)   — quadratic coeff lambda_quad = gamma*(1-rho)
+    c_ref:     (g, tj)  — cost tile
+    t_ref:     (g, tj)  — plan tile (output)
+    z_ref:     (1, tj)  — group norm row (output)
+    """
+    f = alpha_ref[...][:, None] + beta_ref[...][None, :] - c_ref[...]
+    fp = jnp.maximum(f, 0.0)
+    z = jnp.sqrt(jnp.sum(fp * fp, axis=0, keepdims=True))  # (1, tj)
+    tau = tau_ref[0, 0]
+    lq = lq_ref[0, 0]
+    safe_z = jnp.where(z > 0.0, z, 1.0)
+    scale = jnp.where(z > tau, (z - tau) / (lq * safe_z), 0.0)
+    t_ref[...] = fp * scale
+    z_ref[...] = z
+
+
+def _pick_tile(n: int, max_tile: int = 256) -> int:
+    """Largest divisor of n not exceeding max_tile (keeps the grid exact
+    without padding)."""
+    best = 1
+    for t in range(1, min(n, max_tile) + 1):
+        if n % t == 0:
+            best = t
+    return best
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_groups", "group_size", "column_tile")
+)
+def grad_psi_pallas(
+    alpha,
+    beta,
+    cost,
+    tau,
+    lambda_quad,
+    *,
+    num_groups: int,
+    group_size: int,
+    column_tile: int | None = None,
+):
+    """Pallas-kernel version of ``ref.grad_psi_uniform``.
+
+    Returns ``(t, z)``: the plan (m × n) and the group norms (L × n).
+    """
+    m, n = cost.shape
+    assert m == num_groups * group_size
+    tj = column_tile or _pick_tile(n)
+    assert n % tj == 0, f"column tile {tj} must divide n={n}"
+    dtype = cost.dtype
+    tau2 = jnp.asarray(tau, dtype=dtype).reshape(1, 1)
+    lq2 = jnp.asarray(lambda_quad, dtype=dtype).reshape(1, 1)
+
+    grid = (num_groups, n // tj)
+    t, z = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((group_size,), lambda l, j: (l,)),
+            pl.BlockSpec((tj,), lambda l, j: (j,)),
+            pl.BlockSpec((1, 1), lambda l, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda l, j: (0, 0)),
+            pl.BlockSpec((group_size, tj), lambda l, j: (l, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((group_size, tj), lambda l, j: (l, j)),
+            pl.BlockSpec((1, tj), lambda l, j: (l, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), dtype),
+            jax.ShapeDtypeStruct((num_groups, n), dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(alpha, beta, tau2, lq2, cost)
+    return t, z

@@ -1,0 +1,84 @@
+"""L2 JAX model: the negated-dual oracle of Problem 4.
+
+Assembles the full (value, gradient) computation the Rust coordinator
+needs per L-BFGS evaluation, calling the L1 Pallas kernel for the
+O(m·n) soft-threshold work and plain jnp for the O(m + n) reductions.
+``aot.py`` lowers :func:`dual_obj_grad` once per problem shape to HLO
+text; Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.group_softthresh import grad_psi_pallas
+from .kernels import ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_groups", "group_size", "use_pallas")
+)
+def dual_obj_grad(
+    alpha,
+    beta,
+    a,
+    b,
+    cost,
+    tau,
+    lambda_quad,
+    *,
+    num_groups: int,
+    group_size: int,
+    use_pallas: bool = True,
+):
+    """Negated dual objective and gradient at ``(alpha, beta)``.
+
+    Returns ``(neg_obj, grad_alpha, grad_beta)`` — identical convention
+    to the Rust ``eval_dense``/``OriginOracle``.
+    """
+    if use_pallas:
+        t, z = grad_psi_pallas(
+            alpha, beta, cost, tau, lambda_quad,
+            num_groups=num_groups, group_size=group_size,
+        )
+    else:
+        t, z = ref.grad_psi_uniform(
+            alpha, beta, cost, num_groups, group_size, tau, lambda_quad
+        )
+    psi = ref.psi_from_z(z, tau, lambda_quad)
+    dual = jnp.dot(alpha, a) + jnp.dot(beta, b) - psi
+    grad_alpha = jnp.sum(t, axis=1) - a
+    grad_beta = jnp.sum(t, axis=0) - b
+    return -dual, grad_alpha, grad_beta
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_groups", "group_size", "use_pallas")
+)
+def recover_plan(
+    alpha,
+    beta,
+    cost,
+    tau,
+    lambda_quad,
+    *,
+    num_groups: int,
+    group_size: int,
+    use_pallas: bool = True,
+):
+    """Transport plan T* from converged duals (Eq. 5)."""
+    if use_pallas:
+        t, _ = grad_psi_pallas(
+            alpha, beta, cost, tau, lambda_quad,
+            num_groups=num_groups, group_size=group_size,
+        )
+    else:
+        t, _ = ref.grad_psi_uniform(
+            alpha, beta, cost, num_groups, group_size, tau, lambda_quad
+        )
+    return t

@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, hyperparameters and adversarial value
+ranges (including the z ≈ tau threshold boundary); every case asserts
+allclose between the kernel and ``ref.py``.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import ref
+from compile.kernels.group_softthresh import grad_psi_pallas, _pick_tile
+
+
+def run_pair(alpha, beta, cost, L, g, tau, lq, dtype):
+    alpha = jnp.asarray(alpha, dtype)
+    beta = jnp.asarray(beta, dtype)
+    cost = jnp.asarray(cost, dtype)
+    t_k, z_k = grad_psi_pallas(alpha, beta, cost, tau, lq, num_groups=L, group_size=g)
+    t_r, z_r = ref.grad_psi_uniform(alpha, beta, cost, L, g, tau, lq)
+    return (np.asarray(t_k), np.asarray(z_k)), (np.asarray(t_r), np.asarray(z_r))
+
+
+shapes = st.tuples(
+    st.integers(min_value=1, max_value=5),   # L
+    st.integers(min_value=1, max_value=7),   # g
+    st.integers(min_value=1, max_value=24),  # n
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    shape=shapes,
+    tau=st.floats(min_value=0.0, max_value=2.0),
+    lq=st.floats(min_value=0.05, max_value=5.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_f64(shape, tau, lq, seed):
+    L, g, n = shape
+    rng = np.random.default_rng(seed)
+    m = L * g
+    alpha = rng.normal(size=m)
+    beta = rng.normal(size=n)
+    cost = rng.uniform(0.0, 1.0, size=(m, n))
+    (t_k, z_k), (t_r, z_r) = run_pair(alpha, beta, cost, L, g, tau, lq, jnp.float64)
+    np.testing.assert_allclose(z_k, z_r, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(t_k, t_r, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=shapes,
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_f32(shape, seed):
+    L, g, n = shape
+    rng = np.random.default_rng(seed)
+    m = L * g
+    alpha = rng.normal(size=m).astype(np.float32)
+    beta = rng.normal(size=n).astype(np.float32)
+    cost = rng.uniform(0.0, 1.0, size=(m, n)).astype(np.float32)
+    (t_k, z_k), (t_r, z_r) = run_pair(alpha, beta, cost, L, g, 0.5, 1.0, jnp.float32)
+    np.testing.assert_allclose(z_k, z_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(t_k, t_r, rtol=1e-5, atol=1e-6)
+
+
+def test_zero_inputs_give_zero_plan():
+    # alpha = beta = 0 and nonnegative costs: f <= 0 everywhere → T = 0.
+    L, g, n = 3, 4, 6
+    m = L * g
+    cost = np.linspace(0.0, 1.0, m * n).reshape(m, n)
+    t, z = grad_psi_pallas(
+        jnp.zeros(m), jnp.zeros(n), jnp.asarray(cost), 0.3, 1.0,
+        num_groups=L, group_size=g,
+    )
+    assert np.all(np.asarray(t) == 0.0)
+    assert np.all(np.asarray(z) == 0.0)
+
+
+def test_threshold_boundary_exact():
+    # Single group, single column, engineered so z crosses tau exactly:
+    # below → 0, above → positive.
+    g = 4
+    alpha = jnp.asarray([0.3, 0.4, 0.0, -1.0])
+    beta = jnp.asarray([0.0])
+    cost = jnp.zeros((g, 1))
+    z_expect = np.sqrt(0.3**2 + 0.4**2)  # = 0.5
+    t_below, z = grad_psi_pallas(alpha, beta, cost, 0.5, 1.0, num_groups=1, group_size=g)
+    np.testing.assert_allclose(np.asarray(z)[0, 0], z_expect, rtol=1e-15)
+    assert np.all(np.asarray(t_below) == 0.0), "z == tau must give a zero group"
+    t_above, _ = grad_psi_pallas(alpha, beta, cost, 0.4999, 1.0, num_groups=1, group_size=g)
+    assert np.asarray(t_above)[0, 0] > 0.0
+
+
+def test_scale_formula_single_group():
+    # Hand-computed soft threshold.
+    alpha = jnp.asarray([1.0, 2.0])
+    beta = jnp.asarray([0.0])
+    cost = jnp.zeros((2, 1))
+    tau, lq = 1.0, 2.0
+    t, z = grad_psi_pallas(alpha, beta, cost, tau, lq, num_groups=1, group_size=2)
+    z0 = np.sqrt(5.0)
+    scale = (z0 - tau) / (lq * z0)
+    np.testing.assert_allclose(np.asarray(t)[:, 0], scale * np.array([1.0, 2.0]), rtol=1e-14)
+    np.testing.assert_allclose(np.asarray(z)[0, 0], z0, rtol=1e-14)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=300))
+def test_pick_tile_divides(n):
+    t = _pick_tile(n)
+    assert 1 <= t <= min(n, 256)
+    assert n % t == 0
+
+
+def test_explicit_column_tile():
+    L, g, n = 2, 3, 12
+    m = L * g
+    rng = np.random.default_rng(0)
+    alpha = rng.normal(size=m)
+    beta = rng.normal(size=n)
+    cost = rng.uniform(size=(m, n))
+    t4, z4 = grad_psi_pallas(
+        jnp.asarray(alpha), jnp.asarray(beta), jnp.asarray(cost), 0.2, 1.0,
+        num_groups=L, group_size=g, column_tile=4,
+    )
+    t12, z12 = grad_psi_pallas(
+        jnp.asarray(alpha), jnp.asarray(beta), jnp.asarray(cost), 0.2, 1.0,
+        num_groups=L, group_size=g, column_tile=12,
+    )
+    np.testing.assert_allclose(np.asarray(t4), np.asarray(t12), rtol=1e-14)
+    np.testing.assert_allclose(np.asarray(z4), np.asarray(z12), rtol=1e-14)
+
+
+def test_bad_tile_rejected():
+    with pytest.raises(AssertionError):
+        grad_psi_pallas(
+            jnp.zeros(4), jnp.zeros(5), jnp.zeros((4, 5)), 0.1, 1.0,
+            num_groups=2, group_size=2, column_tile=2,
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    L=st.integers(min_value=1, max_value=4),
+    g=st.integers(min_value=1, max_value=5),
+    n=st.integers(min_value=1, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ragged_ref_agrees_with_uniform_on_uniform_input(L, g, n, seed):
+    rng = np.random.default_rng(seed)
+    m = L * g
+    alpha = jnp.asarray(rng.normal(size=m))
+    beta = jnp.asarray(rng.normal(size=n))
+    cost = jnp.asarray(rng.uniform(size=(m, n)))
+    gid = jnp.asarray(np.repeat(np.arange(L), g))
+    t_u, z_u = ref.grad_psi_uniform(alpha, beta, cost, L, g, 0.4, 1.3)
+    t_r, z_r = ref.grad_psi_ragged(alpha, beta, cost, gid, L, 0.4, 1.3)
+    np.testing.assert_allclose(np.asarray(t_u), np.asarray(t_r), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(z_u), np.asarray(z_r), rtol=1e-12)

@@ -1,0 +1,114 @@
+//! Shared helpers for the per-figure bench binaries.
+//!
+//! Every bench prints the paper-style rows to stdout and persists
+//! markdown + CSV under `reports/`. Set `GRPOT_BENCH_QUICK=1` to shrink
+//! the grids (CI-sized); unset for the full paper-scale run.
+
+use grpot::benchlib::{quick_mode, report_dir, Table};
+use grpot::coordinator::config::Method;
+use grpot::coordinator::sweep::run_job;
+use grpot::data::DomainPair;
+use grpot::ot::dual::OtProblem;
+
+/// The paper's γ grid (full) or a 4-point quick version.
+pub fn gamma_grid() -> Vec<f64> {
+    if quick_mode() {
+        vec![0.01, 0.1, 1.0, 10.0]
+    } else {
+        vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3]
+    }
+}
+
+/// The paper's ρ grid (full) or a 2-point quick version.
+pub fn rho_grid() -> Vec<f64> {
+    if quick_mode() {
+        vec![0.4, 0.8]
+    } else {
+        vec![0.2, 0.4, 0.6, 0.8]
+    }
+}
+
+/// Solver iteration cap per job (keeps full sweeps tractable while past
+/// the convergence point for most (γ, ρ)).
+pub fn max_iters() -> usize {
+    if quick_mode() {
+        300
+    } else {
+        1000
+    }
+}
+
+/// Measurement of one method on one problem at one γ (summed over the
+/// ρ grid, exactly the paper's aggregation).
+pub struct GainRow {
+    pub gamma: f64,
+    pub t_origin: f64,
+    pub t_fast: f64,
+    pub gain: f64,
+    /// Same dual objectives across methods on the whole ρ grid?
+    pub objectives_match: bool,
+}
+
+/// Run the paper's protocol on one problem: per γ, total time over the
+/// ρ grid for `origin` and `fast`; verify Theorem 2 along the way.
+pub fn gain_sweep(prob: &OtProblem, gammas: &[f64], rhos: &[f64], r: usize) -> Vec<GainRow> {
+    let mi = max_iters();
+    gammas
+        .iter()
+        .map(|&gamma| {
+            let mut t_fast = 0.0;
+            let mut t_origin = 0.0;
+            let mut objectives_match = true;
+            for &rho in rhos {
+                let f = run_job(prob, Method::Fast, gamma, rho, r, mi);
+                let o = run_job(prob, Method::Origin, gamma, rho, r, mi);
+                t_fast += f.wall_time_s;
+                t_origin += o.wall_time_s;
+                objectives_match &= f.dual_objective == o.dual_objective;
+            }
+            GainRow {
+                gamma,
+                t_origin,
+                t_fast,
+                gain: t_origin / t_fast.max(1e-12),
+                objectives_match,
+            }
+        })
+        .collect()
+}
+
+/// Emit a gain table for a family of labeled problems (one block per
+/// label), paper-figure style.
+pub fn emit_gain_table(
+    title: &str,
+    stem: &str,
+    blocks: &[(String, Vec<GainRow>)],
+) {
+    let mut table = Table::new(title, &["case", "gamma", "t_origin[s]", "t_fast[s]", "gain", "thm2"]);
+    for (label, rows) in blocks {
+        for row in rows {
+            table.row(vec![
+                label.clone(),
+                format!("{}", row.gamma),
+                format!("{:.4}", row.t_origin),
+                format!("{:.4}", row.t_fast),
+                format!("{:.2}x", row.gain),
+                if row.objectives_match { "ok".into() } else { "MISMATCH".into() },
+            ]);
+        }
+    }
+    table.emit(&report_dir(), stem);
+}
+
+/// Build a problem from a generated pair (includes the cost matrix).
+pub fn problem_of(pair: &DomainPair) -> OtProblem {
+    OtProblem::from_dataset(pair)
+}
+
+/// Standard bench banner.
+pub fn banner(name: &str) {
+    println!(
+        "== {name} ({} mode) ==",
+        if quick_mode() { "quick" } else { "full" }
+    );
+}

@@ -1,0 +1,50 @@
+//! Figure 2: processing-time gain vs number of classes on the
+//! controlled synthetic dataset (g = 10, n = m = |L|·g).
+//!
+//! Paper shape: gain > 1 everywhere and growing with |L| (up to 6.8× at
+//! |L| = 1280 on the authors' Xeon). Full mode sweeps |L| up to 320 by
+//! default (set `GRPOT_FIG2_MAX_L` to go higher on a big box).
+
+mod common;
+
+use common::*;
+use grpot::data::synthetic;
+
+fn main() {
+    banner("fig2: gain vs #classes");
+    let max_l: usize = std::env::var("GRPOT_FIG2_MAX_L")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if grpot::benchlib::quick_mode() { 40 } else { 320 });
+    let class_counts: Vec<usize> =
+        [10usize, 20, 40, 80, 160, 320, 640, 1280].into_iter().filter(|&l| l <= max_l).collect();
+    let gammas = gamma_grid();
+    let rhos = rho_grid();
+
+    let mut blocks = Vec::new();
+    for &l in &class_counts {
+        let pair = synthetic::controlled_classes(l, 10, 0xF162);
+        let prob = problem_of(&pair);
+        println!("|L|={l} (m=n={}) …", prob.m());
+        let rows = gain_sweep(&prob, &gammas, &rhos, 10);
+        for r in &rows {
+            println!("  gamma={:<8} gain={:.2}x", r.gamma, r.gain);
+            assert!(r.objectives_match, "Theorem 2 violated at |L|={l}");
+        }
+        blocks.push((format!("L={l}"), rows));
+    }
+    emit_gain_table(
+        "Fig. 2 — processing-time gain vs number of classes (synthetic, g=10)",
+        "fig2_synthetic_classes",
+        &blocks,
+    );
+
+    // Shape check: the best per-|L| gain should not shrink as |L| grows.
+    let best_gain = |rows: &Vec<GainRow>| rows.iter().map(|r| r.gain).fold(0.0f64, f64::max);
+    let first = best_gain(&blocks.first().unwrap().1);
+    let last = best_gain(&blocks.last().unwrap().1);
+    println!("best gain at |L|={}: {first:.2}x → at |L|={}: {last:.2}x", class_counts[0], class_counts[class_counts.len()-1]);
+    if last < first {
+        println!("WARNING: gain did not grow with |L| (expected paper shape)");
+    }
+}

@@ -1,0 +1,33 @@
+//! Figure 3: gain on the two digit-recognition adaptation tasks
+//! (USPS→MNIST and MNIST→USPS). Paper: up to 8.6× with 5000 samples per
+//! domain; we default to 600 (quick) / 1500 (full) samples — the gain
+//! *shape over γ* is the reproduction target, not the absolute factor.
+
+mod common;
+
+use common::*;
+use grpot::data::digits;
+
+fn main() {
+    banner("fig3: digit adaptation tasks");
+    let samples = if grpot::benchlib::quick_mode() { 600 } else { 1500 };
+    let gammas = gamma_grid();
+    let rhos = rho_grid();
+
+    let mut blocks = Vec::new();
+    for pair in digits::all_tasks(samples, 0xF163) {
+        let prob = problem_of(&pair);
+        println!("task {} (m=n={}) …", pair.task_name(), prob.m());
+        let rows = gain_sweep(&prob, &gammas, &rhos, 10);
+        for r in &rows {
+            println!("  gamma={:<8} gain={:.2}x", r.gamma, r.gain);
+            assert!(r.objectives_match);
+        }
+        blocks.push((pair.task_name(), rows));
+    }
+    emit_gain_table(
+        "Fig. 3 — processing-time gain on digit recognition tasks",
+        "fig3_digits",
+        &blocks,
+    );
+}

@@ -1,0 +1,35 @@
+//! Figure 4: gain on the 12 PIE face-recognition adaptation tasks
+//! (68 classes, 4 pose domains). Paper: up to 3.7×. Domain sizes are
+//! scaled (quick 0.04 / full 0.12 of the paper's 3332/1629/1632/1632).
+
+mod common;
+
+use common::*;
+use grpot::data::faces;
+
+fn main() {
+    banner("fig4: PIE face tasks");
+    // Gains need non-trivial per-class group sizes (paper: g ≈ 24–49);
+    // below ~0.1 the screening overhead dominates tiny g ≈ 2 groups and
+    // gains drop under 1× — see EXPERIMENTS.md §Fig4.
+    let scale = if grpot::benchlib::quick_mode() { 0.1 } else { 0.3 };
+    let gammas = gamma_grid();
+    let rhos = rho_grid();
+
+    let mut blocks = Vec::new();
+    for pair in faces::all_tasks(scale, 0xF164) {
+        let prob = problem_of(&pair);
+        println!("task {} (m={}, n={}) …", pair.task_name(), prob.m(), prob.n());
+        let rows = gain_sweep(&prob, &gammas, &rhos, 10);
+        for r in &rows {
+            println!("  gamma={:<8} gain={:.2}x", r.gamma, r.gain);
+            assert!(r.objectives_match);
+        }
+        blocks.push((pair.task_name(), rows));
+    }
+    emit_gain_table(
+        "Fig. 4 — processing-time gain on face recognition tasks (12 PIE pairs)",
+        "fig4_faces",
+        &blocks,
+    );
+}

@@ -1,0 +1,32 @@
+//! Figure 5: gain on the 12 Caltech-Office object-recognition tasks
+//! (10 classes, DeCAF₆-like 4096-d features). Paper: up to 6.2×.
+//! Domain sizes scaled (quick 0.15 / full 0.4 of 1123/958/295/157).
+
+mod common;
+
+use common::*;
+use grpot::data::objects;
+
+fn main() {
+    banner("fig5: Caltech-Office object tasks");
+    let scale = if grpot::benchlib::quick_mode() { 0.15 } else { 0.4 };
+    let gammas = gamma_grid();
+    let rhos = rho_grid();
+
+    let mut blocks = Vec::new();
+    for pair in objects::all_tasks(scale, 0xF165) {
+        let prob = problem_of(&pair);
+        println!("task {} (m={}, n={}) …", pair.task_name(), prob.m(), prob.n());
+        let rows = gain_sweep(&prob, &gammas, &rhos, 10);
+        for r in &rows {
+            println!("  gamma={:<8} gain={:.2}x", r.gamma, r.gain);
+            assert!(r.objectives_match);
+        }
+        blocks.push((pair.task_name(), rows));
+    }
+    emit_gain_table(
+        "Fig. 5 — processing-time gain on object recognition tasks (12 Caltech-Office pairs)",
+        "fig5_objects",
+        &blocks,
+    );
+}

@@ -1,0 +1,50 @@
+//! Figure D (appendix): the working-set (lower-bound) ablation at
+//! |L| = 10 — "ours" vs "ours w/o lower bounds" vs origin, per γ.
+//!
+//! Paper shape: without the second idea the method can dip *below* 1×
+//! at small |L| (checking overhead dominates); with it, ≈2×.
+
+mod common;
+
+use common::*;
+use grpot::benchlib::{report_dir, Table};
+use grpot::coordinator::config::Method;
+use grpot::coordinator::sweep::run_job;
+use grpot::data::synthetic;
+
+fn main() {
+    banner("figD: lower-bound (working set) ablation");
+    let pair = synthetic::controlled_classes(10, 10, 0xF16D);
+    let prob = problem_of(&pair);
+    let rhos = rho_grid();
+    let mi = max_iters();
+
+    let mut table = Table::new(
+        "Fig. D — gain with and without the lower-bound working set (|L|=10)",
+        &["gamma", "gain with LB", "gain w/o LB"],
+    );
+    for &gamma in &gamma_grid() {
+        let mut t_fast = 0.0;
+        let mut t_nows = 0.0;
+        let mut t_origin = 0.0;
+        for &rho in &rhos {
+            let f = run_job(&prob, Method::Fast, gamma, rho, 10, mi);
+            let nw = run_job(&prob, Method::FastNoWs, gamma, rho, 10, mi);
+            let o = run_job(&prob, Method::Origin, gamma, rho, 10, mi);
+            assert_eq!(f.dual_objective, o.dual_objective);
+            assert_eq!(nw.dual_objective, o.dual_objective);
+            t_fast += f.wall_time_s;
+            t_nows += nw.wall_time_s;
+            t_origin += o.wall_time_s;
+        }
+        let with_lb = t_origin / t_fast.max(1e-12);
+        let without = t_origin / t_nows.max(1e-12);
+        println!("gamma={gamma:<8} with-LB={with_lb:.2}x  without={without:.2}x");
+        table.row(vec![
+            format!("{gamma}"),
+            format!("{with_lb:.2}"),
+            format!("{without:.2}"),
+        ]);
+    }
+    table.emit(&report_dir(), "figd_lower_bound_ablation");
+}

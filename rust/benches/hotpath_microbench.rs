@@ -1,0 +1,61 @@
+//! Hot-path microbenchmarks for the performance pass (§Perf in
+//! EXPERIMENTS.md): isolates the dense oracle evaluation, the screened
+//! evaluation (high/low sparsity), snapshot refresh and working-set
+//! construction so individual optimizations can be measured.
+
+mod common;
+
+use common::*;
+use grpot::benchlib::{bench_fn, report_dir, BenchOptions, Table};
+use grpot::data::synthetic;
+use grpot::ot::dual::{DualOracle, DualParams};
+use grpot::ot::origin::OriginOracle;
+use grpot::ot::screening::ScreeningOracle;
+use grpot::rng::Pcg64;
+
+fn main() {
+    banner("hotpath microbench");
+    let l = if grpot::benchlib::quick_mode() { 40 } else { 160 };
+    let pair = synthetic::controlled_classes(l, 10, 0x407B);
+    let prob = problem_of(&pair);
+    println!("problem: m=n={} |L|={}", prob.m(), l);
+
+    let mut rng = Pcg64::new(3);
+    // A dual point with mixed activity (some groups on, some off).
+    let x: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.1, 0.15)).collect();
+    let mut grad = vec![0.0; prob.dim()];
+    let opts = BenchOptions { warmup: 2, iters: 15, max_seconds: 120.0 };
+
+    let mut table = Table::new("hot-path microbenchmarks", &["case", "ms/op"]);
+    let mut record = |name: &str, ms: f64| {
+        println!("{name:<34} {ms:>9.3} ms");
+        table.row(vec![name.into(), format!("{ms:.3}")]);
+    };
+
+    // Dense eval.
+    let sparse_params = DualParams::new(5.0, 0.8); // strong reg ⇒ sparse
+    let dense_params = DualParams::new(0.01, 0.2); // weak reg ⇒ dense
+    for (tag, params) in [("sparse", sparse_params), ("dense", dense_params)] {
+        let mut origin = OriginOracle::new(&prob, params);
+        let t = bench_fn("origin", &opts, || {
+            origin.eval(&x, &mut grad);
+        });
+        record(&format!("origin eval ({tag} regime)"), t.seconds() * 1e3);
+
+        let mut screen = ScreeningOracle::new(&prob, params, true);
+        screen.refresh(&x);
+        let t = bench_fn("screen", &opts, || {
+            screen.eval(&x, &mut grad);
+        });
+        record(&format!("screened eval ({tag} regime)"), t.seconds() * 1e3);
+    }
+
+    // Snapshot refresh (the O(mn) periodic cost).
+    let mut screen = ScreeningOracle::new(&prob, sparse_params, true);
+    let t = bench_fn("refresh", &opts, || {
+        screen.refresh(&x);
+    });
+    record("snapshot + working-set refresh", t.seconds() * 1e3);
+
+    table.emit(&report_dir(), "hotpath_microbench");
+}

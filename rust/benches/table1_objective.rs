@@ -1,0 +1,54 @@
+//! Table 1: maximum objective values after convergence among all
+//! hyperparameter combinations, origin vs ours, on the synthetic
+//! dataset — they must be IDENTICAL (Theorem 2).
+
+mod common;
+
+use common::*;
+use grpot::benchlib::{report_dir, Table};
+use grpot::coordinator::config::Method;
+use grpot::coordinator::sweep::run_job;
+use grpot::data::synthetic;
+
+fn main() {
+    banner("table1: max objective origin vs ours");
+    let class_counts: Vec<usize> = if grpot::benchlib::quick_mode() {
+        vec![10, 20, 40]
+    } else {
+        vec![10, 20, 40, 80, 160]
+    };
+    let gammas = gamma_grid();
+    let rhos = rho_grid();
+    let mi = max_iters();
+
+    let mut table = Table::new(
+        "Table 1 — max objective over all hyperparameters (synthetic)",
+        &["classes", "origin", "ours", "identical"],
+    );
+    for &l in &class_counts {
+        let pair = synthetic::controlled_classes(l, 10, 0x7AB1);
+        let prob = problem_of(&pair);
+        let mut best_o = f64::NEG_INFINITY;
+        let mut best_f = f64::NEG_INFINITY;
+        let mut all_equal = true;
+        for &gamma in &gammas {
+            for &rho in &rhos {
+                let o = run_job(&prob, Method::Origin, gamma, rho, 10, mi);
+                let f = run_job(&prob, Method::Fast, gamma, rho, 10, mi);
+                all_equal &= o.dual_objective == f.dual_objective;
+                best_o = best_o.max(o.dual_objective);
+                best_f = best_f.max(f.dual_objective);
+            }
+        }
+        println!("classes={l}: origin={best_o:.6e} ours={best_f:.6e} identical={all_equal}");
+        table.row(vec![
+            format!("{l}"),
+            format!("{best_o:.6e}"),
+            format!("{best_f:.6e}"),
+            format!("{all_equal}"),
+        ]);
+        assert_eq!(best_o, best_f, "Table 1 requires identical maxima");
+        assert!(all_equal, "every grid point must match (Theorem 2)");
+    }
+    table.emit(&report_dir(), "table1_objective");
+}

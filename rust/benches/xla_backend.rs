@@ -1,0 +1,87 @@
+//! AOT backend bench (ours, not in the paper): the dense dual oracle in
+//! native Rust vs the AOT JAX/Pallas artifact executed via PJRT, per
+//! evaluation and end-to-end. Quantifies the FFI + dense-vectorized
+//! trade-off and regression-tests the artifact path's performance.
+//!
+//! Skips (with a notice) when artifacts are missing.
+
+mod common;
+
+use common::*;
+use grpot::benchlib::{bench_fn, report_dir, BenchOptions, Table};
+use grpot::coordinator::config::Method;
+use grpot::coordinator::sweep::run_job;
+use grpot::ot::dual::{DualOracle, DualParams};
+use grpot::ot::origin::OriginOracle;
+use grpot::rng::Pcg64;
+use grpot::runtime::{artifact_dir, Manifest, PjrtRuntime, XlaDualOracle};
+
+fn main() {
+    banner("xla_backend: native vs AOT dense oracle");
+    let manifest = match Manifest::load(&artifact_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIP: {e:#} — run `make artifacts`");
+            return;
+        }
+    };
+    let runtime = PjrtRuntime::cpu().expect("pjrt");
+    let params = DualParams::new(0.5, 0.5);
+    let opts = BenchOptions { warmup: 2, iters: 20, max_seconds: 60.0 };
+
+    let mut table = Table::new(
+        "AOT backend — per-eval latency and end-to-end solve",
+        &["shape", "rust eval[ms]", "xla eval[ms]", "rust solve[s]", "xla solve[s]"],
+    );
+    for entry in &manifest.entries {
+        let (l, g, n) = (entry.num_groups, entry.group_size, entry.n);
+        let m = l * g;
+        let mut rng = Pcg64::new(0xBE7C);
+        let cost = grpot::linalg::Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+        let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+        let prob = grpot::ot::dual::OtProblem::from_parts(
+            vec![1.0 / m as f64; m],
+            vec![1.0 / n as f64; n],
+            &cost,
+            &labels,
+        );
+        let x: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.3, 0.5)).collect();
+        let mut grad = vec![0.0; prob.dim()];
+
+        let mut rust_oracle = OriginOracle::new(&prob, params);
+        let rust_eval = bench_fn(&format!("rust-eval-{l}x{g}x{n}"), &opts, || {
+            rust_oracle.eval(&x, &mut grad);
+        });
+
+        let mut xla_oracle =
+            XlaDualOracle::from_problem(&runtime, &prob, &params, &artifact_dir())
+                .expect("artifact load");
+        let xla_eval = bench_fn(&format!("xla-eval-{l}x{g}x{n}"), &opts, || {
+            xla_oracle.eval(&x, &mut grad);
+        });
+
+        let solve_opts = BenchOptions { warmup: 1, iters: 3, max_seconds: 120.0 };
+        let rust_solve = bench_fn(&format!("rust-solve-{l}x{g}x{n}"), &solve_opts, || {
+            run_job(&prob, Method::Origin, 0.5, 0.5, 10, 200);
+        });
+        let xla_solve = bench_fn(&format!("xla-solve-{l}x{g}x{n}"), &solve_opts, || {
+            run_job(&prob, Method::XlaOrigin, 0.5, 0.5, 10, 200);
+        });
+
+        println!(
+            "L={l} g={g} n={n}: eval rust {:.3}ms xla {:.3}ms | solve rust {:.3}s xla {:.3}s",
+            rust_eval.seconds() * 1e3,
+            xla_eval.seconds() * 1e3,
+            rust_solve.seconds(),
+            xla_solve.seconds()
+        );
+        table.row(vec![
+            format!("L{l}g{g}n{n}"),
+            format!("{:.3}", rust_eval.seconds() * 1e3),
+            format!("{:.3}", xla_eval.seconds() * 1e3),
+            format!("{:.3}", rust_solve.seconds()),
+            format!("{:.3}", xla_solve.seconds()),
+        ]);
+    }
+    table.emit(&report_dir(), "xla_backend");
+}

@@ -1,0 +1,53 @@
+//! Benchmark harness substrate (criterion is unavailable offline).
+//!
+//! Provides warmup + timed-iteration measurement with robust statistics,
+//! paper-style gain tables, and markdown/CSV report emission. Every
+//! `rust/benches/*.rs` target (one per paper figure/table) is a
+//! `harness = false` binary built on this module.
+
+mod runner;
+mod stats;
+mod table;
+
+pub use runner::{bench_fn, BenchOptions, Measurement};
+pub use stats::Summary;
+pub use table::{write_csv, Table};
+
+use std::time::Instant;
+
+/// Simple scope timer returning elapsed seconds.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Standard output directory for bench reports (created on demand).
+pub fn report_dir() -> std::path::PathBuf {
+    let dir = std::env::var("GRPOT_REPORT_DIR").unwrap_or_else(|_| "reports".to_string());
+    let p = std::path::PathBuf::from(dir);
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// `1` when `GRPOT_BENCH_QUICK` is set: benches shrink their grids so the
+/// whole suite stays minutes, not hours. The full paper-scale grid runs
+/// with the env var unset.
+pub fn quick_mode() -> bool {
+    std::env::var("GRPOT_BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,67 @@
+//! Warmup + repeated-measurement runner.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Options controlling one measurement.
+#[derive(Clone, Debug)]
+pub struct BenchOptions {
+    /// Warmup executions whose timings are discarded.
+    pub warmup: usize,
+    /// Timed executions.
+    pub iters: usize,
+    /// Optional wall-clock budget in seconds: measurement stops early
+    /// (after at least one timed iteration) once exceeded.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions { warmup: 1, iters: 5, max_seconds: 120.0 }
+    }
+}
+
+impl BenchOptions {
+    /// Budget-friendly options for long end-to-end solves.
+    pub fn slow() -> Self {
+        BenchOptions { warmup: 0, iters: 3, max_seconds: 300.0 }
+    }
+}
+
+/// Result of measuring one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn seconds(&self) -> f64 {
+        self.summary.median
+    }
+}
+
+/// Measure `f` under `opts`; `f` performs one complete run per call.
+/// Any setup needed per iteration belongs inside `f` before the returned
+/// closure — `f` itself is fully timed.
+pub fn bench_fn(name: &str, opts: &BenchOptions, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let budget_start = Instant::now();
+    let mut samples = Vec::with_capacity(opts.iters);
+    for i in 0..opts.iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if i + 1 >= 1 && budget_start.elapsed().as_secs_f64() > opts.max_seconds {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        summary: Summary::from_samples(&samples),
+        samples,
+    }
+}

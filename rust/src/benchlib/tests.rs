@@ -1,0 +1,82 @@
+use super::*;
+
+#[test]
+fn summary_basic_stats() {
+    let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+    assert_eq!(s.n, 5);
+    assert!((s.mean - 3.0).abs() < 1e-12);
+    assert!((s.median - 3.0).abs() < 1e-12);
+    assert_eq!(s.min, 1.0);
+    assert_eq!(s.max, 5.0);
+    assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+}
+
+#[test]
+fn summary_single_sample() {
+    let s = Summary::from_samples(&[7.0]);
+    assert_eq!(s.median, 7.0);
+    assert_eq!(s.std, 0.0);
+    assert_eq!(s.p10, 7.0);
+    assert_eq!(s.rel_std(), 0.0);
+}
+
+#[test]
+fn percentiles_interpolate() {
+    let sorted = [0.0, 10.0];
+    assert!((stats_percentile(&sorted, 50.0) - 5.0).abs() < 1e-12);
+    assert!((stats_percentile(&sorted, 90.0) - 9.0).abs() < 1e-12);
+}
+
+fn stats_percentile(sorted: &[f64], p: f64) -> f64 {
+    super::stats::percentile_sorted(sorted, p)
+}
+
+#[test]
+fn bench_fn_counts_iterations() {
+    let mut count = 0;
+    let opts = BenchOptions { warmup: 2, iters: 5, max_seconds: 60.0 };
+    let m = bench_fn("t", &opts, || {
+        count += 1;
+    });
+    assert_eq!(count, 7); // 2 warmup + 5 timed
+    assert_eq!(m.samples.len(), 5);
+    assert!(m.seconds() >= 0.0);
+}
+
+#[test]
+fn bench_fn_budget_stops_early() {
+    let opts = BenchOptions { warmup: 0, iters: 1000, max_seconds: 0.05 };
+    let m = bench_fn("slow", &opts, || {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    });
+    assert!(m.samples.len() < 1000);
+    assert!(!m.samples.is_empty());
+}
+
+#[test]
+fn table_markdown_and_csv() {
+    let mut t = Table::new("Fig X", &["classes", "gain"]);
+    t.row(vec!["10".into(), "2.0".into()]);
+    t.row(vec!["20".into(), "3.5".into()]);
+    let md = t.to_markdown();
+    assert!(md.contains("### Fig X"));
+    assert!(md.contains("| classes | gain |"));
+    assert!(md.contains("| 20"));
+    let csv = t.to_csv();
+    assert!(csv.starts_with("classes,gain\n"));
+    assert!(csv.contains("20,3.5"));
+}
+
+#[test]
+fn csv_quoting() {
+    let mut t = Table::new("q", &["a"]);
+    t.row(vec!["x,y".into()]);
+    assert!(t.to_csv().contains("\"x,y\""));
+}
+
+#[test]
+#[should_panic]
+fn table_row_width_mismatch_panics() {
+    let mut t = Table::new("t", &["a", "b"]);
+    t.row(vec!["1".into()]);
+}

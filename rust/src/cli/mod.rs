@@ -1,0 +1,281 @@
+//! Declarative command-line parsing substrate (clap is unavailable in
+//! this offline image).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! switches, defaults, required flags, typed accessors and an
+//! auto-generated `--help`.
+//!
+//! ```
+//! use grpot::cli::{App, ArgSpec};
+//! let app = App::new("demo", "demo tool")
+//!     .arg(ArgSpec::opt("gamma", "regularization strength").default("1.0"))
+//!     .arg(ArgSpec::switch("verbose", "chatty output"));
+//! let m = app.parse_from(&["--gamma", "0.5", "--verbose"]).unwrap();
+//! assert_eq!(m.get_f64("gamma").unwrap(), 0.5);
+//! assert!(m.get_flag("verbose"));
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Declaration of one `--name` argument.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub help: String,
+    pub takes_value: bool,
+    pub required: bool,
+    pub default: Option<String>,
+}
+
+impl ArgSpec {
+    /// Value-taking option (`--name v` or `--name=v`).
+    pub fn opt(name: &str, help: &str) -> Self {
+        ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            required: false,
+            default: None,
+        }
+    }
+
+    /// Boolean switch (`--name`).
+    pub fn switch(name: &str, help: &str) -> Self {
+        ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: false,
+            required: false,
+            default: None,
+        }
+    }
+
+    pub fn required(mut self) -> Self {
+        self.required = true;
+        self
+    }
+
+    pub fn default(mut self, v: &str) -> Self {
+        self.default = Some(v.into());
+        self
+    }
+}
+
+/// An application or subcommand definition.
+#[derive(Clone, Debug)]
+pub struct App {
+    pub name: String,
+    pub about: String,
+    pub args: Vec<ArgSpec>,
+    pub subcommands: Vec<App>,
+}
+
+/// Parse result.
+#[derive(Debug, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    /// Positional arguments (anything not starting with `--`).
+    pub positional: Vec<String>,
+    /// `(name, matches)` of the chosen subcommand, if any.
+    pub subcommand: Option<(String, Box<Matches>)>,
+}
+
+/// Error with a message suitable for printing to stderr.
+#[derive(Debug, PartialEq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl App {
+    pub fn new(name: &str, about: &str) -> Self {
+        App { name: name.into(), about: about.into(), args: vec![], subcommands: vec![] }
+    }
+
+    pub fn arg(mut self, a: ArgSpec) -> Self {
+        self.args.push(a);
+        self
+    }
+
+    pub fn subcommand(mut self, s: App) -> Self {
+        self.subcommands.push(s);
+        self
+    }
+
+    /// Render the help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str(" <SUBCOMMAND>");
+        }
+        if !self.args.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        s.push('\n');
+        if !self.args.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for a in &self.args {
+                let head = if a.takes_value {
+                    format!("--{} <v>", a.name)
+                } else {
+                    format!("--{}", a.name)
+                };
+                let extra = match (&a.default, a.required) {
+                    (Some(d), _) => format!(" [default: {d}]"),
+                    (None, true) => " [required]".to_string(),
+                    _ => String::new(),
+                };
+                s.push_str(&format!("  {head:<24} {}{extra}\n", a.help));
+            }
+        }
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for sc in &self.subcommands {
+                s.push_str(&format!("  {:<18} {}\n", sc.name, sc.about));
+            }
+        }
+        s
+    }
+
+    /// Parse from explicit tokens (for tests) — no program name expected.
+    pub fn parse_from(&self, tokens: &[&str]) -> Result<Matches, CliError> {
+        let owned: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        self.parse_tokens(&owned)
+    }
+
+    /// Parse `std::env::args()` (skipping the program name).
+    pub fn parse_env(&self) -> Result<Matches, CliError> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_tokens(&tokens)
+    }
+
+    fn parse_tokens(&self, tokens: &[String]) -> Result<Matches, CliError> {
+        let mut m = Matches::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.help()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help())))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    m.values.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    m.flags.insert(name, true);
+                }
+            } else if let Some(sub) = self.subcommands.iter().find(|s| &s.name == tok) {
+                let rest = &tokens[i + 1..];
+                let sub_m = sub.parse_tokens(rest)?;
+                m.subcommand = Some((sub.name.clone(), Box::new(sub_m)));
+                // Parent-level required flags are not enforced when a
+                // subcommand is chosen (the subcommand owns the action).
+                return self.finish_with(m, false);
+            } else {
+                m.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        self.finish(m)
+    }
+
+    fn finish(&self, m: Matches) -> Result<Matches, CliError> {
+        self.finish_with(m, true)
+    }
+
+    fn finish_with(&self, mut m: Matches, enforce_required: bool) -> Result<Matches, CliError> {
+        for a in &self.args {
+            if a.takes_value && !m.values.contains_key(&a.name) {
+                if let Some(d) = &a.default {
+                    m.values.insert(a.name.clone(), d.clone());
+                } else if a.required && enforce_required {
+                    return Err(CliError(format!("missing required option --{}", a.name)));
+                }
+            }
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("--{name} not provided")))?;
+        raw.parse()
+            .map_err(|_| CliError(format!("--{name}: '{raw}' is not a number")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("--{name} not provided")))?;
+        raw.parse()
+            .map_err(|_| CliError(format!("--{name}: '{raw}' is not an integer")))
+    }
+
+    /// Comma-separated list of floats, e.g. `--gammas 0.1,1,10`.
+    pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("--{name} not provided")))?;
+        raw.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|_| CliError(format!("--{name}: '{t}' is not a number")))
+            })
+            .collect()
+    }
+
+    /// Comma-separated list of integers.
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("--{name} not provided")))?;
+        raw.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|_| CliError(format!("--{name}: '{t}' is not an integer")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,89 @@
+use super::*;
+
+fn demo_app() -> App {
+    App::new("grpot", "OT toolkit")
+        .arg(ArgSpec::opt("gamma", "reg strength").default("1.0"))
+        .arg(ArgSpec::opt("dataset", "dataset name").required())
+        .arg(ArgSpec::switch("verbose", "chatty"))
+        .subcommand(
+            App::new("sweep", "run sweep")
+                .arg(ArgSpec::opt("threads", "worker count").default("4"))
+                .arg(ArgSpec::opt("gammas", "gamma grid").default("0.1,1,10")),
+        )
+}
+
+#[test]
+fn parses_values_and_defaults() {
+    let m = demo_app().parse_from(&["--dataset", "digits"]).unwrap();
+    assert_eq!(m.get("dataset"), Some("digits"));
+    assert_eq!(m.get_f64("gamma").unwrap(), 1.0);
+    assert!(!m.get_flag("verbose"));
+}
+
+#[test]
+fn parses_equals_form_and_switch() {
+    let m = demo_app()
+        .parse_from(&["--dataset=faces", "--gamma=0.25", "--verbose"])
+        .unwrap();
+    assert_eq!(m.get("dataset"), Some("faces"));
+    assert_eq!(m.get_f64("gamma").unwrap(), 0.25);
+    assert!(m.get_flag("verbose"));
+}
+
+#[test]
+fn missing_required_errors() {
+    let e = demo_app().parse_from(&[]).unwrap_err();
+    assert!(e.0.contains("dataset"), "{}", e.0);
+}
+
+#[test]
+fn unknown_flag_errors() {
+    let e = demo_app().parse_from(&["--dataset", "x", "--nope"]).unwrap_err();
+    assert!(e.0.contains("unknown option"), "{}", e.0);
+}
+
+#[test]
+fn subcommand_routing() {
+    let m = demo_app().parse_from(&["sweep", "--threads", "8"]).unwrap();
+    let (name, sub) = m.subcommand.unwrap();
+    assert_eq!(name, "sweep");
+    assert_eq!(sub.get_usize("threads").unwrap(), 8);
+    assert_eq!(sub.get_f64_list("gammas").unwrap(), vec![0.1, 1.0, 10.0]);
+}
+
+#[test]
+fn positional_args_collected() {
+    let m = demo_app().parse_from(&["--dataset", "d", "file1", "file2"]).unwrap();
+    assert_eq!(m.positional, vec!["file1", "file2"]);
+}
+
+#[test]
+fn help_is_error_with_text() {
+    let e = demo_app().parse_from(&["--help"]).unwrap_err();
+    assert!(e.0.contains("USAGE"));
+    assert!(e.0.contains("sweep"));
+    assert!(e.0.contains("--gamma"));
+}
+
+#[test]
+fn list_parsing_errors() {
+    let m = demo_app()
+        .parse_from(&["--dataset", "d", "sweep", "--gammas", "1,x"])
+        .unwrap();
+    let (_, sub) = m.subcommand.unwrap();
+    let e = sub.get_f64_list("gammas").unwrap_err();
+    assert!(e.0.contains("not a number"));
+}
+
+#[test]
+fn switch_with_value_errors() {
+    let e = demo_app().parse_from(&["--dataset", "d", "--verbose=yes"]).unwrap_err();
+    assert!(e.0.contains("takes no value"));
+}
+
+#[test]
+fn usize_list() {
+    let app = App::new("t", "t").arg(ArgSpec::opt("ls", "labels").default("10, 20,40"));
+    let m = app.parse_from(&[]).unwrap();
+    assert_eq!(m.get_usize_list("ls").unwrap(), vec![10, 20, 40]);
+}

@@ -1,0 +1,232 @@
+//! Experiment configuration: JSON-file and flag-friendly structs.
+
+use crate::jsonlite::{self, Value};
+use anyhow::{anyhow, Context, Result};
+
+/// Which solver backend a job uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// The paper's method: screening + working set.
+    Fast,
+    /// Screening only (Fig. D ablation).
+    FastNoWs,
+    /// Dense baseline (Blondel et al. 2018).
+    Origin,
+    /// Dense baseline through the AOT JAX/Pallas artifact via PJRT.
+    XlaOrigin,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fast => "fast",
+            Method::FastNoWs => "fast-nows",
+            Method::Origin => "origin",
+            Method::XlaOrigin => "xla-origin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        match s {
+            "fast" | "ours" => Ok(Method::Fast),
+            "fast-nows" | "nows" => Ok(Method::FastNoWs),
+            "origin" | "baseline" => Ok(Method::Origin),
+            "xla-origin" | "xla" => Ok(Method::XlaOrigin),
+            other => Err(anyhow!(
+                "unknown method '{other}' (expected fast|fast-nows|origin|xla-origin)"
+            )),
+        }
+    }
+}
+
+/// Dataset selector (see [`super::registry`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetSpec {
+    /// "synthetic" | "digits" | "faces" | "objects".
+    pub family: String,
+    /// synthetic: number of classes; faces/objects: task index (0–11).
+    pub param1: usize,
+    /// synthetic: samples per class; digits: samples per domain.
+    pub param2: usize,
+    /// faces/objects: domain-size scale in (0, 1].
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl Default for DatasetSpec {
+    fn default() -> Self {
+        DatasetSpec {
+            family: "synthetic".into(),
+            param1: 10,
+            param2: 10,
+            scale: 0.1,
+            seed: 0xDA7A,
+        }
+    }
+}
+
+/// Full sweep configuration (the paper's experimental grid).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub dataset: DatasetSpec,
+    /// γ grid (paper: 1e-3 … 1e3).
+    pub gammas: Vec<f64>,
+    /// ρ grid (paper: 0.2, 0.4, 0.6, 0.8).
+    pub rhos: Vec<f64>,
+    pub methods: Vec<Method>,
+    /// Snapshot interval r.
+    pub r: usize,
+    /// Worker threads for the job scheduler.
+    pub threads: usize,
+    /// L-BFGS iteration cap per job.
+    pub max_iters: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            dataset: DatasetSpec::default(),
+            gammas: vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
+            rhos: vec![0.2, 0.4, 0.6, 0.8],
+            methods: vec![Method::Fast, Method::Origin],
+            r: 10,
+            threads: 1,
+            max_iters: 1000,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Parse from a JSON document. Missing fields keep their defaults.
+    pub fn from_json(v: &Value) -> Result<SweepConfig> {
+        let mut cfg = SweepConfig::default();
+        if let Some(ds) = v.get("dataset") {
+            if let Some(f) = ds.get("family").and_then(Value::as_str) {
+                cfg.dataset.family = f.to_string();
+            }
+            if let Some(x) = ds.get("param1").and_then(Value::as_usize) {
+                cfg.dataset.param1 = x;
+            }
+            if let Some(x) = ds.get("param2").and_then(Value::as_usize) {
+                cfg.dataset.param2 = x;
+            }
+            if let Some(x) = ds.get("scale").and_then(Value::as_f64) {
+                cfg.dataset.scale = x;
+            }
+            if let Some(x) = ds.get("seed").and_then(Value::as_f64) {
+                cfg.dataset.seed = x as u64;
+            }
+        }
+        if let Some(g) = v.get("gammas") {
+            cfg.gammas = g.as_f64_vec().ok_or_else(|| anyhow!("gammas must be numbers"))?;
+        }
+        if let Some(rh) = v.get("rhos") {
+            cfg.rhos = rh.as_f64_vec().ok_or_else(|| anyhow!("rhos must be numbers"))?;
+        }
+        if let Some(ms) = v.get("methods").and_then(Value::as_arr) {
+            cfg.methods = ms
+                .iter()
+                .map(|m| {
+                    Method::parse(m.as_str().ok_or_else(|| anyhow!("method must be string"))?)
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(x) = v.get("r").and_then(Value::as_usize) {
+            cfg.r = x;
+        }
+        if let Some(x) = v.get("threads").and_then(Value::as_usize) {
+            cfg.threads = x;
+        }
+        if let Some(x) = v.get("max_iters").and_then(Value::as_usize) {
+            cfg.max_iters = x;
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &std::path::Path) -> Result<SweepConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = jsonlite::parse(&text).context("parsing sweep config")?;
+        Self::from_json(&v)
+    }
+
+    /// Serialize (for reports / reproducibility records).
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set(
+                "dataset",
+                Value::obj()
+                    .set("family", self.dataset.family.as_str())
+                    .set("param1", self.dataset.param1)
+                    .set("param2", self.dataset.param2)
+                    .set("scale", self.dataset.scale)
+                    .set("seed", self.dataset.seed),
+            )
+            .set("gammas", self.gammas.as_slice())
+            .set("rhos", self.rhos.as_slice())
+            .set(
+                "methods",
+                Value::Arr(self.methods.iter().map(|m| Value::from(m.name())).collect()),
+            )
+            .set("r", self.r)
+            .set("threads", self.threads)
+            .set("max_iters", self.max_iters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [Method::Fast, Method::FastNoWs, Method::Origin, Method::XlaOrigin] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let cfg = SweepConfig {
+            gammas: vec![0.1, 1.0],
+            rhos: vec![0.5],
+            methods: vec![Method::Fast, Method::XlaOrigin],
+            r: 5,
+            threads: 3,
+            max_iters: 50,
+            dataset: DatasetSpec {
+                family: "digits".into(),
+                param1: 0,
+                param2: 300,
+                scale: 1.0,
+                seed: 7,
+            },
+        };
+        let json = cfg.to_json().to_json();
+        let back = SweepConfig::from_json(&crate::jsonlite::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.gammas, cfg.gammas);
+        assert_eq!(back.rhos, cfg.rhos);
+        assert_eq!(back.methods, cfg.methods);
+        assert_eq!(back.r, 5);
+        assert_eq!(back.threads, 3);
+        assert_eq!(back.dataset, cfg.dataset);
+    }
+
+    #[test]
+    fn defaults_match_paper_grid() {
+        let cfg = SweepConfig::default();
+        assert_eq!(cfg.gammas.len(), 7);
+        assert_eq!(cfg.rhos, vec![0.2, 0.4, 0.6, 0.8]);
+        assert_eq!(cfg.r, 10);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let v = crate::jsonlite::parse(r#"{"rhos": [0.9]}"#).unwrap();
+        let cfg = SweepConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.rhos, vec![0.9]);
+        assert_eq!(cfg.gammas.len(), 7); // default retained
+    }
+}

@@ -1,0 +1,129 @@
+//! Process-wide metrics: named counters and timers with JSON snapshots.
+//! Shared across the sweep scheduler and the TCP service (all atomic /
+//! mutex-protected; cheap enough for per-request use).
+
+use crate::jsonlite::Value;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A registry of counters and duration accumulators.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    /// Sum of seconds and sample count per timer name.
+    timers: Mutex<BTreeMap<String, (f64, u64)>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a named counter.
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Read a counter (0 when unset).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record a duration sample.
+    pub fn observe(&self, name: &str, seconds: f64) {
+        let mut map = self.timers.lock().unwrap();
+        let e = map.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += seconds;
+        e.1 += 1;
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.observe(name, t.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Mean seconds of a timer (None when unset).
+    pub fn mean_seconds(&self, name: &str) -> Option<f64> {
+        let map = self.timers.lock().unwrap();
+        map.get(name).map(|(s, c)| s / (*c).max(1) as f64)
+    }
+
+    /// JSON snapshot of every counter and timer.
+    pub fn snapshot(&self) -> Value {
+        let mut counters = Value::obj();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters = counters.set(k, v.load(Ordering::Relaxed));
+        }
+        let mut timers = Value::obj();
+        for (k, (s, c)) in self.timers.lock().unwrap().iter() {
+            timers = timers.set(
+                k,
+                Value::obj().set("total_s", *s).set("count", *c).set(
+                    "mean_s",
+                    if *c > 0 { *s / *c as f64 } else { 0.0 },
+                ),
+            );
+        }
+        Value::obj().set("counters", counters).set("timers", timers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("jobs", 1);
+        m.incr("jobs", 2);
+        assert_eq!(m.get("jobs"), 3);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn timers_record_and_average() {
+        let m = Metrics::new();
+        m.observe("solve", 1.0);
+        m.observe("solve", 3.0);
+        assert_eq!(m.mean_seconds("solve"), Some(2.0));
+        let out = m.time("quick", || 42);
+        assert_eq!(out, 42);
+        assert!(m.mean_seconds("quick").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_json() {
+        let m = Metrics::new();
+        m.incr("a", 5);
+        m.observe("t", 0.5);
+        let v = m.snapshot();
+        assert_eq!(v.get_path(&["counters", "a"]).unwrap().as_usize(), Some(5));
+        assert!(v.get_path(&["timers", "t", "mean_s"]).is_some());
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let pool = crate::pool::ThreadPool::new(4);
+        for _ in 0..100 {
+            let m2 = std::sync::Arc::clone(&m);
+            pool.execute(move || m2.incr("hits", 1));
+        }
+        pool.join();
+        assert_eq!(m.get("hits"), 100);
+    }
+}

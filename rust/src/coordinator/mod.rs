@@ -1,0 +1,19 @@
+//! L3 coordinator: the system around the solver.
+//!
+//! * [`config`] — typed experiment configuration (JSON files / CLI).
+//! * [`registry`] — dataset registry: name + params → [`crate::data::DomainPair`].
+//! * [`sweep`] — the hyperparameter sweep scheduler: (γ × ρ × method)
+//!   jobs over a thread pool, per-job metrics, paper-style gain
+//!   aggregation.
+//! * [`metrics`] — process-wide counters/timers with JSON snapshots.
+//! * [`service`] — a line-delimited-JSON TCP OT service + client: submit
+//!   solve requests against named datasets, get distances and plan
+//!   statistics back. Python never runs here; artifacts built by
+//!   `make artifacts` are loaded through [`crate::runtime`] when a
+//!   request selects the `xla-origin` backend.
+
+pub mod config;
+pub mod metrics;
+pub mod registry;
+pub mod service;
+pub mod sweep;

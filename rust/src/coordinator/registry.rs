@@ -1,0 +1,111 @@
+//! Dataset registry: resolve a [`DatasetSpec`] into a generated
+//! [`DomainPair`] (see `data/` for the generator semantics).
+
+use super::config::DatasetSpec;
+use crate::data::{digits, faces, objects, synthetic, DomainPair};
+use anyhow::{anyhow, Result};
+
+/// Instantiate the dataset a spec describes.
+pub fn build_pair(spec: &DatasetSpec) -> Result<DomainPair> {
+    match spec.family.as_str() {
+        "synthetic" => Ok(synthetic::controlled(spec.param1, spec.param2, spec.seed)),
+        "digits" => {
+            // param1: 0 = usps→mnist, 1 = mnist→usps; param2 = samples.
+            match spec.param1 {
+                0 => Ok(digits::usps_to_mnist(spec.param2, spec.seed)),
+                1 => Ok(digits::mnist_to_usps(spec.param2, spec.seed)),
+                other => Err(anyhow!("digits task must be 0 or 1, got {other}")),
+            }
+        }
+        "faces" => {
+            let tasks = faces::all_tasks(spec.scale, spec.seed);
+            tasks
+                .into_iter()
+                .nth(spec.param1)
+                .ok_or_else(|| anyhow!("faces task index must be 0–11, got {}", spec.param1))
+        }
+        "objects" => {
+            let tasks = objects::all_tasks(spec.scale, spec.seed);
+            tasks
+                .into_iter()
+                .nth(spec.param1)
+                .ok_or_else(|| anyhow!("objects task index must be 0–11, got {}", spec.param1))
+        }
+        other => Err(anyhow!(
+            "unknown dataset family '{other}' (synthetic|digits|faces|objects)"
+        )),
+    }
+}
+
+/// Human-readable description of what a spec resolves to.
+pub fn describe(spec: &DatasetSpec) -> String {
+    match spec.family.as_str() {
+        "synthetic" => format!(
+            "synthetic |L|={} g={} (m=n={})",
+            spec.param1,
+            spec.param2,
+            spec.param1 * spec.param2
+        ),
+        "digits" => format!(
+            "digits task {} ({} samples/domain)",
+            if spec.param1 == 0 { "U→M" } else { "M→U" },
+            spec.param2
+        ),
+        "faces" => format!("faces task #{} (scale {})", spec.param1, spec.scale),
+        "objects" => format!("objects task #{} (scale {})", spec.param1, spec.scale),
+        other => format!("unknown family {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_resolution() {
+        let spec = DatasetSpec {
+            family: "synthetic".into(),
+            param1: 3,
+            param2: 4,
+            ..Default::default()
+        };
+        let pair = build_pair(&spec).unwrap();
+        assert_eq!(pair.source.len(), 12);
+        assert!(describe(&spec).contains("|L|=3"));
+    }
+
+    #[test]
+    fn digits_tasks() {
+        let mut spec = DatasetSpec {
+            family: "digits".into(),
+            param1: 0,
+            param2: 30,
+            ..Default::default()
+        };
+        assert_eq!(build_pair(&spec).unwrap().task_name(), "usps→mnist");
+        spec.param1 = 1;
+        assert_eq!(build_pair(&spec).unwrap().task_name(), "mnist→usps");
+        spec.param1 = 9;
+        assert!(build_pair(&spec).is_err());
+    }
+
+    #[test]
+    fn faces_and_objects_by_index() {
+        let spec = DatasetSpec {
+            family: "objects".into(),
+            param1: 11,
+            scale: 0.1,
+            ..Default::default()
+        };
+        let pair = build_pair(&spec).unwrap();
+        assert_eq!(pair.source.num_classes(), 10);
+        let bad = DatasetSpec { param1: 12, ..spec };
+        assert!(build_pair(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_family_rejected() {
+        let spec = DatasetSpec { family: "nope".into(), ..Default::default() };
+        assert!(build_pair(&spec).is_err());
+    }
+}

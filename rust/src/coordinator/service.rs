@@ -1,0 +1,291 @@
+//! TCP OT service: line-delimited JSON requests over a socket.
+//!
+//! Requests (one JSON object per line):
+//!
+//! ```json
+//! {"op": "ping"}
+//! {"op": "metrics"}
+//! {"op": "solve", "dataset": {"family": "synthetic", "param1": 10,
+//!   "param2": 10, "seed": 1}, "gamma": 1.0, "rho": 0.5, "method": "fast"}
+//! {"op": "shutdown"}
+//! ```
+//!
+//! Responses: `{"ok": true, …}` or `{"ok": false, "error": "…"}`.
+//! Problems (cost matrices) are cached per dataset spec, so repeated
+//! requests against the same dataset pay generation cost once — the
+//! serving-style hot path is solver-only, with Python nowhere in sight.
+
+use super::config::{DatasetSpec, Method};
+use super::metrics::Metrics;
+use super::registry::build_pair;
+use super::sweep::solve_full;
+use crate::data::DomainPair;
+use crate::jsonlite::{self, Value};
+use crate::ot::dual::{DualParams, OtProblem};
+use crate::ot::plan::recover_plan;
+use crate::pool::Semaphore;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+struct CachedProblem {
+    pair: DomainPair,
+    prob: OtProblem,
+}
+
+/// Shared server state.
+struct ServerState {
+    metrics: Metrics,
+    cache: Mutex<BTreeMap<String, Arc<CachedProblem>>>,
+    stop: AtomicBool,
+    /// Caps concurrent solves (`workers` of [`serve`]).
+    solve_gate: Semaphore,
+}
+
+/// Handle to a running service.
+pub struct ServiceHandle {
+    pub addr: std::net::SocketAddr,
+    join: Option<std::thread::JoinHandle<()>>,
+    state: Arc<ServerState>,
+}
+
+impl ServiceHandle {
+    /// Ask the server to stop and wait for it.
+    pub fn shutdown(mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // Unblock accept() with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start the service on `bind` (use port 0 for an ephemeral port).
+/// `workers` is the connection-handling pool size.
+pub fn serve(bind: &str, workers: usize) -> Result<ServiceHandle> {
+    let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+    let addr = listener.local_addr()?;
+    let state = Arc::new(ServerState {
+        metrics: Metrics::new(),
+        cache: Mutex::new(BTreeMap::new()),
+        stop: AtomicBool::new(false),
+        solve_gate: Semaphore::new(workers.max(1)),
+    });
+    let state2 = Arc::clone(&state);
+    // One thread per connection (handlers block on the socket for the
+    // connection's lifetime, so a fixed pool would be starved by idle
+    // keep-alive clients). The semaphore caps *concurrent solves* at
+    // `workers` instead — that's the resource that matters.
+    let join = std::thread::Builder::new()
+        .name("grpot-service".into())
+        .spawn(move || {
+            let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            for conn in listener.incoming() {
+                if state2.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let st = Arc::clone(&state2);
+                        handlers.push(std::thread::spawn(move || handle_conn(stream, &st)));
+                    }
+                    Err(_) => break,
+                }
+                handlers.retain(|h| !h.is_finished());
+            }
+            for h in handlers {
+                let _ = h.join();
+            }
+        })?;
+    Ok(ServiceHandle { addr, join: Some(join), state })
+}
+
+fn handle_conn(stream: TcpStream, state: &Arc<ServerState>) {
+    let peer = stream.peer_addr().ok();
+    // Periodically wake from blocking reads so idle keep-alive
+    // connections observe the stop flag (otherwise shutdown would hang
+    // on join until every client disconnects).
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(250)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // connection closed
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Keep any partial line already buffered; retry.
+                continue;
+            }
+            Err(_) => break,
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            line.clear();
+            continue;
+        }
+        state.metrics.incr("service.requests", 1);
+        let response = state
+            .metrics
+            .time("service.request_seconds", || handle_request(line.trim(), state));
+        let response = match response {
+            Ok(v) => v.set("ok", true),
+            Err(e) => Value::obj().set("ok", false).set("error", format!("{e:#}")),
+        };
+        if writeln!(writer, "{}", response.to_json()).is_err() {
+            break;
+        }
+        line.clear();
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+fn parse_dataset(v: &Value) -> Result<DatasetSpec> {
+    let d = v.get("dataset").ok_or_else(|| anyhow!("missing 'dataset'"))?;
+    let mut spec = DatasetSpec::default();
+    if let Some(f) = d.get("family").and_then(Value::as_str) {
+        spec.family = f.to_string();
+    }
+    if let Some(x) = d.get("param1").and_then(Value::as_usize) {
+        spec.param1 = x;
+    }
+    if let Some(x) = d.get("param2").and_then(Value::as_usize) {
+        spec.param2 = x;
+    }
+    if let Some(x) = d.get("scale").and_then(Value::as_f64) {
+        spec.scale = x;
+    }
+    if let Some(x) = d.get("seed").and_then(Value::as_f64) {
+        spec.seed = x as u64;
+    }
+    Ok(spec)
+}
+
+fn cached_problem(state: &Arc<ServerState>, spec: &DatasetSpec) -> Result<Arc<CachedProblem>> {
+    let key = format!(
+        "{}:{}:{}:{}:{}",
+        spec.family, spec.param1, spec.param2, spec.scale, spec.seed
+    );
+    if let Some(hit) = state.cache.lock().unwrap().get(&key) {
+        state.metrics.incr("service.cache_hits", 1);
+        return Ok(Arc::clone(hit));
+    }
+    state.metrics.incr("service.cache_misses", 1);
+    let pair = build_pair(spec)?;
+    let prob = OtProblem::from_dataset(&pair);
+    let cached = Arc::new(CachedProblem { pair, prob });
+    state
+        .cache
+        .lock()
+        .unwrap()
+        .insert(key, Arc::clone(&cached));
+    Ok(cached)
+}
+
+fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
+    let req = jsonlite::parse(line).context("parsing request json")?;
+    let op = req
+        .get("op")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("missing 'op'"))?;
+    match op {
+        "ping" => Ok(Value::obj().set("pong", true)),
+        "metrics" => Ok(Value::obj().set("metrics", state.metrics.snapshot())),
+        "shutdown" => {
+            state.stop.store(true, Ordering::SeqCst);
+            Ok(Value::obj().set("stopping", true))
+        }
+        "solve" => {
+            let spec = parse_dataset(&req)?;
+            let gamma = req
+                .get("gamma")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow!("missing 'gamma'"))?;
+            let rho = req
+                .get("rho")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| anyhow!("missing 'rho'"))?;
+            let method = Method::parse(
+                req.get("method").and_then(Value::as_str).unwrap_or("fast"),
+            )?;
+            let cached = cached_problem(state, &spec)?;
+            let _permit = state.solve_gate.acquire();
+            let res = solve_full(&cached.prob, method, gamma, rho, 10, 1000);
+            let params = DualParams::new(gamma, rho);
+            let plan = recover_plan(&cached.prob, &params, &res.x);
+            let acc = crate::eval::otda_accuracy(&cached.pair, &cached.prob, &plan);
+            state.metrics.incr("service.solves", 1);
+            let mut v = Value::obj()
+                .set("method", method.name())
+                .set("gamma", gamma)
+                .set("rho", rho)
+                .set("dual_objective", res.dual_objective)
+                .set("wall_time_s", res.wall_time_s)
+                .set("iterations", res.iterations)
+                .set("transport_cost", plan.transport_cost(&cached.prob))
+                .set("group_sparsity", plan.group_sparsity(&cached.prob, 1e-12))
+                .set("plan_density", plan.density(1e-12))
+                .set("otda_accuracy", acc);
+            if let Some(id) = req.get("id") {
+                v = v.set("id", id.clone());
+            }
+            Ok(v)
+        }
+        other => Err(anyhow!("unknown op '{other}'")),
+    }
+}
+
+/// Minimal blocking client for the service.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to service")?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Send one request object; wait for and parse the response line.
+    pub fn call(&mut self, req: &Value) -> Result<Value> {
+        writeln!(self.writer, "{}", req.to_json())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(anyhow!("connection closed by server"));
+        }
+        Ok(jsonlite::parse(line.trim())?)
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let v = self.call(&Value::obj().set("op", "ping"))?;
+        Ok(v.get("pong").and_then(Value::as_bool).unwrap_or(false))
+    }
+}

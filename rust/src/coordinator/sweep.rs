@@ -1,0 +1,317 @@
+//! Hyperparameter sweep scheduler — the paper's measurement protocol.
+//!
+//! The paper evaluates every (γ, ρ) combination and reports, per γ, the
+//! **total** processing time across ρ ∈ {0.2, 0.4, 0.6, 0.8} for each
+//! method; the headline metric is the per-γ *gain* = t_origin / t_ours.
+//! This module runs that grid (optionally across worker threads for
+//! multi-task figures — individual solves stay single-threaded like the
+//! paper's one-CPU-core setup), collects per-job records and aggregates
+//! gains.
+
+use super::config::{Method, SweepConfig};
+use super::metrics::Metrics;
+use super::registry::build_pair;
+use crate::jsonlite::Value;
+use crate::ot::dual::OtProblem;
+use crate::ot::fastot::{drive, solve_fast_ot, FastOtConfig};
+use crate::ot::origin::solve_origin;
+use crate::pool::ThreadPool;
+use crate::solvers::lbfgs::LbfgsOptions;
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+/// One completed sweep job.
+#[derive(Clone, Debug)]
+pub struct SweepRecord {
+    pub method: Method,
+    pub gamma: f64,
+    pub rho: f64,
+    pub wall_time_s: f64,
+    pub dual_objective: f64,
+    pub iterations: usize,
+    pub grads_computed: u64,
+    pub grads_skipped: u64,
+}
+
+impl SweepRecord {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("method", self.method.name())
+            .set("gamma", self.gamma)
+            .set("rho", self.rho)
+            .set("wall_time_s", self.wall_time_s)
+            .set("dual_objective", self.dual_objective)
+            .set("iterations", self.iterations)
+            .set("grads_computed", self.grads_computed)
+            .set("grads_skipped", self.grads_skipped)
+    }
+}
+
+/// Per-γ aggregate: total seconds per method and the paper's gain.
+#[derive(Clone, Debug)]
+pub struct GammaAggregate {
+    pub gamma: f64,
+    /// `(method, total seconds over the ρ grid)`.
+    pub totals: Vec<(Method, f64)>,
+    /// `t_origin / t_fast` when both present.
+    pub gain: Option<f64>,
+}
+
+/// Complete sweep output.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub records: Vec<SweepRecord>,
+    pub aggregates: Vec<GammaAggregate>,
+    /// Max objective over all hyperparameters per method (Table 1).
+    pub max_objective: Vec<(Method, f64)>,
+}
+
+/// Solve one (method, γ, ρ) job, returning the full solver result.
+pub fn solve_full(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    max_iters: usize,
+) -> crate::ot::fastot::FastOtResult {
+    let cfg = FastOtConfig {
+        gamma,
+        rho,
+        r,
+        use_working_set: method != Method::FastNoWs,
+        lbfgs: LbfgsOptions { max_iters, ..Default::default() },
+    };
+    match method {
+        Method::Fast | Method::FastNoWs => solve_fast_ot(prob, &cfg),
+        Method::Origin => solve_origin(prob, &cfg),
+        Method::XlaOrigin => {
+            let runtime = crate::runtime::PjrtRuntime::cpu().expect("pjrt client");
+            let params = cfg.params();
+            let mut oracle = crate::runtime::XlaDualOracle::from_problem(
+                &runtime,
+                prob,
+                &params,
+                &crate::runtime::artifact_dir(),
+            )
+            .expect("artifact for problem shape (run `make artifacts`)");
+            drive(prob, &cfg, &mut oracle, "xla-origin")
+        }
+    }
+}
+
+/// Solve one (method, γ, ρ) job on a prepared problem.
+pub fn run_job(prob: &OtProblem, method: Method, gamma: f64, rho: f64, r: usize, max_iters: usize) -> SweepRecord {
+    let res = solve_full(prob, method, gamma, rho, r, max_iters);
+    SweepRecord {
+        method,
+        gamma,
+        rho,
+        wall_time_s: res.wall_time_s,
+        dual_objective: res.dual_objective,
+        iterations: res.iterations,
+        grads_computed: res.stats.grads_computed,
+        grads_skipped: res.stats.grads_skipped,
+    }
+}
+
+/// Run the full grid described by `cfg`. When `cfg.threads > 1`, jobs
+/// run concurrently (each job remains single-threaded).
+pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
+    let pair = build_pair(&cfg.dataset)?;
+    let prob = Arc::new(OtProblem::from_dataset(&pair));
+    let jobs: Vec<(Method, f64, f64)> = cfg
+        .methods
+        .iter()
+        .flat_map(|&m| {
+            cfg.gammas
+                .iter()
+                .flat_map(move |&g| cfg.rhos.iter().map(move |&r| (m, g, r)))
+        })
+        .collect();
+    metrics.incr("sweep.jobs_total", jobs.len() as u64);
+
+    let records: Vec<SweepRecord> = if cfg.threads <= 1 {
+        jobs.iter()
+            .map(|&(m, g, r)| {
+                let rec = run_job(&prob, m, g, r, cfg.r, cfg.max_iters);
+                metrics.incr("sweep.jobs_done", 1);
+                metrics.observe("sweep.job_seconds", rec.wall_time_s);
+                rec
+            })
+            .collect()
+    } else {
+        let results = Arc::new(Mutex::new(Vec::with_capacity(jobs.len())));
+        let pool = ThreadPool::new(cfg.threads);
+        for &(m, g, r) in &jobs {
+            let prob = Arc::clone(&prob);
+            let results = Arc::clone(&results);
+            let (rr, mi) = (cfg.r, cfg.max_iters);
+            pool.execute(move || {
+                let rec = run_job(&prob, m, g, r, rr, mi);
+                results.lock().unwrap().push(rec);
+            });
+        }
+        pool.join();
+        let mut recs = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+        // Deterministic order for reports.
+        recs.sort_by(|a, b| {
+            (a.method.name(), a.gamma, a.rho)
+                .partial_cmp(&(b.method.name(), b.gamma, b.rho))
+                .unwrap()
+        });
+        metrics.incr("sweep.jobs_done", recs.len() as u64);
+        recs
+    };
+
+    Ok(aggregate(cfg, records))
+}
+
+/// Aggregate records into per-γ totals, gains, and max objectives.
+pub fn aggregate(cfg: &SweepConfig, records: Vec<SweepRecord>) -> SweepReport {
+    let mut aggregates = Vec::new();
+    for &gamma in &cfg.gammas {
+        let mut totals = Vec::new();
+        for &m in &cfg.methods {
+            let total: f64 = records
+                .iter()
+                .filter(|r| r.method == m && r.gamma == gamma)
+                .map(|r| r.wall_time_s)
+                .sum();
+            totals.push((m, total));
+        }
+        let t_fast = totals
+            .iter()
+            .find(|(m, _)| *m == Method::Fast)
+            .map(|&(_, t)| t);
+        let t_origin = totals
+            .iter()
+            .find(|(m, _)| *m == Method::Origin)
+            .map(|&(_, t)| t);
+        let gain = match (t_fast, t_origin) {
+            (Some(f), Some(o)) if f > 0.0 => Some(o / f),
+            _ => None,
+        };
+        aggregates.push(GammaAggregate { gamma, totals, gain });
+    }
+    let max_objective = cfg
+        .methods
+        .iter()
+        .map(|&m| {
+            let best = records
+                .iter()
+                .filter(|r| r.method == m)
+                .map(|r| r.dual_objective)
+                .fold(f64::NEG_INFINITY, f64::max);
+            (m, best)
+        })
+        .collect();
+    SweepReport { records, aggregates, max_objective }
+}
+
+impl SweepReport {
+    /// Full JSON report (records + aggregates).
+    pub fn to_json(&self) -> Value {
+        let recs: Vec<Value> = self.records.iter().map(|r| r.to_json()).collect();
+        let aggs: Vec<Value> = self
+            .aggregates
+            .iter()
+            .map(|a| {
+                let mut v = Value::obj().set("gamma", a.gamma);
+                for (m, t) in &a.totals {
+                    v = v.set(&format!("total_s_{}", m.name()), *t);
+                }
+                if let Some(g) = a.gain {
+                    v = v.set("gain", g);
+                }
+                v
+            })
+            .collect();
+        Value::obj()
+            .set("records", Value::Arr(recs))
+            .set("aggregates", Value::Arr(aggs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::DatasetSpec;
+
+    fn tiny_cfg(threads: usize) -> SweepConfig {
+        SweepConfig {
+            dataset: DatasetSpec {
+                family: "synthetic".into(),
+                param1: 3,
+                param2: 4,
+                ..Default::default()
+            },
+            gammas: vec![0.1, 1.0],
+            rhos: vec![0.4, 0.8],
+            methods: vec![Method::Fast, Method::Origin],
+            r: 5,
+            threads,
+            max_iters: 60,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_matches_theorem2() {
+        let metrics = Metrics::new();
+        let report = run_sweep(&tiny_cfg(1), &metrics).unwrap();
+        assert_eq!(report.records.len(), 2 * 2 * 2);
+        assert_eq!(metrics.get("sweep.jobs_done"), 8);
+        // Theorem 2 on every grid point: identical objectives.
+        for &gamma in &[0.1, 1.0] {
+            for &rho in &[0.4, 0.8] {
+                let find = |m: Method| {
+                    report
+                        .records
+                        .iter()
+                        .find(|r| r.method == m && r.gamma == gamma && r.rho == rho)
+                        .unwrap()
+                };
+                let f = find(Method::Fast);
+                let o = find(Method::Origin);
+                assert_eq!(f.dual_objective, o.dual_objective);
+                assert_eq!(f.iterations, o.iterations);
+            }
+        }
+        // Aggregates carry gains.
+        for a in &report.aggregates {
+            assert!(a.gain.is_some());
+        }
+        // Table-1 check: same max objective for both methods.
+        let fast_max = report.max_objective.iter().find(|(m, _)| *m == Method::Fast).unwrap().1;
+        let orig_max = report.max_objective.iter().find(|(m, _)| *m == Method::Origin).unwrap().1;
+        assert_eq!(fast_max, orig_max);
+    }
+
+    #[test]
+    fn threaded_sweep_matches_serial_objectives() {
+        let metrics = Metrics::new();
+        let serial = run_sweep(&tiny_cfg(1), &metrics).unwrap();
+        let threaded = run_sweep(&tiny_cfg(4), &metrics).unwrap();
+        assert_eq!(serial.records.len(), threaded.records.len());
+        // Wall times differ; objectives must not.
+        let key = |r: &SweepRecord| (r.method.name(), r.gamma.to_bits(), r.rho.to_bits());
+        let mut s: Vec<_> = serial.records.iter().map(|r| (key(r), r.dual_objective)).collect();
+        let mut t: Vec<_> = threaded.records.iter().map(|r| (key(r), r.dual_objective)).collect();
+        s.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        t.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let metrics = Metrics::new();
+        let mut cfg = tiny_cfg(1);
+        cfg.gammas = vec![1.0];
+        cfg.rhos = vec![0.5];
+        let report = run_sweep(&cfg, &metrics).unwrap();
+        let v = report.to_json();
+        assert_eq!(v.get("records").unwrap().as_arr().unwrap().len(), 2);
+        let agg = &v.get("aggregates").unwrap().as_arr().unwrap()[0];
+        assert!(agg.get("gain").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

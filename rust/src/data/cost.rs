@@ -1,0 +1,53 @@
+//! Cost-matrix helpers shared by examples, benches and the coordinator.
+
+use super::DomainPair;
+use crate::linalg::{self, Mat};
+
+/// A cost matrix together with its normalization factor.
+#[derive(Clone, Debug)]
+pub struct CostMatrix {
+    /// `m × n`, max-normalized to `[0, 1]`.
+    pub c: Mat,
+    /// The max value divided out (multiply back for raw costs).
+    pub scale: f64,
+}
+
+impl CostMatrix {
+    /// Squared-Euclidean cost between the two domains, max-normalized
+    /// (the paper's setting: `c_ij = ‖x_S_i − x_T_j‖₂²`).
+    pub fn squared_euclidean(pair: &DomainPair) -> CostMatrix {
+        let mut c = linalg::sq_euclidean_cost(&pair.source.x, &pair.target.x);
+        let scale = linalg::normalize_by_max(&mut c);
+        CostMatrix { c, scale }
+    }
+
+    /// Raw (unnormalized) transport cost for a given plan value.
+    pub fn denormalize(&self, normalized_cost: f64) -> f64 {
+        normalized_cost * self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn normalized_to_unit_interval() {
+        let pair = synthetic::controlled(3, 4, 5);
+        let cm = CostMatrix::squared_euclidean(&pair);
+        assert_eq!(cm.c.shape(), (12, 12));
+        assert!(cm.scale > 0.0);
+        assert!(cm.c.max_abs() <= 1.0 + 1e-12);
+        assert!(cm.c.as_slice().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn denormalize_roundtrips() {
+        let pair = synthetic::controlled(2, 3, 9);
+        let cm = CostMatrix::squared_euclidean(&pair);
+        let raw = linalg::sq_euclidean_cost(&pair.source.x, &pair.target.x);
+        let got = cm.denormalize(cm.c[(0, 0)]);
+        assert!((got - raw[(0, 0)]).abs() < 1e-9);
+    }
+}

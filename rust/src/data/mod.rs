@@ -1,0 +1,86 @@
+//! Datasets for the paper's four evaluation families.
+//!
+//! The image has no network access, so the real USPS/MNIST/PIE/
+//! Caltech-Office archives are substituted by generators that match
+//! each dataset's *geometry as seen by the solver* — class count,
+//! feature dimension, per-domain sizes, class-clustered structure and a
+//! controlled domain shift. The screening behaviour under study depends
+//! only on that geometry (through the cost matrix), not on pixel-level
+//! realism; see DESIGN.md §3 for the substitution table.
+
+pub mod cost;
+pub mod digits;
+pub mod faces;
+pub mod objects;
+pub mod synthetic;
+
+use crate::linalg::Mat;
+
+/// A labeled point cloud on one domain.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Human-readable name ("usps-like", "pie05-like", …).
+    pub name: String,
+    /// Feature matrix, one sample per row.
+    pub x: Mat,
+    /// Class label per sample. For *target* domains these exist only
+    /// for evaluation (the solver never sees them).
+    pub labels: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.labels.iter().copied().max().map_or(0, |m| m + 1)
+    }
+}
+
+/// A source (labeled) / target (unlabeled at solve time) pair.
+#[derive(Clone, Debug)]
+pub struct DomainPair {
+    pub source: Dataset,
+    pub target: Dataset,
+}
+
+impl DomainPair {
+    /// Short "S→T" task label, e.g. `"usps→mnist"`.
+    pub fn task_name(&self) -> String {
+        format!("{}→{}", self.source.name, self.target.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_accessors() {
+        let d = Dataset {
+            name: "t".into(),
+            x: Mat::zeros(3, 2),
+            labels: vec![0, 2, 1],
+        };
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.num_classes(), 3);
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn pair_task_name() {
+        let mk = |n: &str| Dataset { name: n.into(), x: Mat::zeros(1, 1), labels: vec![0] };
+        let p = DomainPair { source: mk("u"), target: mk("m") };
+        assert_eq!(p.task_name(), "u→m");
+    }
+}

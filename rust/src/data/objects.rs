@@ -1,0 +1,183 @@
+//! Object-recognition substitute (Caltech-Office with DeCAF₆ features,
+//! Fig. 5).
+//!
+//! The paper uses 4096-d DeCAF₆ activations (post-ReLU fc6 of an
+//! ILSVRC-trained CNN) over 10 classes and four domains — Caltech-256
+//! (1123), Amazon (958), Webcam (295), DSLR (157). Offline substitute:
+//! sparse *nonnegative* feature vectors matching post-ReLU statistics
+//! (most units silent, heavy-tailed active units); each class owns a
+//! random subset of "selective units", each domain applies a gain
+//! vector + unit dropout (camera/background statistics).
+
+use super::{Dataset, DomainPair};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+const DIM: usize = 4096;
+const NUM_CLASSES: usize = 10;
+/// Selective units per class (≈2% of 4096, typical fc6 selectivity).
+const UNITS_PER_CLASS: usize = 80;
+
+/// The four Caltech-Office domains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OfficeDomain {
+    Caltech,
+    Amazon,
+    Webcam,
+    Dslr,
+}
+
+impl OfficeDomain {
+    pub const ALL: [OfficeDomain; 4] = [
+        OfficeDomain::Caltech,
+        OfficeDomain::Amazon,
+        OfficeDomain::Webcam,
+        OfficeDomain::Dslr,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OfficeDomain::Caltech => "caltech",
+            OfficeDomain::Amazon => "amazon",
+            OfficeDomain::Webcam => "webcam",
+            OfficeDomain::Dslr => "dslr",
+        }
+    }
+
+    /// Paper sample counts.
+    pub fn full_size(&self) -> usize {
+        match self {
+            OfficeDomain::Caltech => 1123,
+            OfficeDomain::Amazon => 958,
+            OfficeDomain::Webcam => 295,
+            OfficeDomain::Dslr => 157,
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            OfficeDomain::Caltech => 0,
+            OfficeDomain::Amazon => 1,
+            OfficeDomain::Webcam => 2,
+            OfficeDomain::Dslr => 3,
+        }
+    }
+}
+
+/// Class-selective unit sets, shared across domains.
+fn class_units(proto_seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Pcg64::new(proto_seed);
+    (0..NUM_CLASSES)
+        .map(|_| rng.sample_indices(DIM, UNITS_PER_CLASS))
+        .collect()
+}
+
+/// Generate one domain scaled to `scale ∈ (0, 1]` of the paper size.
+pub fn generate(domain: OfficeDomain, scale: f64, proto_seed: u64, seed: u64) -> Dataset {
+    assert!(scale > 0.0 && scale <= 1.0);
+    let samples = ((domain.full_size() as f64 * scale).round() as usize).max(NUM_CLASSES);
+    let units = class_units(proto_seed);
+    // Domain-specific gain field + dropout rate.
+    let mut drng = Pcg64::new(proto_seed ^ (0xDECAF + domain.index() as u64));
+    let gains: Vec<f64> = (0..DIM).map(|_| drng.uniform(0.6, 1.4)).collect();
+    let dropout = [0.1, 0.15, 0.3, 0.35][domain.index()];
+    let background = [0.02, 0.03, 0.05, 0.04][domain.index()];
+
+    let mut rng = Pcg64::new(seed);
+    let mut x = Mat::zeros(samples, DIM);
+    let mut labels = Vec::with_capacity(samples);
+    for s in 0..samples {
+        let class = s % NUM_CLASSES;
+        labels.push(class);
+        let row = x.row_mut(s);
+        // Background firing: sparse small activations anywhere.
+        let bg_count = (background * DIM as f64) as usize;
+        for _ in 0..bg_count {
+            let d = rng.below(DIM);
+            row[d] += rng.exp1() * 0.2;
+        }
+        // Class-selective units: heavy-tailed (log-normal-ish) via exp
+        // of a normal, with domain gain and dropout.
+        for &d in &units[class] {
+            if rng.f64() < dropout {
+                continue;
+            }
+            let mag = (0.5 * rng.normal()).exp(); // lognormal, median 1
+            row[d] += gains[d] * mag;
+        }
+    }
+    Dataset { name: domain.name().to_string(), x, labels }
+}
+
+/// All 12 ordered Caltech-Office adaptation tasks at the given scale.
+pub fn all_tasks(scale: f64, seed: u64) -> Vec<DomainPair> {
+    let mut tasks = Vec::with_capacity(12);
+    for (si, &s) in OfficeDomain::ALL.iter().enumerate() {
+        for (ti, &t) in OfficeDomain::ALL.iter().enumerate() {
+            if si == ti {
+                continue;
+            }
+            tasks.push(DomainPair {
+                source: generate(s, scale, 0xDECAF, seed + si as u64),
+                target: generate(t, scale, 0xDECAF, seed + 100 + ti as u64),
+            });
+        }
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_sparsity() {
+        let d = generate(OfficeDomain::Dslr, 1.0, 1, 2);
+        assert_eq!(d.len(), 157);
+        assert_eq!(d.dim(), 4096);
+        assert_eq!(d.num_classes(), 10);
+        // Post-ReLU statistics: nonnegative and mostly zero.
+        let nz = d.x.count_nonzero(0.0);
+        let frac = nz as f64 / (d.len() * d.dim()) as f64;
+        assert!(d.x.as_slice().iter().all(|&v| v >= 0.0));
+        assert!(frac < 0.15, "too dense: {frac}");
+        assert!(frac > 0.005, "too sparse: {frac}");
+    }
+
+    #[test]
+    fn twelve_tasks_with_correct_sizes() {
+        let tasks = all_tasks(0.2, 5);
+        assert_eq!(tasks.len(), 12);
+        let c_a = tasks
+            .iter()
+            .find(|t| t.task_name() == "caltech→amazon")
+            .expect("task present");
+        assert_eq!(c_a.source.len(), 225); // round(1123·0.2)
+        assert_eq!(c_a.target.len(), 192); // round(958·0.2)
+    }
+
+    #[test]
+    fn classes_cluster_across_domains() {
+        let a = generate(OfficeDomain::Amazon, 0.3, 7, 1);
+        let b = generate(OfficeDomain::Webcam, 0.6, 7, 9);
+        let dist = |i: usize, j: usize| {
+            crate::linalg::sub(a.x.row(i), b.x.row(j))
+                .iter()
+                .map(|v| v * v)
+                .sum::<f64>()
+        };
+        let (mut same, mut diff) = ((0.0, 0usize), (0.0, 0usize));
+        for i in 0..60.min(a.len()) {
+            for j in 0..60.min(b.len()) {
+                if a.labels[i] == b.labels[j] {
+                    same = (same.0 + dist(i, j), same.1 + 1);
+                } else {
+                    diff = (diff.0 + dist(i, j), diff.1 + 1);
+                }
+            }
+        }
+        let sm = same.0 / same.1 as f64;
+        let dm = diff.0 / diff.1 as f64;
+        assert!(sm < 0.9 * dm, "same={sm} diff={dm}");
+    }
+}

@@ -1,0 +1,87 @@
+//! The paper's controlled synthetic dataset (Fig. 2 / Fig. A / Table 1).
+//!
+//! Exactly the construction of the Experiment section: `|L|` classes,
+//! `g` samples per class, d = 2; class `l` of the source is
+//! `N((5l, −5), I)` and of the target `N((5l, +5), I)`; `n = m = |L|·g`.
+//! Target labels are produced for evaluation only.
+
+use super::{Dataset, DomainPair};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Paper construction with `num_classes` classes and `g` samples per
+/// class on both domains.
+pub fn controlled(num_classes: usize, g: usize, seed: u64) -> DomainPair {
+    assert!(num_classes > 0 && g > 0);
+    let mut rng = Pcg64::new(seed);
+    let make = |rng: &mut Pcg64, y_mean: f64, name: &str| {
+        let m = num_classes * g;
+        let mut x = Mat::zeros(m, 2);
+        let mut labels = Vec::with_capacity(m);
+        for l in 0..num_classes {
+            for k in 0..g {
+                let row = l * g + k;
+                x[(row, 0)] = rng.normal_ms(l as f64 * 5.0, 1.0);
+                x[(row, 1)] = rng.normal_ms(y_mean, 1.0);
+                labels.push(l);
+            }
+        }
+        Dataset { name: name.to_string(), x, labels }
+    };
+    let source = make(&mut rng, -5.0, &format!("synth-src-L{num_classes}-g{g}"));
+    let target = make(&mut rng, 5.0, &format!("synth-tgt-L{num_classes}-g{g}"));
+    DomainPair { source, target }
+}
+
+/// Fig.-2 family: fixed g = 10, growing class count.
+pub fn controlled_classes(num_classes: usize, g: usize, seed: u64) -> DomainPair {
+    controlled(num_classes, g, seed)
+}
+
+/// Fig.-A family: fixed |L| = 10, growing samples-per-class.
+pub fn controlled_samples_per_class(g: usize, seed: u64) -> DomainPair {
+    controlled(10, g, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        let p = controlled(40, 10, 1);
+        assert_eq!(p.source.len(), 400);
+        assert_eq!(p.target.len(), 400);
+        assert_eq!(p.source.dim(), 2);
+        assert_eq!(p.source.num_classes(), 40);
+        assert_eq!(p.target.num_classes(), 40);
+    }
+
+    #[test]
+    fn class_means_separate() {
+        let p = controlled(4, 200, 7);
+        // Class 3 mean-x ≈ 15, class 0 mean-x ≈ 0.
+        let mean_x = |ds: &Dataset, class: usize| {
+            let idx: Vec<usize> =
+                (0..ds.len()).filter(|&i| ds.labels[i] == class).collect();
+            idx.iter().map(|&i| ds.x[(i, 0)]).sum::<f64>() / idx.len() as f64
+        };
+        assert!((mean_x(&p.source, 0) - 0.0).abs() < 0.3);
+        assert!((mean_x(&p.source, 3) - 15.0).abs() < 0.3);
+        // Domains split on the y axis.
+        let mean_y = |ds: &Dataset| {
+            (0..ds.len()).map(|i| ds.x[(i, 1)]).sum::<f64>() / ds.len() as f64
+        };
+        assert!(mean_y(&p.source) < -4.5);
+        assert!(mean_y(&p.target) > 4.5);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = controlled(3, 5, 42);
+        let b = controlled(3, 5, 42);
+        assert_eq!(a.source.x.as_slice(), b.source.x.as_slice());
+        let c = controlled(3, 5, 43);
+        assert_ne!(a.source.x.as_slice(), c.source.x.as_slice());
+    }
+}

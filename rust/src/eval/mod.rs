@@ -1,0 +1,105 @@
+//! Domain-adaptation evaluation: transport the labeled source into the
+//! target domain and measure 1-NN transfer accuracy (the standard OTDA
+//! protocol of Courty et al. 2017).
+
+use crate::data::DomainPair;
+use crate::linalg::{self, Mat};
+use crate::ot::dual::OtProblem;
+use crate::ot::plan::TransportPlan;
+
+/// 1-nearest-neighbour classification of `queries` against labeled
+/// `refs`; returns predicted labels.
+pub fn knn1_predict(refs: &Mat, ref_labels: &[usize], queries: &Mat) -> Vec<usize> {
+    assert_eq!(refs.rows(), ref_labels.len());
+    assert_eq!(refs.cols(), queries.cols());
+    let d = linalg::sq_euclidean_cost(queries, refs); // q × r
+    (0..queries.rows())
+        .map(|q| {
+            let row = d.row(q);
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (r, &v) in row.iter().enumerate() {
+                if v < best_d {
+                    best_d = v;
+                    best = r;
+                }
+            }
+            ref_labels[best]
+        })
+        .collect()
+}
+
+/// Fraction of matching labels.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let hits = pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// OTDA evaluation: barycentrically map the source samples through the
+/// plan, 1-NN-classify the target against the mapped (still labeled)
+/// source, and score against the target's ground-truth labels (held out
+/// from the solver).
+pub fn otda_accuracy(pair: &DomainPair, prob: &OtProblem, plan: &TransportPlan) -> f64 {
+    // Plan rows are in sorted order; labels of sorted rows:
+    let sorted_labels: Vec<usize> = prob
+        .groups
+        .perm
+        .iter()
+        .map(|&orig| pair.source.labels[orig])
+        .collect();
+    let mapped = plan.barycentric_map(&pair.target.x);
+    // Rows that moved no mass are meaningless references; drop them.
+    let row_mass = plan.t.row_sums();
+    let keep: Vec<usize> = (0..mapped.rows()).filter(|&i| row_mass[i] > 1e-12).collect();
+    assert!(!keep.is_empty(), "plan moved no mass at all");
+    let mut refs = Mat::zeros(keep.len(), mapped.cols());
+    let mut ref_labels = Vec::with_capacity(keep.len());
+    for (r, &i) in keep.iter().enumerate() {
+        refs.row_mut(r).copy_from_slice(mapped.row(i));
+        ref_labels.push(sorted_labels[i]);
+    }
+    let pred = knn1_predict(&refs, &ref_labels, &pair.target.x);
+    accuracy(&pred, &pair.target.labels)
+}
+
+/// Baseline: 1-NN straight across the domain gap (no adaptation).
+pub fn no_adaptation_accuracy(pair: &DomainPair) -> f64 {
+    let pred = knn1_predict(&pair.source.x, &pair.source.labels, &pair.target.x);
+    accuracy(&pred, &pair.target.labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::ot::fastot::{solve_fast_ot, FastOtConfig};
+    use crate::ot::plan::recover_plan;
+
+    #[test]
+    fn knn_identifies_exact_matches() {
+        let refs = Mat::from_vec(3, 2, vec![0.0, 0.0, 5.0, 5.0, -5.0, 5.0]);
+        let labels = vec![0, 1, 2];
+        let queries = Mat::from_vec(2, 2, vec![4.9, 5.1, 0.1, -0.1]);
+        assert_eq!(knn1_predict(&refs, &labels, &queries), vec![1, 0]);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 4]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]).is_nan(), true);
+    }
+
+    #[test]
+    fn otda_beats_chance_on_synthetic() {
+        // The synthetic construction has a severe y-axis shift, so OTDA
+        // should recover class structure well above the 1/|L| chance.
+        let pair = synthetic::controlled(5, 12, 77);
+        let prob = OtProblem::from_dataset(&pair);
+        let cfg = FastOtConfig { gamma: 0.05, rho: 0.6, ..Default::default() };
+        let res = solve_fast_ot(&prob, &cfg);
+        let plan = recover_plan(&prob, &cfg.params(), &res.x);
+        let acc = otda_accuracy(&pair, &prob, &plan);
+        assert!(acc > 0.6, "otda accuracy too low: {acc}");
+    }
+}

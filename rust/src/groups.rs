@@ -1,0 +1,188 @@
+//! Group structure induced by source-domain class labels.
+//!
+//! The group-sparse regularizer treats all source samples sharing a
+//! class label as one group (Eq. 3 of the paper). For cache-friendly
+//! per-group access the source samples are re-ordered so each group is a
+//! contiguous index range; [`GroupStructure`] records the partition and
+//! the permutation back to the original sample order.
+
+/// Contiguous group partition of `m` source samples into `|L|` groups.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupStructure {
+    /// `offsets[l]..offsets[l+1]` are the (sorted-order) indices of group `l`.
+    pub offsets: Vec<usize>,
+    /// Group sizes `g_l` (`offsets` deltas, cached).
+    pub sizes: Vec<usize>,
+    /// `sqrt(g_l)` — appears in both screening bounds (Eqs. 6–7).
+    pub sqrt_sizes: Vec<f64>,
+    /// `perm[k]` = original index of the sample now at sorted position `k`.
+    pub perm: Vec<usize>,
+    /// Class label of each group (ascending).
+    pub labels: Vec<usize>,
+}
+
+impl GroupStructure {
+    /// Build from per-sample class labels (arbitrary usize labels).
+    ///
+    /// Samples are stably sorted by label; gaps in label ids are fine
+    /// (no empty groups are created).
+    pub fn from_labels(labels: &[usize]) -> GroupStructure {
+        let m = labels.len();
+        assert!(m > 0, "no samples");
+        let mut perm: Vec<usize> = (0..m).collect();
+        perm.sort_by_key(|&i| (labels[i], i)); // stable by construction
+        let mut offsets = vec![0usize];
+        let mut group_labels = Vec::new();
+        let mut cur = labels[perm[0]];
+        group_labels.push(cur);
+        for (k, &i) in perm.iter().enumerate() {
+            if labels[i] != cur {
+                offsets.push(k);
+                cur = labels[i];
+                group_labels.push(cur);
+            }
+        }
+        offsets.push(m);
+        let sizes: Vec<usize> = offsets.windows(2).map(|w| w[1] - w[0]).collect();
+        let sqrt_sizes = sizes.iter().map(|&s| (s as f64).sqrt()).collect();
+        GroupStructure { offsets, sizes, sqrt_sizes, perm, labels: group_labels }
+    }
+
+    /// Build a uniform partition: `l` groups of exactly `g` elements.
+    pub fn uniform(l: usize, g: usize) -> GroupStructure {
+        assert!(l > 0 && g > 0);
+        let offsets: Vec<usize> = (0..=l).map(|k| k * g).collect();
+        GroupStructure {
+            offsets,
+            sizes: vec![g; l],
+            sqrt_sizes: vec![(g as f64).sqrt(); l],
+            perm: (0..l * g).collect(),
+            labels: (0..l).collect(),
+        }
+    }
+
+    /// Number of groups `|L|`.
+    #[inline]
+    pub fn num_groups(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Total number of samples `m`.
+    #[inline]
+    pub fn num_samples(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Index range of group `l` in sorted order.
+    #[inline]
+    pub fn range(&self, l: usize) -> std::ops::Range<usize> {
+        self.offsets[l]..self.offsets[l + 1]
+    }
+
+    /// Largest group size.
+    pub fn max_size(&self) -> usize {
+        self.sizes.iter().copied().max().unwrap()
+    }
+
+    /// True when all groups have the same size (the AOT kernel's fast
+    /// path requires this).
+    pub fn is_uniform(&self) -> bool {
+        self.sizes.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// Group id of sorted position `k` (binary search; off the hot path).
+    pub fn group_of(&self, k: usize) -> usize {
+        debug_assert!(k < self.num_samples());
+        match self.offsets.binary_search(&k) {
+            Ok(l) if l < self.num_groups() => l,
+            Ok(l) => l - 1,
+            Err(ins) => ins - 1,
+        }
+    }
+
+    /// Apply the sorting permutation to a per-sample slice.
+    pub fn permute<T: Copy>(&self, xs: &[T]) -> Vec<T> {
+        assert_eq!(xs.len(), self.perm.len());
+        self.perm.iter().map(|&i| xs[i]).collect()
+    }
+
+    /// Invert the sorting permutation on a per-sample slice (sorted →
+    /// original order).
+    pub fn unpermute<T: Copy + Default>(&self, xs: &[T]) -> Vec<T> {
+        assert_eq!(xs.len(), self.perm.len());
+        let mut out = vec![T::default(); xs.len()];
+        for (k, &i) in self.perm.iter().enumerate() {
+            out[i] = xs[k];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_labels_sorts_and_partitions() {
+        let labels = vec![2, 0, 1, 0, 2, 2];
+        let gs = GroupStructure::from_labels(&labels);
+        assert_eq!(gs.num_groups(), 3);
+        assert_eq!(gs.num_samples(), 6);
+        assert_eq!(gs.sizes, vec![2, 1, 3]);
+        assert_eq!(gs.offsets, vec![0, 2, 3, 6]);
+        assert_eq!(gs.labels, vec![0, 1, 2]);
+        for l in 0..gs.num_groups() {
+            for k in gs.range(l) {
+                assert_eq!(labels[gs.perm[k]], gs.labels[l]);
+            }
+        }
+    }
+
+    #[test]
+    fn from_labels_is_stable() {
+        let labels = vec![1, 1, 0, 1];
+        let gs = GroupStructure::from_labels(&labels);
+        assert_eq!(gs.perm, vec![2, 0, 1, 3]);
+    }
+
+    #[test]
+    fn uniform_structure() {
+        let gs = GroupStructure::uniform(3, 4);
+        assert_eq!(gs.num_groups(), 3);
+        assert_eq!(gs.num_samples(), 12);
+        assert!(gs.is_uniform());
+        assert_eq!(gs.range(1), 4..8);
+        assert_eq!(gs.max_size(), 4);
+        assert!((gs.sqrt_sizes[0] - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn group_of_matches_ranges() {
+        let gs = GroupStructure::from_labels(&[0, 0, 1, 2, 2, 2]);
+        for l in 0..gs.num_groups() {
+            for k in gs.range(l) {
+                assert_eq!(gs.group_of(k), l);
+            }
+        }
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let labels = vec![3, 1, 2, 1, 3];
+        let gs = GroupStructure::from_labels(&labels);
+        let xs = vec![10.0, 11.0, 12.0, 13.0, 14.0];
+        let p = gs.permute(&xs);
+        let back = gs.unpermute(&p);
+        assert_eq!(back, xs);
+        let pl = gs.permute(&labels);
+        let mut sorted = pl.clone();
+        sorted.sort_unstable();
+        assert_eq!(pl, sorted);
+    }
+
+    #[test]
+    fn non_uniform_detected() {
+        let gs = GroupStructure::from_labels(&[0, 0, 1]);
+        assert!(!gs.is_uniform());
+    }
+}

@@ -1,0 +1,16 @@
+//! Minimal JSON substrate (parse + serialize).
+//!
+//! Used for the coordinator's config files, the sweep report format, the
+//! artifact manifest written by `python/compile/aot.py`, and the TCP
+//! service's line-delimited wire protocol. Supports the full JSON value
+//! model; numbers are `f64` (integers round-trip exactly up to 2^53,
+//! which is far beyond anything in this repo).
+
+mod parse;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+
+#[cfg(test)]
+mod tests;

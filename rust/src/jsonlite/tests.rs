@@ -1,0 +1,84 @@
+use super::*;
+
+#[test]
+fn parse_scalars() {
+    assert_eq!(parse("null").unwrap(), Value::Null);
+    assert_eq!(parse("true").unwrap(), Value::Bool(true));
+    assert_eq!(parse("false").unwrap(), Value::Bool(false));
+    assert_eq!(parse("42").unwrap(), Value::Num(42.0));
+    assert_eq!(parse("-3.5e2").unwrap(), Value::Num(-350.0));
+    assert_eq!(parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+}
+
+#[test]
+fn parse_nested() {
+    let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+    assert_eq!(v.get("c").unwrap().as_str(), Some("x"));
+    let arr = v.get("a").unwrap().as_arr().unwrap();
+    assert_eq!(arr[0].as_f64(), Some(1.0));
+    assert_eq!(arr[2].get("b"), Some(&Value::Null));
+    assert_eq!(v.get_path(&["a"]).unwrap().as_arr().unwrap().len(), 3);
+}
+
+#[test]
+fn parse_escapes_and_unicode() {
+    let v = parse(r#""a\nb\t\"c\" é 😀""#).unwrap();
+    assert_eq!(v.as_str(), Some("a\nb\t\"c\" é 😀"));
+    // Raw multibyte passthrough
+    let v = parse("\"héllo\"").unwrap();
+    assert_eq!(v.as_str(), Some("héllo"));
+}
+
+#[test]
+fn roundtrip() {
+    let orig = Value::obj()
+        .set("name", "fig2")
+        .set("gain", 6.8)
+        .set("classes", vec![10usize, 20, 40])
+        .set("ok", true)
+        .set("nested", Value::obj().set("x", Value::Null));
+    let text = orig.to_json();
+    let back = parse(&text).unwrap();
+    assert_eq!(back, orig);
+}
+
+#[test]
+fn roundtrip_numbers_precisely() {
+    for x in [0.0, 1.0, -1.5, 1e-9, 123456789.0, 0.1, 2.0_f64.powi(52)] {
+        let t = Value::Num(x).to_json();
+        assert_eq!(parse(&t).unwrap().as_f64(), Some(x), "text={t}");
+    }
+}
+
+#[test]
+fn errors_carry_position() {
+    let e = parse("{\"a\": }").unwrap_err();
+    assert!(e.pos > 0);
+    assert!(parse("[1, 2").is_err());
+    assert!(parse("").is_err());
+    assert!(parse("[1] extra").is_err());
+    assert!(parse("{'single': 1}").is_err());
+}
+
+#[test]
+fn accessors() {
+    let v = parse(r#"{"n": 3, "xs": [1.5, 2.5], "flag": false}"#).unwrap();
+    assert_eq!(v.get("n").unwrap().as_usize(), Some(3));
+    assert_eq!(v.get("xs").unwrap().as_f64_vec(), Some(vec![1.5, 2.5]));
+    assert_eq!(v.get("flag").unwrap().as_bool(), Some(false));
+    assert_eq!(v.get("missing"), None);
+    assert_eq!(v.get("n").unwrap().as_str(), None);
+    assert_eq!(Value::Num(1.5).as_usize(), None);
+    assert_eq!(Value::Num(-2.0).as_usize(), None);
+}
+
+#[test]
+fn nan_serializes_as_null() {
+    assert_eq!(Value::Num(f64::NAN).to_json(), "null");
+}
+
+#[test]
+fn deterministic_key_order() {
+    let v = Value::obj().set("z", 1usize).set("a", 2usize);
+    assert_eq!(v.to_json(), r#"{"a":2,"z":1}"#);
+}

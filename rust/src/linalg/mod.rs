@@ -1,0 +1,15 @@
+//! Dense linear algebra substrate.
+//!
+//! The whole stack works on `f64` row-major matrices ([`Mat`]) and plain
+//! `&[f64]` slices. This module provides exactly the operations the OT
+//! core needs: BLAS-1 kernels, grouped partial norms, pairwise squared
+//! Euclidean cost matrices, and a few reductions. No external crates.
+
+mod mat;
+mod ops;
+
+pub use mat::Mat;
+pub use ops::*;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,160 @@
+//! BLAS-1 style kernels and the grouped partial norms used throughout
+//! the screening bounds (Eqs. 6–7 of the paper).
+
+use super::Mat;
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // Four-lane unrolled accumulation: deterministic and fast enough for
+    // the solver's O(m+n) vectors; the O(mn) hot loops live in ot::.
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn nrm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Infinity norm.
+#[inline]
+pub fn nrm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+}
+
+/// `a - b` into a fresh vector.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x - y).collect()
+}
+
+/// Norm of the positive part: `‖[x]₊‖₂`.
+#[inline]
+pub fn nrm2_pos(x: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for &v in x {
+        if v > 0.0 {
+            s += v * v;
+        }
+    }
+    s.sqrt()
+}
+
+/// Norm of the negative part: `‖[x]₋‖₂` (reported as a nonnegative number).
+#[inline]
+pub fn nrm2_neg(x: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for &v in x {
+        if v < 0.0 {
+            s += v * v;
+        }
+    }
+    s.sqrt()
+}
+
+/// Per-group Euclidean norms of `x` partitioned by `offsets`
+/// (`offsets[l]..offsets[l+1]` is group `l`).
+pub fn grouped_nrm2(x: &[f64], offsets: &[usize]) -> Vec<f64> {
+    grouped_reduce(x, offsets, nrm2)
+}
+
+/// Per-group `‖[·]₊‖₂`.
+pub fn grouped_nrm2_pos(x: &[f64], offsets: &[usize]) -> Vec<f64> {
+    grouped_reduce(x, offsets, nrm2_pos)
+}
+
+/// Per-group `‖[·]₋‖₂`.
+pub fn grouped_nrm2_neg(x: &[f64], offsets: &[usize]) -> Vec<f64> {
+    grouped_reduce(x, offsets, nrm2_neg)
+}
+
+fn grouped_reduce(x: &[f64], offsets: &[usize], f: impl Fn(&[f64]) -> f64) -> Vec<f64> {
+    assert!(!offsets.is_empty());
+    assert_eq!(*offsets.last().unwrap(), x.len(), "offsets must cover x");
+    offsets
+        .windows(2)
+        .map(|w| f(&x[w[0]..w[1]]))
+        .collect()
+}
+
+/// Pairwise squared Euclidean cost matrix `c_{ij} = ‖xs_i − xt_j‖₂²`
+/// between the rows of `xs` (m×d) and `xt` (n×d).
+///
+/// Uses the expansion `‖u−v‖² = ‖u‖² + ‖v‖² − 2⟨u,v⟩` with a clamp at 0
+/// to absorb rounding.
+pub fn sq_euclidean_cost(xs: &Mat, xt: &Mat) -> Mat {
+    assert_eq!(xs.cols(), xt.cols(), "feature dims differ");
+    let m = xs.rows();
+    let n = xt.rows();
+    let xs_sq: Vec<f64> = (0..m).map(|i| nrm2_sq(xs.row(i))).collect();
+    let xt_sq: Vec<f64> = (0..n).map(|j| nrm2_sq(xt.row(j))).collect();
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let xi = xs.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..n {
+            let v = xs_sq[i] + xt_sq[j] - 2.0 * dot(xi, xt.row(j));
+            orow[j] = v.max(0.0);
+        }
+    }
+    out
+}
+
+/// Normalize a cost matrix by its max element (common practice in OT
+/// implementations, incl. POT and Blondel et al.'s reference code) so
+/// that γ has a dataset-independent scale.
+pub fn normalize_by_max(c: &mut Mat) -> f64 {
+    let m = c.max_abs();
+    if m > 0.0 {
+        scal(1.0 / m, c.as_mut_slice());
+    }
+    m
+}
+
+/// log-sum-exp of a slice (stable).
+pub fn logsumexp(x: &[f64]) -> f64 {
+    let m = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = x.iter().map(|&v| (v - m).exp()).sum();
+    m + s.ln()
+}

@@ -1,0 +1,142 @@
+use super::*;
+
+fn assert_close(a: f64, b: f64, tol: f64) {
+    assert!((a - b).abs() <= tol, "{a} vs {b}");
+}
+
+#[test]
+fn mat_indexing_row_major() {
+    let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+    assert_eq!(m[(0, 0)], 1.0);
+    assert_eq!(m[(0, 2)], 3.0);
+    assert_eq!(m[(1, 0)], 4.0);
+    assert_eq!(m.row(1), &[4., 5., 6.]);
+    assert_eq!(m.col_to_vec(1), vec![2., 5.]);
+}
+
+#[test]
+fn mat_transpose_roundtrip() {
+    let m = Mat::from_fn(3, 5, |i, j| (i * 10 + j) as f64);
+    let t = m.transpose();
+    assert_eq!(t.shape(), (5, 3));
+    assert_eq!(t.transpose(), m);
+    for i in 0..3 {
+        for j in 0..5 {
+            assert_eq!(m[(i, j)], t[(j, i)]);
+        }
+    }
+}
+
+#[test]
+fn mat_matvec_and_t() {
+    let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+    assert_eq!(m.matvec(&[1., 0., -1.]), vec![-2., -2.]);
+    assert_eq!(m.matvec_t(&[1., 1.]), vec![5., 7., 9.]);
+}
+
+#[test]
+fn mat_matmul_identity() {
+    let m = Mat::from_fn(4, 4, |i, j| ((i + 1) * (j + 2)) as f64);
+    let i4 = Mat::eye(4);
+    assert_eq!(m.matmul(&i4), m);
+    assert_eq!(i4.matmul(&m), m);
+}
+
+#[test]
+fn mat_sums() {
+    let m = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+    assert_eq!(m.sum(), 10.0);
+    assert_eq!(m.row_sums(), vec![3., 7.]);
+    assert_eq!(m.col_sums(), vec![4., 6.]);
+    assert_eq!(m.max_abs(), 4.0);
+    assert_eq!(m.count_nonzero(0.0), 4);
+}
+
+#[test]
+fn dot_matches_naive_on_odd_lengths() {
+    for n in [0usize, 1, 3, 4, 5, 7, 8, 17] {
+        let a: Vec<f64> = (0..n).map(|i| i as f64 * 0.5 - 1.0).collect();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_close(dot(&a, &b), naive, 1e-12);
+    }
+}
+
+#[test]
+fn axpy_scal_nrm() {
+    let x = vec![3.0, 4.0];
+    assert_close(nrm2(&x), 5.0, 1e-15);
+    assert_close(nrm2_sq(&x), 25.0, 1e-15);
+    let mut y = vec![1.0, 1.0];
+    axpy(2.0, &x, &mut y);
+    assert_eq!(y, vec![7.0, 9.0]);
+    scal(0.5, &mut y);
+    assert_eq!(y, vec![3.5, 4.5]);
+    assert_eq!(nrm_inf(&[-7.0, 2.0]), 7.0);
+}
+
+#[test]
+fn pos_neg_norms_partition_energy() {
+    let x = vec![1.0, -2.0, 0.0, 3.0, -4.0];
+    let p = nrm2_pos(&x);
+    let n = nrm2_neg(&x);
+    assert_close(p * p + n * n, nrm2_sq(&x), 1e-12);
+    assert_close(p, (1.0f64 + 9.0).sqrt(), 1e-12);
+    assert_close(n, (4.0f64 + 16.0).sqrt(), 1e-12);
+}
+
+#[test]
+fn grouped_norms_respect_offsets() {
+    let x = vec![3.0, 4.0, -5.0, 12.0, 0.0];
+    let offsets = vec![0, 2, 5];
+    let g = grouped_nrm2(&x, &offsets);
+    assert_close(g[0], 5.0, 1e-12);
+    assert_close(g[1], 13.0, 1e-12);
+    let gp = grouped_nrm2_pos(&x, &offsets);
+    assert_close(gp[1], 12.0, 1e-12);
+    let gn = grouped_nrm2_neg(&x, &offsets);
+    assert_close(gn[0], 0.0, 1e-12);
+    assert_close(gn[1], 5.0, 1e-12);
+}
+
+#[test]
+#[should_panic]
+fn grouped_norms_bad_offsets_panics() {
+    grouped_nrm2(&[1.0, 2.0], &[0, 1]);
+}
+
+#[test]
+fn sq_euclidean_matches_direct() {
+    let xs = Mat::from_vec(2, 2, vec![0., 0., 1., 2.]);
+    let xt = Mat::from_vec(3, 2, vec![0., 0., 3., 4., -1., 0.]);
+    let c = sq_euclidean_cost(&xs, &xt);
+    assert_eq!(c.shape(), (2, 3));
+    assert_close(c[(0, 0)], 0.0, 1e-12);
+    assert_close(c[(0, 1)], 25.0, 1e-12);
+    assert_close(c[(0, 2)], 1.0, 1e-12);
+    assert_close(c[(1, 1)], 8.0, 1e-12);
+}
+
+#[test]
+fn normalize_by_max_scales() {
+    let mut c = Mat::from_vec(2, 2, vec![1., 2., 4., 0.5]);
+    let m = normalize_by_max(&mut c);
+    assert_eq!(m, 4.0);
+    assert_close(c.max_abs(), 1.0, 1e-15);
+}
+
+#[test]
+fn logsumexp_stable() {
+    assert_close(logsumexp(&[0.0, 0.0]), 2.0f64.ln(), 1e-12);
+    // Huge magnitudes must not overflow.
+    let v = logsumexp(&[1000.0, 1000.0]);
+    assert_close(v, 1000.0 + 2.0f64.ln(), 1e-9);
+    assert_eq!(logsumexp(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+}
+
+#[test]
+fn frobenius_dot() {
+    let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+    let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
+    assert_close(a.frobenius_dot(&b), 70.0, 1e-12);
+}

@@ -1,0 +1,288 @@
+//! `grpot` — command-line entrypoint for the fast group-sparse OT
+//! framework.
+//!
+//! Subcommands:
+//! * `solve`   — one regularized OT solve on a named dataset.
+//! * `sweep`   — the paper's (γ × ρ × method) grid with gain report.
+//! * `serve`   — start the TCP OT service.
+//! * `request` — send one solve request to a running service.
+//! * `validate-artifacts` — check AOT artifacts load & match Rust numerics.
+//! * `info`    — build/runtime information.
+
+use grpot::cli::{App, ArgSpec};
+use grpot::coordinator::config::{DatasetSpec, Method, SweepConfig};
+use grpot::coordinator::metrics::Metrics;
+use grpot::coordinator::{registry, service, sweep};
+use grpot::jsonlite::Value;
+use grpot::ot::dual::{DualParams, OtProblem};
+use grpot::ot::plan::recover_plan;
+
+fn app() -> App {
+    let dataset_args = |a: App| -> App {
+        a.arg(ArgSpec::opt("dataset", "synthetic|digits|faces|objects").default("synthetic"))
+            .arg(ArgSpec::opt("param1", "synthetic: #classes; digits/faces/objects: task index").default("10"))
+            .arg(ArgSpec::opt("param2", "synthetic: samples/class; digits: samples/domain").default("10"))
+            .arg(ArgSpec::opt("scale", "faces/objects: fraction of paper-size domains").default("0.1"))
+            .arg(ArgSpec::opt("seed", "dataset generation seed").default("55930"))
+    };
+    App::new("grpot", "fast regularized discrete OT with group-sparse regularizers (AAAI'23 reproduction)")
+        .subcommand(dataset_args(
+            App::new("solve", "run one regularized OT solve")
+                .arg(ArgSpec::opt("gamma", "regularization strength γ").default("1.0"))
+                .arg(ArgSpec::opt("rho", "group/quadratic balance ρ ∈ [0,1)").default("0.5"))
+                .arg(ArgSpec::opt("method", "fast|fast-nows|origin|xla-origin").default("fast"))
+                .arg(ArgSpec::opt("r", "snapshot interval").default("10"))
+                .arg(ArgSpec::switch("plan-stats", "also recover the plan and print its statistics")),
+        ))
+        .subcommand(dataset_args(
+            App::new("sweep", "run the paper's hyperparameter grid")
+                .arg(ArgSpec::opt("gammas", "γ grid").default("0.001,0.01,0.1,1,10,100,1000"))
+                .arg(ArgSpec::opt("rhos", "ρ grid").default("0.2,0.4,0.6,0.8"))
+                .arg(ArgSpec::opt("methods", "comma-separated methods").default("fast,origin"))
+                .arg(ArgSpec::opt("threads", "parallel sweep workers").default("1"))
+                .arg(ArgSpec::opt("max-iters", "L-BFGS iteration cap").default("1000"))
+                .arg(ArgSpec::opt("config", "JSON config file (overrides flags)"))
+                .arg(ArgSpec::opt("out", "write the JSON report here")),
+        ))
+        .subcommand(
+            App::new("serve", "start the TCP OT service")
+                .arg(ArgSpec::opt("bind", "listen address").default("127.0.0.1:7677"))
+                .arg(ArgSpec::opt("workers", "connection worker threads").default("4")),
+        )
+        .subcommand(
+            App::new("request", "send one solve request to a running service")
+                .arg(ArgSpec::opt("addr", "service address").default("127.0.0.1:7677"))
+                .arg(ArgSpec::opt("json", "raw request JSON").required()),
+        )
+        .subcommand(
+            App::new("validate-artifacts", "compile AOT artifacts and cross-check numerics")
+                .arg(ArgSpec::opt("dir", "artifact directory").default("artifacts")),
+        )
+        .subcommand(App::new("info", "print build and runtime information"))
+}
+
+fn dataset_spec(m: &grpot::cli::Matches) -> Result<DatasetSpec, grpot::cli::CliError> {
+    Ok(DatasetSpec {
+        family: m.get("dataset").unwrap_or("synthetic").to_string(),
+        param1: m.get_usize("param1")?,
+        param2: m.get_usize("param2")?,
+        scale: m.get_f64("scale")?,
+        seed: m.get_usize("seed")? as u64,
+    })
+}
+
+fn cmd_solve(m: &grpot::cli::Matches) -> anyhow::Result<()> {
+    let spec = dataset_spec(m).map_err(|e| anyhow::anyhow!(e.0))?;
+    let gamma = m.get_f64("gamma").map_err(|e| anyhow::anyhow!(e.0))?;
+    let rho = m.get_f64("rho").map_err(|e| anyhow::anyhow!(e.0))?;
+    let r = m.get_usize("r").map_err(|e| anyhow::anyhow!(e.0))?;
+    let method = Method::parse(m.get("method").unwrap_or("fast"))?;
+    eprintln!("dataset: {}", registry::describe(&spec));
+    let pair = registry::build_pair(&spec)?;
+    let prob = OtProblem::from_dataset(&pair);
+    eprintln!("problem: m={} n={} |L|={}", prob.m(), prob.n(), prob.groups.num_groups());
+    let res = sweep::solve_full(&prob, method, gamma, rho, r, 1000);
+    let mut out = Value::obj()
+        .set("method", method.name())
+        .set("gamma", gamma)
+        .set("rho", rho)
+        .set("dual_objective", res.dual_objective)
+        .set("iterations", res.iterations)
+        .set("wall_time_s", res.wall_time_s)
+        .set("grads_computed", res.stats.grads_computed)
+        .set("grads_skipped", res.stats.grads_skipped);
+    if m.get_flag("plan-stats") {
+        let params = DualParams::new(gamma, rho);
+        let plan = recover_plan(&prob, &params, &res.x);
+        let (va, vb) = plan.marginal_violation(&prob);
+        out = out
+            .set("transport_cost", plan.transport_cost(&prob))
+            .set("primal_objective", plan.primal_objective(&prob, &params))
+            .set("plan_density", plan.density(1e-12))
+            .set("group_sparsity", plan.group_sparsity(&prob, 1e-12))
+            .set("single_class_columns", plan.single_class_columns(&prob, 1e-12))
+            .set("marginal_violation_a", va)
+            .set("marginal_violation_b", vb)
+            .set("otda_accuracy", grpot::eval::otda_accuracy(&pair, &prob, &plan));
+    }
+    println!("{}", out.to_json());
+    Ok(())
+}
+
+fn cmd_sweep(m: &grpot::cli::Matches) -> anyhow::Result<()> {
+    let cfg = if let Some(path) = m.get("config") {
+        SweepConfig::from_file(std::path::Path::new(path))?
+    } else {
+        let methods = m
+            .get("methods")
+            .unwrap_or("fast,origin")
+            .split(',')
+            .map(|s| Method::parse(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        SweepConfig {
+            dataset: dataset_spec(m).map_err(|e| anyhow::anyhow!(e.0))?,
+            gammas: m.get_f64_list("gammas").map_err(|e| anyhow::anyhow!(e.0))?,
+            rhos: m.get_f64_list("rhos").map_err(|e| anyhow::anyhow!(e.0))?,
+            methods,
+            r: 10,
+            threads: m.get_usize("threads").map_err(|e| anyhow::anyhow!(e.0))?,
+            max_iters: m.get_usize("max-iters").map_err(|e| anyhow::anyhow!(e.0))?,
+        }
+    };
+    eprintln!("sweep: {} | {} γ × {} ρ × {} methods",
+        registry::describe(&cfg.dataset), cfg.gammas.len(), cfg.rhos.len(), cfg.methods.len());
+    let metrics = Metrics::new();
+    let report = sweep::run_sweep(&cfg, &metrics)?;
+    println!("{:>10} {:>14} {:>14} {:>8}", "gamma", "t_origin[s]", "t_fast[s]", "gain");
+    for a in &report.aggregates {
+        let t = |mm: Method| {
+            a.totals
+                .iter()
+                .find(|(x, _)| *x == mm)
+                .map(|&(_, t)| t)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "{:>10.4} {:>14.4} {:>14.4} {:>8}",
+            a.gamma,
+            t(Method::Origin),
+            t(Method::Fast),
+            a.gain.map_or("-".to_string(), |g| format!("{g:.2}x"))
+        );
+    }
+    if let Some(out) = m.get("out") {
+        let body = Value::obj()
+            .set("config", cfg.to_json())
+            .set("report", report.to_json())
+            .set("metrics", metrics.snapshot());
+        std::fs::write(out, body.to_json())?;
+        eprintln!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(m: &grpot::cli::Matches) -> anyhow::Result<()> {
+    let bind = m.get("bind").unwrap_or("127.0.0.1:7677");
+    let workers = m.get_usize("workers").map_err(|e| anyhow::anyhow!(e.0))?;
+    let handle = service::serve(bind, workers)?;
+    eprintln!("grpot service listening on {}", handle.addr);
+    eprintln!("send {{\"op\":\"shutdown\"}} to stop");
+    let addr = handle.addr;
+    // Stay resident until the service stops accepting pings (shutdown).
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(2));
+        match service::Client::connect(&addr) {
+            Ok(mut probe) => {
+                if !probe.ping().unwrap_or(false) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    Ok(())
+}
+
+fn cmd_request(m: &grpot::cli::Matches) -> anyhow::Result<()> {
+    let addr: std::net::SocketAddr = m
+        .get("addr")
+        .unwrap_or("127.0.0.1:7677")
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad --addr: {e}"))?;
+    let raw = m.get("json").expect("required");
+    let req = grpot::jsonlite::parse(raw)?;
+    let mut client = service::Client::connect(&addr)?;
+    let resp = client.call(&req)?;
+    println!("{}", resp.to_json());
+    Ok(())
+}
+
+fn cmd_validate_artifacts(m: &grpot::cli::Matches) -> anyhow::Result<()> {
+    use grpot::linalg::Mat;
+    use grpot::rng::Pcg64;
+    use grpot::runtime::{Manifest, PjrtRuntime, XlaDualOracle};
+    let dir = std::path::PathBuf::from(m.get("dir").unwrap_or("artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    let runtime = PjrtRuntime::cpu()?;
+    println!("platform: {}", runtime.platform());
+    for entry in &manifest.entries {
+        let (l, g, n) = (entry.num_groups, entry.group_size, entry.n);
+        let mut rng = Pcg64::new(0xA77E);
+        let mmm = l * g;
+        let cost = Mat::from_fn(mmm, n, |_, _| rng.uniform(0.0, 1.0));
+        let labels: Vec<usize> = (0..mmm).map(|i| i / g).collect();
+        let prob = OtProblem::from_parts(
+            vec![1.0 / mmm as f64; mmm],
+            vec![1.0 / n as f64; n],
+            &cost,
+            &labels,
+        );
+        let params = DualParams::new(0.8, 0.5);
+        let mut oracle = XlaDualOracle::from_problem(&runtime, &prob, &params, &dir)?;
+        let x: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.3, 0.6)).collect();
+        let mut g_xla = vec![0.0; prob.dim()];
+        let f_xla = grpot::ot::dual::DualOracle::eval(&mut oracle, &x, &mut g_xla);
+        let mut g_rust = vec![0.0; prob.dim()];
+        let (f_rust, _) = grpot::ot::dual::eval_dense(&prob, &params, &x, &mut g_rust);
+        let gerr = g_xla
+            .iter()
+            .zip(&g_rust)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        let ok = (f_xla - f_rust).abs() < 1e-9 && gerr < 1e-9;
+        println!(
+            "{} (L={l} g={g} n={n}): obj_err={:.2e} grad_err={gerr:.2e} {}",
+            entry.name,
+            (f_xla - f_rust).abs(),
+            if ok { "OK" } else { "MISMATCH" },
+        );
+        if !ok {
+            anyhow::bail!("artifact {} numerics mismatch", entry.name);
+        }
+    }
+    println!("all {} artifacts validated", manifest.entries.len());
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("grpot {}", env!("CARGO_PKG_VERSION"));
+    println!("paper: Ida et al., \"Fast Regularized Discrete Optimal Transport with Group-Sparse Regularizers\", AAAI 2023");
+    match grpot::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => println!("pjrt: {} available", rt.platform()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    match grpot::runtime::Manifest::load(&grpot::runtime::artifact_dir()) {
+        Ok(man) => println!("artifacts: {} entries in {}", man.entries.len(), man.dir.display()),
+        Err(_) => println!("artifacts: none (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn main() {
+    let parsed = match app().parse_env() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            std::process::exit(2);
+        }
+    };
+    let result = match &parsed.subcommand {
+        Some((name, m)) => match name.as_str() {
+            "solve" => cmd_solve(m),
+            "sweep" => cmd_sweep(m),
+            "serve" => cmd_serve(m),
+            "request" => cmd_request(m),
+            "validate-artifacts" => cmd_validate_artifacts(m),
+            "info" => cmd_info(),
+            _ => unreachable!("cli rejects unknown subcommands"),
+        },
+        None => {
+            eprintln!("{}", app().help());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,489 @@
+//! Smooth relaxed dual of group-sparse regularized discrete OT.
+//!
+//! Primal (Problem 2, with the experimental-section parametrization):
+//!
+//! ```text
+//! min_{T ∈ U(a,b)} ⟨T, C⟩ + Σ_j Ψ(t_j),
+//! Ψ(t) = γ ( ½(1−ρ)‖t‖₂² + ρ Σ_l ‖t_[l]‖₂ )
+//!      = ½ λ_quad ‖t‖₂² + τ Σ_l ‖t_[l]‖₂,   λ_quad = γ(1−ρ), τ = γρ.
+//! ```
+//!
+//! Dual (Problem 4): `max_{α,β} αᵀa + βᵀb − Σ_j ψ(α + β_j 1_m − c_j)`
+//! with the conjugate in closed form. Writing `f = α + β_j 1 − c_j` and
+//! `z_{l,j} = ‖[f_[l]]₊‖₂` (Definition 1):
+//!
+//! ```text
+//! ψ(f)      = Σ_l [z_{l,j} − τ]₊² / (2 λ_quad)
+//! ∇ψ(f)_[l] = [1 − τ/z_{l,j}]₊ [f_[l]]₊ / λ_quad        (Eq. 5)
+//! ```
+//!
+//! so a group contributes to neither value nor gradient when
+//! `z_{l,j} ≤ τ` — the fact both the dense baseline and the screening
+//! method exploit. Solvers *minimize* the negated dual.
+
+use crate::data::DomainPair;
+use crate::groups::GroupStructure;
+use crate::linalg::{self, Mat};
+
+/// Regularization hyperparameters (experimental-section form).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DualParams {
+    /// Overall regularization strength γ > 0.
+    pub gamma: f64,
+    /// Balance ρ ∈ (0, 1): ρ→0 pure quadratic, ρ→1 pure group-lasso.
+    pub rho: f64,
+}
+
+impl DualParams {
+    pub fn new(gamma: f64, rho: f64) -> Self {
+        let p = DualParams { gamma, rho };
+        p.validate();
+        p
+    }
+
+    pub fn validate(&self) {
+        assert!(self.gamma > 0.0, "gamma must be positive");
+        assert!(
+            self.rho >= 0.0 && self.rho < 1.0,
+            "rho must lie in [0, 1); rho=1 makes the conjugate degenerate"
+        );
+    }
+
+    /// Quadratic coefficient `λ_quad = γ(1−ρ)`.
+    #[inline]
+    pub fn lambda_quad(&self) -> f64 {
+        self.gamma * (1.0 - self.rho)
+    }
+
+    /// Group-lasso coefficient and skip threshold `τ = γρ` (the paper's `μγ`).
+    #[inline]
+    pub fn tau(&self) -> f64 {
+        self.gamma * self.rho
+    }
+
+    /// The paper's `μ` (Eq. 3) for this (γ, ρ).
+    pub fn mu(&self) -> f64 {
+        self.rho / (1.0 - self.rho)
+    }
+}
+
+impl Default for DualParams {
+    fn default() -> Self {
+        DualParams { gamma: 1.0, rho: 0.5 }
+    }
+}
+
+/// A regularized-OT instance: marginals, cost and group structure.
+///
+/// The cost matrix is stored **transposed** (`n×m`): the dual oracles
+/// walk column `j` of `C` in the inner loop, so row `j` of `cost_t`
+/// keeps that access contiguous. Source samples are in *sorted
+/// (grouped)* order; `groups.perm` maps back to the caller's order.
+#[derive(Clone, Debug)]
+pub struct OtProblem {
+    /// Source marginal `a` (length m, sums to 1).
+    pub a: Vec<f64>,
+    /// Target marginal `b` (length n, sums to 1).
+    pub b: Vec<f64>,
+    /// Transposed cost: `cost_t[(j, i)] = c(x_S_i, x_T_j)`, sorted order.
+    pub cost_t: Mat,
+    /// Group partition of the (sorted) source samples.
+    pub groups: GroupStructure,
+}
+
+impl OtProblem {
+    /// Build from a labeled source / unlabeled target pair with squared
+    /// Euclidean costs normalized by the max entry (standard practice;
+    /// gives γ a dataset-independent scale).
+    pub fn from_dataset(pair: &DomainPair) -> OtProblem {
+        let groups = GroupStructure::from_labels(&pair.source.labels);
+        // Permute source rows into grouped order.
+        let d = pair.source.x.cols();
+        let xs = Mat::from_fn(groups.num_samples(), d, |k, c| {
+            pair.source.x[(groups.perm[k], c)]
+        });
+        let mut cost = linalg::sq_euclidean_cost(&xs, &pair.target.x);
+        linalg::normalize_by_max(&mut cost);
+        let m = xs.rows();
+        let n = pair.target.x.rows();
+        OtProblem {
+            a: vec![1.0 / m as f64; m],
+            b: vec![1.0 / n as f64; n],
+            cost_t: cost.transpose(),
+            groups,
+        }
+    }
+
+    /// Build from explicit parts. `cost` is `m×n` in the *original*
+    /// source order; rows are permuted into grouped order internally.
+    pub fn from_parts(a: Vec<f64>, b: Vec<f64>, cost: &Mat, labels: &[usize]) -> OtProblem {
+        let m = cost.rows();
+        let n = cost.cols();
+        assert_eq!(a.len(), m);
+        assert_eq!(b.len(), n);
+        assert_eq!(labels.len(), m);
+        let groups = GroupStructure::from_labels(labels);
+        let mut cost_t = Mat::zeros(n, m);
+        for j in 0..n {
+            let row = cost_t.row_mut(j);
+            for (k, &orig) in groups.perm.iter().enumerate() {
+                row[k] = cost[(orig, j)];
+            }
+        }
+        let a_perm = groups.permute(&a);
+        OtProblem { a: a_perm, b, cost_t, groups }
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.a.len()
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Dual variable dimension `m + n`.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.m() + self.n()
+    }
+
+    /// Dense `m×n` cost in sorted-source order (copies; tests/baselines).
+    pub fn cost(&self) -> Mat {
+        self.cost_t.transpose()
+    }
+}
+
+/// Counters shared by all oracles. A "group gradient computation" is one
+/// evaluation of `∇ψ(·)_[l]` for a single `(l, j)` — the unit the paper
+/// counts in Figures 6 and C.
+#[derive(Clone, Debug, Default)]
+pub struct OracleStats {
+    /// Number of `eval` calls (function+gradient evaluations).
+    pub evals: u64,
+    /// Exact group gradients computed.
+    pub grads_computed: u64,
+    /// Group gradients skipped via the upper bound.
+    pub grads_skipped: u64,
+    /// Upper bounds evaluated (the overhead the working set removes).
+    pub ub_checks: u64,
+    /// Group gradients routed through the working set ℕ.
+    pub ws_hits: u64,
+    /// Per-eval history of `grads_computed` deltas (Fig. C).
+    pub per_eval_grads: Vec<u64>,
+}
+
+impl OracleStats {
+    pub fn record_eval(&mut self, grads_this_eval: u64) {
+        self.evals += 1;
+        self.per_eval_grads.push(grads_this_eval);
+    }
+}
+
+/// A (value, gradient) oracle for the negated dual, `x = [α; β]`.
+///
+/// Implementations: [`crate::ot::origin::OriginOracle`] (dense),
+/// [`crate::ot::screening::ScreeningOracle`] (the paper's method) and
+/// [`crate::runtime::XlaDualOracle`] (AOT JAX/Pallas via PJRT).
+pub trait DualOracle {
+    /// Problem dimensions `(m, n)`.
+    fn shape(&self) -> (usize, usize);
+
+    /// Evaluate the negated dual at `x = [α; β]`, writing its gradient
+    /// into `grad` (same length). Returns the objective value.
+    fn eval(&mut self, x: &[f64], grad: &mut [f64]) -> f64;
+
+    /// Called by the Algorithm-1 driver after each `r`-iteration block
+    /// with the current iterate (snapshot + working-set refresh point).
+    /// Dense oracles may ignore it.
+    fn refresh(&mut self, _x: &[f64]) {}
+
+    /// Counter access.
+    fn stats(&self) -> &OracleStats;
+}
+
+/// Compute `ψ` and `∇ψ` contributions of one `(group, column)` pair and
+/// accumulate into the gradient. Returns the pair's ψ value.
+///
+/// This is THE inner kernel: both the dense baseline and the screening
+/// method call this exact function for every non-skipped pair, which is
+/// what makes Theorem 2 (identical trajectories) hold bit-for-bit.
+///
+/// `grad_alpha` is the α-part of the negated-dual gradient; the returned
+/// `col_mass` (Σ_i t_ij over this group) must be added to `∂/∂β_j`.
+#[inline]
+pub fn group_grad_contrib(
+    alpha: &[f64],
+    beta_j: f64,
+    c_j: &[f64],
+    range: std::ops::Range<usize>,
+    tau: f64,
+    lambda_quad: f64,
+    grad_alpha: &mut [f64],
+    scratch: &mut [f64],
+) -> (f64, f64) {
+    // Pass 1: materialize [f]₊ into scratch and accumulate z².
+    let start = range.start;
+    let g = range.len();
+    debug_assert!(scratch.len() >= g);
+    let mut zsq = 0.0;
+    for (k, i) in range.clone().enumerate() {
+        let f = alpha[i] + beta_j - c_j[i];
+        let fp = if f > 0.0 { f } else { 0.0 };
+        // Branchless store keeps the loop tight; zsq only sums positives.
+        scratch[k] = fp;
+        zsq += fp * fp;
+    }
+    let z = zsq.sqrt();
+    if z <= tau {
+        return (0.0, 0.0);
+    }
+    // Pass 2: t = scale · [f]₊ from scratch (no recomputation of f).
+    let scale = (z - tau) / (lambda_quad * z);
+    let mut col_mass = 0.0;
+    for k in 0..g {
+        let t = scale * scratch[k];
+        grad_alpha[start + k] += t;
+        col_mass += t;
+    }
+    let slack = z - tau;
+    (slack * slack / (2.0 * lambda_quad), col_mass)
+}
+
+/// `z_{l,j} = ‖[ (α + β_j 1 − c_j)_[l] ]₊‖₂` for one pair (used by
+/// diagnostics and tests; the hot path inlines it).
+pub fn exact_z(
+    alpha: &[f64],
+    beta_j: f64,
+    c_j: &[f64],
+    range: std::ops::Range<usize>,
+) -> f64 {
+    let mut zsq = 0.0;
+    for i in range {
+        let f = alpha[i] + beta_j - c_j[i];
+        if f > 0.0 {
+            zsq += f * f;
+        }
+    }
+    zsq.sqrt()
+}
+
+/// Fully dense negated-dual evaluation — the reference implementation
+/// every oracle must agree with. O(mn) per call.
+pub fn eval_dense(
+    prob: &OtProblem,
+    params: &DualParams,
+    x: &[f64],
+    grad: &mut [f64],
+) -> (f64, u64) {
+    let m = prob.m();
+    let n = prob.n();
+    assert_eq!(x.len(), m + n);
+    assert_eq!(grad.len(), m + n);
+    let (alpha, beta) = x.split_at(m);
+    let tau = params.tau();
+    let lq = params.lambda_quad();
+    let num_groups = prob.groups.num_groups();
+
+    // ∇(−D) starts at (−a, −b); transport mass is added on top.
+    for (gi, &ai) in grad[..m].iter_mut().zip(&prob.a) {
+        *gi = -ai;
+    }
+    for (gj, &bj) in grad[m..].iter_mut().zip(&prob.b) {
+        *gj = -bj;
+    }
+
+    let mut psi_total = 0.0;
+    let mut grads = 0u64;
+    let (grad_alpha, grad_beta) = grad.split_at_mut(m);
+    let mut scratch = vec![0.0; prob.groups.max_size()];
+    for j in 0..n {
+        let c_j = prob.cost_t.row(j);
+        let beta_j = beta[j];
+        let mut col_mass = 0.0;
+        for l in 0..num_groups {
+            let (psi, mass) = group_grad_contrib(
+                alpha,
+                beta_j,
+                c_j,
+                prob.groups.range(l),
+                tau,
+                lq,
+                grad_alpha,
+                &mut scratch,
+            );
+            psi_total += psi;
+            col_mass += mass;
+            grads += 1;
+        }
+        grad_beta[j] += col_mass;
+    }
+
+    let dual = linalg::dot(alpha, &prob.a) + linalg::dot(beta, &prob.b) - psi_total;
+    (-dual, grads)
+}
+
+/// The (positive) dual objective at `x` (no gradient).
+pub fn dual_objective(prob: &OtProblem, params: &DualParams, x: &[f64]) -> f64 {
+    let mut grad = vec![0.0; x.len()];
+    -eval_dense(prob, params, x, &mut grad).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn toy_problem() -> OtProblem {
+        // 4 source samples in 2 groups, 3 targets.
+        let cost = Mat::from_vec(
+            4,
+            3,
+            vec![
+                0.1, 0.9, 0.5, //
+                0.2, 0.8, 0.4, //
+                0.9, 0.1, 0.5, //
+                0.8, 0.2, 0.6,
+            ],
+        );
+        OtProblem::from_parts(
+            vec![0.25; 4],
+            vec![1.0 / 3.0; 3],
+            &cost,
+            &[0, 0, 1, 1],
+        )
+    }
+
+    #[test]
+    fn params_mapping() {
+        let p = DualParams::new(2.0, 0.25);
+        assert!((p.lambda_quad() - 1.5).abs() < 1e-15);
+        assert!((p.tau() - 0.5).abs() < 1e-15);
+        assert!((p.mu() - (1.0 / 3.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rho_one_rejected() {
+        DualParams::new(1.0, 1.0);
+    }
+
+    #[test]
+    fn problem_shapes() {
+        let p = toy_problem();
+        assert_eq!(p.m(), 4);
+        assert_eq!(p.n(), 3);
+        assert_eq!(p.dim(), 7);
+        assert_eq!(p.cost_t.shape(), (3, 4));
+        assert_eq!(p.cost().shape(), (4, 3));
+        assert_eq!(p.groups.num_groups(), 2);
+    }
+
+    #[test]
+    fn eval_zero_point() {
+        // At α=β=0 and c ≥ 0: every f = −c ≤ 0, so ψ = 0 and T = 0.
+        let p = toy_problem();
+        let params = DualParams::new(1.0, 0.5);
+        let x = vec![0.0; p.dim()];
+        let mut g = vec![0.0; p.dim()];
+        let (negd, _) = eval_dense(&p, &params, &x, &mut g);
+        assert!((negd - 0.0).abs() < 1e-15);
+        // Gradient is (−a, −b).
+        for i in 0..p.m() {
+            assert!((g[i] + p.a[i]).abs() < 1e-15);
+        }
+        for j in 0..p.n() {
+            assert!((g[p.m() + j] + p.b[j]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let p = toy_problem();
+        let params = DualParams::new(0.7, 0.3);
+        let mut rng = Pcg64::new(42);
+        let x: Vec<f64> = (0..p.dim()).map(|_| rng.uniform(-0.5, 0.8)).collect();
+        let mut g = vec![0.0; p.dim()];
+        let (f0, _) = eval_dense(&p, &params, &x, &mut g);
+        let eps = 1e-6;
+        for k in 0..p.dim() {
+            let mut xp = x.clone();
+            xp[k] += eps;
+            let mut xm = x.clone();
+            xm[k] -= eps;
+            let mut scratch = vec![0.0; p.dim()];
+            let (fp, _) = eval_dense(&p, &params, &xp, &mut scratch);
+            let (fm, _) = eval_dense(&p, &params, &xm, &mut scratch);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - g[k]).abs() < 1e-5,
+                "component {k}: fd={fd} analytic={} f0={f0}",
+                g[k]
+            );
+        }
+    }
+
+    #[test]
+    fn psi_closed_form_matches_conjugate_definition() {
+        // ψ(f) must equal sup_{g≥0} fᵀg − Ψ(g); verify against a fine
+        // numeric maximization over the soft-threshold parametric form.
+        let params = DualParams::new(1.3, 0.4);
+        let tau = params.tau();
+        let lq = params.lambda_quad();
+        let f = [0.8, -0.2, 0.5, 0.1];
+        // Closed form for a single group:
+        let z: f64 = f.iter().filter(|&&v| v > 0.0).map(|v| v * v).sum::<f64>().sqrt();
+        let closed = if z > tau { (z - tau) * (z - tau) / (2.0 * lq) } else { 0.0 };
+        // Numeric: maximize over g = s·[f]₊ direction (optimal direction)
+        // plus random perturbations must not beat it.
+        let fplus: Vec<f64> = f.iter().map(|&v| v.max(0.0)).collect();
+        let obj = |g: &[f64]| -> f64 {
+            let dot: f64 = f.iter().zip(g).map(|(a, b)| a * b).sum();
+            let nrm2: f64 = g.iter().map(|v| v * v).sum();
+            let nrm: f64 = nrm2.sqrt();
+            dot - lq / 2.0 * nrm2 - tau * nrm
+        };
+        let mut best = 0.0f64;
+        for step in 0..2000 {
+            let s = step as f64 * 1e-3;
+            let g: Vec<f64> = fplus.iter().map(|&v| s * v).collect();
+            best = best.max(obj(&g));
+        }
+        assert!((best - closed).abs() < 1e-4, "numeric={best} closed={closed}");
+        // Random nonnegative candidates never exceed the closed form.
+        let mut rng = Pcg64::new(7);
+        for _ in 0..500 {
+            let g: Vec<f64> = (0..4).map(|_| rng.uniform(0.0, 1.5)).collect();
+            assert!(obj(&g) <= closed + 1e-9);
+        }
+    }
+
+    #[test]
+    fn group_grad_zero_below_threshold() {
+        let alpha = [0.1, 0.1];
+        let c = [0.0, 0.0];
+        let mut ga = [0.0, 0.0];
+        let mut scratch = [0.0, 0.0];
+        // z = sqrt(2)*0.1 ≈ 0.141 < tau=0.5 ⇒ zero contribution.
+        let (psi, mass) =
+            group_grad_contrib(&alpha, 0.0, &c, 0..2, 0.5, 1.0, &mut ga, &mut scratch);
+        assert_eq!(psi, 0.0);
+        assert_eq!(mass, 0.0);
+        assert_eq!(ga, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn from_parts_permutes_cost_rows() {
+        // Labels out of order: sample 0 has label 1, sample 1 label 0.
+        let cost = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let p = OtProblem::from_parts(vec![0.6, 0.4], vec![0.5, 0.5], &cost, &[1, 0]);
+        // Sorted order: sample1 (label0) first.
+        assert_eq!(p.a, vec![0.4, 0.6]);
+        assert_eq!(p.cost_t[(0, 0)], 3.0); // c(sample1, target0)
+        assert_eq!(p.cost_t[(0, 1)], 1.0);
+        assert_eq!(p.cost_t[(1, 0)], 4.0);
+        assert_eq!(p.cost_t[(1, 1)], 2.0);
+    }
+}

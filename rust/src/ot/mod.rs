@@ -1,0 +1,24 @@
+//! Optimal-transport core.
+//!
+//! * [`dual`] — the smooth relaxed dual of group-sparse regularized OT
+//!   (Problem 4 of the paper) and the [`dual::DualOracle`] abstraction.
+//! * [`origin`] — the dense baseline oracle (Blondel, Seguy & Rolet 2018).
+//! * [`screening`] — the paper's contribution: upper-bound skipping
+//!   (Lemmas 1–3) and the lower-bound working set (Lemmas 4–6).
+//! * [`fastot`] — Algorithm 1: the outer driver interleaving r solver
+//!   iterations with snapshot/working-set refreshes.
+//! * [`plan`] — transport-plan recovery and sparsity/marginal metrics.
+//! * [`sinkhorn`] — entropic OT baselines (Cuturi 2013; Courty et al.
+//!   2017 ℓ1ℓ2 group regularization via generalized conditional
+//!   gradient).
+//! * [`emd`] — exact LP optimal transport via network simplex.
+//! * [`semidual`] — the semi-dual group-sparse formulation (extension).
+
+pub mod dual;
+pub mod emd;
+pub mod fastot;
+pub mod origin;
+pub mod plan;
+pub mod screening;
+pub mod semidual;
+pub mod sinkhorn;

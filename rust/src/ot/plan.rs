@@ -1,0 +1,315 @@
+//! Transport-plan recovery and plan-quality metrics.
+//!
+//! From the dual solution `(α*, β*)` the optimal plan of Problem 2 is
+//! `t*_j = ∇ψ(α* + β*_j 1 − c_j)` (Eq. 5), recovered column by column.
+
+use super::dual::{DualParams, OtProblem};
+use crate::linalg::Mat;
+
+/// A recovered transport plan.
+///
+/// Rows are source samples in **sorted (grouped)** order; use
+/// [`TransportPlan::to_original_order`] for the caller's ordering.
+#[derive(Clone, Debug)]
+pub struct TransportPlan {
+    /// Dense plan, `m × n`.
+    pub t: Mat,
+}
+
+/// Recover the plan from dual variables `x = [α; β]`.
+pub fn recover_plan(prob: &OtProblem, params: &DualParams, x: &[f64]) -> TransportPlan {
+    let m = prob.m();
+    let n = prob.n();
+    let (alpha, beta) = x.split_at(m);
+    let tau = params.tau();
+    let lq = params.lambda_quad();
+    let num_groups = prob.groups.num_groups();
+    let mut t = Mat::zeros(m, n);
+    for j in 0..n {
+        let c_j = prob.cost_t.row(j);
+        let beta_j = beta[j];
+        for l in 0..num_groups {
+            let range = prob.groups.range(l);
+            let mut zsq = 0.0;
+            for i in range.clone() {
+                let f = alpha[i] + beta_j - c_j[i];
+                if f > 0.0 {
+                    zsq += f * f;
+                }
+            }
+            let z = zsq.sqrt();
+            if z > tau {
+                let scale = (z - tau) / (lq * z);
+                for i in range {
+                    let f = alpha[i] + beta_j - c_j[i];
+                    if f > 0.0 {
+                        t[(i, j)] = scale * f;
+                    }
+                }
+            }
+        }
+    }
+    TransportPlan { t }
+}
+
+impl TransportPlan {
+    /// `⟨T, C⟩` — the transport cost part of the primal objective
+    /// (the "OT distance" reported by applications).
+    pub fn transport_cost(&self, prob: &OtProblem) -> f64 {
+        let mut s = 0.0;
+        for j in 0..prob.n() {
+            let c_j = prob.cost_t.row(j);
+            for i in 0..prob.m() {
+                s += self.t[(i, j)] * c_j[i];
+            }
+        }
+        s
+    }
+
+    /// Full primal objective `⟨T, C⟩ + Σ_j Ψ(t_j)`.
+    pub fn primal_objective(&self, prob: &OtProblem, params: &DualParams) -> f64 {
+        let lq = params.lambda_quad();
+        let tau = params.tau();
+        let num_groups = prob.groups.num_groups();
+        let mut reg = 0.0;
+        for j in 0..prob.n() {
+            let mut sq = 0.0;
+            for i in 0..prob.m() {
+                let v = self.t[(i, j)];
+                sq += v * v;
+            }
+            reg += 0.5 * lq * sq;
+            for l in 0..num_groups {
+                let mut gsq = 0.0;
+                for i in prob.groups.range(l) {
+                    let v = self.t[(i, j)];
+                    gsq += v * v;
+                }
+                reg += tau * gsq.sqrt();
+            }
+        }
+        self.transport_cost(prob) + reg
+    }
+
+    /// `(‖T·1 − a‖₁, ‖Tᵀ·1 − b‖₁)` — marginal constraint violations.
+    /// The relaxed dual only enforces the marginals asymptotically in
+    /// γ → 0; applications report/monitor these.
+    pub fn marginal_violation(&self, prob: &OtProblem) -> (f64, f64) {
+        let rs = self.t.row_sums();
+        let cs = self.t.col_sums();
+        let va: f64 = rs.iter().zip(&prob.a).map(|(&r, &a)| (r - a).abs()).sum();
+        let vb: f64 = cs.iter().zip(&prob.b).map(|(&c, &b)| (c - b).abs()).sum();
+        (va, vb)
+    }
+
+    /// Fraction of entries with `|t_ij| > tol`.
+    pub fn density(&self, tol: f64) -> f64 {
+        self.t.count_nonzero(tol) as f64 / (self.t.rows() * self.t.cols()) as f64
+    }
+
+    /// Fraction of (group, column) blocks that are entirely zero — the
+    /// group sparsity the regularizer induces (Fig. 1 of the paper).
+    pub fn group_sparsity(&self, prob: &OtProblem, tol: f64) -> f64 {
+        let num_groups = prob.groups.num_groups();
+        let mut zero_blocks = 0usize;
+        for j in 0..prob.n() {
+            for l in 0..num_groups {
+                let any = prob.groups.range(l).any(|i| self.t[(i, j)].abs() > tol);
+                if !any {
+                    zero_blocks += 1;
+                }
+            }
+        }
+        zero_blocks as f64 / (num_groups * prob.n()) as f64
+    }
+
+    /// For each target column, is all its incoming mass from a single
+    /// class? Returns the fraction of columns with single-class mass —
+    /// the qualitative property illustrated by the paper's Figure 1.
+    pub fn single_class_columns(&self, prob: &OtProblem, tol: f64) -> f64 {
+        let num_groups = prob.groups.num_groups();
+        let mut pure = 0usize;
+        let mut nonempty = 0usize;
+        for j in 0..prob.n() {
+            let mut active = 0;
+            for l in 0..num_groups {
+                if prob.groups.range(l).any(|i| self.t[(i, j)].abs() > tol) {
+                    active += 1;
+                }
+            }
+            if active > 0 {
+                nonempty += 1;
+                if active == 1 {
+                    pure += 1;
+                }
+            }
+        }
+        if nonempty == 0 {
+            0.0
+        } else {
+            pure as f64 / nonempty as f64
+        }
+    }
+
+    /// Barycentric mapping of source points into the target domain:
+    /// `x̂_i = (Σ_j T_ij x_T_j) / (Σ_j T_ij)` (rows with no mass map to 0).
+    pub fn barycentric_map(&self, xt: &Mat) -> Mat {
+        assert_eq!(xt.rows(), self.t.cols());
+        let mut out = self.t.matmul(xt);
+        let row_mass = self.t.row_sums();
+        for i in 0..out.rows() {
+            let w = row_mass[i];
+            if w > 1e-300 {
+                for v in out.row_mut(i) {
+                    *v /= w;
+                }
+            }
+        }
+        out
+    }
+
+    /// Re-order rows back to the caller's original source order.
+    pub fn to_original_order(&self, prob: &OtProblem) -> Mat {
+        let m = self.t.rows();
+        let n = self.t.cols();
+        let mut out = Mat::zeros(m, n);
+        for (k, &orig) in prob.groups.perm.iter().enumerate() {
+            out.row_mut(orig).copy_from_slice(self.t.row(k));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::fastot::{solve_fast_ot, FastOtConfig};
+    use crate::rng::Pcg64;
+
+    fn problem(seed: u64) -> OtProblem {
+        let mut rng = Pcg64::new(seed);
+        let (l, g, n) = (3, 4, 10);
+        let m = l * g;
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+        let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+        OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+    }
+
+    #[test]
+    fn plan_is_nonnegative_and_bounded() {
+        let prob = problem(42);
+        let cfg = FastOtConfig { gamma: 0.1, rho: 0.5, ..Default::default() };
+        let res = solve_fast_ot(&prob, &cfg);
+        let plan = recover_plan(&prob, &cfg.params(), &res.x);
+        for v in plan.t.as_slice() {
+            assert!(*v >= 0.0);
+            assert!(*v <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn marginals_near_feasible_at_convergence() {
+        // The relaxed dual has no hard constraints, but at a converged
+        // dual optimum the plan's marginals track (a, b) closely (the
+        // dual gradient IS the marginal residual). Note the violation is
+        // NOT monotone in γ: the dual variables rescale with γ.
+        let prob = problem(7);
+        for gamma in [10.0, 1.0, 0.1] {
+            let cfg = FastOtConfig { gamma, rho: 0.5, ..Default::default() };
+            let res = solve_fast_ot(&prob, &cfg);
+            let (va, vb) =
+                recover_plan(&prob, &cfg.params(), &res.x).marginal_violation(&prob);
+            assert!(va < 0.01, "gamma={gamma}: row-marginal violation {va}");
+            assert!(vb < 0.01, "gamma={gamma}: col-marginal violation {vb}");
+        }
+    }
+
+    #[test]
+    fn stronger_group_term_gives_more_group_sparsity() {
+        let prob = problem(13);
+        let sparsity = |rho: f64| {
+            let cfg = FastOtConfig { gamma: 1.0, rho, ..Default::default() };
+            let res = solve_fast_ot(&prob, &cfg);
+            recover_plan(&prob, &cfg.params(), &res.x).group_sparsity(&prob, 1e-12)
+        };
+        let low = sparsity(0.1);
+        let high = sparsity(0.9);
+        assert!(high >= low, "group sparsity should grow with rho: {low} vs {high}");
+        assert!(high > 0.0);
+    }
+
+    #[test]
+    fn duality_gap_vanishes() {
+        // Primal(T*) − Dual(α*, β*) → 0 at the optimum (strong duality
+        // of the smoothed problem).
+        let prob = problem(99);
+        let cfg = FastOtConfig {
+            gamma: 0.5,
+            rho: 0.4,
+            lbfgs: crate::solvers::lbfgs::LbfgsOptions {
+                max_iters: 2000,
+                gtol: 1e-9,
+                ftol: 1e-15,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let res = solve_fast_ot(&prob, &cfg);
+        let plan = recover_plan(&prob, &cfg.params(), &res.x);
+        // The smooth-relaxed dual drops the marginal constraints, so the
+        // "gap" here is primal-with-penalty vs dual: at optimum,
+        // primal(T*) + penalty-terms == dual via Fenchel. We verify the
+        // Fenchel identity: dual = αᵀa + βᵀb − Σ ψ and
+        // primal = ⟨T,C⟩ + Ψ(T); equality holds at optimum with
+        // ⟨T, α⊕β − C⟩ = Ψ(T) + Σψ.
+        let (alpha, beta) = res.alpha_beta(&prob);
+        let mut lhs = 0.0; // ⟨T, α⊕β − C⟩
+        for j in 0..prob.n() {
+            let c_j = prob.cost_t.row(j);
+            for i in 0..prob.m() {
+                lhs += plan.t[(i, j)] * (alpha[i] + beta[j] - c_j[i]);
+            }
+        }
+        let psi_sum = crate::linalg::dot(alpha, &prob.a) + crate::linalg::dot(beta, &prob.b)
+            - res.dual_objective;
+        let reg = plan.primal_objective(&prob, &cfg.params()) - plan.transport_cost(&prob);
+        assert!(
+            (lhs - (psi_sum + reg)).abs() < 1e-6,
+            "Fenchel identity violated: {lhs} vs {}",
+            psi_sum + reg
+        );
+    }
+
+    #[test]
+    fn original_order_roundtrip() {
+        let cost = Mat::from_vec(3, 2, vec![0.0, 1.0, 1.0, 0.0, 0.5, 0.5]);
+        // Labels force permutation: [1, 0, 1] → order [1, 0, 2].
+        let prob = OtProblem::from_parts(
+            vec![1.0 / 3.0; 3],
+            vec![0.5, 0.5],
+            &cost,
+            &[1, 0, 1],
+        );
+        let cfg = FastOtConfig { gamma: 0.1, rho: 0.3, ..Default::default() };
+        let res = solve_fast_ot(&prob, &cfg);
+        let plan = recover_plan(&prob, &cfg.params(), &res.x);
+        let orig = plan.to_original_order(&prob);
+        // Row 1 (label 0) in original order == row 0 in sorted order.
+        assert_eq!(orig.row(1), plan.t.row(0));
+        assert_eq!(orig.row(0), plan.t.row(1));
+        assert_eq!(orig.row(2), plan.t.row(2));
+    }
+
+    #[test]
+    fn barycentric_map_shapes_and_weights() {
+        let t = Mat::from_vec(2, 2, vec![0.5, 0.0, 0.25, 0.25]);
+        let plan = TransportPlan { t };
+        let xt = Mat::from_vec(2, 3, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+        let mapped = plan.barycentric_map(&xt);
+        assert_eq!(mapped.shape(), (2, 3));
+        // Row 0: all mass on target 0 → maps exactly to x_T0.
+        assert_eq!(mapped.row(0), &[1.0, 0.0, 0.0]);
+        // Row 1: equal mass → midpoint.
+        assert_eq!(mapped.row(1), &[0.5, 0.5, 0.0]);
+    }
+}

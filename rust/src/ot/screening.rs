@@ -1,0 +1,454 @@
+//! Safe screening for the group-sparse OT dual — the paper's
+//! contribution.
+//!
+//! Two devices accelerate the `O(|L|·n·g)` gradient evaluation:
+//!
+//! 1. **Upper bound** (Definition 1, Lemma 1–3). With snapshots
+//!    `(α̃, β̃, Z̃)` taken every `r` solver iterations,
+//!    `z̄_{l,j} = z̃_{l,j} + ‖[Δα_[l]]₊‖₂ + √g_l·[Δβ_j]₊ ≥ z_{l,j}`,
+//!    so `z̄_{l,j} ≤ τ` proves `∇ψ(·)_[l] = 0` and the `O(g)` group
+//!    computation is skipped — at `O(1)` marginal cost per pair once the
+//!    `O(m+n)` per-eval Δ-norms are in place.
+//! 2. **Lower bound / working set ℕ** (Definitions 2–3, Lemma 4–6).
+//!    `z̲_{l,j} ≤ z_{l,j}`, so `z̲_{l,j} > τ` proves the group is
+//!    *non*-zero; such pairs enter ℕ and bypass the upper-bound check,
+//!    removing its overhead where it cannot help.
+//!
+//! Both devices are *safe*: every non-skipped pair is computed by the
+//! exact same kernel as the dense baseline
+//! ([`crate::ot::dual::group_grad_contrib`]), so the optimization
+//! trajectory is identical (Theorem 2).
+
+use super::dual::{exact_z, group_grad_contrib, DualOracle, DualParams, OracleStats, OtProblem};
+use crate::linalg;
+
+/// Screening-specific counters are kept in [`OracleStats`]; this struct
+/// adds the Fig.-B diagnostic output.
+#[derive(Clone, Debug, Default)]
+pub struct BoundErrors {
+    /// Mean `|z̄ − z|` over all (l, j).
+    pub mean_upper: f64,
+    /// Max `|z̄ − z|`.
+    pub max_upper: f64,
+    /// Mean `|z − z̲|` (working-set construction error).
+    pub mean_lower: f64,
+    /// Max `|z − z̲|`.
+    pub max_lower: f64,
+}
+
+/// The screened negated-dual oracle (Algorithm 2).
+pub struct ScreeningOracle<'a> {
+    prob: &'a OtProblem,
+    params: DualParams,
+    tau: f64,
+    lq: f64,
+    use_ws: bool,
+    // Snapshot state (Definitions 1–2), refreshed by `refresh`.
+    snap_alpha: Vec<f64>,
+    snap_beta: Vec<f64>,
+    /// `z̃_{l,j}` at index `j·|L| + l` (column-major in l for per-column walks).
+    snap_z: Vec<f64>,
+    /// `k̃_{l,j} = ‖f̃_[l]‖₂` (only when the working set is enabled).
+    snap_k: Vec<f64>,
+    /// `õ_{l,j} = ‖[f̃_[l]]₋‖₂` (only when the working set is enabled).
+    snap_o: Vec<f64>,
+    /// Working set ℕ as a dense boolean mask, same indexing as `snap_z`.
+    ws: Vec<bool>,
+    // Per-eval scratch (allocated once).
+    da_pos: Vec<f64>,
+    grad_scratch: Vec<f64>,
+    stats: OracleStats,
+}
+
+impl<'a> ScreeningOracle<'a> {
+    /// Create with snapshots initialized at `x = 0` and ℕ = ∅
+    /// (Algorithm 1, line 1).
+    pub fn new(prob: &'a OtProblem, params: DualParams, use_working_set: bool) -> Self {
+        params.validate();
+        let m = prob.m();
+        let n = prob.n();
+        let num_groups = prob.groups.num_groups();
+        let mut o = ScreeningOracle {
+            prob,
+            tau: params.tau(),
+            lq: params.lambda_quad(),
+            params,
+            use_ws: use_working_set,
+            snap_alpha: vec![0.0; m],
+            snap_beta: vec![0.0; n],
+            snap_z: vec![0.0; n * num_groups],
+            snap_k: if use_working_set { vec![0.0; n * num_groups] } else { vec![] },
+            snap_o: if use_working_set { vec![0.0; n * num_groups] } else { vec![] },
+            ws: vec![false; n * num_groups],
+            da_pos: vec![0.0; num_groups],
+            grad_scratch: vec![0.0; prob.groups.max_size()],
+            stats: OracleStats::default(),
+        };
+        o.recompute_snapshots();
+        o
+    }
+
+    pub fn params(&self) -> &DualParams {
+        &self.params
+    }
+
+    /// Fraction of (l, j) pairs currently in the working set.
+    pub fn working_set_density(&self) -> f64 {
+        if self.ws.is_empty() {
+            return 0.0;
+        }
+        self.ws.iter().filter(|&&b| b).count() as f64 / self.ws.len() as f64
+    }
+
+    /// Dense snapshot recomputation: one `O(mn)` pass filling z̃ (and
+    /// k̃/õ when the working set is on) at the *current snapshot point*.
+    fn recompute_snapshots(&mut self) {
+        let num_groups = self.prob.groups.num_groups();
+        let n = self.prob.n();
+        for j in 0..n {
+            let c_j = self.prob.cost_t.row(j);
+            let beta_j = self.snap_beta[j];
+            let base = j * num_groups;
+            for l in 0..num_groups {
+                let mut zsq = 0.0;
+                let mut ksq = 0.0;
+                let mut osq = 0.0;
+                for i in self.prob.groups.range(l) {
+                    let f = self.snap_alpha[i] + beta_j - c_j[i];
+                    ksq += f * f;
+                    if f > 0.0 {
+                        zsq += f * f;
+                    } else {
+                        osq += f * f;
+                    }
+                }
+                self.snap_z[base + l] = zsq.sqrt();
+                if self.use_ws {
+                    self.snap_k[base + l] = ksq.sqrt();
+                    self.snap_o[base + l] = osq.sqrt();
+                }
+            }
+        }
+    }
+
+    /// Build ℕ from the *old* snapshots and the current iterate
+    /// (Algorithm 1 lines 4–14), exactly in the paper's order — the set
+    /// is constructed before the snapshots move.
+    fn rebuild_working_set(&mut self, x: &[f64]) {
+        let m = self.prob.m();
+        let n = self.prob.n();
+        let num_groups = self.prob.groups.num_groups();
+        let (alpha, beta) = x.split_at(m);
+        // Per-group ‖Δα_[l]‖₂ and ‖[Δα_[l]]₋‖₂.
+        let mut da_nrm = vec![0.0; num_groups];
+        let mut da_neg = vec![0.0; num_groups];
+        for l in 0..num_groups {
+            let mut s = 0.0;
+            let mut sn = 0.0;
+            for i in self.prob.groups.range(l) {
+                let d = alpha[i] - self.snap_alpha[i];
+                s += d * d;
+                if d < 0.0 {
+                    sn += d * d;
+                }
+            }
+            da_nrm[l] = s.sqrt();
+            da_neg[l] = sn.sqrt();
+        }
+        let sqrt_g = &self.prob.groups.sqrt_sizes;
+        for j in 0..n {
+            let db = beta[j] - self.snap_beta[j];
+            let db_abs = db.abs();
+            let db_neg = (-db).max(0.0);
+            let base = j * num_groups;
+            for l in 0..num_groups {
+                // Eq. 7.
+                let lower = self.snap_k[base + l]
+                    - da_nrm[l]
+                    - sqrt_g[l] * db_abs
+                    - self.snap_o[base + l]
+                    - da_neg[l]
+                    - sqrt_g[l] * db_neg;
+                self.ws[base + l] = lower > self.tau;
+            }
+        }
+    }
+
+    /// Fig.-B diagnostic: exact `z`, upper bound `z̄` and lower bound
+    /// `z̲` for every pair at `x`, against the *current* snapshots.
+    pub fn bound_errors(&self, x: &[f64]) -> BoundErrors {
+        let m = self.prob.m();
+        let n = self.prob.n();
+        let num_groups = self.prob.groups.num_groups();
+        let (alpha, beta) = x.split_at(m);
+        let mut da_pos = vec![0.0; num_groups];
+        let mut da_nrm = vec![0.0; num_groups];
+        let mut da_neg = vec![0.0; num_groups];
+        for l in 0..num_groups {
+            let (mut sp, mut s, mut sn) = (0.0, 0.0, 0.0);
+            for i in self.prob.groups.range(l) {
+                let d = alpha[i] - self.snap_alpha[i];
+                s += d * d;
+                if d > 0.0 {
+                    sp += d * d;
+                } else {
+                    sn += d * d;
+                }
+            }
+            da_pos[l] = sp.sqrt();
+            da_nrm[l] = s.sqrt();
+            da_neg[l] = sn.sqrt();
+        }
+        let sqrt_g = &self.prob.groups.sqrt_sizes;
+        let mut out = BoundErrors::default();
+        let mut count = 0.0;
+        for j in 0..n {
+            let c_j = self.prob.cost_t.row(j);
+            let beta_j = beta[j];
+            let db = beta_j - self.snap_beta[j];
+            let db_pos = db.max(0.0);
+            let db_abs = db.abs();
+            let db_neg = (-db).max(0.0);
+            let base = j * num_groups;
+            for l in 0..num_groups {
+                let z = exact_z(alpha, beta_j, c_j, self.prob.groups.range(l));
+                let ub = self.snap_z[base + l] + da_pos[l] + sqrt_g[l] * db_pos;
+                out.mean_upper += ub - z;
+                out.max_upper = out.max_upper.max(ub - z);
+                if self.use_ws {
+                    let lb = self.snap_k[base + l]
+                        - da_nrm[l]
+                        - sqrt_g[l] * db_abs
+                        - self.snap_o[base + l]
+                        - da_neg[l]
+                        - sqrt_g[l] * db_neg;
+                    out.mean_lower += z - lb;
+                    out.max_lower = out.max_lower.max(z - lb);
+                }
+                count += 1.0;
+            }
+        }
+        out.mean_upper /= count;
+        out.mean_lower /= count;
+        out
+    }
+}
+
+impl DualOracle for ScreeningOracle<'_> {
+    fn shape(&self) -> (usize, usize) {
+        (self.prob.m(), self.prob.n())
+    }
+
+    fn eval(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let m = self.prob.m();
+        let n = self.prob.n();
+        let num_groups = self.prob.groups.num_groups();
+        debug_assert_eq!(x.len(), m + n);
+        let (alpha, beta) = x.split_at(m);
+
+        // Per-eval precomputation (Algorithm 2, line 5): ‖[Δα_[l]]₊‖₂.
+        for l in 0..num_groups {
+            let mut sp = 0.0;
+            for i in self.prob.groups.range(l) {
+                let d = alpha[i] - self.snap_alpha[i];
+                if d > 0.0 {
+                    sp += d * d;
+                }
+            }
+            self.da_pos[l] = sp.sqrt();
+        }
+
+        for (gi, &ai) in grad[..m].iter_mut().zip(&self.prob.a) {
+            *gi = -ai;
+        }
+        for (gj, &bj) in grad[m..].iter_mut().zip(&self.prob.b) {
+            *gj = -bj;
+        }
+        let (grad_alpha, grad_beta) = grad.split_at_mut(m);
+
+        let tau = self.tau;
+        let lq = self.lq;
+        let sqrt_g = &self.prob.groups.sqrt_sizes;
+        let mut psi_total = 0.0;
+        let mut grads_this_eval = 0u64;
+
+        for j in 0..n {
+            let c_j = self.prob.cost_t.row(j);
+            let beta_j = beta[j];
+            let db_pos = (beta_j - self.snap_beta[j]).max(0.0);
+            let base = j * num_groups;
+            let mut col_mass = 0.0;
+            for l in 0..num_groups {
+                let compute = if self.use_ws && self.ws[base + l] {
+                    // ℕ member: provably nonzero, no check (Alg. 2 lines 2–4).
+                    self.stats.ws_hits += 1;
+                    true
+                } else {
+                    // Upper bound check (Alg. 2 lines 6–13).
+                    self.stats.ub_checks += 1;
+                    let ub = self.snap_z[base + l] + self.da_pos[l] + sqrt_g[l] * db_pos;
+                    if ub <= tau {
+                        self.stats.grads_skipped += 1;
+                        false
+                    } else {
+                        true
+                    }
+                };
+                if compute {
+                    let (psi, mass) = group_grad_contrib(
+                        alpha,
+                        beta_j,
+                        c_j,
+                        self.prob.groups.range(l),
+                        tau,
+                        lq,
+                        grad_alpha,
+                        &mut self.grad_scratch,
+                    );
+                    psi_total += psi;
+                    col_mass += mass;
+                    grads_this_eval += 1;
+                }
+            }
+            grad_beta[j] += col_mass;
+        }
+
+        self.stats.grads_computed += grads_this_eval;
+        self.stats.record_eval(grads_this_eval);
+
+        let dual = linalg::dot(alpha, &self.prob.a) + linalg::dot(beta, &self.prob.b) - psi_total;
+        -dual
+    }
+
+    /// Algorithm 1, lines 4–15: rebuild ℕ from the old snapshots, then
+    /// move the snapshots to the current iterate.
+    fn refresh(&mut self, x: &[f64]) {
+        let m = self.prob.m();
+        if self.use_ws {
+            self.rebuild_working_set(x);
+        }
+        self.snap_alpha.copy_from_slice(&x[..m]);
+        self.snap_beta.copy_from_slice(&x[m..]);
+        self.recompute_snapshots();
+    }
+
+    fn stats(&self) -> &OracleStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    fn random_problem(seed: u64, l: usize, g: usize, n: usize) -> OtProblem {
+        let mut rng = Pcg64::new(seed);
+        let m = l * g;
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+        let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+        OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+    }
+
+    /// Screened eval must equal dense eval exactly, at arbitrary points
+    /// and snapshot states.
+    #[test]
+    fn screened_eval_equals_dense() {
+        let prob = random_problem(3, 4, 3, 7);
+        let params = DualParams::new(0.5, 0.6);
+        for ws in [false, true] {
+            let mut oracle = ScreeningOracle::new(&prob, params, ws);
+            let mut rng = Pcg64::new(99);
+            let mut x = vec![0.0; prob.dim()];
+            for step in 0..12 {
+                // Random walk; refresh snapshots at some steps.
+                for v in x.iter_mut() {
+                    *v += rng.uniform(-0.2, 0.25);
+                }
+                if step % 4 == 3 {
+                    oracle.refresh(&x);
+                }
+                let mut g1 = vec![0.0; prob.dim()];
+                let f1 = oracle.eval(&x, &mut g1);
+                let mut g2 = vec![0.0; prob.dim()];
+                let (f2, _) = super::super::dual::eval_dense(&prob, &params, &x, &mut g2);
+                assert_eq!(f1, f2, "objective mismatch ws={ws} step={step}");
+                assert_eq!(g1, g2, "gradient mismatch ws={ws} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn skips_happen_for_strong_regularization() {
+        let prob = random_problem(5, 6, 4, 10);
+        // Large τ ⇒ lots of zero groups ⇒ skips after a refresh.
+        let params = DualParams::new(5.0, 0.8);
+        let mut oracle = ScreeningOracle::new(&prob, params, true);
+        let x = vec![0.01; prob.dim()];
+        oracle.refresh(&x);
+        let mut g = vec![0.0; prob.dim()];
+        oracle.eval(&x, &mut g);
+        let s = oracle.stats();
+        assert!(s.grads_skipped > 0, "expected skips, got {s:?}");
+    }
+
+    #[test]
+    fn working_set_members_bypass_checks() {
+        let prob = random_problem(7, 3, 5, 8);
+        // Small τ ⇒ most groups active ⇒ ℕ should be non-empty after a
+        // refresh near a well-separated point.
+        let params = DualParams::new(0.05, 0.3);
+        let mut oracle = ScreeningOracle::new(&prob, params, true);
+        let mut x = vec![0.0; prob.dim()];
+        // Push α, β up so f = α + β − c is clearly positive.
+        for v in x.iter_mut() {
+            *v = 1.0;
+        }
+        oracle.refresh(&x); // snapshots at x
+        oracle.refresh(&x); // Δ=0 now; lower bound = k̃ − õ = z̃ exactly
+        assert!(oracle.working_set_density() > 0.0);
+        let before = oracle.stats().ws_hits;
+        let mut g = vec![0.0; prob.dim()];
+        oracle.eval(&x, &mut g);
+        assert!(oracle.stats().ws_hits > before);
+    }
+
+    #[test]
+    fn bounds_are_valid_at_random_points() {
+        // z̲ ≤ z ≤ z̄ for random snapshots and iterates.
+        let prob = random_problem(11, 4, 4, 6);
+        let params = DualParams::new(1.0, 0.5);
+        let mut oracle = ScreeningOracle::new(&prob, params, true);
+        let mut rng = Pcg64::new(1234);
+        let mut x = vec![0.0; prob.dim()];
+        for _ in 0..8 {
+            for v in x.iter_mut() {
+                *v += rng.uniform(-0.3, 0.35);
+            }
+            let errs = oracle.bound_errors(&x);
+            // mean_upper = mean(z̄ − z) ≥ 0 and mean_lower = mean(z − z̲) ≥ 0.
+            assert!(errs.mean_upper >= -1e-12, "{errs:?}");
+            assert!(errs.mean_lower >= -1e-12, "{errs:?}");
+            if rng.f64() < 0.5 {
+                oracle.refresh(&x);
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_tight_at_snapshot_point() {
+        // Theorem 3: at Δ = 0 the upper bound is exact.
+        let prob = random_problem(13, 3, 3, 5);
+        let params = DualParams::new(0.8, 0.4);
+        let mut oracle = ScreeningOracle::new(&prob, params, true);
+        let mut x = vec![0.0; prob.dim()];
+        let mut rng = Pcg64::new(5);
+        for v in x.iter_mut() {
+            *v = rng.uniform(-0.5, 0.7);
+        }
+        oracle.refresh(&x);
+        let errs = oracle.bound_errors(&x);
+        assert!(errs.max_upper.abs() < 1e-12, "{errs:?}");
+    }
+}

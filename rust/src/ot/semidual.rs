@@ -1,0 +1,223 @@
+//! Smoothed *semi-dual* OT (extension).
+//!
+//! Blondel, Seguy & Rolet (2018) also derive a semi-dual in which the
+//! column marginals `Tᵀ1 = b` are kept as hard constraints and only α
+//! remains as a free variable:
+//!
+//! ```text
+//! max_α αᵀa + Σ_j b_j·σ_j(α),
+//! σ_j(α) = min over the inner column problem with Σ_i t_ij = b_j.
+//! ```
+//!
+//! For the quadratic regularizer (ρ = 0) the inner problem per column is
+//!
+//! ```text
+//! max_{t ≥ 0, 1ᵀt = b_j}  (α − c_j)ᵀ t − (γ/2)‖t‖²
+//! ```
+//!
+//! whose solution is the classic water-filling / simplex projection
+//! `t = [ (α − c_j)/γ − ν ]₊` with `ν` chosen so the mass is `b_j`.
+//! This module implements that solver; it serves as an ablation
+//! reference whose plan satisfies the column marginals *exactly* (the
+//! relaxed dual only approaches them as γ → 0).
+
+use super::dual::{DualOracle, OracleStats, OtProblem};
+use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
+
+/// Solve the inner water-filling problem: maximize `fᵀt − (γ/2)‖t‖²`
+/// over `t ≥ 0, Σt = mass`. Returns `(t, value)`.
+pub fn waterfill(f: &[f64], gamma: f64, mass: f64) -> (Vec<f64>, f64) {
+    // t_i = [f_i/γ − ν]₊ with Σ t = mass. Solve for ν by sorting.
+    let m = f.len();
+    let mut s: Vec<f64> = f.iter().map(|&v| v / gamma).collect();
+    let mut sorted = s.clone();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+    let mut cum = 0.0;
+    let mut nu = 0.0;
+    let mut k = m;
+    for (idx, &v) in sorted.iter().enumerate() {
+        cum += v;
+        let cand = (cum - mass) / (idx + 1) as f64;
+        // ν must satisfy sorted[idx] > ν ≥ sorted[idx+1] (support size idx+1).
+        let next = if idx + 1 < m { sorted[idx + 1] } else { f64::NEG_INFINITY };
+        if cand < v && cand >= next {
+            nu = cand;
+            k = idx + 1;
+            break;
+        }
+    }
+    if k == m {
+        // All coordinates active.
+        let total: f64 = sorted.iter().sum();
+        nu = (total - mass) / m as f64;
+    }
+    for v in s.iter_mut() {
+        *v = (*v - nu).max(0.0);
+    }
+    let value: f64 = f
+        .iter()
+        .zip(&s)
+        .map(|(&fi, &ti)| fi * ti - 0.5 * gamma * ti * ti)
+        .sum();
+    (s, value)
+}
+
+/// Negated semi-dual oracle over α (quadratic regularizer).
+pub struct SemiDualOracle<'a> {
+    prob: &'a OtProblem,
+    gamma: f64,
+    stats: OracleStats,
+}
+
+impl<'a> SemiDualOracle<'a> {
+    pub fn new(prob: &'a OtProblem, gamma: f64) -> Self {
+        assert!(gamma > 0.0);
+        SemiDualOracle { prob, gamma, stats: OracleStats::default() }
+    }
+}
+
+impl DualOracle for SemiDualOracle<'_> {
+    fn shape(&self) -> (usize, usize) {
+        (self.prob.m(), 0)
+    }
+
+    fn eval(&mut self, alpha: &[f64], grad: &mut [f64]) -> f64 {
+        let m = self.prob.m();
+        let n = self.prob.n();
+        assert_eq!(alpha.len(), m);
+        // ∇(−D) = −a + Σ_j t_j(α); value = −(αᵀa + Σ_j value_j − αᵀ t_j).
+        for (g, &ai) in grad.iter_mut().zip(&self.prob.a) {
+            *g = -ai;
+        }
+        let mut semid = crate::linalg::dot(alpha, &self.prob.a);
+        let mut f = vec![0.0; m];
+        for j in 0..n {
+            let c_j = self.prob.cost_t.row(j);
+            for i in 0..m {
+                f[i] = alpha[i] - c_j[i];
+            }
+            let (t, val) = waterfill(&f, self.gamma, self.prob.b[j]);
+            // σ_j = val − αᵀt enters the objective; dσ/dα = −t + …;
+            // together with the αᵀa term: ∇(−D)_i = −a_i + t_i... hold on:
+            // D(α) = αᵀa + Σ_j [max_t (α−c_j)ᵀt − γ/2‖t‖²] − Σ_j αᵀt_j
+            //       = αᵀa + Σ_j [−c_jᵀt_j − γ/2‖t‖²]  … by Danskin the
+            // gradient of the max term wrt α is t_j, so
+            // ∇D = a − Σ_j t_j + Σ_j t_j? — we keep the standard
+            // formulation: D(α) = αᵀa + Σ_j (val_j − αᵀ t_j is NOT
+            // subtracted). The semi-dual is D(α) = αᵀa + Σ_j σ_j where
+            // σ_j = max_t (−c_j)ᵀ t + (α)ᵀ t − γ/2‖t‖² − αᵀ a-part…
+            // Simplest correct derivation: the Lagrangian dual over α of
+            // min_T ⟨T,C⟩ + γ/2‖T‖² s.t. Tᵀ1=b, T≥0 with relaxed T1=a is
+            //   D(α) = αᵀa + Σ_j min_{t≥0,1ᵀt=b_j} (c_j − α)ᵀ t + γ/2‖t‖²
+            //        = αᵀa − Σ_j max_{t≥0,1ᵀt=b_j} (α − c_j)ᵀ t − γ/2‖t‖².
+            semid -= val;
+            let _ = &t;
+            // ∇D = a − Σ_j t_j (Danskin) ⇒ ∇(−D) = −a + Σ_j t_j.
+            for (g, &ti) in grad.iter_mut().zip(&t) {
+                *g += ti;
+            }
+        }
+        self.stats.record_eval(n as u64);
+        -semid
+    }
+
+    fn stats(&self) -> &OracleStats {
+        &self.stats
+    }
+}
+
+/// Result of the semi-dual solve.
+pub struct SemiDualResult {
+    pub alpha: Vec<f64>,
+    pub objective: f64,
+    pub plan: crate::linalg::Mat,
+    pub iterations: usize,
+}
+
+/// Solve the quadratic semi-dual with L-BFGS and recover the plan.
+pub fn solve_semidual(prob: &OtProblem, gamma: f64, opts: &LbfgsOptions) -> SemiDualResult {
+    let m = prob.m();
+    let n = prob.n();
+    let mut oracle = SemiDualOracle::new(prob, gamma);
+    let mut solver = Lbfgs::new(vec![0.0; m], opts.clone(), &mut oracle);
+    solver.run(&mut oracle);
+    let iterations = solver.iterations();
+    let (alpha, f) = solver.into_solution();
+    let mut plan = crate::linalg::Mat::zeros(m, n);
+    let mut fcol = vec![0.0; m];
+    for j in 0..n {
+        let c_j = prob.cost_t.row(j);
+        for i in 0..m {
+            fcol[i] = alpha[i] - c_j[i];
+        }
+        let (t, _) = waterfill(&fcol, gamma, prob.b[j]);
+        for i in 0..m {
+            plan[(i, j)] = t[i];
+        }
+    }
+    SemiDualResult { alpha, objective: -f, plan, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn waterfill_respects_constraints() {
+        let mut rng = Pcg64::new(4);
+        for _ in 0..200 {
+            let m = 1 + rng.below(12);
+            let f: Vec<f64> = (0..m).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let mass = rng.uniform(0.01, 2.0);
+            let gamma = rng.uniform(0.05, 3.0);
+            let (t, _) = waterfill(&f, gamma, mass);
+            assert!(t.iter().all(|&v| v >= 0.0));
+            let s: f64 = t.iter().sum();
+            assert!((s - mass).abs() < 1e-9, "mass {s} != {mass}");
+        }
+    }
+
+    #[test]
+    fn waterfill_is_optimal_vs_random_feasible() {
+        let mut rng = Pcg64::new(9);
+        let f = vec![1.0, -0.5, 0.3, 0.0];
+        let gamma = 0.7;
+        let mass = 1.0;
+        let (t, val) = waterfill(&f, gamma, mass);
+        let obj = |t: &[f64]| -> f64 {
+            f.iter().zip(t).map(|(&a, &b)| a * b).sum::<f64>()
+                - 0.5 * gamma * t.iter().map(|v| v * v).sum::<f64>()
+        };
+        assert!((obj(&t) - val).abs() < 1e-12);
+        for _ in 0..500 {
+            // Random point on the simplex·mass.
+            let mut cand: Vec<f64> = (0..4).map(|_| rng.exp1()).collect();
+            let s: f64 = cand.iter().sum();
+            cand.iter_mut().for_each(|v| *v *= mass / s);
+            assert!(obj(&cand) <= val + 1e-9);
+        }
+    }
+
+    #[test]
+    fn semidual_plan_hits_column_marginals_exactly() {
+        let mut rng = Pcg64::new(11);
+        let cost = Mat::from_fn(6, 4, |_, _| rng.uniform(0.0, 1.0));
+        let prob = super::super::dual::OtProblem::from_parts(
+            vec![1.0 / 6.0; 6],
+            vec![0.25; 4],
+            &cost,
+            &[0, 0, 1, 1, 2, 2],
+        );
+        let res = solve_semidual(&prob, 0.1, &LbfgsOptions::default());
+        let cs = res.plan.col_sums();
+        for (&got, &want) in cs.iter().zip(&prob.b) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        // Row marginals approach a as the solve converges.
+        let rs = res.plan.row_sums();
+        let err: f64 = rs.iter().zip(&prob.a).map(|(&r, &a)| (r - a).abs()).sum();
+        assert!(err < 0.05, "row marginal error {err}");
+    }
+}

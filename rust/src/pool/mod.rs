@@ -1,0 +1,201 @@
+//! Thread-pool substrate (tokio/rayon are unavailable offline).
+//!
+//! Two facilities:
+//!
+//! * [`ThreadPool`] — a fixed pool of workers consuming boxed jobs from a
+//!   shared channel; used by the coordinator's sweep scheduler and the
+//!   TCP service.
+//! * [`parallel_for_chunks`] — fork-join data parallelism over an index
+//!   range using `std::thread::scope`; used off the solver's hot path
+//!   (dataset generation, evaluation) so single-solver benchmarks remain
+//!   one-core, matching the paper's single-CPU-core setup.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool. Jobs are executed FIFO; `join` blocks until
+/// every submitted job has finished. Dropping the pool joins workers.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` workers (n ≥ 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                thread::Builder::new()
+                    .name(format!("grpot-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cvar) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                if *p == 0 {
+                                    cvar.notify_all();
+                                }
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("worker channel closed");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn join(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cvar.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers exit their loop
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Counting semaphore (std has none on stable): used by the TCP service
+/// to cap concurrent solves while connections run thread-per-socket.
+pub struct Semaphore {
+    state: Mutex<usize>,
+    cvar: std::sync::Condvar,
+}
+
+/// RAII permit; releases on drop.
+pub struct SemaphorePermit<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Self {
+        assert!(permits > 0);
+        Semaphore { state: Mutex::new(permits), cvar: std::sync::Condvar::new() }
+    }
+
+    /// Block until a permit is available.
+    pub fn acquire(&self) -> SemaphorePermit<'_> {
+        let mut avail = self.state.lock().unwrap();
+        while *avail == 0 {
+            avail = self.cvar.wait(avail).unwrap();
+        }
+        *avail -= 1;
+        SemaphorePermit { sem: self }
+    }
+
+    /// Current free permits (diagnostics).
+    pub fn available(&self) -> usize {
+        *self.state.lock().unwrap()
+    }
+}
+
+impl Drop for SemaphorePermit<'_> {
+    fn drop(&mut self) {
+        let mut avail = self.sem.state.lock().unwrap();
+        *avail += 1;
+        self.sem.cvar.notify_one();
+    }
+}
+
+/// Run `body(chunk_start, chunk_end)` over `0..n` split into contiguous
+/// chunks across `threads` scoped threads. `body` must be `Sync`-safe via
+/// captured shared state; results are typically written to disjoint
+/// slices by the caller.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        body(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(lo, hi));
+        }
+    });
+}
+
+/// Dynamic work-stealing-ish variant: threads atomically grab blocks of
+/// `block` indices until the range is exhausted. Better for ragged work
+/// (e.g. sweep jobs with very different solve times).
+pub fn parallel_for_dynamic<F>(n: usize, threads: usize, block: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || n <= block {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let body = &body;
+            s.spawn(move || loop {
+                let start = next.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + block).min(n) {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests;

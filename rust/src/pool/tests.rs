@@ -1,0 +1,110 @@
+use super::*;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn pool_runs_all_jobs() {
+    let pool = ThreadPool::new(4);
+    let counter = Arc::new(AtomicUsize::new(0));
+    for _ in 0..100 {
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    pool.join();
+    assert_eq!(counter.load(Ordering::SeqCst), 100);
+}
+
+#[test]
+fn pool_join_then_more_jobs() {
+    let pool = ThreadPool::new(2);
+    let counter = Arc::new(AtomicUsize::new(0));
+    for round in 0..3 {
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
+    }
+}
+
+#[test]
+fn pool_drop_joins() {
+    let counter = Arc::new(AtomicUsize::new(0));
+    {
+        let pool = ThreadPool::new(3);
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+    }
+    assert_eq!(counter.load(Ordering::SeqCst), 50);
+}
+
+#[test]
+fn parallel_chunks_cover_range_disjointly() {
+    let n = 1003;
+    let data: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+    parallel_for_chunks(n, 7, |lo, hi| {
+        for i in lo..hi {
+            data[i].fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    assert!(data.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+}
+
+#[test]
+fn parallel_chunks_single_thread_and_empty() {
+    let hit = AtomicUsize::new(0);
+    parallel_for_chunks(10, 1, |lo, hi| {
+        hit.fetch_add(hi - lo, Ordering::Relaxed);
+    });
+    assert_eq!(hit.load(Ordering::Relaxed), 10);
+    parallel_for_chunks(0, 4, |_, _| {});
+}
+
+#[test]
+fn parallel_dynamic_covers_all() {
+    let n = 517;
+    let data: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+    parallel_for_dynamic(n, 5, 8, |i| {
+        data[i].fetch_add(1, Ordering::Relaxed);
+    });
+    assert!(data.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+}
+
+#[test]
+fn pool_size() {
+    assert_eq!(ThreadPool::new(3).size(), 3);
+}
+
+#[test]
+fn semaphore_caps_concurrency() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let sem = Arc::new(Semaphore::new(2));
+    let active = Arc::new(AtomicUsize::new(0));
+    let peak = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let (sem, active, peak) =
+                (Arc::clone(&sem), Arc::clone(&active), Arc::clone(&peak));
+            s.spawn(move || {
+                let _p = sem.acquire();
+                let now = active.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                active.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+    });
+    assert!(peak.load(Ordering::SeqCst) <= 2);
+    assert_eq!(sem.available(), 2);
+}

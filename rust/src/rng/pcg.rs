@@ -1,0 +1,38 @@
+//! PCG-XSL-RR 128/64 core generator (O'Neill 2014).
+
+/// 128-bit-state PCG generator producing 64-bit outputs.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    pub(super) spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Seed with a 64-bit value (default stream).
+    pub fn new(seed: u64) -> Self {
+        Self::new_with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Seed with explicit stream selector (must effectively be odd; the
+    /// constructor forces the low bit).
+    pub fn new_with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc, spare: None };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+}

@@ -1,0 +1,117 @@
+use super::*;
+
+#[test]
+fn deterministic_given_seed() {
+    let mut a = Pcg64::new(42);
+    let mut b = Pcg64::new(42);
+    for _ in 0..100 {
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+    let mut c = Pcg64::new(43);
+    assert_ne!(Pcg64::new(42).next_u64(), c.next_u64());
+}
+
+#[test]
+fn f64_in_unit_interval() {
+    let mut r = Pcg64::new(1);
+    for _ in 0..10_000 {
+        let v = r.f64();
+        assert!((0.0..1.0).contains(&v));
+    }
+}
+
+#[test]
+fn uniform_mean_reasonable() {
+    let mut r = Pcg64::new(7);
+    let n = 50_000;
+    let mean: f64 = (0..n).map(|_| r.uniform(2.0, 4.0)).sum::<f64>() / n as f64;
+    assert!((mean - 3.0).abs() < 0.02, "mean={mean}");
+}
+
+#[test]
+fn below_unbiased_rough() {
+    let mut r = Pcg64::new(3);
+    let mut counts = [0usize; 5];
+    let n = 100_000;
+    for _ in 0..n {
+        counts[r.below(5)] += 1;
+    }
+    for &c in &counts {
+        let p = c as f64 / n as f64;
+        assert!((p - 0.2).abs() < 0.01, "p={p}");
+    }
+}
+
+#[test]
+fn normal_moments() {
+    let mut r = Pcg64::new(11);
+    let n = 200_000;
+    let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    assert!(mean.abs() < 0.01, "mean={mean}");
+    assert!((var - 1.0).abs() < 0.02, "var={var}");
+}
+
+#[test]
+fn normal_ms_shifts() {
+    let mut r = Pcg64::new(5);
+    let n = 100_000;
+    let mean: f64 = (0..n).map(|_| r.normal_ms(10.0, 0.5)).sum::<f64>() / n as f64;
+    assert!((mean - 10.0).abs() < 0.02, "mean={mean}");
+}
+
+#[test]
+fn shuffle_is_permutation() {
+    let mut r = Pcg64::new(9);
+    let mut v: Vec<usize> = (0..100).collect();
+    r.shuffle(&mut v);
+    let mut sorted = v.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    assert_ne!(v, (0..100).collect::<Vec<_>>()); // overwhelmingly likely
+}
+
+#[test]
+fn sample_indices_distinct() {
+    let mut r = Pcg64::new(13);
+    let s = r.sample_indices(50, 20);
+    assert_eq!(s.len(), 20);
+    let mut dedup = s.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), 20);
+    assert!(dedup.iter().all(|&i| i < 50));
+}
+
+#[test]
+fn categorical_respects_weights() {
+    let mut r = Pcg64::new(17);
+    let w = [1.0, 0.0, 3.0];
+    let mut counts = [0usize; 3];
+    let n = 40_000;
+    for _ in 0..n {
+        counts[r.categorical(&w)] += 1;
+    }
+    assert_eq!(counts[1], 0);
+    let p2 = counts[2] as f64 / n as f64;
+    assert!((p2 - 0.75).abs() < 0.01, "p2={p2}");
+}
+
+#[test]
+fn split_streams_diverge() {
+    let mut root = Pcg64::new(21);
+    let mut a = root.split();
+    let mut b = root.split();
+    let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+    let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+    assert_ne!(va, vb);
+}
+
+#[test]
+fn exp1_mean_one() {
+    let mut r = Pcg64::new(23);
+    let n = 100_000;
+    let mean: f64 = (0..n).map(|_| r.exp1()).sum::<f64>() / n as f64;
+    assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+}

@@ -1,0 +1,128 @@
+//! `artifacts/manifest.json` parsing — the contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use crate::jsonlite;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Program kind; currently "dual_obj_grad".
+    pub kind: String,
+    pub num_groups: usize,
+    pub group_size: usize,
+    pub m: usize,
+    pub n: usize,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub sha256: String,
+}
+
+/// Parsed artifact index.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = jsonlite::parse(&text).context("parsing manifest json")?;
+        let entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?;
+        let mut out = Vec::with_capacity(entries.len());
+        for e in entries {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("entry missing '{k}'"))?
+                    .to_string())
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                e.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("entry missing '{k}'"))
+            };
+            out.push(ArtifactEntry {
+                name: get_str("name")?,
+                kind: get_str("kind")?,
+                num_groups: get_usize("num_groups")?,
+                group_size: get_usize("group_size")?,
+                m: get_usize("m")?,
+                n: get_usize("n")?,
+                file: get_str("file")?,
+                sha256: get_str("sha256")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries: out })
+    }
+
+    /// Find the dual-oracle artifact matching a problem shape.
+    pub fn find_dual_oracle(&self, num_groups: usize, group_size: usize, n: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == "dual_obj_grad"
+                && e.num_groups == num_groups
+                && e.group_size == group_size
+                && e.n == n
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_entries_and_finds_shapes() {
+        let dir = std::env::temp_dir().join(format!("grpot-manifest-{}", std::process::id()));
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "entries": [
+                {"name": "x", "kind": "dual_obj_grad", "num_groups": 2,
+                 "group_size": 3, "m": 6, "n": 4, "dtype": "f64",
+                 "file": "x.hlo.txt", "sha256": "ab", "inputs": [], "outputs": []}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find_dual_oracle(2, 3, 4).expect("entry");
+        assert_eq!(e.m, 6);
+        assert!(m.find_dual_oracle(2, 3, 5).is_none());
+        assert!(m.path_of(e).ends_with("x.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("grpot-no-such-dir-xyz");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        let dir = std::env::temp_dir().join(format!("grpot-badmani-{}", std::process::id()));
+        write_manifest(&dir, r#"{"entries": [{"name": "x"}]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "not json");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,61 @@
+//! PJRT runtime: load the AOT JAX/Pallas artifacts and expose them as
+//! [`DualOracle`]s on the Rust request path.
+//!
+//! Python runs only at build time (`make artifacts`); at runtime this
+//! module parses `artifacts/manifest.json`, loads the HLO **text** of
+//! the matching shape (text, not serialized proto — xla_extension 0.5.1
+//! rejects jax≥0.5 64-bit-id protos), compiles it once on the PJRT CPU
+//! client and executes it per L-BFGS evaluation.
+
+mod manifest;
+mod oracle;
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use oracle::XlaDualOracle;
+
+use anyhow::{Context, Result};
+
+/// Thin wrapper over the PJRT CPU client; compile once, execute many.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Platform string, e.g. "cpu" (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_text_file(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(exe)
+    }
+
+    #[doc(hidden)]
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Default artifact directory (next to the binary's working directory,
+/// overridable via `GRPOT_ARTIFACT_DIR`).
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("GRPOT_ARTIFACT_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

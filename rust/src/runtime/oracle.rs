@@ -1,0 +1,131 @@
+//! [`XlaDualOracle`] — the AOT JAX/Pallas dual oracle behind the same
+//! [`DualOracle`] trait as the native Rust oracles, so the L-BFGS loop
+//! is backend-agnostic.
+
+use super::{Manifest, PjrtRuntime};
+use crate::ot::dual::{DualOracle, DualParams, OracleStats, OtProblem};
+use anyhow::{anyhow, Context, Result};
+
+/// Dense dual oracle backed by the compiled `dual_obj_grad` artifact.
+///
+/// Static operands (a, b, cost, τ, λ_quad) are uploaded once; each
+/// `eval` builds only the α/β literals and runs the executable.
+pub struct XlaDualOracle {
+    exe: xla::PjRtLoadedExecutable,
+    m: usize,
+    n: usize,
+    num_groups: usize,
+    a_lit: xla::Literal,
+    b_lit: xla::Literal,
+    cost_lit: xla::Literal,
+    tau_lit: xla::Literal,
+    lq_lit: xla::Literal,
+    stats: OracleStats,
+}
+
+impl XlaDualOracle {
+    /// Load the artifact matching `prob`'s shape from `artifact_dir`.
+    ///
+    /// Requires a uniform group structure (the AOT kernel's fast path);
+    /// errors if no matching artifact exists — run `make artifacts`
+    /// or regenerate with `python -m compile.aot --shapes L,g,n`.
+    pub fn from_problem(
+        runtime: &PjrtRuntime,
+        prob: &OtProblem,
+        params: &DualParams,
+        artifact_dir: &std::path::Path,
+    ) -> Result<Self> {
+        params.validate();
+        if !prob.groups.is_uniform() {
+            return Err(anyhow!(
+                "XLA oracle requires uniform group sizes (got {:?}…)",
+                &prob.groups.sizes[..prob.groups.sizes.len().min(4)]
+            ));
+        }
+        let num_groups = prob.groups.num_groups();
+        let group_size = prob.groups.sizes[0];
+        let manifest = Manifest::load(artifact_dir)?;
+        let entry = manifest
+            .find_dual_oracle(num_groups, group_size, prob.n())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for (L={num_groups}, g={group_size}, n={}); \
+                     available: {:?}. Regenerate with `python -m compile.aot --shapes \
+                     {num_groups},{group_size},{}`",
+                    prob.n(),
+                    manifest
+                        .entries
+                        .iter()
+                        .map(|e| (e.num_groups, e.group_size, e.n))
+                        .collect::<Vec<_>>(),
+                    prob.n(),
+                )
+            })?;
+        let exe = runtime.compile_hlo_text_file(&manifest.path_of(entry))?;
+
+        let m = prob.m();
+        let n = prob.n();
+        // Cost in row-major (m × n), sorted-source order — prob stores
+        // the transpose for the Rust hot loop.
+        let cost = prob.cost();
+        let cost_lit = xla::Literal::vec1(cost.as_slice())
+            .reshape(&[m as i64, n as i64])
+            .context("reshaping cost literal")?;
+        Ok(XlaDualOracle {
+            exe,
+            m,
+            n,
+            num_groups,
+            a_lit: xla::Literal::vec1(&prob.a),
+            b_lit: xla::Literal::vec1(&prob.b),
+            cost_lit,
+            tau_lit: xla::Literal::scalar(params.tau()),
+            lq_lit: xla::Literal::scalar(params.lambda_quad()),
+            stats: OracleStats::default(),
+        })
+    }
+
+    fn run(&self, x: &[f64]) -> Result<(f64, Vec<f64>, Vec<f64>)> {
+        let alpha_lit = xla::Literal::vec1(&x[..self.m]);
+        let beta_lit = xla::Literal::vec1(&x[self.m..]);
+        let args = [
+            &alpha_lit,
+            &beta_lit,
+            &self.a_lit,
+            &self.b_lit,
+            &self.cost_lit,
+            &self.tau_lit,
+            &self.lq_lit,
+        ];
+        let result = self.exe.execute(&args).context("executing dual oracle")?;
+        let lit = result[0][0].to_literal_sync().context("fetching result")?;
+        let (obj, ga, gb) = lit.to_tuple3().context("unpacking 3-tuple")?;
+        let neg_obj = obj.get_first_element::<f64>()?;
+        Ok((neg_obj, ga.to_vec::<f64>()?, gb.to_vec::<f64>()?))
+    }
+}
+
+impl DualOracle for XlaDualOracle {
+    fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    fn eval(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
+        assert_eq!(x.len(), self.m + self.n);
+        assert_eq!(grad.len(), self.m + self.n);
+        let (neg_obj, ga, gb) = self
+            .run(x)
+            .expect("XLA execution failed mid-solve (artifact/runtime mismatch)");
+        grad[..self.m].copy_from_slice(&ga);
+        grad[self.m..].copy_from_slice(&gb);
+        // The XLA path is dense: every group gradient is computed.
+        let dense_groups = (self.num_groups * self.n) as u64;
+        self.stats.grads_computed += dense_groups;
+        self.stats.record_eval(dense_groups);
+        neg_obj
+    }
+
+    fn stats(&self) -> &OracleStats {
+        &self.stats
+    }
+}

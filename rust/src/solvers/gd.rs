@@ -1,0 +1,99 @@
+//! Gradient descent with Armijo backtracking — a slow-but-simple
+//! reference solver used in tests to cross-check L-BFGS solutions.
+
+use crate::linalg;
+use crate::ot::dual::DualOracle;
+
+/// Options for [`gradient_descent`].
+#[derive(Clone, Debug)]
+pub struct GdOptions {
+    pub max_iters: usize,
+    pub gtol: f64,
+    /// Initial step size tried at each iteration.
+    pub step0: f64,
+    /// Backtracking shrink factor.
+    pub shrink: f64,
+    /// Armijo constant.
+    pub c1: f64,
+}
+
+impl Default for GdOptions {
+    fn default() -> Self {
+        GdOptions { max_iters: 5000, gtol: 1e-6, step0: 1.0, shrink: 0.5, c1: 1e-4 }
+    }
+}
+
+/// Minimize the oracle from `x0`; returns `(x, f, iters)`.
+pub fn gradient_descent(
+    oracle: &mut dyn DualOracle,
+    x0: Vec<f64>,
+    opts: &GdOptions,
+) -> (Vec<f64>, f64, usize) {
+    let n = x0.len();
+    let mut x = x0;
+    let mut g = vec![0.0; n];
+    let mut f = oracle.eval(&x, &mut g);
+    let mut xt = vec![0.0; n];
+    let mut gt = vec![0.0; n];
+    for iter in 0..opts.max_iters {
+        let gnorm = linalg::nrm_inf(&g);
+        if gnorm <= opts.gtol {
+            return (x, f, iter);
+        }
+        let gsq = linalg::nrm2_sq(&g);
+        let mut step = opts.step0;
+        let mut accepted = false;
+        for _ in 0..60 {
+            for i in 0..n {
+                xt[i] = x[i] - step * g[i];
+            }
+            let ft = oracle.eval(&xt, &mut gt);
+            if ft <= f - opts.c1 * step * gsq {
+                std::mem::swap(&mut x, &mut xt);
+                std::mem::swap(&mut g, &mut gt);
+                f = ft;
+                accepted = true;
+                break;
+            }
+            step *= opts.shrink;
+        }
+        if !accepted {
+            return (x, f, iter);
+        }
+    }
+    let iters = opts.max_iters;
+    (x, f, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::dual::OracleStats;
+
+    struct Quad {
+        stats: OracleStats,
+    }
+    impl DualOracle for Quad {
+        fn shape(&self) -> (usize, usize) {
+            (2, 0)
+        }
+        fn eval(&mut self, x: &[f64], g: &mut [f64]) -> f64 {
+            self.stats.evals += 1;
+            g[0] = x[0] - 2.0;
+            g[1] = 3.0 * (x[1] + 1.0);
+            0.5 * (x[0] - 2.0).powi(2) + 1.5 * (x[1] + 1.0).powi(2)
+        }
+        fn stats(&self) -> &OracleStats {
+            &self.stats
+        }
+    }
+
+    #[test]
+    fn gd_converges_on_quadratic() {
+        let mut o = Quad { stats: OracleStats::default() };
+        let (x, f, _) = gradient_descent(&mut o, vec![10.0, 10.0], &GdOptions::default());
+        assert!((x[0] - 2.0).abs() < 1e-4);
+        assert!((x[1] + 1.0).abs() < 1e-4);
+        assert!(f < 1e-8);
+    }
+}

@@ -1,0 +1,341 @@
+//! Limited-memory BFGS with strong-Wolfe line search.
+//!
+//! Implemented as a *resumable* state machine: the Algorithm-1 driver
+//! calls [`Lbfgs::step`] in blocks of `r` iterations and refreshes the
+//! screening snapshots in between without losing curvature memory.
+
+use super::linesearch::{strong_wolfe, WolfeOptions};
+use super::{StepStatus, StopReason};
+use crate::linalg::{self};
+use crate::ot::dual::DualOracle;
+use std::collections::VecDeque;
+
+/// L-BFGS options (defaults follow scipy's L-BFGS-B: m=10,
+/// ftol≈2.2e-9, gtol=1e-5).
+#[derive(Clone, Debug)]
+pub struct LbfgsOptions {
+    /// Number of stored (s, y) pairs.
+    pub memory: usize,
+    /// Hard iteration cap.
+    pub max_iters: usize,
+    /// Stop when `‖∇f‖∞ ≤ gtol`.
+    pub gtol: f64,
+    /// Stop when `(f_prev − f) ≤ ftol · max(|f|, |f_prev|, 1)`.
+    pub ftol: f64,
+    /// Line-search parameters.
+    pub wolfe: WolfeOptions,
+}
+
+impl Default for LbfgsOptions {
+    fn default() -> Self {
+        LbfgsOptions {
+            memory: 10,
+            max_iters: 1000,
+            gtol: 1e-5,
+            ftol: 2.2e-9,
+            wolfe: WolfeOptions::default(),
+        }
+    }
+}
+
+/// Resumable L-BFGS state.
+pub struct Lbfgs {
+    opts: LbfgsOptions,
+    x: Vec<f64>,
+    f: f64,
+    g: Vec<f64>,
+    s_mem: VecDeque<Vec<f64>>,
+    y_mem: VecDeque<Vec<f64>>,
+    rho_mem: VecDeque<f64>,
+    iter: usize,
+    stopped: Option<StopReason>,
+}
+
+impl Lbfgs {
+    /// Initialize at `x0` (evaluates the oracle once).
+    pub fn new(x0: Vec<f64>, opts: LbfgsOptions, oracle: &mut dyn DualOracle) -> Self {
+        let mut g = vec![0.0; x0.len()];
+        let f = oracle.eval(&x0, &mut g);
+        Lbfgs {
+            opts,
+            x: x0,
+            f,
+            g,
+            s_mem: VecDeque::new(),
+            y_mem: VecDeque::new(),
+            rho_mem: VecDeque::new(),
+            iter: 0,
+            stopped: None,
+        }
+    }
+
+    /// Current iterate.
+    pub fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    /// Current objective value.
+    pub fn f(&self) -> f64 {
+        self.f
+    }
+
+    /// Current gradient.
+    pub fn grad(&self) -> &[f64] {
+        &self.g
+    }
+
+    /// Completed iterations.
+    pub fn iterations(&self) -> usize {
+        self.iter
+    }
+
+    /// Why the solver stopped, if it has.
+    pub fn stop_reason(&self) -> Option<StopReason> {
+        self.stopped
+    }
+
+    /// Consume into `(x, f)`.
+    pub fn into_solution(self) -> (Vec<f64>, f64) {
+        (self.x, self.f)
+    }
+
+    /// Two-loop recursion: `dir = −H·g`.
+    fn search_direction(&self) -> Vec<f64> {
+        let k = self.s_mem.len();
+        let mut q: Vec<f64> = self.g.clone();
+        if k == 0 {
+            for v in q.iter_mut() {
+                *v = -*v;
+            }
+            return q;
+        }
+        let mut alphas = vec![0.0; k];
+        for idx in (0..k).rev() {
+            let a = self.rho_mem[idx] * linalg::dot(&self.s_mem[idx], &q);
+            alphas[idx] = a;
+            linalg::axpy(-a, &self.y_mem[idx], &mut q);
+        }
+        // Initial Hessian scaling γ = sᵀy / yᵀy (most recent pair).
+        let last = k - 1;
+        let sy = 1.0 / self.rho_mem[last];
+        let yy = linalg::nrm2_sq(&self.y_mem[last]);
+        let gamma = if yy > 0.0 { sy / yy } else { 1.0 };
+        linalg::scal(gamma, &mut q);
+        for idx in 0..k {
+            let b = self.rho_mem[idx] * linalg::dot(&self.y_mem[idx], &q);
+            linalg::axpy(alphas[idx] - b, &self.s_mem[idx], &mut q);
+        }
+        for v in q.iter_mut() {
+            *v = -*v;
+        }
+        q
+    }
+
+    /// One L-BFGS iteration. Returns `Continue` or a terminal status.
+    pub fn step(&mut self, oracle: &mut dyn DualOracle) -> StepStatus {
+        if let Some(r) = self.stopped {
+            return StepStatus::Stopped(r);
+        }
+        if linalg::nrm_inf(&self.g) <= self.opts.gtol {
+            self.stopped = Some(StopReason::GradTol);
+            return StepStatus::Stopped(StopReason::GradTol);
+        }
+        if self.iter >= self.opts.max_iters {
+            self.stopped = Some(StopReason::MaxIters);
+            return StepStatus::Stopped(StopReason::MaxIters);
+        }
+
+        let mut dir = self.search_direction();
+        let mut dphi0 = linalg::dot(&self.g, &dir);
+        if dphi0 >= 0.0 {
+            // Memory produced a non-descent direction (can happen after
+            // pathological curvature); restart from steepest descent.
+            self.s_mem.clear();
+            self.y_mem.clear();
+            self.rho_mem.clear();
+            dir = self.g.iter().map(|&v| -v).collect();
+            dphi0 = linalg::dot(&self.g, &dir);
+            if dphi0 >= 0.0 {
+                self.stopped = Some(StopReason::GradTol);
+                return StepStatus::Stopped(StopReason::GradTol);
+            }
+        }
+
+        // First iteration: scale the step like 1/‖g‖ (standard heuristic).
+        let init_step = if self.s_mem.is_empty() {
+            (1.0 / linalg::nrm_inf(&self.g).max(1e-12)).min(1.0)
+        } else {
+            1.0
+        };
+
+        let ls = strong_wolfe(
+            oracle,
+            &self.x,
+            self.f,
+            &self.g,
+            &dir,
+            init_step,
+            &self.opts.wolfe,
+        );
+        let ls = match ls {
+            Some(r) => r,
+            None => {
+                self.stopped = Some(StopReason::LineSearchFailed);
+                return StepStatus::Stopped(StopReason::LineSearchFailed);
+            }
+        };
+
+        // Update memory with s = t·d, y = g_new − g_old.
+        let mut s = dir;
+        linalg::scal(ls.step, &mut s);
+        let y = linalg::sub(&ls.grad, &self.g);
+        let sy = linalg::dot(&s, &y);
+        if sy > 1e-12 * linalg::nrm2(&s) * linalg::nrm2(&y) {
+            if self.s_mem.len() == self.opts.memory {
+                self.s_mem.pop_front();
+                self.y_mem.pop_front();
+                self.rho_mem.pop_front();
+            }
+            self.rho_mem.push_back(1.0 / sy);
+            self.s_mem.push_back(s.clone());
+            self.y_mem.push_back(y);
+        }
+
+        let f_prev = self.f;
+        for (xi, &si) in self.x.iter_mut().zip(&s) {
+            *xi += si;
+        }
+        self.f = ls.f;
+        self.g = ls.grad;
+        self.iter += 1;
+
+        let fscale = self.f.abs().max(f_prev.abs()).max(1.0);
+        if f_prev - self.f <= self.opts.ftol * fscale {
+            self.stopped = Some(StopReason::FTol);
+            return StepStatus::Stopped(StopReason::FTol);
+        }
+        StepStatus::Continue
+    }
+
+    /// Run until a stop condition fires; returns the reason.
+    pub fn run(&mut self, oracle: &mut dyn DualOracle) -> StopReason {
+        loop {
+            if let StepStatus::Stopped(r) = self.step(oracle) {
+                return r;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::dual::OracleStats;
+
+    /// Adapter: plain smooth function as a DualOracle for solver tests.
+    pub struct FnOracle<F: FnMut(&[f64], &mut [f64]) -> f64> {
+        pub f: F,
+        pub dim: usize,
+        pub stats: OracleStats,
+    }
+
+    impl<F: FnMut(&[f64], &mut [f64]) -> f64> DualOracle for FnOracle<F> {
+        fn shape(&self) -> (usize, usize) {
+            (self.dim, 0)
+        }
+        fn eval(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
+            self.stats.evals += 1;
+            (self.f)(x, grad)
+        }
+        fn stats(&self) -> &OracleStats {
+            &self.stats
+        }
+    }
+
+    #[test]
+    fn minimizes_quadratic_exactly() {
+        // f(x) = ½Σ d_i (x_i − c_i)²
+        let d = [1.0, 10.0, 100.0];
+        let c = [1.0, -2.0, 3.0];
+        let mut oracle = FnOracle {
+            dim: 3,
+            stats: OracleStats::default(),
+            f: move |x: &[f64], g: &mut [f64]| {
+                let mut f = 0.0;
+                for i in 0..3 {
+                    let e = x[i] - c[i];
+                    g[i] = d[i] * e;
+                    f += 0.5 * d[i] * e * e;
+                }
+                f
+            },
+        };
+        let mut solver = Lbfgs::new(vec![0.0; 3], LbfgsOptions::default(), &mut oracle);
+        let reason = solver.run(&mut oracle);
+        assert!(matches!(reason, StopReason::GradTol | StopReason::FTol), "{reason:?}");
+        for i in 0..3 {
+            assert!((solver.x()[i] - c[i]).abs() < 1e-4, "x[{i}]={}", solver.x()[i]);
+        }
+    }
+
+    #[test]
+    fn minimizes_rosenbrock() {
+        let mut oracle = FnOracle {
+            dim: 2,
+            stats: OracleStats::default(),
+            f: |x: &[f64], g: &mut [f64]| {
+                let (a, b) = (x[0], x[1]);
+                g[0] = -2.0 * (1.0 - a) - 400.0 * a * (b - a * a);
+                g[1] = 200.0 * (b - a * a);
+                (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2)
+            },
+        };
+        let opts = LbfgsOptions { max_iters: 500, ftol: 1e-14, ..Default::default() };
+        let mut solver = Lbfgs::new(vec![-1.2, 1.0], opts, &mut oracle);
+        solver.run(&mut oracle);
+        assert!((solver.x()[0] - 1.0).abs() < 1e-3, "x={:?}", solver.x());
+        assert!((solver.x()[1] - 1.0).abs() < 1e-3, "x={:?}", solver.x());
+        assert!(solver.f() < 1e-6);
+    }
+
+    #[test]
+    fn resumable_stepping_matches_run() {
+        // Stepping one-by-one must reach the same solution as run().
+        let mk = || FnOracle {
+            dim: 2,
+            stats: OracleStats::default(),
+            f: |x: &[f64], g: &mut [f64]| {
+                g[0] = 2.0 * x[0] + x[1];
+                g[1] = x[0] + 4.0 * x[1] - 3.0;
+                x[0] * x[0] + 0.5 * x[0] * x[1] + 2.0 * x[1] * x[1] - 3.0 * x[1]
+            },
+        };
+        let mut o1 = mk();
+        let mut s1 = Lbfgs::new(vec![5.0, -5.0], LbfgsOptions::default(), &mut o1);
+        s1.run(&mut o1);
+
+        let mut o2 = mk();
+        let mut s2 = Lbfgs::new(vec![5.0, -5.0], LbfgsOptions::default(), &mut o2);
+        while let StepStatus::Continue = s2.step(&mut o2) {}
+        assert_eq!(s1.x(), s2.x());
+        assert_eq!(s1.f(), s2.f());
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let mut oracle = FnOracle {
+            dim: 1,
+            stats: OracleStats::default(),
+            f: |x: &[f64], g: &mut [f64]| {
+                g[0] = x[0].signum() * 1.0 + x[0] * 1e-3; // slow crawl
+                x[0].abs() + 0.5e-3 * x[0] * x[0]
+            },
+        };
+        let opts = LbfgsOptions { max_iters: 3, ftol: 0.0, gtol: 0.0, ..Default::default() };
+        let mut solver = Lbfgs::new(vec![100.0], opts, &mut oracle);
+        let reason = solver.run(&mut oracle);
+        // Non-smooth kink: either hits the cap or stalls in line search.
+        assert!(matches!(reason, StopReason::MaxIters | StopReason::LineSearchFailed));
+        assert!(solver.iterations() <= 3);
+    }
+}

@@ -1,0 +1,170 @@
+//! Strong-Wolfe line search (Nocedal & Wright, Algorithms 3.5/3.6).
+
+use crate::ot::dual::DualOracle;
+
+/// Line-search parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct WolfeOptions {
+    /// Sufficient-decrease constant (Armijo), typically 1e-4.
+    pub c1: f64,
+    /// Curvature constant, 0.9 for quasi-Newton directions.
+    pub c2: f64,
+    /// Maximum bracketing + zoom evaluations.
+    pub max_evals: usize,
+    /// Upper bound on the step length.
+    pub step_max: f64,
+}
+
+impl Default for WolfeOptions {
+    fn default() -> Self {
+        WolfeOptions { c1: 1e-4, c2: 0.9, max_evals: 30, step_max: 1e6 }
+    }
+}
+
+/// Result of a successful search.
+pub struct LineSearchResult {
+    pub step: f64,
+    pub f: f64,
+    /// Gradient at the accepted point (full-dimension).
+    pub grad: Vec<f64>,
+    pub evals: usize,
+}
+
+struct Phi<'a, 'b> {
+    oracle: &'a mut dyn DualOracle,
+    x0: &'b [f64],
+    dir: &'b [f64],
+    xt: Vec<f64>,
+    gt: Vec<f64>,
+    evals: usize,
+}
+
+impl Phi<'_, '_> {
+    /// Evaluate φ(t) = f(x0 + t·d) and φ'(t) = ∇f(x0+t·d)ᵀd.
+    fn eval(&mut self, t: f64) -> (f64, f64) {
+        for ((xi, &x0i), &di) in self.xt.iter_mut().zip(self.x0).zip(self.dir) {
+            *xi = x0i + t * di;
+        }
+        let f = self.oracle.eval(&self.xt, &mut self.gt);
+        self.evals += 1;
+        let dphi = crate::linalg::dot(&self.gt, self.dir);
+        (f, dphi)
+    }
+}
+
+/// Find a step satisfying the strong Wolfe conditions along `dir` from
+/// `x0`. `f0`/`dphi0` are the value and directional derivative at 0
+/// (`dphi0` must be negative). Returns `None` when no acceptable step is
+/// found within the evaluation budget.
+pub fn strong_wolfe(
+    oracle: &mut dyn DualOracle,
+    x0: &[f64],
+    f0: f64,
+    grad0: &[f64],
+    dir: &[f64],
+    init_step: f64,
+    opts: &WolfeOptions,
+) -> Option<LineSearchResult> {
+    let dphi0 = crate::linalg::dot(grad0, dir);
+    if dphi0 >= 0.0 {
+        return None; // not a descent direction
+    }
+    let n = x0.len();
+    let mut phi = Phi {
+        oracle,
+        x0,
+        dir,
+        xt: vec![0.0; n],
+        gt: vec![0.0; n],
+        evals: 0,
+    };
+
+    let mut t_prev = 0.0;
+    let mut f_prev = f0;
+    let mut dphi_prev = dphi0;
+    let mut t = init_step.min(opts.step_max);
+
+    for iter in 0..opts.max_evals {
+        let (ft, dphit) = phi.eval(t);
+        let armijo_ok = ft <= f0 + opts.c1 * t * dphi0;
+        if !armijo_ok || (iter > 0 && ft >= f_prev) {
+            return zoom(&mut phi, f0, dphi0, t_prev, f_prev, dphi_prev, t, ft, dphit, opts);
+        }
+        if dphit.abs() <= -opts.c2 * dphi0 {
+            let evals = phi.evals;
+            return Some(LineSearchResult { step: t, f: ft, grad: phi.gt, evals });
+        }
+        if dphit >= 0.0 {
+            return zoom(&mut phi, f0, dphi0, t, ft, dphit, t_prev, f_prev, dphi_prev, opts);
+        }
+        t_prev = t;
+        f_prev = ft;
+        dphi_prev = dphit;
+        t = (2.0 * t).min(opts.step_max);
+        if t >= opts.step_max && iter > 3 {
+            break;
+        }
+    }
+    None
+}
+
+/// Zoom phase: maintain a bracket `[lo, hi]` containing an acceptable
+/// step; interpolate (bisection with a cubic first guess).
+#[allow(clippy::too_many_arguments)]
+fn zoom(
+    phi: &mut Phi,
+    f0: f64,
+    dphi0: f64,
+    mut t_lo: f64,
+    mut f_lo: f64,
+    mut dphi_lo: f64,
+    mut t_hi: f64,
+    mut f_hi: f64,
+    mut _dphi_hi: f64,
+    opts: &WolfeOptions,
+) -> Option<LineSearchResult> {
+    for _ in 0..opts.max_evals {
+        if (t_hi - t_lo).abs() < 1e-16 * t_lo.abs().max(1.0) {
+            break;
+        }
+        // Cubic-ish guess via quadratic interpolation of (f_lo, dphi_lo, f_hi),
+        // safeguarded into the middle 80% of the bracket.
+        let mut t = quadratic_min(t_lo, f_lo, dphi_lo, t_hi, f_hi);
+        let lo = t_lo.min(t_hi);
+        let hi = t_lo.max(t_hi);
+        let margin = 0.1 * (hi - lo);
+        if !t.is_finite() || t < lo + margin || t > hi - margin {
+            t = 0.5 * (lo + hi);
+        }
+        let (ft, dphit) = phi.eval(t);
+        if ft > f0 + opts.c1 * t * dphi0 || ft >= f_lo {
+            t_hi = t;
+            f_hi = ft;
+            _dphi_hi = dphit;
+        } else {
+            if dphit.abs() <= -opts.c2 * dphi0 {
+                let evals = phi.evals;
+                return Some(LineSearchResult { step: t, f: ft, grad: phi.gt.clone(), evals });
+            }
+            if dphit * (t_hi - t_lo) >= 0.0 {
+                t_hi = t_lo;
+                f_hi = f_lo;
+                _dphi_hi = dphi_lo;
+            }
+            t_lo = t;
+            f_lo = ft;
+            dphi_lo = dphit;
+        }
+    }
+    None
+}
+
+/// Minimizer of the quadratic through `(a, fa)` with slope `dfa` and `(b, fb)`.
+fn quadratic_min(a: f64, fa: f64, dfa: f64, b: f64, fb: f64) -> f64 {
+    let db = b - a;
+    let denom = 2.0 * (fb - fa - dfa * db);
+    if denom.abs() < 1e-300 {
+        return f64::NAN;
+    }
+    a - dfa * db * db / denom
+}

@@ -1,0 +1,33 @@
+//! Gradient-based solvers (substrate — scipy/L-BFGS-B is what the paper
+//! used; we implement L-BFGS with a strong-Wolfe line search from
+//! scratch, plus a first-order reference solver for tests).
+//!
+//! Solvers talk to problems through [`crate::ot::dual::DualOracle`], so
+//! the dense baseline, the screening method and the XLA-backed oracle
+//! all share the same optimization loop — a requirement for the paper's
+//! Theorem 2 (identical trajectories) to be observable.
+
+pub mod gd;
+pub mod lbfgs;
+pub mod linesearch;
+
+/// Why a solver stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// `‖∇f‖∞ ≤ gtol`.
+    GradTol,
+    /// Relative objective decrease below `ftol`.
+    FTol,
+    /// Iteration budget exhausted.
+    MaxIters,
+    /// The line search could not find an acceptable step (typically
+    /// means we are at numerical convergence).
+    LineSearchFailed,
+}
+
+/// Outcome of one solver step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepStatus {
+    Continue,
+    Stopped(StopReason),
+}

@@ -1,0 +1,191 @@
+//! Property-testing substrate (`proptest` is unavailable offline).
+//!
+//! A deliberately small harness: each property runs `cases` times with a
+//! deterministic per-case PRNG derived from `(base_seed, case_index)`,
+//! so any failure prints the exact case seed and can be replayed with
+//! [`replay`]. Generation helpers cover the shapes the OT tests need
+//! (vectors, group structures, dual iterates).
+//!
+//! ```
+//! use grpot::testing::{check, Config};
+//! check("abs is nonneg", &Config::default(), |rng| {
+//!     let x = rng.uniform(-10.0, 10.0);
+//!     if x.abs() >= 0.0 { Ok(()) } else { Err(format!("{x}")) }
+//! });
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Property-run configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; change to explore a different region.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, base_seed: 0x5EED_CAFE }
+    }
+}
+
+impl Config {
+    pub fn cases(n: usize) -> Self {
+        Config { cases: n, ..Default::default() }
+    }
+}
+
+/// Derive the per-case rng.
+fn case_rng(base_seed: u64, case: usize) -> Pcg64 {
+    Pcg64::new_with_stream(base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15), case as u64)
+}
+
+/// Run a property. `prop` returns `Err(msg)` to fail the case. Panics
+/// with the case index + seed on first failure.
+pub fn check<F>(name: &str, cfg: &Config, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = case_rng(cfg.base_seed, case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (base_seed={:#x}): {msg}\n\
+                 replay with grpot::testing::replay({:#x}, {case}, ..)",
+                cfg.base_seed, cfg.base_seed
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by `(base_seed, case)`.
+pub fn replay<F>(base_seed: u64, case: usize, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    let mut rng = case_rng(base_seed, case);
+    prop(&mut rng)
+}
+
+// ---------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------
+
+/// Vector of `n` uniforms in `[lo, hi)`.
+pub fn gen_vec(rng: &mut Pcg64, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..n).map(|_| rng.uniform(lo, hi)).collect()
+}
+
+/// Vector of `n` standard normals scaled by `scale`.
+pub fn gen_normal_vec(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f64> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+/// Random group sizes: `l` groups with sizes in `[1, max_g]`.
+pub fn gen_group_sizes(rng: &mut Pcg64, l: usize, max_g: usize) -> Vec<usize> {
+    (0..l).map(|_| 1 + rng.below(max_g)).collect()
+}
+
+/// Offsets from sizes: `[0, s0, s0+s1, …]`.
+pub fn offsets_from_sizes(sizes: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(sizes.len() + 1);
+    let mut acc = 0;
+    out.push(0);
+    for &s in sizes {
+        acc += s;
+        out.push(acc);
+    }
+    out
+}
+
+/// A probability vector of length `n` (strictly positive entries).
+pub fn gen_simplex(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.exp1() + 1e-9).collect();
+    let s: f64 = v.iter().sum();
+    for x in &mut v {
+        *x /= s;
+    }
+    v
+}
+
+/// Assert two floats are close; returns an `Err` usable inside `check`.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !≈ {b} (tol {tol})"))
+    }
+}
+
+/// Assert a ≤ b + slack.
+pub fn leq(a: f64, b: f64, slack: f64) -> Result<(), String> {
+    if a <= b + slack {
+        Ok(())
+    } else {
+        Err(format!("{a} > {b} (+{slack})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("square nonneg", &Config::cases(32), |rng| {
+            let x = rng.normal();
+            leq(0.0, x * x, 0.0)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failure() {
+        check("always fails", &Config::cases(3), |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn replay_reproduces_case() {
+        // The same (seed, case) pair must generate identical values.
+        let mut seen = Vec::new();
+        check("record", &Config { cases: 4, base_seed: 99 }, |rng| {
+            seen.push(rng.next_u64());
+            Ok(())
+        });
+        let mut again = Vec::new();
+        for case in 0..4 {
+            let _ = replay(99, case, |rng| {
+                again.push(rng.next_u64());
+                Ok(())
+            });
+        }
+        assert_eq!(seen, again);
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut rng = Pcg64::new(1);
+        assert_eq!(gen_vec(&mut rng, 5, 0.0, 1.0).len(), 5);
+        let sizes = gen_group_sizes(&mut rng, 4, 7);
+        assert_eq!(sizes.len(), 4);
+        assert!(sizes.iter().all(|&s| (1..=7).contains(&s)));
+        let off = offsets_from_sizes(&sizes);
+        assert_eq!(off.len(), 5);
+        assert_eq!(off[0], 0);
+        assert_eq!(off[4], sizes.iter().sum::<usize>());
+        let p = gen_simplex(&mut rng, 6);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn close_and_leq() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1.0, 2.0, 1e-9).is_err());
+        assert!(leq(1.0, 2.0, 0.0).is_ok());
+        assert!(leq(2.0, 1.0, 0.5).is_err());
+    }
+}

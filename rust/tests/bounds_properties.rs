@@ -1,0 +1,239 @@
+//! Property-based tests of the screening bounds (Lemmas 1–6) and the
+//! soft-threshold conjugate machinery, using the in-repo proptest-lite
+//! harness on randomized problem instances, iterates and snapshots.
+
+use grpot::linalg::Mat;
+use grpot::ot::dual::{exact_z, DualOracle, DualParams, OtProblem};
+use grpot::ot::screening::ScreeningOracle;
+use grpot::rng::Pcg64;
+use grpot::testing::{check, gen_group_sizes, offsets_from_sizes, Config};
+
+/// Build a random ragged-group problem.
+fn random_problem(rng: &mut Pcg64) -> OtProblem {
+    let l = 1 + rng.below(5);
+    let sizes = gen_group_sizes(rng, l, 6);
+    let m: usize = sizes.iter().sum();
+    let n = 1 + rng.below(8);
+    let mut labels = Vec::with_capacity(m);
+    for (g, &s) in sizes.iter().enumerate() {
+        labels.extend(std::iter::repeat(g).take(s));
+    }
+    let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+    OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+}
+
+/// Manual recomputation of both bounds for one (l, j) pair.
+struct ManualBounds {
+    upper: f64,
+    lower: f64,
+    z: f64,
+}
+
+fn manual_bounds(
+    prob: &OtProblem,
+    snap_x: &[f64],
+    x: &[f64],
+    l: usize,
+    j: usize,
+) -> ManualBounds {
+    let m = prob.m();
+    let (alpha, beta) = x.split_at(m);
+    let (s_alpha, s_beta) = snap_x.split_at(m);
+    let c_j = prob.cost_t.row(j);
+    let range = prob.groups.range(l);
+    let sqrt_g = prob.groups.sqrt_sizes[l];
+
+    // Snapshot quantities (Definitions 1–2).
+    let mut z_tilde_sq = 0.0;
+    let mut k_tilde_sq = 0.0;
+    let mut o_tilde_sq = 0.0;
+    for i in range.clone() {
+        let f = s_alpha[i] + s_beta[j] - c_j[i];
+        k_tilde_sq += f * f;
+        if f > 0.0 {
+            z_tilde_sq += f * f;
+        } else {
+            o_tilde_sq += f * f;
+        }
+    }
+    // Deltas.
+    let (mut dp_sq, mut dn_sq, mut dd_sq) = (0.0, 0.0, 0.0);
+    for i in range.clone() {
+        let d = alpha[i] - s_alpha[i];
+        dd_sq += d * d;
+        if d > 0.0 {
+            dp_sq += d * d;
+        } else {
+            dn_sq += d * d;
+        }
+    }
+    let db = beta[j] - s_beta[j];
+    let upper = z_tilde_sq.sqrt() + dp_sq.sqrt() + sqrt_g * db.max(0.0);
+    let lower = k_tilde_sq.sqrt()
+        - dd_sq.sqrt()
+        - sqrt_g * db.abs()
+        - o_tilde_sq.sqrt()
+        - dn_sq.sqrt()
+        - sqrt_g * (-db).max(0.0);
+    let z = exact_z(alpha, beta[j], c_j, range);
+    ManualBounds { upper, lower, z }
+}
+
+#[test]
+fn lemma1_upper_bound_dominates_z() {
+    check("z̄ ≥ z (Lemma 1)", &Config::cases(100), |rng| {
+        let prob = random_problem(rng);
+        let dim = prob.dim();
+        let snap_x: Vec<f64> = (0..dim).map(|_| rng.uniform(-0.6, 0.8)).collect();
+        let x: Vec<f64> = snap_x.iter().map(|&v| v + rng.uniform(-0.3, 0.3)).collect();
+        for l in 0..prob.groups.num_groups() {
+            for j in 0..prob.n() {
+                let b = manual_bounds(&prob, &snap_x, &x, l, j);
+                if b.upper < b.z - 1e-12 {
+                    return Err(format!("upper {} < z {} at (l={l}, j={j})", b.upper, b.z));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lemma4_lower_bound_below_z() {
+    check("z̲ ≤ z (Lemma 4)", &Config::cases(100), |rng| {
+        let prob = random_problem(rng);
+        let dim = prob.dim();
+        let snap_x: Vec<f64> = (0..dim).map(|_| rng.uniform(-0.6, 0.8)).collect();
+        let x: Vec<f64> = snap_x.iter().map(|&v| v + rng.uniform(-0.3, 0.3)).collect();
+        for l in 0..prob.groups.num_groups() {
+            for j in 0..prob.n() {
+                let b = manual_bounds(&prob, &snap_x, &x, l, j);
+                if b.lower > b.z + 1e-12 {
+                    return Err(format!("lower {} > z {} at (l={l}, j={j})", b.lower, b.z));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn theorem3_upper_bound_exact_at_snapshot() {
+    check("z̄ = z at Δ = 0 (Theorem 3)", &Config::cases(60), |rng| {
+        let prob = random_problem(rng);
+        let dim = prob.dim();
+        let x: Vec<f64> = (0..dim).map(|_| rng.uniform(-0.6, 0.8)).collect();
+        for l in 0..prob.groups.num_groups() {
+            for j in 0..prob.n() {
+                let b = manual_bounds(&prob, &x, &x, l, j);
+                if (b.upper - b.z).abs() > 1e-12 {
+                    return Err(format!("|z̄−z| = {} ≠ 0 at snapshot", (b.upper - b.z).abs()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corollary1_lower_bound_exact_for_signed_f() {
+    // When f_[l] is all-positive or all-negative at the snapshot AND the
+    // iterate hasn't moved, ε̲ = 0 (Corollary 1).
+    check("ε̲ = 0 for one-signed f (Corollary 1)", &Config::cases(60), |rng| {
+        let l = 1 + rng.below(3);
+        let sizes = gen_group_sizes(rng, l, 5);
+        let offsets = offsets_from_sizes(&sizes);
+        let m = *offsets.last().unwrap();
+        let n = 1 + rng.below(4);
+        let mut labels = Vec::new();
+        for (g, &s) in sizes.iter().enumerate() {
+            labels.extend(std::iter::repeat(g).take(s));
+        }
+        // Build a cost so f = α + β_j − c has one sign per group.
+        let positive_group: Vec<bool> = (0..l).map(|_| rng.f64() < 0.5).collect();
+        let mut group_of_row = Vec::new();
+        for (g, &s) in sizes.iter().enumerate() {
+            group_of_row.extend(std::iter::repeat(g).take(s));
+        }
+        let cost = Mat::from_fn(m, n, |i, _| {
+            if positive_group[group_of_row[i]] {
+                0.0 // f = α + β ≥ 0 (α, β chosen positive below)
+            } else {
+                10.0 // f strongly negative
+            }
+        });
+        let prob = OtProblem::from_parts(
+            vec![1.0 / m as f64; m],
+            vec![1.0 / n as f64; n],
+            &cost,
+            &labels,
+        );
+        let x: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(0.1, 1.0)).collect();
+        for l in 0..prob.groups.num_groups() {
+            for j in 0..prob.n() {
+                let b = manual_bounds(&prob, &x, &x, l, j);
+                if (b.z - b.lower).abs() > 1e-12 {
+                    return Err(format!(
+                        "ε̲ = {} ≠ 0 for one-signed group (l={l}, j={j})",
+                        (b.z - b.lower).abs()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn screened_oracle_never_diverges_from_dense_under_random_walks() {
+    check("screened == dense along random walks", &Config::cases(40), |rng| {
+        let prob = random_problem(rng);
+        let params = DualParams::new(rng.uniform(0.05, 3.0), rng.uniform(0.0, 0.95));
+        let mut oracle = ScreeningOracle::new(&prob, params, rng.f64() < 0.5);
+        let mut x = vec![0.0; prob.dim()];
+        for _ in 0..6 {
+            for v in x.iter_mut() {
+                *v += rng.uniform(-0.25, 0.3);
+            }
+            if rng.f64() < 0.3 {
+                oracle.refresh(&x);
+            }
+            let mut g1 = vec![0.0; prob.dim()];
+            let f1 = grpot::ot::dual::DualOracle::eval(&mut oracle, &x, &mut g1);
+            let mut g2 = vec![0.0; prob.dim()];
+            let (f2, _) = grpot::ot::dual::eval_dense(&prob, &params, &x, &mut g2);
+            if f1 != f2 {
+                return Err(format!("objective: {f1} != {f2}"));
+            }
+            if g1 != g2 {
+                return Err("gradient mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn skipped_groups_are_exactly_zero_in_dense_plan() {
+    // Whatever the screening skips must be a zero group in the dense
+    // plan — the safety property.
+    check("skips are safe", &Config::cases(40), |rng| {
+        let prob = random_problem(rng);
+        let params = DualParams::new(rng.uniform(0.5, 5.0), rng.uniform(0.3, 0.9));
+        let tau = params.tau();
+        let snap_x: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.4, 0.6)).collect();
+        let x: Vec<f64> = snap_x.iter().map(|&v| v + rng.uniform(-0.2, 0.2)).collect();
+        for l in 0..prob.groups.num_groups() {
+            for j in 0..prob.n() {
+                let b = manual_bounds(&prob, &snap_x, &x, l, j);
+                if b.upper <= tau && b.z > tau {
+                    return Err(format!(
+                        "unsafe skip: upper {} ≤ τ {} but z {} > τ",
+                        b.upper, tau, b.z
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,118 @@
+//! Dataset-family integration tests: generator contracts the solver
+//! relies on, across all four evaluation families.
+
+use grpot::data::{digits, faces, objects, synthetic};
+use grpot::eval;
+use grpot::ot::dual::OtProblem;
+use grpot::testing::{check, Config};
+
+#[test]
+fn synthetic_matches_paper_construction() {
+    check("synthetic construction", &Config::cases(10), |rng| {
+        let l = 1 + rng.below(8);
+        let g = 1 + rng.below(12);
+        let pair = synthetic::controlled(l, g, rng.next_u64());
+        if pair.source.len() != l * g || pair.target.len() != l * g {
+            return Err("n = m = |L|·g violated".into());
+        }
+        if pair.source.dim() != 2 {
+            return Err("d must be 2".into());
+        }
+        // Every class is present with exactly g members on both domains.
+        for ds in [&pair.source, &pair.target] {
+            for class in 0..l {
+                let count = ds.labels.iter().filter(|&&y| y == class).count();
+                if count != g {
+                    return Err(format!("class {class} has {count} != {g} members"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn problems_have_uniform_marginals_and_normalized_costs() {
+    let pairs = vec![
+        synthetic::controlled(4, 5, 1),
+        digits::usps_to_mnist(50, 2),
+        faces::all_tasks(0.03, 3).into_iter().next().unwrap(),
+        objects::all_tasks(0.1, 4).into_iter().next().unwrap(),
+    ];
+    for pair in pairs {
+        let prob = OtProblem::from_dataset(&pair);
+        let sa: f64 = prob.a.iter().sum();
+        let sb: f64 = prob.b.iter().sum();
+        assert!((sa - 1.0).abs() < 1e-12, "{}: source marginal {sa}", pair.task_name());
+        assert!((sb - 1.0).abs() < 1e-12, "{}: target marginal {sb}", pair.task_name());
+        assert!(prob.cost_t.max_abs() <= 1.0 + 1e-12, "{}: cost not normalized", pair.task_name());
+        assert!(prob.cost_t.as_slice().iter().all(|&c| c >= 0.0));
+        // Group structure covers all source samples.
+        assert_eq!(prob.groups.num_samples(), prob.m());
+        assert_eq!(prob.groups.num_groups(), pair.source.num_classes());
+    }
+}
+
+#[test]
+fn faces_all_twelve_tasks_consistent_identities() {
+    let tasks = faces::all_tasks(0.03, 0xDD);
+    assert_eq!(tasks.len(), 12);
+    for t in &tasks {
+        assert_eq!(t.source.num_classes(), 68);
+        assert_eq!(t.target.num_classes(), 68);
+        assert_eq!(t.source.dim(), 1024);
+    }
+}
+
+#[test]
+fn objects_sizes_proportional_to_paper() {
+    let tasks = objects::all_tasks(1.0, 0xEE);
+    let sizes: std::collections::BTreeSet<usize> =
+        tasks.iter().map(|t| t.source.len()).collect();
+    assert_eq!(
+        sizes,
+        [1123usize, 958, 295, 157].into_iter().collect(),
+        "paper's Caltech/Amazon/Webcam/DSLR sizes"
+    );
+}
+
+#[test]
+fn adaptation_is_learnable_on_every_family() {
+    // OTDA must beat chance (1/#classes) clearly on each family — the
+    // datasets must carry transferable class structure.
+    let cases: Vec<(grpot::data::DomainPair, f64)> = vec![
+        (synthetic::controlled(5, 10, 0xAB), 0.2),
+        (digits::usps_to_mnist(150, 0xAC), 0.1),
+        (faces::all_tasks(0.05, 0xAD).into_iter().next().unwrap(), 1.0 / 68.0),
+        (objects::all_tasks(0.3, 0xAE).into_iter().next().unwrap(), 0.1),
+    ];
+    for (pair, chance) in cases {
+        let prob = OtProblem::from_dataset(&pair);
+        let cfg = grpot::ot::fastot::FastOtConfig {
+            gamma: 0.05,
+            rho: 0.5,
+            ..Default::default()
+        };
+        let res = grpot::ot::fastot::solve_fast_ot(&prob, &cfg);
+        let plan = grpot::ot::plan::recover_plan(&prob, &cfg.params(), &res.x);
+        let acc = eval::otda_accuracy(&pair, &prob, &plan);
+        assert!(
+            acc > 2.5 * chance,
+            "{}: OTDA accuracy {acc} too close to chance {chance}",
+            pair.task_name()
+        );
+    }
+}
+
+#[test]
+fn generators_deterministic_and_seed_sensitive() {
+    let a = digits::usps_to_mnist(30, 7);
+    let b = digits::usps_to_mnist(30, 7);
+    let c = digits::usps_to_mnist(30, 8);
+    assert_eq!(a.source.x.as_slice(), b.source.x.as_slice());
+    assert_ne!(a.source.x.as_slice(), c.source.x.as_slice());
+
+    let fa = faces::all_tasks(0.03, 9);
+    let fb = faces::all_tasks(0.03, 9);
+    assert_eq!(fa[0].source.x.as_slice(), fb[0].source.x.as_slice());
+}

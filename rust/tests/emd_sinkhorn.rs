@@ -1,0 +1,163 @@
+//! Cross-validation of the three OT solvers: exact network simplex,
+//! entropic Sinkhorn and the regularized dual — they must agree in the
+//! appropriate limits.
+
+use grpot::linalg::Mat;
+use grpot::ot::dual::OtProblem;
+use grpot::ot::emd::emd;
+use grpot::ot::fastot::{solve_fast_ot, FastOtConfig};
+use grpot::ot::plan::recover_plan;
+use grpot::ot::semidual::solve_semidual;
+use grpot::ot::sinkhorn::sinkhorn_log;
+use grpot::rng::Pcg64;
+use grpot::solvers::lbfgs::LbfgsOptions;
+use grpot::testing::{check, gen_simplex, Config};
+
+#[test]
+fn sinkhorn_approaches_emd_as_reg_vanishes() {
+    check("sinkhorn → emd", &Config::cases(15), |rng| {
+        let m = 2 + rng.below(5);
+        let n = 2 + rng.below(5);
+        let a = gen_simplex(rng, m);
+        let b = gen_simplex(rng, n);
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+        let exact = emd(&a, &b, &cost);
+        let coarse = sinkhorn_log(&a, &b, &cost, 0.1, 3000, 1e-10);
+        let fine = sinkhorn_log(&a, &b, &cost, 0.005, 6000, 1e-10);
+        // Entropic cost must upper-bound the LP and tighten with ε.
+        if fine.transport_cost < exact.cost - 1e-6 {
+            return Err(format!(
+                "entropic beats exact LP: {} < {}",
+                fine.transport_cost, exact.cost
+            ));
+        }
+        if fine.transport_cost > coarse.transport_cost + 1e-6 {
+            return Err(format!(
+                "smaller ε should tighten: {} vs {}",
+                fine.transport_cost, coarse.transport_cost
+            ));
+        }
+        if (fine.transport_cost - exact.cost).abs() > 0.05 {
+            return Err(format!(
+                "ε=0.005 still far from LP: {} vs {}",
+                fine.transport_cost, exact.cost
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn regularized_dual_cost_approaches_emd_for_small_gamma() {
+    let mut rng = Pcg64::new(0xE3D);
+    let m = 12;
+    let n = 10;
+    let a = vec![1.0 / m as f64; m];
+    let b = vec![1.0 / n as f64; n];
+    let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+    let labels: Vec<usize> = (0..m).map(|i| i / 4).collect();
+    let prob = OtProblem::from_parts(a.clone(), b.clone(), &cost, &labels);
+    let exact = emd(&a, &b, &cost);
+
+    let cost_at = |gamma: f64| {
+        let cfg = FastOtConfig {
+            gamma,
+            rho: 0.3,
+            lbfgs: LbfgsOptions { max_iters: 3000, gtol: 1e-9, ftol: 1e-15, ..Default::default() },
+            ..Default::default()
+        };
+        let res = solve_fast_ot(&prob, &cfg);
+        recover_plan(&prob, &cfg.params(), &res.x).transport_cost(&prob)
+    };
+    let far = cost_at(1.0);
+    let near = cost_at(1e-3);
+    // Regularized plans under-ship mass at strong reg, so ⟨T,C⟩ may sit
+    // below the LP cost; convergence in γ is what we check.
+    assert!(
+        (near - exact.cost).abs() < (far - exact.cost).abs() + 1e-9,
+        "γ → 0 must approach the LP cost: far={far} near={near} exact={}",
+        exact.cost
+    );
+    assert!((near - exact.cost).abs() < 0.02, "near={near} vs exact={}", exact.cost);
+}
+
+#[test]
+fn semidual_consistent_with_full_dual_quadratic_case() {
+    let mut rng = Pcg64::new(0x5D);
+    let m = 9;
+    let n = 7;
+    let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+    let labels: Vec<usize> = (0..m).map(|i| i / 3).collect();
+    let prob = OtProblem::from_parts(
+        vec![1.0 / m as f64; m],
+        vec![1.0 / n as f64; n],
+        &cost,
+        &labels,
+    );
+    let gamma = 0.05;
+    // Full dual with ρ=0 (pure quadratic).
+    let cfg = FastOtConfig {
+        gamma,
+        rho: 0.0,
+        lbfgs: LbfgsOptions { max_iters: 3000, gtol: 1e-9, ftol: 1e-15, ..Default::default() },
+        ..Default::default()
+    };
+    let full = solve_fast_ot(&prob, &cfg);
+    let full_plan = recover_plan(&prob, &cfg.params(), &full.x);
+    // Semi-dual (exact column marginals).
+    let semi = solve_semidual(&prob, gamma, &LbfgsOptions { max_iters: 3000, ..Default::default() });
+    // Transport costs agree to the smoothing scale.
+    let c_full = full_plan.transport_cost(&prob);
+    let c_semi = {
+        let mut s = 0.0;
+        for j in 0..prob.n() {
+            let c_j = prob.cost_t.row(j);
+            for i in 0..prob.m() {
+                s += semi.plan[(i, j)] * c_j[i];
+            }
+        }
+        s
+    };
+    assert!(
+        (c_full - c_semi).abs() < 0.02,
+        "full-dual vs semi-dual transport cost: {c_full} vs {c_semi}"
+    );
+}
+
+#[test]
+fn emd_random_instances_have_valid_certificates() {
+    check("emd optimality certificates", &Config::cases(30), |rng| {
+        let m = 2 + rng.below(7);
+        let n = 2 + rng.below(7);
+        let a = gen_simplex(rng, m);
+        let b = gen_simplex(rng, n);
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 2.0));
+        let r = emd(&a, &b, &cost);
+        // Primal feasibility.
+        let rs = r.plan.row_sums();
+        for (i, (&got, &want)) in rs.iter().zip(&a).enumerate() {
+            if (got - want).abs() > 1e-7 {
+                return Err(format!("row {i} marginal {got} vs {want}"));
+            }
+        }
+        // Dual feasibility + complementary slackness.
+        for i in 0..m {
+            for j in 0..n {
+                let red = cost[(i, j)] - r.u[i] - r.v[j];
+                if red < -1e-7 {
+                    return Err(format!("dual infeasible at ({i},{j}): {red}"));
+                }
+                if r.plan[(i, j)] > 1e-8 && red.abs() > 1e-7 {
+                    return Err(format!("slackness violated at ({i},{j})"));
+                }
+            }
+        }
+        // Strong duality.
+        let dual: f64 = r.u.iter().zip(&a).map(|(&x, &y)| x * y).sum::<f64>()
+            + r.v.iter().zip(&b).map(|(&x, &y)| x * y).sum::<f64>();
+        if (dual - r.cost).abs() > 1e-6 {
+            return Err(format!("duality gap {} vs {}", dual, r.cost));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,138 @@
+//! Plan-level integration tests: feasibility, sparsity structure,
+//! duality identities and qualitative Figure-1 behaviour.
+
+use grpot::data::synthetic;
+use grpot::ot::dual::{DualParams, OtProblem};
+use grpot::ot::fastot::{solve_fast_ot, FastOtConfig};
+use grpot::ot::plan::recover_plan;
+use grpot::ot::sinkhorn::sinkhorn_log;
+use grpot::solvers::lbfgs::LbfgsOptions;
+use grpot::testing::{check, Config};
+
+fn tight_cfg(gamma: f64, rho: f64) -> FastOtConfig {
+    FastOtConfig {
+        gamma,
+        rho,
+        lbfgs: LbfgsOptions { max_iters: 2000, gtol: 1e-8, ftol: 1e-14, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn plan_nonnegative_and_marginal_feasible() {
+    check("plan feasibility", &Config::cases(12), |rng| {
+        let l = 2 + rng.below(4);
+        let g = 2 + rng.below(5);
+        let pair = synthetic::controlled(l, g, rng.next_u64());
+        let prob = OtProblem::from_dataset(&pair);
+        let gamma = [0.05, 0.5, 5.0][rng.below(3)];
+        let rho = rng.uniform(0.1, 0.9);
+        let res = solve_fast_ot(&prob, &tight_cfg(gamma, rho));
+        let plan = recover_plan(&prob, &DualParams::new(gamma, rho), &res.x);
+        if plan.t.as_slice().iter().any(|&v| v < 0.0) {
+            return Err("negative plan entry".into());
+        }
+        let (va, vb) = plan.marginal_violation(&prob);
+        if va > 0.02 || vb > 0.02 {
+            return Err(format!("marginal violation too large: ({va}, {vb})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn figure1_group_structure_vs_entropic() {
+    // The paper's Figure 1: group-sparse OT sends each target's mass
+    // from a single class; entropic OT mixes classes.
+    let pair = synthetic::controlled(4, 8, 0xF1);
+    let prob = OtProblem::from_dataset(&pair);
+    let cfg = tight_cfg(0.1, 0.8);
+    let res = solve_fast_ot(&prob, &cfg);
+    let plan = recover_plan(&prob, &cfg.params(), &res.x);
+    let pure = plan.single_class_columns(&prob, 1e-10);
+    assert!(pure > 0.9, "group-sparse plan should be near-pure: {pure}");
+
+    let ent = sinkhorn_log(&prob.a, &prob.b, &prob.cost(), 0.5, 500, 1e-9);
+    // Entropic plans are strictly positive ⇒ zero pure columns.
+    let mut ent_pure = 0;
+    for j in 0..prob.n() {
+        let mut active = 0;
+        for l in 0..prob.groups.num_groups() {
+            if prob.groups.range(l).any(|i| ent.plan[(i, j)] > 1e-10) {
+                active += 1;
+            }
+        }
+        if active == 1 {
+            ent_pure += 1;
+        }
+    }
+    assert_eq!(ent_pure, 0, "entropic plan should never be group-pure");
+}
+
+#[test]
+fn group_sparsity_monotone_in_rho() {
+    let pair = synthetic::controlled(5, 6, 0xF2);
+    let prob = OtProblem::from_dataset(&pair);
+    let mut last = -1.0;
+    for rho in [0.1, 0.5, 0.9] {
+        let cfg = tight_cfg(1.0, rho);
+        let res = solve_fast_ot(&prob, &cfg);
+        let s = recover_plan(&prob, &cfg.params(), &res.x).group_sparsity(&prob, 1e-12);
+        assert!(
+            s >= last - 0.02,
+            "group sparsity should not decrease with rho: {last} -> {s}"
+        );
+        last = s;
+    }
+    assert!(last > 0.5, "strong rho must give group sparsity, got {last}");
+}
+
+#[test]
+fn fenchel_duality_identity_at_optimum() {
+    check("Fenchel identity", &Config::cases(8), |rng| {
+        let pair = synthetic::controlled(3, 4, rng.next_u64());
+        let prob = OtProblem::from_dataset(&pair);
+        let gamma = rng.uniform(0.1, 2.0);
+        let rho = rng.uniform(0.1, 0.8);
+        let cfg = tight_cfg(gamma, rho);
+        let res = solve_fast_ot(&prob, &cfg);
+        let params = cfg.params();
+        let plan = recover_plan(&prob, &params, &res.x);
+        // At the optimum: primal = ⟨T,C⟩ + Ψ(T) and dual coincide when
+        // the marginal residuals vanish; allow solver tolerance.
+        let primal = plan.primal_objective(&prob, &params);
+        let (va, vb) = plan.marginal_violation(&prob);
+        let slack = 0.5 * (va + vb) + 1e-6; // residual-driven gap bound
+        let gap = (primal - res.dual_objective).abs();
+        if gap > slack + 1e-3 {
+            return Err(format!(
+                "duality gap {gap} too large (viol ({va}, {vb})) at gamma={gamma} rho={rho}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn transported_samples_match_class_clusters() {
+    // Barycentric mapping of each source class lands near its target
+    // class cluster (the synthetic construction aligns them on x).
+    let pair = synthetic::controlled(4, 10, 0xF3);
+    let prob = OtProblem::from_dataset(&pair);
+    let cfg = tight_cfg(0.05, 0.6);
+    let res = solve_fast_ot(&prob, &cfg);
+    let plan = recover_plan(&prob, &cfg.params(), &res.x);
+    let mapped = plan.barycentric_map(&pair.target.x);
+    // Class c's target cluster mean-x ≈ 5c, mean-y ≈ +5.
+    for l in 0..prob.groups.num_groups() {
+        let range = prob.groups.range(l);
+        let count = range.len() as f64;
+        let mean_x: f64 = range.clone().map(|i| mapped[(i, 0)]).sum::<f64>() / count;
+        let mean_y: f64 = range.map(|i| mapped[(i, 1)]).sum::<f64>() / count;
+        assert!(
+            (mean_x - 5.0 * l as f64).abs() < 1.5,
+            "class {l} mapped mean-x {mean_x}"
+        );
+        assert!((mean_y - 5.0).abs() < 1.5, "class {l} mapped mean-y {mean_y}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration: AOT JAX/Pallas artifacts loaded via PJRT must agree
+//! with the native Rust dual oracle to f64 round-off, and must drive
+//! the full solver to the same optimum.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use grpot::linalg::Mat;
+use grpot::ot::dual::{eval_dense, DualOracle, DualParams, OtProblem};
+use grpot::ot::fastot::{drive, FastOtConfig};
+use grpot::rng::Pcg64;
+use grpot::runtime::{artifact_dir, Manifest, PjrtRuntime, XlaDualOracle};
+
+fn have_artifacts() -> Option<Manifest> {
+    match Manifest::load(&artifact_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e:#} — run `make artifacts` first");
+            None
+        }
+    }
+}
+
+/// Uniform problem matching an artifact entry's shape.
+fn problem_for(l: usize, g: usize, n: usize, seed: u64) -> OtProblem {
+    let mut rng = Pcg64::new(seed);
+    let m = l * g;
+    let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+    let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+    OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+}
+
+#[test]
+fn xla_oracle_matches_rust_dense() {
+    let Some(manifest) = have_artifacts() else { return };
+    let entry = manifest
+        .entries
+        .iter()
+        .min_by_key(|e| e.m * e.n)
+        .expect("at least one artifact");
+    let (l, g, n) = (entry.num_groups, entry.group_size, entry.n);
+    let prob = problem_for(l, g, n, 77);
+    let params = DualParams::new(0.7, 0.4);
+    let runtime = PjrtRuntime::cpu().expect("pjrt cpu client");
+    let mut oracle =
+        XlaDualOracle::from_problem(&runtime, &prob, &params, &artifact_dir()).expect("load");
+
+    let mut rng = Pcg64::new(5);
+    for trial in 0..5 {
+        let x: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.5, 0.8)).collect();
+        let mut g_xla = vec![0.0; prob.dim()];
+        let f_xla = oracle.eval(&x, &mut g_xla);
+        let mut g_rust = vec![0.0; prob.dim()];
+        let (f_rust, _) = eval_dense(&prob, &params, &x, &mut g_rust);
+        assert!(
+            (f_xla - f_rust).abs() <= 1e-10 * f_rust.abs().max(1.0),
+            "trial {trial}: objective {f_xla} vs {f_rust}"
+        );
+        for (i, (a, b)) in g_xla.iter().zip(&g_rust).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-10,
+                "trial {trial}: grad[{i}] {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_oracle_drives_solver_to_same_optimum() {
+    let Some(manifest) = have_artifacts() else { return };
+    let entry = manifest
+        .entries
+        .iter()
+        .min_by_key(|e| e.m * e.n)
+        .expect("artifact");
+    let (l, g, n) = (entry.num_groups, entry.group_size, entry.n);
+    let prob = problem_for(l, g, n, 99);
+    let cfg = FastOtConfig { gamma: 0.5, rho: 0.5, ..Default::default() };
+
+    let rust_res = grpot::ot::origin::solve_origin(&prob, &cfg);
+
+    let runtime = PjrtRuntime::cpu().expect("pjrt");
+    let params = cfg.params();
+    let mut oracle =
+        XlaDualOracle::from_problem(&runtime, &prob, &params, &artifact_dir()).expect("load");
+    let xla_res = drive(&prob, &cfg, &mut oracle, "xla-origin");
+
+    // Same oracle values ⇒ same trajectory up to f64 round-off; allow a
+    // tiny slack since XLA may fuse reductions in a different order.
+    let rel = (xla_res.dual_objective - rust_res.dual_objective).abs()
+        / rust_res.dual_objective.abs().max(1.0);
+    assert!(
+        rel < 1e-8,
+        "dual objective: xla={} rust={}",
+        xla_res.dual_objective,
+        rust_res.dual_objective
+    );
+}
+
+#[test]
+fn missing_artifact_shape_is_reported() {
+    let Some(_) = have_artifacts() else { return };
+    let prob = problem_for(3, 7, 11, 1); // deliberately unmatched shape
+    let runtime = PjrtRuntime::cpu().expect("pjrt");
+    let err = XlaDualOracle::from_problem(
+        &runtime,
+        &prob,
+        &DualParams::new(1.0, 0.5),
+        &artifact_dir(),
+    )
+    .err()
+    .expect("expected an error for unmatched shape");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no artifact"), "unexpected error: {msg}");
+}
+
+#[test]
+fn non_uniform_groups_rejected() {
+    let Some(_) = have_artifacts() else { return };
+    let cost = Mat::from_fn(3, 2, |i, j| (i + j) as f64);
+    let prob = OtProblem::from_parts(
+        vec![1.0 / 3.0; 3],
+        vec![0.5, 0.5],
+        &cost,
+        &[0, 0, 1], // ragged
+    );
+    let runtime = PjrtRuntime::cpu().expect("pjrt");
+    let err = XlaDualOracle::from_problem(
+        &runtime,
+        &prob,
+        &DualParams::new(1.0, 0.5),
+        &artifact_dir(),
+    )
+    .err()
+    .expect("expected an error for ragged groups");
+    assert!(format!("{err:#}").contains("uniform"));
+}

@@ -1,0 +1,120 @@
+//! Solver integration: L-BFGS vs gradient descent on the actual OT dual,
+//! stopping behaviour, and robustness across regularization regimes.
+
+use grpot::data::synthetic;
+use grpot::ot::dual::{DualOracle, DualParams, OtProblem};
+use grpot::ot::fastot::{solve_fast_ot, FastOtConfig};
+use grpot::ot::origin::OriginOracle;
+use grpot::solvers::gd::{gradient_descent, GdOptions};
+use grpot::solvers::lbfgs::{Lbfgs, LbfgsOptions};
+use grpot::solvers::StopReason;
+use grpot::testing::{check, Config};
+
+#[test]
+fn lbfgs_and_gd_reach_same_dual_value() {
+    let pair = synthetic::controlled(3, 5, 0x501);
+    let prob = OtProblem::from_dataset(&pair);
+    let params = DualParams::new(0.5, 0.5);
+
+    let mut o1 = OriginOracle::new(&prob, params);
+    let mut lbfgs = Lbfgs::new(
+        vec![0.0; prob.dim()],
+        LbfgsOptions { max_iters: 2000, gtol: 1e-9, ftol: 1e-15, ..Default::default() },
+        &mut o1,
+    );
+    lbfgs.run(&mut o1);
+    let f_lbfgs = lbfgs.f();
+
+    let mut o2 = OriginOracle::new(&prob, params);
+    let (_, f_gd, _) = gradient_descent(
+        &mut o2,
+        vec![0.0; prob.dim()],
+        &GdOptions { max_iters: 60_000, gtol: 1e-7, ..Default::default() },
+    );
+    assert!(
+        (f_lbfgs - f_gd).abs() < 1e-4,
+        "solvers disagree: lbfgs={f_lbfgs} gd={f_gd}"
+    );
+    // L-BFGS should be far more eval-efficient.
+    assert!(o1.stats().evals * 10 < o2.stats().evals, "{} vs {}", o1.stats().evals, o2.stats().evals);
+}
+
+#[test]
+fn solver_stops_on_gradient_tolerance() {
+    let pair = synthetic::controlled(3, 4, 0x502);
+    let prob = OtProblem::from_dataset(&pair);
+    let cfg = FastOtConfig {
+        gamma: 0.5,
+        rho: 0.5,
+        lbfgs: LbfgsOptions { max_iters: 5000, gtol: 1e-7, ftol: 0.0, ..Default::default() },
+        ..Default::default()
+    };
+    let res = solve_fast_ot(&prob, &cfg);
+    assert!(
+        matches!(res.stop, StopReason::GradTol | StopReason::LineSearchFailed),
+        "{:?}",
+        res.stop
+    );
+}
+
+#[test]
+fn solver_respects_iteration_cap() {
+    let pair = synthetic::controlled(4, 6, 0x503);
+    let prob = OtProblem::from_dataset(&pair);
+    let cfg = FastOtConfig {
+        gamma: 0.001,
+        rho: 0.5,
+        lbfgs: LbfgsOptions { max_iters: 7, gtol: 0.0, ftol: 0.0, ..Default::default() },
+        ..Default::default()
+    };
+    let res = solve_fast_ot(&prob, &cfg);
+    assert!(res.iterations <= 7);
+    assert_eq!(res.stop, StopReason::MaxIters);
+}
+
+#[test]
+fn dual_objective_nondecreasing_in_iterations_budget() {
+    check("more iterations never hurt", &Config::cases(10), |rng| {
+        let pair = synthetic::controlled(3, 4, rng.next_u64());
+        let prob = OtProblem::from_dataset(&pair);
+        let gamma = rng.uniform(0.05, 2.0);
+        let rho = rng.uniform(0.1, 0.9);
+        let run = |iters: usize| {
+            let cfg = FastOtConfig {
+                gamma,
+                rho,
+                lbfgs: LbfgsOptions { max_iters: iters, ftol: 0.0, gtol: 1e-12, ..Default::default() },
+                ..Default::default()
+            };
+            solve_fast_ot(&prob, &cfg).dual_objective
+        };
+        let short = run(5);
+        let long = run(50);
+        if long < short - 1e-9 {
+            return Err(format!("objective regressed: {short} -> {long}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn extreme_hyperparameters_stay_finite() {
+    let pair = synthetic::controlled(3, 4, 0x505);
+    let prob = OtProblem::from_dataset(&pair);
+    for gamma in [1e-4, 1e4] {
+        for rho in [0.0, 0.99] {
+            let cfg = FastOtConfig {
+                gamma,
+                rho,
+                lbfgs: LbfgsOptions { max_iters: 200, ..Default::default() },
+                ..Default::default()
+            };
+            let res = solve_fast_ot(&prob, &cfg);
+            assert!(
+                res.dual_objective.is_finite(),
+                "non-finite dual at gamma={gamma} rho={rho}"
+            );
+            assert!(res.x.iter().all(|v| v.is_finite()));
+        }
+    }
+}

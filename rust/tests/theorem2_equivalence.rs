@@ -1,0 +1,109 @@
+//! Theorem 2 (exactness) integration tests: the screened solver must
+//! reproduce the dense baseline's trajectory bit-for-bit across
+//! datasets, hyperparameters, snapshot intervals and the working-set
+//! ablation.
+
+use grpot::coordinator::config::Method;
+use grpot::coordinator::sweep::run_job;
+use grpot::data::{digits, faces, objects, synthetic};
+use grpot::ot::dual::OtProblem;
+use grpot::ot::fastot::{solve_fast_ot, FastOtConfig};
+use grpot::ot::origin::solve_origin;
+use grpot::ot::plan::recover_plan;
+use grpot::solvers::lbfgs::LbfgsOptions;
+
+fn check_pair(prob: &OtProblem, gamma: f64, rho: f64, r: usize) {
+    let cfg = FastOtConfig {
+        gamma,
+        rho,
+        r,
+        lbfgs: LbfgsOptions { max_iters: 150, ..Default::default() },
+        ..Default::default()
+    };
+    let fast = solve_fast_ot(prob, &cfg);
+    let orig = solve_origin(prob, &cfg);
+    assert_eq!(
+        fast.dual_objective, orig.dual_objective,
+        "objective differs (gamma={gamma}, rho={rho}, r={r})"
+    );
+    assert_eq!(fast.x, orig.x, "solution differs (gamma={gamma}, rho={rho}, r={r})");
+    assert_eq!(fast.iterations, orig.iterations);
+    // Recovered plans identical too.
+    let params = cfg.params();
+    let pf = recover_plan(prob, &params, &fast.x);
+    let po = recover_plan(prob, &params, &orig.x);
+    assert_eq!(pf.t, po.t);
+}
+
+#[test]
+fn synthetic_grid() {
+    let pair = synthetic::controlled(6, 5, 0x7E57);
+    let prob = OtProblem::from_dataset(&pair);
+    for gamma in [0.01, 0.5, 50.0] {
+        for rho in [0.2, 0.8] {
+            check_pair(&prob, gamma, rho, 10);
+        }
+    }
+}
+
+#[test]
+fn digits_task() {
+    let pair = digits::usps_to_mnist(80, 0x7E58);
+    let prob = OtProblem::from_dataset(&pair);
+    check_pair(&prob, 0.1, 0.6, 10);
+    check_pair(&prob, 10.0, 0.4, 10);
+}
+
+#[test]
+fn faces_task_ragged_groups() {
+    // PIE domains have 68 classes with ragged group sizes after scaling.
+    let pair = faces::all_tasks(0.03, 0x7E59).into_iter().next().unwrap();
+    let prob = OtProblem::from_dataset(&pair);
+    assert!(prob.groups.num_groups() > 1);
+    check_pair(&prob, 0.5, 0.6, 10);
+}
+
+#[test]
+fn objects_task_high_dim() {
+    let pair = objects::all_tasks(0.08, 0x7E5A).into_iter().nth(5).unwrap();
+    let prob = OtProblem::from_dataset(&pair);
+    check_pair(&prob, 1.0, 0.8, 10);
+}
+
+#[test]
+fn snapshot_interval_does_not_change_result() {
+    // r only affects *when* bounds refresh, never what is computed.
+    let pair = synthetic::controlled(5, 6, 0x7E5B);
+    let prob = OtProblem::from_dataset(&pair);
+    let base = {
+        let cfg = FastOtConfig { gamma: 0.3, rho: 0.7, r: 1, ..Default::default() };
+        solve_fast_ot(&prob, &cfg)
+    };
+    for r in [2, 5, 10, 100] {
+        let cfg = FastOtConfig { gamma: 0.3, rho: 0.7, r, ..Default::default() };
+        let res = solve_fast_ot(&prob, &cfg);
+        assert_eq!(res.dual_objective, base.dual_objective, "r={r}");
+        assert_eq!(res.x, base.x, "r={r}");
+    }
+}
+
+#[test]
+fn ablation_methods_agree() {
+    let pair = synthetic::controlled(4, 8, 0x7E5C);
+    let prob = OtProblem::from_dataset(&pair);
+    let fast = run_job(&prob, Method::Fast, 0.2, 0.6, 10, 150);
+    let nows = run_job(&prob, Method::FastNoWs, 0.2, 0.6, 10, 150);
+    let orig = run_job(&prob, Method::Origin, 0.2, 0.6, 10, 150);
+    assert_eq!(fast.dual_objective, orig.dual_objective);
+    assert_eq!(nows.dual_objective, orig.dual_objective);
+    assert_eq!(fast.iterations, orig.iterations);
+}
+
+#[test]
+fn rho_zero_pure_quadratic_supported() {
+    // ρ = 0 disables the group term (threshold 0 ⇒ nothing skippable);
+    // the screened oracle must still agree with dense.
+    let pair = synthetic::controlled(3, 5, 0x7E5D);
+    let prob = OtProblem::from_dataset(&pair);
+    check_pair(&prob, 0.5, 0.0, 10);
+}
