@@ -7,11 +7,12 @@
 
 use grpot::benchlib::Summary;
 use grpot::coordinator::service::{serve, Client};
+use grpot::error::Result;
 use grpot::jsonlite::Value;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let handle = serve("127.0.0.1:0", 4)?;
     let addr = handle.addr;
     println!("service up on {addr}");
@@ -35,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             .set("method", "fast")
     };
     let first = warm.call(&req(0.1, 0.6))?;
-    anyhow::ensure!(
+    assert!(
         first.get("ok").and_then(Value::as_bool) == Some(true),
         "warmup failed: {first}"
     );

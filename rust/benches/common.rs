@@ -2,40 +2,50 @@
 //!
 //! Every bench prints the paper-style rows to stdout and persists
 //! markdown + CSV under `reports/`. Set `GRPOT_BENCH_QUICK=1` to shrink
-//! the grids (CI-sized); unset for the full paper-scale run.
+//! the grids (CI-sized); set `GRPOT_BENCH_SMOKE=1` to collapse every
+//! bench to one tiny iteration (the `scripts/ci.sh` smoke pass); unset
+//! both for the full paper-scale run.
 
-use grpot::benchlib::{quick_mode, report_dir, Table};
+// Each bench binary links this module and uses its own subset.
+#![allow(dead_code)]
+
+use grpot::benchlib::{quick_mode, report_dir, smoke_mode, Table};
 use grpot::coordinator::config::Method;
 use grpot::coordinator::sweep::run_job;
 use grpot::data::DomainPair;
 use grpot::ot::dual::OtProblem;
 
-/// The paper's γ grid (full) or a 4-point quick version.
-pub fn gamma_grid() -> Vec<f64> {
-    if quick_mode() {
-        vec![0.01, 0.1, 1.0, 10.0]
+/// Pick a size/grid by mode: smoke ≪ quick < full.
+pub fn size3<T>(smoke: T, quick: T, full: T) -> T {
+    if smoke_mode() {
+        smoke
+    } else if quick_mode() {
+        quick
     } else {
-        vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3]
+        full
     }
 }
 
-/// The paper's ρ grid (full) or a 2-point quick version.
+/// The paper's γ grid (full), a 4-point quick version, or one point in
+/// smoke mode.
+pub fn gamma_grid() -> Vec<f64> {
+    size3(
+        vec![0.1],
+        vec![0.01, 0.1, 1.0, 10.0],
+        vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
+    )
+}
+
+/// The paper's ρ grid (full), a 2-point quick version, or one point in
+/// smoke mode.
 pub fn rho_grid() -> Vec<f64> {
-    if quick_mode() {
-        vec![0.4, 0.8]
-    } else {
-        vec![0.2, 0.4, 0.6, 0.8]
-    }
+    size3(vec![0.6], vec![0.4, 0.8], vec![0.2, 0.4, 0.6, 0.8])
 }
 
 /// Solver iteration cap per job (keeps full sweeps tractable while past
 /// the convergence point for most (γ, ρ)).
 pub fn max_iters() -> usize {
-    if quick_mode() {
-        300
-    } else {
-        1000
-    }
+    size3(20, 300, 1000)
 }
 
 /// Measurement of one method on one problem at one γ (summed over the
@@ -84,7 +94,8 @@ pub fn emit_gain_table(
     stem: &str,
     blocks: &[(String, Vec<GainRow>)],
 ) {
-    let mut table = Table::new(title, &["case", "gamma", "t_origin[s]", "t_fast[s]", "gain", "thm2"]);
+    let mut table =
+        Table::new(title, &["case", "gamma", "t_origin[s]", "t_fast[s]", "gain", "thm2"]);
     for (label, rows) in blocks {
         for row in rows {
             table.row(vec![
@@ -107,8 +118,5 @@ pub fn problem_of(pair: &DomainPair) -> OtProblem {
 
 /// Standard bench banner.
 pub fn banner(name: &str) {
-    println!(
-        "== {name} ({} mode) ==",
-        if quick_mode() { "quick" } else { "full" }
-    );
+    println!("== {name} ({} mode) ==", size3("smoke", "quick", "full"));
 }

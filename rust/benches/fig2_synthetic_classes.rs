@@ -15,15 +15,18 @@ fn main() {
     let max_l: usize = std::env::var("GRPOT_FIG2_MAX_L")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(if grpot::benchlib::quick_mode() { 40 } else { 320 });
-    let class_counts: Vec<usize> =
-        [10usize, 20, 40, 80, 160, 320, 640, 1280].into_iter().filter(|&l| l <= max_l).collect();
+        .unwrap_or(size3(10, 40, 320));
+    let class_counts: Vec<usize> = [10usize, 20, 40, 80, 160, 320, 640, 1280]
+        .into_iter()
+        .filter(|&l| l <= max_l)
+        .collect();
     let gammas = gamma_grid();
     let rhos = rho_grid();
 
+    let g = size3(3, 10, 10);
     let mut blocks = Vec::new();
     for &l in &class_counts {
-        let pair = synthetic::controlled_classes(l, 10, 0xF162);
+        let pair = synthetic::controlled_classes(l, g, 0xF162);
         let prob = problem_of(&pair);
         println!("|L|={l} (m=n={}) …", prob.m());
         let rows = gain_sweep(&prob, &gammas, &rhos, 10);
@@ -40,10 +43,14 @@ fn main() {
     );
 
     // Shape check: the best per-|L| gain should not shrink as |L| grows.
-    let best_gain = |rows: &Vec<GainRow>| rows.iter().map(|r| r.gain).fold(0.0f64, f64::max);
+    let best_gain = |rows: &[GainRow]| rows.iter().map(|r| r.gain).fold(0.0f64, f64::max);
     let first = best_gain(&blocks.first().unwrap().1);
     let last = best_gain(&blocks.last().unwrap().1);
-    println!("best gain at |L|={}: {first:.2}x → at |L|={}: {last:.2}x", class_counts[0], class_counts[class_counts.len()-1]);
+    println!(
+        "best gain at |L|={}: {first:.2}x → at |L|={}: {last:.2}x",
+        class_counts[0],
+        class_counts[class_counts.len() - 1]
+    );
     if last < first {
         println!("WARNING: gain did not grow with |L| (expected paper shape)");
     }

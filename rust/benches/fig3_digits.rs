@@ -10,7 +10,7 @@ use grpot::data::digits;
 
 fn main() {
     banner("fig3: digit adaptation tasks");
-    let samples = if grpot::benchlib::quick_mode() { 600 } else { 1500 };
+    let samples = size3(40, 600, 1500);
     let gammas = gamma_grid();
     let rhos = rho_grid();
 

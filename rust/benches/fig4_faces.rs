@@ -12,12 +12,13 @@ fn main() {
     // Gains need non-trivial per-class group sizes (paper: g ≈ 24–49);
     // below ~0.1 the screening overhead dominates tiny g ≈ 2 groups and
     // gains drop under 1× — see EXPERIMENTS.md §Fig4.
-    let scale = if grpot::benchlib::quick_mode() { 0.1 } else { 0.3 };
+    let scale = size3(0.03, 0.1, 0.3);
+    let tasks = size3(2, 12, 12);
     let gammas = gamma_grid();
     let rhos = rho_grid();
 
     let mut blocks = Vec::new();
-    for pair in faces::all_tasks(scale, 0xF164) {
+    for pair in faces::all_tasks(scale, 0xF164).into_iter().take(tasks) {
         let prob = problem_of(&pair);
         println!("task {} (m={}, n={}) …", pair.task_name(), prob.m(), prob.n());
         let rows = gain_sweep(&prob, &gammas, &rhos, 10);

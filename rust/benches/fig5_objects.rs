@@ -9,12 +9,13 @@ use grpot::data::objects;
 
 fn main() {
     banner("fig5: Caltech-Office object tasks");
-    let scale = if grpot::benchlib::quick_mode() { 0.15 } else { 0.4 };
+    let scale = size3(0.05, 0.15, 0.4);
+    let tasks = size3(2, 12, 12);
     let gammas = gamma_grid();
     let rhos = rho_grid();
 
     let mut blocks = Vec::new();
-    for pair in objects::all_tasks(scale, 0xF165) {
+    for pair in objects::all_tasks(scale, 0xF165).into_iter().take(tasks) {
         let prob = problem_of(&pair);
         println!("task {} (m={}, n={}) …", pair.task_name(), prob.m(), prob.n());
         let rows = gain_sweep(&prob, &gammas, &rhos, 10);

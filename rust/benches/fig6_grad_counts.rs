@@ -14,7 +14,7 @@ use grpot::data::digits;
 
 fn main() {
     banner("fig6: gradient-computation counts per rho");
-    let samples = if grpot::benchlib::quick_mode() { 400 } else { 1000 };
+    let samples = size3(60, 400, 1000);
     let pair = digits::mnist_to_usps(samples, 0xF166);
     let prob = problem_of(&pair);
     let gamma = 0.1;
@@ -40,9 +40,12 @@ fn main() {
     }
     table.emit(&report_dir(), "fig6_grad_counts");
 
-    // Shape: the computed fraction shrinks as rho grows.
-    assert!(
-        fractions.last().unwrap().1 <= fractions.first().unwrap().1,
-        "fraction should shrink with rho: {fractions:?}"
-    );
+    // Shape: the computed fraction shrinks as rho grows. Too noisy to
+    // assert on the one-iteration smoke run.
+    if !grpot::benchlib::smoke_mode() {
+        assert!(
+            fractions.last().unwrap().1 <= fractions.first().unwrap().1,
+            "fraction should shrink with rho: {fractions:?}"
+        );
+    }
 }

@@ -9,11 +9,7 @@ use grpot::data::synthetic;
 
 fn main() {
     banner("figA: gain vs samples/class");
-    let gs: Vec<usize> = if grpot::benchlib::quick_mode() {
-        vec![10, 20, 40]
-    } else {
-        vec![10, 20, 40, 80, 160]
-    };
+    let gs: Vec<usize> = size3(vec![4], vec![10, 20, 40], vec![10, 20, 40, 80, 160]);
     let gammas = gamma_grid();
     let rhos = rho_grid();
 

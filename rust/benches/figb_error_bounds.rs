@@ -15,13 +15,13 @@ use grpot::solvers::lbfgs::LbfgsOptions;
 
 fn main() {
     banner("figB: bound errors vs iteration");
-    let samples = if grpot::benchlib::quick_mode() { 300 } else { 800 };
+    let samples = size3(60, 300, 800);
     let pair = digits::mnist_to_usps(samples, 0xF16B);
     let prob = problem_of(&pair);
     let cfg = FastOtConfig {
         gamma: 0.1,
         rho: 0.8,
-        lbfgs: LbfgsOptions { max_iters: 120, ..Default::default() },
+        lbfgs: LbfgsOptions { max_iters: size3(20, 120, 120), ..Default::default() },
         ..Default::default()
     };
     let (res, traces) = solve_fast_ot_traced(&prob, &cfg);
@@ -40,12 +40,15 @@ fn main() {
     }
     table.emit(&report_dir(), "figb_error_bounds");
 
-    // Shape: late upper-bound error ≪ early upper-bound error.
+    // Shape: late upper-bound error ≪ early upper-bound error. Skipped
+    // on the tiny smoke run (too few iterations for the averages).
     let early: f64 = traces.iter().take(5).map(|t| t.mean_upper_err).sum::<f64>() / 5.0;
     let late: f64 = traces.iter().rev().take(5).map(|t| t.mean_upper_err).sum::<f64>() / 5.0;
     println!("upper-bound error: early={early:.3e} late={late:.3e}");
-    assert!(
-        late <= early,
-        "upper bound must tighten as optimization converges"
-    );
+    if !grpot::benchlib::smoke_mode() && traces.len() >= 10 {
+        assert!(
+            late <= early,
+            "upper bound must tighten as optimization converges"
+        );
+    }
 }

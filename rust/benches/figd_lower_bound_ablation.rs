@@ -14,7 +14,7 @@ use grpot::data::synthetic;
 
 fn main() {
     banner("figD: lower-bound (working set) ablation");
-    let pair = synthetic::controlled_classes(10, 10, 0xF16D);
+    let pair = synthetic::controlled_classes(10, size3(3, 10, 10), 0xF16D);
     let prob = problem_of(&pair);
     let rhos = rho_grid();
     let mi = max_iters();

@@ -15,7 +15,7 @@ use grpot::rng::Pcg64;
 
 fn main() {
     banner("hotpath microbench");
-    let l = if grpot::benchlib::quick_mode() { 40 } else { 160 };
+    let l = size3(8, 40, 160);
     let pair = synthetic::controlled_classes(l, 10, 0x407B);
     let prob = problem_of(&pair);
     println!("problem: m=n={} |L|={}", prob.m(), l);

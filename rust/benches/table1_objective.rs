@@ -12,11 +12,7 @@ use grpot::data::synthetic;
 
 fn main() {
     banner("table1: max objective origin vs ours");
-    let class_counts: Vec<usize> = if grpot::benchlib::quick_mode() {
-        vec![10, 20, 40]
-    } else {
-        vec![10, 20, 40, 80, 160]
-    };
+    let class_counts: Vec<usize> = size3(vec![4], vec![10, 20, 40], vec![10, 20, 40, 80, 160]);
     let gammas = gamma_grid();
     let rhos = rho_grid();
     let mi = max_iters();
@@ -25,8 +21,9 @@ fn main() {
         "Table 1 — max objective over all hyperparameters (synthetic)",
         &["classes", "origin", "ours", "identical"],
     );
+    let g = size3(3, 10, 10);
     for &l in &class_counts {
-        let pair = synthetic::controlled_classes(l, 10, 0x7AB1);
+        let pair = synthetic::controlled_classes(l, g, 0x7AB1);
         let prob = problem_of(&pair);
         let mut best_o = f64::NEG_INFINITY;
         let mut best_f = f64::NEG_INFINITY;

@@ -3,19 +3,36 @@
 //! evaluation and end-to-end. Quantifies the FFI + dense-vectorized
 //! trade-off and regression-tests the artifact path's performance.
 //!
-//! Skips (with a notice) when artifacts are missing.
+//! Requires the `xla` cargo feature; the default build prints a skip
+//! notice so the smoke pass can still exercise the binary. Also skips
+//! (with a notice) when artifacts are missing.
 
 mod common;
 
+#[cfg(feature = "xla")]
 use common::*;
+#[cfg(feature = "xla")]
 use grpot::benchlib::{bench_fn, report_dir, BenchOptions, Table};
+#[cfg(feature = "xla")]
 use grpot::coordinator::config::Method;
+#[cfg(feature = "xla")]
 use grpot::coordinator::sweep::run_job;
+#[cfg(feature = "xla")]
 use grpot::ot::dual::{DualOracle, DualParams};
+#[cfg(feature = "xla")]
 use grpot::ot::origin::OriginOracle;
+#[cfg(feature = "xla")]
 use grpot::rng::Pcg64;
+#[cfg(feature = "xla")]
 use grpot::runtime::{artifact_dir, Manifest, PjrtRuntime, XlaDualOracle};
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    common::banner("xla_backend: native vs AOT dense oracle");
+    println!("SKIP: built without the `xla` cargo feature — rebuild with `--features xla`");
+}
+
+#[cfg(feature = "xla")]
 fn main() {
     banner("xla_backend: native vs AOT dense oracle");
     let manifest = match Manifest::load(&artifact_dir()) {

@@ -42,11 +42,23 @@ pub fn report_dir() -> std::path::PathBuf {
     p
 }
 
-/// `1` when `GRPOT_BENCH_QUICK` is set: benches shrink their grids so the
-/// whole suite stays minutes, not hours. The full paper-scale grid runs
-/// with the env var unset.
+/// `true` when `GRPOT_BENCH_QUICK` is set: benches shrink their grids so
+/// the whole suite stays minutes, not hours. The full paper-scale grid
+/// runs with the env var unset. Smoke mode implies quick mode.
 pub fn quick_mode() -> bool {
-    std::env::var("GRPOT_BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+    smoke_mode() || env_flag("GRPOT_BENCH_QUICK")
+}
+
+/// `true` when `GRPOT_BENCH_SMOKE` is set: every bench binary runs one
+/// tiny iteration per case (problem sizes collapse, [`bench_fn`] takes a
+/// single timed sample, statistical shape assertions are skipped) so CI
+/// can exercise all bench binaries end-to-end in seconds.
+pub fn smoke_mode() -> bool {
+    env_flag("GRPOT_BENCH_SMOKE")
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v != "0").unwrap_or(false)
 }
 
 #[cfg(test)]

@@ -45,17 +45,27 @@ impl Measurement {
 /// Measure `f` under `opts`; `f` performs one complete run per call.
 /// Any setup needed per iteration belongs inside `f` before the returned
 /// closure — `f` itself is fully timed.
+///
+/// In smoke mode ([`super::smoke_mode`]) the warmup is dropped and
+/// exactly one timed iteration runs, whatever `opts` says — CI uses this
+/// to exercise every bench binary without paying for real measurements.
 pub fn bench_fn(name: &str, opts: &BenchOptions, mut f: impl FnMut()) -> Measurement {
-    for _ in 0..opts.warmup {
+    let (warmup, iters) = if super::smoke_mode() {
+        (0, 1)
+    } else {
+        (opts.warmup, opts.iters.max(1))
+    };
+    for _ in 0..warmup {
         f();
     }
     let budget_start = Instant::now();
-    let mut samples = Vec::with_capacity(opts.iters);
-    for i in 0..opts.iters.max(1) {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
         let t = Instant::now();
         f();
         samples.push(t.elapsed().as_secs_f64());
-        if i + 1 >= 1 && budget_start.elapsed().as_secs_f64() > opts.max_seconds {
+        // At least one timed sample is always kept; stop once over budget.
+        if budget_start.elapsed().as_secs_f64() > opts.max_seconds {
             break;
         }
     }

@@ -167,11 +167,9 @@ impl App {
                     Some((n, v)) => (n.to_string(), Some(v.to_string())),
                     None => (stripped.to_string(), None),
                 };
-                let spec = self
-                    .args
-                    .iter()
-                    .find(|a| a.name == name)
-                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help())))?;
+                let spec = self.args.iter().find(|a| a.name == name).ok_or_else(|| {
+                    CliError(format!("unknown option --{name}\n\n{}", self.help()))
+                })?;
                 if spec.takes_value {
                     let v = match inline_val {
                         Some(v) => v,

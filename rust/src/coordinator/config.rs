@@ -1,7 +1,8 @@
 //! Experiment configuration: JSON-file and flag-friendly structs.
 
+use crate::err;
+use crate::error::{Context, Result};
 use crate::jsonlite::{self, Value};
-use anyhow::{anyhow, Context, Result};
 
 /// Which solver backend a job uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,9 +33,33 @@ impl Method {
             "fast-nows" | "nows" => Ok(Method::FastNoWs),
             "origin" | "baseline" => Ok(Method::Origin),
             "xla-origin" | "xla" => Ok(Method::XlaOrigin),
-            other => Err(anyhow!(
+            other => Err(err!(
                 "unknown method '{other}' (expected fast|fast-nows|origin|xla-origin)"
             )),
+        }
+    }
+
+    /// True when this method can run in the current build: `xla-origin`
+    /// needs the `xla` cargo feature. Entry points (CLI, sweep, TCP
+    /// service) check this so a disabled backend surfaces as a clean
+    /// error instead of a panic.
+    pub fn available(&self) -> bool {
+        match self {
+            Method::XlaOrigin => cfg!(feature = "xla"),
+            _ => true,
+        }
+    }
+
+    /// Error out unless [`Method::available`].
+    pub fn ensure_available(&self) -> Result<()> {
+        if self.available() {
+            Ok(())
+        } else {
+            Err(err!(
+                "method '{}' requires a build with the `xla` cargo feature \
+                 (rebuild with `cargo build --features xla`)",
+                self.name()
+            ))
         }
     }
 }
@@ -118,16 +143,16 @@ impl SweepConfig {
             }
         }
         if let Some(g) = v.get("gammas") {
-            cfg.gammas = g.as_f64_vec().ok_or_else(|| anyhow!("gammas must be numbers"))?;
+            cfg.gammas = g.as_f64_vec().ok_or_else(|| err!("gammas must be numbers"))?;
         }
         if let Some(rh) = v.get("rhos") {
-            cfg.rhos = rh.as_f64_vec().ok_or_else(|| anyhow!("rhos must be numbers"))?;
+            cfg.rhos = rh.as_f64_vec().ok_or_else(|| err!("rhos must be numbers"))?;
         }
         if let Some(ms) = v.get("methods").and_then(Value::as_arr) {
             cfg.methods = ms
                 .iter()
                 .map(|m| {
-                    Method::parse(m.as_str().ok_or_else(|| anyhow!("method must be string"))?)
+                    Method::parse(m.as_str().ok_or_else(|| err!("method must be string"))?)
                 })
                 .collect::<Result<_>>()?;
         }
@@ -212,6 +237,17 @@ mod tests {
         assert_eq!(back.r, 5);
         assert_eq!(back.threads, 3);
         assert_eq!(back.dataset, cfg.dataset);
+    }
+
+    #[test]
+    fn xla_availability_tracks_feature() {
+        assert!(Method::Fast.available());
+        assert!(Method::Origin.ensure_available().is_ok());
+        assert_eq!(Method::XlaOrigin.available(), cfg!(feature = "xla"));
+        if !cfg!(feature = "xla") {
+            let e = Method::XlaOrigin.ensure_available().unwrap_err();
+            assert!(e.0.contains("xla"), "{e}");
+        }
     }
 
     #[test]

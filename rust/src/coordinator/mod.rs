@@ -9,8 +9,9 @@
 //! * [`service`] — a line-delimited-JSON TCP OT service + client: submit
 //!   solve requests against named datasets, get distances and plan
 //!   statistics back. Python never runs here; artifacts built by
-//!   `make artifacts` are loaded through [`crate::runtime`] when a
-//!   request selects the `xla-origin` backend.
+//!   `make artifacts` are loaded through `crate::runtime` (requires the
+//!   `xla` cargo feature) when a request selects the `xla-origin`
+//!   backend.
 
 pub mod config;
 pub mod metrics;

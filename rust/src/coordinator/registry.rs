@@ -3,7 +3,8 @@
 
 use super::config::DatasetSpec;
 use crate::data::{digits, faces, objects, synthetic, DomainPair};
-use anyhow::{anyhow, Result};
+use crate::err;
+use crate::error::Result;
 
 /// Instantiate the dataset a spec describes.
 pub fn build_pair(spec: &DatasetSpec) -> Result<DomainPair> {
@@ -14,7 +15,7 @@ pub fn build_pair(spec: &DatasetSpec) -> Result<DomainPair> {
             match spec.param1 {
                 0 => Ok(digits::usps_to_mnist(spec.param2, spec.seed)),
                 1 => Ok(digits::mnist_to_usps(spec.param2, spec.seed)),
-                other => Err(anyhow!("digits task must be 0 or 1, got {other}")),
+                other => Err(err!("digits task must be 0 or 1, got {other}")),
             }
         }
         "faces" => {
@@ -22,16 +23,16 @@ pub fn build_pair(spec: &DatasetSpec) -> Result<DomainPair> {
             tasks
                 .into_iter()
                 .nth(spec.param1)
-                .ok_or_else(|| anyhow!("faces task index must be 0–11, got {}", spec.param1))
+                .ok_or_else(|| err!("faces task index must be 0–11, got {}", spec.param1))
         }
         "objects" => {
             let tasks = objects::all_tasks(spec.scale, spec.seed);
             tasks
                 .into_iter()
                 .nth(spec.param1)
-                .ok_or_else(|| anyhow!("objects task index must be 0–11, got {}", spec.param1))
+                .ok_or_else(|| err!("objects task index must be 0–11, got {}", spec.param1))
         }
-        other => Err(anyhow!(
+        other => Err(err!(
             "unknown dataset family '{other}' (synthetic|digits|faces|objects)"
         )),
     }

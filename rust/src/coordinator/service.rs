@@ -20,11 +20,12 @@ use super::metrics::Metrics;
 use super::registry::build_pair;
 use super::sweep::solve_full;
 use crate::data::DomainPair;
+use crate::err;
+use crate::error::{Context, Result};
 use crate::jsonlite::{self, Value};
 use crate::ot::dual::{DualParams, OtProblem};
 use crate::ot::plan::recover_plan;
 use crate::pool::Semaphore;
-use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -166,7 +167,7 @@ fn handle_conn(stream: TcpStream, state: &Arc<ServerState>) {
 }
 
 fn parse_dataset(v: &Value) -> Result<DatasetSpec> {
-    let d = v.get("dataset").ok_or_else(|| anyhow!("missing 'dataset'"))?;
+    let d = v.get("dataset").ok_or_else(|| err!("missing 'dataset'"))?;
     let mut spec = DatasetSpec::default();
     if let Some(f) = d.get("family").and_then(Value::as_str) {
         spec.family = f.to_string();
@@ -212,7 +213,7 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
     let op = req
         .get("op")
         .and_then(Value::as_str)
-        .ok_or_else(|| anyhow!("missing 'op'"))?;
+        .ok_or_else(|| err!("missing 'op'"))?;
     match op {
         "ping" => Ok(Value::obj().set("pong", true)),
         "metrics" => Ok(Value::obj().set("metrics", state.metrics.snapshot())),
@@ -225,14 +226,15 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
             let gamma = req
                 .get("gamma")
                 .and_then(Value::as_f64)
-                .ok_or_else(|| anyhow!("missing 'gamma'"))?;
+                .ok_or_else(|| err!("missing 'gamma'"))?;
             let rho = req
                 .get("rho")
                 .and_then(Value::as_f64)
-                .ok_or_else(|| anyhow!("missing 'rho'"))?;
+                .ok_or_else(|| err!("missing 'rho'"))?;
             let method = Method::parse(
                 req.get("method").and_then(Value::as_str).unwrap_or("fast"),
             )?;
+            method.ensure_available()?;
             let cached = cached_problem(state, &spec)?;
             let _permit = state.solve_gate.acquire();
             let res = solve_full(&cached.prob, method, gamma, rho, 10, 1000);
@@ -256,7 +258,7 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
             }
             Ok(v)
         }
-        other => Err(anyhow!("unknown op '{other}'")),
+        other => Err(err!("unknown op '{other}'")),
     }
 }
 
@@ -279,7 +281,7 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         if line.is_empty() {
-            return Err(anyhow!("connection closed by server"));
+            return Err(err!("connection closed by server"));
         }
         Ok(jsonlite::parse(line.trim())?)
     }

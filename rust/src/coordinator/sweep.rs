@@ -11,13 +11,13 @@
 use super::config::{Method, SweepConfig};
 use super::metrics::Metrics;
 use super::registry::build_pair;
+use crate::error::Result;
 use crate::jsonlite::Value;
 use crate::ot::dual::OtProblem;
-use crate::ot::fastot::{drive, solve_fast_ot, FastOtConfig};
+use crate::ot::fastot::{solve_fast_ot, FastOtConfig};
 use crate::ot::origin::solve_origin;
 use crate::pool::ThreadPool;
 use crate::solvers::lbfgs::LbfgsOptions;
-use anyhow::Result;
 use std::sync::{Arc, Mutex};
 
 /// One completed sweep job.
@@ -85,6 +85,7 @@ pub fn solve_full(
     match method {
         Method::Fast | Method::FastNoWs => solve_fast_ot(prob, &cfg),
         Method::Origin => solve_origin(prob, &cfg),
+        #[cfg(feature = "xla")]
         Method::XlaOrigin => {
             let runtime = crate::runtime::PjrtRuntime::cpu().expect("pjrt client");
             let params = cfg.params();
@@ -95,13 +96,28 @@ pub fn solve_full(
                 &crate::runtime::artifact_dir(),
             )
             .expect("artifact for problem shape (run `make artifacts`)");
-            drive(prob, &cfg, &mut oracle, "xla-origin")
+            crate::ot::fastot::drive(prob, &cfg, &mut oracle, "xla-origin")
         }
+        // Backstop for direct programmatic calls; every user-facing
+        // entry point rejects the method earlier via
+        // `Method::ensure_available`, so this is unreachable from the
+        // CLI, sweep and TCP-service paths.
+        #[cfg(not(feature = "xla"))]
+        Method::XlaOrigin => panic!(
+            "method 'xla-origin' needs the PJRT runtime; rebuild with `cargo build --features xla`"
+        ),
     }
 }
 
 /// Solve one (method, γ, ρ) job on a prepared problem.
-pub fn run_job(prob: &OtProblem, method: Method, gamma: f64, rho: f64, r: usize, max_iters: usize) -> SweepRecord {
+pub fn run_job(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    max_iters: usize,
+) -> SweepRecord {
     let res = solve_full(prob, method, gamma, rho, r, max_iters);
     SweepRecord {
         method,
@@ -118,6 +134,9 @@ pub fn run_job(prob: &OtProblem, method: Method, gamma: f64, rho: f64, r: usize,
 /// Run the full grid described by `cfg`. When `cfg.threads > 1`, jobs
 /// run concurrently (each job remains single-threaded).
 pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
+    for m in &cfg.methods {
+        m.ensure_available()?;
+    }
     let pair = build_pair(&cfg.dataset)?;
     let prob = Arc::new(OtProblem::from_dataset(&pair));
     let jobs: Vec<(Method, f64, f64)> = cfg

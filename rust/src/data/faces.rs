@@ -26,7 +26,8 @@ pub enum PieDomain {
 }
 
 impl PieDomain {
-    pub const ALL: [PieDomain; 4] = [PieDomain::P05, PieDomain::P07, PieDomain::P09, PieDomain::P29];
+    pub const ALL: [PieDomain; 4] =
+        [PieDomain::P05, PieDomain::P07, PieDomain::P09, PieDomain::P29];
 
     pub fn name(&self) -> &'static str {
         match self {

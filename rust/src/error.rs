@@ -1,0 +1,151 @@
+//! Minimal error substrate (`anyhow` is unavailable in this offline
+//! image).
+//!
+//! [`GrpotError`] is a string-backed error with `anyhow`-style context
+//! chaining through the [`Context`] extension trait and the [`err!`] /
+//! [`bail!`] macros. It is deliberately small: every fallible path in
+//! the crate either bubbles a message up to the CLI/service boundary or
+//! is asserted on in tests — no error needs to be matched structurally.
+
+use std::fmt;
+
+/// Crate-wide error: a human-readable message, with any causal chain
+/// already folded into the text (`"context: cause"`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GrpotError(pub String);
+
+impl GrpotError {
+    /// Build from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> GrpotError {
+        GrpotError(m.to_string())
+    }
+}
+
+impl fmt::Display for GrpotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for GrpotError {}
+
+/// Crate-wide result alias.
+pub type Result<T, E = GrpotError> = std::result::Result<T, E>;
+
+impl From<String> for GrpotError {
+    fn from(s: String) -> GrpotError {
+        GrpotError(s)
+    }
+}
+
+impl From<&str> for GrpotError {
+    fn from(s: &str) -> GrpotError {
+        GrpotError(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for GrpotError {
+    fn from(e: std::io::Error) -> GrpotError {
+        GrpotError(format!("io error: {e}"))
+    }
+}
+
+impl From<crate::jsonlite::ParseError> for GrpotError {
+    fn from(e: crate::jsonlite::ParseError) -> GrpotError {
+        GrpotError(e.to_string())
+    }
+}
+
+impl From<crate::cli::CliError> for GrpotError {
+    fn from(e: crate::cli::CliError) -> GrpotError {
+        GrpotError(e.0)
+    }
+}
+
+/// `anyhow::Context`-style extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| GrpotError(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| GrpotError(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| GrpotError(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| GrpotError(f().to_string()))
+    }
+}
+
+/// Build a [`GrpotError`] from a format string (the local `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::GrpotError(format!($($arg)*))
+    };
+}
+
+/// Return early with a [`GrpotError`] (the local `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_macros() {
+        let e = err!("bad {} at {}", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing at 7");
+        assert_eq!(format!("{e:#}"), "bad thing at 7");
+        let f = || -> Result<()> { bail!("boom {}", 1) };
+        assert_eq!(f().unwrap_err().0, "boom 1");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let e = r.context("reading config").unwrap_err();
+        assert!(e.0.starts_with("reading config: "), "{e}");
+        let n: Option<u32> = None;
+        assert_eq!(n.context("no value").unwrap_err().0, "no value");
+        let lazy: Option<u32> = None;
+        let e = lazy.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.0, "missing x");
+    }
+
+    #[test]
+    fn from_conversions() {
+        let e: GrpotError = "plain".into();
+        assert_eq!(e.0, "plain");
+        let e: GrpotError = String::from("owned").into();
+        assert_eq!(e.0, "owned");
+        let io = std::io::Error::other("io boom");
+        let e: GrpotError = io.into();
+        assert!(e.0.contains("io boom"));
+        let pe = crate::jsonlite::parse("{").unwrap_err();
+        let e: GrpotError = pe.into();
+        assert!(e.0.contains("json parse error"));
+    }
+}

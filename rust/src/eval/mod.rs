@@ -87,7 +87,7 @@ mod tests {
     #[test]
     fn accuracy_counts() {
         assert_eq!(accuracy(&[1, 2, 3], &[1, 2, 4]), 2.0 / 3.0);
-        assert_eq!(accuracy(&[], &[]).is_nan(), true);
+        assert!(accuracy(&[], &[]).is_nan());
     }
 
     #[test]

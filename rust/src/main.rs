@@ -13,6 +13,7 @@ use grpot::cli::{App, ArgSpec};
 use grpot::coordinator::config::{DatasetSpec, Method, SweepConfig};
 use grpot::coordinator::metrics::Metrics;
 use grpot::coordinator::{registry, service, sweep};
+use grpot::error::{Context, Result};
 use grpot::jsonlite::Value;
 use grpot::ot::dual::{DualParams, OtProblem};
 use grpot::ot::plan::recover_plan;
@@ -20,45 +21,60 @@ use grpot::ot::plan::recover_plan;
 fn app() -> App {
     let dataset_args = |a: App| -> App {
         a.arg(ArgSpec::opt("dataset", "synthetic|digits|faces|objects").default("synthetic"))
-            .arg(ArgSpec::opt("param1", "synthetic: #classes; digits/faces/objects: task index").default("10"))
-            .arg(ArgSpec::opt("param2", "synthetic: samples/class; digits: samples/domain").default("10"))
-            .arg(ArgSpec::opt("scale", "faces/objects: fraction of paper-size domains").default("0.1"))
+            .arg(
+                ArgSpec::opt("param1", "synthetic: #classes; digits/faces/objects: task index")
+                    .default("10"),
+            )
+            .arg(
+                ArgSpec::opt("param2", "synthetic: samples/class; digits: samples/domain")
+                    .default("10"),
+            )
+            .arg(
+                ArgSpec::opt("scale", "faces/objects: fraction of paper-size domains")
+                    .default("0.1"),
+            )
             .arg(ArgSpec::opt("seed", "dataset generation seed").default("55930"))
     };
-    App::new("grpot", "fast regularized discrete OT with group-sparse regularizers (AAAI'23 reproduction)")
-        .subcommand(dataset_args(
-            App::new("solve", "run one regularized OT solve")
-                .arg(ArgSpec::opt("gamma", "regularization strength γ").default("1.0"))
-                .arg(ArgSpec::opt("rho", "group/quadratic balance ρ ∈ [0,1)").default("0.5"))
-                .arg(ArgSpec::opt("method", "fast|fast-nows|origin|xla-origin").default("fast"))
-                .arg(ArgSpec::opt("r", "snapshot interval").default("10"))
-                .arg(ArgSpec::switch("plan-stats", "also recover the plan and print its statistics")),
-        ))
-        .subcommand(dataset_args(
-            App::new("sweep", "run the paper's hyperparameter grid")
-                .arg(ArgSpec::opt("gammas", "γ grid").default("0.001,0.01,0.1,1,10,100,1000"))
-                .arg(ArgSpec::opt("rhos", "ρ grid").default("0.2,0.4,0.6,0.8"))
-                .arg(ArgSpec::opt("methods", "comma-separated methods").default("fast,origin"))
-                .arg(ArgSpec::opt("threads", "parallel sweep workers").default("1"))
-                .arg(ArgSpec::opt("max-iters", "L-BFGS iteration cap").default("1000"))
-                .arg(ArgSpec::opt("config", "JSON config file (overrides flags)"))
-                .arg(ArgSpec::opt("out", "write the JSON report here")),
-        ))
-        .subcommand(
-            App::new("serve", "start the TCP OT service")
-                .arg(ArgSpec::opt("bind", "listen address").default("127.0.0.1:7677"))
-                .arg(ArgSpec::opt("workers", "connection worker threads").default("4")),
-        )
-        .subcommand(
-            App::new("request", "send one solve request to a running service")
-                .arg(ArgSpec::opt("addr", "service address").default("127.0.0.1:7677"))
-                .arg(ArgSpec::opt("json", "raw request JSON").required()),
-        )
-        .subcommand(
-            App::new("validate-artifacts", "compile AOT artifacts and cross-check numerics")
-                .arg(ArgSpec::opt("dir", "artifact directory").default("artifacts")),
-        )
-        .subcommand(App::new("info", "print build and runtime information"))
+    App::new(
+        "grpot",
+        "fast regularized discrete OT with group-sparse regularizers (AAAI'23 reproduction)",
+    )
+    .subcommand(dataset_args(
+        App::new("solve", "run one regularized OT solve")
+            .arg(ArgSpec::opt("gamma", "regularization strength γ").default("1.0"))
+            .arg(ArgSpec::opt("rho", "group/quadratic balance ρ ∈ [0,1)").default("0.5"))
+            .arg(ArgSpec::opt("method", "fast|fast-nows|origin|xla-origin").default("fast"))
+            .arg(ArgSpec::opt("r", "snapshot interval").default("10"))
+            .arg(ArgSpec::switch(
+                "plan-stats",
+                "also recover the plan and print its statistics",
+            )),
+    ))
+    .subcommand(dataset_args(
+        App::new("sweep", "run the paper's hyperparameter grid")
+            .arg(ArgSpec::opt("gammas", "γ grid").default("0.001,0.01,0.1,1,10,100,1000"))
+            .arg(ArgSpec::opt("rhos", "ρ grid").default("0.2,0.4,0.6,0.8"))
+            .arg(ArgSpec::opt("methods", "comma-separated methods").default("fast,origin"))
+            .arg(ArgSpec::opt("threads", "parallel sweep workers").default("1"))
+            .arg(ArgSpec::opt("max-iters", "L-BFGS iteration cap").default("1000"))
+            .arg(ArgSpec::opt("config", "JSON config file (overrides flags)"))
+            .arg(ArgSpec::opt("out", "write the JSON report here")),
+    ))
+    .subcommand(
+        App::new("serve", "start the TCP OT service")
+            .arg(ArgSpec::opt("bind", "listen address").default("127.0.0.1:7677"))
+            .arg(ArgSpec::opt("workers", "connection worker threads").default("4")),
+    )
+    .subcommand(
+        App::new("request", "send one solve request to a running service")
+            .arg(ArgSpec::opt("addr", "service address").default("127.0.0.1:7677"))
+            .arg(ArgSpec::opt("json", "raw request JSON").required()),
+    )
+    .subcommand(
+        App::new("validate-artifacts", "compile AOT artifacts and cross-check numerics")
+            .arg(ArgSpec::opt("dir", "artifact directory").default("artifacts")),
+    )
+    .subcommand(App::new("info", "print build and runtime information"))
 }
 
 fn dataset_spec(m: &grpot::cli::Matches) -> Result<DatasetSpec, grpot::cli::CliError> {
@@ -71,12 +87,13 @@ fn dataset_spec(m: &grpot::cli::Matches) -> Result<DatasetSpec, grpot::cli::CliE
     })
 }
 
-fn cmd_solve(m: &grpot::cli::Matches) -> anyhow::Result<()> {
-    let spec = dataset_spec(m).map_err(|e| anyhow::anyhow!(e.0))?;
-    let gamma = m.get_f64("gamma").map_err(|e| anyhow::anyhow!(e.0))?;
-    let rho = m.get_f64("rho").map_err(|e| anyhow::anyhow!(e.0))?;
-    let r = m.get_usize("r").map_err(|e| anyhow::anyhow!(e.0))?;
+fn cmd_solve(m: &grpot::cli::Matches) -> Result<()> {
+    let spec = dataset_spec(m)?;
+    let gamma = m.get_f64("gamma")?;
+    let rho = m.get_f64("rho")?;
+    let r = m.get_usize("r")?;
     let method = Method::parse(m.get("method").unwrap_or("fast"))?;
+    method.ensure_available()?;
     eprintln!("dataset: {}", registry::describe(&spec));
     let pair = registry::build_pair(&spec)?;
     let prob = OtProblem::from_dataset(&pair);
@@ -109,7 +126,7 @@ fn cmd_solve(m: &grpot::cli::Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(m: &grpot::cli::Matches) -> anyhow::Result<()> {
+fn cmd_sweep(m: &grpot::cli::Matches) -> Result<()> {
     let cfg = if let Some(path) = m.get("config") {
         SweepConfig::from_file(std::path::Path::new(path))?
     } else {
@@ -118,19 +135,24 @@ fn cmd_sweep(m: &grpot::cli::Matches) -> anyhow::Result<()> {
             .unwrap_or("fast,origin")
             .split(',')
             .map(|s| Method::parse(s.trim()))
-            .collect::<anyhow::Result<Vec<_>>>()?;
+            .collect::<Result<Vec<_>>>()?;
         SweepConfig {
-            dataset: dataset_spec(m).map_err(|e| anyhow::anyhow!(e.0))?,
-            gammas: m.get_f64_list("gammas").map_err(|e| anyhow::anyhow!(e.0))?,
-            rhos: m.get_f64_list("rhos").map_err(|e| anyhow::anyhow!(e.0))?,
+            dataset: dataset_spec(m)?,
+            gammas: m.get_f64_list("gammas")?,
+            rhos: m.get_f64_list("rhos")?,
             methods,
             r: 10,
-            threads: m.get_usize("threads").map_err(|e| anyhow::anyhow!(e.0))?,
-            max_iters: m.get_usize("max-iters").map_err(|e| anyhow::anyhow!(e.0))?,
+            threads: m.get_usize("threads")?,
+            max_iters: m.get_usize("max-iters")?,
         }
     };
-    eprintln!("sweep: {} | {} γ × {} ρ × {} methods",
-        registry::describe(&cfg.dataset), cfg.gammas.len(), cfg.rhos.len(), cfg.methods.len());
+    eprintln!(
+        "sweep: {} | {} γ × {} ρ × {} methods",
+        registry::describe(&cfg.dataset),
+        cfg.gammas.len(),
+        cfg.rhos.len(),
+        cfg.methods.len()
+    );
     let metrics = Metrics::new();
     let report = sweep::run_sweep(&cfg, &metrics)?;
     println!("{:>10} {:>14} {:>14} {:>8}", "gamma", "t_origin[s]", "t_fast[s]", "gain");
@@ -161,9 +183,9 @@ fn cmd_sweep(m: &grpot::cli::Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(m: &grpot::cli::Matches) -> anyhow::Result<()> {
+fn cmd_serve(m: &grpot::cli::Matches) -> Result<()> {
     let bind = m.get("bind").unwrap_or("127.0.0.1:7677");
-    let workers = m.get_usize("workers").map_err(|e| anyhow::anyhow!(e.0))?;
+    let workers = m.get_usize("workers")?;
     let handle = service::serve(bind, workers)?;
     eprintln!("grpot service listening on {}", handle.addr);
     eprintln!("send {{\"op\":\"shutdown\"}} to stop");
@@ -183,12 +205,12 @@ fn cmd_serve(m: &grpot::cli::Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_request(m: &grpot::cli::Matches) -> anyhow::Result<()> {
+fn cmd_request(m: &grpot::cli::Matches) -> Result<()> {
     let addr: std::net::SocketAddr = m
         .get("addr")
         .unwrap_or("127.0.0.1:7677")
         .parse()
-        .map_err(|e| anyhow::anyhow!("bad --addr: {e}"))?;
+        .context("bad --addr")?;
     let raw = m.get("json").expect("required");
     let req = grpot::jsonlite::parse(raw)?;
     let mut client = service::Client::connect(&addr)?;
@@ -197,7 +219,8 @@ fn cmd_request(m: &grpot::cli::Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_validate_artifacts(m: &grpot::cli::Matches) -> anyhow::Result<()> {
+#[cfg(feature = "xla")]
+fn cmd_validate_artifacts(m: &grpot::cli::Matches) -> Result<()> {
     use grpot::linalg::Mat;
     use grpot::rng::Pcg64;
     use grpot::runtime::{Manifest, PjrtRuntime, XlaDualOracle};
@@ -237,24 +260,49 @@ fn cmd_validate_artifacts(m: &grpot::cli::Matches) -> anyhow::Result<()> {
             if ok { "OK" } else { "MISMATCH" },
         );
         if !ok {
-            anyhow::bail!("artifact {} numerics mismatch", entry.name);
+            grpot::bail!("artifact {} numerics mismatch", entry.name);
         }
     }
     println!("all {} artifacts validated", manifest.entries.len());
     Ok(())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
-    println!("grpot {}", env!("CARGO_PKG_VERSION"));
-    println!("paper: Ida et al., \"Fast Regularized Discrete Optimal Transport with Group-Sparse Regularizers\", AAAI 2023");
+#[cfg(not(feature = "xla"))]
+fn cmd_validate_artifacts(_m: &grpot::cli::Matches) -> Result<()> {
+    grpot::bail!(
+        "this binary was built without the `xla` feature; \
+         rebuild with `cargo build --features xla` to validate AOT artifacts"
+    )
+}
+
+#[cfg(feature = "xla")]
+fn print_runtime_info() {
     match grpot::runtime::PjrtRuntime::cpu() {
         Ok(rt) => println!("pjrt: {} available", rt.platform()),
         Err(e) => println!("pjrt: unavailable ({e})"),
     }
     match grpot::runtime::Manifest::load(&grpot::runtime::artifact_dir()) {
-        Ok(man) => println!("artifacts: {} entries in {}", man.entries.len(), man.dir.display()),
+        Ok(man) => println!(
+            "artifacts: {} entries in {}",
+            man.entries.len(),
+            man.dir.display()
+        ),
         Err(_) => println!("artifacts: none (run `make artifacts`)"),
     }
+}
+
+#[cfg(not(feature = "xla"))]
+fn print_runtime_info() {
+    println!("pjrt: disabled (built without the `xla` cargo feature)");
+}
+
+fn cmd_info() -> Result<()> {
+    println!("grpot {}", env!("CARGO_PKG_VERSION"));
+    println!(
+        "paper: Ida et al., \"Fast Regularized Discrete Optimal Transport \
+         with Group-Sparse Regularizers\", AAAI 2023"
+    );
+    print_runtime_info();
     Ok(())
 }
 

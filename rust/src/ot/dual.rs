@@ -185,8 +185,9 @@ impl OracleStats {
 /// A (value, gradient) oracle for the negated dual, `x = [α; β]`.
 ///
 /// Implementations: [`crate::ot::origin::OriginOracle`] (dense),
-/// [`crate::ot::screening::ScreeningOracle`] (the paper's method) and
-/// [`crate::runtime::XlaDualOracle`] (AOT JAX/Pallas via PJRT).
+/// [`crate::ot::screening::ScreeningOracle`] (the paper's method) and,
+/// behind the `xla` feature, `crate::runtime::XlaDualOracle` (AOT
+/// JAX/Pallas via PJRT).
 pub trait DualOracle {
     /// Problem dimensions `(m, n)`.
     fn shape(&self) -> (usize, usize);

@@ -45,7 +45,7 @@ pub fn emd(a: &[f64], b: &[f64], cost: &Mat) -> EmdResult {
 
     // Degeneracy-breaking perturbation.
     let eps = 1e-12 * sa.max(1.0);
-    let mut supply: Vec<f64> = a.iter().map(|&x| x * (sb / sa) + eps).collect();
+    let supply: Vec<f64> = a.iter().map(|&x| x * (sb / sa) + eps).collect();
     let mut demand: Vec<f64> = b.to_vec();
     demand[n - 1] += eps * m as f64;
 
@@ -168,8 +168,6 @@ pub fn emd(a: &[f64], b: &[f64], cost: &Mat) -> EmdResult {
         }
     }
     let total_cost = plan.frobenius_dot(cost);
-    // Silence unused warnings for perturbed vectors.
-    let _ = (&mut supply, &mut demand);
     EmdResult { plan, cost: total_cost, u, v, pivots }
 }
 

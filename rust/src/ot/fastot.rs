@@ -69,7 +69,7 @@ pub struct FastOtResult {
 
 impl FastOtResult {
     /// Split the solution into (α, β) given the problem.
-    pub fn alpha_beta<'a>(&'a self, prob: &OtProblem) -> (&'a [f64], &'a [f64]) {
+    pub fn alpha_beta(&self, prob: &OtProblem) -> (&[f64], &[f64]) {
         self.x.split_at(prob.m())
     }
 }

@@ -81,8 +81,10 @@ mod tests {
         let p = tiny();
         let mut o = OriginOracle::new(&p, DualParams::new(1.0, 0.5));
         let mut g = vec![0.0; p.dim()];
-        o.eval(&vec![0.0; p.dim()], &mut g);
-        o.eval(&vec![0.1; p.dim()], &mut g);
+        let x0 = vec![0.0; p.dim()];
+        let x1 = vec![0.1; p.dim()];
+        o.eval(&x0, &mut g);
+        o.eval(&x1, &mut g);
         assert_eq!(o.stats().evals, 2);
         // 2 groups × 2 columns per eval.
         assert_eq!(o.stats().grads_computed, 8);

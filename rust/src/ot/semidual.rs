@@ -40,7 +40,7 @@ pub fn waterfill(f: &[f64], gamma: f64, mass: f64) -> (Vec<f64>, f64) {
         let cand = (cum - mass) / (idx + 1) as f64;
         // ν must satisfy sorted[idx] > ν ≥ sorted[idx+1] (support size idx+1).
         let next = if idx + 1 < m { sorted[idx + 1] } else { f64::NEG_INFINITY };
-        if cand < v && cand >= next {
+        if (next..v).contains(&cand) {
             nu = cand;
             k = idx + 1;
             break;
@@ -111,7 +111,6 @@ impl DualOracle for SemiDualOracle<'_> {
             //   D(α) = αᵀa + Σ_j min_{t≥0,1ᵀt=b_j} (c_j − α)ᵀ t + γ/2‖t‖²
             //        = αᵀa − Σ_j max_{t≥0,1ᵀt=b_j} (α − c_j)ᵀ t − γ/2‖t‖².
             semid -= val;
-            let _ = &t;
             // ∇D = a − Σ_j t_j (Danskin) ⇒ ∇(−D) = −a + Σ_j t_j.
             for (g, &ti) in grad.iter_mut().zip(&t) {
                 *g += ti;

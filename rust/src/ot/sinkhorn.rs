@@ -163,8 +163,8 @@ pub fn gcg_group_lasso(
     let mut t = sinkhorn_log(a, b, cost, eps, opts.max_inner, opts.inner_tol).plan;
     let mut obj = objective(&t);
     let mut iterations = 0;
-    for _ in 0..opts.max_outer {
-        iterations += 1;
+    for outer in 0..opts.max_outer {
+        iterations = outer + 1;
         // Linearize the group term: grad_ij = t_ij / ‖t_{[l],j}‖ (0-safe).
         let mut lin = cost.clone();
         for j in 0..n {

@@ -1,8 +1,9 @@
 //! `artifacts/manifest.json` parsing — the contract between
 //! `python/compile/aot.py` and the Rust runtime.
 
+use crate::err;
+use crate::error::{Context, Result};
 use crate::jsonlite;
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT-compiled program.
@@ -37,19 +38,19 @@ impl Manifest {
         let entries = v
             .get("entries")
             .and_then(|e| e.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?;
+            .ok_or_else(|| err!("manifest missing 'entries'"))?;
         let mut out = Vec::with_capacity(entries.len());
         for e in entries {
             let get_str = |k: &str| -> Result<String> {
                 Ok(e.get(k)
                     .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow!("entry missing '{k}'"))?
+                    .ok_or_else(|| err!("entry missing '{k}'"))?
                     .to_string())
             };
             let get_usize = |k: &str| -> Result<usize> {
                 e.get(k)
                     .and_then(|v| v.as_usize())
-                    .ok_or_else(|| anyhow!("entry missing '{k}'"))
+                    .ok_or_else(|| err!("entry missing '{k}'"))
             };
             out.push(ArtifactEntry {
                 name: get_str("name")?,
@@ -66,7 +67,12 @@ impl Manifest {
     }
 
     /// Find the dual-oracle artifact matching a problem shape.
-    pub fn find_dual_oracle(&self, num_groups: usize, group_size: usize, n: usize) -> Option<&ArtifactEntry> {
+    pub fn find_dual_oracle(
+        &self,
+        num_groups: usize,
+        group_size: usize,
+        n: usize,
+    ) -> Option<&ArtifactEntry> {
         self.entries.iter().find(|e| {
             e.kind == "dual_obj_grad"
                 && e.num_groups == num_groups

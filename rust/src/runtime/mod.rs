@@ -13,7 +13,7 @@ mod oracle;
 pub use manifest::{ArtifactEntry, Manifest};
 pub use oracle::XlaDualOracle;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// Thin wrapper over the PJRT CPU client; compile once, execute many.
 pub struct PjrtRuntime {
@@ -33,7 +33,10 @@ impl PjrtRuntime {
     }
 
     /// Load an HLO-text artifact and compile it.
-    pub fn compile_hlo_text_file(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+    pub fn compile_hlo_text_file(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().context("non-utf8 artifact path")?,
         )

@@ -3,8 +3,9 @@
 //! is backend-agnostic.
 
 use super::{Manifest, PjrtRuntime};
+use crate::err;
+use crate::error::{Context, Result};
 use crate::ot::dual::{DualOracle, DualParams, OracleStats, OtProblem};
-use anyhow::{anyhow, Context, Result};
 
 /// Dense dual oracle backed by the compiled `dual_obj_grad` artifact.
 ///
@@ -37,7 +38,7 @@ impl XlaDualOracle {
     ) -> Result<Self> {
         params.validate();
         if !prob.groups.is_uniform() {
-            return Err(anyhow!(
+            return Err(err!(
                 "XLA oracle requires uniform group sizes (got {:?}…)",
                 &prob.groups.sizes[..prob.groups.sizes.len().min(4)]
             ));
@@ -48,7 +49,7 @@ impl XlaDualOracle {
         let entry = manifest
             .find_dual_oracle(num_groups, group_size, prob.n())
             .ok_or_else(|| {
-                anyhow!(
+                err!(
                     "no artifact for (L={num_groups}, g={group_size}, n={}); \
                      available: {:?}. Regenerate with `python -m compile.aot --shapes \
                      {num_groups},{group_size},{}`",
@@ -100,8 +101,14 @@ impl XlaDualOracle {
         let result = self.exe.execute(&args).context("executing dual oracle")?;
         let lit = result[0][0].to_literal_sync().context("fetching result")?;
         let (obj, ga, gb) = lit.to_tuple3().context("unpacking 3-tuple")?;
-        let neg_obj = obj.get_first_element::<f64>()?;
-        Ok((neg_obj, ga.to_vec::<f64>()?, gb.to_vec::<f64>()?))
+        let neg_obj = obj
+            .get_first_element::<f64>()
+            .context("reading objective scalar")?;
+        Ok((
+            neg_obj,
+            ga.to_vec::<f64>().context("reading alpha gradient")?,
+            gb.to_vec::<f64>().context("reading beta gradient")?,
+        ))
     }
 }
 

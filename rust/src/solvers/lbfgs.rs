@@ -6,7 +6,7 @@
 
 use super::linesearch::{strong_wolfe, WolfeOptions};
 use super::{StepStatus, StopReason};
-use crate::linalg::{self};
+use crate::linalg;
 use crate::ot::dual::DualOracle;
 use std::collections::VecDeque;
 

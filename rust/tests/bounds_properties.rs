@@ -16,7 +16,7 @@ fn random_problem(rng: &mut Pcg64) -> OtProblem {
     let n = 1 + rng.below(8);
     let mut labels = Vec::with_capacity(m);
     for (g, &s) in sizes.iter().enumerate() {
-        labels.extend(std::iter::repeat(g).take(s));
+        labels.resize(labels.len() + s, g);
     }
     let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
     OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
@@ -147,13 +147,13 @@ fn corollary1_lower_bound_exact_for_signed_f() {
         let n = 1 + rng.below(4);
         let mut labels = Vec::new();
         for (g, &s) in sizes.iter().enumerate() {
-            labels.extend(std::iter::repeat(g).take(s));
+            labels.resize(labels.len() + s, g);
         }
         // Build a cost so f = α + β_j − c has one sign per group.
         let positive_group: Vec<bool> = (0..l).map(|_| rng.f64() < 0.5).collect();
         let mut group_of_row = Vec::new();
         for (g, &s) in sizes.iter().enumerate() {
-            group_of_row.extend(std::iter::repeat(g).take(s));
+            group_of_row.resize(group_of_row.len() + s, g);
         }
         let cost = Mat::from_fn(m, n, |i, _| {
             if positive_group[group_of_row[i]] {
@@ -199,7 +199,7 @@ fn screened_oracle_never_diverges_from_dense_under_random_walks() {
                 oracle.refresh(&x);
             }
             let mut g1 = vec![0.0; prob.dim()];
-            let f1 = grpot::ot::dual::DualOracle::eval(&mut oracle, &x, &mut g1);
+            let f1 = oracle.eval(&x, &mut g1);
             let mut g2 = vec![0.0; prob.dim()];
             let (f2, _) = grpot::ot::dual::eval_dense(&prob, &params, &x, &mut g2);
             if f1 != f2 {

@@ -105,7 +105,8 @@ fn semidual_consistent_with_full_dual_quadratic_case() {
     let full = solve_fast_ot(&prob, &cfg);
     let full_plan = recover_plan(&prob, &cfg.params(), &full.x);
     // Semi-dual (exact column marginals).
-    let semi = solve_semidual(&prob, gamma, &LbfgsOptions { max_iters: 3000, ..Default::default() });
+    let semi =
+        solve_semidual(&prob, gamma, &LbfgsOptions { max_iters: 3000, ..Default::default() });
     // Transport costs agree to the smoothing scale.
     let c_full = full_plan.transport_cost(&prob);
     let c_semi = {

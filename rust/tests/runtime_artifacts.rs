@@ -2,7 +2,10 @@
 //! with the native Rust dual oracle to f64 round-off, and must drive
 //! the full solver to the same optimum.
 //!
-//! Requires `make artifacts` (skipped with a notice otherwise).
+//! Requires the `xla` cargo feature (the whole file compiles away
+//! without it) and `make artifacts` (skipped with a notice otherwise).
+
+#![cfg(feature = "xla")]
 
 use grpot::linalg::Mat;
 use grpot::ot::dual::{eval_dense, DualOracle, DualParams, OtProblem};

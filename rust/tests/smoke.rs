@@ -1,0 +1,58 @@
+//! Build-surface smoke test: the `prelude` quickstart from `lib.rs`,
+//! end to end. This is the one test that must stay green for tier-1 to
+//! mean anything — it exercises dataset generation, problem assembly,
+//! both solvers (screened and dense), Theorem-2 equality and plan
+//! recovery without any heavier suite in the way.
+
+use grpot::ot::plan::recover_plan;
+use grpot::prelude::*;
+
+#[test]
+fn prelude_quickstart_runs_and_matches() {
+    // Two tiny class-clustered domains (the lib.rs doc example).
+    let ds = grpot::data::synthetic::controlled_classes(4, 5, 0xC0FFEE);
+    let prob = OtProblem::from_dataset(&ds);
+    assert_eq!(prob.m(), 20);
+    assert_eq!(prob.n(), 20);
+    assert_eq!(prob.groups.num_groups(), 4);
+
+    let cfg = FastOtConfig { gamma: 1.0, rho: 0.5, ..Default::default() };
+    let fast = solve_fast_ot(&prob, &cfg);
+    let origin = solve_origin(&prob, &cfg);
+
+    // Theorem 2: the screened solver reproduces the dense baseline.
+    assert!(
+        (fast.dual_objective - origin.dual_objective).abs() < 1e-9,
+        "fast={} origin={}",
+        fast.dual_objective,
+        origin.dual_objective
+    );
+    assert_eq!(fast.x, origin.x, "identical trajectories, not just objectives");
+    assert!(fast.dual_objective.is_finite());
+    assert!(fast.iterations > 0);
+
+    // The plan is recoverable and feasible-ish at this γ.
+    let plan = recover_plan(&prob, &cfg.params(), &fast.x);
+    assert!(plan.t.as_slice().iter().all(|&v| v >= 0.0 && v.is_finite()));
+    let (va, vb) = plan.marginal_violation(&prob);
+    assert!(va < 0.5 && vb < 0.5, "marginal violation ({va}, {vb})");
+}
+
+#[test]
+fn prelude_exports_are_usable() {
+    // Every prelude export referenced so the re-export list cannot rot.
+    let _mat: Mat = Mat::zeros(2, 2);
+    let mut rng = Pcg64::new(7);
+    assert!((0.0..1.0).contains(&rng.f64()));
+    let gs = GroupStructure::uniform(2, 3);
+    assert_eq!(gs.num_samples(), 6);
+    let params = DualParams::new(1.0, 0.5);
+    assert!((params.tau() - 0.5).abs() < 1e-15);
+    let opts = LbfgsOptions::default();
+    assert_eq!(opts.memory, 10);
+    let cm = {
+        let pair = grpot::data::synthetic::controlled(2, 2, 1);
+        CostMatrix::squared_euclidean(&pair)
+    };
+    assert_eq!(cm.c.shape(), (4, 4));
+}

@@ -36,7 +36,8 @@ fn lbfgs_and_gd_reach_same_dual_value() {
         "solvers disagree: lbfgs={f_lbfgs} gd={f_gd}"
     );
     // L-BFGS should be far more eval-efficient.
-    assert!(o1.stats().evals * 10 < o2.stats().evals, "{} vs {}", o1.stats().evals, o2.stats().evals);
+    let (e1, e2) = (o1.stats().evals, o2.stats().evals);
+    assert!(e1 * 10 < e2, "{e1} vs {e2}");
 }
 
 #[test]
@@ -83,7 +84,12 @@ fn dual_objective_nondecreasing_in_iterations_budget() {
             let cfg = FastOtConfig {
                 gamma,
                 rho,
-                lbfgs: LbfgsOptions { max_iters: iters, ftol: 0.0, gtol: 1e-12, ..Default::default() },
+                lbfgs: LbfgsOptions {
+                    max_iters: iters,
+                    ftol: 0.0,
+                    gtol: 1e-12,
+                    ..Default::default()
+                },
                 ..Default::default()
             };
             solve_fast_ot(&prob, &cfg).dual_objective

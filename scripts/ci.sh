@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Local CI gate — mirrors .github/workflows/ci.yml exactly:
+#
+#   1. cargo fmt --check
+#   2. cargo clippy --all-targets -- -D warnings
+#   3. cargo build --release            (tier-1, part 1)
+#   4. cargo test -q                    (tier-1, part 2)
+#   5. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
+#
+# Everything runs with default features only (zero external crate
+# dependencies — this image has no network). The `xla` feature is never
+# enabled here; its bench/test surface prints a skip notice instead.
+#
+# Usage: bash scripts/ci.sh [--no-lint]
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+NO_LINT=0
+if [[ "${1:-}" == "--no-lint" ]]; then
+    NO_LINT=1
+fi
+
+step() { echo; echo "==> $*"; }
+
+if [[ "$NO_LINT" == 0 ]]; then
+    step "cargo fmt --check"
+    cargo fmt --check
+
+    step "cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+fi
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test -q"
+cargo test -q
+
+step "bench smoke pass (GRPOT_BENCH_SMOKE=1, one tiny iteration each)"
+BENCHES=(
+    fig2_synthetic_classes
+    fig3_digits
+    fig4_faces
+    fig5_objects
+    fig6_grad_counts
+    figa_samples_per_class
+    figb_error_bounds
+    figc_grad_per_iter
+    figd_lower_bound_ablation
+    table1_objective
+    hotpath_microbench
+    xla_backend
+)
+for b in "${BENCHES[@]}"; do
+    step "bench smoke: $b"
+    GRPOT_BENCH_SMOKE=1 cargo bench --bench "$b"
+done
+
+echo
+echo "ci.sh: all gates green"
