@@ -1,0 +1,88 @@
+//! Serving-engine load bench (ours, not in the paper): closed-loop
+//! clients drive the micro-batching, warm-starting engine and we report
+//! throughput, latency percentiles and the warm-start hit rate.
+//!
+//! The workload is the repeated-(γ, ρ) scenario a serving deployment
+//! sees: cycle 1 is cold, later cycles re-request the same keys, so the
+//! dual cache must show hits and tail latency must drop. Worker-count
+//! rows expose the concurrency scaling of the engine itself.
+
+mod common;
+
+use common::{banner, size3};
+use grpot::benchlib::{report_dir, Table};
+use grpot::coordinator::config::{DatasetSpec, Method};
+use grpot::serve::loadgen::{run_load, LoadScenario};
+use grpot::serve::ServeConfig;
+use grpot::solvers::lbfgs::LbfgsOptions;
+
+fn main() {
+    banner("bench_serve: serving engine under closed-loop load");
+    let (clients, cycles) = size3((3, 2), (4, 3), (8, 5));
+    let (param1, param2) = size3((3, 4), (10, 10), (10, 30));
+    let gammas = size3(vec![0.5, 1.0], vec![0.1, 1.0], vec![0.1, 1.0, 10.0]);
+    let rhos = size3(vec![0.5, 0.8], vec![0.4, 0.8], vec![0.2, 0.4, 0.6, 0.8]);
+    let max_iters = size3(20, 200, 500);
+    let worker_rows = size3(vec![1, 2], vec![1, 4], vec![1, 2, 4, 8]);
+
+    let mut table = Table::new(
+        "bench-serve — closed-loop serving load",
+        &[
+            "workers",
+            "requests",
+            "ok",
+            "solves",
+            "thru[req/s]",
+            "p50[ms]",
+            "p95[ms]",
+            "p99[ms]",
+            "warm-hit",
+        ],
+    );
+    for workers in worker_rows {
+        let scenario = LoadScenario {
+            spec: DatasetSpec {
+                family: "synthetic".into(),
+                param1,
+                param2,
+                seed: 0xBE7C,
+                ..Default::default()
+            },
+            gammas: gammas.clone(),
+            rhos: rhos.clone(),
+            cycles,
+            clients,
+            method: Method::Fast,
+            deadline: None,
+        };
+        let cfg = ServeConfig {
+            workers,
+            lbfgs: LbfgsOptions { max_iters, ..Default::default() },
+            ..Default::default()
+        };
+        println!("\n-- {workers} worker(s), {clients} clients, {cycles} cycles --");
+        let report = run_load(cfg, &scenario);
+        report.print_summary();
+        // Hard invariants, asserted even in smoke mode: no lost
+        // responses, and the repeated workload must warm-start.
+        assert_eq!(
+            report.ok + report.rejected_queue_full + report.rejected_deadline + report.failed,
+            report.requests,
+            "lost responses"
+        );
+        assert!(report.warm_hits > 0, "repeated workload must warm-start: {report:?}");
+        assert!(report.solves <= report.requests as u64, "dedupe can only shrink work");
+        table.row(vec![
+            format!("{workers}"),
+            format!("{}", report.requests),
+            format!("{}", report.ok),
+            format!("{}", report.solves),
+            format!("{:.2}", report.throughput_rps),
+            format!("{:.2}", report.p50_ms),
+            format!("{:.2}", report.p95_ms),
+            format!("{:.2}", report.p99_ms),
+            format!("{:.1}%", 100.0 * report.warm_hit_rate),
+        ]);
+    }
+    table.emit(&report_dir(), "bench_serve");
+}

@@ -10,7 +10,7 @@ mod stats;
 mod table;
 
 pub use runner::{bench_fn, BenchOptions, Measurement};
-pub use stats::Summary;
+pub use stats::{percentile_sorted, Summary};
 pub use table::{write_csv, Table};
 
 use std::time::Instant;

@@ -90,6 +90,18 @@ impl Default for DatasetSpec {
     }
 }
 
+impl DatasetSpec {
+    /// Canonical cache key: two specs generate the same problem iff
+    /// their keys match. Used by the serving engine's problem and
+    /// warm-start caches and by the micro-batcher's coalescing rule.
+    pub fn cache_key(&self) -> String {
+        format!(
+            "{}:{}:{}:{}:{}",
+            self.family, self.param1, self.param2, self.scale, self.seed
+        )
+    }
+}
+
 /// Full sweep configuration (the paper's experimental grid).
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
@@ -248,6 +260,15 @@ mod tests {
             let e = Method::XlaOrigin.ensure_available().unwrap_err();
             assert!(e.0.contains("xla"), "{e}");
         }
+    }
+
+    #[test]
+    fn cache_key_distinguishes_specs() {
+        let a = DatasetSpec::default();
+        let mut b = a.clone();
+        assert_eq!(a.cache_key(), b.cache_key());
+        b.seed += 1;
+        assert_ne!(a.cache_key(), b.cache_key());
     }
 
     #[test]

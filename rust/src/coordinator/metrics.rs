@@ -1,19 +1,64 @@
-//! Process-wide metrics: named counters and timers with JSON snapshots.
-//! Shared across the sweep scheduler and the TCP service (all atomic /
-//! mutex-protected; cheap enough for per-request use).
+//! Process-wide metrics: named counters, timers, gauges and windowed
+//! histograms with JSON snapshots. Shared across the sweep scheduler,
+//! the serving engine and the TCP service (all atomic / mutex-protected;
+//! cheap enough for per-request use).
 
+use crate::benchlib::percentile_sorted;
 use crate::jsonlite::Value;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// A registry of counters and duration accumulators.
+/// Sliding-window size per histogram: percentiles are computed over the
+/// most recent samples only, so a long-lived service reports current
+/// tail latency, not its all-time history.
+const HIST_WINDOW: usize = 4096;
+
+/// Ring buffer of recent samples plus an all-time count.
+#[derive(Clone, Debug, Default)]
+struct Window {
+    samples: Vec<f64>,
+    next: usize,
+    total: u64,
+}
+
+impl Window {
+    fn record(&mut self, v: f64) {
+        if self.samples.len() < HIST_WINDOW {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+            self.next = (self.next + 1) % HIST_WINDOW;
+        }
+        self.total += 1;
+    }
+
+    /// Ascending copy of the window (one sort serves many percentiles).
+    fn sorted(&self) -> Option<Vec<f64>> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(sorted)
+    }
+
+    fn percentile(&self, p: f64) -> Option<f64> {
+        self.sorted().map(|s| percentile_sorted(&s, p))
+    }
+}
+
+/// A registry of counters, timers, gauges and histograms.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, AtomicU64>>,
     /// Sum of seconds and sample count per timer name.
     timers: Mutex<BTreeMap<String, (f64, u64)>>,
+    /// Last-write-wins instantaneous values (queue depth, cache bytes).
+    gauges: Mutex<BTreeMap<String, f64>>,
+    /// Recent-window sample distributions (latency percentiles).
+    hists: Mutex<BTreeMap<String, Window>>,
 }
 
 impl Metrics {
@@ -61,7 +106,42 @@ impl Metrics {
         map.get(name).map(|(s, c)| s / (*c).max(1) as f64)
     }
 
-    /// JSON snapshot of every counter and timer.
+    /// Set an instantaneous gauge value (last write wins).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Read a gauge (None when never set).
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Record a sample into a windowed histogram (for percentiles).
+    pub fn observe_hist(&self, name: &str, value: f64) {
+        let mut map = self.hists.lock().unwrap();
+        map.entry(name.to_string()).or_default().record(value);
+    }
+
+    /// Time a closure and record the duration into a histogram.
+    pub fn time_hist<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.observe_hist(name, t.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Percentile (0–100) over a histogram's recent window.
+    pub fn hist_percentile(&self, name: &str, p: f64) -> Option<f64> {
+        self.hists.lock().unwrap().get(name).and_then(|w| w.percentile(p))
+    }
+
+    /// All-time sample count of a histogram.
+    pub fn hist_count(&self, name: &str) -> u64 {
+        self.hists.lock().unwrap().get(name).map(|w| w.total).unwrap_or(0)
+    }
+
+    /// JSON snapshot of every counter, timer, gauge and histogram
+    /// (histograms report p50/p95/p99 over their recent window).
     pub fn snapshot(&self) -> Value {
         let mut counters = Value::obj();
         for (k, v) in self.counters.lock().unwrap().iter() {
@@ -77,7 +157,25 @@ impl Metrics {
                 ),
             );
         }
-        Value::obj().set("counters", counters).set("timers", timers)
+        let mut gauges = Value::obj();
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            gauges = gauges.set(k, *v);
+        }
+        let mut hists = Value::obj();
+        for (k, w) in self.hists.lock().unwrap().iter() {
+            let mut h = Value::obj().set("count", w.total);
+            if let Some(sorted) = w.sorted() {
+                for (label, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
+                    h = h.set(label, percentile_sorted(&sorted, p));
+                }
+            }
+            hists = hists.set(k, h);
+        }
+        Value::obj()
+            .set("counters", counters)
+            .set("timers", timers)
+            .set("gauges", gauges)
+            .set("hists", hists)
     }
 }
 
@@ -113,6 +211,60 @@ mod tests {
         let v = m.snapshot();
         assert_eq!(v.get_path(&["counters", "a"]).unwrap().as_usize(), Some(5));
         assert!(v.get_path(&["timers", "t", "mean_s"]).is_some());
+    }
+
+    #[test]
+    fn gauges_last_write_wins() {
+        let m = Metrics::new();
+        assert_eq!(m.gauge("depth"), None);
+        m.set_gauge("depth", 3.0);
+        m.set_gauge("depth", 7.0);
+        assert_eq!(m.gauge("depth"), Some(7.0));
+    }
+
+    #[test]
+    fn hist_percentiles_over_window() {
+        let m = Metrics::new();
+        assert_eq!(m.hist_percentile("lat", 50.0), None);
+        for i in 1..=100 {
+            m.observe_hist("lat", i as f64);
+        }
+        assert_eq!(m.hist_count("lat"), 100);
+        let p50 = m.hist_percentile("lat", 50.0).unwrap();
+        let p99 = m.hist_percentile("lat", 99.0).unwrap();
+        assert!((p50 - 50.5).abs() < 1.0, "p50={p50}");
+        assert!(p99 > 98.0 && p99 <= 100.0, "p99={p99}");
+        let out = m.time_hist("timed", || 5);
+        assert_eq!(out, 5);
+        assert_eq!(m.hist_count("timed"), 1);
+    }
+
+    #[test]
+    fn hist_window_slides() {
+        let m = Metrics::new();
+        // Overfill the window with low values, then high ones: the
+        // window must reflect recent samples.
+        for _ in 0..HIST_WINDOW {
+            m.observe_hist("w", 1.0);
+        }
+        for _ in 0..HIST_WINDOW {
+            m.observe_hist("w", 100.0);
+        }
+        assert_eq!(m.hist_count("w"), 2 * HIST_WINDOW as u64);
+        assert_eq!(m.hist_percentile("w", 50.0), Some(100.0));
+    }
+
+    #[test]
+    fn snapshot_includes_gauges_and_hists() {
+        let m = Metrics::new();
+        m.set_gauge("g", 2.5);
+        for i in 0..10 {
+            m.observe_hist("h", i as f64);
+        }
+        let v = m.snapshot();
+        assert_eq!(v.get_path(&["gauges", "g"]).unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get_path(&["hists", "h", "count"]).unwrap().as_usize(), Some(10));
+        assert!(v.get_path(&["hists", "h", "p95"]).unwrap().as_f64().unwrap() > 8.0);
     }
 
     #[test]

@@ -5,13 +5,16 @@
 //! * [`sweep`] — the hyperparameter sweep scheduler: (γ × ρ × method)
 //!   jobs over a thread pool, per-job metrics, paper-style gain
 //!   aggregation.
-//! * [`metrics`] — process-wide counters/timers with JSON snapshots.
+//! * [`metrics`] — process-wide counters/timers/gauges/histograms with
+//!   JSON snapshots (latency percentiles included).
 //! * [`service`] — a line-delimited-JSON TCP OT service + client: submit
 //!   solve requests against named datasets, get distances and plan
-//!   statistics back. Python never runs here; artifacts built by
-//!   `make artifacts` are loaded through `crate::runtime` (requires the
-//!   `xla` cargo feature) when a request selects the `xla-origin`
-//!   backend.
+//!   statistics back. Execution is delegated to the [`crate::serve`]
+//!   engine (admission control with deadlines and backpressure,
+//!   micro-batching, warm-start dual cache). Python never runs here;
+//!   artifacts built by `make artifacts` are loaded through
+//!   `crate::runtime` (requires the `xla` cargo feature) when a request
+//!   selects the `xla-origin` backend.
 
 pub mod config;
 pub mod metrics;

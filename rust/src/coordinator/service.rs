@@ -1,4 +1,6 @@
-//! TCP OT service: line-delimited JSON requests over a socket.
+//! TCP OT service: line-delimited JSON requests over a socket, executed
+//! by the [`crate::serve`] engine (admission control, micro-batching,
+//! warm-start cache).
 //!
 //! Requests (one JSON object per line):
 //!
@@ -6,44 +8,37 @@
 //! {"op": "ping"}
 //! {"op": "metrics"}
 //! {"op": "solve", "dataset": {"family": "synthetic", "param1": 10,
-//!   "param2": 10, "seed": 1}, "gamma": 1.0, "rho": 0.5, "method": "fast"}
+//!   "param2": 10, "seed": 1}, "gamma": 1.0, "rho": 0.5, "method": "fast",
+//!   "deadline_ms": 2000, "warm_start": true}
 //! {"op": "shutdown"}
 //! ```
 //!
-//! Responses: `{"ok": true, …}` or `{"ok": false, "error": "…"}`.
-//! Problems (cost matrices) are cached per dataset spec, so repeated
-//! requests against the same dataset pay generation cost once — the
-//! serving-style hot path is solver-only, with Python nowhere in sight.
+//! Responses: `{"ok": true, …}` or `{"ok": false, "error": "…"}`; engine
+//! rejections additionally carry a machine-readable `"error_kind"`
+//! (`queue_full` | `deadline_exceeded` | `shutdown` | `failed`) so
+//! clients can distinguish backpressure from bad requests. Successful
+//! solves report `warm_started`, `batch_size` and `queue_wait_s` next
+//! to the solver fields.
 
 use super::config::{DatasetSpec, Method};
 use super::metrics::Metrics;
-use super::registry::build_pair;
-use super::sweep::solve_full;
-use crate::data::DomainPair;
 use crate::err;
 use crate::error::{Context, Result};
 use crate::jsonlite::{self, Value};
-use crate::ot::dual::{DualParams, OtProblem};
+use crate::ot::dual::DualParams;
 use crate::ot::plan::recover_plan;
-use crate::pool::Semaphore;
-use std::collections::BTreeMap;
+use crate::serve::{Engine, ServeConfig, SolveRequest};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-
-struct CachedProblem {
-    pair: DomainPair,
-    prob: OtProblem,
-}
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Shared server state.
 struct ServerState {
-    metrics: Metrics,
-    cache: Mutex<BTreeMap<String, Arc<CachedProblem>>>,
+    metrics: Arc<Metrics>,
+    engine: Engine,
     stop: AtomicBool,
-    /// Caps concurrent solves (`workers` of [`serve`]).
-    solve_gate: Semaphore,
 }
 
 /// Handle to a running service.
@@ -54,43 +49,51 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Ask the server to stop and wait for it.
+    /// Ask the server to stop and wait for it (the engine drains its
+    /// queue before the workers exit).
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.state.stop.store(true, Ordering::SeqCst);
         // Unblock accept() with a dummy connection.
         let _ = TcpStream::connect(self.addr);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+        self.state.engine.shutdown();
     }
 }
 
 impl Drop for ServiceHandle {
     fn drop(&mut self) {
-        self.state.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.stop_and_join();
     }
 }
 
-/// Start the service on `bind` (use port 0 for an ephemeral port).
-/// `workers` is the connection-handling pool size.
+/// Start the service on `bind` (use port 0 for an ephemeral port) with
+/// `workers` solver threads and default engine settings.
 pub fn serve(bind: &str, workers: usize) -> Result<ServiceHandle> {
+    serve_with(bind, ServeConfig { workers: workers.max(1), ..Default::default() })
+}
+
+/// Start the service with a full engine configuration.
+pub fn serve_with(bind: &str, cfg: ServeConfig) -> Result<ServiceHandle> {
     let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
     let addr = listener.local_addr()?;
+    let metrics = Arc::new(Metrics::new());
     let state = Arc::new(ServerState {
-        metrics: Metrics::new(),
-        cache: Mutex::new(BTreeMap::new()),
+        engine: Engine::start(cfg, Arc::clone(&metrics)),
+        metrics,
         stop: AtomicBool::new(false),
-        solve_gate: Semaphore::new(workers.max(1)),
     });
     let state2 = Arc::clone(&state);
     // One thread per connection (handlers block on the socket for the
     // connection's lifetime, so a fixed pool would be starved by idle
-    // keep-alive clients). The semaphore caps *concurrent solves* at
-    // `workers` instead — that's the resource that matters.
+    // keep-alive clients). Solve concurrency is capped by the engine's
+    // worker pool; overload beyond the admission queue is rejected with
+    // a structured `queue_full` error instead of queuing unboundedly.
     let join = std::thread::Builder::new()
         .name("grpot-service".into())
         .spawn(move || {
@@ -152,6 +155,9 @@ fn handle_conn(stream: TcpStream, state: &Arc<ServerState>) {
             .metrics
             .time("service.request_seconds", || handle_request(line.trim(), state));
         let response = match response {
+            // Engine rejections arrive as objects that already carry
+            // `ok: false` + `error_kind`; don't overwrite their verdict.
+            Ok(v) if v.get("ok").is_some() => v,
             Ok(v) => v.set("ok", true),
             Err(e) => Value::obj().set("ok", false).set("error", format!("{e:#}")),
         };
@@ -187,27 +193,6 @@ fn parse_dataset(v: &Value) -> Result<DatasetSpec> {
     Ok(spec)
 }
 
-fn cached_problem(state: &Arc<ServerState>, spec: &DatasetSpec) -> Result<Arc<CachedProblem>> {
-    let key = format!(
-        "{}:{}:{}:{}:{}",
-        spec.family, spec.param1, spec.param2, spec.scale, spec.seed
-    );
-    if let Some(hit) = state.cache.lock().unwrap().get(&key) {
-        state.metrics.incr("service.cache_hits", 1);
-        return Ok(Arc::clone(hit));
-    }
-    state.metrics.incr("service.cache_misses", 1);
-    let pair = build_pair(spec)?;
-    let prob = OtProblem::from_dataset(&pair);
-    let cached = Arc::new(CachedProblem { pair, prob });
-    state
-        .cache
-        .lock()
-        .unwrap()
-        .insert(key, Arc::clone(&cached));
-    Ok(cached)
-}
-
 fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
     let req = jsonlite::parse(line).context("parsing request json")?;
     let op = req
@@ -235,9 +220,39 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
                 req.get("method").and_then(Value::as_str).unwrap_or("fast"),
             )?;
             method.ensure_available()?;
-            let cached = cached_problem(state, &spec)?;
-            let _permit = state.solve_gate.acquire();
-            let res = solve_full(&cached.prob, method, gamma, rho, 10, 1000);
+            // Clamp to [0, 1 day]: Duration::from_secs_f64 panics on
+            // non-finite/overflowing input, and a client-supplied value
+            // must never be able to kill the connection handler.
+            let deadline = req.get("deadline_ms").and_then(Value::as_f64).map(|ms| {
+                let ms = if ms.is_finite() && ms > 0.0 { ms.min(86_400_000.0) } else { 0.0 };
+                Duration::from_secs_f64(ms / 1e3)
+            });
+            let warm_start = req
+                .get("warm_start")
+                .and_then(Value::as_bool)
+                .unwrap_or(true);
+            let reply = match state.engine.submit(SolveRequest {
+                spec,
+                gamma,
+                rho,
+                method,
+                deadline,
+                warm_start,
+            }) {
+                Ok(reply) => reply,
+                Err(reject) => {
+                    let mut v = Value::obj()
+                        .set("ok", false)
+                        .set("error", reject.to_string())
+                        .set("error_kind", reject.kind());
+                    if let Some(id) = req.get("id") {
+                        v = v.set("id", id.clone());
+                    }
+                    return Ok(v);
+                }
+            };
+            let res = &reply.result;
+            let cached = &reply.problem;
             let params = DualParams::new(gamma, rho);
             let plan = recover_plan(&cached.prob, &params, &res.x);
             let acc = crate::eval::otda_accuracy(&cached.pair, &cached.prob, &plan);
@@ -252,7 +267,10 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
                 .set("transport_cost", plan.transport_cost(&cached.prob))
                 .set("group_sparsity", plan.group_sparsity(&cached.prob, 1e-12))
                 .set("plan_density", plan.density(1e-12))
-                .set("otda_accuracy", acc);
+                .set("otda_accuracy", acc)
+                .set("warm_started", reply.warm_started)
+                .set("batch_size", reply.batch_size)
+                .set("queue_wait_s", reply.queue_wait_s);
             if let Some(id) = req.get("id") {
                 v = v.set("id", id.clone());
             }

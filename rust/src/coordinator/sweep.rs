@@ -14,8 +14,7 @@ use super::registry::build_pair;
 use crate::error::Result;
 use crate::jsonlite::Value;
 use crate::ot::dual::OtProblem;
-use crate::ot::fastot::{solve_fast_ot, FastOtConfig};
-use crate::ot::origin::solve_origin;
+use crate::ot::fastot::FastOtConfig;
 use crate::pool::ThreadPool;
 use crate::solvers::lbfgs::LbfgsOptions;
 use std::sync::{Arc, Mutex};
@@ -75,16 +74,40 @@ pub fn solve_full(
     r: usize,
     max_iters: usize,
 ) -> crate::ot::fastot::FastOtResult {
+    solve_full_warm(
+        prob,
+        method,
+        gamma,
+        rho,
+        r,
+        LbfgsOptions { max_iters, ..Default::default() },
+        None,
+    )
+}
+
+/// Solve one (method, γ, ρ) job with explicit L-BFGS options and an
+/// optional warm-start iterate — the serving engine's solve entry.
+/// `x0 = None` starts from the origin exactly like [`solve_full`].
+pub fn solve_full_warm(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    lbfgs: LbfgsOptions,
+    x0: Option<&[f64]>,
+) -> crate::ot::fastot::FastOtResult {
     let cfg = FastOtConfig {
         gamma,
         rho,
         r,
         use_working_set: method != Method::FastNoWs,
-        lbfgs: LbfgsOptions { max_iters, ..Default::default() },
+        lbfgs,
     };
+    let x0 = x0.map(<[f64]>::to_vec).unwrap_or_else(|| vec![0.0; prob.dim()]);
     match method {
-        Method::Fast | Method::FastNoWs => solve_fast_ot(prob, &cfg),
-        Method::Origin => solve_origin(prob, &cfg),
+        Method::Fast | Method::FastNoWs => crate::ot::fastot::solve_fast_ot_from(prob, &cfg, x0),
+        Method::Origin => crate::ot::origin::solve_origin_from(prob, &cfg, x0),
         #[cfg(feature = "xla")]
         Method::XlaOrigin => {
             let runtime = crate::runtime::PjrtRuntime::cpu().expect("pjrt client");
@@ -96,7 +119,7 @@ pub fn solve_full(
                 &crate::runtime::artifact_dir(),
             )
             .expect("artifact for problem shape (run `make artifacts`)");
-            crate::ot::fastot::drive(prob, &cfg, &mut oracle, "xla-origin")
+            crate::ot::fastot::drive_from(prob, &cfg, &mut oracle, "xla-origin", x0)
         }
         // Backstop for direct programmatic calls; every user-facing
         // entry point rejects the method earlier via

@@ -30,8 +30,11 @@
 //! * `runtime` — PJRT loader for the AOT JAX/Pallas artifacts; gated
 //!   behind the off-by-default `xla` cargo feature (the bindings crate
 //!   cannot be fetched in this offline image).
+//! * [`serve`] — the serving engine: admission-controlled request queue
+//!   with deadlines and backpressure, micro-batching, a warm-start dual
+//!   cache, and a closed-loop load generator.
 //! * [`coordinator`] — the L3 system: config, hyperparameter sweep
-//!   scheduler, metrics, TCP service.
+//!   scheduler, metrics, TCP service (wired on top of [`serve`]).
 //! * [`eval`] — domain-adaptation evaluation (1-NN transfer accuracy).
 //!
 //! ## Quickstart
@@ -66,6 +69,7 @@ pub mod pool;
 pub mod rng;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod testing;
 

@@ -4,8 +4,9 @@
 //! Subcommands:
 //! * `solve`   — one regularized OT solve on a named dataset.
 //! * `sweep`   — the paper's (γ × ρ × method) grid with gain report.
-//! * `serve`   — start the TCP OT service.
+//! * `serve`   — start the TCP OT service (serving-engine backed).
 //! * `request` — send one solve request to a running service.
+//! * `bench-serve` — closed-loop load test of the serving engine.
 //! * `validate-artifacts` — check AOT artifacts load & match Rust numerics.
 //! * `info`    — build/runtime information.
 
@@ -17,6 +18,9 @@ use grpot::error::{Context, Result};
 use grpot::jsonlite::Value;
 use grpot::ot::dual::{DualParams, OtProblem};
 use grpot::ot::plan::recover_plan;
+use grpot::serve::loadgen::{run_load, LoadScenario};
+use grpot::serve::ServeConfig;
+use grpot::solvers::lbfgs::LbfgsOptions;
 
 fn app() -> App {
     let dataset_args = |a: App| -> App {
@@ -34,6 +38,30 @@ fn app() -> App {
                     .default("0.1"),
             )
             .arg(ArgSpec::opt("seed", "dataset generation seed").default("55930"))
+    };
+    let engine_args = |a: App| -> App {
+        a.arg(ArgSpec::opt("workers", "solver worker threads").default("4"))
+            .arg(ArgSpec::opt("queue-capacity", "admission queue bound").default("128"))
+            .arg(ArgSpec::opt("max-batch", "max requests per micro-batch").default("16"))
+            .arg(
+                ArgSpec::opt("warm-cache-mb", "warm-start cache budget in MiB (0 disables)")
+                    .default("64"),
+            )
+            .arg(
+                ArgSpec::opt("deadline-ms", "default per-request deadline in ms (0 = none)")
+                    .default("0"),
+            )
+            .arg(ArgSpec::switch("no-warm-start", "disable warm-start seeding"))
+            .arg(
+                ArgSpec::opt("warm-radius", "max (ln γ, ρ) distance for neighbor seeding")
+                    .default("2.0"),
+            )
+            .arg(
+                ArgSpec::opt("problem-cache-entries", "LRU cap on cached datasets")
+                    .default("32"),
+            )
+            .arg(ArgSpec::opt("max-iters", "L-BFGS iteration cap per solve").default("1000"))
+            .arg(ArgSpec::opt("r", "snapshot interval").default("10"))
     };
     App::new(
         "grpot",
@@ -60,16 +88,24 @@ fn app() -> App {
             .arg(ArgSpec::opt("config", "JSON config file (overrides flags)"))
             .arg(ArgSpec::opt("out", "write the JSON report here")),
     ))
-    .subcommand(
+    .subcommand(engine_args(
         App::new("serve", "start the TCP OT service")
-            .arg(ArgSpec::opt("bind", "listen address").default("127.0.0.1:7677"))
-            .arg(ArgSpec::opt("workers", "connection worker threads").default("4")),
-    )
+            .arg(ArgSpec::opt("bind", "listen address").default("127.0.0.1:7677")),
+    ))
     .subcommand(
         App::new("request", "send one solve request to a running service")
             .arg(ArgSpec::opt("addr", "service address").default("127.0.0.1:7677"))
             .arg(ArgSpec::opt("json", "raw request JSON").required()),
     )
+    .subcommand(dataset_args(engine_args(
+        App::new("bench-serve", "closed-loop load test of the serving engine")
+            .arg(ArgSpec::opt("clients", "concurrent closed-loop clients").default("4"))
+            .arg(ArgSpec::opt("cycles", "passes over the (γ×ρ) grid per client").default("3"))
+            .arg(ArgSpec::opt("gammas", "γ grid").default("0.1,1"))
+            .arg(ArgSpec::opt("rhos", "ρ grid").default("0.4,0.8"))
+            .arg(ArgSpec::opt("method", "fast|fast-nows|origin|xla-origin").default("fast"))
+            .arg(ArgSpec::opt("out", "write the JSON report here")),
+    )))
     .subcommand(
         App::new("validate-artifacts", "compile AOT artifacts and cross-check numerics")
             .arg(ArgSpec::opt("dir", "artifact directory").default("artifacts")),
@@ -183,10 +219,38 @@ fn cmd_sweep(m: &grpot::cli::Matches) -> Result<()> {
     Ok(())
 }
 
+/// Build the engine configuration shared by `serve` and `bench-serve`.
+fn engine_config(m: &grpot::cli::Matches) -> Result<ServeConfig, grpot::cli::CliError> {
+    // Clamp to [0, 1 day] like the wire path: Duration::from_secs_f64
+    // panics on non-finite/overflowing input.
+    let deadline_ms = m.get_f64("deadline-ms")?;
+    let deadline_ms = if deadline_ms.is_finite() && deadline_ms > 0.0 {
+        deadline_ms.min(86_400_000.0)
+    } else {
+        0.0
+    };
+    Ok(ServeConfig {
+        workers: m.get_usize("workers")?,
+        queue_capacity: m.get_usize("queue-capacity")?,
+        max_batch: m.get_usize("max-batch")?,
+        warm_cache_bytes: m.get_usize("warm-cache-mb")? << 20,
+        warm_start: !m.get_flag("no-warm-start"),
+        warm_radius: m.get_f64("warm-radius")?,
+        problem_cache_entries: m.get_usize("problem-cache-entries")?,
+        default_deadline: if deadline_ms > 0.0 {
+            Some(std::time::Duration::from_secs_f64(deadline_ms / 1e3))
+        } else {
+            None
+        },
+        r: m.get_usize("r")?,
+        lbfgs: LbfgsOptions { max_iters: m.get_usize("max-iters")?, ..Default::default() },
+    })
+}
+
 fn cmd_serve(m: &grpot::cli::Matches) -> Result<()> {
     let bind = m.get("bind").unwrap_or("127.0.0.1:7677");
-    let workers = m.get_usize("workers")?;
-    let handle = service::serve(bind, workers)?;
+    let cfg = engine_config(m)?;
+    let handle = service::serve_with(bind, cfg)?;
     eprintln!("grpot service listening on {}", handle.addr);
     eprintln!("send {{\"op\":\"shutdown\"}} to stop");
     let addr = handle.addr;
@@ -216,6 +280,36 @@ fn cmd_request(m: &grpot::cli::Matches) -> Result<()> {
     let mut client = service::Client::connect(&addr)?;
     let resp = client.call(&req)?;
     println!("{}", resp.to_json());
+    Ok(())
+}
+
+fn cmd_bench_serve(m: &grpot::cli::Matches) -> Result<()> {
+    let cfg = engine_config(m)?;
+    let method = Method::parse(m.get("method").unwrap_or("fast"))?;
+    method.ensure_available()?;
+    let scenario = LoadScenario {
+        spec: dataset_spec(m)?,
+        gammas: m.get_f64_list("gammas")?,
+        rhos: m.get_f64_list("rhos")?,
+        cycles: m.get_usize("cycles")?,
+        clients: m.get_usize("clients")?,
+        method,
+        deadline: None,
+    };
+    eprintln!(
+        "bench-serve: {} | {} clients × {} cycles × {} grid points | {} workers",
+        registry::describe(&scenario.spec),
+        scenario.clients,
+        scenario.cycles,
+        scenario.gammas.len() * scenario.rhos.len(),
+        cfg.workers
+    );
+    let report = run_load(cfg, &scenario);
+    report.print_summary();
+    if let Some(out) = m.get("out") {
+        std::fs::write(out, report.to_json().to_json())?;
+        eprintln!("report written to {out}");
+    }
     Ok(())
 }
 
@@ -320,6 +414,7 @@ fn main() {
             "sweep" => cmd_sweep(m),
             "serve" => cmd_serve(m),
             "request" => cmd_request(m),
+            "bench-serve" => cmd_bench_serve(m),
             "validate-artifacts" => cmd_validate_artifacts(m),
             "info" => cmd_info(),
             _ => unreachable!("cli rejects unknown subcommands"),

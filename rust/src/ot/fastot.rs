@@ -74,16 +74,38 @@ impl FastOtResult {
     }
 }
 
-/// Drive any oracle through the Algorithm-1 loop.
+/// Drive any oracle through the Algorithm-1 loop from `x = 0`.
 pub fn drive(
     prob: &OtProblem,
     cfg: &FastOtConfig,
     oracle: &mut dyn DualOracle,
     method: &str,
 ) -> FastOtResult {
+    drive_from(prob, cfg, oracle, method, vec![0.0; prob.dim()])
+}
+
+/// Drive any oracle through the Algorithm-1 loop from an arbitrary
+/// starting iterate `x0` — the serving engine's warm-start entry point.
+///
+/// The screening bounds are *safe from any point* (Theorem 2 makes no
+/// assumption about the starting iterate), so warm-started screened and
+/// dense solves still follow bit-identical trajectories. For a nonzero
+/// `x0` the oracle snapshots are refreshed at `x0` first so the bounds
+/// start tight there instead of at the `x = 0` construction point; with
+/// `x0 = 0` the call sequence is byte-identical to [`drive`].
+pub fn drive_from(
+    prob: &OtProblem,
+    cfg: &FastOtConfig,
+    oracle: &mut dyn DualOracle,
+    method: &str,
+    x0: Vec<f64>,
+) -> FastOtResult {
     assert!(cfg.r >= 1, "snapshot interval must be >= 1");
+    assert_eq!(x0.len(), prob.dim(), "warm-start iterate has wrong dimension");
     let start = Instant::now();
-    let x0 = vec![0.0; prob.dim()];
+    if x0.iter().any(|&v| v != 0.0) {
+        oracle.refresh(&x0);
+    }
     let mut solver = Lbfgs::new(x0, cfg.lbfgs.clone(), oracle);
     let mut outer_rounds = 0usize;
     let stop = 'outer: loop {
@@ -113,9 +135,14 @@ pub fn drive(
 
 /// Solve with the paper's method (both ideas enabled by default).
 pub fn solve_fast_ot(prob: &OtProblem, cfg: &FastOtConfig) -> FastOtResult {
+    solve_fast_ot_from(prob, cfg, vec![0.0; prob.dim()])
+}
+
+/// Solve with the paper's method from a warm-start iterate `x0`.
+pub fn solve_fast_ot_from(prob: &OtProblem, cfg: &FastOtConfig, x0: Vec<f64>) -> FastOtResult {
     let mut oracle = ScreeningOracle::new(prob, cfg.params(), cfg.use_working_set);
     let label = if cfg.use_working_set { "fast" } else { "fast-nows" };
-    drive(prob, cfg, &mut oracle, label)
+    drive_from(prob, cfg, &mut oracle, label, x0)
 }
 
 /// Per-iteration diagnostics used by the Fig. B/C benchmarks: runs the
@@ -218,6 +245,42 @@ mod tests {
                 assert_eq!(fast.iterations, orig.iterations);
             }
         }
+    }
+
+    #[test]
+    fn warm_start_preserves_theorem2_trajectory() {
+        // Theorem 2 holds from any starting iterate: screened and dense
+        // solves warm-started at the same x0 must stay bit-identical.
+        let prob = random_problem(17, 4, 3, 9);
+        let cfg = FastOtConfig {
+            gamma: 0.7,
+            rho: 0.5,
+            lbfgs: LbfgsOptions { max_iters: 80, ..Default::default() },
+            ..Default::default()
+        };
+        let mut rng = crate::rng::Pcg64::new(404);
+        let x0: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.3, 0.4)).collect();
+        let fast = solve_fast_ot_from(&prob, &cfg, x0.clone());
+        let orig = crate::ot::origin::solve_origin_from(&prob, &cfg, x0.clone());
+        assert_eq!(fast.dual_objective, orig.dual_objective);
+        assert_eq!(fast.x, orig.x);
+        assert_eq!(fast.iterations, orig.iterations);
+        // And warm-starting from a *converged* cold solution barely
+        // moves: the dual objective must agree with it to 1e-9. (Tight
+        // tolerances so the cold solve actually converges rather than
+        // stopping at the iteration cap.)
+        let cfg = FastOtConfig {
+            lbfgs: LbfgsOptions { max_iters: 4000, ftol: 1e-13, gtol: 1e-8, ..Default::default() },
+            ..cfg
+        };
+        let cold = solve_fast_ot(&prob, &cfg);
+        let rewarmed = solve_fast_ot_from(&prob, &cfg, cold.x.clone());
+        assert!(
+            (rewarmed.dual_objective - cold.dual_objective).abs() <= 1e-9,
+            "cold={} rewarmed={}",
+            cold.dual_objective,
+            rewarmed.dual_objective
+        );
     }
 
     #[test]

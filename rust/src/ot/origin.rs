@@ -51,6 +51,16 @@ pub fn solve_origin(
     crate::ot::fastot::drive(prob, cfg, &mut oracle, "origin")
 }
 
+/// Dense-baseline solve from a warm-start iterate `x0`.
+pub fn solve_origin_from(
+    prob: &OtProblem,
+    cfg: &crate::ot::fastot::FastOtConfig,
+    x0: Vec<f64>,
+) -> crate::ot::fastot::FastOtResult {
+    let mut oracle = OriginOracle::new(prob, DualParams::new(cfg.gamma, cfg.rho));
+    crate::ot::fastot::drive_from(prob, cfg, &mut oracle, "origin", x0)
+}
+
 /// Convenience: solve with explicit L-BFGS options (tests).
 pub fn solve_origin_lbfgs(
     prob: &OtProblem,

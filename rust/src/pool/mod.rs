@@ -1,18 +1,23 @@
 //! Thread-pool substrate (tokio/rayon are unavailable offline).
 //!
-//! Two facilities:
+//! Facilities:
 //!
 //! * [`ThreadPool`] — a fixed pool of workers consuming boxed jobs from a
 //!   shared channel; used by the coordinator's sweep scheduler and the
 //!   TCP service.
+//! * [`BoundedQueue`] — a capacity-bounded MPMC FIFO whose `try_push`
+//!   never blocks (the serving engine's admission-control substrate:
+//!   overload surfaces as an immediate rejection, not unbounded memory).
+//! * [`Semaphore`] — a counting semaphore (std has none on stable).
 //! * [`parallel_for_chunks`] — fork-join data parallelism over an index
 //!   range using `std::thread::scope`; used off the solver's hot path
 //!   (dataset generation, evaluation) so single-solver benchmarks remain
 //!   one-core, matching the paper's single-CPU-core setup.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -135,6 +140,122 @@ impl Drop for SemaphorePermit<'_> {
         let mut avail = self.sem.state.lock().unwrap();
         *avail += 1;
         self.sem.cvar.notify_one();
+    }
+}
+
+/// Why `try_push` failed; the rejected item is handed back so callers
+/// can report on it (e.g. answer the request with a structured error).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue held `capacity` items already.
+    Full(T),
+    /// [`BoundedQueue::close`] was called; no further items are accepted.
+    Closed(T),
+}
+
+struct BoundedState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Capacity-bounded MPMC FIFO. Producers never block: `try_push` fails
+/// immediately when the queue is full (backpressure) or closed.
+/// Consumers block in `pop` until an item arrives; after `close`, `pop`
+/// drains the remaining items and then returns `None`.
+pub struct BoundedQueue<T> {
+    state: Mutex<BoundedState<T>>,
+    cvar: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create with a hard capacity (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "queue needs capacity >= 1");
+        BoundedQueue {
+            state: Mutex::new(BoundedState { items: VecDeque::new(), closed: false }),
+            cvar: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Enqueue without blocking. Returns the queue depth after the push,
+    /// or the item wrapped in the reason it was refused.
+    pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        let depth = st.items.len();
+        drop(st);
+        self.cvar.notify_one();
+        Ok(depth)
+    }
+
+    /// Dequeue, blocking until an item is available. Returns `None` only
+    /// once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cvar.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking dequeue.
+    pub fn try_pop(&self) -> Option<T> {
+        self.state.lock().unwrap().items.pop_front()
+    }
+
+    /// Remove up to `max` items satisfying `pred`, preserving FIFO order
+    /// among both the taken and the remaining items. Non-blocking; used
+    /// by the micro-batcher to coalesce same-dataset requests.
+    pub fn drain_matching(&self, max: usize, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut st = self.state.lock().unwrap();
+        let mut taken = Vec::new();
+        let mut rest = VecDeque::with_capacity(st.items.len());
+        while let Some(item) = st.items.pop_front() {
+            if taken.len() < max && pred(&item) {
+                taken.push(item);
+            } else {
+                rest.push_back(item);
+            }
+        }
+        st.items = rest;
+        taken
+    }
+
+    /// Current depth.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Refuse new items and wake every blocked consumer. Items already
+    /// queued remain poppable (graceful drain).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cvar.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
     }
 }
 

@@ -87,6 +87,116 @@ fn pool_size() {
 }
 
 #[test]
+fn bounded_queue_fifo_and_backpressure() {
+    let q = BoundedQueue::new(3);
+    assert_eq!(q.capacity(), 3);
+    assert_eq!(q.try_push(1).unwrap(), 1);
+    assert_eq!(q.try_push(2).unwrap(), 2);
+    assert_eq!(q.try_push(3).unwrap(), 3);
+    match q.try_push(4) {
+        Err(PushError::Full(item)) => assert_eq!(item, 4),
+        other => panic!("expected Full, got {other:?}"),
+    }
+    assert_eq!(q.pop(), Some(1));
+    assert_eq!(q.try_pop(), Some(2));
+    assert_eq!(q.len(), 1);
+    assert_eq!(q.try_push(5).unwrap(), 2);
+}
+
+#[test]
+fn bounded_queue_close_drains_then_ends() {
+    let q = BoundedQueue::new(4);
+    q.try_push("a").unwrap();
+    q.try_push("b").unwrap();
+    q.close();
+    match q.try_push("c") {
+        Err(PushError::Closed(item)) => assert_eq!(item, "c"),
+        other => panic!("expected Closed, got {other:?}"),
+    }
+    // Graceful drain: queued items stay poppable, then None.
+    assert_eq!(q.pop(), Some("a"));
+    assert_eq!(q.pop(), Some("b"));
+    assert_eq!(q.pop(), None);
+    assert!(q.is_closed());
+}
+
+#[test]
+fn bounded_queue_close_wakes_blocked_consumers() {
+    let q = Arc::new(BoundedQueue::<u32>::new(2));
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                s.spawn(move || q.pop())
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.try_push(7).unwrap();
+        q.close();
+        let got: Vec<Option<u32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(got.iter().filter(|v| v.is_some()).count(), 1);
+        assert_eq!(got.iter().filter(|v| v.is_none()).count(), 2);
+    });
+}
+
+#[test]
+fn bounded_queue_drain_matching_preserves_order() {
+    let q = BoundedQueue::new(8);
+    for v in [1, 2, 3, 4, 5, 6] {
+        q.try_push(v).unwrap();
+    }
+    let even = q.drain_matching(2, |v| v % 2 == 0);
+    assert_eq!(even, vec![2, 4]); // capped at 2, FIFO among matches
+    assert_eq!(q.len(), 4);
+    assert_eq!(q.pop(), Some(1));
+    assert_eq!(q.pop(), Some(3));
+    assert_eq!(q.pop(), Some(5));
+    assert_eq!(q.pop(), Some(6));
+}
+
+#[test]
+fn bounded_queue_mpmc_under_contention() {
+    let q = Arc::new(BoundedQueue::new(16));
+    let produced = 4 * 50;
+    let consumed = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let (q, consumed) = (Arc::clone(&q), Arc::clone(&consumed));
+            s.spawn(move || {
+                while q.pop().is_some() {
+                    consumed.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        }
+        for t in 0..4 {
+            let q = Arc::clone(&q);
+            s.spawn(move || {
+                for i in 0..50 {
+                    // Spin on backpressure: producers outrun consumers.
+                    let mut v = t * 1000 + i;
+                    loop {
+                        match q.try_push(v) {
+                            Ok(_) => break,
+                            Err(PushError::Full(back)) => {
+                                v = back;
+                                std::thread::yield_now();
+                            }
+                            Err(PushError::Closed(_)) => panic!("closed early"),
+                        }
+                    }
+                }
+            });
+        }
+        // Producers finish, then close so consumers exit.
+        while consumed.load(Ordering::SeqCst) + q.len() < produced {
+            std::thread::yield_now();
+        }
+        q.close();
+    });
+    assert_eq!(consumed.load(Ordering::SeqCst), produced);
+}
+
+#[test]
 fn semaphore_caps_concurrency() {
     use std::sync::atomic::{AtomicUsize, Ordering};
     let sem = Arc::new(Semaphore::new(2));

@@ -1,0 +1,168 @@
+//! Micro-batching: coalesce concurrent requests that share a dataset
+//! spec, and deduplicate identical (γ, ρ, method) jobs within a batch.
+//!
+//! A batch pays the dataset cost (cost matrix, group structure, problem
+//! cache round-trip) once; an identical-job group pays its *solve* once
+//! and fans the result out to every waiter. Both effects compound under
+//! load: the hotter the key, the bigger the batches, the cheaper each
+//! request — the classic serving-engine shape.
+
+use super::queue::{AdmissionQueue, Ticket};
+use crate::coordinator::config::Method;
+use std::borrow::Borrow;
+use std::collections::BTreeMap;
+
+/// A group of tickets sharing one dataset spec.
+pub struct Batch {
+    pub dataset_key: String,
+    pub tickets: Vec<Ticket>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tickets.is_empty()
+    }
+}
+
+/// Block for the next ticket, then opportunistically drain up to
+/// `max_batch − 1` already-queued tickets with the same dataset key.
+/// Returns `None` once the queue is closed and drained (worker exit).
+pub fn next_batch(queue: &AdmissionQueue, max_batch: usize) -> Option<Batch> {
+    let first = queue.pop()?;
+    let dataset_key = first.dataset_key.clone();
+    let mut tickets = vec![first];
+    if max_batch > 1 {
+        tickets.extend(queue.drain_matching(max_batch - 1, |t| t.dataset_key == dataset_key));
+    }
+    Some(Batch { dataset_key, tickets })
+}
+
+/// One distinct solve within a batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobKey {
+    pub gamma: f64,
+    pub rho: f64,
+    pub method: Method,
+    pub warm_start: bool,
+}
+
+/// Group ticket indices by identical (γ, ρ, method, warm) so each
+/// distinct job is solved exactly once. Deterministic order (sorted by
+/// the key's bits), each group's indices in arrival order. Accepts
+/// owned or borrowed tickets (the engine batches over `&Ticket`s).
+pub fn unique_jobs<T: Borrow<Ticket>>(tickets: &[T]) -> Vec<(JobKey, Vec<usize>)> {
+    let mut groups: BTreeMap<(u64, u64, &'static str, bool), Vec<usize>> = BTreeMap::new();
+    for (i, t) in tickets.iter().enumerate() {
+        let r = &t.borrow().request;
+        groups
+            .entry((r.gamma.to_bits(), r.rho.to_bits(), r.method.name(), r.warm_start))
+            .or_default()
+            .push(i);
+    }
+    groups
+        .into_iter()
+        .map(|((gamma_bits, rho_bits, method, warm_start), idxs)| {
+            (
+                JobKey {
+                    gamma: f64::from_bits(gamma_bits),
+                    rho: f64::from_bits(rho_bits),
+                    method: Method::parse(method).expect("name round-trips"),
+                    warm_start,
+                },
+                idxs,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::DatasetSpec;
+    use crate::pool::BoundedQueue;
+    use crate::serve::engine::SolveRequest;
+
+    fn ticket(seed: u64, gamma: f64, rho: f64) -> Ticket {
+        let spec = DatasetSpec { seed, ..Default::default() };
+        let (t, _slot) = Ticket::new(
+            SolveRequest {
+                spec,
+                gamma,
+                rho,
+                method: Method::Fast,
+                deadline: None,
+                warm_start: true,
+            },
+            None,
+        );
+        t
+    }
+
+    #[test]
+    fn batches_coalesce_same_dataset_only() {
+        let q: AdmissionQueue = BoundedQueue::new(16);
+        for t in [
+            ticket(1, 0.1, 0.5),
+            ticket(2, 0.1, 0.5),
+            ticket(1, 0.2, 0.5),
+            ticket(1, 0.3, 0.5),
+        ] {
+            assert!(q.try_push(t).is_ok());
+        }
+        let b = next_batch(&q, 8).expect("batch");
+        assert_eq!(b.len(), 3); // seeds 1, skipping the seed-2 ticket
+        assert!(!b.is_empty());
+        assert!(b.tickets.iter().all(|t| t.dataset_key == b.dataset_key));
+        let b2 = next_batch(&q, 8).expect("batch");
+        assert_eq!(b2.len(), 1);
+        assert_ne!(b2.dataset_key, b.dataset_key);
+    }
+
+    #[test]
+    fn batch_size_is_capped() {
+        let q: AdmissionQueue = BoundedQueue::new(16);
+        for _ in 0..6 {
+            assert!(q.try_push(ticket(7, 1.0, 0.5)).is_ok());
+        }
+        let b = next_batch(&q, 4).expect("batch");
+        assert_eq!(b.len(), 4);
+        assert_eq!(q.len(), 2);
+        // max_batch = 1 degenerates to one-at-a-time.
+        let b = next_batch(&q, 1).expect("batch");
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn identical_jobs_deduplicate() {
+        let tickets = vec![
+            ticket(1, 0.1, 0.5),
+            ticket(1, 0.2, 0.5),
+            ticket(1, 0.1, 0.5),
+            ticket(1, 0.1, 0.5),
+        ];
+        let jobs = unique_jobs(&tickets);
+        assert_eq!(jobs.len(), 2);
+        let total: usize = jobs.iter().map(|(_, idxs)| idxs.len()).sum();
+        assert_eq!(total, 4);
+        let (key, idxs) = jobs
+            .iter()
+            .find(|(k, _)| k.gamma == 0.1)
+            .expect("0.1 group");
+        assert_eq!(idxs.as_slice(), &[0, 2, 3]);
+        assert_eq!(key.method, Method::Fast);
+        assert!(key.warm_start);
+    }
+
+    #[test]
+    fn closed_queue_ends_batching() {
+        let q: AdmissionQueue = BoundedQueue::new(4);
+        assert!(q.try_push(ticket(1, 1.0, 0.5)).is_ok());
+        q.close();
+        assert!(next_batch(&q, 4).is_some()); // graceful drain
+        assert!(next_batch(&q, 4).is_none());
+    }
+}

@@ -1,0 +1,232 @@
+//! Warm-start dual cache: recent dual vectors keyed by (dataset, γ, ρ)
+//! under an LRU byte budget.
+//!
+//! A serving workload revisits a small set of hyperparameter points on
+//! a small set of datasets, so the dual optimum of a *nearby* (γ, ρ)
+//! problem is an excellent L-BFGS seed — regularization-path solvers
+//! exploit exactly this structure. Safety is free: the screening bounds
+//! hold from any starting iterate (Theorem 2), so a warm start changes
+//! the iteration count, never the answer.
+//!
+//! Nearness is measured in `(ln γ, ρ)` space — γ sweeps are logarithmic
+//! (the paper's grid spans 1e-3…1e3) while ρ lives on [0, 1), so
+//! `√((Δln γ)² + (Δρ)²)` weighs both axes comparably.
+
+use std::sync::{Arc, Mutex};
+
+/// A cache hit: the seed vector plus how it matched.
+#[derive(Clone)]
+pub struct CacheSeed {
+    pub dual: Arc<Vec<f64>>,
+    /// Same (γ, ρ), not just nearby.
+    pub exact: bool,
+    /// Distance in `(ln γ, ρ)` space (0 for exact hits).
+    pub distance: f64,
+}
+
+struct CacheEntry {
+    dataset: String,
+    gamma: f64,
+    rho: f64,
+    dual: Arc<Vec<f64>>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct CacheState {
+    entries: Vec<CacheEntry>,
+    clock: u64,
+    bytes: usize,
+}
+
+/// LRU-evicted store of dual vectors under a byte budget.
+pub struct DualCache {
+    state: Mutex<CacheState>,
+    budget: usize,
+    radius: f64,
+}
+
+fn param_distance(g1: f64, r1: f64, g2: f64, r2: f64) -> f64 {
+    let dg = g1.ln() - g2.ln();
+    let dr = r1 - r2;
+    (dg * dg + dr * dr).sqrt()
+}
+
+fn entry_bytes(dual: &[f64]) -> usize {
+    std::mem::size_of_val(dual)
+}
+
+impl DualCache {
+    /// `budget` in bytes (0 disables the cache entirely); `radius` is
+    /// the largest `(ln γ, ρ)` distance at which a neighbor still seeds.
+    pub fn new(budget: usize, radius: f64) -> Self {
+        DualCache {
+            state: Mutex::new(CacheState { entries: Vec::new(), clock: 0, bytes: 0 }),
+            budget,
+            radius,
+        }
+    }
+
+    /// Current entry count.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current resident bytes.
+    pub fn bytes(&self) -> usize {
+        self.state.lock().unwrap().bytes
+    }
+
+    /// Store (or refresh) the dual for `(dataset, γ, ρ)`, evicting the
+    /// least-recently-used entries until the budget holds. A vector
+    /// larger than the whole budget is not cached.
+    pub fn insert(&self, dataset: &str, gamma: f64, rho: f64, dual: Vec<f64>) {
+        let bytes = entry_bytes(&dual);
+        if bytes > self.budget {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.clock += 1;
+        let clock = st.clock;
+        if let Some(e) = st
+            .entries
+            .iter_mut()
+            .find(|e| e.dataset == dataset && e.gamma == gamma && e.rho == rho)
+        {
+            // Replace in place: same key, fresher dual.
+            let old = e.bytes;
+            e.dual = Arc::new(dual);
+            e.bytes = bytes;
+            e.last_used = clock;
+            st.bytes = st.bytes - old + bytes;
+        } else {
+            st.entries.push(CacheEntry {
+                dataset: dataset.to_string(),
+                gamma,
+                rho,
+                dual: Arc::new(dual),
+                bytes,
+                last_used: clock,
+            });
+            st.bytes += bytes;
+        }
+        while st.bytes > self.budget {
+            let lru = st
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("bytes > 0 implies entries");
+            let gone = st.entries.swap_remove(lru);
+            st.bytes -= gone.bytes;
+        }
+    }
+
+    /// Best seed for `(dataset, γ, ρ)`: the exact entry when present,
+    /// otherwise the nearest same-dataset neighbor within the radius.
+    pub fn lookup(&self, dataset: &str, gamma: f64, rho: f64) -> Option<CacheSeed> {
+        let mut st = self.state.lock().unwrap();
+        st.clock += 1;
+        let clock = st.clock;
+        let mut best: Option<(usize, f64)> = None;
+        for (i, e) in st.entries.iter().enumerate() {
+            if e.dataset != dataset {
+                continue;
+            }
+            let d = if e.gamma == gamma && e.rho == rho {
+                0.0
+            } else {
+                param_distance(e.gamma, e.rho, gamma, rho)
+            };
+            let better = match best {
+                None => true,
+                Some((_, best_d)) => d < best_d,
+            };
+            if d <= self.radius && better {
+                best = Some((i, d));
+            }
+        }
+        best.map(|(i, d)| {
+            st.entries[i].last_used = clock;
+            CacheSeed { dual: Arc::clone(&st.entries[i].dual), exact: d == 0.0, distance: d }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dual(v: f64, len: usize) -> Vec<f64> {
+        vec![v; len]
+    }
+
+    #[test]
+    fn exact_hit_beats_neighbor() {
+        let c = DualCache::new(1 << 20, 2.0);
+        c.insert("ds", 1.0, 0.5, dual(1.0, 8));
+        c.insert("ds", 1.1, 0.5, dual(2.0, 8));
+        let hit = c.lookup("ds", 1.0, 0.5).expect("hit");
+        assert!(hit.exact);
+        assert_eq!(hit.distance, 0.0);
+        assert_eq!(hit.dual[0], 1.0);
+    }
+
+    #[test]
+    fn nearest_neighbor_within_radius() {
+        let c = DualCache::new(1 << 20, 2.0);
+        c.insert("ds", 1.0, 0.4, dual(1.0, 8));
+        c.insert("ds", 10.0, 0.4, dual(2.0, 8));
+        let hit = c.lookup("ds", 1.5, 0.4).expect("hit");
+        assert!(!hit.exact);
+        assert_eq!(hit.dual[0], 1.0); // ln 1.5 is closer to ln 1 than ln 10
+        assert!(hit.distance > 0.0 && hit.distance < 1.0);
+        // Far outside the radius: miss.
+        assert!(c.lookup("ds", 1e6, 0.4).is_none());
+        // Different dataset: miss.
+        assert!(c.lookup("other", 1.0, 0.4).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        let len = 16; // 128 bytes per entry
+        let c = DualCache::new(3 * 128, 2.0);
+        c.insert("ds", 1.0, 0.2, dual(1.0, len));
+        c.insert("ds", 1.0, 0.4, dual(2.0, len));
+        c.insert("ds", 1.0, 0.6, dual(3.0, len));
+        assert_eq!(c.len(), 3);
+        // Touch the oldest so it becomes most-recent.
+        assert!(c.lookup("ds", 1.0, 0.2).unwrap().exact);
+        // Inserting a fourth evicts the LRU — now (1.0, 0.4).
+        c.insert("ds", 1.0, 0.8, dual(4.0, len));
+        assert_eq!(c.len(), 3);
+        assert!(c.bytes() <= 3 * 128);
+        assert!(c.lookup("ds", 1.0, 0.2).is_some_and(|s| s.exact));
+        assert!(c.lookup("ds", 1.0, 0.8).is_some_and(|s| s.exact));
+        assert!(!c.lookup("ds", 1.0, 0.4).is_some_and(|s| s.exact));
+    }
+
+    #[test]
+    fn same_key_replaces_in_place() {
+        let c = DualCache::new(1 << 20, 2.0);
+        c.insert("ds", 1.0, 0.5, dual(1.0, 8));
+        c.insert("ds", 1.0, 0.5, dual(9.0, 8));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.lookup("ds", 1.0, 0.5).unwrap().dual[0], 9.0);
+    }
+
+    #[test]
+    fn oversized_and_zero_budget_entries_skipped() {
+        let c = DualCache::new(64, 2.0);
+        c.insert("ds", 1.0, 0.5, dual(1.0, 1000)); // 8000 bytes > 64
+        assert!(c.is_empty());
+        let off = DualCache::new(0, 2.0);
+        off.insert("ds", 1.0, 0.5, dual(1.0, 2));
+        assert!(off.lookup("ds", 1.0, 0.5).is_none());
+    }
+}

@@ -1,0 +1,639 @@
+//! The serving engine: admission-controlled, micro-batched, warm-started
+//! solve execution on a fixed worker pool.
+//!
+//! Lifecycle: [`Engine::start`] spawns `workers` threads; each loops on
+//! [`super::batcher::next_batch`], so the number of concurrent solves is
+//! exactly the worker count — the queue, not a thread explosion, absorbs
+//! bursts. [`Engine::submit`] blocks the calling (connection) thread on a
+//! [`super::queue::ResponseSlot`] until its ticket is answered, which is
+//! guaranteed: every exit path — deadline expiry, rejected admission,
+//! solver failure, engine shutdown — responds with a structured
+//! [`RejectReason`] rather than dropping the ticket.
+//!
+//! Metrics published (all under the shared [`Metrics`] registry):
+//!
+//! | name | kind | meaning |
+//! |------|------|---------|
+//! | `serve.requests` | counter | submits accepted into the queue |
+//! | `serve.rejected_queue_full` | counter | backpressure rejections |
+//! | `serve.rejected_deadline` | counter | deadline expiries |
+//! | `serve.solves` | counter | solver runs (≤ requests: batching dedupes) |
+//! | `serve.solve_panics` | counter | solves that panicked (answered as `failed`) |
+//! | `serve.batches` | counter | micro-batches executed |
+//! | `serve.warm_hits` / `serve.warm_misses` | counter | dual-cache outcome per solve |
+//! | `serve.queue_depth` | gauge | queue depth after the last submit/batch |
+//! | `serve.warm_cache_bytes` | gauge | resident warm-cache bytes |
+//! | `serve.latency_seconds` | hist | end-to-end submit→response |
+//! | `serve.solve_seconds` | hist | solver wall time per job |
+//! | `serve.batch_size` | hist | tickets per batch |
+//! | `service.cache_hits` / `service.cache_misses` | counter | problem-cache outcome |
+
+use super::batcher::{next_batch, unique_jobs, Batch, JobKey};
+use super::cache::DualCache;
+use super::queue::{AdmissionQueue, EngineResult, Ticket};
+use super::ServeConfig;
+use crate::coordinator::config::{DatasetSpec, Method};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::build_pair;
+use crate::coordinator::sweep::solve_full_warm;
+use crate::data::DomainPair;
+use crate::err;
+use crate::error::GrpotError;
+use crate::ot::dual::OtProblem;
+use crate::ot::fastot::FastOtResult;
+use crate::pool::{BoundedQueue, PushError};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One solve request as the engine sees it.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    pub spec: DatasetSpec,
+    pub gamma: f64,
+    pub rho: f64,
+    pub method: Method,
+    /// Relative deadline; falls back to the engine default when `None`.
+    pub deadline: Option<Duration>,
+    /// Allow seeding from the warm-start cache (default true).
+    pub warm_start: bool,
+}
+
+/// A dataset's generated pair and prepared OT problem, shared across
+/// every request and batch that names the same spec.
+pub struct CachedProblem {
+    pub pair: DomainPair,
+    pub prob: OtProblem,
+}
+
+/// Successful engine response.
+#[derive(Clone)]
+pub struct EngineReply {
+    pub result: Arc<FastOtResult>,
+    pub problem: Arc<CachedProblem>,
+    /// Whether this solve was seeded from the warm-start cache.
+    pub warm_started: bool,
+    /// Tickets in the micro-batch this request rode in.
+    pub batch_size: usize,
+    /// Seconds between submit and solve start.
+    pub queue_wait_s: f64,
+}
+
+/// Structured rejection — every way a request can fail without (or
+/// instead of) a solver result.
+#[derive(Clone, Debug)]
+pub enum RejectReason {
+    /// Admission queue at capacity (backpressure): retry later.
+    QueueFull { capacity: usize },
+    /// The deadline passed before the solve started.
+    DeadlineExceeded { waited_s: f64 },
+    /// The engine is shutting down.
+    Shutdown,
+    /// Request validation or solver-side failure.
+    Failed(GrpotError),
+}
+
+impl RejectReason {
+    /// Stable machine-readable kind (the wire protocol's `error_kind`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull { .. } => "queue_full",
+            RejectReason::DeadlineExceeded { .. } => "deadline_exceeded",
+            RejectReason::Shutdown => "shutdown",
+            RejectReason::Failed(_) => "failed",
+        }
+    }
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { capacity } => {
+                write!(f, "admission queue full ({capacity} requests queued); retry later")
+            }
+            RejectReason::DeadlineExceeded { waited_s } => {
+                write!(f, "deadline exceeded after waiting {waited_s:.3}s")
+            }
+            RejectReason::Shutdown => write!(f, "engine is shutting down"),
+            RejectReason::Failed(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+/// LRU-capped dataset → prepared-problem cache.
+#[derive(Default)]
+struct ProblemCache {
+    entries: BTreeMap<String, (Arc<CachedProblem>, u64)>,
+    clock: u64,
+}
+
+impl ProblemCache {
+    /// Get and mark as recently used.
+    fn touch(&mut self, key: &str) -> Option<Arc<CachedProblem>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entries.get_mut(key).map(|(p, used)| {
+            *used = clock;
+            Arc::clone(p)
+        })
+    }
+
+    /// Insert, evicting the least-recently-used entries beyond `cap`.
+    fn insert(&mut self, key: &str, problem: Arc<CachedProblem>, cap: usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entries.insert(key.to_string(), (problem, clock));
+        while self.entries.len() > cap.max(1) {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| k.clone())
+                .expect("loop guard implies entries");
+            self.entries.remove(&lru);
+        }
+    }
+}
+
+struct EngineState {
+    cfg: ServeConfig,
+    queue: AdmissionQueue,
+    problems: Mutex<ProblemCache>,
+    /// Per-key build locks: concurrent cold builds of *one* dataset are
+    /// deduplicated without serializing builds of distinct datasets.
+    problem_build: Mutex<BTreeMap<String, Arc<Mutex<()>>>>,
+    duals: DualCache,
+    metrics: Arc<Metrics>,
+}
+
+/// Poison-tolerant lock: a panic caught elsewhere (dataset asserts,
+/// solver bugs) must not turn every later request into a poison panic.
+fn plock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Render a caught panic payload for a structured error message.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    panic
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Handle to a running engine. Dropping it shuts the engine down,
+/// draining queued tickets gracefully (each still gets a response).
+pub struct Engine {
+    state: Arc<EngineState>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Engine {
+    /// Spawn the worker pool and return the handle.
+    pub fn start(cfg: ServeConfig, metrics: Arc<Metrics>) -> Engine {
+        let state = Arc::new(EngineState {
+            queue: BoundedQueue::new(cfg.queue_capacity.max(1)),
+            problems: Mutex::new(ProblemCache::default()),
+            problem_build: Mutex::new(BTreeMap::new()),
+            duals: DualCache::new(cfg.warm_cache_bytes, cfg.warm_radius),
+            metrics,
+            cfg,
+        });
+        // Pre-register the full metric surface so the service's
+        // `metrics` op reports every serving counter from request one.
+        for name in [
+            "serve.requests",
+            "serve.rejected_queue_full",
+            "serve.rejected_deadline",
+            "serve.solves",
+            "serve.solve_panics",
+            "serve.batches",
+            "serve.warm_hits",
+            "serve.warm_misses",
+            "service.cache_hits",
+            "service.cache_misses",
+        ] {
+            state.metrics.incr(name, 0);
+        }
+        state.metrics.set_gauge("serve.queue_depth", 0.0);
+        state.metrics.set_gauge("serve.warm_cache_bytes", 0.0);
+        let n = state.cfg.workers.max(1);
+        let workers = (0..n)
+            .map(|i| {
+                let st = Arc::clone(&state);
+                std::thread::Builder::new()
+                    .name(format!("grpot-serve-{i}"))
+                    .spawn(move || worker_loop(&st))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Engine { state, workers: Mutex::new(workers) }
+    }
+
+    /// The shared metrics registry.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.state.metrics
+    }
+
+    /// Current admission-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.state.queue.len()
+    }
+
+    /// Submit one request and block until its response. Admission
+    /// failures return immediately; accepted requests always receive an
+    /// answer (solve result, deadline expiry, or shutdown).
+    pub fn submit(&self, request: SolveRequest) -> EngineResult {
+        let m = &self.state.metrics;
+        // Validate up front: these would panic inside the solver and a
+        // panicking worker could never answer its tickets.
+        if request.gamma.is_nan() || request.gamma <= 0.0 {
+            return Err(RejectReason::Failed(err!(
+                "gamma must be positive (got {})",
+                request.gamma
+            )));
+        }
+        if request.rho.is_nan() || !(0.0..1.0).contains(&request.rho) {
+            return Err(RejectReason::Failed(err!(
+                "rho must lie in [0, 1) (got {})",
+                request.rho
+            )));
+        }
+        if let Err(e) = request.method.ensure_available() {
+            return Err(RejectReason::Failed(e));
+        }
+        let started = Instant::now();
+        let (ticket, slot) = Ticket::new(request, self.state.cfg.default_deadline);
+        match self.state.queue.try_push(ticket) {
+            Ok(depth) => {
+                m.incr("serve.requests", 1);
+                m.set_gauge("serve.queue_depth", depth as f64);
+            }
+            Err(PushError::Full(_)) => {
+                m.incr("serve.rejected_queue_full", 1);
+                return Err(RejectReason::QueueFull { capacity: self.state.queue.capacity() });
+            }
+            Err(PushError::Closed(_)) => return Err(RejectReason::Shutdown),
+        }
+        let out = slot.wait();
+        m.observe_hist("serve.latency_seconds", started.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Stop accepting work, let the workers drain the queue, and join
+    /// them. Idempotent; also invoked by `Drop`.
+    pub fn shutdown(&self) {
+        self.state.queue.close();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(state: &EngineState) {
+    while let Some(batch) = next_batch(&state.queue, state.cfg.max_batch) {
+        state
+            .metrics
+            .set_gauge("serve.queue_depth", state.queue.len() as f64);
+        handle_batch(state, &batch);
+    }
+}
+
+/// Fetch or build the problem for a dataset key. Cold builds of the
+/// same key are deduplicated by a per-key lock: whoever wins it
+/// generates the problem once, everyone queued behind it re-checks and
+/// hits; distinct keys build concurrently.
+fn cached_problem(
+    state: &EngineState,
+    key: &str,
+    spec: &DatasetSpec,
+) -> crate::error::Result<Arc<CachedProblem>> {
+    if let Some(hit) = plock(&state.problems).touch(key) {
+        state.metrics.incr("service.cache_hits", 1);
+        return Ok(hit);
+    }
+    let key_lock = Arc::clone(plock(&state.problem_build).entry(key.to_string()).or_default());
+    let build_guard = plock(&key_lock);
+    if let Some(hit) = plock(&state.problems).touch(key) {
+        // Built by whoever held the lock while we waited.
+        state.metrics.incr("service.cache_hits", 1);
+        return Ok(hit);
+    }
+    state.metrics.incr("service.cache_misses", 1);
+    let built = build_pair(spec).map(|pair| {
+        let prob = OtProblem::from_dataset(&pair);
+        let cached = Arc::new(CachedProblem { pair, prob });
+        plock(&state.problems).insert(key, Arc::clone(&cached), state.cfg.problem_cache_entries);
+        cached
+    });
+    drop(build_guard);
+    plock(&state.problem_build).remove(key);
+    built
+}
+
+fn handle_batch(state: &EngineState, batch: &Batch) {
+    let m = &state.metrics;
+    m.incr("serve.batches", 1);
+    m.observe_hist("serve.batch_size", batch.len() as f64);
+
+    // Deadline triage on dequeue: expired tickets never touch a solver.
+    let now = Instant::now();
+    let mut live: Vec<&Ticket> = Vec::with_capacity(batch.len());
+    for t in &batch.tickets {
+        if t.expired(now) {
+            m.incr("serve.rejected_deadline", 1);
+            t.respond(Err(RejectReason::DeadlineExceeded { waited_s: t.waited_s(now) }));
+        } else {
+            live.push(t);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+
+    // Dataset work happens once for the whole batch. Dataset generators
+    // assert on out-of-range specs (e.g. param1 = 0, bad scale) that the
+    // wire protocol can't pre-validate per family, so the build is
+    // unwind-guarded: a panicking build must answer its tickets instead
+    // of killing the worker.
+    let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        cached_problem(state, &batch.dataset_key, &live[0].request.spec)
+    }));
+    let problem = match built {
+        Ok(Ok(p)) => p,
+        Ok(Err(e)) => {
+            for t in &live {
+                t.respond(Err(RejectReason::Failed(e.clone())));
+            }
+            return;
+        }
+        Err(panic) => {
+            // The unwind skipped cached_problem's cleanup: drop the
+            // per-key build-lock entry so repeated bad specs can't grow
+            // the map without bound.
+            plock(&state.problem_build).remove(&batch.dataset_key);
+            let what = panic_message(panic.as_ref());
+            for t in &live {
+                t.respond(Err(RejectReason::Failed(err!(
+                    "dataset build panicked: {what}"
+                ))));
+            }
+            return;
+        }
+    };
+    let batch_size = live.len();
+
+    // Each distinct (γ, ρ, method, warm) job solves once.
+    for (job, idxs) in unique_jobs(&live) {
+        solve_job(state, &batch.dataset_key, &problem, batch_size, &live, job, &idxs);
+    }
+}
+
+fn solve_job(
+    state: &EngineState,
+    dataset_key: &str,
+    problem: &Arc<CachedProblem>,
+    batch_size: usize,
+    live: &[&Ticket],
+    job: JobKey,
+    idxs: &[usize],
+) {
+    let m = &state.metrics;
+    // Second deadline triage: earlier jobs in this batch may have eaten
+    // a ticket's remaining budget while it sat here.
+    let now = Instant::now();
+    let mut targets: Vec<&Ticket> = Vec::with_capacity(idxs.len());
+    for &i in idxs {
+        let t = live[i];
+        if t.expired(now) {
+            m.incr("serve.rejected_deadline", 1);
+            t.respond(Err(RejectReason::DeadlineExceeded { waited_s: t.waited_s(now) }));
+        } else {
+            targets.push(t);
+        }
+    }
+    if targets.is_empty() {
+        return;
+    }
+
+    // Warm-start seed from the dual cache.
+    let want_warm = job.warm_start && state.cfg.warm_start;
+    let seed = if want_warm {
+        state.duals.lookup(dataset_key, job.gamma, job.rho)
+    } else {
+        None
+    };
+    if want_warm {
+        if seed.is_some() {
+            m.incr("serve.warm_hits", 1);
+        } else {
+            m.incr("serve.warm_misses", 1);
+        }
+    }
+    let x0 = seed.as_ref().map(|s| s.dual.as_slice());
+    let warm_started = x0.is_some();
+
+    // A panicking solve must never strand its tickets (a blocked
+    // submitter waits forever) or kill the worker: catch the unwind and
+    // answer with a structured failure instead. Reachable e.g. via
+    // `xla-origin` in a `--features xla` build against the stub.
+    let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        m.time_hist("serve.solve_seconds", || {
+            solve_full_warm(
+                &problem.prob,
+                job.method,
+                job.gamma,
+                job.rho,
+                state.cfg.r,
+                state.cfg.lbfgs.clone(),
+                x0,
+            )
+        })
+    }));
+    let result = match solved {
+        Ok(r) => r,
+        Err(panic) => {
+            let what = panic_message(panic.as_ref());
+            m.incr("serve.solve_panics", 1);
+            for t in targets {
+                t.respond(Err(RejectReason::Failed(err!("solver panicked: {what}"))));
+            }
+            return;
+        }
+    };
+    m.incr("serve.solves", 1);
+    // Feed the cache only while warm starts are on: with them disabled
+    // nothing ever reads the entries, so storing would just burn the
+    // byte budget on dead weight.
+    if state.cfg.warm_start {
+        state
+            .duals
+            .insert(dataset_key, job.gamma, job.rho, result.x.clone());
+        m.set_gauge("serve.warm_cache_bytes", state.duals.bytes() as f64);
+    }
+
+    let result = Arc::new(result);
+    for t in targets {
+        t.respond(Ok(EngineReply {
+            result: Arc::clone(&result),
+            problem: Arc::clone(problem),
+            warm_started,
+            batch_size,
+            queue_wait_s: t.waited_s(now),
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::lbfgs::LbfgsOptions;
+
+    /// Solver options tight enough that cold and warm-started solves of
+    /// the same problem land within ~1e-12 of the same optimum, so the
+    /// 1e-9 warm-vs-cold assertions have real margin.
+    fn tight_lbfgs() -> LbfgsOptions {
+        LbfgsOptions { max_iters: 4000, ftol: 1e-13, gtol: 1e-8, ..Default::default() }
+    }
+
+    fn tiny_spec(seed: u64) -> DatasetSpec {
+        DatasetSpec {
+            family: "synthetic".into(),
+            param1: 3,
+            param2: 4,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    fn request(seed: u64, gamma: f64, rho: f64) -> SolveRequest {
+        SolveRequest {
+            spec: tiny_spec(seed),
+            gamma,
+            rho,
+            method: Method::Fast,
+            deadline: None,
+            warm_start: true,
+        }
+    }
+
+    fn tiny_engine(cfg: ServeConfig) -> Engine {
+        Engine::start(cfg, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn solve_roundtrip_and_warm_second_hit() {
+        let engine =
+            tiny_engine(ServeConfig { workers: 2, lbfgs: tight_lbfgs(), ..Default::default() });
+        let cold = engine.submit(request(5, 1.0, 0.5)).expect("cold solve");
+        assert!(!cold.warm_started);
+        assert!(cold.result.dual_objective > 0.0);
+        let warm = engine.submit(request(5, 1.0, 0.5)).expect("warm solve");
+        assert!(warm.warm_started);
+        assert_eq!(engine.metrics().get("serve.warm_hits"), 1);
+        assert_eq!(engine.metrics().get("serve.solves"), 2);
+        // Warm result must match the cold objective (Theorem 2 survives
+        // warm starts; cache seeds only change the iteration count).
+        assert!(
+            (warm.result.dual_objective - cold.result.dual_objective).abs() <= 1e-9,
+            "cold={} warm={}",
+            cold.result.dual_objective,
+            warm.result.dual_objective
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn invalid_params_rejected_before_admission() {
+        let engine = tiny_engine(ServeConfig { workers: 1, ..Default::default() });
+        let bad_gamma = engine.submit(SolveRequest { gamma: -1.0, ..request(1, 1.0, 0.5) });
+        assert_eq!(bad_gamma.unwrap_err().kind(), "failed");
+        let bad_rho = engine.submit(SolveRequest { rho: 1.5, ..request(1, 1.0, 0.5) });
+        assert_eq!(bad_rho.unwrap_err().kind(), "failed");
+        let nan = engine.submit(SolveRequest { gamma: f64::NAN, ..request(1, 1.0, 0.5) });
+        assert_eq!(nan.unwrap_err().kind(), "failed");
+        assert_eq!(engine.metrics().get("serve.requests"), 0);
+    }
+
+    #[test]
+    fn unknown_dataset_family_fails_cleanly() {
+        let engine = tiny_engine(ServeConfig { workers: 1, ..Default::default() });
+        let mut req = request(1, 1.0, 0.5);
+        req.spec.family = "nope".into();
+        let err = engine.submit(req).unwrap_err();
+        assert_eq!(err.kind(), "failed");
+        // Engine still serves afterwards.
+        assert!(engine.submit(request(1, 1.0, 0.5)).is_ok());
+    }
+
+    #[test]
+    fn panicking_dataset_build_answers_and_survives() {
+        let engine = tiny_engine(ServeConfig { workers: 1, ..Default::default() });
+        let mut req = request(1, 1.0, 0.5);
+        req.spec.param1 = 0; // the synthetic generator asserts on this
+        let err = engine.submit(req).unwrap_err();
+        assert_eq!(err.kind(), "failed");
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // The worker survived the panic and still serves.
+        assert!(engine.submit(request(1, 1.0, 0.5)).is_ok());
+    }
+
+    #[test]
+    fn zero_deadline_expires_before_solve() {
+        let engine = tiny_engine(ServeConfig { workers: 1, ..Default::default() });
+        let mut req = request(1, 1.0, 0.5);
+        req.deadline = Some(Duration::ZERO);
+        let err = engine.submit(req).unwrap_err();
+        assert_eq!(err.kind(), "deadline_exceeded");
+        assert_eq!(engine.metrics().get("serve.rejected_deadline"), 1);
+    }
+
+    #[test]
+    fn shutdown_answers_queued_work() {
+        let engine = tiny_engine(ServeConfig { workers: 1, ..Default::default() });
+        assert!(engine.submit(request(2, 0.5, 0.5)).is_ok());
+        engine.shutdown();
+        // Submits after shutdown are refused, not hung.
+        let err = engine.submit(request(2, 0.5, 0.5)).unwrap_err();
+        assert_eq!(err.kind(), "shutdown");
+    }
+
+    #[test]
+    fn problem_cache_evicts_lru() {
+        let mk = |seed| {
+            let pair = build_pair(&tiny_spec(seed)).unwrap();
+            let prob = OtProblem::from_dataset(&pair);
+            Arc::new(CachedProblem { pair, prob })
+        };
+        let mut c = ProblemCache::default();
+        c.insert("a", mk(1), 2);
+        c.insert("b", mk(2), 2);
+        assert!(c.touch("a").is_some()); // "a" becomes most-recent
+        c.insert("c", mk(3), 2); // evicts "b", the LRU
+        assert!(c.touch("b").is_none());
+        assert!(c.touch("a").is_some());
+        assert!(c.touch("c").is_some());
+    }
+
+    #[test]
+    fn reject_reasons_render() {
+        let reasons = [
+            RejectReason::QueueFull { capacity: 4 },
+            RejectReason::DeadlineExceeded { waited_s: 0.25 },
+            RejectReason::Shutdown,
+            RejectReason::Failed(err!("boom")),
+        ];
+        let kinds: Vec<&str> = reasons.iter().map(RejectReason::kind).collect();
+        assert_eq!(kinds, vec!["queue_full", "deadline_exceeded", "shutdown", "failed"]);
+        for r in &reasons {
+            assert!(!r.to_string().is_empty());
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Closed-loop load generator for the serving engine — the measurement
+//! half of `grpot bench-serve` and `cargo bench --bench bench_serve`.
+//!
+//! N client threads each issue requests back-to-back (closed loop: a
+//! client's next request waits for its previous response), cycling over
+//! a (γ × ρ) grid on one dataset. Cycle 1 is cold; every later cycle
+//! re-requests the same keys, so the warm-start cache must show hits —
+//! the repeated-workload scenario a serving deployment lives in.
+//!
+//! The report carries throughput and latency percentiles computed over
+//! *served* requests only (rejections return in microseconds and would
+//! flatter both numbers), outcome counts for every request, and engine
+//! counters (solves, batches, warm hit rate).
+
+use super::engine::{Engine, RejectReason, SolveRequest};
+use super::ServeConfig;
+use crate::benchlib::percentile_sorted;
+use crate::coordinator::config::{DatasetSpec, Method};
+use crate::coordinator::metrics::Metrics;
+use crate::jsonlite::Value;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Workload description.
+#[derive(Clone, Debug)]
+pub struct LoadScenario {
+    pub spec: DatasetSpec,
+    pub gammas: Vec<f64>,
+    pub rhos: Vec<f64>,
+    /// Passes over the grid per client (≥ 2 exercises warm starts).
+    pub cycles: usize,
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    pub method: Method,
+    /// Per-request deadline forwarded to the engine.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for LoadScenario {
+    fn default() -> Self {
+        LoadScenario {
+            spec: DatasetSpec::default(),
+            gammas: vec![0.1, 1.0],
+            rhos: vec![0.4, 0.8],
+            cycles: 2,
+            clients: 4,
+            method: Method::Fast,
+            deadline: None,
+        }
+    }
+}
+
+impl LoadScenario {
+    /// Requests each client will issue.
+    pub fn requests_per_client(&self) -> usize {
+        self.cycles * self.gammas.len() * self.rhos.len()
+    }
+
+    /// Total requests across all clients.
+    pub fn total_requests(&self) -> usize {
+        self.clients * self.requests_per_client()
+    }
+}
+
+/// Aggregated measurement of one load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub ok: usize,
+    pub rejected_queue_full: usize,
+    pub rejected_deadline: usize,
+    pub failed: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub solves: u64,
+    pub batches: u64,
+    pub warm_hits: u64,
+    pub warm_misses: u64,
+    /// `warm_hits / (warm_hits + warm_misses)`, 0 when no solves ran.
+    pub warm_hit_rate: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("requests", self.requests)
+            .set("ok", self.ok)
+            .set("rejected_queue_full", self.rejected_queue_full)
+            .set("rejected_deadline", self.rejected_deadline)
+            .set("failed", self.failed)
+            .set("wall_s", self.wall_s)
+            .set("throughput_rps", self.throughput_rps)
+            .set("p50_ms", self.p50_ms)
+            .set("p95_ms", self.p95_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("max_ms", self.max_ms)
+            .set("solves", self.solves)
+            .set("batches", self.batches)
+            .set("warm_hits", self.warm_hits)
+            .set("warm_misses", self.warm_misses)
+            .set("warm_hit_rate", self.warm_hit_rate)
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn print_summary(&self) {
+        println!(
+            "requests   : {} ok, {} queue-full, {} deadline, {} failed (of {})",
+            self.ok, self.rejected_queue_full, self.rejected_deadline, self.failed, self.requests
+        );
+        println!("throughput : {:.2} req/s over {:.2}s", self.throughput_rps, self.wall_s);
+        println!(
+            "latency    : p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | max {:.2} ms",
+            self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms
+        );
+        println!(
+            "engine     : {} solves in {} batches | warm hit rate {:.1}% ({} hits / {} misses)",
+            self.solves,
+            self.batches,
+            100.0 * self.warm_hit_rate,
+            self.warm_hits,
+            self.warm_misses
+        );
+    }
+}
+
+/// Run the closed loop: start an engine with `cfg`, drive it with the
+/// scenario's clients, shut it down and report.
+pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::start(cfg, Arc::clone(&metrics));
+
+    let latencies = Mutex::new(Vec::with_capacity(scenario.total_requests()));
+    let counts = Mutex::new([0usize; 4]); // ok, queue_full, deadline, failed
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..scenario.clients {
+            let engine = &engine;
+            let latencies = &latencies;
+            let counts = &counts;
+            s.spawn(move || {
+                let mut local_lat = Vec::with_capacity(scenario.requests_per_client());
+                let mut local = [0usize; 4];
+                // Offset each client's walk so concurrent clients mix
+                // distinct and identical keys deterministically.
+                let grid: Vec<(f64, f64)> = scenario
+                    .gammas
+                    .iter()
+                    .flat_map(|&g| scenario.rhos.iter().map(move |&r| (g, r)))
+                    .collect();
+                for _cycle in 0..scenario.cycles {
+                    for k in 0..grid.len() {
+                        let (gamma, rho) = grid[(k + c) % grid.len()];
+                        let t = Instant::now();
+                        let out = engine.submit(SolveRequest {
+                            spec: scenario.spec.clone(),
+                            gamma,
+                            rho,
+                            method: scenario.method,
+                            deadline: scenario.deadline,
+                            warm_start: true,
+                        });
+                        // Rejections return in microseconds; only served
+                        // requests count toward latency and throughput,
+                        // otherwise shed load would flatter the numbers.
+                        let slot = match out {
+                            Ok(_) => {
+                                local_lat.push(t.elapsed().as_secs_f64());
+                                0
+                            }
+                            Err(RejectReason::QueueFull { .. }) => 1,
+                            Err(RejectReason::DeadlineExceeded { .. }) => 2,
+                            Err(_) => 3,
+                        };
+                        local[slot] += 1;
+                    }
+                }
+                latencies.lock().unwrap().extend(local_lat);
+                let mut shared = counts.lock().unwrap();
+                for (acc, v) in shared.iter_mut().zip(local) {
+                    *acc += v;
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    engine.shutdown();
+
+    let mut lats = latencies.into_inner().unwrap();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if lats.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&lats, p) * 1e3
+        }
+    };
+    let [ok, queue_full, deadline, failed] = counts.into_inner().unwrap();
+    let warm_hits = metrics.get("serve.warm_hits");
+    let warm_misses = metrics.get("serve.warm_misses");
+    let warm_total = warm_hits + warm_misses;
+    let requests = scenario.total_requests();
+    LoadReport {
+        requests,
+        ok,
+        rejected_queue_full: queue_full,
+        rejected_deadline: deadline,
+        failed,
+        wall_s,
+        throughput_rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
+        p50_ms: pct(50.0),
+        p95_ms: pct(95.0),
+        p99_ms: pct(99.0),
+        max_ms: lats.last().copied().unwrap_or(0.0) * 1e3,
+        solves: metrics.get("serve.solves"),
+        batches: metrics.get("serve.batches"),
+        warm_hits,
+        warm_misses,
+        warm_hit_rate: if warm_total > 0 { warm_hits as f64 / warm_total as f64 } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_scenario() -> LoadScenario {
+        LoadScenario {
+            spec: DatasetSpec {
+                family: "synthetic".into(),
+                param1: 3,
+                param2: 4,
+                seed: 9,
+                ..Default::default()
+            },
+            gammas: vec![0.5, 1.0],
+            rhos: vec![0.5],
+            cycles: 2,
+            clients: 3,
+            method: Method::Fast,
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn closed_loop_accounts_for_every_request() {
+        let scenario = tiny_scenario();
+        let report = run_load(ServeConfig { workers: 2, ..Default::default() }, &scenario);
+        assert_eq!(report.requests, scenario.total_requests());
+        assert_eq!(
+            report.ok + report.rejected_queue_full + report.rejected_deadline + report.failed,
+            report.requests
+        );
+        // Generous queue + no deadlines: everything succeeds.
+        assert_eq!(report.ok, report.requests);
+        // Repeated workload must warm-start.
+        assert!(report.warm_hits > 0, "no warm hits: {report:?}");
+        assert!(report.warm_hit_rate > 0.0);
+        // Batching can only deduplicate, never add solves.
+        assert!(report.solves <= report.requests as u64);
+        assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+        assert!(report.throughput_rps > 0.0);
+        let v = report.to_json();
+        assert_eq!(v.get("ok").and_then(Value::as_usize), Some(report.ok));
+    }
+}

@@ -1,0 +1,105 @@
+//! The serving engine: the layer between the TCP front-end and the OT
+//! solvers, built for a serving workload (many small solves against a
+//! handful of datasets, heavy key reuse) rather than one-shot research
+//! runs.
+//!
+//! Four pieces, one per module:
+//!
+//! * [`queue`] — admission control: a capacity-bounded request queue
+//!   with per-request deadlines. Overload is rejected *at submit time*
+//!   with a structured error ([`engine::RejectReason::QueueFull`])
+//!   instead of piling up unbounded work; requests whose deadline
+//!   passes while queued are answered with
+//!   [`engine::RejectReason::DeadlineExceeded`] without ever touching a
+//!   solver.
+//! * [`batcher`] — micro-batching: concurrent requests against the same
+//!   dataset spec are coalesced so the cost matrix / group structure is
+//!   built (or fetched) once per batch, and *identical* (γ, ρ, method)
+//!   requests within a batch are solved once and fanned out to every
+//!   waiter.
+//! * [`cache`] — the warm-start dual cache: recent dual vectors keyed by
+//!   (dataset, γ, ρ) under an LRU byte budget. A hit seeds L-BFGS from
+//!   the cached (near-)optimum; the paper's safe-screening guarantees
+//!   hold from any starting point (Theorem 2), so warm starts change
+//!   iteration counts, never results.
+//! * [`engine`] — the engine itself: worker threads consuming batches
+//!   from the queue, solving via [`crate::coordinator::sweep::solve_full_warm`]
+//!   and publishing per-request metrics (latency percentiles, queue
+//!   depth, warm hit/miss, rejections).
+//!
+//! [`loadgen`] adds the closed-loop load generator behind
+//! `grpot bench-serve` and `cargo bench --bench bench_serve`.
+
+pub mod batcher;
+pub mod cache;
+pub mod engine;
+pub mod loadgen;
+pub mod queue;
+
+pub use cache::DualCache;
+pub use engine::{CachedProblem, Engine, EngineReply, RejectReason, SolveRequest};
+
+use crate::solvers::lbfgs::LbfgsOptions;
+use std::time::Duration;
+
+/// Engine tuning knobs. The defaults suit the in-repo demo datasets;
+/// each knob is surfaced as a `grpot serve` / `grpot bench-serve` flag
+/// (the inner L-BFGS options via `--max-iters`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Solver worker threads — the maximum number of concurrent solves.
+    pub workers: usize,
+    /// Admission-queue capacity; submits beyond it are rejected.
+    pub queue_capacity: usize,
+    /// Deadline applied to requests that don't carry their own.
+    /// `None` = no default deadline.
+    pub default_deadline: Option<Duration>,
+    /// Maximum requests coalesced into one micro-batch.
+    pub max_batch: usize,
+    /// Warm-start cache budget in bytes (0 disables caching).
+    pub warm_cache_bytes: usize,
+    /// Maximum datasets kept in the problem cache (cost matrix + pair);
+    /// least-recently-used entries are evicted beyond this.
+    pub problem_cache_entries: usize,
+    /// Master switch for warm starts (per-request opt-out on top).
+    pub warm_start: bool,
+    /// Maximum hyperparameter distance `√((Δln γ)² + (Δρ)²)` at which a
+    /// cached dual still seeds a solve.
+    pub warm_radius: f64,
+    /// Snapshot interval `r` passed to the Algorithm-1 driver.
+    pub r: usize,
+    /// Inner-solver options for every engine solve.
+    pub lbfgs: LbfgsOptions,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            queue_capacity: 128,
+            default_deadline: None,
+            max_batch: 16,
+            warm_cache_bytes: 64 << 20,
+            problem_cache_entries: 32,
+            warm_start: true,
+            warm_radius: 2.0,
+            r: 10,
+            lbfgs: LbfgsOptions::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.workers >= 1);
+        assert!(cfg.queue_capacity >= cfg.workers);
+        assert!(cfg.max_batch >= 1);
+        assert!(cfg.warm_start);
+        assert!(cfg.warm_cache_bytes > 0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Admission control: tickets, deadlines and the one-shot response
+//! slot connecting a blocked submitter to the worker that eventually
+//! answers it.
+//!
+//! The queue itself is [`crate::pool::BoundedQueue`]; this module adds
+//! the serving semantics on top: a [`Ticket`] carries the request, its
+//! submission time, an absolute deadline and the [`ResponseSlot`] the
+//! submitter parks on. Backpressure is non-blocking by construction —
+//! a full queue rejects at submit time rather than slowing intake.
+
+use super::engine::{EngineReply, RejectReason, SolveRequest};
+use crate::pool::BoundedQueue;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// What a submitter eventually receives.
+pub type EngineResult = Result<EngineReply, RejectReason>;
+
+/// The engine's admission queue.
+pub type AdmissionQueue = BoundedQueue<Ticket>;
+
+/// One-shot rendezvous: the submitter blocks in [`ResponseSlot::wait`]
+/// until a worker calls [`ResponseSlot::put`].
+pub struct ResponseSlot<T> {
+    state: Mutex<Option<T>>,
+    cvar: Condvar,
+}
+
+impl<T> Default for ResponseSlot<T> {
+    fn default() -> Self {
+        ResponseSlot { state: Mutex::new(None), cvar: Condvar::new() }
+    }
+}
+
+impl<T> ResponseSlot<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Deliver the response (first write wins) and wake the waiter.
+    pub fn put(&self, value: T) {
+        let mut st = self.state.lock().unwrap();
+        if st.is_none() {
+            *st = Some(value);
+        }
+        drop(st);
+        self.cvar.notify_all();
+    }
+
+    /// Block until a response arrives, then take it.
+    pub fn wait(&self) -> T {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.take() {
+                return v;
+            }
+            st = self.cvar.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking take (tests / diagnostics).
+    pub fn try_take(&self) -> Option<T> {
+        self.state.lock().unwrap().take()
+    }
+}
+
+/// A queued solve request: the work item flowing from `submit` through
+/// the micro-batcher to a worker.
+pub struct Ticket {
+    pub request: SolveRequest,
+    /// Precomputed [`crate::coordinator::config::DatasetSpec::cache_key`]
+    /// — the batcher's coalescing key.
+    pub dataset_key: String,
+    pub submitted: Instant,
+    /// Absolute deadline (request-level, falling back to the engine
+    /// default). `None` = may wait indefinitely.
+    pub deadline: Option<Instant>,
+    slot: Arc<ResponseSlot<EngineResult>>,
+}
+
+impl Ticket {
+    /// Build a ticket and the slot handle its submitter parks on.
+    pub fn new(
+        request: SolveRequest,
+        default_deadline: Option<Duration>,
+    ) -> (Ticket, Arc<ResponseSlot<EngineResult>>) {
+        let submitted = Instant::now();
+        let slot = Arc::new(ResponseSlot::new());
+        let deadline = request
+            .deadline
+            .or(default_deadline)
+            .map(|d| submitted + d);
+        let ticket = Ticket {
+            dataset_key: request.spec.cache_key(),
+            request,
+            submitted,
+            deadline,
+            slot: Arc::clone(&slot),
+        };
+        (ticket, slot)
+    }
+
+    /// Has the deadline passed as of `now`?
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Seconds spent since submission.
+    pub fn waited_s(&self, now: Instant) -> f64 {
+        now.saturating_duration_since(self.submitted).as_secs_f64()
+    }
+
+    /// Answer the submitter.
+    pub fn respond(&self, result: EngineResult) {
+        self.slot.put(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{DatasetSpec, Method};
+
+    fn request(deadline: Option<Duration>) -> SolveRequest {
+        SolveRequest {
+            spec: DatasetSpec::default(),
+            gamma: 1.0,
+            rho: 0.5,
+            method: Method::Fast,
+            deadline,
+            warm_start: true,
+        }
+    }
+
+    #[test]
+    fn slot_roundtrip_across_threads() {
+        let slot = Arc::new(ResponseSlot::<u32>::new());
+        let s2 = Arc::clone(&slot);
+        let h = std::thread::spawn(move || s2.wait());
+        std::thread::sleep(Duration::from_millis(5));
+        slot.put(99);
+        assert_eq!(h.join().unwrap(), 99);
+        // First write wins.
+        slot.put(1);
+        slot.put(2);
+        assert_eq!(slot.try_take(), Some(1));
+        assert_eq!(slot.try_take(), None);
+    }
+
+    #[test]
+    fn ticket_deadline_resolution() {
+        // Request deadline wins over the engine default.
+        let (t, _slot) = Ticket::new(request(Some(Duration::ZERO)), Some(Duration::from_secs(60)));
+        assert!(t.expired(Instant::now()));
+        // Engine default applies when the request has none.
+        let (t, _slot) = Ticket::new(request(None), Some(Duration::from_secs(60)));
+        assert!(!t.expired(Instant::now()));
+        // No deadline anywhere: never expires.
+        let (t, _slot) = Ticket::new(request(None), None);
+        assert!(!t.expired(Instant::now() + Duration::from_secs(3600)));
+        assert!(t.waited_s(Instant::now()) >= 0.0);
+    }
+
+    #[test]
+    fn ticket_precomputes_dataset_key() {
+        let (t, _slot) = Ticket::new(request(None), None);
+        assert_eq!(t.dataset_key, DatasetSpec::default().cache_key());
+    }
+}

@@ -1,0 +1,294 @@
+//! Serving-engine integration: a multi-client concurrency hammer, the
+//! warm-vs-cold Theorem-2 invariant, backpressure and deadline
+//! semantics, and the TCP wire protocol's new serving fields.
+
+use grpot::coordinator::config::{DatasetSpec, Method};
+use grpot::coordinator::metrics::Metrics;
+use grpot::coordinator::service::{serve_with, Client};
+use grpot::jsonlite::Value;
+use grpot::serve::{Engine, RejectReason, ServeConfig, SolveRequest};
+use grpot::solvers::lbfgs::LbfgsOptions;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+
+fn tiny_spec(seed: u64) -> DatasetSpec {
+    DatasetSpec {
+        family: "synthetic".into(),
+        param1: 4,
+        param2: 5,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn request(seed: u64, gamma: f64, rho: f64) -> SolveRequest {
+    SolveRequest {
+        spec: tiny_spec(seed),
+        gamma,
+        rho,
+        method: Method::Fast,
+        deadline: None,
+        warm_start: true,
+    }
+}
+
+/// Solver options tight enough that independent solves of the same
+/// problem agree to well below the 1e-9 assertion threshold.
+fn tight_lbfgs() -> LbfgsOptions {
+    LbfgsOptions { max_iters: 4000, ftol: 1e-13, gtol: 1e-8, ..Default::default() }
+}
+
+#[test]
+fn hammer_no_deadlocks_no_lost_responses() {
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::start(
+        ServeConfig { workers: 3, queue_capacity: 256, ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    let clients = 8;
+    let per_client = 6;
+    let ok = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let engine = &engine;
+            let ok = &ok;
+            s.spawn(move || {
+                // Overlapping (γ, ρ) walks: plenty of identical
+                // concurrent requests for the batcher to dedupe.
+                let gammas = [0.2, 1.0, 5.0];
+                let rhos = [0.4, 0.7];
+                for k in 0..per_client {
+                    let gamma = gammas[(c + k) % gammas.len()];
+                    let rho = rhos[k % rhos.len()];
+                    let reply = engine
+                        .submit(request(3, gamma, rho))
+                        .expect("every request must be answered");
+                    assert!(reply.result.dual_objective > 0.0);
+                    assert!(reply.batch_size >= 1);
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        }
+    });
+    let total = (clients * per_client) as u64;
+    assert_eq!(ok.load(Ordering::SeqCst) as u64, total);
+    assert_eq!(metrics.get("serve.requests"), total);
+    assert_eq!(metrics.hist_count("serve.latency_seconds"), total);
+    // Identical concurrent requests dedupe; repeats warm-start.
+    assert!(metrics.get("serve.solves") <= total);
+    assert!(metrics.get("serve.warm_hits") > 0, "repeated keys must hit the dual cache");
+    assert_eq!(engine.queue_depth(), 0);
+    engine.shutdown();
+}
+
+#[test]
+fn warm_started_solve_matches_cold_dual_objective() {
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::start(
+        ServeConfig { workers: 2, lbfgs: tight_lbfgs(), ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    // Cold reference: warm starts disabled for this request.
+    let mut cold_req = request(11, 0.8, 0.6);
+    cold_req.warm_start = false;
+    let cold = engine.submit(cold_req).expect("cold solve");
+    assert!(!cold.warm_started);
+
+    // Populate the cache, then solve the identical problem warm.
+    engine.submit(request(11, 0.8, 0.6)).expect("cache-filling solve");
+    let warm = engine.submit(request(11, 0.8, 0.6)).expect("warm solve");
+    assert!(warm.warm_started, "second identical solve must warm-start");
+    assert!(metrics.get("serve.warm_hits") >= 1);
+
+    // The Theorem-2 invariant survives warm starts: same problem, same
+    // dual objective to 1e-9, regardless of the starting iterate.
+    let diff = (warm.result.dual_objective - cold.result.dual_objective).abs();
+    assert!(
+        diff <= 1e-9,
+        "warm={} cold={} diff={diff:e}",
+        warm.result.dual_objective,
+        cold.result.dual_objective
+    );
+    // Warm starts seed close to the optimum, so they converge in fewer
+    // iterations than the cold solve.
+    assert!(
+        warm.result.iterations <= cold.result.iterations,
+        "warm {} vs cold {} iterations",
+        warm.result.iterations,
+        cold.result.iterations
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_with_structured_error() {
+    let engine = Engine::start(
+        ServeConfig {
+            workers: 1,
+            queue_capacity: 1,
+            max_batch: 1,
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    let burst = 6;
+    let barrier = Barrier::new(burst);
+    let ok = AtomicUsize::new(0);
+    let full = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..burst {
+            let engine = &engine;
+            let barrier = &barrier;
+            let (ok, full) = (&ok, &full);
+            s.spawn(move || {
+                barrier.wait();
+                match engine.submit(request(21, 1.0, 0.5)) {
+                    Ok(_) => {
+                        ok.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(RejectReason::QueueFull { capacity }) => {
+                        assert_eq!(capacity, 1);
+                        full.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(other) => panic!("unexpected rejection: {other}"),
+                }
+            });
+        }
+    });
+    assert_eq!(ok.load(Ordering::SeqCst) + full.load(Ordering::SeqCst), burst);
+    // A simultaneous burst against a single slow worker with a 1-deep
+    // queue must shed load…
+    assert!(full.load(Ordering::SeqCst) >= 1, "no backpressure seen");
+    // …but never drop everyone.
+    assert!(ok.load(Ordering::SeqCst) >= 1, "no request served");
+    assert_eq!(
+        engine.metrics().get("serve.rejected_queue_full"),
+        full.load(Ordering::SeqCst) as u64
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn service_exposes_serving_protocol_and_metrics() {
+    let handle = serve_with(
+        "127.0.0.1:0",
+        ServeConfig { workers: 2, ..Default::default() },
+    )
+    .expect("bind");
+    let mut c = Client::connect(&handle.addr).expect("connect");
+
+    let solve_req = |warm: bool| {
+        Value::obj()
+            .set("op", "solve")
+            .set(
+                "dataset",
+                Value::obj()
+                    .set("family", "synthetic")
+                    .set("param1", 4usize)
+                    .set("param2", 5usize)
+                    .set("seed", 31usize),
+            )
+            .set("gamma", 0.5)
+            .set("rho", 0.6)
+            .set("method", "fast")
+            .set("warm_start", warm)
+    };
+
+    // First solve: cold, carries the serving fields.
+    let first = c.call(&solve_req(true)).expect("solve");
+    assert_eq!(first.get("ok").and_then(Value::as_bool), Some(true), "{first}");
+    assert_eq!(first.get("warm_started").and_then(Value::as_bool), Some(false));
+    assert!(first.get("batch_size").and_then(Value::as_usize).unwrap() >= 1);
+    assert!(first.get("queue_wait_s").and_then(Value::as_f64).unwrap() >= 0.0);
+
+    // Second identical solve: warm.
+    let second = c.call(&solve_req(true)).expect("solve");
+    assert_eq!(second.get("warm_started").and_then(Value::as_bool), Some(true), "{second}");
+    let d1 = first.get("dual_objective").and_then(Value::as_f64).unwrap();
+    let d2 = second.get("dual_objective").and_then(Value::as_f64).unwrap();
+    assert!((d1 - d2).abs() <= 1e-9, "warm TCP solve drifted: {d1} vs {d2}");
+
+    // Expired deadline: structured rejection, not a generic error.
+    let expired = c
+        .call(&solve_req(true).set("deadline_ms", 0.0))
+        .expect("call");
+    assert_eq!(expired.get("ok").and_then(Value::as_bool), Some(false), "{expired}");
+    assert_eq!(
+        expired.get("error_kind").and_then(Value::as_str),
+        Some("deadline_exceeded"),
+        "{expired}"
+    );
+
+    // An absurd deadline is clamped, never a connection-killing panic.
+    let huge = c
+        .call(&solve_req(true).set("deadline_ms", 1e300))
+        .expect("call survives huge deadline");
+    assert_eq!(huge.get("ok").and_then(Value::as_bool), Some(true), "{huge}");
+
+    // Metrics op: full serving surface (percentiles, queue depth,
+    // rejections, warm hits/misses).
+    let m = c.call(&Value::obj().set("op", "metrics")).expect("metrics");
+    let counters = [
+        "serve.requests",
+        "serve.rejected_deadline",
+        "serve.warm_hits",
+        "serve.warm_misses",
+        "serve.solves",
+    ];
+    for name in counters {
+        assert!(
+            m.get_path(&["metrics", "counters", name]).is_some(),
+            "missing counter {name}: {m}"
+        );
+    }
+    assert!(
+        m.get_path(&["metrics", "hists", "serve.latency_seconds", "p50"]).is_some(),
+        "missing latency p50: {m}"
+    );
+    assert!(
+        m.get_path(&["metrics", "hists", "serve.latency_seconds", "p99"]).is_some(),
+        "missing latency p99: {m}"
+    );
+    assert!(
+        m.get_path(&["metrics", "gauges", "serve.queue_depth"]).is_some(),
+        "missing queue depth gauge: {m}"
+    );
+    assert!(
+        m.get_path(&["metrics", "counters", "serve.rejected_deadline"])
+            .and_then(Value::as_usize)
+            .unwrap()
+            >= 1
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn batching_dedupes_identical_queued_requests() {
+    // One worker + a barrier burst of identical requests: whatever the
+    // interleaving, responses must be complete and solves must not
+    // exceed the number of distinct arrival waves (requests ≥ solves).
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::start(
+        ServeConfig { workers: 1, queue_capacity: 64, ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    let burst = 6;
+    let barrier = Barrier::new(burst);
+    std::thread::scope(|s| {
+        for _ in 0..burst {
+            let engine = &engine;
+            let barrier = &barrier;
+            s.spawn(move || {
+                barrier.wait();
+                let reply = engine.submit(request(41, 2.0, 0.5)).expect("answered");
+                assert!(reply.result.dual_objective > 0.0);
+            });
+        }
+    });
+    let solves = metrics.get("serve.solves");
+    assert!(solves >= 1 && solves <= burst as u64, "solves={solves}");
+    // All six were identical; at least the ones queued behind the first
+    // batch share a solve whenever any batching happened at all.
+    assert_eq!(metrics.get("serve.requests"), burst as u64);
+    engine.shutdown();
+}

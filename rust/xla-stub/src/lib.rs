@@ -1,0 +1,145 @@
+//! Offline stub of the `xla` bindings crate (the xla-rs API subset the
+//! `grpot` runtime uses).
+//!
+//! Purpose: `cargo build --features xla` must *compile* in a
+//! network-less image that cannot fetch the real bindings crate or the
+//! `xla_extension` shared library. Every runtime entry point returns a
+//! [`Error`] explaining how to swap in the real thing: repoint the
+//! `xla` path dependency in `rust/Cargo.toml` at an xla-rs checkout and
+//! rebuild.
+//!
+//! The types mirror xla-rs names and signatures exactly where `grpot`
+//! touches them ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//! [`PjRtBuffer`], [`Literal`], [`HloModuleProto`], [`XlaComputation`]);
+//! nothing else is provided. Because [`PjRtClient::cpu`] already fails,
+//! no stubbed execution path is reachable in practice.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error carrying the "this is not the real runtime" message.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} is unavailable — this build links the in-tree stub of the `xla` \
+         bindings (rust/xla-stub). Point the `xla` path dependency in rust/Cargo.toml at a \
+         real xla-rs checkout (with libxla_extension) and rebuild with `--features xla` to \
+         enable the PJRT runtime"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        stub_err("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// Compiled executable (stub: never obtainable, execution always fails).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal. Constructors succeed (they are called before any
+/// fallible PJRT interaction); accessors fail.
+#[derive(Clone)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[f64]) -> Literal {
+        Literal(())
+    }
+
+    pub fn scalar(_value: f64) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        stub_err("Literal::to_tuple3")
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        stub_err("Literal::get_first_element")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub_err("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_runtime_entry_errors_with_pointer() {
+        let e = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(e.to_string().contains("xla stub"), "{e}");
+        assert!(e.to_string().contains("rust/xla-stub"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_ok());
+        assert!(lit.clone().to_tuple3().is_err());
+        assert!(lit.get_first_element::<f64>().is_err());
+        assert!(lit.to_vec::<f64>().is_err());
+        let _ = Literal::scalar(0.5);
+    }
+}
