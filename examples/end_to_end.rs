@@ -95,6 +95,7 @@ fn main() -> Result<()> {
         methods: vec![Method::Fast, Method::Origin],
         r: 10,
         threads: 1,
+        solve_threads: 1,
         max_iters: 400,
     };
     let metrics = Metrics::new();

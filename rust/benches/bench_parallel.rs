@@ -1,0 +1,108 @@
+//! Intra-solve parallel scaling: threads ∈ {1, 2, 4, 8} × {fast,
+//! origin} on the large synthetic problem. Reports seconds per solve
+//! and speedup over threads = 1, and *verifies* — in every mode,
+//! including CI smoke — that each thread count returns the byte-equal
+//! solution, objective and iteration count (the determinism guarantee
+//! the pool's ordered chunk reduction provides).
+//!
+//! Target (recorded in ROADMAP.md next to the bench-serve baseline):
+//! ≥ 1.5× wall-clock speedup at 4 threads on the full-size problem.
+
+mod common;
+
+use common::*;
+use grpot::benchlib::{report_dir, smoke_mode, Table, Timer};
+use grpot::coordinator::config::Method;
+use grpot::data::synthetic;
+use grpot::ot::fastot::{solve_fast_ot, FastOtConfig, FastOtResult};
+use grpot::ot::origin::solve_origin;
+use grpot::solvers::lbfgs::LbfgsOptions;
+
+/// Iteration cap per solve: long enough that oracle time dominates the
+/// measurement, short enough that the 4-point thread grid × reps stays
+/// minutes in full mode.
+fn bench_iters() -> usize {
+    size3(10, 100, 200)
+}
+
+fn solve(prob: &grpot::ot::dual::OtProblem, method: Method, threads: usize) -> FastOtResult {
+    let cfg = FastOtConfig {
+        gamma: 0.5,
+        rho: 0.6,
+        threads,
+        lbfgs: LbfgsOptions { max_iters: bench_iters(), ..Default::default() },
+        ..Default::default()
+    };
+    match method {
+        Method::Origin => solve_origin(prob, &cfg),
+        _ => solve_fast_ot(prob, &cfg),
+    }
+}
+
+fn main() {
+    banner("parallel scaling");
+    // Full mode: |L|=64 classes × 10 samples ⇒ m = n = 640, the
+    // "large synthetic problem" regime of the scaling criterion.
+    let l = size3(4, 24, 64);
+    let g = size3(5, 10, 10);
+    let pair = synthetic::controlled(l, g, 0x9A11);
+    let prob = problem_of(&pair);
+    println!("problem: m={} n={} |L|={}", prob.m(), prob.n(), l);
+
+    let thread_grid: Vec<usize> = if smoke_mode() { vec![1, 2] } else { vec![1, 2, 4, 8] };
+    let reps = size3(1, 2, 3);
+
+    let mut table = Table::new(
+        "parallel scaling (speedup vs threads=1)",
+        &["method", "threads", "s/solve", "speedup", "identical"],
+    );
+    for method in [Method::Fast, Method::Origin] {
+        let mut baseline: Option<(FastOtResult, f64)> = None;
+        for &threads in &thread_grid {
+            // Best-of-reps wall time; the solve result is identical
+            // every rep by construction.
+            let mut best = f64::INFINITY;
+            let mut res: Option<FastOtResult> = None;
+            for _ in 0..reps {
+                let timer = Timer::start();
+                let r = solve(&prob, method, threads);
+                best = best.min(timer.elapsed_s());
+                res = Some(r);
+            }
+            let res = res.expect("at least one rep");
+            let (speedup, identical) = match &baseline {
+                None => (1.0, true),
+                Some((b, t1)) => {
+                    let same = b.x == res.x
+                        && b.dual_objective == res.dual_objective
+                        && b.iterations == res.iterations;
+                    (t1 / best.max(1e-12), same)
+                }
+            };
+            assert!(
+                identical,
+                "{} at {threads} threads diverged from the serial solve",
+                method.name()
+            );
+            println!(
+                "{:<8} threads={threads} {:>9.4} s/solve speedup={speedup:>5.2}x identical={identical}",
+                method.name(),
+                best
+            );
+            if !smoke_mode() && threads == 4 && speedup < 1.5 {
+                println!("  !! below the 1.5x target at 4 threads");
+            }
+            table.row(vec![
+                method.name().into(),
+                format!("{threads}"),
+                format!("{best:.4}"),
+                format!("{speedup:.2}"),
+                if identical { "ok".into() } else { "MISMATCH".into() },
+            ]);
+            if baseline.is_none() {
+                baseline = Some((res, best));
+            }
+        }
+    }
+    table.emit(&report_dir(), "bench_parallel");
+}

@@ -32,30 +32,35 @@ fn main() {
         table.row(vec![name.into(), format!("{ms:.3}")]);
     };
 
-    // Dense eval.
+    // Dense eval, serial and with 4 intra-eval oracle threads (results
+    // are bit-identical; only the wall clock moves).
     let sparse_params = DualParams::new(5.0, 0.8); // strong reg ⇒ sparse
     let dense_params = DualParams::new(0.01, 0.2); // weak reg ⇒ dense
     for (tag, params) in [("sparse", sparse_params), ("dense", dense_params)] {
-        let mut origin = OriginOracle::new(&prob, params);
-        let t = bench_fn("origin", &opts, || {
-            origin.eval(&x, &mut grad);
-        });
-        record(&format!("origin eval ({tag} regime)"), t.seconds() * 1e3);
+        for threads in [1usize, 4] {
+            let mut origin = OriginOracle::with_threads(&prob, params, threads);
+            let t = bench_fn("origin", &opts, || {
+                origin.eval(&x, &mut grad);
+            });
+            record(&format!("origin eval ({tag}, {threads}t)"), t.seconds() * 1e3);
 
-        let mut screen = ScreeningOracle::new(&prob, params, true);
-        screen.refresh(&x);
-        let t = bench_fn("screen", &opts, || {
-            screen.eval(&x, &mut grad);
-        });
-        record(&format!("screened eval ({tag} regime)"), t.seconds() * 1e3);
+            let mut screen = ScreeningOracle::with_threads(&prob, params, true, threads);
+            screen.refresh(&x);
+            let t = bench_fn("screen", &opts, || {
+                screen.eval(&x, &mut grad);
+            });
+            record(&format!("screened eval ({tag}, {threads}t)"), t.seconds() * 1e3);
+        }
     }
 
-    // Snapshot refresh (the O(mn) periodic cost).
-    let mut screen = ScreeningOracle::new(&prob, sparse_params, true);
-    let t = bench_fn("refresh", &opts, || {
-        screen.refresh(&x);
-    });
-    record("snapshot + working-set refresh", t.seconds() * 1e3);
+    // Snapshot refresh (the O(mn) periodic cost), serial vs threaded.
+    for threads in [1usize, 4] {
+        let mut screen = ScreeningOracle::with_threads(&prob, sparse_params, true, threads);
+        let t = bench_fn("refresh", &opts, || {
+            screen.refresh(&x);
+        });
+        record(&format!("snapshot + ws refresh ({threads}t)"), t.seconds() * 1e3);
+    }
 
     table.emit(&report_dir(), "hotpath_microbench");
 }

@@ -115,6 +115,10 @@ pub struct SweepConfig {
     pub r: usize,
     /// Worker threads for the job scheduler.
     pub threads: usize,
+    /// Intra-solve oracle workers per job (deterministic: records are
+    /// bit-identical for every value; 1 = the paper-faithful serial hot
+    /// path).
+    pub solve_threads: usize,
     /// L-BFGS iteration cap per job.
     pub max_iters: usize,
 }
@@ -128,6 +132,7 @@ impl Default for SweepConfig {
             methods: vec![Method::Fast, Method::Origin],
             r: 10,
             threads: 1,
+            solve_threads: 1,
             max_iters: 1000,
         }
     }
@@ -174,6 +179,9 @@ impl SweepConfig {
         if let Some(x) = v.get("threads").and_then(Value::as_usize) {
             cfg.threads = x;
         }
+        if let Some(x) = v.get("solve_threads").and_then(Value::as_usize) {
+            cfg.solve_threads = x;
+        }
         if let Some(x) = v.get("max_iters").and_then(Value::as_usize) {
             cfg.max_iters = x;
         }
@@ -208,6 +216,7 @@ impl SweepConfig {
             )
             .set("r", self.r)
             .set("threads", self.threads)
+            .set("solve_threads", self.solve_threads)
             .set("max_iters", self.max_iters)
     }
 }
@@ -232,6 +241,7 @@ mod tests {
             methods: vec![Method::Fast, Method::XlaOrigin],
             r: 5,
             threads: 3,
+            solve_threads: 2,
             max_iters: 50,
             dataset: DatasetSpec {
                 family: "digits".into(),
@@ -248,6 +258,7 @@ mod tests {
         assert_eq!(back.methods, cfg.methods);
         assert_eq!(back.r, 5);
         assert_eq!(back.threads, 3);
+        assert_eq!(back.solve_threads, 2);
         assert_eq!(back.dataset, cfg.dataset);
     }
 

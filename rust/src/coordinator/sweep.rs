@@ -74,6 +74,20 @@ pub fn solve_full(
     r: usize,
     max_iters: usize,
 ) -> crate::ot::fastot::FastOtResult {
+    solve_full_threads(prob, method, gamma, rho, r, max_iters, 1)
+}
+
+/// [`solve_full`] with `threads` intra-solve oracle workers. The solve
+/// is deterministic: any thread count returns the bit-identical result.
+pub fn solve_full_threads(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    max_iters: usize,
+    threads: usize,
+) -> crate::ot::fastot::FastOtResult {
     solve_full_warm(
         prob,
         method,
@@ -82,12 +96,15 @@ pub fn solve_full(
         r,
         LbfgsOptions { max_iters, ..Default::default() },
         None,
+        threads,
     )
 }
 
-/// Solve one (method, γ, ρ) job with explicit L-BFGS options and an
-/// optional warm-start iterate — the serving engine's solve entry.
-/// `x0 = None` starts from the origin exactly like [`solve_full`].
+/// Solve one (method, γ, ρ) job with explicit L-BFGS options, an
+/// optional warm-start iterate and an intra-solve thread count — the
+/// serving engine's solve entry. `x0 = None` starts from the origin
+/// exactly like [`solve_full`]; `threads = 1` is the serial hot path.
+#[allow(clippy::too_many_arguments)]
 pub fn solve_full_warm(
     prob: &OtProblem,
     method: Method,
@@ -96,12 +113,14 @@ pub fn solve_full_warm(
     r: usize,
     lbfgs: LbfgsOptions,
     x0: Option<&[f64]>,
+    threads: usize,
 ) -> crate::ot::fastot::FastOtResult {
     let cfg = FastOtConfig {
         gamma,
         rho,
         r,
         use_working_set: method != Method::FastNoWs,
+        threads,
         lbfgs,
     };
     let x0 = x0.map(<[f64]>::to_vec).unwrap_or_else(|| vec![0.0; prob.dim()]);
@@ -141,7 +160,21 @@ pub fn run_job(
     r: usize,
     max_iters: usize,
 ) -> SweepRecord {
-    let res = solve_full(prob, method, gamma, rho, r, max_iters);
+    run_job_threads(prob, method, gamma, rho, r, max_iters, 1)
+}
+
+/// [`run_job`] with `threads` intra-solve oracle workers per job.
+#[allow(clippy::too_many_arguments)]
+pub fn run_job_threads(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    max_iters: usize,
+    threads: usize,
+) -> SweepRecord {
+    let res = solve_full_threads(prob, method, gamma, rho, r, max_iters, threads);
     SweepRecord {
         method,
         gamma,
@@ -155,7 +188,11 @@ pub fn run_job(
 }
 
 /// Run the full grid described by `cfg`. When `cfg.threads > 1`, jobs
-/// run concurrently (each job remains single-threaded).
+/// run concurrently; each job additionally uses `cfg.solve_threads`
+/// intra-solve oracle workers (deterministic — wall times change, the
+/// records never do). The caller owns the `threads × solve_threads`
+/// core budget; the serving engine clamps it, the sweep trusts the
+/// config.
 pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
     for m in &cfg.methods {
         m.ensure_available()?;
@@ -173,10 +210,11 @@ pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
         .collect();
     metrics.incr("sweep.jobs_total", jobs.len() as u64);
 
+    let solve_threads = cfg.solve_threads.max(1);
     let records: Vec<SweepRecord> = if cfg.threads <= 1 {
         jobs.iter()
             .map(|&(m, g, r)| {
-                let rec = run_job(&prob, m, g, r, cfg.r, cfg.max_iters);
+                let rec = run_job_threads(&prob, m, g, r, cfg.r, cfg.max_iters, solve_threads);
                 metrics.incr("sweep.jobs_done", 1);
                 metrics.observe("sweep.job_seconds", rec.wall_time_s);
                 rec
@@ -190,7 +228,7 @@ pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
             let results = Arc::clone(&results);
             let (rr, mi) = (cfg.r, cfg.max_iters);
             pool.execute(move || {
-                let rec = run_job(&prob, m, g, r, rr, mi);
+                let rec = run_job_threads(&prob, m, g, r, rr, mi, solve_threads);
                 results.lock().unwrap().push(rec);
             });
         }
@@ -293,6 +331,7 @@ mod tests {
             methods: vec![Method::Fast, Method::Origin],
             r: 5,
             threads,
+            solve_threads: 1,
             max_iters: 60,
         }
     }
@@ -342,6 +381,24 @@ mod tests {
         s.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         t.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         assert_eq!(s, t);
+    }
+
+    #[test]
+    fn intra_solve_threads_do_not_change_records() {
+        // solve_threads only adds oracle workers inside each job; the
+        // deterministic ordered reduction keeps every record bit-equal.
+        let metrics = Metrics::new();
+        let serial = run_sweep(&tiny_cfg(1), &metrics).unwrap();
+        let mut cfg = tiny_cfg(1);
+        cfg.solve_threads = 4;
+        let threaded = run_sweep(&cfg, &metrics).unwrap();
+        for (s, t) in serial.records.iter().zip(&threaded.records) {
+            assert_eq!(s.method, t.method);
+            assert_eq!(s.dual_objective, t.dual_objective);
+            assert_eq!(s.iterations, t.iterations);
+            assert_eq!(s.grads_computed, t.grads_computed);
+            assert_eq!(s.grads_skipped, t.grads_skipped);
+        }
     }
 
     #[test]

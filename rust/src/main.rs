@@ -41,6 +41,14 @@ fn app() -> App {
     };
     let engine_args = |a: App| -> App {
         a.arg(ArgSpec::opt("workers", "solver worker threads").default("4"))
+            .arg(
+                ArgSpec::opt("threads", "intra-solve oracle threads per worker (1 = serial)")
+                    .default("1"),
+            )
+            .arg(
+                ArgSpec::opt("core-budget", "cap on workers x threads (0 = autodetect cores)")
+                    .default("0"),
+            )
             .arg(ArgSpec::opt("queue-capacity", "admission queue bound").default("128"))
             .arg(ArgSpec::opt("max-batch", "max requests per micro-batch").default("16"))
             .arg(
@@ -73,6 +81,10 @@ fn app() -> App {
             .arg(ArgSpec::opt("rho", "group/quadratic balance ρ ∈ [0,1)").default("0.5"))
             .arg(ArgSpec::opt("method", "fast|fast-nows|origin|xla-origin").default("fast"))
             .arg(ArgSpec::opt("r", "snapshot interval").default("10"))
+            .arg(
+                ArgSpec::opt("threads", "intra-solve oracle threads (1 = paper-faithful)")
+                    .default("1"),
+            )
             .arg(ArgSpec::switch(
                 "plan-stats",
                 "also recover the plan and print its statistics",
@@ -84,6 +96,10 @@ fn app() -> App {
             .arg(ArgSpec::opt("rhos", "ρ grid").default("0.2,0.4,0.6,0.8"))
             .arg(ArgSpec::opt("methods", "comma-separated methods").default("fast,origin"))
             .arg(ArgSpec::opt("threads", "parallel sweep workers").default("1"))
+            .arg(
+                ArgSpec::opt("solve-threads", "intra-solve oracle threads per job")
+                    .default("1"),
+            )
             .arg(ArgSpec::opt("max-iters", "L-BFGS iteration cap").default("1000"))
             .arg(ArgSpec::opt("config", "JSON config file (overrides flags)"))
             .arg(ArgSpec::opt("out", "write the JSON report here")),
@@ -128,15 +144,23 @@ fn cmd_solve(m: &grpot::cli::Matches) -> Result<()> {
     let gamma = m.get_f64("gamma")?;
     let rho = m.get_f64("rho")?;
     let r = m.get_usize("r")?;
+    let threads = m.get_usize("threads")?;
     let method = Method::parse(m.get("method").unwrap_or("fast"))?;
     method.ensure_available()?;
     eprintln!("dataset: {}", registry::describe(&spec));
     let pair = registry::build_pair(&spec)?;
     let prob = OtProblem::from_dataset(&pair);
-    eprintln!("problem: m={} n={} |L|={}", prob.m(), prob.n(), prob.groups.num_groups());
-    let res = sweep::solve_full(&prob, method, gamma, rho, r, 1000);
+    eprintln!(
+        "problem: m={} n={} |L|={} threads={}",
+        prob.m(),
+        prob.n(),
+        prob.groups.num_groups(),
+        threads.max(1)
+    );
+    let res = sweep::solve_full_threads(&prob, method, gamma, rho, r, 1000, threads);
     let mut out = Value::obj()
         .set("method", method.name())
+        .set("threads", threads.max(1))
         .set("gamma", gamma)
         .set("rho", rho)
         .set("dual_objective", res.dual_objective)
@@ -179,6 +203,7 @@ fn cmd_sweep(m: &grpot::cli::Matches) -> Result<()> {
             methods,
             r: 10,
             threads: m.get_usize("threads")?,
+            solve_threads: m.get_usize("solve-threads")?,
             max_iters: m.get_usize("max-iters")?,
         }
     };
@@ -231,6 +256,8 @@ fn engine_config(m: &grpot::cli::Matches) -> Result<ServeConfig, grpot::cli::Cli
     };
     Ok(ServeConfig {
         workers: m.get_usize("workers")?,
+        threads_per_solve: m.get_usize("threads")?,
+        core_budget: m.get_usize("core-budget")?,
         queue_capacity: m.get_usize("queue-capacity")?,
         max_batch: m.get_usize("max-batch")?,
         warm_cache_bytes: m.get_usize("warm-cache-mb")? << 20,
@@ -297,12 +324,13 @@ fn cmd_bench_serve(m: &grpot::cli::Matches) -> Result<()> {
         deadline: None,
     };
     eprintln!(
-        "bench-serve: {} | {} clients × {} cycles × {} grid points | {} workers",
+        "bench-serve: {} | {} clients × {} cycles × {} grid points | {} workers × {} threads",
         registry::describe(&scenario.spec),
         scenario.clients,
         scenario.cycles,
         scenario.gammas.len() * scenario.rhos.len(),
-        cfg.workers
+        cfg.workers,
+        cfg.threads_per_solve
     );
     let report = run_load(cfg, &scenario);
     report.print_summary();

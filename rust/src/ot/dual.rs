@@ -24,6 +24,8 @@
 use crate::data::DomainPair;
 use crate::groups::GroupStructure;
 use crate::linalg::{self, Mat};
+use crate::pool::{fixed_chunk_ranges, ParallelCtx};
+use std::ops::Range;
 
 /// Regularization hyperparameters (experimental-section form).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -271,36 +273,84 @@ pub fn exact_z(
     zsq.sqrt()
 }
 
-/// Fully dense negated-dual evaluation — the reference implementation
-/// every oracle must agree with. O(mn) per call.
-pub fn eval_dense(
+/// Per-chunk scratch for the column-parallel oracle evaluations: a
+/// partial α-gradient, per-column transported masses, the group kernel
+/// buffer and partial counters. The oracles keep one of these per fixed
+/// column chunk, reused across evaluations, so the steady state stays
+/// allocation-free at any thread count.
+pub struct ColChunkScratch {
+    /// This chunk's α-gradient contribution (length m, zeroed per eval).
+    pub(crate) grad_alpha: Vec<f64>,
+    /// Per-column `Σ_i t_ij` for the chunk's columns (→ `∂/∂β_j`).
+    pub(crate) col_mass: Vec<f64>,
+    /// [`group_grad_contrib`] scratch (max group size).
+    pub(crate) group: Vec<f64>,
+    /// Partial `Σ ψ` over this chunk's (l, j) pairs.
+    pub(crate) psi: f64,
+    pub(crate) grads: u64,
+    pub(crate) skipped: u64,
+    pub(crate) ub_checks: u64,
+    pub(crate) ws_hits: u64,
+}
+
+impl ColChunkScratch {
+    pub(crate) fn new(m: usize, max_cols: usize, max_group: usize) -> Self {
+        ColChunkScratch {
+            grad_alpha: vec![0.0; m],
+            col_mass: vec![0.0; max_cols],
+            group: vec![0.0; max_group],
+            psi: 0.0,
+            grads: 0,
+            skipped: 0,
+            ub_checks: 0,
+            ws_hits: 0,
+        }
+    }
+
+    /// One scratch slot per chunk of `ranges`, sized for `prob`.
+    pub(crate) fn slots_for(prob: &OtProblem, ranges: &[Range<usize>]) -> Vec<ColChunkScratch> {
+        let max_cols = ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        (0..ranges.len())
+            .map(|_| ColChunkScratch::new(prob.m(), max_cols, prob.groups.max_size()))
+            .collect()
+    }
+
+    /// Zero the accumulators (col_mass is fully overwritten per eval).
+    /// `grad_alpha` is only dirtied by [`group_grad_contrib`], which
+    /// writes iff it counts a gradient, so a chunk whose previous eval
+    /// computed nothing skips the O(m) re-zero — the screened sparse
+    /// regime keeps its cheap per-eval floor.
+    pub(crate) fn reset(&mut self) {
+        if self.grads > 0 {
+            for v in self.grad_alpha.iter_mut() {
+                *v = 0.0;
+            }
+        }
+        self.psi = 0.0;
+        self.grads = 0;
+        self.skipped = 0;
+        self.ub_checks = 0;
+        self.ws_hits = 0;
+    }
+}
+
+/// Dense per-column kernel over one fixed column chunk, accumulating
+/// into the chunk's scratch. The reference [`eval_dense`] and the
+/// threaded [`crate::ot::origin::OriginOracle`] both run this exact
+/// function over the exact same chunk boundaries, so serial and
+/// threaded evaluations agree bit-for-bit.
+pub(crate) fn dense_chunk(
     prob: &OtProblem,
-    params: &DualParams,
-    x: &[f64],
-    grad: &mut [f64],
-) -> (f64, u64) {
-    let m = prob.m();
-    let n = prob.n();
-    assert_eq!(x.len(), m + n);
-    assert_eq!(grad.len(), m + n);
-    let (alpha, beta) = x.split_at(m);
-    let tau = params.tau();
-    let lq = params.lambda_quad();
+    tau: f64,
+    lq: f64,
+    alpha: &[f64],
+    beta: &[f64],
+    range: Range<usize>,
+    slot: &mut ColChunkScratch,
+) {
+    slot.reset();
     let num_groups = prob.groups.num_groups();
-
-    // ∇(−D) starts at (−a, −b); transport mass is added on top.
-    for (gi, &ai) in grad[..m].iter_mut().zip(&prob.a) {
-        *gi = -ai;
-    }
-    for (gj, &bj) in grad[m..].iter_mut().zip(&prob.b) {
-        *gj = -bj;
-    }
-
-    let mut psi_total = 0.0;
-    let mut grads = 0u64;
-    let (grad_alpha, grad_beta) = grad.split_at_mut(m);
-    let mut scratch = vec![0.0; prob.groups.max_size()];
-    for j in 0..n {
+    for (k, j) in range.enumerate() {
         let c_j = prob.cost_t.row(j);
         let beta_j = beta[j];
         let mut col_mass = 0.0;
@@ -312,18 +362,118 @@ pub fn eval_dense(
                 prob.groups.range(l),
                 tau,
                 lq,
-                grad_alpha,
-                &mut scratch,
+                &mut slot.grad_alpha,
+                &mut slot.group,
             );
-            psi_total += psi;
+            slot.psi += psi;
             col_mass += mass;
-            grads += 1;
+            slot.grads += 1;
         }
-        grad_beta[j] += col_mass;
+        slot.col_mass[k] = col_mass;
     }
+}
+
+/// Combine per-chunk partials into the shared gradient **in ascending
+/// chunk order** — the deterministic reduction: the association of every
+/// floating-point sum is fixed by the chunk boundaries (a function of n
+/// alone), never by which thread produced a partial. Returns
+/// `(psi_total, grads, skipped, ub_checks, ws_hits)`.
+pub(crate) fn reduce_chunks(
+    ranges: &[Range<usize>],
+    slots: &[ColChunkScratch],
+    grad_alpha: &mut [f64],
+    grad_beta: &mut [f64],
+) -> (f64, u64, u64, u64, u64) {
+    let mut psi_total = 0.0;
+    let (mut grads, mut skipped, mut ub_checks, mut ws_hits) = (0u64, 0u64, 0u64, 0u64);
+    for (range, slot) in ranges.iter().zip(slots) {
+        // A chunk that computed nothing holds exact zeros everywhere:
+        // merging it would only add +0.0 terms (values unchanged under
+        // `==`; the decision itself is thread-count-independent), so the
+        // screened sparse regime skips the O(m) merge per quiet chunk.
+        if slot.grads > 0 {
+            psi_total += slot.psi;
+            for (gi, &pi) in grad_alpha.iter_mut().zip(&slot.grad_alpha) {
+                *gi += pi;
+            }
+            for (k, j) in range.clone().enumerate() {
+                grad_beta[j] += slot.col_mass[k];
+            }
+        }
+        grads += slot.grads;
+        skipped += slot.skipped;
+        ub_checks += slot.ub_checks;
+        ws_hits += slot.ws_hits;
+    }
+    (psi_total, grads, skipped, ub_checks, ws_hits)
+}
+
+/// Shared dense evaluation over caller-provided chunking/scratch — the
+/// zero-alloc entry used by [`crate::ot::origin::OriginOracle`].
+pub(crate) fn eval_dense_with(
+    prob: &OtProblem,
+    params: &DualParams,
+    x: &[f64],
+    grad: &mut [f64],
+    ctx: ParallelCtx,
+    ranges: &[Range<usize>],
+    slots: &mut [ColChunkScratch],
+) -> (f64, u64) {
+    let m = prob.m();
+    let n = prob.n();
+    assert_eq!(x.len(), m + n);
+    assert_eq!(grad.len(), m + n);
+    let (alpha, beta) = x.split_at(m);
+    let tau = params.tau();
+    let lq = params.lambda_quad();
+
+    // ∇(−D) starts at (−a, −b); transport mass is added on top.
+    for (gi, &ai) in grad[..m].iter_mut().zip(&prob.a) {
+        *gi = -ai;
+    }
+    for (gj, &bj) in grad[m..].iter_mut().zip(&prob.b) {
+        *gj = -bj;
+    }
+    let (grad_alpha, grad_beta) = grad.split_at_mut(m);
+
+    ctx.map_chunks(ranges, slots, |_, range, slot| {
+        dense_chunk(prob, tau, lq, alpha, beta, range, slot);
+    });
+    let (psi_total, grads, ..) = reduce_chunks(ranges, slots, grad_alpha, grad_beta);
 
     let dual = linalg::dot(alpha, &prob.a) + linalg::dot(beta, &prob.b) - psi_total;
     (-dual, grads)
+}
+
+/// Fully dense negated-dual evaluation — the reference implementation
+/// every oracle must agree with. O(mn) per call.
+///
+/// The accumulation is *chunk-ordered*: columns are processed in the
+/// fixed chunks of [`fixed_chunk_ranges`] and per-chunk partial sums are
+/// combined in chunk order. This is the canonical arithmetic for the
+/// whole crate — the screened oracle and the threaded dense oracle
+/// reproduce it bit-for-bit at every thread count.
+pub fn eval_dense(
+    prob: &OtProblem,
+    params: &DualParams,
+    x: &[f64],
+    grad: &mut [f64],
+) -> (f64, u64) {
+    eval_dense_threads(prob, params, x, grad, 1)
+}
+
+/// [`eval_dense`] with `threads` oracle workers — bit-identical to the
+/// serial call for every thread count (deterministic ordered reduction).
+pub fn eval_dense_threads(
+    prob: &OtProblem,
+    params: &DualParams,
+    x: &[f64],
+    grad: &mut [f64],
+    threads: usize,
+) -> (f64, u64) {
+    let ranges = fixed_chunk_ranges(prob.n());
+    let mut slots = ColChunkScratch::slots_for(prob, &ranges);
+    eval_dense_with(prob, params, x, grad, ParallelCtx::new(threads), &ranges, &mut slots)
 }
 
 /// The (positive) dual objective at `x` (no gradient).

@@ -24,6 +24,11 @@ pub struct FastOtConfig {
     pub r: usize,
     /// Enable the lower-bound working set ℕ (the paper's second idea).
     pub use_working_set: bool,
+    /// Intra-solve oracle workers for the column-parallel hot loops
+    /// (eval, snapshot refresh, working-set rebuild). Deterministic:
+    /// results are bit-identical for every value, including the
+    /// paper-faithful single-core default of 1.
+    pub threads: usize,
     /// Inner solver options.
     pub lbfgs: LbfgsOptions,
 }
@@ -35,6 +40,7 @@ impl Default for FastOtConfig {
             rho: 0.5,
             r: 10,
             use_working_set: true,
+            threads: 1,
             lbfgs: LbfgsOptions::default(),
         }
     }
@@ -140,7 +146,8 @@ pub fn solve_fast_ot(prob: &OtProblem, cfg: &FastOtConfig) -> FastOtResult {
 
 /// Solve with the paper's method from a warm-start iterate `x0`.
 pub fn solve_fast_ot_from(prob: &OtProblem, cfg: &FastOtConfig, x0: Vec<f64>) -> FastOtResult {
-    let mut oracle = ScreeningOracle::new(prob, cfg.params(), cfg.use_working_set);
+    let mut oracle =
+        ScreeningOracle::with_threads(prob, cfg.params(), cfg.use_working_set, cfg.threads);
     let label = if cfg.use_working_set { "fast" } else { "fast-nows" };
     drive_from(prob, cfg, &mut oracle, label, x0)
 }
@@ -164,7 +171,8 @@ pub fn solve_fast_ot_traced(
     cfg: &FastOtConfig,
 ) -> (FastOtResult, Vec<IterationTrace>) {
     let start = Instant::now();
-    let mut oracle = ScreeningOracle::new(prob, cfg.params(), cfg.use_working_set);
+    let mut oracle =
+        ScreeningOracle::with_threads(prob, cfg.params(), cfg.use_working_set, cfg.threads);
     let x0 = vec![0.0; prob.dim()];
     let mut solver = Lbfgs::new(x0, cfg.lbfgs.clone(), &mut oracle);
     let mut traces = Vec::new();

@@ -2,20 +2,45 @@
 //! Rolet (2018): every group's gradient is computed at every evaluation,
 //! `O(|L|·n·g)` per call.
 
-use super::dual::{eval_dense, DualOracle, DualParams, OracleStats, OtProblem};
+use super::dual::{
+    eval_dense_with, ColChunkScratch, DualOracle, DualParams, OracleStats, OtProblem,
+};
+use crate::pool::{fixed_chunk_ranges, ParallelCtx};
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
+use std::ops::Range;
 
-/// Dense (non-screened) negated-dual oracle.
+/// Dense (non-screened) negated-dual oracle. Column chunks evaluate in
+/// parallel on `threads` workers with a deterministic ordered reduction,
+/// so results are bit-identical for every thread count (see
+/// [`crate::pool::ParallelCtx`]); scratch is per-chunk and persistent,
+/// keeping the steady state allocation-free.
 pub struct OriginOracle<'a> {
     prob: &'a OtProblem,
     params: DualParams,
     stats: OracleStats,
+    ctx: ParallelCtx,
+    ranges: Vec<Range<usize>>,
+    slots: Vec<ColChunkScratch>,
 }
 
 impl<'a> OriginOracle<'a> {
     pub fn new(prob: &'a OtProblem, params: DualParams) -> Self {
+        Self::with_threads(prob, params, 1)
+    }
+
+    /// Create with `threads` intra-evaluation workers (1 = serial).
+    pub fn with_threads(prob: &'a OtProblem, params: DualParams, threads: usize) -> Self {
         params.validate();
-        OriginOracle { prob, params, stats: OracleStats::default() }
+        let ranges = fixed_chunk_ranges(prob.n());
+        let slots = ColChunkScratch::slots_for(prob, &ranges);
+        OriginOracle {
+            prob,
+            params,
+            stats: OracleStats::default(),
+            ctx: ParallelCtx::new(threads),
+            ranges,
+            slots,
+        }
     }
 
     pub fn params(&self) -> &DualParams {
@@ -29,7 +54,15 @@ impl DualOracle for OriginOracle<'_> {
     }
 
     fn eval(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
-        let (f, grads) = eval_dense(self.prob, &self.params, x, grad);
+        let (f, grads) = eval_dense_with(
+            self.prob,
+            &self.params,
+            x,
+            grad,
+            self.ctx,
+            &self.ranges,
+            &mut self.slots,
+        );
         self.stats.grads_computed += grads;
         self.stats.record_eval(grads);
         f
@@ -47,7 +80,8 @@ pub fn solve_origin(
     prob: &OtProblem,
     cfg: &crate::ot::fastot::FastOtConfig,
 ) -> crate::ot::fastot::FastOtResult {
-    let mut oracle = OriginOracle::new(prob, DualParams::new(cfg.gamma, cfg.rho));
+    let mut oracle =
+        OriginOracle::with_threads(prob, DualParams::new(cfg.gamma, cfg.rho), cfg.threads);
     crate::ot::fastot::drive(prob, cfg, &mut oracle, "origin")
 }
 
@@ -57,7 +91,8 @@ pub fn solve_origin_from(
     cfg: &crate::ot::fastot::FastOtConfig,
     x0: Vec<f64>,
 ) -> crate::ot::fastot::FastOtResult {
-    let mut oracle = OriginOracle::new(prob, DualParams::new(cfg.gamma, cfg.rho));
+    let mut oracle =
+        OriginOracle::with_threads(prob, DualParams::new(cfg.gamma, cfg.rho), cfg.threads);
     crate::ot::fastot::drive_from(prob, cfg, &mut oracle, "origin", x0)
 }
 

@@ -19,8 +19,27 @@
 //! ([`crate::ot::dual::group_grad_contrib`]), so the optimization
 //! trajectory is identical (Theorem 2).
 
-use super::dual::{exact_z, group_grad_contrib, DualOracle, DualParams, OracleStats, OtProblem};
+use super::dual::{
+    exact_z, group_grad_contrib, reduce_chunks, ColChunkScratch, DualOracle, DualParams,
+    OracleStats, OtProblem,
+};
 use crate::linalg;
+use crate::pool::{fixed_chunk_ranges, ParallelCtx};
+use std::ops::Range;
+
+/// Split a column-major buffer (`width` values per column) into one
+/// mutable slice per column chunk — the disjoint views the parallel
+/// snapshot/working-set passes write through.
+fn split_cols<'s, T>(buf: &'s mut [T], ranges: &[Range<usize>], width: usize) -> Vec<&'s mut [T]> {
+    let mut parts = Vec::with_capacity(ranges.len());
+    let mut rest = buf;
+    for r in ranges {
+        let (head, tail) = rest.split_at_mut(r.len() * width);
+        parts.push(head);
+        rest = tail;
+    }
+    parts
+}
 
 /// Screening-specific counters are kept in [`OracleStats`]; this struct
 /// adds the Fig.-B diagnostic output.
@@ -54,9 +73,15 @@ pub struct ScreeningOracle<'a> {
     snap_o: Vec<f64>,
     /// Working set ℕ as a dense boolean mask, same indexing as `snap_z`.
     ws: Vec<bool>,
+    /// `|ℕ|`, maintained by `rebuild_working_set` so density queries on
+    /// metrics/trace paths are O(1) instead of an O(n·|L|) mask scan.
+    ws_count: usize,
     // Per-eval scratch (allocated once).
     da_pos: Vec<f64>,
-    grad_scratch: Vec<f64>,
+    // Intra-eval parallelism: fixed column chunks + per-chunk scratch.
+    ctx: ParallelCtx,
+    ranges: Vec<Range<usize>>,
+    slots: Vec<ColChunkScratch>,
     stats: OracleStats,
 }
 
@@ -64,10 +89,26 @@ impl<'a> ScreeningOracle<'a> {
     /// Create with snapshots initialized at `x = 0` and ℕ = ∅
     /// (Algorithm 1, line 1).
     pub fn new(prob: &'a OtProblem, params: DualParams, use_working_set: bool) -> Self {
+        Self::with_threads(prob, params, use_working_set, 1)
+    }
+
+    /// [`ScreeningOracle::new`] with `threads` intra-evaluation workers.
+    /// Evaluations, snapshot refreshes and working-set rebuilds shard
+    /// over fixed column chunks with a deterministic ordered reduction,
+    /// so every thread count (including 1) produces bit-identical
+    /// gradients, objectives and screening decisions.
+    pub fn with_threads(
+        prob: &'a OtProblem,
+        params: DualParams,
+        use_working_set: bool,
+        threads: usize,
+    ) -> Self {
         params.validate();
         let m = prob.m();
         let n = prob.n();
         let num_groups = prob.groups.num_groups();
+        let ranges = fixed_chunk_ranges(n);
+        let slots = ColChunkScratch::slots_for(prob, &ranges);
         let mut o = ScreeningOracle {
             prob,
             tau: params.tau(),
@@ -80,8 +121,11 @@ impl<'a> ScreeningOracle<'a> {
             snap_k: if use_working_set { vec![0.0; n * num_groups] } else { vec![] },
             snap_o: if use_working_set { vec![0.0; n * num_groups] } else { vec![] },
             ws: vec![false; n * num_groups],
+            ws_count: 0,
             da_pos: vec![0.0; num_groups],
-            grad_scratch: vec![0.0; prob.groups.max_size()],
+            ctx: ParallelCtx::new(threads),
+            ranges,
+            slots,
             stats: OracleStats::default(),
         };
         o.recompute_snapshots();
@@ -92,54 +136,87 @@ impl<'a> ScreeningOracle<'a> {
         &self.params
     }
 
-    /// Fraction of (l, j) pairs currently in the working set.
+    /// Fraction of (l, j) pairs currently in the working set. O(1):
+    /// reads the counter maintained alongside the mask.
     pub fn working_set_density(&self) -> f64 {
         if self.ws.is_empty() {
             return 0.0;
         }
-        self.ws.iter().filter(|&&b| b).count() as f64 / self.ws.len() as f64
+        self.ws_count as f64 / self.ws.len() as f64
     }
 
     /// Dense snapshot recomputation: one `O(mn)` pass filling z̃ (and
     /// k̃/õ when the working set is on) at the *current snapshot point*.
+    /// Column chunks run in parallel; every write is to a per-chunk
+    /// disjoint slice, so the pass is trivially deterministic.
     fn recompute_snapshots(&mut self) {
         let num_groups = self.prob.groups.num_groups();
-        let n = self.prob.n();
-        for j in 0..n {
-            let c_j = self.prob.cost_t.row(j);
-            let beta_j = self.snap_beta[j];
-            let base = j * num_groups;
-            for l in 0..num_groups {
-                let mut zsq = 0.0;
-                let mut ksq = 0.0;
-                let mut osq = 0.0;
-                for i in self.prob.groups.range(l) {
-                    let f = self.snap_alpha[i] + beta_j - c_j[i];
-                    ksq += f * f;
-                    if f > 0.0 {
-                        zsq += f * f;
-                    } else {
-                        osq += f * f;
+        let prob = self.prob;
+        let snap_alpha = &self.snap_alpha;
+        let snap_beta = &self.snap_beta;
+        let use_ws = self.use_ws;
+        let ranges = &self.ranges;
+
+        struct SnapPart<'s> {
+            z: &'s mut [f64],
+            k: &'s mut [f64],
+            o: &'s mut [f64],
+        }
+        let z_parts = split_cols(&mut self.snap_z, ranges, num_groups);
+        let (k_parts, o_parts) = if use_ws {
+            (
+                split_cols(&mut self.snap_k, ranges, num_groups),
+                split_cols(&mut self.snap_o, ranges, num_groups),
+            )
+        } else {
+            // Zero-length placeholder slices: never written below.
+            let empties = |len: usize| (0..len).map(|_| Default::default()).collect::<Vec<_>>();
+            (empties(ranges.len()), empties(ranges.len()))
+        };
+        let mut parts: Vec<SnapPart> = z_parts
+            .into_iter()
+            .zip(k_parts)
+            .zip(o_parts)
+            .map(|((z, k), o)| SnapPart { z, k, o })
+            .collect();
+
+        self.ctx.map_chunks(ranges, &mut parts, |_, range, part| {
+            for (col, j) in range.enumerate() {
+                let c_j = prob.cost_t.row(j);
+                let beta_j = snap_beta[j];
+                let base = col * num_groups;
+                for l in 0..num_groups {
+                    let mut zsq = 0.0;
+                    let mut ksq = 0.0;
+                    let mut osq = 0.0;
+                    for i in prob.groups.range(l) {
+                        let f = snap_alpha[i] + beta_j - c_j[i];
+                        ksq += f * f;
+                        if f > 0.0 {
+                            zsq += f * f;
+                        } else {
+                            osq += f * f;
+                        }
+                    }
+                    part.z[base + l] = zsq.sqrt();
+                    if use_ws {
+                        part.k[base + l] = ksq.sqrt();
+                        part.o[base + l] = osq.sqrt();
                     }
                 }
-                self.snap_z[base + l] = zsq.sqrt();
-                if self.use_ws {
-                    self.snap_k[base + l] = ksq.sqrt();
-                    self.snap_o[base + l] = osq.sqrt();
-                }
             }
-        }
+        });
     }
 
     /// Build ℕ from the *old* snapshots and the current iterate
     /// (Algorithm 1 lines 4–14), exactly in the paper's order — the set
-    /// is constructed before the snapshots move.
+    /// is constructed before the snapshots move. Column chunks run in
+    /// parallel (disjoint mask slices + per-chunk membership counts).
     fn rebuild_working_set(&mut self, x: &[f64]) {
         let m = self.prob.m();
-        let n = self.prob.n();
         let num_groups = self.prob.groups.num_groups();
         let (alpha, beta) = x.split_at(m);
-        // Per-group ‖Δα_[l]‖₂ and ‖[Δα_[l]]₋‖₂.
+        // Per-group ‖Δα_[l]‖₂ and ‖[Δα_[l]]₋‖₂ (O(m), stays serial).
         let mut da_nrm = vec![0.0; num_groups];
         let mut da_neg = vec![0.0; num_groups];
         for l in 0..num_groups {
@@ -156,22 +233,44 @@ impl<'a> ScreeningOracle<'a> {
             da_neg[l] = sn.sqrt();
         }
         let sqrt_g = &self.prob.groups.sqrt_sizes;
-        for j in 0..n {
-            let db = beta[j] - self.snap_beta[j];
-            let db_abs = db.abs();
-            let db_neg = (-db).max(0.0);
-            let base = j * num_groups;
-            for l in 0..num_groups {
-                // Eq. 7.
-                let lower = self.snap_k[base + l]
-                    - da_nrm[l]
-                    - sqrt_g[l] * db_abs
-                    - self.snap_o[base + l]
-                    - da_neg[l]
-                    - sqrt_g[l] * db_neg;
-                self.ws[base + l] = lower > self.tau;
-            }
+        let snap_beta = &self.snap_beta;
+        let snap_k = &self.snap_k;
+        let snap_o = &self.snap_o;
+        let (da_nrm, da_neg) = (&da_nrm, &da_neg);
+        let tau = self.tau;
+        let ranges = &self.ranges;
+
+        struct WsPart<'s> {
+            mask: &'s mut [bool],
+            members: usize,
         }
+        let mut parts: Vec<WsPart> = split_cols(&mut self.ws, ranges, num_groups)
+            .into_iter()
+            .map(|mask| WsPart { mask, members: 0 })
+            .collect();
+        self.ctx.map_chunks(ranges, &mut parts, |_, range, part| {
+            part.members = 0;
+            for (col, j) in range.enumerate() {
+                let db = beta[j] - snap_beta[j];
+                let db_abs = db.abs();
+                let db_neg = (-db).max(0.0);
+                let base = col * num_groups;
+                let snap_base = j * num_groups;
+                for l in 0..num_groups {
+                    // Eq. 7.
+                    let lower = snap_k[snap_base + l]
+                        - da_nrm[l]
+                        - sqrt_g[l] * db_abs
+                        - snap_o[snap_base + l]
+                        - da_neg[l]
+                        - sqrt_g[l] * db_neg;
+                    let member = lower > tau;
+                    part.mask[base + l] = member;
+                    part.members += usize::from(member);
+                }
+            }
+        });
+        self.ws_count = parts.iter().map(|p| p.members).sum();
     }
 
     /// Fig.-B diagnostic: exact `z`, upper bound `z̄` and lower bound
@@ -268,52 +367,70 @@ impl DualOracle for ScreeningOracle<'_> {
 
         let tau = self.tau;
         let lq = self.lq;
-        let sqrt_g = &self.prob.groups.sqrt_sizes;
-        let mut psi_total = 0.0;
-        let mut grads_this_eval = 0u64;
+        let prob = self.prob;
+        let sqrt_g = &prob.groups.sqrt_sizes;
+        let snap_z = &self.snap_z;
+        let snap_beta = &self.snap_beta;
+        let da_pos = &self.da_pos;
+        let ws = &self.ws;
+        let use_ws = self.use_ws;
+        let ranges = &self.ranges;
 
-        for j in 0..n {
-            let c_j = self.prob.cost_t.row(j);
-            let beta_j = beta[j];
-            let db_pos = (beta_j - self.snap_beta[j]).max(0.0);
-            let base = j * num_groups;
-            let mut col_mass = 0.0;
-            for l in 0..num_groups {
-                let compute = if self.use_ws && self.ws[base + l] {
-                    // ℕ member: provably nonzero, no check (Alg. 2 lines 2–4).
-                    self.stats.ws_hits += 1;
-                    true
-                } else {
-                    // Upper bound check (Alg. 2 lines 6–13).
-                    self.stats.ub_checks += 1;
-                    let ub = self.snap_z[base + l] + self.da_pos[l] + sqrt_g[l] * db_pos;
-                    if ub <= tau {
-                        self.stats.grads_skipped += 1;
-                        false
-                    } else {
+        // Column chunks evaluate concurrently; per-chunk partials are
+        // combined in chunk order below, so the screened gradient is
+        // bit-identical for every thread count — and, because every
+        // non-skipped pair runs the same kernel over the same chunking,
+        // bit-identical to the dense baseline (Theorem 2).
+        self.ctx.map_chunks(ranges, &mut self.slots, |_, range, slot| {
+            slot.reset();
+            for (col, j) in range.enumerate() {
+                let c_j = prob.cost_t.row(j);
+                let beta_j = beta[j];
+                let db_pos = (beta_j - snap_beta[j]).max(0.0);
+                let base = j * num_groups;
+                let mut col_mass = 0.0;
+                for l in 0..num_groups {
+                    let compute = if use_ws && ws[base + l] {
+                        // ℕ member: provably nonzero, no check (Alg. 2 lines 2–4).
+                        slot.ws_hits += 1;
                         true
+                    } else {
+                        // Upper bound check (Alg. 2 lines 6–13).
+                        slot.ub_checks += 1;
+                        let ub = snap_z[base + l] + da_pos[l] + sqrt_g[l] * db_pos;
+                        if ub <= tau {
+                            slot.skipped += 1;
+                            false
+                        } else {
+                            true
+                        }
+                    };
+                    if compute {
+                        let (psi, mass) = group_grad_contrib(
+                            alpha,
+                            beta_j,
+                            c_j,
+                            prob.groups.range(l),
+                            tau,
+                            lq,
+                            &mut slot.grad_alpha,
+                            &mut slot.group,
+                        );
+                        slot.psi += psi;
+                        col_mass += mass;
+                        slot.grads += 1;
                     }
-                };
-                if compute {
-                    let (psi, mass) = group_grad_contrib(
-                        alpha,
-                        beta_j,
-                        c_j,
-                        self.prob.groups.range(l),
-                        tau,
-                        lq,
-                        grad_alpha,
-                        &mut self.grad_scratch,
-                    );
-                    psi_total += psi;
-                    col_mass += mass;
-                    grads_this_eval += 1;
                 }
+                slot.col_mass[col] = col_mass;
             }
-            grad_beta[j] += col_mass;
-        }
+        });
+        let (psi_total, grads_this_eval, skipped, ub_checks, ws_hits) =
+            reduce_chunks(&self.ranges, &self.slots, grad_alpha, grad_beta);
 
         self.stats.grads_computed += grads_this_eval;
+        self.stats.grads_skipped += skipped;
+        self.stats.ub_checks += ub_checks;
+        self.stats.ws_hits += ws_hits;
         self.stats.record_eval(grads_this_eval);
 
         let dual = linalg::dot(alpha, &self.prob.a) + linalg::dot(beta, &self.prob.b) - psi_total;

@@ -22,7 +22,9 @@
 //! relaxed dual only approaches them as γ → 0).
 
 use super::dual::{DualOracle, OracleStats, OtProblem};
+use crate::pool::{fixed_chunk_ranges, ParallelCtx};
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
+use std::ops::Range;
 
 /// Solve the inner water-filling problem: maximize `fᵀt − (γ/2)‖t‖²`
 /// over `t ≥ 0, Σt = mass`. Returns `(t, value)`.
@@ -62,17 +64,50 @@ pub fn waterfill(f: &[f64], gamma: f64, mass: f64) -> (Vec<f64>, f64) {
     (s, value)
 }
 
-/// Negated semi-dual oracle over α (quadratic regularizer).
+/// Per-chunk scratch for the column-parallel semi-dual evaluation.
+struct SemiChunk {
+    /// Partial `Σ_j t_j` gradient contribution (length m).
+    grad: Vec<f64>,
+    /// `α − c_j` staging buffer (length m).
+    fcol: Vec<f64>,
+    /// Partial `Σ_j val_j`.
+    semid: f64,
+}
+
+/// Negated semi-dual oracle over α (quadratic regularizer). The inner
+/// column problems are independent, so chunks of columns solve in
+/// parallel on `threads` workers; partials combine in fixed chunk order,
+/// keeping results bit-identical for every thread count.
 pub struct SemiDualOracle<'a> {
     prob: &'a OtProblem,
     gamma: f64,
+    ctx: ParallelCtx,
+    ranges: Vec<Range<usize>>,
+    slots: Vec<SemiChunk>,
     stats: OracleStats,
 }
 
 impl<'a> SemiDualOracle<'a> {
     pub fn new(prob: &'a OtProblem, gamma: f64) -> Self {
+        Self::with_threads(prob, gamma, 1)
+    }
+
+    /// Create with `threads` intra-evaluation workers (1 = serial).
+    pub fn with_threads(prob: &'a OtProblem, gamma: f64, threads: usize) -> Self {
         assert!(gamma > 0.0);
-        SemiDualOracle { prob, gamma, stats: OracleStats::default() }
+        let m = prob.m();
+        let ranges = fixed_chunk_ranges(prob.n());
+        let slots = (0..ranges.len())
+            .map(|_| SemiChunk { grad: vec![0.0; m], fcol: vec![0.0; m], semid: 0.0 })
+            .collect();
+        SemiDualOracle {
+            prob,
+            gamma,
+            ctx: ParallelCtx::new(threads),
+            ranges,
+            slots,
+            stats: OracleStats::default(),
+        }
     }
 }
 
@@ -89,31 +124,37 @@ impl DualOracle for SemiDualOracle<'_> {
         for (g, &ai) in grad.iter_mut().zip(&self.prob.a) {
             *g = -ai;
         }
-        let mut semid = crate::linalg::dot(alpha, &self.prob.a);
-        let mut f = vec![0.0; m];
-        for j in 0..n {
-            let c_j = self.prob.cost_t.row(j);
-            for i in 0..m {
-                f[i] = alpha[i] - c_j[i];
+        // Derivation: the Lagrangian dual over α of
+        // min_T ⟨T,C⟩ + γ/2‖T‖² s.t. Tᵀ1=b, T≥0 with relaxed T1=a is
+        //   D(α) = αᵀa + Σ_j min_{t≥0,1ᵀt=b_j} (c_j − α)ᵀ t + γ/2‖t‖²
+        //        = αᵀa − Σ_j max_{t≥0,1ᵀt=b_j} (α − c_j)ᵀ t − γ/2‖t‖²,
+        // and by Danskin ∇D = a − Σ_j t_j ⇒ ∇(−D) = −a + Σ_j t_j.
+        // The inner column problems are independent: chunks solve
+        // concurrently and partials combine in fixed chunk order.
+        let prob = self.prob;
+        let gamma = self.gamma;
+        self.ctx.map_chunks(&self.ranges, &mut self.slots, |_, range, slot| {
+            slot.semid = 0.0;
+            for v in slot.grad.iter_mut() {
+                *v = 0.0;
             }
-            let (t, val) = waterfill(&f, self.gamma, self.prob.b[j]);
-            // σ_j = val − αᵀt enters the objective; dσ/dα = −t + …;
-            // together with the αᵀa term: ∇(−D)_i = −a_i + t_i... hold on:
-            // D(α) = αᵀa + Σ_j [max_t (α−c_j)ᵀt − γ/2‖t‖²] − Σ_j αᵀt_j
-            //       = αᵀa + Σ_j [−c_jᵀt_j − γ/2‖t‖²]  … by Danskin the
-            // gradient of the max term wrt α is t_j, so
-            // ∇D = a − Σ_j t_j + Σ_j t_j? — we keep the standard
-            // formulation: D(α) = αᵀa + Σ_j (val_j − αᵀ t_j is NOT
-            // subtracted). The semi-dual is D(α) = αᵀa + Σ_j σ_j where
-            // σ_j = max_t (−c_j)ᵀ t + (α)ᵀ t − γ/2‖t‖² − αᵀ a-part…
-            // Simplest correct derivation: the Lagrangian dual over α of
-            // min_T ⟨T,C⟩ + γ/2‖T‖² s.t. Tᵀ1=b, T≥0 with relaxed T1=a is
-            //   D(α) = αᵀa + Σ_j min_{t≥0,1ᵀt=b_j} (c_j − α)ᵀ t + γ/2‖t‖²
-            //        = αᵀa − Σ_j max_{t≥0,1ᵀt=b_j} (α − c_j)ᵀ t − γ/2‖t‖².
-            semid -= val;
-            // ∇D = a − Σ_j t_j (Danskin) ⇒ ∇(−D) = −a + Σ_j t_j.
-            for (g, &ti) in grad.iter_mut().zip(&t) {
-                *g += ti;
+            for j in range {
+                let c_j = prob.cost_t.row(j);
+                for i in 0..m {
+                    slot.fcol[i] = alpha[i] - c_j[i];
+                }
+                let (t, val) = waterfill(&slot.fcol, gamma, prob.b[j]);
+                slot.semid += val;
+                for (g, &ti) in slot.grad.iter_mut().zip(&t) {
+                    *g += ti;
+                }
+            }
+        });
+        let mut semid = crate::linalg::dot(alpha, &self.prob.a);
+        for slot in &self.slots {
+            semid -= slot.semid;
+            for (g, &pi) in grad.iter_mut().zip(&slot.grad) {
+                *g += pi;
             }
         }
         self.stats.record_eval(n as u64);
@@ -135,9 +176,20 @@ pub struct SemiDualResult {
 
 /// Solve the quadratic semi-dual with L-BFGS and recover the plan.
 pub fn solve_semidual(prob: &OtProblem, gamma: f64, opts: &LbfgsOptions) -> SemiDualResult {
+    solve_semidual_threads(prob, gamma, opts, 1)
+}
+
+/// [`solve_semidual`] with `threads` intra-solve oracle workers —
+/// bit-identical to the serial solve for every thread count.
+pub fn solve_semidual_threads(
+    prob: &OtProblem,
+    gamma: f64,
+    opts: &LbfgsOptions,
+    threads: usize,
+) -> SemiDualResult {
     let m = prob.m();
     let n = prob.n();
-    let mut oracle = SemiDualOracle::new(prob, gamma);
+    let mut oracle = SemiDualOracle::with_threads(prob, gamma, threads);
     let mut solver = Lbfgs::new(vec![0.0; m], opts.clone(), &mut oracle);
     solver.run(&mut oracle);
     let iterations = solver.iterations();

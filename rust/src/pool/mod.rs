@@ -11,10 +11,18 @@
 //! * [`Semaphore`] — a counting semaphore (std has none on stable).
 //! * [`parallel_for_chunks`] — fork-join data parallelism over an index
 //!   range using `std::thread::scope`; used off the solver's hot path
-//!   (dataset generation, evaluation) so single-solver benchmarks remain
-//!   one-core, matching the paper's single-CPU-core setup.
+//!   (dataset generation, evaluation) where thread-count-dependent
+//!   chunking is acceptable.
+//! * [`ParallelCtx`] / [`parallel_map_reduce`] — the solver hot path's
+//!   *deterministic* fork-join facility: work is sharded over **fixed**
+//!   chunks whose boundaries depend only on the problem size (never on
+//!   the worker count), each chunk writes into its own slot, and partial
+//!   results are combined in ascending chunk order on the calling thread
+//!   — no atomics, no reduction races — so floating-point outputs are
+//!   bit-identical for every thread count, including 1.
 
 use std::collections::VecDeque;
+use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -284,6 +292,162 @@ where
             s.spawn(move || body(lo, hi));
         }
     });
+}
+
+/// Upper bound on the number of fixed chunks produced by
+/// [`fixed_chunk_ranges`]. Bounds both the per-chunk scratch memory the
+/// oracles keep resident and the ordered-reduction cost.
+pub const MAX_FIXED_CHUNKS: usize = 32;
+
+/// Lower bound on indices per fixed chunk: tiny problems collapse to a
+/// single chunk instead of paying fork-join overhead per column.
+pub const MIN_FIXED_CHUNK_LEN: usize = 16;
+
+/// Chunk length used by [`fixed_chunk_ranges`] for a range of `n`
+/// indices. A function of `n` **only** — never of the worker count —
+/// which is what makes chunked reductions thread-count-invariant.
+pub fn fixed_chunk_len(n: usize) -> usize {
+    n.div_ceil(MAX_FIXED_CHUNKS).max(MIN_FIXED_CHUNK_LEN)
+}
+
+/// Split `0..n` into contiguous ranges of `chunk` indices (last may be
+/// short). `n = 0` yields no ranges.
+pub fn chunk_ranges(n: usize, chunk: usize) -> Vec<Range<usize>> {
+    assert!(chunk >= 1, "chunk length must be >= 1");
+    let mut out = Vec::with_capacity(n.div_ceil(chunk));
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+/// The fixed, thread-count-independent chunking of `0..n` used by the
+/// column-parallel oracles: at most [`MAX_FIXED_CHUNKS`] chunks of at
+/// least [`MIN_FIXED_CHUNK_LEN`] indices each.
+pub fn fixed_chunk_ranges(n: usize) -> Vec<Range<usize>> {
+    chunk_ranges(n, fixed_chunk_len(n))
+}
+
+/// Intra-solve parallelism context: how many worker threads a solver's
+/// oracle may fork per evaluation. `threads = 1` (the default
+/// everywhere) runs the identical chunked code path serially, so the
+/// paper-faithful single-core configuration and the multicore one
+/// produce byte-equal iterates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelCtx {
+    threads: usize,
+}
+
+impl Default for ParallelCtx {
+    fn default() -> Self {
+        ParallelCtx::serial()
+    }
+}
+
+impl ParallelCtx {
+    /// Create with `threads` workers (0 is treated as 1).
+    pub fn new(threads: usize) -> Self {
+        ParallelCtx { threads: threads.max(1) }
+    }
+
+    /// The single-threaded context (still runs the chunked code path).
+    pub fn serial() -> Self {
+        ParallelCtx::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.threads > 1
+    }
+
+    /// Fork-join map over pre-chunked work: `map(chunk_idx, range, slot)`
+    /// runs once per chunk with exclusive access to that chunk's slot.
+    /// Chunk→slot assignment is by index and chunk boundaries come from
+    /// the caller, so *which thread* ran a chunk can never influence the
+    /// result; callers then combine slots in chunk order for a
+    /// deterministic reduction. A panic in any worker propagates to the
+    /// caller when the scope joins.
+    pub fn map_chunks<S, F>(&self, ranges: &[Range<usize>], slots: &mut [S], map: F)
+    where
+        S: Send,
+        F: Fn(usize, Range<usize>, &mut S) + Sync,
+    {
+        assert_eq!(ranges.len(), slots.len(), "one slot per chunk");
+        let k = ranges.len();
+        if k == 0 {
+            return;
+        }
+        let workers = self.threads.min(k);
+        if workers <= 1 {
+            for (c, slot) in slots.iter_mut().enumerate() {
+                map(c, ranges[c].clone(), slot);
+            }
+            return;
+        }
+        // Static contiguous assignment: worker b owns chunk indices
+        // [b·per, (b+1)·per). Column costs are near-uniform, so static
+        // splitting balances fine without work-stealing overhead.
+        //
+        // Scoped threads are spawned per call (tens of µs of fork-join
+        // overhead per eval) — fine while chunk work dominates, i.e. on
+        // the large problems worth threading at all. If bench_parallel
+        // shows the screened sparse regime starved by spawn cost, the
+        // upgrade path is a persistent parked worker set inside
+        // ParallelCtx with the same chunk→slot assignment; the ordered
+        // reduction (and thus bit-exactness) is unaffected by who runs
+        // a chunk.
+        let per = k.div_ceil(workers);
+        thread::scope(|s| {
+            for (b, block) in slots.chunks_mut(per).enumerate() {
+                let map = &map;
+                s.spawn(move || {
+                    for (off, slot) in block.iter_mut().enumerate() {
+                        let c = b * per + off;
+                        map(c, ranges[c].clone(), slot);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Deterministic sharded map-reduce over `0..n` in fixed chunks of
+/// `chunk` indices: `map(chunk_idx, range)` runs fork-join style on up
+/// to `threads` workers, and `reduce(acc, value)` folds the chunk
+/// values **in ascending chunk order** on the calling thread — per-chunk
+/// partials, never atomics — so the result is bit-identical for every
+/// `threads`, including 1. `n = 0` returns `init` without calling `map`;
+/// `chunk > n` degenerates to one chunk. Panics in `map` propagate.
+pub fn parallel_map_reduce<T, A, M, R>(
+    threads: usize,
+    n: usize,
+    chunk: usize,
+    init: A,
+    map: M,
+    mut reduce: R,
+) -> A
+where
+    T: Send,
+    M: Fn(usize, Range<usize>) -> T + Sync,
+    R: FnMut(A, T) -> A,
+{
+    let ranges = chunk_ranges(n, chunk.max(1));
+    let mut slots: Vec<Option<T>> = Vec::new();
+    slots.resize_with(ranges.len(), || None);
+    ParallelCtx::new(threads).map_chunks(&ranges, &mut slots, |c, range, slot| {
+        *slot = Some(map(c, range));
+    });
+    let mut acc = init;
+    for slot in slots {
+        acc = reduce(acc, slot.expect("every chunk was mapped"));
+    }
+    acc
 }
 
 /// Dynamic work-stealing-ish variant: threads atomically grab blocks of

@@ -87,6 +87,133 @@ fn pool_size() {
 }
 
 #[test]
+fn fixed_chunks_cover_range_and_ignore_thread_count() {
+    for n in [0usize, 1, 15, 16, 17, 100, 1003, 10_000] {
+        let ranges = fixed_chunk_ranges(n);
+        assert!(ranges.len() <= MAX_FIXED_CHUNKS, "n={n}: {} chunks", ranges.len());
+        let mut expect = 0;
+        for r in &ranges {
+            assert_eq!(r.start, expect, "contiguous at n={n}");
+            assert!(!r.is_empty());
+            expect = r.end;
+        }
+        assert_eq!(expect, n, "chunks must cover 0..{n}");
+        if n == 0 {
+            assert!(ranges.is_empty());
+        }
+        // Boundaries are a function of n alone — recomputing yields the
+        // exact same partition (no hidden thread-count dependence).
+        assert_eq!(ranges, fixed_chunk_ranges(n));
+    }
+}
+
+#[test]
+fn map_reduce_is_bit_identical_across_thread_counts() {
+    // A sum whose value depends on fp association: if any thread count
+    // changed the reduction order, the totals would differ in the last
+    // bits. All counts must agree with the serial chunked fold exactly.
+    let n = 4097;
+    let vals: Vec<f64> = (0..n).map(|i| 1.0 / (i as f64 + 0.37) * (-1.0f64).powi(i as i32)).collect();
+    let run = |threads: usize| {
+        parallel_map_reduce(
+            threads,
+            n as usize,
+            97,
+            0.0f64,
+            |_, range| {
+                let mut s = 0.0;
+                for i in range {
+                    s += vals[i];
+                }
+                s
+            },
+            |acc, part| acc + part,
+        )
+    };
+    let serial = run(1);
+    for threads in [2, 3, 4, 8] {
+        let t = run(threads);
+        assert_eq!(serial.to_bits(), t.to_bits(), "threads={threads}");
+    }
+}
+
+#[test]
+fn map_reduce_empty_range_returns_init_without_mapping() {
+    let mapped = AtomicUsize::new(0);
+    let out = parallel_map_reduce(
+        4,
+        0,
+        8,
+        41usize,
+        |_, _| {
+            mapped.fetch_add(1, Ordering::SeqCst);
+            1usize
+        },
+        |acc, v| acc + v,
+    );
+    assert_eq!(out, 41);
+    assert_eq!(mapped.load(Ordering::SeqCst), 0);
+}
+
+#[test]
+fn map_reduce_chunk_larger_than_len_is_one_chunk() {
+    let chunks = parallel_map_reduce(
+        4,
+        5,
+        1000,
+        Vec::new(),
+        |c, range| (c, range.start, range.end),
+        |mut acc: Vec<(usize, usize, usize)>, v| {
+            acc.push(v);
+            acc
+        },
+    );
+    assert_eq!(chunks, vec![(0, 0, 5)]);
+}
+
+#[test]
+fn map_reduce_propagates_worker_panics() {
+    for threads in [1, 4] {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map_reduce(
+                threads,
+                100,
+                8,
+                0u64,
+                |c, range| {
+                    if c == 3 {
+                        panic!("worker exploded");
+                    }
+                    range.len() as u64
+                },
+                |acc, v| acc + v,
+            )
+        }));
+        assert!(res.is_err(), "panic must propagate at threads={threads}");
+    }
+}
+
+#[test]
+fn map_chunks_gives_each_chunk_its_slot() {
+    let ranges = chunk_ranges(103, 10);
+    let mut slots = vec![0usize; ranges.len()];
+    ParallelCtx::new(4).map_chunks(&ranges, &mut slots, |c, range, slot| {
+        *slot = c * 1000 + range.len();
+    });
+    for (c, (slot, range)) in slots.iter().zip(&ranges).enumerate() {
+        assert_eq!(*slot, c * 1000 + range.len());
+    }
+}
+
+#[test]
+fn parallel_ctx_clamps_to_one() {
+    assert_eq!(ParallelCtx::new(0).threads(), 1);
+    assert!(!ParallelCtx::serial().is_parallel());
+    assert!(ParallelCtx::new(2).is_parallel());
+    assert_eq!(ParallelCtx::default(), ParallelCtx::serial());
+}
+
+#[test]
 fn bounded_queue_fifo_and_backpressure() {
     let q = BoundedQueue::new(3);
     assert_eq!(q.capacity(), 3);

@@ -157,6 +157,9 @@ impl ProblemCache {
 
 struct EngineState {
     cfg: ServeConfig,
+    /// Effective intra-solve thread count after clamping
+    /// `workers × threads_per_solve` to the core budget.
+    threads_per_solve: usize,
     queue: AdmissionQueue,
     problems: Mutex<ProblemCache>,
     /// Per-key build locks: concurrent cold builds of *one* dataset are
@@ -190,8 +193,23 @@ pub struct Engine {
 
 impl Engine {
     /// Spawn the worker pool and return the handle.
+    ///
+    /// Intra-op threading composes with worker concurrency under a core
+    /// budget: the effective per-solve thread count is clamped so
+    /// `workers × threads_per_solve ≤ core_budget` (autodetected from
+    /// `available_parallelism` when the config leaves it 0). Clamping
+    /// changes wall time only — solves are deterministic in the thread
+    /// count, so results are unaffected.
     pub fn start(cfg: ServeConfig, metrics: Arc<Metrics>) -> Engine {
+        let workers = cfg.workers.max(1);
+        let budget = if cfg.core_budget > 0 {
+            cfg.core_budget
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        };
+        let threads_per_solve = cfg.threads_per_solve.max(1).min((budget / workers).max(1));
         let state = Arc::new(EngineState {
+            threads_per_solve,
             queue: BoundedQueue::new(cfg.queue_capacity.max(1)),
             problems: Mutex::new(ProblemCache::default()),
             problem_build: Mutex::new(BTreeMap::new()),
@@ -217,8 +235,7 @@ impl Engine {
         }
         state.metrics.set_gauge("serve.queue_depth", 0.0);
         state.metrics.set_gauge("serve.warm_cache_bytes", 0.0);
-        let n = state.cfg.workers.max(1);
-        let workers = (0..n)
+        let workers = (0..workers)
             .map(|i| {
                 let st = Arc::clone(&state);
                 std::thread::Builder::new()
@@ -238,6 +255,12 @@ impl Engine {
     /// Current admission-queue depth.
     pub fn queue_depth(&self) -> usize {
         self.state.queue.len()
+    }
+
+    /// Effective intra-solve thread count after the core-budget clamp
+    /// (`workers × threads_per_solve ≤ core_budget`).
+    pub fn threads_per_solve(&self) -> usize {
+        self.state.threads_per_solve
     }
 
     /// Submit one request and block until its response. Admission
@@ -454,6 +477,7 @@ fn solve_job(
                 state.cfg.r,
                 state.cfg.lbfgs.clone(),
                 x0,
+                state.threads_per_solve,
             )
         })
     }));

@@ -68,6 +68,15 @@ pub struct ServeConfig {
     pub warm_radius: f64,
     /// Snapshot interval `r` passed to the Algorithm-1 driver.
     pub r: usize,
+    /// Intra-solve oracle workers per engine solve (deterministic:
+    /// results are bit-identical to serial). The engine clamps the
+    /// effective value so `workers × threads_per_solve` never exceeds
+    /// [`ServeConfig::core_budget`] — micro-batched serving and intra-op
+    /// parallelism compose instead of oversubscribing.
+    pub threads_per_solve: usize,
+    /// Core budget for the `workers × threads_per_solve` product;
+    /// 0 = autodetect via `std::thread::available_parallelism`.
+    pub core_budget: usize,
     /// Inner-solver options for every engine solve.
     pub lbfgs: LbfgsOptions,
 }
@@ -84,6 +93,8 @@ impl Default for ServeConfig {
             warm_start: true,
             warm_radius: 2.0,
             r: 10,
+            threads_per_solve: 1,
+            core_budget: 0,
             lbfgs: LbfgsOptions::default(),
         }
     }
@@ -101,5 +112,7 @@ mod tests {
         assert!(cfg.max_batch >= 1);
         assert!(cfg.warm_start);
         assert!(cfg.warm_cache_bytes > 0);
+        assert_eq!(cfg.threads_per_solve, 1, "serving defaults to serial solves");
+        assert_eq!(cfg.core_budget, 0, "core budget autodetects by default");
     }
 }

@@ -3,6 +3,13 @@
 //! Implemented as a *resumable* state machine: the Algorithm-1 driver
 //! calls [`Lbfgs::step`] in blocks of `r` iterations and refreshes the
 //! screening snapshots in between without losing curvature memory.
+//!
+//! The solver's own dot/axpy reductions are `O(m + n)` per iteration —
+//! dwarfed by the oracle's `O(|L|·n·g)` evaluation — and stay serial on
+//! purpose: intra-solve parallelism lives in the oracles (see
+//! [`crate::pool::ParallelCtx`]), whose deterministic ordered reduction
+//! keeps the whole trajectory bit-identical at any thread count. A
+//! parallel dot here would buy nothing and break that invariant.
 
 use super::linesearch::{strong_wolfe, WolfeOptions};
 use super::{StepStatus, StopReason};

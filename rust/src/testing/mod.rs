@@ -16,6 +16,19 @@
 
 use crate::rng::Pcg64;
 
+/// Intra-solve thread count for test runs: `GRPOT_TEST_THREADS` (≥ 1),
+/// defaulting to 1. `scripts/ci.sh` re-runs the equivalence suites with
+/// this set to 4 so the parallel oracle path is exercised on every push
+/// — the solves are deterministic in the thread count, so the same
+/// assertions must pass untouched.
+pub fn env_threads() -> usize {
+    std::env::var("GRPOT_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
 /// Property-run configuration.
 #[derive(Clone, Debug)]
 pub struct Config {

@@ -137,6 +137,7 @@ fn sweep_includes_ablation_method() {
         methods: vec![Method::Fast, Method::FastNoWs, Method::Origin],
         r: 5,
         threads: 1,
+        solve_threads: 1,
         max_iters: 80,
     };
     let report = run_sweep(&cfg, &Metrics::new()).expect("sweep");

@@ -1,0 +1,149 @@
+//! Determinism of the intra-solve parallel hot path: for a fixed
+//! problem and config, `threads ∈ {1, 2, 4}` must return *byte-equal*
+//! solutions, objectives, iteration counts and oracle counters for both
+//! the screened and the dense method — the multicore analogue of the
+//! paper's Theorem 2 (exactness under acceleration). The pool's ordered
+//! chunk reduction is what makes this hold; these tests are the
+//! executable statement of that guarantee.
+
+use grpot::coordinator::config::Method;
+use grpot::coordinator::sweep::solve_full_threads;
+use grpot::linalg::Mat;
+use grpot::ot::dual::{eval_dense, eval_dense_threads, DualParams, OracleStats, OtProblem};
+use grpot::ot::fastot::{solve_fast_ot, FastOtConfig, FastOtResult};
+use grpot::ot::origin::solve_origin;
+use grpot::ot::semidual::solve_semidual_threads;
+use grpot::rng::Pcg64;
+use grpot::solvers::lbfgs::LbfgsOptions;
+
+fn random_problem(seed: u64, l: usize, g: usize, n: usize) -> OtProblem {
+    let mut rng = Pcg64::new(seed);
+    let m = l * g;
+    let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+    let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+    OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+}
+
+fn assert_stats_eq(a: &OracleStats, b: &OracleStats, what: &str) {
+    assert_eq!(a.evals, b.evals, "{what}: evals");
+    assert_eq!(a.grads_computed, b.grads_computed, "{what}: grads_computed");
+    assert_eq!(a.grads_skipped, b.grads_skipped, "{what}: grads_skipped");
+    assert_eq!(a.ub_checks, b.ub_checks, "{what}: ub_checks");
+    assert_eq!(a.ws_hits, b.ws_hits, "{what}: ws_hits");
+    assert_eq!(a.per_eval_grads, b.per_eval_grads, "{what}: per_eval_grads");
+}
+
+fn assert_results_identical(a: &FastOtResult, b: &FastOtResult, what: &str) {
+    assert_eq!(a.x, b.x, "{what}: solution bytes");
+    assert_eq!(a.dual_objective, b.dual_objective, "{what}: objective");
+    assert_eq!(a.iterations, b.iterations, "{what}: iterations");
+    assert_eq!(a.outer_rounds, b.outer_rounds, "{what}: outer rounds");
+    assert_stats_eq(&a.stats, &b.stats, what);
+}
+
+/// The acceptance-criterion test: threads ∈ {1, 2, 4} are byte-equal
+/// for `solve_fast_ot` and `solve_origin`, across hyperparameters that
+/// hit both the skip-heavy and the dense regime.
+#[test]
+fn fast_and_origin_bit_identical_across_thread_counts() {
+    // n = 37 spans multiple fixed chunks once MIN_FIXED_CHUNK_LEN = 16.
+    let prob = random_problem(0xDE7, 5, 4, 37);
+    for (gamma, rho) in [(0.1, 0.3), (1.0, 0.5), (8.0, 0.8)] {
+        let cfg_with = |threads: usize| FastOtConfig {
+            gamma,
+            rho,
+            threads,
+            lbfgs: LbfgsOptions { max_iters: 120, ..Default::default() },
+            ..Default::default()
+        };
+        let fast1 = solve_fast_ot(&prob, &cfg_with(1));
+        let orig1 = solve_origin(&prob, &cfg_with(1));
+        for threads in [2, 4] {
+            let fast_t = solve_fast_ot(&prob, &cfg_with(threads));
+            assert_results_identical(
+                &fast1,
+                &fast_t,
+                &format!("fast γ={gamma} ρ={rho} threads={threads}"),
+            );
+            let orig_t = solve_origin(&prob, &cfg_with(threads));
+            assert_results_identical(
+                &orig1,
+                &orig_t,
+                &format!("origin γ={gamma} ρ={rho} threads={threads}"),
+            );
+        }
+        // Theorem 2 must also hold *across* methods at any thread mix.
+        assert_eq!(fast1.dual_objective, orig1.dual_objective);
+        assert_eq!(fast1.x, orig1.x);
+        assert_eq!(fast1.iterations, orig1.iterations);
+    }
+}
+
+/// The threaded dense evaluation is byte-equal to the serial reference
+/// `eval_dense` at arbitrary points (not just along solver iterates).
+#[test]
+fn eval_dense_threads_matches_serial_reference() {
+    let prob = random_problem(0xE1A, 4, 5, 53);
+    let params = DualParams::new(0.7, 0.4);
+    let mut rng = Pcg64::new(31);
+    let mut x = vec![0.0; prob.dim()];
+    for _ in 0..8 {
+        for v in x.iter_mut() {
+            *v += rng.uniform(-0.3, 0.35);
+        }
+        let mut g1 = vec![0.0; prob.dim()];
+        let (f1, n1) = eval_dense(&prob, &params, &x, &mut g1);
+        for threads in [2, 3, 8] {
+            let mut gt = vec![0.0; prob.dim()];
+            let (ft, nt) = eval_dense_threads(&prob, &params, &x, &mut gt, threads);
+            assert_eq!(f1, ft, "objective at threads={threads}");
+            assert_eq!(g1, gt, "gradient at threads={threads}");
+            assert_eq!(n1, nt);
+        }
+    }
+}
+
+/// Warm starts compose with threading: a threaded solve seeded at an
+/// arbitrary iterate is byte-equal to the serial warm solve.
+#[test]
+fn warm_started_threaded_solve_matches_serial() {
+    let prob = random_problem(0xAB5, 4, 3, 33);
+    let mut rng = Pcg64::new(77);
+    let x0: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.2, 0.3)).collect();
+    let cfg_with = |threads: usize| FastOtConfig {
+        gamma: 0.6,
+        rho: 0.55,
+        threads,
+        lbfgs: LbfgsOptions { max_iters: 90, ..Default::default() },
+        ..Default::default()
+    };
+    let serial = grpot::ot::fastot::solve_fast_ot_from(&prob, &cfg_with(1), x0.clone());
+    let threaded = grpot::ot::fastot::solve_fast_ot_from(&prob, &cfg_with(4), x0);
+    assert_results_identical(&serial, &threaded, "warm-started fast");
+}
+
+/// The sweep-layer entry point plumbs the knob end to end.
+#[test]
+fn solve_full_threads_is_deterministic_per_method() {
+    let prob = random_problem(0x5EE, 3, 4, 29);
+    for method in [Method::Fast, Method::FastNoWs, Method::Origin] {
+        let serial = solve_full_threads(&prob, method, 0.4, 0.6, 10, 80, 1);
+        let threaded = solve_full_threads(&prob, method, 0.4, 0.6, 10, 80, 4);
+        assert_results_identical(&serial, &threaded, method.name());
+    }
+}
+
+/// The semi-dual oracle's column chunks reduce deterministically too.
+#[test]
+fn semidual_bit_identical_across_thread_counts() {
+    let prob = random_problem(0x5D1, 3, 4, 41);
+    let opts = LbfgsOptions { max_iters: 200, ..Default::default() };
+    let serial = solve_semidual_threads(&prob, 0.2, &opts, 1);
+    for threads in [2, 4] {
+        let threaded = solve_semidual_threads(&prob, 0.2, &opts, threads);
+        assert_eq!(serial.alpha, threaded.alpha, "threads={threads}: alpha bytes");
+        assert_eq!(serial.objective, threaded.objective, "threads={threads}: objective");
+        assert_eq!(serial.iterations, threaded.iterations, "threads={threads}: iterations");
+        assert_eq!(serial.plan, threaded.plan, "threads={threads}: plan");
+    }
+}

@@ -121,6 +121,83 @@ fn warm_started_solve_matches_cold_dual_objective() {
 }
 
 #[test]
+fn engine_clamps_intra_solve_threads_to_core_budget() {
+    // workers × threads_per_solve must never exceed the configured core
+    // budget: 2 workers under a 4-core budget cap an 8-thread request
+    // at 2 threads per solve.
+    let capped = Engine::start(
+        ServeConfig { workers: 2, threads_per_solve: 8, core_budget: 4, ..Default::default() },
+        Arc::new(Metrics::new()),
+    );
+    assert_eq!(capped.threads_per_solve(), 2);
+    capped.shutdown();
+
+    // A budget already consumed by the workers floors at 1 thread per
+    // solve (worker concurrency wins; intra-op parallelism yields).
+    let floored = Engine::start(
+        ServeConfig { workers: 4, threads_per_solve: 8, core_budget: 2, ..Default::default() },
+        Arc::new(Metrics::new()),
+    );
+    assert_eq!(floored.threads_per_solve(), 1);
+    floored.shutdown();
+
+    // Requests under the budget pass through unclamped.
+    let roomy = Engine::start(
+        ServeConfig { workers: 2, threads_per_solve: 3, core_budget: 64, ..Default::default() },
+        Arc::new(Metrics::new()),
+    );
+    assert_eq!(roomy.threads_per_solve(), 3);
+    roomy.shutdown();
+}
+
+#[test]
+fn multithreaded_warm_solves_match_cold_serial() {
+    // Reference: cold solve on a serial single-worker engine.
+    let serial = Engine::start(
+        ServeConfig { workers: 1, lbfgs: tight_lbfgs(), ..Default::default() },
+        Arc::new(Metrics::new()),
+    );
+    let mut cold_req = request(77, 0.9, 0.5);
+    cold_req.warm_start = false;
+    let cold = serial.submit(cold_req.clone()).expect("serial cold solve");
+    serial.shutdown();
+
+    // Same request on a multithreaded engine (explicit budget so the
+    // clamp can't silently serialize it on small CI machines).
+    let threaded = Engine::start(
+        ServeConfig {
+            workers: 2,
+            threads_per_solve: 4,
+            core_budget: 64,
+            lbfgs: tight_lbfgs(),
+            ..Default::default()
+        },
+        Arc::new(Metrics::new()),
+    );
+    assert_eq!(threaded.threads_per_solve(), 4);
+    // Cold × threaded is bit-identical to cold × serial: the ordered
+    // chunk reduction is deterministic in the thread count.
+    let tcold = threaded.submit(cold_req).expect("threaded cold solve");
+    assert_eq!(tcold.result.dual_objective, cold.result.dual_objective);
+    assert_eq!(tcold.result.x, cold.result.x);
+    assert_eq!(tcold.result.iterations, cold.result.iterations);
+
+    // Warm × threaded still lands on the same optimum to 1e-9 (warm
+    // starts change the trajectory, never the fixed point — Theorem 2).
+    threaded.submit(request(77, 0.9, 0.5)).expect("cache-filling solve");
+    let warm = threaded.submit(request(77, 0.9, 0.5)).expect("warm solve");
+    assert!(warm.warm_started, "second identical solve must warm-start");
+    let diff = (warm.result.dual_objective - cold.result.dual_objective).abs();
+    assert!(
+        diff <= 1e-9,
+        "warm threaded={} cold serial={} diff={diff:e}",
+        warm.result.dual_objective,
+        cold.result.dual_objective
+    );
+    threaded.shutdown();
+}
+
+#[test]
 fn backpressure_rejects_with_structured_error() {
     let engine = Engine::start(
         ServeConfig {

@@ -2,9 +2,14 @@
 //! reproduce the dense baseline's trajectory bit-for-bit across
 //! datasets, hyperparameters, snapshot intervals and the working-set
 //! ablation.
+//!
+//! Every solve honors `GRPOT_TEST_THREADS` (default 1): CI re-runs this
+//! suite with 4 intra-solve oracle threads, and every bit-exact
+//! assertion must hold unchanged — the parallel reduction is
+//! deterministic by construction.
 
 use grpot::coordinator::config::Method;
-use grpot::coordinator::sweep::run_job;
+use grpot::coordinator::sweep::run_job_threads;
 use grpot::data::{digits, faces, objects, synthetic};
 use grpot::ot::dual::OtProblem;
 use grpot::ot::fastot::{solve_fast_ot, FastOtConfig};
@@ -17,6 +22,7 @@ fn check_pair(prob: &OtProblem, gamma: f64, rho: f64, r: usize) {
         gamma,
         rho,
         r,
+        threads: grpot::testing::env_threads(),
         lbfgs: LbfgsOptions { max_iters: 150, ..Default::default() },
         ..Default::default()
     };
@@ -73,14 +79,15 @@ fn objects_task_high_dim() {
 #[test]
 fn snapshot_interval_does_not_change_result() {
     // r only affects *when* bounds refresh, never what is computed.
+    let threads = grpot::testing::env_threads();
     let pair = synthetic::controlled(5, 6, 0x7E5B);
     let prob = OtProblem::from_dataset(&pair);
     let base = {
-        let cfg = FastOtConfig { gamma: 0.3, rho: 0.7, r: 1, ..Default::default() };
+        let cfg = FastOtConfig { gamma: 0.3, rho: 0.7, r: 1, threads, ..Default::default() };
         solve_fast_ot(&prob, &cfg)
     };
     for r in [2, 5, 10, 100] {
-        let cfg = FastOtConfig { gamma: 0.3, rho: 0.7, r, ..Default::default() };
+        let cfg = FastOtConfig { gamma: 0.3, rho: 0.7, r, threads, ..Default::default() };
         let res = solve_fast_ot(&prob, &cfg);
         assert_eq!(res.dual_objective, base.dual_objective, "r={r}");
         assert_eq!(res.x, base.x, "r={r}");
@@ -89,11 +96,12 @@ fn snapshot_interval_does_not_change_result() {
 
 #[test]
 fn ablation_methods_agree() {
+    let threads = grpot::testing::env_threads();
     let pair = synthetic::controlled(4, 8, 0x7E5C);
     let prob = OtProblem::from_dataset(&pair);
-    let fast = run_job(&prob, Method::Fast, 0.2, 0.6, 10, 150);
-    let nows = run_job(&prob, Method::FastNoWs, 0.2, 0.6, 10, 150);
-    let orig = run_job(&prob, Method::Origin, 0.2, 0.6, 10, 150);
+    let fast = run_job_threads(&prob, Method::Fast, 0.2, 0.6, 10, 150, threads);
+    let nows = run_job_threads(&prob, Method::FastNoWs, 0.2, 0.6, 10, 150, threads);
+    let orig = run_job_threads(&prob, Method::Origin, 0.2, 0.6, 10, 150, threads);
     assert_eq!(fast.dual_objective, orig.dual_objective);
     assert_eq!(nows.dual_objective, orig.dual_objective);
     assert_eq!(fast.iterations, orig.iterations);

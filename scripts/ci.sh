@@ -5,8 +5,13 @@
 #   2. cargo clippy --all-targets -- -D warnings
 #   3. cargo build --release            (tier-1, part 1)
 #   4. cargo test -q                    (tier-1, part 2)
-#   5. cargo build --release --features xla   (in-tree stub must keep compiling)
-#   6. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
+#   5. GRPOT_TEST_THREADS=4 shard: the theorem2_equivalence suite
+#      re-runs with 4 intra-solve oracle threads so the parallel hot
+#      path is exercised (and must stay byte-equal) on every push
+#      (parallel_determinism compares thread counts directly in step 4)
+#   6. cargo build --release --features xla   (in-tree stub must keep compiling)
+#   7. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
+#      (includes bench_parallel, which asserts thread-count determinism)
 #
 # Everything except step 5 runs with default features only (zero
 # external crate dependencies — this image has no network). Step 5
@@ -40,6 +45,9 @@ cargo build --release
 step "cargo test -q"
 cargo test -q
 
+step "cargo test -q (GRPOT_TEST_THREADS=4 parallel shard)"
+GRPOT_TEST_THREADS=4 cargo test -q --test theorem2_equivalence
+
 step "cargo build --release --features xla (offline stub)"
 cargo build --release --features xla
 
@@ -56,6 +64,7 @@ BENCHES=(
     figd_lower_bound_ablation
     table1_objective
     hotpath_microbench
+    bench_parallel
     xla_backend
     bench_serve
 )
