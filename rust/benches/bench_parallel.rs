@@ -5,6 +5,14 @@
 //! solution, objective and iteration count (the determinism guarantee
 //! the pool's ordered chunk reduction provides).
 //!
+//! Also runs the **fork-join vs persistent** dispatch comparison: the
+//! same dense kernel over the same fixed chunks, dispatched once per
+//! eval through the PR-3 `thread::scope` fork-join
+//! (`pool::forkjoin_map_chunks`, kept off the hot path exactly for
+//! this) and through the PR-4 persistent parked worker set — the
+//! per-eval spawn/join overhead is the only difference, and the bench
+//! asserts the results stay byte-equal while reporting the speedup.
+//!
 //! Target (recorded in ROADMAP.md next to the bench-serve baseline):
 //! ≥ 1.5× wall-clock speedup at 4 threads on the full-size problem.
 
@@ -14,8 +22,11 @@ use common::*;
 use grpot::benchlib::{report_dir, smoke_mode, Table, Timer};
 use grpot::coordinator::config::Method;
 use grpot::data::synthetic;
+use grpot::ot::dual::{eval_dense_forkjoin, eval_dense_reusing, DenseEvalScratch, DualParams};
 use grpot::ot::fastot::{solve_fast_ot, FastOtConfig, FastOtResult};
 use grpot::ot::origin::solve_origin;
+use grpot::pool::ParallelCtx;
+use grpot::rng::Pcg64;
 use grpot::solvers::lbfgs::LbfgsOptions;
 
 /// Iteration cap per solve: long enough that oracle time dominates the
@@ -105,4 +116,60 @@ fn main() {
         }
     }
     table.emit(&report_dir(), "bench_parallel");
+
+    dispatch_comparison(&prob);
+}
+
+/// Fork-join vs persistent dispatch on the identical dense kernel:
+/// measures µs/eval for both dispatchers and asserts byte-equality.
+fn dispatch_comparison(prob: &grpot::ot::dual::OtProblem) {
+    println!("\n== dispatch: fork-join vs persistent ==");
+    let params = DualParams::new(0.5, 0.6);
+    let mut rng = Pcg64::new(0xD15);
+    let x: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.1, 0.15)).collect();
+    let evals = size3(5, 100, 400);
+    let thread_grid: Vec<usize> = if smoke_mode() { vec![2] } else { vec![2, 4] };
+
+    let mut table = Table::new(
+        "per-eval dispatch (fork-join vs persistent pool)",
+        &["threads", "us/eval forkjoin", "us/eval persistent", "speedup", "identical"],
+    );
+    for &threads in &thread_grid {
+        let ctx = ParallelCtx::new(threads);
+        let mut scratch = DenseEvalScratch::new(prob);
+        let mut g_p = vec![0.0; prob.dim()];
+        let mut g_f = vec![0.0; prob.dim()];
+
+        // Warm both paths once (pool spawn, page faults) outside timing.
+        let (fp, _) = eval_dense_reusing(prob, &params, &x, &mut g_p, &ctx, &mut scratch);
+        let (ff, _) = eval_dense_forkjoin(prob, &params, &x, &mut g_f, threads, &mut scratch);
+        assert_eq!(fp.to_bits(), ff.to_bits(), "dispatchers diverged on the objective");
+        assert_eq!(g_p, g_f, "dispatchers diverged on the gradient");
+
+        let t = Timer::start();
+        for _ in 0..evals {
+            eval_dense_reusing(prob, &params, &x, &mut g_p, &ctx, &mut scratch);
+        }
+        let persistent_us = t.elapsed_s() * 1e6 / evals as f64;
+
+        let t = Timer::start();
+        for _ in 0..evals {
+            eval_dense_forkjoin(prob, &params, &x, &mut g_f, threads, &mut scratch);
+        }
+        let forkjoin_us = t.elapsed_s() * 1e6 / evals as f64;
+
+        let speedup = forkjoin_us / persistent_us.max(1e-9);
+        println!(
+            "threads={threads} forkjoin={forkjoin_us:>9.1} us/eval \
+             persistent={persistent_us:>9.1} us/eval speedup={speedup:.2}x"
+        );
+        table.row(vec![
+            format!("{threads}"),
+            format!("{forkjoin_us:.1}"),
+            format!("{persistent_us:.1}"),
+            format!("{speedup:.2}"),
+            "ok".into(),
+        ]);
+    }
+    table.emit(&report_dir(), "bench_parallel_dispatch");
 }

@@ -11,6 +11,7 @@ use grpot::data::synthetic;
 use grpot::ot::dual::{DualOracle, DualParams};
 use grpot::ot::origin::OriginOracle;
 use grpot::ot::screening::ScreeningOracle;
+use grpot::pool::{chunk_ranges, forkjoin_map_chunks, ParallelCtx};
 use grpot::rng::Pcg64;
 
 fn main() {
@@ -61,6 +62,25 @@ fn main() {
         });
         record(&format!("snapshot + ws refresh ({threads}t)"), t.seconds() * 1e3);
     }
+
+    // Bare dispatch latency on a near-empty job — the per-eval floor the
+    // screened sparse regime pays: persistent parked handoff vs the
+    // PR-3 scoped fork-join over the same 32-chunk grid.
+    let ranges = chunk_ranges(32 * 16, 16);
+    let mut slots = vec![0u64; ranges.len()];
+    let touch = |c: usize, _range: std::ops::Range<usize>, slot: &mut u64| {
+        *slot = c as u64;
+    };
+    let ctx = ParallelCtx::new(4);
+    ctx.map_chunks(&ranges, &mut slots, touch); // spawn outside timing
+    let t = bench_fn("dispatch-persistent", &opts, || {
+        ctx.map_chunks(&ranges, &mut slots, touch);
+    });
+    record("dispatch persistent (4t, empty)", t.seconds() * 1e3);
+    let t = bench_fn("dispatch-forkjoin", &opts, || {
+        forkjoin_map_chunks(4, &ranges, &mut slots, touch);
+    });
+    record("dispatch fork-join (4t, empty)", t.seconds() * 1e3);
 
     table.emit(&report_dir(), "hotpath_microbench");
 }

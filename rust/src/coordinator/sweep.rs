@@ -15,7 +15,7 @@ use crate::error::Result;
 use crate::jsonlite::Value;
 use crate::ot::dual::OtProblem;
 use crate::ot::fastot::FastOtConfig;
-use crate::pool::ThreadPool;
+use crate::pool::{ParallelCtx, ThreadPool};
 use crate::solvers::lbfgs::LbfgsOptions;
 use std::sync::{Arc, Mutex};
 
@@ -102,8 +102,12 @@ pub fn solve_full_threads(
 
 /// Solve one (method, γ, ρ) job with explicit L-BFGS options, an
 /// optional warm-start iterate and an intra-solve thread count — the
-/// serving engine's solve entry. `x0 = None` starts from the origin
-/// exactly like [`solve_full`]; `threads = 1` is the serial hot path.
+/// one-shot solve entry. `x0 = None` starts from the origin exactly
+/// like [`solve_full`]; `threads = 1` is the serial hot path. Creates a
+/// fresh [`ParallelCtx`] per call; repeated solvers (the serving
+/// engine's workers, the serial sweep loop) hold a long-lived ctx and
+/// call [`solve_full_warm_ctx`] so oracle workers spawn once, not once
+/// per solve.
 #[allow(clippy::too_many_arguments)]
 pub fn solve_full_warm(
     prob: &OtProblem,
@@ -115,18 +119,38 @@ pub fn solve_full_warm(
     x0: Option<&[f64]>,
     threads: usize,
 ) -> crate::ot::fastot::FastOtResult {
+    solve_full_warm_ctx(prob, method, gamma, rho, r, lbfgs, x0, &ParallelCtx::new(threads))
+}
+
+/// [`solve_full_warm`] over a caller-provided long-lived parallel
+/// context — the serving engine's solve entry (one ctx per engine
+/// worker, threaded through every batch). Deterministic: any ctx thread
+/// count returns the bit-identical result.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_full_warm_ctx(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    lbfgs: LbfgsOptions,
+    x0: Option<&[f64]>,
+    ctx: &ParallelCtx,
+) -> crate::ot::fastot::FastOtResult {
     let cfg = FastOtConfig {
         gamma,
         rho,
         r,
         use_working_set: method != Method::FastNoWs,
-        threads,
+        threads: ctx.threads(),
         lbfgs,
     };
     let x0 = x0.map(<[f64]>::to_vec).unwrap_or_else(|| vec![0.0; prob.dim()]);
     match method {
-        Method::Fast | Method::FastNoWs => crate::ot::fastot::solve_fast_ot_from(prob, &cfg, x0),
-        Method::Origin => crate::ot::origin::solve_origin_from(prob, &cfg, x0),
+        Method::Fast | Method::FastNoWs => {
+            crate::ot::fastot::solve_fast_ot_ctx(prob, &cfg, x0, ctx)
+        }
+        Method::Origin => crate::ot::origin::solve_origin_ctx(prob, &cfg, x0, ctx),
         #[cfg(feature = "xla")]
         Method::XlaOrigin => {
             let runtime = crate::runtime::PjrtRuntime::cpu().expect("pjrt client");
@@ -174,7 +198,32 @@ pub fn run_job_threads(
     max_iters: usize,
     threads: usize,
 ) -> SweepRecord {
-    let res = solve_full_threads(prob, method, gamma, rho, r, max_iters, threads);
+    run_job_ctx(prob, method, gamma, rho, r, max_iters, &ParallelCtx::new(threads))
+}
+
+/// [`run_job`] over a caller-provided long-lived parallel context —
+/// the serial sweep loop reuses one ctx (one parked worker set) across
+/// the whole grid.
+#[allow(clippy::too_many_arguments)]
+pub fn run_job_ctx(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    max_iters: usize,
+    ctx: &ParallelCtx,
+) -> SweepRecord {
+    let res = solve_full_warm_ctx(
+        prob,
+        method,
+        gamma,
+        rho,
+        r,
+        LbfgsOptions { max_iters, ..Default::default() },
+        None,
+        ctx,
+    );
     SweepRecord {
         method,
         gamma,
@@ -212,9 +261,12 @@ pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
 
     let solve_threads = cfg.solve_threads.max(1);
     let records: Vec<SweepRecord> = if cfg.threads <= 1 {
+        // One long-lived ctx (one parked worker set) reused across the
+        // whole grid: the per-solve spawn cost disappears entirely.
+        let ctx = ParallelCtx::new(solve_threads);
         jobs.iter()
             .map(|&(m, g, r)| {
-                let rec = run_job_threads(&prob, m, g, r, cfg.r, cfg.max_iters, solve_threads);
+                let rec = run_job_ctx(&prob, m, g, r, cfg.r, cfg.max_iters, &ctx);
                 metrics.incr("sweep.jobs_done", 1);
                 metrics.observe("sweep.job_seconds", rec.wall_time_s);
                 rec
@@ -228,6 +280,10 @@ pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
             let results = Arc::clone(&results);
             let (rr, mi) = (cfg.r, cfg.max_iters);
             pool.execute(move || {
+                // Concurrent jobs must not share one ctx (its dispatch
+                // serializes), so each job owns a solve-lifetime ctx;
+                // the parked set still amortizes over every eval of
+                // that solve.
                 let rec = run_job_threads(&prob, m, g, r, rr, mi, solve_threads);
                 results.lock().unwrap().push(rec);
             });

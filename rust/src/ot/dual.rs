@@ -75,6 +75,57 @@ impl Default for DualParams {
     }
 }
 
+/// Loop-invariant (γ, ρ)-derived constants, computed once per problem
+/// instead of per (group, column) pair: the inner kernel otherwise pays
+/// a `sqrt` per *zero* group and two divisions per active group, which
+/// in the screened sparse regime is a measurable share of the per-eval
+/// floor. Every oracle evaluates through the same table, so the (fixed)
+/// arithmetic stays identical across methods and thread counts.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelConsts {
+    /// Group-lasso threshold `τ = γρ`.
+    pub tau: f64,
+    /// `τ²` — lets the skip test run on `z²` so zero groups never pay
+    /// the `sqrt`.
+    pub tau_sq: f64,
+    /// `1/λ_quad` — turns the per-active-group division into a multiply.
+    pub inv_lq: f64,
+    /// `1/(2 λ_quad)` — same, for the ψ value term.
+    pub half_inv_lq: f64,
+}
+
+impl KernelConsts {
+    pub fn new(params: &DualParams) -> Self {
+        let tau = params.tau();
+        let lq = params.lambda_quad();
+        KernelConsts { tau, tau_sq: tau * tau, inv_lq: 1.0 / lq, half_inv_lq: 0.5 / lq }
+    }
+}
+
+/// Columns per cache panel in the blocked oracle walks: panels of
+/// `PANEL_COLS` columns are processed group-by-group so one group's
+/// slice of `alpha`/`grad_alpha` (and, in the screened oracle, its
+/// `snap_z` row segment and `da_pos` entry) stays in L1 across the
+/// whole panel instead of being re-streamed once per column.
+pub(crate) const PANEL_COLS: usize = 8;
+
+/// The fixed panels of one column chunk: sub-ranges of at most
+/// [`PANEL_COLS`] columns, aligned to the chunk start. A function of the
+/// chunk boundaries alone (which are themselves a function of `n`
+/// alone), so panel-level decisions are thread-count-invariant.
+pub(crate) fn panel_ranges(range: Range<usize>) -> impl Iterator<Item = Range<usize>> {
+    let (start, end) = (range.start, range.end);
+    (0..range.len().div_ceil(PANEL_COLS)).map(move |p| {
+        let lo = start + p * PANEL_COLS;
+        lo..(lo + PANEL_COLS).min(end)
+    })
+}
+
+/// Number of panels a chunk of `len` columns splits into.
+pub(crate) fn panel_count(len: usize) -> usize {
+    len.div_ceil(PANEL_COLS)
+}
+
 /// A regularized-OT instance: marginals, cost and group structure.
 ///
 /// The cost matrix is stored **transposed** (`n×m`): the dual oracles
@@ -216,14 +267,18 @@ pub trait DualOracle {
 ///
 /// `grad_alpha` is the α-part of the negated-dual gradient; the returned
 /// `col_mass` (Σ_i t_ij over this group) must be added to `∂/∂β_j`.
+///
+/// The skip test compares `z²` against the precomputed `τ²`
+/// ([`KernelConsts`]), so groups below the threshold — the common case
+/// in the screened sparse regime — never pay the `sqrt`; active groups
+/// multiply by the precomputed `1/λ_quad` instead of dividing.
 #[inline]
 pub fn group_grad_contrib(
     alpha: &[f64],
     beta_j: f64,
     c_j: &[f64],
     range: std::ops::Range<usize>,
-    tau: f64,
-    lambda_quad: f64,
+    consts: &KernelConsts,
     grad_alpha: &mut [f64],
     scratch: &mut [f64],
 ) -> (f64, f64) {
@@ -239,20 +294,20 @@ pub fn group_grad_contrib(
         scratch[k] = fp;
         zsq += fp * fp;
     }
-    let z = zsq.sqrt();
-    if z <= tau {
+    if zsq <= consts.tau_sq {
         return (0.0, 0.0);
     }
+    let z = zsq.sqrt();
     // Pass 2: t = scale · [f]₊ from scratch (no recomputation of f).
-    let scale = (z - tau) / (lambda_quad * z);
+    let slack = z - consts.tau;
+    let scale = slack * consts.inv_lq / z;
     let mut col_mass = 0.0;
     for k in 0..g {
         let t = scale * scratch[k];
         grad_alpha[start + k] += t;
         col_mass += t;
     }
-    let slack = z - tau;
-    (slack * slack / (2.0 * lambda_quad), col_mass)
+    (slack * slack * consts.half_inv_lq, col_mass)
 }
 
 /// `z_{l,j} = ‖[ (α + β_j 1 − c_j)_[l] ]₊‖₂` for one pair (used by
@@ -283,6 +338,10 @@ pub struct ColChunkScratch {
     pub(crate) grad_alpha: Vec<f64>,
     /// Per-column `Σ_i t_ij` for the chunk's columns (→ `∂/∂β_j`).
     pub(crate) col_mass: Vec<f64>,
+    /// Per-column `Σ_l ψ` staging: the panel walk visits a column once
+    /// per group, so ψ is staged per column and folded into `psi` in
+    /// ascending column order — the deterministic association.
+    pub(crate) psi_col: Vec<f64>,
     /// [`group_grad_contrib`] scratch (max group size).
     pub(crate) group: Vec<f64>,
     /// Partial `Σ ψ` over this chunk's (l, j) pairs.
@@ -298,6 +357,7 @@ impl ColChunkScratch {
         ColChunkScratch {
             grad_alpha: vec![0.0; m],
             col_mass: vec![0.0; max_cols],
+            psi_col: vec![0.0; max_cols],
             group: vec![0.0; max_group],
             psi: 0.0,
             grads: 0,
@@ -315,14 +375,20 @@ impl ColChunkScratch {
             .collect()
     }
 
-    /// Zero the accumulators (col_mass is fully overwritten per eval).
-    /// `grad_alpha` is only dirtied by [`group_grad_contrib`], which
-    /// writes iff it counts a gradient, so a chunk whose previous eval
-    /// computed nothing skips the O(m) re-zero — the screened sparse
-    /// regime keeps its cheap per-eval floor.
+    /// Zero the accumulators. `grad_alpha`, `col_mass` and `psi_col` are
+    /// only dirtied when a gradient was actually computed, so a chunk
+    /// whose previous eval computed nothing skips the O(m + cols)
+    /// re-zero — the screened sparse regime keeps its cheap per-eval
+    /// floor.
     pub(crate) fn reset(&mut self) {
         if self.grads > 0 {
             for v in self.grad_alpha.iter_mut() {
+                *v = 0.0;
+            }
+            for v in self.col_mass.iter_mut() {
+                *v = 0.0;
+            }
+            for v in self.psi_col.iter_mut() {
                 *v = 0.0;
             }
         }
@@ -332,17 +398,36 @@ impl ColChunkScratch {
         self.ub_checks = 0;
         self.ws_hits = 0;
     }
+
+    /// Fold the per-column ψ staging into `psi` in ascending column
+    /// order — called once per chunk after the panel walk. A quiet chunk
+    /// (no gradients) holds exact zeros and skips the fold.
+    pub(crate) fn fold_psi(&mut self, cols: usize) {
+        self.psi = 0.0;
+        if self.grads > 0 {
+            for &v in &self.psi_col[..cols] {
+                self.psi += v;
+            }
+        }
+    }
 }
 
-/// Dense per-column kernel over one fixed column chunk, accumulating
-/// into the chunk's scratch. The reference [`eval_dense`] and the
-/// threaded [`crate::ot::origin::OriginOracle`] both run this exact
-/// function over the exact same chunk boundaries, so serial and
-/// threaded evaluations agree bit-for-bit.
+/// Dense kernel over one fixed column chunk, accumulating into the
+/// chunk's scratch. The reference [`eval_dense`] and the threaded
+/// [`crate::ot::origin::OriginOracle`] both run this exact function
+/// over the exact same chunk boundaries, so serial and threaded
+/// evaluations agree bit-for-bit.
+///
+/// The walk is **cache-blocked**: panels of [`PANEL_COLS`] columns are
+/// processed group-by-group (`l` outer, `j` inner), so one group's
+/// slices of `alpha` and `grad_alpha` stay resident across the panel.
+/// Per-element accumulation order is unchanged (for a fixed α entry,
+/// contributions still arrive in ascending column order; for a fixed
+/// column, in ascending group order), and ψ is staged per column, so
+/// the reduction stays deterministic.
 pub(crate) fn dense_chunk(
     prob: &OtProblem,
-    tau: f64,
-    lq: f64,
+    consts: &KernelConsts,
     alpha: &[f64],
     beta: &[f64],
     range: Range<usize>,
@@ -350,27 +435,29 @@ pub(crate) fn dense_chunk(
 ) {
     slot.reset();
     let num_groups = prob.groups.num_groups();
-    for (k, j) in range.enumerate() {
-        let c_j = prob.cost_t.row(j);
-        let beta_j = beta[j];
-        let mut col_mass = 0.0;
+    let cols0 = range.start;
+    let cols = range.len();
+    for panel in panel_ranges(range) {
         for l in 0..num_groups {
-            let (psi, mass) = group_grad_contrib(
-                alpha,
-                beta_j,
-                c_j,
-                prob.groups.range(l),
-                tau,
-                lq,
-                &mut slot.grad_alpha,
-                &mut slot.group,
-            );
-            slot.psi += psi;
-            col_mass += mass;
-            slot.grads += 1;
+            let group_range = prob.groups.range(l);
+            for j in panel.clone() {
+                let (psi, mass) = group_grad_contrib(
+                    alpha,
+                    beta[j],
+                    prob.cost_t.row(j),
+                    group_range.clone(),
+                    consts,
+                    &mut slot.grad_alpha,
+                    &mut slot.group,
+                );
+                let col = j - cols0;
+                slot.psi_col[col] += psi;
+                slot.col_mass[col] += mass;
+                slot.grads += 1;
+            }
         }
-        slot.col_mass[k] = col_mass;
     }
+    slot.fold_psi(cols);
 }
 
 /// Combine per-chunk partials into the shared gradient **in ascending
@@ -412,35 +499,48 @@ pub(crate) fn reduce_chunks(
 /// zero-alloc entry used by [`crate::ot::origin::OriginOracle`].
 pub(crate) fn eval_dense_with(
     prob: &OtProblem,
-    params: &DualParams,
+    consts: &KernelConsts,
     x: &[f64],
     grad: &mut [f64],
-    ctx: ParallelCtx,
+    ctx: &ParallelCtx,
     ranges: &[Range<usize>],
     slots: &mut [ColChunkScratch],
 ) -> (f64, u64) {
+    let (alpha, beta) = dense_prolog(prob, x, grad);
+    let (grad_alpha, grad_beta) = grad.split_at_mut(prob.m());
+    ctx.map_chunks(ranges, slots, |_, range, slot| {
+        dense_chunk(prob, consts, alpha, beta, range, slot);
+    });
+    dense_epilog(prob, alpha, beta, ranges, slots, grad_alpha, grad_beta)
+}
+
+/// Shape checks + gradient initialization shared by the dense entries:
+/// ∇(−D) starts at (−a, −b); transport mass is added on top.
+fn dense_prolog<'x>(prob: &OtProblem, x: &'x [f64], grad: &mut [f64]) -> (&'x [f64], &'x [f64]) {
     let m = prob.m();
     let n = prob.n();
     assert_eq!(x.len(), m + n);
     assert_eq!(grad.len(), m + n);
-    let (alpha, beta) = x.split_at(m);
-    let tau = params.tau();
-    let lq = params.lambda_quad();
-
-    // ∇(−D) starts at (−a, −b); transport mass is added on top.
     for (gi, &ai) in grad[..m].iter_mut().zip(&prob.a) {
         *gi = -ai;
     }
     for (gj, &bj) in grad[m..].iter_mut().zip(&prob.b) {
         *gj = -bj;
     }
-    let (grad_alpha, grad_beta) = grad.split_at_mut(m);
+    x.split_at(m)
+}
 
-    ctx.map_chunks(ranges, slots, |_, range, slot| {
-        dense_chunk(prob, tau, lq, alpha, beta, range, slot);
-    });
+/// Ordered chunk reduction + dual assembly shared by the dense entries.
+fn dense_epilog(
+    prob: &OtProblem,
+    alpha: &[f64],
+    beta: &[f64],
+    ranges: &[Range<usize>],
+    slots: &[ColChunkScratch],
+    grad_alpha: &mut [f64],
+    grad_beta: &mut [f64],
+) -> (f64, u64) {
     let (psi_total, grads, ..) = reduce_chunks(ranges, slots, grad_alpha, grad_beta);
-
     let dual = linalg::dot(alpha, &prob.a) + linalg::dot(beta, &prob.b) - psi_total;
     (-dual, grads)
 }
@@ -464,6 +564,10 @@ pub fn eval_dense(
 
 /// [`eval_dense`] with `threads` oracle workers — bit-identical to the
 /// serial call for every thread count (deterministic ordered reduction).
+/// Creates a context (and, for `threads > 1`, its parked worker set)
+/// per call: repeated evaluations should hold a [`DenseEvalScratch`] +
+/// [`ParallelCtx`] and use [`eval_dense_reusing`], or an
+/// [`crate::ot::origin::OriginOracle`].
 pub fn eval_dense_threads(
     prob: &OtProblem,
     params: &DualParams,
@@ -471,9 +575,67 @@ pub fn eval_dense_threads(
     grad: &mut [f64],
     threads: usize,
 ) -> (f64, u64) {
-    let ranges = fixed_chunk_ranges(prob.n());
-    let mut slots = ColChunkScratch::slots_for(prob, &ranges);
-    eval_dense_with(prob, params, x, grad, ParallelCtx::new(threads), &ranges, &mut slots)
+    let mut scratch = DenseEvalScratch::new(prob);
+    eval_dense_reusing(prob, params, x, grad, &ParallelCtx::new(threads), &mut scratch)
+}
+
+/// Reusable chunk grid + per-chunk scratch for the standalone dense
+/// entries ([`eval_dense_reusing`] / [`eval_dense_forkjoin`]); the
+/// oracles embed the same state internally.
+pub struct DenseEvalScratch {
+    ranges: Vec<Range<usize>>,
+    slots: Vec<ColChunkScratch>,
+}
+
+impl DenseEvalScratch {
+    pub fn new(prob: &OtProblem) -> Self {
+        let ranges = fixed_chunk_ranges(prob.n());
+        let slots = ColChunkScratch::slots_for(prob, &ranges);
+        DenseEvalScratch { ranges, slots }
+    }
+}
+
+/// [`eval_dense`] over a caller-held context and scratch — the
+/// persistent-dispatch half of the `bench_parallel` comparison (and a
+/// zero-alloc repeated-eval entry in its own right).
+pub fn eval_dense_reusing(
+    prob: &OtProblem,
+    params: &DualParams,
+    x: &[f64],
+    grad: &mut [f64],
+    ctx: &ParallelCtx,
+    scratch: &mut DenseEvalScratch,
+) -> (f64, u64) {
+    let consts = KernelConsts::new(params);
+    eval_dense_with(prob, &consts, x, grad, ctx, &scratch.ranges, &mut scratch.slots)
+}
+
+/// [`eval_dense_reusing`] dispatched through the one-shot scoped
+/// fork-join ([`crate::pool::forkjoin_map_chunks`]) instead of the
+/// persistent parked pool — the PR-3 dispatch, kept ONLY for the
+/// `bench_parallel` / `hotpath_microbench` comparison; nothing on the
+/// solver hot path calls this. Byte-equal results to every other dense
+/// entry (same chunks, same kernel, same ordered reduction).
+pub fn eval_dense_forkjoin(
+    prob: &OtProblem,
+    params: &DualParams,
+    x: &[f64],
+    grad: &mut [f64],
+    threads: usize,
+    scratch: &mut DenseEvalScratch,
+) -> (f64, u64) {
+    let consts = KernelConsts::new(params);
+    let (alpha, beta) = dense_prolog(prob, x, grad);
+    let (grad_alpha, grad_beta) = grad.split_at_mut(prob.m());
+    crate::pool::forkjoin_map_chunks(
+        threads,
+        &scratch.ranges,
+        &mut scratch.slots,
+        |_, range, slot| {
+            dense_chunk(prob, &consts, alpha, beta, range, slot);
+        },
+    );
+    dense_epilog(prob, alpha, beta, &scratch.ranges, &scratch.slots, grad_alpha, grad_beta)
 }
 
 /// The (positive) dual objective at `x` (no gradient).
@@ -618,11 +780,62 @@ mod tests {
         let mut ga = [0.0, 0.0];
         let mut scratch = [0.0, 0.0];
         // z = sqrt(2)*0.1 ≈ 0.141 < tau=0.5 ⇒ zero contribution.
+        // (τ = γρ = 0.5, λ_quad = γ(1−ρ) = 0.5 at these params.)
+        let consts = KernelConsts::new(&DualParams::new(1.0, 0.5));
         let (psi, mass) =
-            group_grad_contrib(&alpha, 0.0, &c, 0..2, 0.5, 1.0, &mut ga, &mut scratch);
+            group_grad_contrib(&alpha, 0.0, &c, 0..2, &consts, &mut ga, &mut scratch);
         assert_eq!(psi, 0.0);
         assert_eq!(mass, 0.0);
         assert_eq!(ga, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn panel_ranges_cover_every_chunk_exactly() {
+        for (lo, hi) in [(0usize, 0usize), (3, 19), (16, 48), (5, 6), (0, 8), (7, 40)] {
+            let panels: Vec<_> = panel_ranges(lo..hi).collect();
+            let mut expect = lo;
+            for p in &panels {
+                assert_eq!(p.start, expect, "contiguous panels in {lo}..{hi}");
+                assert!(!p.is_empty() && p.len() <= PANEL_COLS);
+                expect = p.end;
+            }
+            assert_eq!(expect, hi.max(lo), "panels cover {lo}..{hi}");
+            assert_eq!(panels.len(), panel_count(hi - lo));
+        }
+    }
+
+    #[test]
+    fn kernel_consts_match_params() {
+        let p = DualParams::new(2.0, 0.25);
+        let c = KernelConsts::new(&p);
+        assert_eq!(c.tau, p.tau());
+        assert_eq!(c.tau_sq, p.tau() * p.tau());
+        assert_eq!(c.inv_lq, 1.0 / p.lambda_quad());
+        assert_eq!(c.half_inv_lq, 0.5 / p.lambda_quad());
+    }
+
+    #[test]
+    fn reusing_and_forkjoin_entries_match_reference() {
+        let p = toy_problem();
+        let params = DualParams::new(0.7, 0.3);
+        let mut rng = Pcg64::new(8);
+        let x: Vec<f64> = (0..p.dim()).map(|_| rng.uniform(-0.5, 0.8)).collect();
+        let mut g_ref = vec![0.0; p.dim()];
+        let (f_ref, n_ref) = eval_dense(&p, &params, &x, &mut g_ref);
+        let ctx = ParallelCtx::new(2);
+        let mut scratch = DenseEvalScratch::new(&p);
+        for _ in 0..3 {
+            let mut g = vec![0.0; p.dim()];
+            let (f, n) = eval_dense_reusing(&p, &params, &x, &mut g, &ctx, &mut scratch);
+            assert_eq!(f, f_ref);
+            assert_eq!(g, g_ref);
+            assert_eq!(n, n_ref);
+            let mut g = vec![0.0; p.dim()];
+            let (f, n) = eval_dense_forkjoin(&p, &params, &x, &mut g, 2, &mut scratch);
+            assert_eq!(f, f_ref);
+            assert_eq!(g, g_ref);
+            assert_eq!(n, n_ref);
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use super::dual::{DualOracle, DualParams, OracleStats, OtProblem};
 use super::screening::ScreeningOracle;
+use crate::pool::ParallelCtx;
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
 use crate::solvers::{StepStatus, StopReason};
 use std::time::Instant;
@@ -27,7 +28,12 @@ pub struct FastOtConfig {
     /// Intra-solve oracle workers for the column-parallel hot loops
     /// (eval, snapshot refresh, working-set rebuild). Deterministic:
     /// results are bit-identical for every value, including the
-    /// paper-faithful single-core default of 1.
+    /// paper-faithful single-core default of 1. Workers are spawned
+    /// once per solve (persistent parked set inside the oracle's
+    /// [`crate::pool::ParallelCtx`]); callers that solve repeatedly
+    /// should pass a long-lived ctx via [`solve_fast_ot_ctx`] /
+    /// [`crate::ot::origin::solve_origin_ctx`] instead, which this
+    /// field then defers to.
     pub threads: usize,
     /// Inner solver options.
     pub lbfgs: LbfgsOptions,
@@ -146,8 +152,23 @@ pub fn solve_fast_ot(prob: &OtProblem, cfg: &FastOtConfig) -> FastOtResult {
 
 /// Solve with the paper's method from a warm-start iterate `x0`.
 pub fn solve_fast_ot_from(prob: &OtProblem, cfg: &FastOtConfig, x0: Vec<f64>) -> FastOtResult {
+    solve_fast_ot_ctx(prob, cfg, x0, &ParallelCtx::new(cfg.threads))
+}
+
+/// [`solve_fast_ot_from`] over a caller-provided long-lived parallel
+/// context (`cfg.threads` is ignored in favor of `ctx.threads()`): the
+/// oracle's column-parallel hot loops run on the ctx's persistent
+/// parked workers, so a serving worker's consecutive solves — warm
+/// restarts included — never respawn threads. Determinism is untouched
+/// (same fixed chunk grid, same ordered reduction).
+pub fn solve_fast_ot_ctx(
+    prob: &OtProblem,
+    cfg: &FastOtConfig,
+    x0: Vec<f64>,
+    ctx: &ParallelCtx,
+) -> FastOtResult {
     let mut oracle =
-        ScreeningOracle::with_threads(prob, cfg.params(), cfg.use_working_set, cfg.threads);
+        ScreeningOracle::with_ctx(prob, cfg.params(), cfg.use_working_set, ctx.clone());
     let label = if cfg.use_working_set { "fast" } else { "fast-nows" };
     drive_from(prob, cfg, &mut oracle, label, x0)
 }

@@ -3,20 +3,22 @@
 //! `O(|L|·n·g)` per call.
 
 use super::dual::{
-    eval_dense_with, ColChunkScratch, DualOracle, DualParams, OracleStats, OtProblem,
+    eval_dense_with, ColChunkScratch, DualOracle, DualParams, KernelConsts, OracleStats,
+    OtProblem,
 };
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
 use std::ops::Range;
 
 /// Dense (non-screened) negated-dual oracle. Column chunks evaluate in
-/// parallel on `threads` workers with a deterministic ordered reduction,
-/// so results are bit-identical for every thread count (see
-/// [`crate::pool::ParallelCtx`]); scratch is per-chunk and persistent,
-/// keeping the steady state allocation-free.
+/// parallel on the context's persistent parked workers with a
+/// deterministic ordered reduction, so results are bit-identical for
+/// every thread count (see [`crate::pool::ParallelCtx`]); scratch is
+/// per-chunk and persistent, keeping the steady state allocation-free.
 pub struct OriginOracle<'a> {
     prob: &'a OtProblem,
     params: DualParams,
+    consts: KernelConsts,
     stats: OracleStats,
     ctx: ParallelCtx,
     ranges: Vec<Range<usize>>,
@@ -28,16 +30,25 @@ impl<'a> OriginOracle<'a> {
         Self::with_threads(prob, params, 1)
     }
 
-    /// Create with `threads` intra-evaluation workers (1 = serial).
+    /// Create with `threads` intra-evaluation workers (1 = serial) on a
+    /// fresh [`ParallelCtx`] owned by this oracle.
     pub fn with_threads(prob: &'a OtProblem, params: DualParams, threads: usize) -> Self {
+        Self::with_ctx(prob, params, ParallelCtx::new(threads))
+    }
+
+    /// Create over a caller-provided parallel context (the serving
+    /// engine's per-worker long-lived ctx; clones share its parked
+    /// worker set).
+    pub fn with_ctx(prob: &'a OtProblem, params: DualParams, ctx: ParallelCtx) -> Self {
         params.validate();
         let ranges = fixed_chunk_ranges(prob.n());
         let slots = ColChunkScratch::slots_for(prob, &ranges);
         OriginOracle {
             prob,
+            consts: KernelConsts::new(&params),
             params,
             stats: OracleStats::default(),
-            ctx: ParallelCtx::new(threads),
+            ctx,
             ranges,
             slots,
         }
@@ -56,10 +67,10 @@ impl DualOracle for OriginOracle<'_> {
     fn eval(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
         let (f, grads) = eval_dense_with(
             self.prob,
-            &self.params,
+            &self.consts,
             x,
             grad,
-            self.ctx,
+            &self.ctx,
             &self.ranges,
             &mut self.slots,
         );
@@ -91,8 +102,19 @@ pub fn solve_origin_from(
     cfg: &crate::ot::fastot::FastOtConfig,
     x0: Vec<f64>,
 ) -> crate::ot::fastot::FastOtResult {
+    solve_origin_ctx(prob, cfg, x0, &ParallelCtx::new(cfg.threads))
+}
+
+/// [`solve_origin_from`] over a caller-provided long-lived parallel
+/// context (`cfg.threads` is ignored in favor of `ctx.threads()`).
+pub fn solve_origin_ctx(
+    prob: &OtProblem,
+    cfg: &crate::ot::fastot::FastOtConfig,
+    x0: Vec<f64>,
+    ctx: &ParallelCtx,
+) -> crate::ot::fastot::FastOtResult {
     let mut oracle =
-        OriginOracle::with_threads(prob, DualParams::new(cfg.gamma, cfg.rho), cfg.threads);
+        OriginOracle::with_ctx(prob, DualParams::new(cfg.gamma, cfg.rho), ctx.clone());
     crate::ot::fastot::drive_from(prob, cfg, &mut oracle, "origin", x0)
 }
 

@@ -20,8 +20,8 @@
 //! trajectory is identical (Theorem 2).
 
 use super::dual::{
-    exact_z, group_grad_contrib, reduce_chunks, ColChunkScratch, DualOracle, DualParams,
-    OracleStats, OtProblem,
+    exact_z, group_grad_contrib, panel_count, panel_ranges, reduce_chunks, ColChunkScratch,
+    DualOracle, DualParams, KernelConsts, OracleStats, OtProblem, PANEL_COLS,
 };
 use crate::linalg;
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
@@ -31,10 +31,16 @@ use std::ops::Range;
 /// mutable slice per column chunk — the disjoint views the parallel
 /// snapshot/working-set passes write through.
 fn split_cols<'s, T>(buf: &'s mut [T], ranges: &[Range<usize>], width: usize) -> Vec<&'s mut [T]> {
-    let mut parts = Vec::with_capacity(ranges.len());
+    split_lens(buf, ranges.iter().map(|r| r.len() * width))
+}
+
+/// Split a buffer into consecutive mutable slices of the given lengths
+/// (the per-chunk panel-max views have chunk-dependent lengths).
+fn split_lens<T>(buf: &mut [T], lens: impl IntoIterator<Item = usize>) -> Vec<&mut [T]> {
+    let mut parts = Vec::new();
     let mut rest = buf;
-    for r in ranges {
-        let (head, tail) = rest.split_at_mut(r.len() * width);
+    for len in lens {
+        let (head, tail) = rest.split_at_mut(len);
         parts.push(head);
         rest = tail;
     }
@@ -59,14 +65,22 @@ pub struct BoundErrors {
 pub struct ScreeningOracle<'a> {
     prob: &'a OtProblem,
     params: DualParams,
-    tau: f64,
-    lq: f64,
+    /// Precomputed (γ, ρ)-derived kernel constants (τ, τ², 1/λ, …).
+    consts: KernelConsts,
     use_ws: bool,
     // Snapshot state (Definitions 1–2), refreshed by `refresh`.
     snap_alpha: Vec<f64>,
     snap_beta: Vec<f64>,
     /// `z̃_{l,j}` at index `j·|L| + l` (column-major in l for per-column walks).
     snap_z: Vec<f64>,
+    /// Per-(panel, group) maxima of `snap_z`: index
+    /// `(panel_off[chunk] + p)·|L| + l` for panel `p` of a chunk. Lets
+    /// the eval declare a whole quiet panel skipped with **one** O(1)
+    /// comparison per (panel, group) instead of `PANEL_COLS` bound
+    /// checks. Rebuilt alongside `snap_z`.
+    snap_z_pmax: Vec<f64>,
+    /// Panel-index offset of each chunk into `snap_z_pmax` (in panels).
+    panel_off: Vec<usize>,
     /// `k̃_{l,j} = ‖f̃_[l]‖₂` (only when the working set is enabled).
     snap_k: Vec<f64>,
     /// `õ_{l,j} = ‖[f̃_[l]]₋‖₂` (only when the working set is enabled).
@@ -78,7 +92,8 @@ pub struct ScreeningOracle<'a> {
     ws_count: usize,
     // Per-eval scratch (allocated once).
     da_pos: Vec<f64>,
-    // Intra-eval parallelism: fixed column chunks + per-chunk scratch.
+    // Intra-eval parallelism: a persistent parallel context (parked
+    // workers, spawned once) + fixed column chunks + per-chunk scratch.
     ctx: ParallelCtx,
     ranges: Vec<Range<usize>>,
     slots: Vec<ColChunkScratch>,
@@ -92,16 +107,32 @@ impl<'a> ScreeningOracle<'a> {
         Self::with_threads(prob, params, use_working_set, 1)
     }
 
-    /// [`ScreeningOracle::new`] with `threads` intra-evaluation workers.
-    /// Evaluations, snapshot refreshes and working-set rebuilds shard
-    /// over fixed column chunks with a deterministic ordered reduction,
-    /// so every thread count (including 1) produces bit-identical
-    /// gradients, objectives and screening decisions.
+    /// [`ScreeningOracle::new`] with `threads` intra-evaluation workers
+    /// on a fresh [`ParallelCtx`] owned by this oracle (its parked
+    /// worker set spawns on the first parallel call and is joined when
+    /// the oracle drops).
     pub fn with_threads(
         prob: &'a OtProblem,
         params: DualParams,
         use_working_set: bool,
         threads: usize,
+    ) -> Self {
+        Self::with_ctx(prob, params, use_working_set, ParallelCtx::new(threads))
+    }
+
+    /// [`ScreeningOracle::new`] over a caller-provided parallel context
+    /// — the serving engine threads one long-lived ctx per engine
+    /// worker through every solve, so oracle workers are spawned once
+    /// per engine worker, not once per solve (let alone per eval).
+    /// Evaluations, snapshot refreshes and working-set rebuilds shard
+    /// over fixed column chunks with a deterministic ordered reduction,
+    /// so every thread count (including 1) produces bit-identical
+    /// gradients, objectives and screening decisions.
+    pub fn with_ctx(
+        prob: &'a OtProblem,
+        params: DualParams,
+        use_working_set: bool,
+        ctx: ParallelCtx,
     ) -> Self {
         params.validate();
         let m = prob.m();
@@ -109,21 +140,30 @@ impl<'a> ScreeningOracle<'a> {
         let num_groups = prob.groups.num_groups();
         let ranges = fixed_chunk_ranges(n);
         let slots = ColChunkScratch::slots_for(prob, &ranges);
+        // Fixed panel layout: panel_off[c] is chunk c's first global
+        // panel index; a function of the chunk grid (hence of n) alone.
+        let mut panel_off = Vec::with_capacity(ranges.len());
+        let mut total_panels = 0usize;
+        for r in &ranges {
+            panel_off.push(total_panels);
+            total_panels += panel_count(r.len());
+        }
         let mut o = ScreeningOracle {
             prob,
-            tau: params.tau(),
-            lq: params.lambda_quad(),
+            consts: KernelConsts::new(&params),
             params,
             use_ws: use_working_set,
             snap_alpha: vec![0.0; m],
             snap_beta: vec![0.0; n],
             snap_z: vec![0.0; n * num_groups],
+            snap_z_pmax: vec![0.0; total_panels * num_groups],
+            panel_off,
             snap_k: if use_working_set { vec![0.0; n * num_groups] } else { vec![] },
             snap_o: if use_working_set { vec![0.0; n * num_groups] } else { vec![] },
             ws: vec![false; n * num_groups],
             ws_count: 0,
             da_pos: vec![0.0; num_groups],
-            ctx: ParallelCtx::new(threads),
+            ctx,
             ranges,
             slots,
             stats: OracleStats::default(),
@@ -146,9 +186,10 @@ impl<'a> ScreeningOracle<'a> {
     }
 
     /// Dense snapshot recomputation: one `O(mn)` pass filling z̃ (and
-    /// k̃/õ when the working set is on) at the *current snapshot point*.
-    /// Column chunks run in parallel; every write is to a per-chunk
-    /// disjoint slice, so the pass is trivially deterministic.
+    /// k̃/õ when the working set is on) plus the per-(panel, group)
+    /// maxima of z̃ at the *current snapshot point*. Column chunks run
+    /// in parallel; every write is to a per-chunk disjoint slice, so
+    /// the pass is trivially deterministic.
     fn recompute_snapshots(&mut self) {
         let num_groups = self.prob.groups.num_groups();
         let prob = self.prob;
@@ -159,10 +200,15 @@ impl<'a> ScreeningOracle<'a> {
 
         struct SnapPart<'s> {
             z: &'s mut [f64],
+            pmax: &'s mut [f64],
             k: &'s mut [f64],
             o: &'s mut [f64],
         }
         let z_parts = split_cols(&mut self.snap_z, ranges, num_groups);
+        let pmax_parts = split_lens(
+            &mut self.snap_z_pmax,
+            ranges.iter().map(|r| panel_count(r.len()) * num_groups),
+        );
         let (k_parts, o_parts) = if use_ws {
             (
                 split_cols(&mut self.snap_k, ranges, num_groups),
@@ -175,13 +221,15 @@ impl<'a> ScreeningOracle<'a> {
         };
         let mut parts: Vec<SnapPart> = z_parts
             .into_iter()
+            .zip(pmax_parts)
             .zip(k_parts)
             .zip(o_parts)
-            .map(|((z, k), o)| SnapPart { z, k, o })
+            .map(|(((z, pmax), k), o)| SnapPart { z, pmax, k, o })
             .collect();
 
         self.ctx.map_chunks(ranges, &mut parts, |_, range, part| {
-            for (col, j) in range.enumerate() {
+            let start = range.start;
+            for (col, j) in range.clone().enumerate() {
                 let c_j = prob.cost_t.row(j);
                 let beta_j = snap_beta[j];
                 let base = col * num_groups;
@@ -203,6 +251,18 @@ impl<'a> ScreeningOracle<'a> {
                         part.k[base + l] = ksq.sqrt();
                         part.o[base + l] = osq.sqrt();
                     }
+                }
+            }
+            // Per-(panel, group) maxima over the freshly written z̃ —
+            // the O(1)-per-panel screen the eval loop reads.
+            for (p, panel) in panel_ranges(range).enumerate() {
+                let pbase = p * num_groups;
+                for l in 0..num_groups {
+                    let mut mx = 0.0f64;
+                    for j in panel.clone() {
+                        mx = mx.max(part.z[(j - start) * num_groups + l]);
+                    }
+                    part.pmax[pbase + l] = mx;
                 }
             }
         });
@@ -237,7 +297,7 @@ impl<'a> ScreeningOracle<'a> {
         let snap_k = &self.snap_k;
         let snap_o = &self.snap_o;
         let (da_nrm, da_neg) = (&da_nrm, &da_neg);
-        let tau = self.tau;
+        let tau = self.consts.tau;
         let ranges = &self.ranges;
 
         struct WsPart<'s> {
@@ -365,11 +425,13 @@ impl DualOracle for ScreeningOracle<'_> {
         }
         let (grad_alpha, grad_beta) = grad.split_at_mut(m);
 
-        let tau = self.tau;
-        let lq = self.lq;
+        let consts = &self.consts;
+        let tau = consts.tau;
         let prob = self.prob;
         let sqrt_g = &prob.groups.sqrt_sizes;
         let snap_z = &self.snap_z;
+        let snap_z_pmax = &self.snap_z_pmax;
+        let panel_off = &self.panel_off;
         let snap_beta = &self.snap_beta;
         let da_pos = &self.da_pos;
         let ws = &self.ws;
@@ -381,48 +443,83 @@ impl DualOracle for ScreeningOracle<'_> {
         // bit-identical for every thread count — and, because every
         // non-skipped pair runs the same kernel over the same chunking,
         // bit-identical to the dense baseline (Theorem 2).
-        self.ctx.map_chunks(ranges, &mut self.slots, |_, range, slot| {
+        //
+        // The walk is cache-blocked like the dense kernel: panels of
+        // PANEL_COLS columns run group-by-group, so a group's snap_z
+        // row segment, da_pos entry and grad_alpha slice stay hot
+        // across the panel. Before touching a panel's pairs, one O(1)
+        // comparison against the snapshotted per-(panel, group) max
+        //   max_j z̃ + ‖[Δα]₊‖ + √g·max_j [Δβ_j]₊  ≤  τ
+        // proves every pair's upper bound z̄ — and hence every z — is
+        // at most τ, so the whole panel contributes nothing and is
+        // skipped in bulk. Counters stay *exactly* per-pair identical:
+        // a bulk-skipped pair would also have been ub-checked-and-
+        // skipped individually (its ub is below the panel bound), and
+        // no ℕ member can sit in a bulk-skipped panel — `refresh`
+        // rebuilds ℕ at the same iterate the snapshots then move to,
+        // and the membership test is a lower bound on z there (Lemma
+        // 4–6), so every member has z̃ > τ and forces its panel max
+        // above τ until the next rebuild replaces both together.
+        self.ctx.map_chunks(ranges, &mut self.slots, |c, range, slot| {
             slot.reset();
-            for (col, j) in range.enumerate() {
-                let c_j = prob.cost_t.row(j);
-                let beta_j = beta[j];
-                let db_pos = (beta_j - snap_beta[j]).max(0.0);
-                let base = j * num_groups;
-                let mut col_mass = 0.0;
+            let cols0 = range.start;
+            let cols = range.len();
+            let mut db_pos = [0.0f64; PANEL_COLS];
+            for (p, panel) in panel_ranges(range).enumerate() {
+                let plen = panel.len();
+                let mut db_max = 0.0f64;
+                for (t, j) in panel.clone().enumerate() {
+                    let v = (beta[j] - snap_beta[j]).max(0.0);
+                    db_pos[t] = v;
+                    db_max = db_max.max(v);
+                }
+                let pmax_base = (panel_off[c] + p) * num_groups;
                 for l in 0..num_groups {
-                    let compute = if use_ws && ws[base + l] {
-                        // ℕ member: provably nonzero, no check (Alg. 2 lines 2–4).
-                        slot.ws_hits += 1;
-                        true
-                    } else {
-                        // Upper bound check (Alg. 2 lines 6–13).
-                        slot.ub_checks += 1;
-                        let ub = snap_z[base + l] + da_pos[l] + sqrt_g[l] * db_pos;
-                        if ub <= tau {
-                            slot.skipped += 1;
-                            false
-                        } else {
+                    // O(1) quiet-panel screen (valid upper bound on
+                    // every pair's z̄ in the panel).
+                    if snap_z_pmax[pmax_base + l] + da_pos[l] + sqrt_g[l] * db_max <= tau {
+                        slot.ub_checks += plen as u64;
+                        slot.skipped += plen as u64;
+                        continue;
+                    }
+                    let group_range = prob.groups.range(l);
+                    for (t, j) in panel.clone().enumerate() {
+                        let base = j * num_groups;
+                        let compute = if use_ws && ws[base + l] {
+                            // ℕ member: provably nonzero, no check
+                            // (Alg. 2 lines 2–4).
+                            slot.ws_hits += 1;
                             true
+                        } else {
+                            // Upper bound check (Alg. 2 lines 6–13).
+                            slot.ub_checks += 1;
+                            let ub = snap_z[base + l] + da_pos[l] + sqrt_g[l] * db_pos[t];
+                            if ub <= tau {
+                                slot.skipped += 1;
+                                false
+                            } else {
+                                true
+                            }
+                        };
+                        if compute {
+                            let (psi, mass) = group_grad_contrib(
+                                alpha,
+                                beta[j],
+                                prob.cost_t.row(j),
+                                group_range.clone(),
+                                consts,
+                                &mut slot.grad_alpha,
+                                &mut slot.group,
+                            );
+                            let col = j - cols0;
+                            slot.psi_col[col] += psi;
+                            slot.col_mass[col] += mass;
+                            slot.grads += 1;
                         }
-                    };
-                    if compute {
-                        let (psi, mass) = group_grad_contrib(
-                            alpha,
-                            beta_j,
-                            c_j,
-                            prob.groups.range(l),
-                            tau,
-                            lq,
-                            &mut slot.grad_alpha,
-                            &mut slot.group,
-                        );
-                        slot.psi += psi;
-                        col_mass += mass;
-                        slot.grads += 1;
                     }
                 }
-                slot.col_mass[col] = col_mass;
             }
+            slot.fold_psi(cols);
         });
         let (psi_total, grads_this_eval, skipped, ub_checks, ws_hits) =
             reduce_chunks(&self.ranges, &self.slots, grad_alpha, grad_beta);

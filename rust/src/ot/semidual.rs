@@ -92,22 +92,24 @@ impl<'a> SemiDualOracle<'a> {
         Self::with_threads(prob, gamma, 1)
     }
 
-    /// Create with `threads` intra-evaluation workers (1 = serial).
+    /// Create with `threads` intra-evaluation workers (1 = serial) on a
+    /// fresh [`ParallelCtx`] owned by this oracle.
     pub fn with_threads(prob: &'a OtProblem, gamma: f64, threads: usize) -> Self {
+        Self::with_ctx(prob, gamma, ParallelCtx::new(threads))
+    }
+
+    /// Create over a caller-provided long-lived parallel context: the
+    /// inner column problems run on its persistent parked workers, so
+    /// repeated solves reuse one worker set instead of forking per
+    /// evaluation.
+    pub fn with_ctx(prob: &'a OtProblem, gamma: f64, ctx: ParallelCtx) -> Self {
         assert!(gamma > 0.0);
         let m = prob.m();
         let ranges = fixed_chunk_ranges(prob.n());
         let slots = (0..ranges.len())
             .map(|_| SemiChunk { grad: vec![0.0; m], fcol: vec![0.0; m], semid: 0.0 })
             .collect();
-        SemiDualOracle {
-            prob,
-            gamma,
-            ctx: ParallelCtx::new(threads),
-            ranges,
-            slots,
-            stats: OracleStats::default(),
-        }
+        SemiDualOracle { prob, gamma, ctx, ranges, slots, stats: OracleStats::default() }
     }
 }
 
@@ -187,9 +189,20 @@ pub fn solve_semidual_threads(
     opts: &LbfgsOptions,
     threads: usize,
 ) -> SemiDualResult {
+    solve_semidual_ctx(prob, gamma, opts, &ParallelCtx::new(threads))
+}
+
+/// [`solve_semidual`] over a caller-provided long-lived parallel
+/// context — one parked worker set across warm/repeat solves.
+pub fn solve_semidual_ctx(
+    prob: &OtProblem,
+    gamma: f64,
+    opts: &LbfgsOptions,
+    ctx: &ParallelCtx,
+) -> SemiDualResult {
     let m = prob.m();
     let n = prob.n();
-    let mut oracle = SemiDualOracle::with_threads(prob, gamma, threads);
+    let mut oracle = SemiDualOracle::with_ctx(prob, gamma, ctx.clone());
     let mut solver = Lbfgs::new(vec![0.0; m], opts.clone(), &mut oracle);
     solver.run(&mut oracle);
     let iterations = solver.iterations();

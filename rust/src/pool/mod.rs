@@ -14,18 +14,31 @@
 //!   (dataset generation, evaluation) where thread-count-dependent
 //!   chunking is acceptable.
 //! * [`ParallelCtx`] / [`parallel_map_reduce`] — the solver hot path's
-//!   *deterministic* fork-join facility: work is sharded over **fixed**
-//!   chunks whose boundaries depend only on the problem size (never on
-//!   the worker count), each chunk writes into its own slot, and partial
-//!   results are combined in ascending chunk order on the calling thread
-//!   — no atomics, no reduction races — so floating-point outputs are
-//!   bit-identical for every thread count, including 1.
+//!   *deterministic* data-parallel facility: work is sharded over
+//!   **fixed** chunks whose boundaries depend only on the problem size
+//!   (never on the worker count), each chunk writes into its own slot,
+//!   and partial results are combined in ascending chunk order on the
+//!   calling thread — no atomics, no reduction races — so floating-point
+//!   outputs are bit-identical for every thread count, including 1.
+//!
+//!   Since PR 4 a `ParallelCtx` owns a **persistent parked worker set**:
+//!   `threads − 1` workers are spawned once (lazily, on the first
+//!   parallel call), park on a condvar between calls, and are woken with
+//!   a (generation, job) handoff — the per-evaluation `thread::scope`
+//!   fork-join (tens of µs per oracle eval, thousands of evals per
+//!   solve) is gone from the hot path. The chunk→slot assignment is the
+//!   same block math as the fork-join version, and *which* thread runs a
+//!   chunk can never influence the result, so bit-exactness across
+//!   thread counts is untouched. [`forkjoin_map_chunks`] keeps the
+//!   one-shot scoped dispatch for off-hot-path use and as the baseline
+//!   of the `bench_parallel` dispatch comparison.
 
 use std::collections::VecDeque;
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -231,12 +244,29 @@ impl<T> BoundedQueue<T> {
     /// Remove up to `max` items satisfying `pred`, preserving FIFO order
     /// among both the taken and the remaining items. Non-blocking; used
     /// by the micro-batcher to coalesce same-dataset requests.
+    ///
+    /// The common polling cases — empty queue, no matching item — return
+    /// early without allocating or rebuilding the queue; `pred` is still
+    /// called at most once per item.
     pub fn drain_matching(&self, max: usize, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
         let mut st = self.state.lock().unwrap();
+        if max == 0 || st.items.is_empty() {
+            return Vec::new();
+        }
+        // Probe for the first match before touching the queue: a miss
+        // costs one scan and zero allocations.
+        let Some(first) = st.items.iter().position(&mut pred) else {
+            return Vec::new();
+        };
+        let items = std::mem::take(&mut st.items);
         let mut taken = Vec::new();
-        let mut rest = VecDeque::with_capacity(st.items.len());
-        while let Some(item) = st.items.pop_front() {
-            if taken.len() < max && pred(&item) {
+        let mut rest = VecDeque::with_capacity(items.len());
+        for (idx, item) in items.into_iter().enumerate() {
+            if idx < first {
+                rest.push_back(item);
+            } else if idx == first || (taken.len() < max && pred(&item)) {
+                // `first` already matched during the probe; don't call
+                // `pred` on it a second time.
                 taken.push(item);
             } else {
                 rest.push_back(item);
@@ -331,14 +361,239 @@ pub fn fixed_chunk_ranges(n: usize) -> Vec<Range<usize>> {
     chunk_ranges(n, fixed_chunk_len(n))
 }
 
+/// A type-erased block job handed from the dispatching thread to the
+/// parked workers. `run(env, b)` executes block `b` of the current
+/// call's chunk grid against the caller's stack-held environment; the
+/// raw pointer stays valid because the dispatcher never returns (or
+/// unwinds) before every participating worker has reported done.
+#[derive(Clone, Copy)]
+struct JobMsg {
+    run: unsafe fn(*const (), usize),
+    env: *const (),
+    /// Parked workers with a block this generation (caller runs block 0,
+    /// parked worker `w` runs block `w + 1` for `w < participants`).
+    participants: usize,
+}
+
+// SAFETY: `env` points at a `BlockJob` whose slot pointer and map
+// closure are constrained to `S: Send` / `F: Sync` by `map_chunks`; the
+// dispatcher keeps the pointee alive until all participants finish.
+unsafe impl Send for JobMsg {}
+
+struct PoolState {
+    /// Bumped once per dispatched job; workers compare against the last
+    /// generation they served so stale wakeups fall back to sleep.
+    generation: u64,
+    job: Option<JobMsg>,
+    /// Participants that have finished the current generation.
+    finished: usize,
+    /// First panic payload caught in a worker this generation.
+    panic: Option<Box<dyn std::any::Any + Send + 'static>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The dispatcher parks here until `finished == participants`.
+    done: Condvar,
+}
+
+/// The spawned half of a [`ParallelCtx`]: `threads − 1` parked worker
+/// threads plus the shared handoff state. Dropping it wakes every
+/// worker with the shutdown flag and joins them all.
+struct WorkerSet {
+    shared: Arc<PoolShared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    /// Serializes dispatches from clones of the same ctx used on
+    /// different threads (the engine gives each worker its own ctx, so
+    /// this lock is uncontended on the hot path).
+    dispatch: Mutex<()>,
+    live: Arc<AtomicUsize>,
+}
+
+impl WorkerSet {
+    fn spawn(workers: usize, live: Arc<AtomicUsize>) -> WorkerSet {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                generation: 0,
+                job: None,
+                finished: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                live.fetch_add(1, Ordering::SeqCst);
+                thread::Builder::new()
+                    .name(format!("grpot-oracle-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn parked oracle worker")
+            })
+            .collect();
+        WorkerSet { shared, handles, dispatch: Mutex::new(()), live }
+    }
+
+    /// Hand `blocks` blocks of the erased job to the pool: the caller
+    /// runs block 0 inline, parked workers run blocks `1..blocks`, and
+    /// this call returns only after every block has finished. Worker
+    /// panics (and the caller's own) propagate after the join point, so
+    /// `env` never dangles and the pool stays reusable afterwards.
+    fn dispatch(&self, blocks: usize, run: unsafe fn(*const (), usize), env: *const ()) {
+        // Poison-tolerant: a previous dispatch that propagated a panic
+        // must not turn every later dispatch into a PoisonError panic —
+        // the reusable-after-panic guarantee depends on it.
+        let serialize = self
+            .dispatch
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let participants = blocks - 1;
+        debug_assert!(participants <= self.handles.len(), "more blocks than workers");
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "dispatch while a job is in flight");
+            st.generation += 1;
+            st.finished = 0;
+            st.job = Some(JobMsg { run, env, participants });
+            self.shared.work.notify_all();
+        }
+        // The caller is worker 0: it contributes a block instead of
+        // sleeping through the job.
+        let own = catch_unwind(AssertUnwindSafe(|| unsafe { (run)(env, 0) }));
+        let worker_panic = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.finished < participants {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panic.take()
+        };
+        // Release the dispatch lock *before* re-raising so the unwind
+        // cannot poison it (belt to the braces above).
+        drop(serialize);
+        if let Err(p) = own {
+            resume_unwind(p);
+        }
+        if let Some(p) = worker_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerSet {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+            self.live.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, w: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation > seen {
+                    if let Some(job) = st.job {
+                        seen = st.generation;
+                        break job;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        if w >= job.participants {
+            // No block for this worker this generation; back to sleep.
+            continue;
+        }
+        let out = catch_unwind(AssertUnwindSafe(|| unsafe { (job.run)(job.env, w + 1) }));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(p) = out {
+            // Keep the first payload; the job still counts as finished
+            // so the dispatcher's join point is reached either way.
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.finished += 1;
+        if st.finished == job.participants {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// Lazily-spawned pool backing a [`ParallelCtx`]: nothing is spawned
+/// until the first genuinely parallel `map_chunks` call, so serial
+/// contexts (the default everywhere) never cost a thread.
+struct LazyPool {
+    /// Parked workers to spawn (`threads − 1`).
+    workers: usize,
+    set: OnceLock<WorkerSet>,
+    /// Live parked-worker count for this pool: incremented per spawn,
+    /// decremented after each join in `WorkerSet::drop`. Shared out via
+    /// [`ParallelCtx::live_worker_counter`] so tests can assert the
+    /// drop-joins-everything invariant without a global registry.
+    live: Arc<AtomicUsize>,
+}
+
+/// The environment of one `map_chunks` call, shared by address with the
+/// parked workers for the duration of the dispatch.
+struct BlockJob<'a, S, F> {
+    ranges: &'a [Range<usize>],
+    slots: *mut S,
+    k: usize,
+    per: usize,
+    map: &'a F,
+}
+
+/// Run block `b`: chunks `[b·per, (b+1)·per) ∩ [0, k)`, each against its
+/// own slot. SAFETY: blocks are disjoint, so every `slots.add(c)` is an
+/// exclusive reference for the duration of the call; `env` outlives the
+/// dispatch by construction.
+unsafe fn run_block<S, F>(env: *const (), b: usize)
+where
+    F: Fn(usize, Range<usize>, &mut S) + Sync,
+{
+    let job = &*(env as *const BlockJob<'_, S, F>);
+    let lo = b * job.per;
+    let hi = ((b + 1) * job.per).min(job.k);
+    for c in lo..hi {
+        let slot = &mut *job.slots.add(c);
+        (job.map)(c, job.ranges[c].clone(), slot);
+    }
+}
+
 /// Intra-solve parallelism context: how many worker threads a solver's
-/// oracle may fork per evaluation. `threads = 1` (the default
+/// oracle may use per evaluation. `threads = 1` (the default
 /// everywhere) runs the identical chunked code path serially, so the
 /// paper-faithful single-core configuration and the multicore one
 /// produce byte-equal iterates.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// A ctx owns a persistent parked worker set (spawned lazily on the
+/// first parallel call, parked on a condvar between calls, joined when
+/// the last clone drops), so per-evaluation dispatch is a mutex +
+/// condvar handoff instead of `threads` OS thread spawns. Clones share
+/// the pool — the serving engine keeps one long-lived ctx per engine
+/// worker and threads it through every solve.
+#[derive(Clone)]
 pub struct ParallelCtx {
     threads: usize,
+    pool: Arc<LazyPool>,
 }
 
 impl Default for ParallelCtx {
@@ -347,10 +602,39 @@ impl Default for ParallelCtx {
     }
 }
 
+impl std::fmt::Debug for ParallelCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParallelCtx")
+            .field("threads", &self.threads)
+            .field("spawned", &self.pool.set.get().is_some())
+            .finish()
+    }
+}
+
+/// Equality is on the *configuration* (thread count) only: two contexts
+/// with the same thread count are interchangeable even when they own
+/// distinct worker sets.
+impl PartialEq for ParallelCtx {
+    fn eq(&self, other: &Self) -> bool {
+        self.threads == other.threads
+    }
+}
+
+impl Eq for ParallelCtx {}
+
 impl ParallelCtx {
-    /// Create with `threads` workers (0 is treated as 1).
+    /// Create with `threads` workers (0 is treated as 1). No threads are
+    /// spawned until the first parallel `map_chunks` call.
     pub fn new(threads: usize) -> Self {
-        ParallelCtx { threads: threads.max(1) }
+        let threads = threads.max(1);
+        ParallelCtx {
+            threads,
+            pool: Arc::new(LazyPool {
+                workers: threads - 1,
+                set: OnceLock::new(),
+                live: Arc::new(AtomicUsize::new(0)),
+            }),
+        }
     }
 
     /// The single-threaded context (still runs the chunked code path).
@@ -366,13 +650,34 @@ impl ParallelCtx {
         self.threads > 1
     }
 
-    /// Fork-join map over pre-chunked work: `map(chunk_idx, range, slot)`
-    /// runs once per chunk with exclusive access to that chunk's slot.
+    /// Parked worker threads currently alive in this ctx's pool: 0
+    /// before the lazy spawn, `threads − 1` after, 0 again once the
+    /// last clone has dropped (which joins them).
+    pub fn live_workers(&self) -> usize {
+        self.pool.live.load(Ordering::SeqCst)
+    }
+
+    /// A handle on the live-worker counter that outlives the ctx — the
+    /// pool-lifecycle tests assert it returns to 0 after `Drop`.
+    pub fn live_worker_counter(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.pool.live)
+    }
+
+    /// Map over pre-chunked work: `map(chunk_idx, range, slot)` runs
+    /// once per chunk with exclusive access to that chunk's slot.
     /// Chunk→slot assignment is by index and chunk boundaries come from
     /// the caller, so *which thread* ran a chunk can never influence the
     /// result; callers then combine slots in chunk order for a
-    /// deterministic reduction. A panic in any worker propagates to the
-    /// caller when the scope joins.
+    /// deterministic reduction. A panic in any worker (or in the
+    /// caller's own block) propagates after the internal join point and
+    /// leaves the pool reusable.
+    ///
+    /// Parallel calls are served by the persistent parked workers —
+    /// woken with a generation-stamped job, parked again once their
+    /// block is done — with the same static block assignment as the
+    /// fork-join dispatch (worker `b` owns chunks `[b·per, (b+1)·per)`;
+    /// column costs are near-uniform, so static splitting balances fine
+    /// without work stealing).
     pub fn map_chunks<S, F>(&self, ranges: &[Range<usize>], slots: &mut [S], map: F)
     where
         S: Send,
@@ -390,31 +695,52 @@ impl ParallelCtx {
             }
             return;
         }
-        // Static contiguous assignment: worker b owns chunk indices
-        // [b·per, (b+1)·per). Column costs are near-uniform, so static
-        // splitting balances fine without work-stealing overhead.
-        //
-        // Scoped threads are spawned per call (tens of µs of fork-join
-        // overhead per eval) — fine while chunk work dominates, i.e. on
-        // the large problems worth threading at all. If bench_parallel
-        // shows the screened sparse regime starved by spawn cost, the
-        // upgrade path is a persistent parked worker set inside
-        // ParallelCtx with the same chunk→slot assignment; the ordered
-        // reduction (and thus bit-exactness) is unaffected by who runs
-        // a chunk.
         let per = k.div_ceil(workers);
-        thread::scope(|s| {
-            for (b, block) in slots.chunks_mut(per).enumerate() {
-                let map = &map;
-                s.spawn(move || {
-                    for (off, slot) in block.iter_mut().enumerate() {
-                        let c = b * per + off;
-                        map(c, ranges[c].clone(), slot);
-                    }
-                });
-            }
-        });
+        let blocks = k.div_ceil(per);
+        let set = self
+            .pool
+            .set
+            .get_or_init(|| WorkerSet::spawn(self.pool.workers, Arc::clone(&self.pool.live)));
+        let job = BlockJob { ranges, slots: slots.as_mut_ptr(), k, per, map: &map };
+        set.dispatch(blocks, run_block::<S, F>, &job as *const BlockJob<'_, S, F> as *const ());
     }
+}
+
+/// One-shot scoped fork-join over pre-chunked work — the pre-PR-4
+/// dispatch, kept **off the hot path** for single-use helpers and as
+/// the baseline of the `bench_parallel` / `hotpath_microbench` dispatch
+/// comparison. Identical chunk→slot/block assignment to
+/// [`ParallelCtx::map_chunks`], so both dispatchers produce byte-equal
+/// results; only the per-call spawn/join overhead differs.
+pub fn forkjoin_map_chunks<S, F>(threads: usize, ranges: &[Range<usize>], slots: &mut [S], map: F)
+where
+    S: Send,
+    F: Fn(usize, Range<usize>, &mut S) + Sync,
+{
+    assert_eq!(ranges.len(), slots.len(), "one slot per chunk");
+    let k = ranges.len();
+    if k == 0 {
+        return;
+    }
+    let workers = threads.max(1).min(k);
+    if workers <= 1 {
+        for (c, slot) in slots.iter_mut().enumerate() {
+            map(c, ranges[c].clone(), slot);
+        }
+        return;
+    }
+    let per = k.div_ceil(workers);
+    thread::scope(|s| {
+        for (b, block) in slots.chunks_mut(per).enumerate() {
+            let map = &map;
+            s.spawn(move || {
+                for (off, slot) in block.iter_mut().enumerate() {
+                    let c = b * per + off;
+                    map(c, ranges[c].clone(), slot);
+                }
+            });
+        }
+    });
 }
 
 /// Deterministic sharded map-reduce over `0..n` in fixed chunks of
@@ -424,6 +750,9 @@ impl ParallelCtx {
 /// partials, never atomics — so the result is bit-identical for every
 /// `threads`, including 1. `n = 0` returns `init` without calling `map`;
 /// `chunk > n` degenerates to one chunk. Panics in `map` propagate.
+///
+/// This is the *one-shot* entry (scoped fork-join, no persistent pool):
+/// per-eval hot loops hold a [`ParallelCtx`] instead.
 pub fn parallel_map_reduce<T, A, M, R>(
     threads: usize,
     n: usize,
@@ -440,7 +769,7 @@ where
     let ranges = chunk_ranges(n, chunk.max(1));
     let mut slots: Vec<Option<T>> = Vec::new();
     slots.resize_with(ranges.len(), || None);
-    ParallelCtx::new(threads).map_chunks(&ranges, &mut slots, |c, range, slot| {
+    forkjoin_map_chunks(threads, &ranges, &mut slots, |c, range, slot| {
         *slot = Some(map(c, range));
     });
     let mut acc = init;

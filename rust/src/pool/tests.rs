@@ -1,4 +1,5 @@
 use super::*;
+use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -214,6 +215,102 @@ fn parallel_ctx_clamps_to_one() {
 }
 
 #[test]
+fn parallel_ctx_spawns_lazily_and_only_once() {
+    let ctx = ParallelCtx::new(3);
+    assert_eq!(ctx.live_workers(), 0, "no threads before the first parallel call");
+    let ranges = chunk_ranges(64, 4);
+    let mut slots = vec![0usize; ranges.len()];
+    for round in 0..5 {
+        ctx.map_chunks(&ranges, &mut slots, |c, range, slot| {
+            *slot = round * 10_000 + c * 100 + range.len();
+        });
+        for (c, (slot, range)) in slots.iter().zip(&ranges).enumerate() {
+            assert_eq!(*slot, round * 10_000 + c * 100 + range.len());
+        }
+        assert_eq!(ctx.live_workers(), 2, "threads−1 parked workers, spawned once");
+    }
+}
+
+#[test]
+fn parallel_ctx_serial_never_spawns() {
+    let ctx = ParallelCtx::serial();
+    let ranges = chunk_ranges(50, 5);
+    let mut slots = vec![0usize; ranges.len()];
+    ctx.map_chunks(&ranges, &mut slots, |c, _, slot| *slot = c + 1);
+    assert_eq!(ctx.live_workers(), 0);
+    assert!(slots.iter().enumerate().all(|(c, &s)| s == c + 1));
+}
+
+#[test]
+fn persistent_and_forkjoin_dispatch_agree() {
+    // Same chunk grid, same map, both dispatchers: identical slots.
+    let ranges = chunk_ranges(997, 13);
+    let fill = |c: usize, range: Range<usize>, slot: &mut f64| {
+        let mut s = 0.0;
+        for i in range {
+            s += 1.0 / (i as f64 + 0.25) * if c % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        *slot = s;
+    };
+    let ctx = ParallelCtx::new(4);
+    let mut persistent = vec![0.0f64; ranges.len()];
+    ctx.map_chunks(&ranges, &mut persistent, fill);
+    let mut forkjoin = vec![0.0f64; ranges.len()];
+    forkjoin_map_chunks(4, &ranges, &mut forkjoin, fill);
+    for (p, f) in persistent.iter().zip(&forkjoin) {
+        assert_eq!(p.to_bits(), f.to_bits());
+    }
+}
+
+#[test]
+fn parallel_ctx_worker_panic_propagates_and_pool_survives() {
+    let ctx = ParallelCtx::new(4);
+    let ranges = chunk_ranges(64, 4); // 16 chunks, 4 per block
+    let mut slots = vec![0usize; ranges.len()];
+    // Chunk 7 lives in a parked worker's block (block 1 at per=4).
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        ctx.map_chunks(&ranges, &mut slots, |c, _, slot| {
+            if c == 7 {
+                panic!("worker chunk exploded");
+            }
+            *slot = c;
+        });
+    }));
+    assert!(r.is_err(), "worker panic must reach the caller");
+    // Chunk 0 runs on the calling thread; its panic must propagate too.
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        ctx.map_chunks(&ranges, &mut slots, |c, _, slot| {
+            if c == 0 {
+                panic!("caller chunk exploded");
+            }
+            *slot = c;
+        });
+    }));
+    assert!(r.is_err(), "caller-block panic must propagate");
+    // The pool is still usable after both unwinds.
+    ctx.map_chunks(&ranges, &mut slots, |c, range, slot| *slot = c * 100 + range.len());
+    for (c, (slot, range)) in slots.iter().zip(&ranges).enumerate() {
+        assert_eq!(*slot, c * 100 + range.len());
+    }
+    assert_eq!(ctx.live_workers(), 3);
+}
+
+#[test]
+fn parallel_ctx_drop_joins_every_worker() {
+    let ctx = ParallelCtx::new(4);
+    let counter = ctx.live_worker_counter();
+    let ranges = chunk_ranges(32, 2);
+    let mut slots = vec![0usize; ranges.len()];
+    ctx.map_chunks(&ranges, &mut slots, |c, _, slot| *slot = c);
+    assert_eq!(counter.load(Ordering::SeqCst), 3);
+    let clone = ctx.clone();
+    drop(ctx);
+    assert_eq!(counter.load(Ordering::SeqCst), 3, "clone keeps the pool alive");
+    drop(clone);
+    assert_eq!(counter.load(Ordering::SeqCst), 0, "last drop joins all workers");
+}
+
+#[test]
 fn bounded_queue_fifo_and_backpressure() {
     let q = BoundedQueue::new(3);
     assert_eq!(q.capacity(), 3);
@@ -279,6 +376,67 @@ fn bounded_queue_drain_matching_preserves_order() {
     assert_eq!(q.pop(), Some(3));
     assert_eq!(q.pop(), Some(5));
     assert_eq!(q.pop(), Some(6));
+}
+
+#[test]
+fn bounded_queue_drain_matching_empty_queue_returns_nothing() {
+    let q: BoundedQueue<u32> = BoundedQueue::new(4);
+    let mut calls = 0;
+    let out = q.drain_matching(8, |_| {
+        calls += 1;
+        true
+    });
+    assert!(out.is_empty());
+    assert_eq!(calls, 0, "predicate never runs on an empty queue");
+    assert_eq!(q.len(), 0);
+}
+
+#[test]
+fn bounded_queue_drain_matching_no_match_leaves_queue_untouched() {
+    let q = BoundedQueue::new(8);
+    for v in [1, 3, 5, 7] {
+        q.try_push(v).unwrap();
+    }
+    let mut calls = 0;
+    let out = q.drain_matching(4, |v| {
+        calls += 1;
+        v % 2 == 0
+    });
+    assert!(out.is_empty());
+    assert_eq!(calls, 4, "predicate runs once per item on a miss");
+    // FIFO order preserved exactly.
+    assert_eq!(q.pop(), Some(1));
+    assert_eq!(q.pop(), Some(3));
+    assert_eq!(q.pop(), Some(5));
+    assert_eq!(q.pop(), Some(7));
+}
+
+#[test]
+fn bounded_queue_drain_matching_zero_max_is_a_noop() {
+    let q = BoundedQueue::new(4);
+    q.try_push(2).unwrap();
+    let out = q.drain_matching(0, |_| true);
+    assert!(out.is_empty());
+    assert_eq!(q.len(), 1);
+}
+
+#[test]
+fn bounded_queue_drain_matching_calls_pred_once_per_item() {
+    // The first-match probe must not re-invoke the predicate on items
+    // it already inspected.
+    let q = BoundedQueue::new(8);
+    for v in [1, 2, 3, 4] {
+        q.try_push(v).unwrap();
+    }
+    let mut seen = Vec::new();
+    let taken = q.drain_matching(8, |&v| {
+        seen.push(v);
+        v % 2 == 0
+    });
+    assert_eq!(taken, vec![2, 4]);
+    assert_eq!(seen, vec![1, 2, 3, 4], "each item inspected exactly once");
+    assert_eq!(q.pop(), Some(1));
+    assert_eq!(q.pop(), Some(3));
 }
 
 #[test]

@@ -27,6 +27,10 @@ pub struct CacheSeed {
 struct CacheEntry {
     dataset: String,
     gamma: f64,
+    /// `ln γ`, hoisted at insert time: the nearest-neighbor scan is per
+    /// lookup × per entry, so the logarithm is paid once per stored
+    /// entry instead of once per comparison.
+    ln_gamma: f64,
     rho: f64,
     dual: Arc<Vec<f64>>,
     bytes: usize,
@@ -46,8 +50,10 @@ pub struct DualCache {
     radius: f64,
 }
 
-fn param_distance(g1: f64, r1: f64, g2: f64, r2: f64) -> f64 {
-    let dg = g1.ln() - g2.ln();
+/// Distance in `(ln γ, ρ)` space over *pre-computed* logs (see
+/// [`CacheEntry::ln_gamma`]).
+fn param_distance_ln(lg1: f64, r1: f64, lg2: f64, r2: f64) -> f64 {
+    let dg = lg1 - lg2;
     let dr = r1 - r2;
     (dg * dg + dr * dr).sqrt()
 }
@@ -107,6 +113,7 @@ impl DualCache {
             st.entries.push(CacheEntry {
                 dataset: dataset.to_string(),
                 gamma,
+                ln_gamma: gamma.ln(),
                 rho,
                 dual: Arc::new(dual),
                 bytes,
@@ -133,6 +140,8 @@ impl DualCache {
         let mut st = self.state.lock().unwrap();
         st.clock += 1;
         let clock = st.clock;
+        // One `ln` per lookup; entries carry theirs from insert time.
+        let ln_gamma = gamma.ln();
         let mut best: Option<(usize, f64)> = None;
         for (i, e) in st.entries.iter().enumerate() {
             if e.dataset != dataset {
@@ -141,7 +150,7 @@ impl DualCache {
             let d = if e.gamma == gamma && e.rho == rho {
                 0.0
             } else {
-                param_distance(e.gamma, e.rho, gamma, rho)
+                param_distance_ln(e.ln_gamma, e.rho, ln_gamma, rho)
             };
             let better = match best {
                 None => true,

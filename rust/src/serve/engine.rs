@@ -35,13 +35,13 @@ use super::ServeConfig;
 use crate::coordinator::config::{DatasetSpec, Method};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::build_pair;
-use crate::coordinator::sweep::solve_full_warm;
+use crate::coordinator::sweep::solve_full_warm_ctx;
 use crate::data::DomainPair;
 use crate::err;
 use crate::error::GrpotError;
 use crate::ot::dual::OtProblem;
 use crate::ot::fastot::FastOtResult;
-use crate::pool::{BoundedQueue, PushError};
+use crate::pool::{BoundedQueue, ParallelCtx, PushError};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -199,7 +199,11 @@ impl Engine {
     /// `workers × threads_per_solve ≤ core_budget` (autodetected from
     /// `available_parallelism` when the config leaves it 0). Clamping
     /// changes wall time only — solves are deterministic in the thread
-    /// count, so results are unaffected.
+    /// count, so results are unaffected. Each engine worker owns one
+    /// long-lived [`ParallelCtx`] whose oracle workers spawn lazily and
+    /// park between solves, so the engine's steady-state thread
+    /// population is `workers` plus at most
+    /// `workers × (threads_per_solve − 1)` parked oracle workers.
     pub fn start(cfg: ServeConfig, metrics: Arc<Metrics>) -> Engine {
         let workers = cfg.workers.max(1);
         let budget = if cfg.core_budget > 0 {
@@ -321,11 +325,18 @@ impl Drop for Engine {
 }
 
 fn worker_loop(state: &EngineState) {
+    // One long-lived parallel context per engine worker: its oracle
+    // workers spawn once (lazily, on the first threaded solve), park
+    // between evals/solves, and are joined when the engine shuts down —
+    // so across the engine at most `workers × (threads_per_solve − 1)`
+    // parked threads exist, inside the core-budget clamp, and no solve
+    // ever pays per-eval thread spawn cost.
+    let ctx = ParallelCtx::new(state.threads_per_solve);
     while let Some(batch) = next_batch(&state.queue, state.cfg.max_batch) {
         state
             .metrics
             .set_gauge("serve.queue_depth", state.queue.len() as f64);
-        handle_batch(state, &batch);
+        handle_batch(state, &batch, &ctx);
     }
 }
 
@@ -361,7 +372,7 @@ fn cached_problem(
     built
 }
 
-fn handle_batch(state: &EngineState, batch: &Batch) {
+fn handle_batch(state: &EngineState, batch: &Batch, ctx: &ParallelCtx) {
     let m = &state.metrics;
     m.incr("serve.batches", 1);
     m.observe_hist("serve.batch_size", batch.len() as f64);
@@ -415,10 +426,11 @@ fn handle_batch(state: &EngineState, batch: &Batch) {
 
     // Each distinct (γ, ρ, method, warm) job solves once.
     for (job, idxs) in unique_jobs(&live) {
-        solve_job(state, &batch.dataset_key, &problem, batch_size, &live, job, &idxs);
+        solve_job(state, &batch.dataset_key, &problem, batch_size, &live, job, &idxs, ctx);
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn solve_job(
     state: &EngineState,
     dataset_key: &str,
@@ -427,6 +439,7 @@ fn solve_job(
     live: &[&Ticket],
     job: JobKey,
     idxs: &[usize],
+    ctx: &ParallelCtx,
 ) {
     let m = &state.metrics;
     // Second deadline triage: earlier jobs in this batch may have eaten
@@ -469,7 +482,7 @@ fn solve_job(
     // `xla-origin` in a `--features xla` build against the stub.
     let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         m.time_hist("serve.solve_seconds", || {
-            solve_full_warm(
+            solve_full_warm_ctx(
                 &problem.prob,
                 job.method,
                 job.gamma,
@@ -477,7 +490,7 @@ fn solve_job(
                 state.cfg.r,
                 state.cfg.lbfgs.clone(),
                 x0,
-                state.threads_per_solve,
+                ctx,
             )
         })
     }));

@@ -23,7 +23,7 @@
 //!   hold from any starting point (Theorem 2), so warm starts change
 //!   iteration counts, never results.
 //! * [`engine`] — the engine itself: worker threads consuming batches
-//!   from the queue, solving via [`crate::coordinator::sweep::solve_full_warm`]
+//!   from the queue, solving via [`crate::coordinator::sweep::solve_full_warm_ctx`]
 //!   and publishing per-request metrics (latency percentiles, queue
 //!   depth, warm hit/miss, rejections).
 //!

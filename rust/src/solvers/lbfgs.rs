@@ -10,6 +10,14 @@
 //! [`crate::pool::ParallelCtx`]), whose deterministic ordered reduction
 //! keeps the whole trajectory bit-identical at any thread count. A
 //! parallel dot here would buy nothing and break that invariant.
+//!
+//! Context lifetime: the oracle (not the solver) owns the
+//! `ParallelCtx`, so its persistent parked workers survive across the
+//! `r`-iteration step blocks, the `refresh` calls between them, and —
+//! when the caller threads a long-lived ctx through `solve_*_ctx` —
+//! across whole solves. `Lbfgs` itself never spawns or parks threads;
+//! every `step`/`run` call drives the same worker set through the
+//! oracle it is handed.
 
 use super::linesearch::{strong_wolfe, WolfeOptions};
 use super::{StepStatus, StopReason};

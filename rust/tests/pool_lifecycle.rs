@@ -1,0 +1,143 @@
+//! Lifecycle guarantees of the persistent parked worker pool behind
+//! `pool::ParallelCtx` — the PR-4 replacement for the per-eval
+//! `thread::scope` fork-join:
+//!
+//! * worker **reuse**: a ctx held across ≥ 1000 consecutive oracle
+//!   evaluations returns byte-equal results to a fresh ctx per eval;
+//! * **panic safety**: a panic inside a worker (or in the caller's own
+//!   block) propagates to the caller and leaves the pool reusable;
+//! * **shutdown**: dropping the last ctx clone joins every worker — no
+//!   leaked threads, asserted via the pool's live-worker counter;
+//! * **determinism across solves**: one ctx shared by a solve and its
+//!   warm-started re-solve produces the bit-identical trajectory the
+//!   fresh-ctx (and serial) solves produce.
+
+use grpot::linalg::Mat;
+use grpot::ot::dual::{DualOracle, DualParams, OtProblem};
+use grpot::ot::fastot::{solve_fast_ot, solve_fast_ot_ctx, solve_fast_ot_from, FastOtConfig};
+use grpot::ot::origin::OriginOracle;
+use grpot::pool::{chunk_ranges, ParallelCtx};
+use grpot::rng::Pcg64;
+use grpot::solvers::lbfgs::LbfgsOptions;
+use std::sync::atomic::Ordering;
+
+fn random_problem(seed: u64, l: usize, g: usize, n: usize) -> OtProblem {
+    let mut rng = Pcg64::new(seed);
+    let m = l * g;
+    let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+    let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+    OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+}
+
+/// Worker reuse: 1000 consecutive evals through one parked worker set
+/// are byte-equal to evals through a fresh ctx (fresh spawn) each time.
+#[test]
+fn reused_ctx_matches_fresh_ctx_across_1000_evals() {
+    let prob = random_problem(0x9001, 4, 4, 37);
+    let params = DualParams::new(0.6, 0.5);
+    let ctx = ParallelCtx::new(4);
+    let mut reused = OriginOracle::with_ctx(&prob, params, ctx.clone());
+    let mut x = vec![0.0; prob.dim()];
+    let mut g_reused = vec![0.0; prob.dim()];
+    let mut g_fresh = vec![0.0; prob.dim()];
+    let mut rng = Pcg64::new(7);
+    for step in 0..1000 {
+        // Deterministic drifting iterate; cheap per-step perturbation.
+        let k = step % prob.dim();
+        x[k] += rng.uniform(-0.05, 0.06);
+        let f_reused = reused.eval(&x, &mut g_reused);
+        let mut fresh = OriginOracle::with_threads(&prob, params, 4);
+        let f_fresh = fresh.eval(&x, &mut g_fresh);
+        assert_eq!(f_reused.to_bits(), f_fresh.to_bits(), "objective at step {step}");
+        assert_eq!(g_reused, g_fresh, "gradient at step {step}");
+    }
+    assert_eq!(ctx.live_workers(), 3, "one parked set served all 1000 evals");
+}
+
+/// Panics propagate from worker blocks and from the caller's own block,
+/// and the pool keeps serving afterwards.
+#[test]
+fn panic_in_worker_propagates_and_pool_stays_usable() {
+    let ctx = ParallelCtx::new(4);
+    let ranges = chunk_ranges(48, 3); // 16 chunks → blocks of 4
+    let mut slots = vec![0usize; ranges.len()];
+    for poison in [9usize, 0] {
+        // 9 runs on a parked worker (block 2), 0 on the calling thread.
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ctx.map_chunks(&ranges, &mut slots, |c, _, slot| {
+                if c == poison {
+                    panic!("chunk {c} poisoned");
+                }
+                *slot = c + 1;
+            });
+        }));
+        assert!(got.is_err(), "panic on chunk {poison} must reach the caller");
+    }
+    // Pool reusable: a clean pass over the same grid still works.
+    ctx.map_chunks(&ranges, &mut slots, |c, range, slot| *slot = c * 1000 + range.len());
+    for (c, (slot, range)) in slots.iter().zip(&ranges).enumerate() {
+        assert_eq!(*slot, c * 1000 + range.len());
+    }
+    // And a full solve through the same ctx still succeeds.
+    let prob = random_problem(0x9002, 3, 4, 33);
+    let cfg = FastOtConfig {
+        gamma: 0.8,
+        rho: 0.5,
+        lbfgs: LbfgsOptions { max_iters: 40, ..Default::default() },
+        ..Default::default()
+    };
+    let res = solve_fast_ot_ctx(&prob, &cfg, vec![0.0; prob.dim()], &ctx);
+    assert!(res.dual_objective > 0.0);
+}
+
+/// Dropping the last clone joins every worker: the pool's live-worker
+/// counter returns to zero (leak check without a global registry).
+#[test]
+fn drop_joins_all_workers_no_leaks() {
+    let ctx = ParallelCtx::new(4);
+    let counter = ctx.live_worker_counter();
+    assert_eq!(counter.load(Ordering::SeqCst), 0, "lazy: nothing spawned yet");
+    let ranges = chunk_ranges(64, 4);
+    let mut slots = vec![0u64; ranges.len()];
+    ctx.map_chunks(&ranges, &mut slots, |c, _, slot| *slot = c as u64);
+    assert_eq!(counter.load(Ordering::SeqCst), 3, "threads − 1 parked workers");
+    let clone = ctx.clone();
+    drop(ctx);
+    assert_eq!(
+        counter.load(Ordering::SeqCst),
+        3,
+        "a live clone keeps the worker set parked"
+    );
+    drop(clone);
+    assert_eq!(counter.load(Ordering::SeqCst), 0, "last drop joined every worker");
+}
+
+/// A solve and its warm-started re-solve sharing one ctx stay
+/// bit-identical to fresh-ctx and serial runs — pool state carried
+/// across solves can never leak into results.
+#[test]
+fn shared_ctx_across_solve_and_warm_resolve_is_deterministic() {
+    let prob = random_problem(0x9003, 4, 3, 41);
+    let cfg = |threads: usize| FastOtConfig {
+        gamma: 0.5,
+        rho: 0.6,
+        threads,
+        lbfgs: LbfgsOptions { max_iters: 80, ..Default::default() },
+        ..Default::default()
+    };
+    let ctx = ParallelCtx::new(4);
+    let cold_shared = solve_fast_ot_ctx(&prob, &cfg(4), vec![0.0; prob.dim()], &ctx);
+    let warm_shared = solve_fast_ot_ctx(&prob, &cfg(4), cold_shared.x.clone(), &ctx);
+
+    // Fresh-ctx references (serial and threaded).
+    let cold_serial = solve_fast_ot(&prob, &cfg(1));
+    assert_eq!(cold_shared.x, cold_serial.x, "cold solve bytes");
+    assert_eq!(cold_shared.dual_objective, cold_serial.dual_objective);
+    assert_eq!(cold_shared.iterations, cold_serial.iterations);
+
+    let warm_serial = solve_fast_ot_from(&prob, &cfg(1), cold_serial.x.clone());
+    assert_eq!(warm_shared.x, warm_serial.x, "warm re-solve bytes");
+    assert_eq!(warm_shared.dual_objective, warm_serial.dual_objective);
+    assert_eq!(warm_shared.iterations, warm_serial.iterations);
+    assert_eq!(ctx.live_workers(), 3, "both solves rode the same parked set");
+}

@@ -1,0 +1,78 @@
+#!/usr/bin/env bash
+# Perf trio + machine-readable summary.
+#
+# Runs the three performance benches in quick mode (or smoke mode when
+# GRPOT_BENCH_SMOKE=1 is already set, as in the CI wiring):
+#
+#   * bench_parallel     — solve-level thread scaling + the fork-join vs
+#                          persistent-pool dispatch comparison
+#   * bench_serve        — serving-engine closed-loop load harness
+#   * hotpath_microbench — isolated oracle kernels + bare dispatch cost
+#
+# then collects every CSV the benches emitted into one machine-readable
+# JSON file (default: BENCH_PR4.json at the repo root; override with
+# GRPOT_BENCH_JSON). The JSON records the mode, so a smoke-mode CI run
+# is never mistaken for a real measurement.
+#
+# Usage: bash scripts/bench.sh
+#   GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh   # CI smoke wiring
+#   GRPOT_BENCH_JSON=out.json bash scripts/bench.sh
+
+set -euo pipefail
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
+
+OUT="${GRPOT_BENCH_JSON:-$ROOT/BENCH_PR4.json}"
+REPORT_DIR="${GRPOT_REPORT_DIR:-$ROOT/rust/reports}"
+export GRPOT_REPORT_DIR="$REPORT_DIR"
+
+if [[ "${GRPOT_BENCH_SMOKE:-0}" != 0 ]]; then
+    MODE=smoke
+elif [[ "${GRPOT_BENCH_QUICK:-1}" != 0 ]]; then
+    export GRPOT_BENCH_QUICK=1
+    MODE=quick
+else
+    MODE=full
+fi
+
+BENCHES=(bench_parallel bench_serve hotpath_microbench)
+for b in "${BENCHES[@]}"; do
+    echo
+    echo "==> bench ($MODE mode): $b"
+    cargo bench --bench "$b"
+done
+
+# Fold the emitted CSVs into one JSON document. Python is available on
+# every image this repo targets; if it is ever missing, fall back to a
+# stub JSON that still records mode + the CSV paths.
+CSVS=(bench_parallel bench_parallel_dispatch bench_serve hotpath_microbench)
+if command -v python3 >/dev/null 2>&1; then
+    MODE="$MODE" OUT="$OUT" REPORT_DIR="$REPORT_DIR" CSVS="${CSVS[*]}" python3 - <<'PY'
+import csv, json, os
+
+mode = os.environ["MODE"]
+out = os.environ["OUT"]
+report_dir = os.environ["REPORT_DIR"]
+doc = {"mode": mode, "benches": {}}
+for stem in os.environ["CSVS"].split():
+    path = os.path.join(report_dir, stem + ".csv")
+    if not os.path.exists(path):
+        continue
+    with open(path, newline="") as fh:
+        rows = list(csv.reader(fh))
+    if not rows:
+        continue
+    headers, data = rows[0], rows[1:]
+    doc["benches"][stem] = [dict(zip(headers, row)) for row in data]
+with open(out, "w") as fh:
+    json.dump(doc, fh, indent=2, sort_keys=True)
+    fh.write("\n")
+print(f"bench.sh: wrote {out} ({mode} mode, {len(doc['benches'])} tables)")
+PY
+else
+    {
+        printf '{\n  "mode": "%s",\n  "note": "python3 unavailable; see CSVs",\n' "$MODE"
+        printf '  "csv_dir": "%s"\n}\n' "$REPORT_DIR"
+    } > "$OUT"
+    echo "bench.sh: python3 missing — wrote stub $OUT"
+fi

@@ -6,12 +6,18 @@
 #   3. cargo build --release            (tier-1, part 1)
 #   4. cargo test -q                    (tier-1, part 2)
 #   5. GRPOT_TEST_THREADS=4 shard: the theorem2_equivalence suite
-#      re-runs with 4 intra-solve oracle threads so the parallel hot
-#      path is exercised (and must stay byte-equal) on every push
-#      (parallel_determinism compares thread counts directly in step 4)
+#      re-runs with 4 intra-solve oracle threads, plus a re-run of
+#      parallel_determinism and the pool_lifecycle suite, so
+#      thread-count bit-exactness and the persistent-pool lifecycle
+#      (reuse / panic recovery / drop-joins) are gated on every push
 #   6. cargo build --release --features xla   (in-tree stub must keep compiling)
 #   7. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
-#      (includes bench_parallel, which asserts thread-count determinism)
+#      (includes bench_parallel, which asserts thread-count determinism
+#      and the fork-join-vs-persistent dispatch equivalence)
+#   8. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf trio again
+#      through the bench.sh wrapper, checking the machine-readable
+#      BENCH_PR4.json emission end to end (written to a temp file so a
+#      smoke run never clobbers real recorded numbers)
 #
 # Everything except step 5 runs with default features only (zero
 # external crate dependencies — this image has no network). Step 5
@@ -46,7 +52,10 @@ step "cargo test -q"
 cargo test -q
 
 step "cargo test -q (GRPOT_TEST_THREADS=4 parallel shard)"
-GRPOT_TEST_THREADS=4 cargo test -q --test theorem2_equivalence
+GRPOT_TEST_THREADS=4 cargo test -q \
+    --test theorem2_equivalence \
+    --test parallel_determinism \
+    --test pool_lifecycle
 
 step "cargo build --release --features xla (offline stub)"
 cargo build --release --features xla
@@ -72,6 +81,12 @@ for b in "${BENCHES[@]}"; do
     step "bench smoke: $b"
     GRPOT_BENCH_SMOKE=1 cargo bench --bench "$b"
 done
+
+step "bench.sh smoke (machine-readable BENCH_PR4.json emission)"
+BENCH_JSON_TMP="$(mktemp -t grpot-bench-smoke-XXXXXX.json)"
+GRPOT_BENCH_SMOKE=1 GRPOT_BENCH_JSON="$BENCH_JSON_TMP" bash ../scripts/bench.sh
+test -s "$BENCH_JSON_TMP" || { echo "bench.sh produced no JSON"; exit 1; }
+rm -f "$BENCH_JSON_TMP"
 
 echo
 echo "ci.sh: all gates green"
