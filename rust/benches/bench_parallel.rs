@@ -13,6 +13,11 @@
 //! per-eval spawn/join overhead is the only difference, and the bench
 //! asserts the results stay byte-equal while reporting the speedup.
 //!
+//! Since PR 5 it also emits **SIMD rows**: the same solves with the
+//! scalar reference kernels vs the runtime-dispatched vector kernels
+//! (`bench_parallel_simd.csv`), byte-equality asserted — the
+//! thread-scaling and SIMD speedups compose multiplicatively.
+//!
 //! Target (recorded in ROADMAP.md next to the bench-serve baseline):
 //! ≥ 1.5× wall-clock speedup at 4 threads on the full-size problem.
 
@@ -27,6 +32,7 @@ use grpot::ot::fastot::{solve_fast_ot, FastOtConfig, FastOtResult};
 use grpot::ot::origin::solve_origin;
 use grpot::pool::ParallelCtx;
 use grpot::rng::Pcg64;
+use grpot::simd::{Dispatch, SimdMode};
 use grpot::solvers::lbfgs::LbfgsOptions;
 
 /// Iteration cap per solve: long enough that oracle time dominates the
@@ -36,11 +42,17 @@ fn bench_iters() -> usize {
     size3(10, 100, 200)
 }
 
-fn solve(prob: &grpot::ot::dual::OtProblem, method: Method, threads: usize) -> FastOtResult {
+fn solve_simd(
+    prob: &grpot::ot::dual::OtProblem,
+    method: Method,
+    threads: usize,
+    simd: SimdMode,
+) -> FastOtResult {
     let cfg = FastOtConfig {
         gamma: 0.5,
         rho: 0.6,
         threads,
+        simd,
         lbfgs: LbfgsOptions { max_iters: bench_iters(), ..Default::default() },
         ..Default::default()
     };
@@ -48,6 +60,10 @@ fn solve(prob: &grpot::ot::dual::OtProblem, method: Method, threads: usize) -> F
         Method::Origin => solve_origin(prob, &cfg),
         _ => solve_fast_ot(prob, &cfg),
     }
+}
+
+fn solve(prob: &grpot::ot::dual::OtProblem, method: Method, threads: usize) -> FastOtResult {
+    solve_simd(prob, method, threads, SimdMode::Auto)
 }
 
 fn main() {
@@ -117,7 +133,77 @@ fn main() {
     }
     table.emit(&report_dir(), "bench_parallel");
 
+    simd_comparison(&prob);
     dispatch_comparison(&prob);
+}
+
+/// SIMD rows: scalar reference kernels vs auto dispatch on full solves
+/// (threads ∈ {1, 4}), asserting byte-equality and reporting the
+/// kernel-level speedup at solve granularity.
+fn simd_comparison(prob: &grpot::ot::dual::OtProblem) {
+    let auto_name = Dispatch::resolve(SimdMode::Auto).name();
+    println!("\n== simd: scalar vs {auto_name} dispatch ==");
+    let reps = size3(1, 2, 3);
+    let thread_grid: Vec<usize> = if smoke_mode() { vec![1] } else { vec![1, 4] };
+    let mut table = Table::new(
+        "simd dispatch (speedup vs scalar kernels)",
+        &["method", "threads", "simd", "s/solve", "speedup", "identical"],
+    );
+    for method in [Method::Fast, Method::Origin] {
+        for &threads in &thread_grid {
+            let mut baseline: Option<(FastOtResult, f64)> = None;
+            for mode in [SimdMode::Scalar, SimdMode::Auto] {
+                let mut best = f64::INFINITY;
+                let mut res: Option<FastOtResult> = None;
+                for _ in 0..reps {
+                    let timer = Timer::start();
+                    let r = solve_simd(prob, method, threads, mode);
+                    best = best.min(timer.elapsed_s());
+                    res = Some(r);
+                }
+                let res = res.expect("at least one rep");
+                let (speedup, identical) = match &baseline {
+                    None => (1.0, true),
+                    Some((b, t_scalar)) => {
+                        // The full equivalence contract, matching
+                        // tests/simd_equivalence.rs: solution bytes,
+                        // objective, iteration/outer counts AND every
+                        // oracle counter (screening decisions included).
+                        let same = b.x == res.x
+                            && b.dual_objective == res.dual_objective
+                            && b.iterations == res.iterations
+                            && b.outer_rounds == res.outer_rounds
+                            && b.stats == res.stats;
+                        (t_scalar / best.max(1e-12), same)
+                    }
+                };
+                assert!(
+                    identical,
+                    "{} with {} dispatch diverged from the scalar kernels",
+                    method.name(),
+                    mode.name()
+                );
+                let shown = if mode == SimdMode::Auto { auto_name } else { mode.name() };
+                println!(
+                    "{:<8} threads={threads} simd={shown:<8} {best:>9.4} s/solve \
+                     speedup={speedup:>5.2}x identical={identical}",
+                    method.name()
+                );
+                table.row(vec![
+                    method.name().into(),
+                    format!("{threads}"),
+                    shown.into(),
+                    format!("{best:.4}"),
+                    format!("{speedup:.2}"),
+                    if identical { "ok".into() } else { "MISMATCH".into() },
+                ]);
+                if baseline.is_none() {
+                    baseline = Some((res, best));
+                }
+            }
+        }
+    }
+    table.emit(&report_dir(), "bench_parallel_simd");
 }
 
 /// Fork-join vs persistent dispatch on the identical dense kernel:

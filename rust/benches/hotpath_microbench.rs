@@ -13,6 +13,7 @@ use grpot::ot::origin::OriginOracle;
 use grpot::ot::screening::ScreeningOracle;
 use grpot::pool::{chunk_ranges, forkjoin_map_chunks, ParallelCtx};
 use grpot::rng::Pcg64;
+use grpot::simd::{Dispatch, SimdMode};
 
 fn main() {
     banner("hotpath microbench");
@@ -62,6 +63,67 @@ fn main() {
         });
         record(&format!("snapshot + ws refresh ({threads}t)"), t.seconds() * 1e3);
     }
+
+    // SIMD kernel comparison: the scalar reference kernels vs the
+    // runtime-dispatched vector kernels on the same evaluations —
+    // full-panel dense (all quads fully active), a masked screened
+    // panel (mixed activity ⇒ vector quads + per-lane scalar fallback)
+    // and the skip-heavy screened regime (bulk panel skips dominate).
+    // Byte-equality is asserted before timing; the speedup rows land in
+    // BENCH_PR5.json through the emitted CSV.
+    let simd_name = Dispatch::resolve(SimdMode::Auto).name();
+    println!("\nsimd kernels: auto dispatch resolves to '{simd_name}'");
+    // Ratios live in their own table so BENCH_PR5.json never mixes a
+    // unitless speedup into the ms/op column.
+    let mut ratio_table =
+        Table::new("simd kernel speedup (scalar ms / auto ms)", &["case", "speedup"]);
+    let medium_params = DualParams::new(1.0, 0.5);
+    let mut g_s = vec![0.0; prob.dim()];
+    let mut g_a = vec![0.0; prob.dim()];
+    let cases: [(&str, DualParams, bool); 3] = [
+        ("dense full panel", dense_params, false),
+        ("screened masked panel", medium_params, true),
+        ("screened skip-heavy", sparse_params, true),
+    ];
+    for (tag, params, screened) in cases {
+        let (scalar_ms, auto_ms) = if screened {
+            let mut s = ScreeningOracle::with_simd(&prob, params, true, 1, SimdMode::Scalar);
+            let mut a = ScreeningOracle::with_simd(&prob, params, true, 1, SimdMode::Auto);
+            s.refresh(&x);
+            a.refresh(&x);
+            let fs = s.eval(&x, &mut g_s);
+            let fa = a.eval(&x, &mut g_a);
+            assert_eq!(fs.to_bits(), fa.to_bits(), "{tag}: objective dispatch mismatch");
+            assert_eq!(g_s, g_a, "{tag}: gradient dispatch mismatch");
+            let ts = bench_fn("simd-scalar", &opts, || {
+                s.eval(&x, &mut g_s);
+            });
+            let ta = bench_fn("simd-auto", &opts, || {
+                a.eval(&x, &mut g_a);
+            });
+            (ts.seconds() * 1e3, ta.seconds() * 1e3)
+        } else {
+            let mut s = OriginOracle::with_simd(&prob, params, 1, SimdMode::Scalar);
+            let mut a = OriginOracle::with_simd(&prob, params, 1, SimdMode::Auto);
+            let fs = s.eval(&x, &mut g_s);
+            let fa = a.eval(&x, &mut g_a);
+            assert_eq!(fs.to_bits(), fa.to_bits(), "{tag}: objective dispatch mismatch");
+            assert_eq!(g_s, g_a, "{tag}: gradient dispatch mismatch");
+            let ts = bench_fn("simd-scalar", &opts, || {
+                s.eval(&x, &mut g_s);
+            });
+            let ta = bench_fn("simd-auto", &opts, || {
+                a.eval(&x, &mut g_a);
+            });
+            (ts.seconds() * 1e3, ta.seconds() * 1e3)
+        };
+        record(&format!("{tag} (simd scalar)"), scalar_ms);
+        record(&format!("{tag} (simd {simd_name})"), auto_ms);
+        let speedup = scalar_ms / auto_ms.max(1e-9);
+        println!("{:<34} {speedup:>8.2}x", format!("{tag} (speedup)"));
+        ratio_table.row(vec![tag.into(), format!("{speedup:.2}")]);
+    }
+    ratio_table.emit(&report_dir(), "hotpath_simd_speedup");
 
     // Bare dispatch latency on a near-empty job — the per-eval floor the
     // screened sparse regime pays: persistent parked handoff vs the

@@ -16,6 +16,7 @@ use crate::jsonlite::Value;
 use crate::ot::dual::OtProblem;
 use crate::ot::fastot::FastOtConfig;
 use crate::pool::{ParallelCtx, ThreadPool};
+use crate::simd::SimdMode;
 use crate::solvers::lbfgs::LbfgsOptions;
 use std::sync::{Arc, Mutex};
 
@@ -75,6 +76,32 @@ pub fn solve_full(
     max_iters: usize,
 ) -> crate::ot::fastot::FastOtResult {
     solve_full_threads(prob, method, gamma, rho, r, max_iters, 1)
+}
+
+/// [`solve_full_threads`] with an explicit SIMD policy (the `solve
+/// --simd` flag's entry; explicit modes win over `GRPOT_SIMD`).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_full_simd(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    max_iters: usize,
+    threads: usize,
+    simd: SimdMode,
+) -> crate::ot::fastot::FastOtResult {
+    solve_full_warm_ctx_simd(
+        prob,
+        method,
+        gamma,
+        rho,
+        r,
+        LbfgsOptions { max_iters, ..Default::default() },
+        None,
+        &ParallelCtx::new(threads),
+        simd,
+    )
 }
 
 /// [`solve_full`] with `threads` intra-solve oracle workers. The solve
@@ -137,12 +164,34 @@ pub fn solve_full_warm_ctx(
     x0: Option<&[f64]>,
     ctx: &ParallelCtx,
 ) -> crate::ot::fastot::FastOtResult {
+    // Auto: runtime-dispatched SIMD kernels; GRPOT_SIMD may replace
+    // the default. Callers forcing a backend programmatically use
+    // [`solve_full_warm_ctx_simd`].
+    solve_full_warm_ctx_simd(prob, method, gamma, rho, r, lbfgs, x0, ctx, SimdMode::Auto)
+}
+
+/// [`solve_full_warm_ctx`] with an explicit SIMD policy — the
+/// programmatic backend knob (`SimdMode::Scalar` forces the reference
+/// kernels; explicit modes win over `GRPOT_SIMD`).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_full_warm_ctx_simd(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    lbfgs: LbfgsOptions,
+    x0: Option<&[f64]>,
+    ctx: &ParallelCtx,
+    simd: SimdMode,
+) -> crate::ot::fastot::FastOtResult {
     let cfg = FastOtConfig {
         gamma,
         rho,
         r,
         use_working_set: method != Method::FastNoWs,
         threads: ctx.threads(),
+        simd,
         lbfgs,
     };
     let x0 = x0.map(<[f64]>::to_vec).unwrap_or_else(|| vec![0.0; prob.dim()]);

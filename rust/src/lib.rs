@@ -25,6 +25,10 @@
 //!   families used in the paper's evaluation.
 //! * [`ot`] — the OT core: dual oracle, dense baseline, screening, the
 //!   Algorithm-1 driver, plan recovery, entropic/EMD baselines.
+//! * [`simd`] — runtime-dispatched SIMD column-lane oracle kernels
+//!   (AVX2 + portable mirror), bit-identical to the scalar kernels;
+//!   `GRPOT_SIMD={auto,scalar,portable}` / `FastOtConfig.simd` select
+//!   the path.
 //! * [`solvers`] — L-BFGS (two-loop recursion + strong-Wolfe line
 //!   search) and first-order solvers.
 //! * `runtime` — PJRT loader for the AOT JAX/Pallas artifacts; gated
@@ -67,6 +71,7 @@ pub mod linalg;
 pub mod ot;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod serve;

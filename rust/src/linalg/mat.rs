@@ -104,8 +104,38 @@ impl Mat {
         self.data
     }
 
-    /// Out-of-place transpose.
+    /// Tile side of the blocked [`Mat::transpose`]: 32×32 `f64` tiles
+    /// are 8 KiB read + 8 KiB written — both sides stay L1-resident, so
+    /// the strided writes hit cache lines that were just loaded instead
+    /// of streaming the full destination once per source row.
+    const TRANSPOSE_TILE: usize = 32;
+
+    /// Out-of-place transpose, blocked into 32×32 tiles.
+    /// Element-for-element identical to the naive double loop (it is a
+    /// pure permutation); only the traversal order — and therefore the
+    /// cache behaviour on the large `cost_t` builds — changes.
     pub fn transpose(&self) -> Mat {
+        const B: usize = Mat::TRANSPOSE_TILE;
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for ib in (0..self.rows).step_by(B) {
+            let imax = (ib + B).min(self.rows);
+            for jb in (0..self.cols).step_by(B) {
+                let jmax = (jb + B).min(self.cols);
+                for i in ib..imax {
+                    let r = self.row(i);
+                    for j in jb..jmax {
+                        out.data[j * self.rows + i] = r[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The unblocked reference transpose (tests cross-check the tiled
+    /// path against it; not used on any hot path).
+    #[doc(hidden)]
+    pub fn transpose_naive(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
             let r = self.row(i);

@@ -28,6 +28,21 @@ fn mat_transpose_roundtrip() {
 }
 
 #[test]
+fn tiled_transpose_equals_naive() {
+    // Shapes straddling the 32-tile boundary in every way: smaller,
+    // exact multiples, one-over, ragged both dims, degenerate vectors.
+    for (rows, cols) in
+        [(1usize, 1usize), (3, 5), (31, 33), (32, 32), (33, 31), (64, 64), (70, 37), (1, 100)]
+    {
+        let m = Mat::from_fn(rows, cols, |i, j| (i * 131 + j * 7) as f64 * 0.25 - 3.0);
+        let tiled = m.transpose();
+        let naive = m.transpose_naive();
+        assert_eq!(tiled.shape(), (cols, rows));
+        assert_eq!(tiled, naive, "mismatch at {rows}x{cols}");
+    }
+}
+
+#[test]
 fn mat_matvec_and_t() {
     let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
     assert_eq!(m.matvec(&[1., 0., -1.]), vec![-2., -2.]);

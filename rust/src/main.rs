@@ -85,6 +85,10 @@ fn app() -> App {
                 ArgSpec::opt("threads", "intra-solve oracle threads (1 = paper-faithful)")
                     .default("1"),
             )
+            .arg(ArgSpec::opt(
+                "simd",
+                "oracle kernel dispatch: auto|scalar|portable (default: $GRPOT_SIMD or auto)",
+            ))
             .arg(ArgSpec::switch(
                 "plan-stats",
                 "also recover the plan and print its statistics",
@@ -147,20 +151,29 @@ fn cmd_solve(m: &grpot::cli::Matches) -> Result<()> {
     let threads = m.get_usize("threads")?;
     let method = Method::parse(m.get("method").unwrap_or("fast"))?;
     method.ensure_available()?;
+    // An explicit --simd wins over GRPOT_SIMD (resolve gives forced
+    // modes priority); absent flag, Auto defers to the env var.
+    let simd = match m.get("simd") {
+        Some(v) => grpot::simd::SimdMode::parse(v).context("--simd")?,
+        None => grpot::simd::SimdMode::Auto,
+    };
+    let dispatch = grpot::simd::Dispatch::resolve(simd);
     eprintln!("dataset: {}", registry::describe(&spec));
     let pair = registry::build_pair(&spec)?;
     let prob = OtProblem::from_dataset(&pair);
     eprintln!(
-        "problem: m={} n={} |L|={} threads={}",
+        "problem: m={} n={} |L|={} threads={} simd={}",
         prob.m(),
         prob.n(),
         prob.groups.num_groups(),
-        threads.max(1)
+        threads.max(1),
+        dispatch.name()
     );
-    let res = sweep::solve_full_threads(&prob, method, gamma, rho, r, 1000, threads);
+    let res = sweep::solve_full_simd(&prob, method, gamma, rho, r, 1000, threads, simd);
     let mut out = Value::obj()
         .set("method", method.name())
         .set("threads", threads.max(1))
+        .set("simd", dispatch.name())
         .set("gamma", gamma)
         .set("rho", rho)
         .set("dual_objective", res.dual_objective)
@@ -424,11 +437,25 @@ fn cmd_info() -> Result<()> {
         "paper: Ida et al., \"Fast Regularized Discrete Optimal Transport \
          with Group-Sparse Regularizers\", AAAI 2023"
     );
+    println!(
+        "simd: {} (GRPOT_SIMD={})",
+        grpot::simd::Dispatch::resolve(grpot::simd::SimdMode::Auto).name(),
+        std::env::var("GRPOT_SIMD").unwrap_or_else(|_| "unset".into())
+    );
     print_runtime_info();
     Ok(())
 }
 
 fn main() {
+    // Validate the SIMD knob once at launch: a malformed GRPOT_SIMD
+    // must be one clear startup error, not a per-request panic inside a
+    // serving-engine worker when the first oracle is constructed.
+    if let Ok(v) = std::env::var("GRPOT_SIMD") {
+        if let Err(e) = grpot::simd::SimdMode::parse(&v) {
+            eprintln!("GRPOT_SIMD: {e}");
+            std::process::exit(2);
+        }
+    }
     let parsed = match app().parse_env() {
         Ok(p) => p,
         Err(e) => {

@@ -21,11 +21,14 @@
 //! `z_{l,j} ≤ τ` — the fact both the dense baseline and the screening
 //! method exploit. Solvers *minimize* the negated dual.
 
+use super::pack::PackedCost;
 use crate::data::DomainPair;
 use crate::groups::GroupStructure;
 use crate::linalg::{self, Mat};
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
+use crate::simd::{Dispatch, SimdMode, LANES};
 use std::ops::Range;
+use std::sync::{Arc, OnceLock};
 
 /// Regularization hyperparameters (experimental-section form).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -132,16 +135,59 @@ pub(crate) fn panel_count(len: usize) -> usize {
 /// walk column `j` of `C` in the inner loop, so row `j` of `cost_t`
 /// keeps that access contiguous. Source samples are in *sorted
 /// (grouped)* order; `groups.perm` maps back to the caller's order.
-#[derive(Clone, Debug)]
 pub struct OtProblem {
     /// Source marginal `a` (length m, sums to 1).
     pub a: Vec<f64>,
     /// Target marginal `b` (length n, sums to 1).
     pub b: Vec<f64>,
-    /// Transposed cost: `cost_t[(j, i)] = c(x_S_i, x_T_j)`, sorted order.
-    pub cost_t: Mat,
+    /// Transposed cost: `cost_t[(j, i)] = c(x_S_i, x_T_j)`, sorted
+    /// order. Private so every mutation goes through
+    /// [`OtProblem::cost_t_mut`], which invalidates the packed-tile
+    /// cache below — a stale pack would silently break the
+    /// byte-equal-across-backends invariant.
+    cost_t: Mat,
     /// Group partition of the (sorted) source samples.
     pub groups: GroupStructure,
+    /// Lazily packed cost tiles over the canonical chunk grid
+    /// ([`fixed_chunk_ranges`]`(n)`) — a pure function of the cost data,
+    /// built on the first vector-dispatch oracle construction and then
+    /// shared by every later oracle on this problem instance, so the
+    /// serving engine's per-dataset cached problem packs once across
+    /// all requests and a sweep packs once across its whole grid.
+    tiles: OnceLock<Arc<PackedCost>>,
+}
+
+impl Clone for OtProblem {
+    fn clone(&self) -> Self {
+        // An already-built tile cache is carried over by `Arc` (tiles
+        // are a pure function of the cost data, which is cloned
+        // bit-identically, and `cost_t` is private — any later
+        // mutation goes through `cost_t_mut`, which drops the clone's
+        // own cache), so cloning never forces a repack.
+        let tiles = OnceLock::new();
+        if let Some(t) = self.tiles.get() {
+            let _ = tiles.set(Arc::clone(t));
+        }
+        OtProblem {
+            a: self.a.clone(),
+            b: self.b.clone(),
+            cost_t: self.cost_t.clone(),
+            groups: self.groups.clone(),
+            tiles,
+        }
+    }
+}
+
+impl std::fmt::Debug for OtProblem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OtProblem")
+            .field("a", &self.a)
+            .field("b", &self.b)
+            .field("cost_t", &self.cost_t)
+            .field("groups", &self.groups)
+            .field("tiles_packed", &self.tiles.get().is_some())
+            .finish()
+    }
 }
 
 impl OtProblem {
@@ -164,6 +210,7 @@ impl OtProblem {
             b: vec![1.0 / n as f64; n],
             cost_t: cost.transpose(),
             groups,
+            tiles: OnceLock::new(),
         }
     }
 
@@ -184,7 +231,7 @@ impl OtProblem {
             }
         }
         let a_perm = groups.permute(&a);
-        OtProblem { a: a_perm, b, cost_t, groups }
+        OtProblem { a: a_perm, b, cost_t, groups, tiles: OnceLock::new() }
     }
 
     #[inline]
@@ -207,12 +254,64 @@ impl OtProblem {
     pub fn cost(&self) -> Mat {
         self.cost_t.transpose()
     }
+
+    /// The transposed (`n×m`) cost matrix — row `j` is column `j` of
+    /// the cost, the slice the oracle inner loops walk.
+    #[inline]
+    pub fn cost_t(&self) -> &Mat {
+        &self.cost_t
+    }
+
+    /// Mutable access to the transposed cost. Drops the packed-tile
+    /// cache, so the next vector-dispatch oracle repacks from the
+    /// edited costs instead of reading stale tiles.
+    pub fn cost_t_mut(&mut self) -> &mut Mat {
+        self.tiles.take();
+        &mut self.cost_t
+    }
+
+    /// The packed cost tiles over the canonical chunk grid, built on
+    /// first use and shared (O(1) `Arc` clone) by every vector-dispatch
+    /// oracle constructed on this problem instance afterwards.
+    pub(crate) fn packed_cost(&self) -> Arc<PackedCost> {
+        Arc::clone(
+            self.tiles
+                .get_or_init(|| Arc::new(PackedCost::pack(self, &fixed_chunk_ranges(self.n())))),
+        )
+    }
+}
+
+/// The resolved SIMD backend plus the packed cost tiles the vector
+/// kernels read — built once per oracle (next to its solve-lifetime
+/// [`ParallelCtx`]) and shared by every evaluation and snapshot refresh.
+/// Scalar dispatch packs nothing: the original kernels keep reading
+/// `cost_t` rows, and the memory cost of the tiles (≈ one extra m×n
+/// `f64` copy) is only paid when a vector backend will actually use
+/// them.
+pub(crate) struct SimdEngine {
+    pub(crate) dispatch: Dispatch,
+    /// `Some` iff `dispatch.is_vector()` — a shared handle on the
+    /// problem's lazily-packed tile cache ([`OtProblem::packed_cost`]),
+    /// so repeated oracle constructions on one problem never repack.
+    pub(crate) pack: Option<Arc<PackedCost>>,
+}
+
+impl SimdEngine {
+    /// The tiles are laid out over the canonical grid
+    /// ([`fixed_chunk_ranges`]`(n)`) — the exact grid every oracle
+    /// evaluates over (there is deliberately no way to hand this
+    /// engine a different grid, which would silently misalign tiles).
+    pub(crate) fn new(prob: &OtProblem, mode: SimdMode) -> SimdEngine {
+        let dispatch = Dispatch::resolve(mode);
+        let pack = dispatch.is_vector().then(|| prob.packed_cost());
+        SimdEngine { dispatch, pack }
+    }
 }
 
 /// Counters shared by all oracles. A "group gradient computation" is one
 /// evaluation of `∇ψ(·)_[l]` for a single `(l, j)` — the unit the paper
 /// counts in Figures 6 and C.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct OracleStats {
     /// Number of `eval` calls (function+gradient evaluations).
     pub evals: u64,
@@ -344,6 +443,9 @@ pub struct ColChunkScratch {
     pub(crate) psi_col: Vec<f64>,
     /// [`group_grad_contrib`] scratch (max group size).
     pub(crate) group: Vec<f64>,
+    /// Quad-kernel scratch: `[i][lane]`-interleaved `[f]₊` staging for
+    /// [`crate::simd::group_quad_contrib`] (`LANES ×` max group size).
+    pub(crate) quad: Vec<f64>,
     /// Partial `Σ ψ` over this chunk's (l, j) pairs.
     pub(crate) psi: f64,
     pub(crate) grads: u64,
@@ -359,6 +461,7 @@ impl ColChunkScratch {
             col_mass: vec![0.0; max_cols],
             psi_col: vec![0.0; max_cols],
             group: vec![0.0; max_group],
+            quad: vec![0.0; LANES * max_group],
             psi: 0.0,
             grads: 0,
             skipped: 0,
@@ -379,16 +482,21 @@ impl ColChunkScratch {
     /// only dirtied when a gradient was actually computed, so a chunk
     /// whose previous eval computed nothing skips the O(m + cols)
     /// re-zero — the screened sparse regime keeps its cheap per-eval
-    /// floor.
-    pub(crate) fn reset(&mut self) {
+    /// floor. The per-column buffers are re-zeroed only over the active
+    /// prefix `cols` (this chunk's column count): a slot only ever
+    /// serves its one fixed chunk, so entries past its `cols` — present
+    /// because slots are sized for the longest chunk — can never have
+    /// been dirtied.
+    pub(crate) fn reset(&mut self, cols: usize) {
+        debug_assert!(cols <= self.col_mass.len());
         if self.grads > 0 {
             for v in self.grad_alpha.iter_mut() {
                 *v = 0.0;
             }
-            for v in self.col_mass.iter_mut() {
+            for v in self.col_mass[..cols].iter_mut() {
                 *v = 0.0;
             }
-            for v in self.psi_col.iter_mut() {
+            for v in self.psi_col[..cols].iter_mut() {
                 *v = 0.0;
             }
         }
@@ -425,7 +533,100 @@ impl ColChunkScratch {
 /// contributions still arrive in ascending column order; for a fixed
 /// column, in ascending group order), and ψ is staged per column, so
 /// the reduction stays deterministic.
+/// When a packed-tile engine is active the same walk runs the quad
+/// kernel over each panel's full quads (lanes = columns, bit-identical
+/// per-lane chains, lane fold in ascending column order — see
+/// [`crate::simd`]) and the scalar kernel over the leftover columns, so
+/// the scalar and vector paths produce byte-equal results.
 pub(crate) fn dense_chunk(
+    prob: &OtProblem,
+    consts: &KernelConsts,
+    alpha: &[f64],
+    beta: &[f64],
+    c: usize,
+    range: Range<usize>,
+    slot: &mut ColChunkScratch,
+    engine: &SimdEngine,
+) {
+    let cols = range.len();
+    slot.reset(cols);
+    match &engine.pack {
+        None => dense_chunk_scalar(prob, consts, alpha, beta, range, slot),
+        Some(pack) => {
+            dense_chunk_vector(prob, consts, alpha, beta, c, range, slot, engine.dispatch, pack)
+        }
+    }
+    slot.fold_psi(cols);
+}
+
+/// One scalar (group, column) pair: run [`group_grad_contrib`] and
+/// stage its ψ / column mass / counter into the chunk scratch. The unit
+/// both walks (dense and screened, scalar and vector-with-fallback)
+/// compose from, so the kernel call is written exactly once.
+#[inline]
+pub(crate) fn scalar_pair(
+    prob: &OtProblem,
+    consts: &KernelConsts,
+    alpha: &[f64],
+    beta: &[f64],
+    j: usize,
+    cols0: usize,
+    group_range: Range<usize>,
+    slot: &mut ColChunkScratch,
+) {
+    let (psi, mass) = group_grad_contrib(
+        alpha,
+        beta[j],
+        prob.cost_t.row(j),
+        group_range,
+        consts,
+        &mut slot.grad_alpha,
+        &mut slot.group,
+    );
+    let col = j - cols0;
+    slot.psi_col[col] += psi;
+    slot.col_mass[col] += mass;
+    slot.grads += 1;
+}
+
+/// One vector (group, quad) unit: [`crate::simd::group_quad_contrib`]
+/// over columns `j0..j0+LANES` against a packed tile, staged like four
+/// [`scalar_pair`] calls in ascending column order.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn quad_pair(
+    dispatch: Dispatch,
+    tile: &[f64],
+    alpha: &[f64],
+    beta: &[f64],
+    j0: usize,
+    cols0: usize,
+    group_range: Range<usize>,
+    consts: &KernelConsts,
+    slot: &mut ColChunkScratch,
+) {
+    let beta4 = [beta[j0], beta[j0 + 1], beta[j0 + 2], beta[j0 + 3]];
+    let (psi4, mass4) = crate::simd::group_quad_contrib(
+        dispatch,
+        alpha,
+        &beta4,
+        tile,
+        group_range,
+        consts,
+        &mut slot.grad_alpha,
+        &mut slot.quad,
+    );
+    let col0 = j0 - cols0;
+    for t in 0..LANES {
+        slot.psi_col[col0 + t] += psi4[t];
+        slot.col_mass[col0 + t] += mass4[t];
+    }
+    slot.grads += LANES as u64;
+}
+
+/// The scalar panel walk — the reference arithmetic every other path
+/// reproduces bitwise.
+fn dense_chunk_scalar(
     prob: &OtProblem,
     consts: &KernelConsts,
     alpha: &[f64],
@@ -433,31 +634,60 @@ pub(crate) fn dense_chunk(
     range: Range<usize>,
     slot: &mut ColChunkScratch,
 ) {
-    slot.reset();
     let num_groups = prob.groups.num_groups();
     let cols0 = range.start;
-    let cols = range.len();
     for panel in panel_ranges(range) {
         for l in 0..num_groups {
             let group_range = prob.groups.range(l);
             for j in panel.clone() {
-                let (psi, mass) = group_grad_contrib(
-                    alpha,
-                    beta[j],
-                    prob.cost_t.row(j),
-                    group_range.clone(),
-                    consts,
-                    &mut slot.grad_alpha,
-                    &mut slot.group,
-                );
-                let col = j - cols0;
-                slot.psi_col[col] += psi;
-                slot.col_mass[col] += mass;
-                slot.grads += 1;
+                scalar_pair(prob, consts, alpha, beta, j, cols0, group_range.clone(), slot);
             }
         }
     }
-    slot.fold_psi(cols);
+}
+
+/// The lane-vectorized panel walk: full quads through the packed tiles,
+/// leftover columns through the scalar kernel, in the same
+/// (panel, group, ascending column) order as the scalar walk.
+#[allow(clippy::too_many_arguments)]
+fn dense_chunk_vector(
+    prob: &OtProblem,
+    consts: &KernelConsts,
+    alpha: &[f64],
+    beta: &[f64],
+    c: usize,
+    range: Range<usize>,
+    slot: &mut ColChunkScratch,
+    dispatch: Dispatch,
+    pack: &PackedCost,
+) {
+    let num_groups = prob.groups.num_groups();
+    let cols0 = range.start;
+    let first_panel = pack.chunk_first_panel(c);
+    for (p, panel) in panel_ranges(range).enumerate() {
+        let gp = first_panel + p;
+        let quads = pack.quads(gp);
+        for l in 0..num_groups {
+            let group_range = prob.groups.range(l);
+            for q in 0..quads {
+                let j0 = panel.start + q * LANES;
+                quad_pair(
+                    dispatch,
+                    pack.tile(gp, l, q),
+                    alpha,
+                    beta,
+                    j0,
+                    cols0,
+                    group_range.clone(),
+                    consts,
+                    slot,
+                );
+            }
+            for j in (panel.start + quads * LANES)..panel.end {
+                scalar_pair(prob, consts, alpha, beta, j, cols0, group_range.clone(), slot);
+            }
+        }
+    }
 }
 
 /// Combine per-chunk partials into the shared gradient **in ascending
@@ -497,6 +727,7 @@ pub(crate) fn reduce_chunks(
 
 /// Shared dense evaluation over caller-provided chunking/scratch — the
 /// zero-alloc entry used by [`crate::ot::origin::OriginOracle`].
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn eval_dense_with(
     prob: &OtProblem,
     consts: &KernelConsts,
@@ -505,11 +736,12 @@ pub(crate) fn eval_dense_with(
     ctx: &ParallelCtx,
     ranges: &[Range<usize>],
     slots: &mut [ColChunkScratch],
+    engine: &SimdEngine,
 ) -> (f64, u64) {
     let (alpha, beta) = dense_prolog(prob, x, grad);
     let (grad_alpha, grad_beta) = grad.split_at_mut(prob.m());
-    ctx.map_chunks(ranges, slots, |_, range, slot| {
-        dense_chunk(prob, consts, alpha, beta, range, slot);
+    ctx.map_chunks(ranges, slots, |c, range, slot| {
+        dense_chunk(prob, consts, alpha, beta, c, range, slot, engine);
     });
     dense_epilog(prob, alpha, beta, ranges, slots, grad_alpha, grad_beta)
 }
@@ -585,13 +817,27 @@ pub fn eval_dense_threads(
 pub struct DenseEvalScratch {
     ranges: Vec<Range<usize>>,
     slots: Vec<ColChunkScratch>,
+    engine: SimdEngine,
 }
 
 impl DenseEvalScratch {
+    /// Auto SIMD policy (runtime-dispatched; `GRPOT_SIMD` overrides).
     pub fn new(prob: &OtProblem) -> Self {
+        Self::with_simd(prob, SimdMode::Auto)
+    }
+
+    /// Explicit SIMD policy — `SimdMode::Scalar` forces the reference
+    /// scalar kernels (and skips packing the cost tiles).
+    pub fn with_simd(prob: &OtProblem, simd: SimdMode) -> Self {
         let ranges = fixed_chunk_ranges(prob.n());
         let slots = ColChunkScratch::slots_for(prob, &ranges);
-        DenseEvalScratch { ranges, slots }
+        let engine = SimdEngine::new(prob, simd);
+        DenseEvalScratch { ranges, slots, engine }
+    }
+
+    /// The backend this scratch's evaluations run.
+    pub fn dispatch(&self) -> Dispatch {
+        self.engine.dispatch
     }
 }
 
@@ -607,7 +853,16 @@ pub fn eval_dense_reusing(
     scratch: &mut DenseEvalScratch,
 ) -> (f64, u64) {
     let consts = KernelConsts::new(params);
-    eval_dense_with(prob, &consts, x, grad, ctx, &scratch.ranges, &mut scratch.slots)
+    eval_dense_with(
+        prob,
+        &consts,
+        x,
+        grad,
+        ctx,
+        &scratch.ranges,
+        &mut scratch.slots,
+        &scratch.engine,
+    )
 }
 
 /// [`eval_dense_reusing`] dispatched through the one-shot scoped
@@ -627,12 +882,13 @@ pub fn eval_dense_forkjoin(
     let consts = KernelConsts::new(params);
     let (alpha, beta) = dense_prolog(prob, x, grad);
     let (grad_alpha, grad_beta) = grad.split_at_mut(prob.m());
+    let engine = &scratch.engine;
     crate::pool::forkjoin_map_chunks(
         threads,
         &scratch.ranges,
         &mut scratch.slots,
-        |_, range, slot| {
-            dense_chunk(prob, &consts, alpha, beta, range, slot);
+        |c, range, slot| {
+            dense_chunk(prob, &consts, alpha, beta, c, range, slot, engine);
         },
     );
     dense_epilog(prob, alpha, beta, &scratch.ranges, &scratch.slots, grad_alpha, grad_beta)
@@ -647,6 +903,7 @@ pub fn dual_objective(prob: &OtProblem, params: &DualParams, x: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pool::fixed_chunk_len;
     use crate::rng::Pcg64;
 
     fn toy_problem() -> OtProblem {
@@ -835,6 +1092,132 @@ mod tests {
             assert_eq!(f, f_ref);
             assert_eq!(g, g_ref);
             assert_eq!(n, n_ref);
+        }
+    }
+
+    #[test]
+    fn packed_cost_is_cached_per_problem_instance() {
+        let p = toy_problem();
+        let first = p.packed_cost();
+        let again = p.packed_cost();
+        assert!(Arc::ptr_eq(&first, &again), "second access must reuse the cached pack");
+        // A clone shares the already-built pack (identical cost data).
+        let cloned = p.clone();
+        let theirs = cloned.packed_cost();
+        assert!(Arc::ptr_eq(&first, &theirs), "clone must not repack");
+        // A clone taken before the first pack builds its own lazily.
+        let fresh_clone = toy_problem().clone();
+        let built = fresh_clone.packed_cost();
+        assert!(!Arc::ptr_eq(&first, &built));
+    }
+
+    #[test]
+    fn cost_mutation_invalidates_tile_cache() {
+        let mut p = toy_problem();
+        let before = p.packed_cost();
+        // Mutating a clone's costs drops only the clone's cache.
+        let mut cloned = p.clone();
+        cloned.cost_t_mut()[(0, 0)] += 0.5;
+        assert!(!Arc::ptr_eq(&before, &cloned.packed_cost()), "clone must repack");
+        assert!(Arc::ptr_eq(&before, &p.packed_cost()), "original keeps its pack");
+        p.cost_t_mut()[(0, 0)] += 0.5;
+        let after = p.packed_cost();
+        assert!(!Arc::ptr_eq(&before, &after), "mutation must force a repack");
+    }
+
+    #[test]
+    fn reset_clamps_to_active_prefix() {
+        // A slot sized for the longest chunk but serving a short final
+        // chunk must only re-zero the active prefix; entries past it
+        // are never dirtied by the walk, so the clamp loses nothing.
+        let mut s = ColChunkScratch::new(4, 8, 3);
+        s.grads = 1;
+        s.col_mass[2] = 1.0;
+        s.psi_col[3] = 2.0;
+        // Simulate the untouched (never-dirtied) tail staying as-is.
+        s.col_mass[6] = 0.0;
+        s.reset(4);
+        assert!(s.col_mass[..4].iter().all(|&v| v == 0.0));
+        assert!(s.psi_col[..4].iter().all(|&v| v == 0.0));
+        assert_eq!(s.grads, 0);
+        assert_eq!(s.psi, 0.0);
+    }
+
+    /// Short-final-chunk regression for the clamped reset: a problem
+    /// whose fixed grid ends in a chunk shorter than the slot's
+    /// capacity must stay byte-stable across repeated evaluations on
+    /// reused scratch.
+    #[test]
+    fn short_final_chunk_reuse_is_byte_stable() {
+        let mut rng = Pcg64::new(0x19);
+        // n = 19 ⇒ chunks [0, 16) and [16, 19): the final chunk uses 3
+        // of its 16 slot columns.
+        let m = 6;
+        let n = 19;
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+        let p = OtProblem::from_parts(
+            vec![1.0 / m as f64; m],
+            vec![1.0 / n as f64; n],
+            &cost,
+            &[0, 0, 1, 1, 2, 2],
+        );
+        assert!(fixed_chunk_ranges(p.n()).last().unwrap().len() < fixed_chunk_len(p.n()));
+        let params = DualParams::new(0.6, 0.4);
+        let ctx = ParallelCtx::new(1);
+        let mut scratch = DenseEvalScratch::new(&p);
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..p.dim()).map(|_| rng.uniform(-0.4, 0.6)).collect())
+            .collect();
+        for x in &xs {
+            let mut g_fresh = vec![0.0; p.dim()];
+            let (f_fresh, _) = eval_dense(&p, &params, x, &mut g_fresh);
+            let mut g = vec![0.0; p.dim()];
+            let (f, _) = eval_dense_reusing(&p, &params, x, &mut g, &ctx, &mut scratch);
+            assert_eq!(f.to_bits(), f_fresh.to_bits());
+            assert_eq!(g, g_fresh);
+        }
+    }
+
+    /// The packed-tile vector walk must reproduce the scalar walk
+    /// byte-for-byte — over ragged panels, partial quads and mixed
+    /// group activity, at 1 and 2 threads.
+    #[test]
+    fn simd_dense_eval_matches_scalar_bitwise() {
+        let mut rng = Pcg64::new(0x51D2);
+        let m = 10; // groups of 3, 3, 4
+        let n = 19; // ragged panels + short final chunk
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+        let p = OtProblem::from_parts(
+            vec![1.0 / m as f64; m],
+            vec![1.0 / n as f64; n],
+            &cost,
+            &[0, 0, 0, 1, 1, 1, 2, 2, 2, 2],
+        );
+        for params in [DualParams::new(0.6, 0.4), DualParams::new(5.0, 0.8)] {
+            for _ in 0..4 {
+                let x: Vec<f64> = (0..p.dim()).map(|_| rng.uniform(-0.4, 0.6)).collect();
+                let mut g_ref = vec![0.0; p.dim()];
+                let mut scalar = DenseEvalScratch::with_simd(&p, SimdMode::Scalar);
+                let ctx1 = ParallelCtx::new(1);
+                let (f_ref, n_ref) =
+                    eval_dense_reusing(&p, &params, &x, &mut g_ref, &ctx1, &mut scalar);
+                for mode in [SimdMode::Auto, SimdMode::Portable] {
+                    for threads in [1usize, 2] {
+                        let ctx = ParallelCtx::new(threads);
+                        let mut scratch = DenseEvalScratch::with_simd(&p, mode);
+                        let mut g = vec![0.0; p.dim()];
+                        let (f, ng) =
+                            eval_dense_reusing(&p, &params, &x, &mut g, &ctx, &mut scratch);
+                        assert_eq!(
+                            f.to_bits(),
+                            f_ref.to_bits(),
+                            "objective {mode:?} threads={threads}"
+                        );
+                        assert_eq!(g, g_ref, "gradient {mode:?} threads={threads}");
+                        assert_eq!(ng, n_ref, "grad count {mode:?} threads={threads}");
+                    }
+                }
+            }
         }
     }
 

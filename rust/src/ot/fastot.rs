@@ -9,6 +9,7 @@
 use super::dual::{DualOracle, DualParams, OracleStats, OtProblem};
 use super::screening::ScreeningOracle;
 use crate::pool::ParallelCtx;
+use crate::simd::SimdMode;
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
 use crate::solvers::{StepStatus, StopReason};
 use std::time::Instant;
@@ -35,6 +36,14 @@ pub struct FastOtConfig {
     /// [`crate::ot::origin::solve_origin_ctx`] instead, which this
     /// field then defers to.
     pub threads: usize,
+    /// SIMD policy for the oracle kernels: `Auto` (default) runtime-
+    /// dispatches to AVX2 when the CPU supports it (portable lane
+    /// mirror otherwise); `Scalar` forces the reference scalar kernels.
+    /// Results are byte-equal either way (`tests/simd_equivalence.rs`);
+    /// only the wall clock moves. The `GRPOT_SIMD` environment
+    /// variable, when set, replaces the `Auto` default; an explicit
+    /// `Scalar`/`Portable` here wins over the env var.
+    pub simd: SimdMode,
     /// Inner solver options.
     pub lbfgs: LbfgsOptions,
 }
@@ -47,6 +56,7 @@ impl Default for FastOtConfig {
             r: 10,
             use_working_set: true,
             threads: 1,
+            simd: SimdMode::Auto,
             lbfgs: LbfgsOptions::default(),
         }
     }
@@ -167,8 +177,13 @@ pub fn solve_fast_ot_ctx(
     x0: Vec<f64>,
     ctx: &ParallelCtx,
 ) -> FastOtResult {
-    let mut oracle =
-        ScreeningOracle::with_ctx(prob, cfg.params(), cfg.use_working_set, ctx.clone());
+    let mut oracle = ScreeningOracle::with_ctx_simd(
+        prob,
+        cfg.params(),
+        cfg.use_working_set,
+        ctx.clone(),
+        cfg.simd,
+    );
     let label = if cfg.use_working_set { "fast" } else { "fast-nows" };
     drive_from(prob, cfg, &mut oracle, label, x0)
 }
@@ -192,8 +207,13 @@ pub fn solve_fast_ot_traced(
     cfg: &FastOtConfig,
 ) -> (FastOtResult, Vec<IterationTrace>) {
     let start = Instant::now();
-    let mut oracle =
-        ScreeningOracle::with_threads(prob, cfg.params(), cfg.use_working_set, cfg.threads);
+    let mut oracle = ScreeningOracle::with_ctx_simd(
+        prob,
+        cfg.params(),
+        cfg.use_working_set,
+        ParallelCtx::new(cfg.threads),
+        cfg.simd,
+    );
     let x0 = vec![0.0; prob.dim()];
     let mut solver = Lbfgs::new(x0, cfg.lbfgs.clone(), &mut oracle);
     let mut traces = Vec::new();

@@ -13,11 +13,14 @@
 //!   gradient).
 //! * [`emd`] — exact LP optimal transport via network simplex.
 //! * [`semidual`] — the semi-dual group-sparse formulation (extension).
+//! * [`pack`] — packed cost tiles for the SIMD column-lane kernels
+//!   ([`crate::simd`]).
 
 pub mod dual;
 pub mod emd;
 pub mod fastot;
 pub mod origin;
+pub mod pack;
 pub mod plan;
 pub mod screening;
 pub mod semidual;

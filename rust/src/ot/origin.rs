@@ -4,9 +4,10 @@
 
 use super::dual::{
     eval_dense_with, ColChunkScratch, DualOracle, DualParams, KernelConsts, OracleStats,
-    OtProblem,
+    OtProblem, SimdEngine,
 };
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
+use crate::simd::{Dispatch, SimdMode};
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
 use std::ops::Range;
 
@@ -23,6 +24,9 @@ pub struct OriginOracle<'a> {
     ctx: ParallelCtx,
     ranges: Vec<Range<usize>>,
     slots: Vec<ColChunkScratch>,
+    /// SIMD backend + packed cost tiles, resolved/packed once at
+    /// construction and reused by every evaluation.
+    engine: SimdEngine,
 }
 
 impl<'a> OriginOracle<'a> {
@@ -38,11 +42,25 @@ impl<'a> OriginOracle<'a> {
 
     /// Create over a caller-provided parallel context (the serving
     /// engine's per-worker long-lived ctx; clones share its parked
-    /// worker set).
+    /// worker set). SIMD policy is `Auto` (runtime-dispatched;
+    /// `GRPOT_SIMD` overrides).
     pub fn with_ctx(prob: &'a OtProblem, params: DualParams, ctx: ParallelCtx) -> Self {
+        Self::with_ctx_simd(prob, params, ctx, SimdMode::Auto)
+    }
+
+    /// [`OriginOracle::with_ctx`] with an explicit SIMD policy —
+    /// `SimdMode::Scalar` forces the reference scalar kernels. Scalar
+    /// and vector backends return byte-equal results either way.
+    pub fn with_ctx_simd(
+        prob: &'a OtProblem,
+        params: DualParams,
+        ctx: ParallelCtx,
+        simd: SimdMode,
+    ) -> Self {
         params.validate();
         let ranges = fixed_chunk_ranges(prob.n());
         let slots = ColChunkScratch::slots_for(prob, &ranges);
+        let engine = SimdEngine::new(prob, simd);
         OriginOracle {
             prob,
             consts: KernelConsts::new(&params),
@@ -51,11 +69,27 @@ impl<'a> OriginOracle<'a> {
             ctx,
             ranges,
             slots,
+            engine,
         }
+    }
+
+    /// Convenience: fresh ctx + explicit SIMD policy (benches/tests).
+    pub fn with_simd(
+        prob: &'a OtProblem,
+        params: DualParams,
+        threads: usize,
+        simd: SimdMode,
+    ) -> Self {
+        Self::with_ctx_simd(prob, params, ParallelCtx::new(threads), simd)
     }
 
     pub fn params(&self) -> &DualParams {
         &self.params
+    }
+
+    /// The SIMD backend this oracle's evaluations run.
+    pub fn dispatch(&self) -> Dispatch {
+        self.engine.dispatch
     }
 }
 
@@ -73,6 +107,7 @@ impl DualOracle for OriginOracle<'_> {
             &self.ctx,
             &self.ranges,
             &mut self.slots,
+            &self.engine,
         );
         self.stats.grads_computed += grads;
         self.stats.record_eval(grads);
@@ -91,8 +126,12 @@ pub fn solve_origin(
     prob: &OtProblem,
     cfg: &crate::ot::fastot::FastOtConfig,
 ) -> crate::ot::fastot::FastOtResult {
-    let mut oracle =
-        OriginOracle::with_threads(prob, DualParams::new(cfg.gamma, cfg.rho), cfg.threads);
+    let mut oracle = OriginOracle::with_ctx_simd(
+        prob,
+        DualParams::new(cfg.gamma, cfg.rho),
+        ParallelCtx::new(cfg.threads),
+        cfg.simd,
+    );
     crate::ot::fastot::drive(prob, cfg, &mut oracle, "origin")
 }
 
@@ -113,8 +152,8 @@ pub fn solve_origin_ctx(
     x0: Vec<f64>,
     ctx: &ParallelCtx,
 ) -> crate::ot::fastot::FastOtResult {
-    let mut oracle =
-        OriginOracle::with_ctx(prob, DualParams::new(cfg.gamma, cfg.rho), ctx.clone());
+    let params = DualParams::new(cfg.gamma, cfg.rho);
+    let mut oracle = OriginOracle::with_ctx_simd(prob, params, ctx.clone(), cfg.simd);
     crate::ot::fastot::drive_from(prob, cfg, &mut oracle, "origin", x0)
 }
 

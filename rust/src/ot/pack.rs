@@ -1,0 +1,192 @@
+//! Packed cost tiles for the lane-vectorized oracle kernels.
+//!
+//! The scalar kernels read column `j` of the cost matrix as row `j` of
+//! the transposed `cost_t`, so a quad kernel over 4 columns would need
+//! 4 strided row gathers per `i`. [`PackedCost`] re-lays `cost_t` into
+//! per-(panel, group, quad) tiles interleaved `[i][lane]`, so the
+//! vector kernels do one unit-stride load per `i` instead. The pack is
+//! built lazily **once per problem instance**
+//! (`OtProblem::packed_cost`) and `Arc`-shared by every vector-dispatch
+//! oracle constructed on it afterwards — amortized over every L-BFGS
+//! iteration, warm-started re-solve, sweep grid point and serving
+//! request touching the same cached dataset; its memory cost is at
+//! most one extra `m × n` `f64` copy.
+//!
+//! Layout. Columns follow the fixed chunk grid
+//! ([`crate::pool::fixed_chunk_ranges`]) split into panels of
+//! `PANEL_COLS` columns ([`panel_ranges`]); each panel contributes
+//! `⌊panel_len / LANES⌋` full quads (leftover columns stay on the
+//! scalar kernel and read `cost_t` directly). Within one panel the data
+//! is ordered group-major:
+//!
+//! ```text
+//! tile(panel, l, q)[k·LANES + t] = cost_t[(j₀(panel) + q·LANES + t, offsets[l] + k)]
+//! ```
+//!
+//! i.e. groups ascending, quads ascending inside a group, then `i`
+//! ascending with the quad's [`LANES`] columns interleaved — matching
+//! the kernel walk (panel → group → quad) so tile reads are sequential.
+
+use super::dual::{panel_ranges, OtProblem};
+use crate::simd::LANES;
+use std::ops::Range;
+
+/// The packed, quad-interleaved copy of a problem's cost matrix over a
+/// fixed chunk grid. Immutable after construction; shared by every
+/// evaluation and snapshot refresh of the owning oracle.
+pub struct PackedCost {
+    data: Vec<f64>,
+    /// Global panel index → offset of the panel's first tile in `data`.
+    panel_base: Vec<usize>,
+    /// Global panel index → number of full quads in the panel.
+    panel_quads: Vec<usize>,
+    /// Chunk index → global index of the chunk's first panel.
+    chunk_panel_off: Vec<usize>,
+    /// Group start offsets (`groups.offsets` prefix), cached so tile
+    /// lookup needs no `&GroupStructure`.
+    group_offsets: Vec<usize>,
+}
+
+impl PackedCost {
+    /// Pack `prob.cost_t` over the chunk grid `ranges` (the same grid
+    /// the owning oracle evaluates over — panel boundaries are a
+    /// function of the grid alone, so the tiles line up with the walk
+    /// at every thread count).
+    pub fn pack(prob: &OtProblem, ranges: &[Range<usize>]) -> PackedCost {
+        let m = prob.m();
+        let groups = &prob.groups;
+        let mut panel_base = Vec::new();
+        let mut panel_quads = Vec::new();
+        let mut chunk_panel_off = Vec::with_capacity(ranges.len());
+        let mut total = 0usize;
+        for range in ranges {
+            chunk_panel_off.push(panel_base.len());
+            for panel in panel_ranges(range.clone()) {
+                let quads = panel.len() / LANES;
+                panel_base.push(total);
+                panel_quads.push(quads);
+                total += quads * LANES * m;
+            }
+        }
+        let mut data = Vec::with_capacity(total);
+        for range in ranges {
+            for panel in panel_ranges(range.clone()) {
+                let quads = panel.len() / LANES;
+                for l in 0..groups.num_groups() {
+                    for q in 0..quads {
+                        let j0 = panel.start + q * LANES;
+                        for i in groups.range(l) {
+                            for t in 0..LANES {
+                                data.push(prob.cost_t()[(j0 + t, i)]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(data.len(), total);
+        PackedCost {
+            data,
+            panel_base,
+            panel_quads,
+            chunk_panel_off,
+            group_offsets: groups.offsets.clone(),
+        }
+    }
+
+    /// Global index of chunk `c`'s first panel.
+    #[inline]
+    pub fn chunk_first_panel(&self, c: usize) -> usize {
+        self.chunk_panel_off[c]
+    }
+
+    /// Full quads in global panel `gp` (leftover columns are scalar).
+    #[inline]
+    pub fn quads(&self, gp: usize) -> usize {
+        self.panel_quads[gp]
+    }
+
+    /// The `[i][lane]`-interleaved tile of (global panel `gp`, group
+    /// `l`, quad `q`): `LANES · g_l` values, unit stride.
+    #[inline]
+    pub fn tile(&self, gp: usize, l: usize, q: usize) -> &[f64] {
+        let quads = self.panel_quads[gp];
+        debug_assert!(q < quads);
+        let g = self.group_offsets[l + 1] - self.group_offsets[l];
+        let off =
+            self.panel_base[gp] + LANES * (self.group_offsets[l] * quads + q * g);
+        &self.data[off..off + LANES * g]
+    }
+
+    /// Bytes held by the packed copy (diagnostics; ≈ `8·m·n` when every
+    /// panel is quad-aligned).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::pool::fixed_chunk_ranges;
+    use crate::rng::Pcg64;
+
+    fn random_problem(seed: u64, l: usize, g: usize, n: usize) -> OtProblem {
+        let mut rng = Pcg64::new(seed);
+        let m = l * g;
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+        let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+        OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+    }
+
+    /// Every tile entry must equal the corresponding `cost_t` entry —
+    /// exhaustively, over ragged panels (n not a multiple of
+    /// `PANEL_COLS`) and non-uniform groups.
+    #[test]
+    fn tiles_mirror_cost_t() {
+        for (l, g, n) in [(3usize, 4usize, 19usize), (2, 3, 8), (5, 2, 37), (1, 6, 4)] {
+            let prob = random_problem(0xAC4 + n as u64, l, g, n);
+            let ranges = fixed_chunk_ranges(prob.n());
+            let pack = PackedCost::pack(&prob, &ranges);
+            for (c, range) in ranges.iter().enumerate() {
+                for (p, panel) in panel_ranges(range.clone()).enumerate() {
+                    let gp = pack.chunk_first_panel(c) + p;
+                    assert_eq!(pack.quads(gp), panel.len() / LANES);
+                    for li in 0..prob.groups.num_groups() {
+                        let grange = prob.groups.range(li);
+                        for q in 0..pack.quads(gp) {
+                            let tile = pack.tile(gp, li, q);
+                            assert_eq!(tile.len(), LANES * grange.len());
+                            let j0 = panel.start + q * LANES;
+                            for (k, i) in grange.clone().enumerate() {
+                                for t in 0..LANES {
+                                    assert_eq!(
+                                        tile[k * LANES + t].to_bits(),
+                                        prob.cost_t()[(j0 + t, i)].to_bits(),
+                                        "tile ({gp},{li},{q}) k={k} t={t}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memory_cost_is_at_most_one_cost_copy() {
+        let prob = random_problem(9, 4, 5, 40);
+        let pack = PackedCost::pack(&prob, &fixed_chunk_ranges(prob.n()));
+        assert!(pack.bytes() <= prob.m() * prob.n() * std::mem::size_of::<f64>());
+    }
+
+    #[test]
+    fn panels_shorter_than_a_quad_pack_nothing() {
+        let prob = random_problem(11, 2, 2, 3); // n=3 < LANES
+        let pack = PackedCost::pack(&prob, &fixed_chunk_ranges(prob.n()));
+        assert_eq!(pack.quads(0), 0);
+        assert_eq!(pack.bytes(), 0);
+    }
+}

@@ -26,7 +26,7 @@ pub fn recover_plan(prob: &OtProblem, params: &DualParams, x: &[f64]) -> Transpo
     let num_groups = prob.groups.num_groups();
     let mut t = Mat::zeros(m, n);
     for j in 0..n {
-        let c_j = prob.cost_t.row(j);
+        let c_j = prob.cost_t().row(j);
         let beta_j = beta[j];
         for l in 0..num_groups {
             let range = prob.groups.range(l);
@@ -58,7 +58,7 @@ impl TransportPlan {
     pub fn transport_cost(&self, prob: &OtProblem) -> f64 {
         let mut s = 0.0;
         for j in 0..prob.n() {
-            let c_j = prob.cost_t.row(j);
+            let c_j = prob.cost_t().row(j);
             for i in 0..prob.m() {
                 s += self.t[(i, j)] * c_j[i];
             }
@@ -265,7 +265,7 @@ mod tests {
         let (alpha, beta) = res.alpha_beta(&prob);
         let mut lhs = 0.0; // ⟨T, α⊕β − C⟩
         for j in 0..prob.n() {
-            let c_j = prob.cost_t.row(j);
+            let c_j = prob.cost_t().row(j);
             for i in 0..prob.m() {
                 lhs += plan.t[(i, j)] * (alpha[i] + beta[j] - c_j[i]);
             }

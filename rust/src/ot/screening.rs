@@ -20,11 +20,12 @@
 //! trajectory is identical (Theorem 2).
 
 use super::dual::{
-    exact_z, group_grad_contrib, panel_count, panel_ranges, reduce_chunks, ColChunkScratch,
-    DualOracle, DualParams, KernelConsts, OracleStats, OtProblem, PANEL_COLS,
+    exact_z, panel_count, panel_ranges, quad_pair, reduce_chunks, scalar_pair, ColChunkScratch,
+    DualOracle, DualParams, KernelConsts, OracleStats, OtProblem, SimdEngine, PANEL_COLS,
 };
 use crate::linalg;
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
+use crate::simd::{snapshot_quad, Dispatch, SimdMode, LANES};
 use std::ops::Range;
 
 /// Split a column-major buffer (`width` values per column) into one
@@ -45,6 +46,43 @@ fn split_lens<T>(buf: &mut [T], lens: impl IntoIterator<Item = usize>) -> Vec<&m
         rest = tail;
     }
     parts
+}
+
+/// One column's snapshot norms (z̃ and, with the working set, k̃/õ) —
+/// the scalar reference loop of `recompute_snapshots`; the vector path
+/// runs it on the columns left over after the full quads.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn snapshot_col_scalar(
+    prob: &OtProblem,
+    snap_alpha: &[f64],
+    beta_j: f64,
+    c_j: &[f64],
+    use_ws: bool,
+    base: usize,
+    z: &mut [f64],
+    k: &mut [f64],
+    o: &mut [f64],
+) {
+    for l in 0..prob.groups.num_groups() {
+        let mut zsq = 0.0;
+        let mut ksq = 0.0;
+        let mut osq = 0.0;
+        for i in prob.groups.range(l) {
+            let f = snap_alpha[i] + beta_j - c_j[i];
+            ksq += f * f;
+            if f > 0.0 {
+                zsq += f * f;
+            } else {
+                osq += f * f;
+            }
+        }
+        z[base + l] = zsq.sqrt();
+        if use_ws {
+            k[base + l] = ksq.sqrt();
+            o[base + l] = osq.sqrt();
+        }
+    }
 }
 
 /// Screening-specific counters are kept in [`OracleStats`]; this struct
@@ -97,6 +135,9 @@ pub struct ScreeningOracle<'a> {
     ctx: ParallelCtx,
     ranges: Vec<Range<usize>>,
     slots: Vec<ColChunkScratch>,
+    /// SIMD backend + packed cost tiles (built once at construction),
+    /// shared by the eval walk and the snapshot refresh.
+    engine: SimdEngine,
     stats: OracleStats,
 }
 
@@ -134,12 +175,27 @@ impl<'a> ScreeningOracle<'a> {
         use_working_set: bool,
         ctx: ParallelCtx,
     ) -> Self {
+        Self::with_ctx_simd(prob, params, use_working_set, ctx, SimdMode::Auto)
+    }
+
+    /// [`ScreeningOracle::with_ctx`] with an explicit SIMD policy —
+    /// `SimdMode::Scalar` forces the reference scalar kernels (and
+    /// skips packing the cost tiles). Every backend returns byte-equal
+    /// gradients, objectives, screening decisions and counters.
+    pub fn with_ctx_simd(
+        prob: &'a OtProblem,
+        params: DualParams,
+        use_working_set: bool,
+        ctx: ParallelCtx,
+        simd: SimdMode,
+    ) -> Self {
         params.validate();
         let m = prob.m();
         let n = prob.n();
         let num_groups = prob.groups.num_groups();
         let ranges = fixed_chunk_ranges(n);
         let slots = ColChunkScratch::slots_for(prob, &ranges);
+        let engine = SimdEngine::new(prob, simd);
         // Fixed panel layout: panel_off[c] is chunk c's first global
         // panel index; a function of the chunk grid (hence of n) alone.
         let mut panel_off = Vec::with_capacity(ranges.len());
@@ -166,14 +222,31 @@ impl<'a> ScreeningOracle<'a> {
             ctx,
             ranges,
             slots,
+            engine,
             stats: OracleStats::default(),
         };
         o.recompute_snapshots();
         o
     }
 
+    /// Convenience: fresh ctx + explicit SIMD policy (benches/tests).
+    pub fn with_simd(
+        prob: &'a OtProblem,
+        params: DualParams,
+        use_working_set: bool,
+        threads: usize,
+        simd: SimdMode,
+    ) -> Self {
+        Self::with_ctx_simd(prob, params, use_working_set, ParallelCtx::new(threads), simd)
+    }
+
     pub fn params(&self) -> &DualParams {
         &self.params
+    }
+
+    /// The SIMD backend this oracle's evaluations run.
+    pub fn dispatch(&self) -> Dispatch {
+        self.engine.dispatch
     }
 
     /// Fraction of (l, j) pairs currently in the working set. O(1):
@@ -227,30 +300,72 @@ impl<'a> ScreeningOracle<'a> {
             .map(|(((z, pmax), k), o)| SnapPart { z, pmax, k, o })
             .collect();
 
-        self.ctx.map_chunks(ranges, &mut parts, |_, range, part| {
+        let engine = &self.engine;
+        self.ctx.map_chunks(ranges, &mut parts, |c, range, part| {
             let start = range.start;
-            for (col, j) in range.clone().enumerate() {
-                let c_j = prob.cost_t.row(j);
-                let beta_j = snap_beta[j];
-                let base = col * num_groups;
-                for l in 0..num_groups {
-                    let mut zsq = 0.0;
-                    let mut ksq = 0.0;
-                    let mut osq = 0.0;
-                    for i in prob.groups.range(l) {
-                        let f = snap_alpha[i] + beta_j - c_j[i];
-                        ksq += f * f;
-                        if f > 0.0 {
-                            zsq += f * f;
-                        } else {
-                            osq += f * f;
+            if let Some(pack) = &engine.pack {
+                // Vector path: full quads via the packed tiles (per-lane
+                // z̃/k̃/õ chains bit-identical to the scalar loop —
+                // [`crate::simd::snapshot_quad`]), leftover columns
+                // scalar. Every entry is an independent pure write, so
+                // the walk order is free.
+                for (p, panel) in panel_ranges(range.clone()).enumerate() {
+                    let gp = pack.chunk_first_panel(c) + p;
+                    let quads = pack.quads(gp);
+                    for l in 0..num_groups {
+                        let grange = prob.groups.range(l);
+                        for q in 0..quads {
+                            let j0 = panel.start + q * LANES;
+                            let beta4 = [
+                                snap_beta[j0],
+                                snap_beta[j0 + 1],
+                                snap_beta[j0 + 2],
+                                snap_beta[j0 + 3],
+                            ];
+                            let (zsq4, ksq4, osq4) = snapshot_quad(
+                                engine.dispatch,
+                                snap_alpha,
+                                &beta4,
+                                pack.tile(gp, l, q),
+                                grange.clone(),
+                            );
+                            for t in 0..LANES {
+                                let base = (j0 + t - start) * num_groups;
+                                part.z[base + l] = zsq4[t].sqrt();
+                                if use_ws {
+                                    part.k[base + l] = ksq4[t].sqrt();
+                                    part.o[base + l] = osq4[t].sqrt();
+                                }
+                            }
                         }
                     }
-                    part.z[base + l] = zsq.sqrt();
-                    if use_ws {
-                        part.k[base + l] = ksq.sqrt();
-                        part.o[base + l] = osq.sqrt();
+                    for j in (panel.start + quads * LANES)..panel.end {
+                        snapshot_col_scalar(
+                            prob,
+                            snap_alpha,
+                            snap_beta[j],
+                            prob.cost_t().row(j),
+                            use_ws,
+                            (j - start) * num_groups,
+                            part.z,
+                            part.k,
+                            part.o,
+                        );
                     }
+                }
+            } else {
+                for (col, j) in range.clone().enumerate() {
+                    snapshot_col_scalar(
+                        prob,
+                        snap_alpha,
+                        snap_beta[j],
+                        prob.cost_t().row(j),
+                        use_ws,
+                        col * num_groups,
+                        part.z,
+                        part.k,
+                        part.o,
+                    );
                 }
             }
             // Per-(panel, group) maxima over the freshly written z̃ —
@@ -362,7 +477,7 @@ impl<'a> ScreeningOracle<'a> {
         let mut out = BoundErrors::default();
         let mut count = 0.0;
         for j in 0..n {
-            let c_j = self.prob.cost_t.row(j);
+            let c_j = self.prob.cost_t().row(j);
             let beta_j = beta[j];
             let db = beta_j - self.snap_beta[j];
             let db_pos = db.max(0.0);
@@ -437,6 +552,7 @@ impl DualOracle for ScreeningOracle<'_> {
         let ws = &self.ws;
         let use_ws = self.use_ws;
         let ranges = &self.ranges;
+        let engine = &self.engine;
 
         // Column chunks evaluate concurrently; per-chunk partials are
         // combined in chunk order below, so the screened gradient is
@@ -461,10 +577,11 @@ impl DualOracle for ScreeningOracle<'_> {
         // 4–6), so every member has z̃ > τ and forces its panel max
         // above τ until the next rebuild replaces both together.
         self.ctx.map_chunks(ranges, &mut self.slots, |c, range, slot| {
-            slot.reset();
             let cols0 = range.start;
             let cols = range.len();
+            slot.reset(cols);
             let mut db_pos = [0.0f64; PANEL_COLS];
+            let mut mask = [false; PANEL_COLS];
             for (p, panel) in panel_ranges(range).enumerate() {
                 let plen = panel.len();
                 let mut db_max = 0.0f64;
@@ -483,9 +600,12 @@ impl DualOracle for ScreeningOracle<'_> {
                         continue;
                     }
                     let group_range = prob.groups.range(l);
+                    // Decision phase (Alg. 2): identical tests and
+                    // counters on every backend — the skip logic never
+                    // depends on the kernel that later runs.
                     for (t, j) in panel.clone().enumerate() {
                         let base = j * num_groups;
-                        let compute = if use_ws && ws[base + l] {
+                        mask[t] = if use_ws && ws[base + l] {
                             // ℕ member: provably nonzero, no check
                             // (Alg. 2 lines 2–4).
                             slot.ws_hits += 1;
@@ -501,20 +621,63 @@ impl DualOracle for ScreeningOracle<'_> {
                                 true
                             }
                         };
-                        if compute {
-                            let (psi, mass) = group_grad_contrib(
-                                alpha,
-                                beta[j],
-                                prob.cost_t.row(j),
-                                group_range.clone(),
+                    }
+                    // Compute phase, ascending column order: a quad
+                    // whose four columns all survived runs the vector
+                    // kernel; a partially-skipped quad falls back to
+                    // the scalar kernel per surviving lane — the
+                    // per-element accumulation order is identical
+                    // either way, so all backends stay byte-equal.
+                    let mut from = 0usize;
+                    if let Some(pack) = &engine.pack {
+                        let gp = pack.chunk_first_panel(c) + p;
+                        let quads = pack.quads(gp);
+                        for q in 0..quads {
+                            let t0 = q * LANES;
+                            let j0 = panel.start + t0;
+                            if mask[t0..t0 + LANES].iter().all(|&v| v) {
+                                quad_pair(
+                                    engine.dispatch,
+                                    pack.tile(gp, l, q),
+                                    alpha,
+                                    beta,
+                                    j0,
+                                    cols0,
+                                    group_range.clone(),
+                                    consts,
+                                    slot,
+                                );
+                            } else {
+                                for t in t0..t0 + LANES {
+                                    if mask[t] {
+                                        scalar_pair(
+                                            prob,
+                                            consts,
+                                            alpha,
+                                            beta,
+                                            panel.start + t,
+                                            cols0,
+                                            group_range.clone(),
+                                            slot,
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        from = quads * LANES;
+                    }
+                    for t in from..plen {
+                        if mask[t] {
+                            scalar_pair(
+                                prob,
                                 consts,
-                                &mut slot.grad_alpha,
-                                &mut slot.group,
+                                alpha,
+                                beta,
+                                panel.start + t,
+                                cols0,
+                                group_range.clone(),
+                                slot,
                             );
-                            let col = j - cols0;
-                            slot.psi_col[col] += psi;
-                            slot.col_mass[col] += mass;
-                            slot.grads += 1;
                         }
                     }
                 }
@@ -590,6 +753,43 @@ mod tests {
                 assert_eq!(f1, f2, "objective mismatch ws={ws} step={step}");
                 assert_eq!(g1, g2, "gradient mismatch ws={ws} step={step}");
             }
+        }
+    }
+
+    /// Oracle-level byte-equality across SIMD backends: eval, refresh
+    /// and every counter must match the scalar reference exactly (the
+    /// solver-level version lives in `tests/simd_equivalence.rs`).
+    #[test]
+    fn simd_backends_match_scalar_screened_oracle() {
+        let prob = random_problem(3, 4, 3, 23);
+        let params = DualParams::new(0.5, 0.6);
+        for ws in [false, true] {
+            let mut scalar = ScreeningOracle::with_simd(&prob, params, ws, 1, SimdMode::Scalar);
+            let mut auto = ScreeningOracle::with_simd(&prob, params, ws, 1, SimdMode::Auto);
+            let mut portable =
+                ScreeningOracle::with_simd(&prob, params, ws, 2, SimdMode::Portable);
+            let mut rng = Pcg64::new(5);
+            let mut x = vec![0.0; prob.dim()];
+            for step in 0..10 {
+                for v in x.iter_mut() {
+                    *v += rng.uniform(-0.2, 0.25);
+                }
+                if step % 3 == 2 {
+                    scalar.refresh(&x);
+                    auto.refresh(&x);
+                    portable.refresh(&x);
+                }
+                let mut g1 = vec![0.0; prob.dim()];
+                let f1 = scalar.eval(&x, &mut g1);
+                for oracle in [&mut auto, &mut portable] {
+                    let mut g = vec![0.0; prob.dim()];
+                    let f = oracle.eval(&x, &mut g);
+                    assert_eq!(f1, f, "objective ws={ws} step={step}");
+                    assert_eq!(g1, g, "gradient ws={ws} step={step}");
+                }
+            }
+            assert_eq!(scalar.stats(), auto.stats(), "stats ws={ws}");
+            assert_eq!(scalar.stats(), portable.stats(), "stats ws={ws}");
         }
     }
 

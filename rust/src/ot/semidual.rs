@@ -23,6 +23,7 @@
 
 use super::dual::{DualOracle, OracleStats, OtProblem};
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
+use crate::simd::{sub_into, Dispatch, SimdMode};
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
 use std::ops::Range;
 
@@ -84,6 +85,10 @@ pub struct SemiDualOracle<'a> {
     ctx: ParallelCtx,
     ranges: Vec<Range<usize>>,
     slots: Vec<SemiChunk>,
+    /// SIMD backend for the `α − c_j` column staging (element-wise, so
+    /// bit-identical on every backend; only the wall clock moves — the
+    /// sort-based water-filling itself stays scalar).
+    dispatch: Dispatch,
     stats: OracleStats,
 }
 
@@ -101,15 +106,33 @@ impl<'a> SemiDualOracle<'a> {
     /// Create over a caller-provided long-lived parallel context: the
     /// inner column problems run on its persistent parked workers, so
     /// repeated solves reuse one worker set instead of forking per
-    /// evaluation.
+    /// evaluation. SIMD policy is `Auto` (`GRPOT_SIMD` overrides).
     pub fn with_ctx(prob: &'a OtProblem, gamma: f64, ctx: ParallelCtx) -> Self {
+        Self::with_ctx_simd(prob, gamma, ctx, SimdMode::Auto)
+    }
+
+    /// [`SemiDualOracle::with_ctx`] with an explicit SIMD policy.
+    pub fn with_ctx_simd(
+        prob: &'a OtProblem,
+        gamma: f64,
+        ctx: ParallelCtx,
+        simd: SimdMode,
+    ) -> Self {
         assert!(gamma > 0.0);
         let m = prob.m();
         let ranges = fixed_chunk_ranges(prob.n());
         let slots = (0..ranges.len())
             .map(|_| SemiChunk { grad: vec![0.0; m], fcol: vec![0.0; m], semid: 0.0 })
             .collect();
-        SemiDualOracle { prob, gamma, ctx, ranges, slots, stats: OracleStats::default() }
+        SemiDualOracle {
+            prob,
+            gamma,
+            ctx,
+            ranges,
+            slots,
+            dispatch: Dispatch::resolve(simd),
+            stats: OracleStats::default(),
+        }
     }
 }
 
@@ -135,16 +158,15 @@ impl DualOracle for SemiDualOracle<'_> {
         // concurrently and partials combine in fixed chunk order.
         let prob = self.prob;
         let gamma = self.gamma;
+        let dispatch = self.dispatch;
         self.ctx.map_chunks(&self.ranges, &mut self.slots, |_, range, slot| {
             slot.semid = 0.0;
             for v in slot.grad.iter_mut() {
                 *v = 0.0;
             }
             for j in range {
-                let c_j = prob.cost_t.row(j);
-                for i in 0..m {
-                    slot.fcol[i] = alpha[i] - c_j[i];
-                }
+                let c_j = prob.cost_t().row(j);
+                sub_into(dispatch, &mut slot.fcol, alpha, c_j);
                 let (t, val) = waterfill(&slot.fcol, gamma, prob.b[j]);
                 slot.semid += val;
                 for (g, &ti) in slot.grad.iter_mut().zip(&t) {
@@ -192,6 +214,19 @@ pub fn solve_semidual_threads(
     solve_semidual_ctx(prob, gamma, opts, &ParallelCtx::new(threads))
 }
 
+/// [`solve_semidual_threads`] with an explicit SIMD policy
+/// (`SimdMode::Scalar` forces the scalar staging loop) — byte-equal
+/// results on every backend; `tests/simd_equivalence.rs` asserts it.
+pub fn solve_semidual_simd(
+    prob: &OtProblem,
+    gamma: f64,
+    opts: &LbfgsOptions,
+    threads: usize,
+    simd: SimdMode,
+) -> SemiDualResult {
+    solve_semidual_ctx_simd(prob, gamma, opts, &ParallelCtx::new(threads), simd)
+}
+
 /// [`solve_semidual`] over a caller-provided long-lived parallel
 /// context — one parked worker set across warm/repeat solves.
 pub fn solve_semidual_ctx(
@@ -200,9 +235,20 @@ pub fn solve_semidual_ctx(
     opts: &LbfgsOptions,
     ctx: &ParallelCtx,
 ) -> SemiDualResult {
+    solve_semidual_ctx_simd(prob, gamma, opts, ctx, SimdMode::Auto)
+}
+
+/// [`solve_semidual_ctx`] with an explicit SIMD policy.
+pub fn solve_semidual_ctx_simd(
+    prob: &OtProblem,
+    gamma: f64,
+    opts: &LbfgsOptions,
+    ctx: &ParallelCtx,
+    simd: SimdMode,
+) -> SemiDualResult {
     let m = prob.m();
     let n = prob.n();
-    let mut oracle = SemiDualOracle::with_ctx(prob, gamma, ctx.clone());
+    let mut oracle = SemiDualOracle::with_ctx_simd(prob, gamma, ctx.clone(), simd);
     let mut solver = Lbfgs::new(vec![0.0; m], opts.clone(), &mut oracle);
     solver.run(&mut oracle);
     let iterations = solver.iterations();
@@ -210,7 +256,7 @@ pub fn solve_semidual_ctx(
     let mut plan = crate::linalg::Mat::zeros(m, n);
     let mut fcol = vec![0.0; m];
     for j in 0..n {
-        let c_j = prob.cost_t.row(j);
+        let c_j = prob.cost_t().row(j);
         for i in 0..m {
             fcol[i] = alpha[i] - c_j[i];
         }

@@ -1,0 +1,271 @@
+//! Lane-vectorized oracle kernels: one generic body per kernel,
+//! instantiated once for the portable mirror and once inside an AVX2
+//! `#[target_feature]` entry, so both backends run the *same* code with
+//! the same per-lane arithmetic.
+//!
+//! Bit-exactness argument (see also the module docs of [`crate::simd`]):
+//! a lane is one column, its `zsq`/`col_mass` accumulators advance over
+//! ascending `i` exactly like the scalar kernel's, and the single
+//! cross-lane fold adds lanes into `grad_alpha[i]` in ascending column
+//! order — the association the scalar panel walk already produces. The
+//! two places the vector path performs an operation the scalar path
+//! *skips* are additions of `+0.0` to accumulators that are provably
+//! never `-0.0` (they start at `+0.0` and only ever gain non-negative
+//! terms), which is a bitwise identity under IEEE-754; everything else
+//! is operation-for-operation identical.
+//!
+//! Scope: the identity holds for all **finite** inputs (every input
+//! the solver can produce — costs are finite by construction and a
+//! non-finite iterate already poisons the objective before any kernel
+//! comparison matters). Under `f = NaN`/`±inf` the snapshot `õ` chain
+//! ([`snapshot_quad`]'s `min`-based `[f]₋`) is the one place scalar
+//! and vector arithmetic can differ, because no single branchless
+//! formulation reproduces the scalar `if f > 0.0` routing for both
+//! `NaN` and `+inf` at once.
+
+use super::lane::{Lanes, Portable4};
+use super::{Dispatch, LANES};
+use crate::ot::dual::KernelConsts;
+use std::ops::Range;
+
+/// ψ and ∇ψ of one group over a quad of [`LANES`] columns — the vector
+/// form of [`crate::ot::dual::group_grad_contrib`].
+///
+/// `tile` is the packed `[i][lane]` cost slice for this (group, quad)
+/// (`4·g` values, unit stride — see [`crate::ot::pack::PackedCost`]);
+/// `beta4` holds the quad's β values in ascending column order; `quad`
+/// is caller scratch of at least `4·g` values. Returns the per-lane
+/// `(ψ, col_mass)` pairs; lane `t`'s values are bit-identical to a
+/// scalar `group_grad_contrib` call for column `j₀ + t`, and
+/// `grad_alpha` receives exactly the bytes the four scalar calls (in
+/// ascending column order) would have produced.
+///
+/// Must not be called with `Dispatch::Scalar` — the scalar path keeps
+/// running the original kernel and never packs tiles.
+pub fn group_quad_contrib(
+    dispatch: Dispatch,
+    alpha: &[f64],
+    beta4: &[f64; LANES],
+    tile: &[f64],
+    range: Range<usize>,
+    consts: &KernelConsts,
+    grad_alpha: &mut [f64],
+    quad: &mut [f64],
+) -> ([f64; LANES], [f64; LANES]) {
+    match dispatch {
+        Dispatch::Scalar => unreachable!("scalar dispatch never reaches the quad kernel"),
+        Dispatch::Portable => {
+            group_quad_generic::<Portable4>(alpha, beta4, tile, range, consts, grad_alpha, quad)
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Dispatch::Avx2` is only constructed after
+        // `is_x86_feature_detected!("avx2")` succeeded (see
+        // `Dispatch::resolve`), so the target-feature entry is valid on
+        // this CPU.
+        Dispatch::Avx2 => unsafe {
+            group_quad_avx2(alpha, beta4, tile, range, consts, grad_alpha, quad)
+        },
+    }
+}
+
+/// Snapshot norms of one group over a quad of [`LANES`] columns — the
+/// vector form of the `recompute_snapshots` inner loop: per-lane
+/// `(Σ[f]₊², Σf², Σ[f]₋²)` chains over ascending `i`, bit-identical to
+/// the scalar chains (the scalar loop's skipped `+0.0` additions are
+/// bitwise no-ops on these non-negative accumulators).
+pub fn snapshot_quad(
+    dispatch: Dispatch,
+    alpha: &[f64],
+    beta4: &[f64; LANES],
+    tile: &[f64],
+    range: Range<usize>,
+) -> ([f64; LANES], [f64; LANES], [f64; LANES]) {
+    match dispatch {
+        Dispatch::Scalar => unreachable!("scalar dispatch never reaches the quad kernel"),
+        Dispatch::Portable => snapshot_quad_generic::<Portable4>(alpha, beta4, tile, range),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `group_quad_contrib`.
+        Dispatch::Avx2 => unsafe { snapshot_quad_avx2(alpha, beta4, tile, range) },
+    }
+}
+
+/// Element-wise `out[i] = a[i] - b[i]` (the semi-dual oracle's column
+/// staging). Bit-identical on every backend — subtraction is a single
+/// IEEE operation per element — so this entry accepts
+/// `Dispatch::Scalar` too.
+pub fn sub_into(dispatch: Dispatch, out: &mut [f64], a: &[f64], b: &[f64]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    match dispatch {
+        Dispatch::Scalar => {
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = x - y;
+            }
+        }
+        Dispatch::Portable => sub_generic::<Portable4>(out, a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `group_quad_contrib`.
+        Dispatch::Avx2 => unsafe { sub_avx2(out, a, b) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn group_quad_avx2(
+    alpha: &[f64],
+    beta4: &[f64; LANES],
+    tile: &[f64],
+    range: Range<usize>,
+    consts: &KernelConsts,
+    grad_alpha: &mut [f64],
+    quad: &mut [f64],
+) -> ([f64; LANES], [f64; LANES]) {
+    group_quad_generic::<super::lane::Avx2>(alpha, beta4, tile, range, consts, grad_alpha, quad)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn snapshot_quad_avx2(
+    alpha: &[f64],
+    beta4: &[f64; LANES],
+    tile: &[f64],
+    range: Range<usize>,
+) -> ([f64; LANES], [f64; LANES], [f64; LANES]) {
+    snapshot_quad_generic::<super::lane::Avx2>(alpha, beta4, tile, range)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sub_avx2(out: &mut [f64], a: &[f64], b: &[f64]) {
+    sub_generic::<super::lane::Avx2>(out, a, b)
+}
+
+/// The generic quad kernel body. `#[inline(always)]` so the AVX2 entry
+/// absorbs it (and the lane methods) under its target feature.
+#[inline(always)]
+fn group_quad_generic<V: Lanes>(
+    alpha: &[f64],
+    beta4: &[f64; LANES],
+    tile: &[f64],
+    range: Range<usize>,
+    consts: &KernelConsts,
+    grad_alpha: &mut [f64],
+    quad: &mut [f64],
+) -> ([f64; LANES], [f64; LANES]) {
+    let start = range.start;
+    let g = range.len();
+    debug_assert_eq!(tile.len(), LANES * g);
+    debug_assert!(quad.len() >= LANES * g);
+    debug_assert!(grad_alpha.len() >= start + g);
+    let beta_v = V::from_array(*beta4);
+    let zero = V::splat(0.0);
+    // Pass 1: per-lane f = α_i + β_j − c_ij, [f]₊ into `quad`, zsq
+    // chains over ascending i — each lane is the scalar pass 1.
+    let mut zsq_v = zero;
+    for k in 0..g {
+        let c4 = V::load(&tile[LANES * k..]);
+        let f = V::splat(alpha[start + k]).add(beta_v).sub(c4);
+        let fp = f.max(zero);
+        fp.store(&mut quad[LANES * k..]);
+        zsq_v = zsq_v.add(fp.mul(fp));
+    }
+    let zsq = zsq_v.to_array();
+    let active: [bool; LANES] = std::array::from_fn(|t| zsq[t] > consts.tau_sq);
+    let n_active = active.iter().filter(|&&a| a).count();
+    let mut psi4 = [0.0; LANES];
+    let mut mass4 = [0.0; LANES];
+    if n_active == 0 {
+        // Every lane is a zero group: the scalar kernel returns (0, 0)
+        // for each and never touches grad_alpha.
+        return (psi4, mass4);
+    }
+    if n_active == LANES {
+        // Pass 2, all lanes active: t = scale·[f]₊ per lane, col_mass
+        // chains per lane over ascending i; the fold into grad_alpha[i]
+        // adds lanes in ascending column order — exactly the scalar
+        // panel walk's association.
+        let mut scale4 = [0.0; LANES];
+        for t in 0..LANES {
+            let z = zsq[t].sqrt();
+            let slack = z - consts.tau;
+            scale4[t] = slack * consts.inv_lq / z;
+            psi4[t] = slack * slack * consts.half_inv_lq;
+        }
+        let scale_v = V::from_array(scale4);
+        let mut mass_v = zero;
+        let mut t4 = [0.0; LANES];
+        for k in 0..g {
+            let tv = scale_v.mul(V::load(&quad[LANES * k..]));
+            mass_v = mass_v.add(tv);
+            tv.store(&mut t4);
+            let ga = &mut grad_alpha[start + k];
+            *ga += t4[0];
+            *ga += t4[1];
+            *ga += t4[2];
+            *ga += t4[3];
+        }
+        mass4 = mass_v.to_array();
+        return (psi4, mass4);
+    }
+    // Mixed activity: scalar pass 2 per active lane, in ascending
+    // column order (inactive lanes contribute nothing, exactly like the
+    // scalar kernel's early return).
+    for t in 0..LANES {
+        if !active[t] {
+            continue;
+        }
+        let z = zsq[t].sqrt();
+        let slack = z - consts.tau;
+        let scale = slack * consts.inv_lq / z;
+        psi4[t] = slack * slack * consts.half_inv_lq;
+        let mut mass = 0.0;
+        for k in 0..g {
+            let tv = scale * quad[LANES * k + t];
+            grad_alpha[start + k] += tv;
+            mass += tv;
+        }
+        mass4[t] = mass;
+    }
+    (psi4, mass4)
+}
+
+#[inline(always)]
+fn snapshot_quad_generic<V: Lanes>(
+    alpha: &[f64],
+    beta4: &[f64; LANES],
+    tile: &[f64],
+    range: Range<usize>,
+) -> ([f64; LANES], [f64; LANES], [f64; LANES]) {
+    let start = range.start;
+    let g = range.len();
+    debug_assert_eq!(tile.len(), LANES * g);
+    let beta_v = V::from_array(*beta4);
+    let zero = V::splat(0.0);
+    let mut zsq = zero;
+    let mut ksq = zero;
+    let mut osq = zero;
+    for k in 0..g {
+        let c4 = V::load(&tile[LANES * k..]);
+        let f = V::splat(alpha[start + k]).add(beta_v).sub(c4);
+        ksq = ksq.add(f.mul(f));
+        let fp = f.max(zero);
+        zsq = zsq.add(fp.mul(fp));
+        let fm = f.min(zero);
+        osq = osq.add(fm.mul(fm));
+    }
+    (zsq.to_array(), ksq.to_array(), osq.to_array())
+}
+
+#[inline(always)]
+fn sub_generic<V: Lanes>(out: &mut [f64], a: &[f64], b: &[f64]) {
+    let n = out.len();
+    let full = n - n % LANES;
+    let mut i = 0;
+    while i < full {
+        V::load(&a[i..]).sub(V::load(&b[i..])).store(&mut out[i..]);
+        i += LANES;
+    }
+    for k in full..n {
+        out[k] = a[k] - b[k];
+    }
+}

@@ -1,0 +1,181 @@
+//! The 4-lane `f64` vector abstraction behind the oracle kernels.
+//!
+//! Two implementations with **identical lane semantics**:
+//!
+//! * [`Portable4`] — plain `[f64; 4]` arithmetic, compiles everywhere;
+//! * [`Avx2`] — `std::arch::x86_64` intrinsics (x86-64 only), reachable
+//!   exclusively through `Dispatch::Avx2`, which is constructed only
+//!   after `is_x86_feature_detected!("avx2")`.
+//!
+//! Per-lane `add`/`sub`/`mul` are IEEE-754 binary operations — the AVX2
+//! `vaddpd`/`vsubpd`/`vmulpd` lanes round exactly like scalar `f64`
+//! ops, so both backends are bit-identical to scalar arithmetic by the
+//! IEEE standard, not by luck. `max`/`min` follow the x86
+//! `MAXPD`/`MINPD` tie rules (ties and NaNs return the **second**
+//! operand), and [`Portable4`] mirrors those rules exactly — with a
+//! `+0.0` second operand this reproduces the scalar kernels'
+//! `if f > 0.0 { f } else { 0.0 }` branch bit-for-bit, including the
+//! `f == -0.0` case (both produce `+0.0`).
+//!
+//! All methods are `#[inline(always)]` so the generic kernels in
+//! [`super::kernel`] collapse into the single `#[target_feature]` entry
+//! function and are code-generated with AVX2 enabled there.
+
+/// 4 × `f64` lane vector. See the module docs for the semantics
+/// contract both implementations satisfy.
+pub(crate) trait Lanes: Copy {
+    fn splat(v: f64) -> Self;
+    fn from_array(a: [f64; 4]) -> Self;
+    /// Load the first 4 elements of `s` (unit stride, may be unaligned).
+    fn load(s: &[f64]) -> Self;
+    /// Store into the first 4 elements of `out`.
+    fn store(self, out: &mut [f64]);
+    fn to_array(self) -> [f64; 4];
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    /// Lane-wise `MAXPD`: `if a > b { a } else { b }` (ties → `b`).
+    fn max(self, o: Self) -> Self;
+    /// Lane-wise `MINPD`: `if a < b { a } else { b }` (ties → `b`).
+    fn min(self, o: Self) -> Self;
+}
+
+/// Portable scalar mirror: a `[f64; 4]` with x86 min/max tie semantics.
+#[derive(Clone, Copy)]
+pub(crate) struct Portable4([f64; 4]);
+
+impl Lanes for Portable4 {
+    #[inline(always)]
+    fn splat(v: f64) -> Self {
+        Portable4([v; 4])
+    }
+
+    #[inline(always)]
+    fn from_array(a: [f64; 4]) -> Self {
+        Portable4(a)
+    }
+
+    #[inline(always)]
+    fn load(s: &[f64]) -> Self {
+        Portable4([s[0], s[1], s[2], s[3]])
+    }
+
+    #[inline(always)]
+    fn store(self, out: &mut [f64]) {
+        out[..4].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    fn to_array(self) -> [f64; 4] {
+        self.0
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        Portable4(std::array::from_fn(|t| self.0[t] + o.0[t]))
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        Portable4(std::array::from_fn(|t| self.0[t] - o.0[t]))
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        Portable4(std::array::from_fn(|t| self.0[t] * o.0[t]))
+    }
+
+    #[inline(always)]
+    fn max(self, o: Self) -> Self {
+        // MAXPD: DEST = SRC1 > SRC2 ? SRC1 : SRC2 (ties/NaN → SRC2).
+        Portable4(std::array::from_fn(|t| if self.0[t] > o.0[t] { self.0[t] } else { o.0[t] }))
+    }
+
+    #[inline(always)]
+    fn min(self, o: Self) -> Self {
+        // MINPD: DEST = SRC1 < SRC2 ? SRC1 : SRC2 (ties/NaN → SRC2).
+        Portable4(std::array::from_fn(|t| if self.0[t] < o.0[t] { self.0[t] } else { o.0[t] }))
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use avx2::Avx2;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::Lanes;
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_loadu_pd, _mm256_max_pd, _mm256_min_pd, _mm256_mul_pd,
+        _mm256_set1_pd, _mm256_storeu_pd, _mm256_sub_pd,
+    };
+
+    /// AVX2-backed lane vector.
+    ///
+    /// SAFETY contract for every method: a value of this type is only
+    /// ever constructed inside the `#[target_feature(enable = "avx2")]`
+    /// kernel entries of [`crate::simd::kernel`], which are themselves
+    /// only called through `Dispatch::Avx2` — a variant produced
+    /// exclusively after `is_x86_feature_detected!("avx2")` succeeded.
+    /// The intrinsics below therefore never execute on a CPU that lacks
+    /// the instructions. Loads/stores use the unaligned forms and the
+    /// callers pass slices of at least 4 elements (debug-asserted), so
+    /// no pointer arithmetic can leave the allocation.
+    #[derive(Clone, Copy)]
+    pub(crate) struct Avx2(__m256d);
+
+    impl Lanes for Avx2 {
+        #[inline(always)]
+        fn splat(v: f64) -> Self {
+            Avx2(unsafe { _mm256_set1_pd(v) })
+        }
+
+        #[inline(always)]
+        fn from_array(a: [f64; 4]) -> Self {
+            Avx2(unsafe { _mm256_loadu_pd(a.as_ptr()) })
+        }
+
+        #[inline(always)]
+        fn load(s: &[f64]) -> Self {
+            debug_assert!(s.len() >= 4);
+            Avx2(unsafe { _mm256_loadu_pd(s.as_ptr()) })
+        }
+
+        #[inline(always)]
+        fn store(self, out: &mut [f64]) {
+            debug_assert!(out.len() >= 4);
+            unsafe { _mm256_storeu_pd(out.as_mut_ptr(), self.0) }
+        }
+
+        #[inline(always)]
+        fn to_array(self) -> [f64; 4] {
+            let mut out = [0.0; 4];
+            unsafe { _mm256_storeu_pd(out.as_mut_ptr(), self.0) }
+            out
+        }
+
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            Avx2(unsafe { _mm256_add_pd(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            Avx2(unsafe { _mm256_sub_pd(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            Avx2(unsafe { _mm256_mul_pd(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn max(self, o: Self) -> Self {
+            Avx2(unsafe { _mm256_max_pd(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn min(self, o: Self) -> Self {
+            Avx2(unsafe { _mm256_min_pd(self.0, o.0) })
+        }
+    }
+}

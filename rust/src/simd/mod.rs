@@ -1,0 +1,354 @@
+//! SIMD column-lane oracle kernels — bit-exact, runtime-dispatched.
+//!
+//! The per-iteration gradient pass runs [`crate::ot::dual::group_grad_contrib`]
+//! over every surviving (group, column) pair; this module makes that
+//! kernel process [`LANES`] **columns** of a cache panel at once. The
+//! key design constraint is that vectorization happens *across column
+//! lanes, never across the `i` reduction*:
+//!
+//! * each lane carries one column's independent `zsq` / `t` / `col_mass`
+//!   chain, accumulated over ascending `i` exactly like the scalar
+//!   kernel — per-lane `add`/`mul`/`max`/`sqrt` are IEEE-754 operations
+//!   identical to their scalar `f64` counterparts, so every lane's
+//!   arithmetic is bit-for-bit the scalar kernel's arithmetic;
+//! * the only cross-lane operation — folding the per-lane `t_{ij}` into
+//!   `grad_alpha[i]` — sums lanes in **ascending column order**, which
+//!   is exactly the association the scalar panel walk produces (column
+//!   `j` is finished before column `j+1` touches the same `grad_alpha`
+//!   entries);
+//! * no FMA contraction anywhere: both paths use plain mul-then-add
+//!   (rustc never contracts `a * b + c`, and the vector backends only
+//!   use `vmulpd`/`vaddpd`, never `vfmadd`).
+//!
+//! Scalar and SIMD paths are therefore byte-equal *by construction*,
+//! and `tests/simd_equivalence.rs` + the `GRPOT_SIMD=scalar` CI shard
+//! assert it end to end (solutions, objectives, iteration counts and
+//! `OracleStats` all compared bitwise).
+//!
+//! ## Backends and dispatch
+//!
+//! [`Dispatch::resolve`] picks the backend once per oracle:
+//!
+//! * `avx2` — `std::arch::x86_64` intrinsics, selected only when
+//!   `is_x86_feature_detected!("avx2")` confirms the CPU supports them
+//!   at runtime (never by compile-time target flags alone);
+//! * `portable` — a `[f64; 4]` mirror with the same lane semantics
+//!   (including the x86 `MAXPD`/`MINPD` tie rules), used on every other
+//!   target — the vector kernels build and run correctly everywhere;
+//! * `scalar` — the original scalar kernels, selected by
+//!   `GRPOT_SIMD=scalar` or `FastOtConfig.simd`; the reference the
+//!   other two must match bitwise.
+//!
+//! The environment variable `GRPOT_SIMD` (`auto` | `scalar` |
+//! `portable`) replaces the default `Auto` policy when set — that is
+//! how the CI shard forces the scalar reference path through every
+//! solver entry point without touching call sites. A config that
+//! explicitly forces `Scalar` or `Portable` wins over the env var, so
+//! forced bench baselines stay what their labels claim.
+//!
+//! All `unsafe` in the crate's SIMD support lives in this module
+//! ([`lane`] holds the intrinsic calls, [`kernel`] the
+//! `#[target_feature]` entry wrappers); every intrinsic call site is
+//! reachable only through a [`Dispatch::Avx2`] value, which can only be
+//! constructed after runtime feature detection.
+
+mod kernel;
+mod lane;
+
+pub use kernel::{group_quad_contrib, snapshot_quad, sub_into};
+
+/// Columns processed per vector kernel call (one lane per column).
+pub const LANES: usize = 4;
+
+/// User-facing SIMD policy knob (`FastOtConfig.simd`, `GRPOT_SIMD`,
+/// `solve --simd`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Pick the fastest backend the CPU supports at runtime.
+    #[default]
+    Auto,
+    /// Force the original scalar kernels (the bitwise reference).
+    Scalar,
+    /// Force the portable `[f64; 4]` mirror even when AVX2 is available
+    /// (exercises the fallback on AVX2 hardware; testing/bench knob).
+    Portable,
+}
+
+impl SimdMode {
+    /// Parse a knob value. Accepts `auto`, `scalar`, `portable`.
+    pub fn parse(s: &str) -> Result<SimdMode, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(SimdMode::Auto),
+            "scalar" => Ok(SimdMode::Scalar),
+            "portable" => Ok(SimdMode::Portable),
+            other => Err(format!("unknown SIMD mode '{other}' (expected auto|scalar|portable)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Scalar => "scalar",
+            SimdMode::Portable => "portable",
+        }
+    }
+}
+
+/// The backend a solve actually runs, resolved once at oracle
+/// construction and fixed for the oracle's lifetime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Original scalar kernels; no packed tiles are built.
+    Scalar,
+    /// Vector kernels on the portable `[f64; 4]` mirror.
+    Portable,
+    /// Vector kernels on AVX2 intrinsics (runtime-detected x86-64 only).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+impl Dispatch {
+    /// Resolve `mode` to a backend. `GRPOT_SIMD`, when set, replaces
+    /// the **default `Auto` policy only** — the CI scalar shard and the
+    /// CLI knob ride on this (configs default to `Auto` everywhere),
+    /// while an explicitly forced `Scalar`/`Portable` always wins, so a
+    /// stray env var can never silently relabel a forced-scalar
+    /// baseline (benches assert real scalar-vs-vector comparisons).
+    /// `Auto` selects AVX2 only after `is_x86_feature_detected!`
+    /// confirms it; everywhere else it selects the portable mirror.
+    pub fn resolve(mode: SimdMode) -> Dispatch {
+        let mode = match mode {
+            SimdMode::Auto => match std::env::var("GRPOT_SIMD") {
+                Ok(v) => SimdMode::parse(&v).unwrap_or_else(|e| panic!("GRPOT_SIMD: {e}")),
+                Err(_) => SimdMode::Auto,
+            },
+            explicit => explicit,
+        };
+        match mode {
+            SimdMode::Scalar => Dispatch::Scalar,
+            SimdMode::Portable => Dispatch::Portable,
+            SimdMode::Auto => Dispatch::fastest(),
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn fastest() -> Dispatch {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            Dispatch::Avx2
+        } else {
+            Dispatch::Portable
+        }
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    fn fastest() -> Dispatch {
+        Dispatch::Portable
+    }
+
+    /// True for the lane-vectorized backends (they need packed tiles).
+    pub fn is_vector(&self) -> bool {
+        !matches!(self, Dispatch::Scalar)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Portable => "portable",
+            #[cfg(target_arch = "x86_64")]
+            Dispatch::Avx2 => "avx2",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::dual::{group_grad_contrib, DualParams, KernelConsts};
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(SimdMode::parse("auto"), Ok(SimdMode::Auto));
+        assert_eq!(SimdMode::parse(" Scalar "), Ok(SimdMode::Scalar));
+        assert_eq!(SimdMode::parse("portable"), Ok(SimdMode::Portable));
+        assert!(SimdMode::parse("avx512").is_err());
+        assert_eq!(SimdMode::default(), SimdMode::Auto);
+    }
+
+    #[test]
+    fn explicit_modes_win_over_env() {
+        // Forced modes resolve unconditionally — GRPOT_SIMD may only
+        // replace the Auto default, never an explicit baseline.
+        assert_eq!(Dispatch::resolve(SimdMode::Scalar), Dispatch::Scalar);
+        assert_eq!(Dispatch::resolve(SimdMode::Portable), Dispatch::Portable);
+        if std::env::var("GRPOT_SIMD").is_err() {
+            assert!(Dispatch::resolve(SimdMode::Auto).is_vector());
+        }
+    }
+
+    /// Every vector backend must reproduce the scalar kernel bitwise on
+    /// one quad: same ψ, same column masses, same gradient bytes — for
+    /// fully active, fully inactive and mixed-activity lane patterns.
+    #[test]
+    fn quad_kernel_matches_scalar_bitwise() {
+        let consts = KernelConsts::new(&DualParams::new(1.0, 0.5));
+        let mut rng = Pcg64::new(0x51D);
+        let g = 7usize;
+        let start = 3usize;
+        let m = start + g + 2;
+        let backends: Vec<Dispatch> = {
+            let mut b = vec![Dispatch::Portable];
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2") {
+                b.push(Dispatch::Avx2);
+            }
+            b
+        };
+        for case in 0..64 {
+            let alpha: Vec<f64> = (0..m).map(|_| rng.uniform(-0.4, 0.6)).collect();
+            // Bias β per case so some quads are all-active, some
+            // all-inactive and some mixed.
+            let bias = [-1.5, 0.0, 1.0, rng.uniform(-1.0, 1.0)][case % 4];
+            let beta4: [f64; 4] = std::array::from_fn(|_| bias + rng.uniform(-0.6, 0.8));
+            let cols: Vec<Vec<f64>> =
+                (0..LANES).map(|_| (0..m).map(|_| rng.uniform(0.0, 1.0)).collect()).collect();
+            // Interleaved [i][lane] tile over the group range.
+            let mut tile = Vec::with_capacity(LANES * g);
+            for k in 0..g {
+                for c in &cols {
+                    tile.push(c[start + k]);
+                }
+            }
+            // Scalar reference: the panel walk's column-ascending order.
+            let mut ga_ref = vec![0.0; m];
+            let mut scratch = vec![0.0; g];
+            let mut psi_ref = [0.0; LANES];
+            let mut mass_ref = [0.0; LANES];
+            for t in 0..LANES {
+                let (psi, mass) = group_grad_contrib(
+                    &alpha,
+                    beta4[t],
+                    &cols[t],
+                    start..start + g,
+                    &consts,
+                    &mut ga_ref,
+                    &mut scratch,
+                );
+                psi_ref[t] = psi;
+                mass_ref[t] = mass;
+            }
+            for &dispatch in &backends {
+                let mut ga = vec![0.0; m];
+                let mut quad = vec![0.0; LANES * g];
+                let (psi, mass) = group_quad_contrib(
+                    dispatch,
+                    &alpha,
+                    &beta4,
+                    &tile,
+                    start..start + g,
+                    &consts,
+                    &mut ga,
+                    &mut quad,
+                );
+                for t in 0..LANES {
+                    assert_eq!(
+                        psi[t].to_bits(),
+                        psi_ref[t].to_bits(),
+                        "psi lane {t} case {case} ({})",
+                        dispatch.name()
+                    );
+                    assert_eq!(
+                        mass[t].to_bits(),
+                        mass_ref[t].to_bits(),
+                        "mass lane {t} case {case} ({})",
+                        dispatch.name()
+                    );
+                }
+                for i in 0..m {
+                    assert_eq!(
+                        ga[i].to_bits(),
+                        ga_ref[i].to_bits(),
+                        "grad_alpha[{i}] case {case} ({})",
+                        dispatch.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// The snapshot quad must reproduce the scalar z̃/k̃/õ chains bitwise.
+    #[test]
+    fn snapshot_quad_matches_scalar_bitwise() {
+        let mut rng = Pcg64::new(0x5A9);
+        let g = 5usize;
+        let start = 2usize;
+        let m = start + g + 1;
+        let backends: Vec<Dispatch> = {
+            let mut b = vec![Dispatch::Portable];
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2") {
+                b.push(Dispatch::Avx2);
+            }
+            b
+        };
+        for case in 0..32 {
+            let alpha: Vec<f64> = (0..m).map(|_| rng.uniform(-0.5, 0.7)).collect();
+            let beta4: [f64; 4] = std::array::from_fn(|_| rng.uniform(-0.8, 0.9));
+            let cols: Vec<Vec<f64>> =
+                (0..LANES).map(|_| (0..m).map(|_| rng.uniform(0.0, 1.0)).collect()).collect();
+            let mut tile = Vec::with_capacity(LANES * g);
+            for k in 0..g {
+                for c in &cols {
+                    tile.push(c[start + k]);
+                }
+            }
+            // Scalar reference: the recompute_snapshots inner loop.
+            let mut zsq_ref = [0.0; LANES];
+            let mut ksq_ref = [0.0; LANES];
+            let mut osq_ref = [0.0; LANES];
+            for t in 0..LANES {
+                for i in start..start + g {
+                    let f = alpha[i] + beta4[t] - cols[t][i];
+                    ksq_ref[t] += f * f;
+                    if f > 0.0 {
+                        zsq_ref[t] += f * f;
+                    } else {
+                        osq_ref[t] += f * f;
+                    }
+                }
+            }
+            for &dispatch in &backends {
+                let (zsq, ksq, osq) =
+                    snapshot_quad(dispatch, &alpha, &beta4, &tile, start..start + g);
+                for t in 0..LANES {
+                    assert_eq!(zsq[t].to_bits(), zsq_ref[t].to_bits(), "zsq lane {t} case {case}");
+                    assert_eq!(ksq[t].to_bits(), ksq_ref[t].to_bits(), "ksq lane {t} case {case}");
+                    assert_eq!(osq[t].to_bits(), osq_ref[t].to_bits(), "osq lane {t} case {case}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sub_into_matches_scalar_on_every_backend() {
+        let mut rng = Pcg64::new(77);
+        let a: Vec<f64> = (0..23).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let b: Vec<f64> = (0..23).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let reference: Vec<f64> = a.iter().zip(&b).map(|(&x, &y)| x - y).collect();
+        let backends: Vec<Dispatch> = {
+            let mut v = vec![Dispatch::Scalar, Dispatch::Portable];
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2") {
+                v.push(Dispatch::Avx2);
+            }
+            v
+        };
+        for dispatch in backends {
+            let mut out = vec![0.0; a.len()];
+            sub_into(dispatch, &mut out, &a, &b);
+            for (got, want) in out.iter().zip(&reference) {
+                assert_eq!(got.to_bits(), want.to_bits(), "{}", dispatch.name());
+            }
+        }
+    }
+}

@@ -39,7 +39,7 @@ fn manual_bounds(
     let m = prob.m();
     let (alpha, beta) = x.split_at(m);
     let (s_alpha, s_beta) = snap_x.split_at(m);
-    let c_j = prob.cost_t.row(j);
+    let c_j = prob.cost_t().row(j);
     let range = prob.groups.range(l);
     let sqrt_g = prob.groups.sqrt_sizes[l];
 

@@ -45,8 +45,8 @@ fn problems_have_uniform_marginals_and_normalized_costs() {
         let sb: f64 = prob.b.iter().sum();
         assert!((sa - 1.0).abs() < 1e-12, "{}: source marginal {sa}", pair.task_name());
         assert!((sb - 1.0).abs() < 1e-12, "{}: target marginal {sb}", pair.task_name());
-        assert!(prob.cost_t.max_abs() <= 1.0 + 1e-12, "{}: cost not normalized", pair.task_name());
-        assert!(prob.cost_t.as_slice().iter().all(|&c| c >= 0.0));
+        assert!(prob.cost_t().max_abs() <= 1.0 + 1e-12, "{}: cost not normalized", pair.task_name());
+        assert!(prob.cost_t().as_slice().iter().all(|&c| c >= 0.0));
         // Group structure covers all source samples.
         assert_eq!(prob.groups.num_samples(), prob.m());
         assert_eq!(prob.groups.num_groups(), pair.source.num_classes());

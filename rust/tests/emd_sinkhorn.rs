@@ -112,7 +112,7 @@ fn semidual_consistent_with_full_dual_quadratic_case() {
     let c_semi = {
         let mut s = 0.0;
         for j in 0..prob.n() {
-            let c_j = prob.cost_t.row(j);
+            let c_j = prob.cost_t().row(j);
             for i in 0..prob.m() {
                 s += semi.plan[(i, j)] * c_j[i];
             }

@@ -5,12 +5,15 @@
 # GRPOT_BENCH_SMOKE=1 is already set, as in the CI wiring):
 #
 #   * bench_parallel     — solve-level thread scaling + the fork-join vs
-#                          persistent-pool dispatch comparison
+#                          persistent-pool dispatch comparison + the
+#                          scalar-vs-SIMD dispatch rows
 #   * bench_serve        — serving-engine closed-loop load harness
-#   * hotpath_microbench — isolated oracle kernels + bare dispatch cost
+#   * hotpath_microbench — isolated oracle kernels (incl. the
+#                          scalar-vs-SIMD kernel cases and their speedup
+#                          ratios) + bare dispatch cost
 #
 # then collects every CSV the benches emitted into one machine-readable
-# JSON file (default: BENCH_PR4.json at the repo root; override with
+# JSON file (default: BENCH_PR5.json at the repo root; override with
 # GRPOT_BENCH_JSON). The JSON records the mode, so a smoke-mode CI run
 # is never mistaken for a real measurement.
 #
@@ -22,7 +25,7 @@ set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
 
-OUT="${GRPOT_BENCH_JSON:-$ROOT/BENCH_PR4.json}"
+OUT="${GRPOT_BENCH_JSON:-$ROOT/BENCH_PR5.json}"
 REPORT_DIR="${GRPOT_REPORT_DIR:-$ROOT/rust/reports}"
 export GRPOT_REPORT_DIR="$REPORT_DIR"
 
@@ -45,7 +48,8 @@ done
 # Fold the emitted CSVs into one JSON document. Python is available on
 # every image this repo targets; if it is ever missing, fall back to a
 # stub JSON that still records mode + the CSV paths.
-CSVS=(bench_parallel bench_parallel_dispatch bench_serve hotpath_microbench)
+CSVS=(bench_parallel bench_parallel_dispatch bench_parallel_simd bench_serve
+      hotpath_microbench hotpath_simd_speedup)
 if command -v python3 >/dev/null 2>&1; then
     MODE="$MODE" OUT="$OUT" REPORT_DIR="$REPORT_DIR" CSVS="${CSVS[*]}" python3 - <<'PY'
 import csv, json, os

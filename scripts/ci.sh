@@ -10,17 +10,23 @@
 #      parallel_determinism and the pool_lifecycle suite, so
 #      thread-count bit-exactness and the persistent-pool lifecycle
 #      (reuse / panic recovery / drop-joins) are gated on every push
-#   6. cargo build --release --features xla   (in-tree stub must keep compiling)
-#   7. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
-#      (includes bench_parallel, which asserts thread-count determinism
-#      and the fork-join-vs-persistent dispatch equivalence)
-#   8. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf trio again
+#   6. GRPOT_SIMD=scalar shard: the theorem2_equivalence suite re-runs
+#      with the scalar reference kernels forced through every solver
+#      entry point, plus simd_equivalence and parallel_determinism, so
+#      both dispatch paths (scalar and runtime-selected SIMD) are gated
+#      on every push — the default runs above exercise auto dispatch
+#   7. cargo build --release --features xla   (in-tree stub must keep compiling)
+#   8. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
+#      (includes bench_parallel, which asserts thread-count determinism,
+#      the fork-join-vs-persistent dispatch equivalence and the
+#      scalar-vs-SIMD kernel equivalence)
+#   9. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf trio again
 #      through the bench.sh wrapper, checking the machine-readable
-#      BENCH_PR4.json emission end to end (written to a temp file so a
+#      BENCH_PR5.json emission end to end (written to a temp file so a
 #      smoke run never clobbers real recorded numbers)
 #
-# Everything except step 5 runs with default features only (zero
-# external crate dependencies — this image has no network). Step 5
+# Everything except step 7 runs with default features only (zero
+# external crate dependencies — this image has no network). Step 7
 # compiles the PJRT runtime against the in-tree `rust/xla-stub` crate,
 # which errors at runtime but keeps the feature buildable offline; the
 # gated bench/test surface prints a skip notice in the smoke pass.
@@ -56,6 +62,12 @@ GRPOT_TEST_THREADS=4 cargo test -q \
     --test theorem2_equivalence \
     --test parallel_determinism \
     --test pool_lifecycle
+
+step "cargo test -q (GRPOT_SIMD=scalar dispatch shard)"
+GRPOT_SIMD=scalar cargo test -q \
+    --test theorem2_equivalence \
+    --test simd_equivalence \
+    --test parallel_determinism
 
 step "cargo build --release --features xla (offline stub)"
 cargo build --release --features xla
