@@ -93,10 +93,8 @@ fn main() -> Result<()> {
         gammas: vec![0.01, 0.1, 1.0, 10.0],
         rhos: vec![0.2, 0.4, 0.6, 0.8],
         methods: vec![Method::Fast, Method::Origin],
-        r: 10,
         threads: 1,
-        solve_threads: 1,
-        max_iters: 400,
+        solve: SolveOptions::new().max_iters(400),
     };
     let metrics = Metrics::new();
     let report = sweep::run_sweep(&cfg, &metrics)?;

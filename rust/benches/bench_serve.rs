@@ -12,6 +12,8 @@ mod common;
 use common::{banner, size3};
 use grpot::benchlib::{report_dir, Table};
 use grpot::coordinator::config::{DatasetSpec, Method};
+use grpot::ot::regularizer::RegKind;
+use grpot::ot::solve::SolveOptions;
 use grpot::serve::loadgen::{run_load, LoadScenario};
 use grpot::serve::ServeConfig;
 use grpot::solvers::lbfgs::LbfgsOptions;
@@ -53,11 +55,12 @@ fn main() {
             cycles,
             clients,
             method: Method::Fast,
+            regularizer: RegKind::GroupLasso,
             deadline: None,
         };
         let cfg = ServeConfig {
             workers,
-            lbfgs: LbfgsOptions { max_iters, ..Default::default() },
+            solve: SolveOptions::new().lbfgs(LbfgsOptions { max_iters, ..Default::default() }),
             ..Default::default()
         };
         println!("\n-- {workers} worker(s), {clients} clients, {cycles} cycles --");

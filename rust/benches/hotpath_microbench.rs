@@ -10,7 +10,9 @@ use grpot::benchlib::{bench_fn, report_dir, BenchOptions, Table};
 use grpot::data::synthetic;
 use grpot::ot::dual::{DualOracle, DualParams};
 use grpot::ot::origin::OriginOracle;
+use grpot::ot::regularizer::{AnyRegularizer, DenseRegOracle, RegKind};
 use grpot::ot::screening::ScreeningOracle;
+use grpot::ot::solve::SolveOptions;
 use grpot::pool::{chunk_ranges, forkjoin_map_chunks, ParallelCtx};
 use grpot::rng::Pcg64;
 use grpot::simd::{Dispatch, SimdMode};
@@ -64,16 +66,31 @@ fn main() {
         record(&format!("snapshot + ws refresh ({threads}t)"), t.seconds() * 1e3);
     }
 
+    // Per-regularizer dense eval through the pluggable trait oracle:
+    // group lasso here measures the trait-dispatch path against the
+    // specialized kernels above; squared ℓ2 / negentropy are the new
+    // conjugates (Blondel et al. 2018) with no SIMD specialization yet.
+    for kind in [RegKind::GroupLasso, RegKind::SquaredL2, RegKind::NegEntropy] {
+        for threads in [1usize, 4] {
+            let reg = AnyRegularizer::build(kind, 1.0, 0.5, &prob.groups).expect("build reg");
+            let mut oracle = DenseRegOracle::new(&prob, reg, ParallelCtx::new(threads));
+            let t = bench_fn("reg-dense", &opts, || {
+                oracle.eval(&x, &mut grad);
+            });
+            record(&format!("trait dense eval ({}, {threads}t)", kind.name()), t.seconds() * 1e3);
+        }
+    }
+
     // SIMD kernel comparison: the scalar reference kernels vs the
     // runtime-dispatched vector kernels on the same evaluations —
     // full-panel dense (all quads fully active), a masked screened
     // panel (mixed activity ⇒ vector quads + per-lane scalar fallback)
     // and the skip-heavy screened regime (bulk panel skips dominate).
     // Byte-equality is asserted before timing; the speedup rows land in
-    // BENCH_PR5.json through the emitted CSV.
+    // the bench JSON through the emitted CSV.
     let simd_name = Dispatch::resolve(SimdMode::Auto).name();
     println!("\nsimd kernels: auto dispatch resolves to '{simd_name}'");
-    // Ratios live in their own table so BENCH_PR5.json never mixes a
+    // Ratios live in their own table so the bench JSON never mixes a
     // unitless speedup into the ms/op column.
     let mut ratio_table =
         Table::new("simd kernel speedup (scalar ms / auto ms)", &["case", "speedup"]);
@@ -85,10 +102,13 @@ fn main() {
         ("screened masked panel", medium_params, true),
         ("screened skip-heavy", sparse_params, true),
     ];
+    let simd_opts = |params: DualParams, simd: SimdMode| {
+        SolveOptions::new().gamma(params.gamma).rho(params.rho).simd(simd)
+    };
     for (tag, params, screened) in cases {
         let (scalar_ms, auto_ms) = if screened {
-            let mut s = ScreeningOracle::with_simd(&prob, params, true, 1, SimdMode::Scalar);
-            let mut a = ScreeningOracle::with_simd(&prob, params, true, 1, SimdMode::Auto);
+            let mut s = ScreeningOracle::with_options(&prob, &simd_opts(params, SimdMode::Scalar));
+            let mut a = ScreeningOracle::with_options(&prob, &simd_opts(params, SimdMode::Auto));
             s.refresh(&x);
             a.refresh(&x);
             let fs = s.eval(&x, &mut g_s);
@@ -103,8 +123,8 @@ fn main() {
             });
             (ts.seconds() * 1e3, ta.seconds() * 1e3)
         } else {
-            let mut s = OriginOracle::with_simd(&prob, params, 1, SimdMode::Scalar);
-            let mut a = OriginOracle::with_simd(&prob, params, 1, SimdMode::Auto);
+            let mut s = OriginOracle::with_options(&prob, &simd_opts(params, SimdMode::Scalar));
+            let mut a = OriginOracle::with_options(&prob, &simd_opts(params, SimdMode::Auto));
             let fs = s.eval(&x, &mut g_s);
             let fa = a.eval(&x, &mut g_a);
             assert_eq!(fs.to_bits(), fa.to_bits(), "{tag}: objective dispatch mismatch");

@@ -3,6 +3,9 @@
 use crate::err;
 use crate::error::{Context, Result};
 use crate::jsonlite::{self, Value};
+use crate::ot::regularizer::RegKind;
+use crate::ot::solve::SolveOptions;
+use crate::simd::SimdMode;
 
 /// Which solver backend a job uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -111,16 +114,13 @@ pub struct SweepConfig {
     /// ρ grid (paper: 0.2, 0.4, 0.6, 0.8).
     pub rhos: Vec<f64>,
     pub methods: Vec<Method>,
-    /// Snapshot interval r.
-    pub r: usize,
     /// Worker threads for the job scheduler.
     pub threads: usize,
-    /// Intra-solve oracle workers per job (deterministic: records are
-    /// bit-identical for every value; 1 = the paper-faithful serial hot
-    /// path).
-    pub solve_threads: usize,
-    /// L-BFGS iteration cap per job.
-    pub max_iters: usize,
+    /// Per-job solver options (snapshot interval `r`, intra-solve
+    /// oracle workers — deterministic: records are bit-identical for
+    /// every thread count — L-BFGS caps, SIMD policy, regularizer).
+    /// γ/ρ are overridden by the grid per job.
+    pub solve: SolveOptions,
 }
 
 impl Default for SweepConfig {
@@ -130,10 +130,8 @@ impl Default for SweepConfig {
             gammas: vec![1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3],
             rhos: vec![0.2, 0.4, 0.6, 0.8],
             methods: vec![Method::Fast, Method::Origin],
-            r: 10,
             threads: 1,
-            solve_threads: 1,
-            max_iters: 1000,
+            solve: SolveOptions::new().max_iters(1000),
         }
     }
 }
@@ -174,16 +172,24 @@ impl SweepConfig {
                 .collect::<Result<_>>()?;
         }
         if let Some(x) = v.get("r").and_then(Value::as_usize) {
-            cfg.r = x;
+            cfg.solve.r = x;
         }
         if let Some(x) = v.get("threads").and_then(Value::as_usize) {
             cfg.threads = x;
         }
         if let Some(x) = v.get("solve_threads").and_then(Value::as_usize) {
-            cfg.solve_threads = x;
+            cfg.solve.threads = x;
         }
         if let Some(x) = v.get("max_iters").and_then(Value::as_usize) {
-            cfg.max_iters = x;
+            cfg.solve.lbfgs.max_iters = x;
+        }
+        if let Some(s) = v.get("regularizer") {
+            let s = s.as_str().ok_or_else(|| err!("regularizer must be a string"))?;
+            cfg.solve.regularizer = Some(RegKind::parse(s)?);
+        }
+        if let Some(s) = v.get("simd") {
+            let s = s.as_str().ok_or_else(|| err!("simd must be a string"))?;
+            cfg.solve.simd = SimdMode::parse(s).map_err(|e| err!("simd: {e}"))?;
         }
         Ok(cfg)
     }
@@ -214,10 +220,21 @@ impl SweepConfig {
                 "methods",
                 Value::Arr(self.methods.iter().map(|m| Value::from(m.name())).collect()),
             )
-            .set("r", self.r)
+            .set("r", self.solve.r)
             .set("threads", self.threads)
-            .set("solve_threads", self.solve_threads)
-            .set("max_iters", self.max_iters)
+            .set("solve_threads", self.solve.threads)
+            .set("max_iters", self.solve.lbfgs.max_iters)
+            .set(
+                "regularizer",
+                // Resolved (explicit, else GRPOT_REG/group-lasso) so the
+                // record reproduces the run even if the env changes; a
+                // broken env var falls back to the explicit field.
+                self.solve
+                    .resolve_regularizer()
+                    .unwrap_or_else(|_| self.solve.regularizer.unwrap_or_default())
+                    .name(),
+            )
+            .set("simd", self.solve.simd.name())
     }
 }
 
@@ -239,10 +256,13 @@ mod tests {
             gammas: vec![0.1, 1.0],
             rhos: vec![0.5],
             methods: vec![Method::Fast, Method::XlaOrigin],
-            r: 5,
             threads: 3,
-            solve_threads: 2,
-            max_iters: 50,
+            solve: SolveOptions::new()
+                .r(5)
+                .threads(2)
+                .max_iters(50)
+                .simd(SimdMode::Scalar)
+                .regularizer(RegKind::SquaredL2),
             dataset: DatasetSpec {
                 family: "digits".into(),
                 param1: 0,
@@ -256,10 +276,20 @@ mod tests {
         assert_eq!(back.gammas, cfg.gammas);
         assert_eq!(back.rhos, cfg.rhos);
         assert_eq!(back.methods, cfg.methods);
-        assert_eq!(back.r, 5);
+        assert_eq!(back.solve.r, 5);
         assert_eq!(back.threads, 3);
-        assert_eq!(back.solve_threads, 2);
+        assert_eq!(back.solve.threads, 2);
+        assert_eq!(back.solve.lbfgs.max_iters, 50);
+        assert_eq!(back.solve.simd, SimdMode::Scalar);
+        assert_eq!(back.solve.regularizer, Some(RegKind::SquaredL2));
         assert_eq!(back.dataset, cfg.dataset);
+    }
+
+    #[test]
+    fn config_json_rejects_unknown_regularizer() {
+        let v = crate::jsonlite::parse(r#"{"regularizer": "lasso-soup"}"#).unwrap();
+        let e = SweepConfig::from_json(&v).unwrap_err();
+        assert!(e.0.contains("unknown regularizer"), "{e}");
     }
 
     #[test]
@@ -287,7 +317,9 @@ mod tests {
         let cfg = SweepConfig::default();
         assert_eq!(cfg.gammas.len(), 7);
         assert_eq!(cfg.rhos, vec![0.2, 0.4, 0.6, 0.8]);
-        assert_eq!(cfg.r, 10);
+        assert_eq!(cfg.solve.r, 10);
+        assert_eq!(cfg.solve.lbfgs.max_iters, 1000);
+        assert_eq!(cfg.solve.regularizer, None);
     }
 
     #[test]

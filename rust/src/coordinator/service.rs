@@ -9,16 +9,20 @@
 //! {"op": "metrics"}
 //! {"op": "solve", "dataset": {"family": "synthetic", "param1": 10,
 //!   "param2": 10, "seed": 1}, "gamma": 1.0, "rho": 0.5, "method": "fast",
-//!   "deadline_ms": 2000, "warm_start": true}
+//!   "regularizer": "group_lasso", "deadline_ms": 2000, "warm_start": true}
 //! {"op": "shutdown"}
 //! ```
+//!
+//! `regularizer` is optional (`group_lasso` | `squared_l2` |
+//! `negentropy`); requests that omit it use the engine's configured
+//! default. Unknown values get a structured rejection, never a panic.
 //!
 //! Responses: `{"ok": true, …}` or `{"ok": false, "error": "…"}`; engine
 //! rejections additionally carry a machine-readable `"error_kind"`
 //! (`queue_full` | `deadline_exceeded` | `shutdown` | `failed`) so
 //! clients can distinguish backpressure from bad requests. Successful
 //! solves report `warm_started`, `batch_size` and `queue_wait_s` next
-//! to the solver fields.
+//! to the solver fields, and echo the `regularizer` they solved with.
 
 use super::config::{DatasetSpec, Method};
 use super::metrics::Metrics;
@@ -27,6 +31,7 @@ use crate::error::{Context, Result};
 use crate::jsonlite::{self, Value};
 use crate::ot::dual::DualParams;
 use crate::ot::plan::recover_plan;
+use crate::ot::regularizer::{recover_plan_reg, AnyRegularizer, RegKind};
 use crate::serve::{Engine, ServeConfig, SolveRequest};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -220,6 +225,30 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
                 req.get("method").and_then(Value::as_str).unwrap_or("fast"),
             )?;
             method.ensure_available()?;
+            let regularizer = match req.get("regularizer") {
+                None => state.engine.default_regularizer(),
+                Some(r) => {
+                    let s = r
+                        .as_str()
+                        .ok_or_else(|| err!("'regularizer' must be a string"))?;
+                    match RegKind::parse(s) {
+                        Ok(k) => k,
+                        Err(e) => {
+                            // Same structured shape as engine rejections
+                            // so clients branch on `error_kind`, and the
+                            // bad value never reaches a solver.
+                            let mut v = Value::obj()
+                                .set("ok", false)
+                                .set("error", e.to_string())
+                                .set("error_kind", "failed");
+                            if let Some(id) = req.get("id") {
+                                v = v.set("id", id.clone());
+                            }
+                            return Ok(v);
+                        }
+                    }
+                }
+            };
             // Clamp to [0, 1 day]: Duration::from_secs_f64 panics on
             // non-finite/overflowing input, and a client-supplied value
             // must never be able to kill the connection handler.
@@ -236,6 +265,7 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
                 gamma,
                 rho,
                 method,
+                regularizer,
                 deadline,
                 warm_start,
             }) {
@@ -253,14 +283,26 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
             };
             let res = &reply.result;
             let cached = &reply.problem;
-            let params = DualParams::new(gamma, rho);
-            let plan = recover_plan(&cached.prob, &params, &res.x);
+            // Plan recovery must invert the same conjugate the solve
+            // used: the specialized group-lasso path for group_lasso,
+            // the generic ∇Ω* recovery otherwise.
+            let plan = match regularizer {
+                RegKind::GroupLasso => {
+                    let params = DualParams::new(gamma, rho);
+                    recover_plan(&cached.prob, &params, &res.x)
+                }
+                other => {
+                    let reg = AnyRegularizer::build(other, gamma, rho, &cached.prob.groups)?;
+                    recover_plan_reg(&cached.prob, &reg, &res.x)
+                }
+            };
             let acc = crate::eval::otda_accuracy(&cached.pair, &cached.prob, &plan);
             state.metrics.incr("service.solves", 1);
             let mut v = Value::obj()
                 .set("method", method.name())
                 .set("gamma", gamma)
                 .set("rho", rho)
+                .set("regularizer", regularizer.name())
                 .set("dual_objective", res.dual_objective)
                 .set("wall_time_s", res.wall_time_s)
                 .set("iterations", res.iterations)

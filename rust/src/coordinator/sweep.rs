@@ -11,10 +11,13 @@
 use super::config::{Method, SweepConfig};
 use super::metrics::Metrics;
 use super::registry::build_pair;
+use crate::err;
 use crate::error::Result;
 use crate::jsonlite::Value;
 use crate::ot::dual::OtProblem;
-use crate::ot::fastot::FastOtConfig;
+use crate::ot::fastot::FastOtResult;
+use crate::ot::regularizer::RegKind;
+use crate::ot::solve::SolveOptions;
 use crate::pool::{ParallelCtx, ThreadPool};
 use crate::simd::SimdMode;
 use crate::solvers::lbfgs::LbfgsOptions;
@@ -66,6 +69,90 @@ pub struct SweepReport {
     pub max_objective: Vec<(Method, f64)>,
 }
 
+/// The unified method-dispatched entry — sweep, serve and CLI all land
+/// here. `opts.use_working_set` is overridden by the method (it *is*
+/// the fast/fast-nows distinction).
+///
+/// Regularizer support by method: `fast`/`fast-nows`/`origin` accept
+/// every [`RegKind`] (non-group-lasso kinds run the generic dense
+/// oracle — no screening rule exists for them); `xla-origin` is
+/// group-lasso only (the compiled artifact bakes in the group-lasso
+/// kernel).
+pub fn solve(prob: &OtProblem, method: Method, opts: &SolveOptions) -> Result<FastOtResult> {
+    match method {
+        Method::Fast | Method::FastNoWs => {
+            let opts = opts.clone().working_set(method != Method::FastNoWs);
+            crate::ot::fastot::solve(prob, &opts)
+        }
+        Method::Origin => crate::ot::origin::solve(prob, opts),
+        Method::XlaOrigin => solve_xla(prob, opts),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn solve_xla(prob: &OtProblem, opts: &SolveOptions) -> Result<FastOtResult> {
+    let kind = opts.resolve_regularizer()?;
+    if kind != RegKind::GroupLasso {
+        return Err(err!(
+            "method 'xla-origin' supports only the group-lasso regularizer (got '{}')",
+            kind.name()
+        ));
+    }
+    let cfg = opts.fastot_config();
+    let x0 = crate::ot::fastot::full_dual_x0(prob, opts)?;
+    let runtime = crate::runtime::PjrtRuntime::cpu().expect("pjrt client");
+    let params = cfg.params();
+    let mut oracle = crate::runtime::XlaDualOracle::from_problem(
+        &runtime,
+        prob,
+        &params,
+        &crate::runtime::artifact_dir(),
+    )
+    .expect("artifact for problem shape (run `make artifacts`)");
+    Ok(crate::ot::fastot::drive_from(prob, &cfg, &mut oracle, "xla-origin", x0))
+}
+
+// Backstop for direct programmatic calls; every user-facing entry
+// point rejects the method earlier via `Method::ensure_available`, so
+// this is unreachable from the CLI, sweep and TCP-service paths.
+#[cfg(not(feature = "xla"))]
+fn solve_xla(_prob: &OtProblem, _opts: &SolveOptions) -> Result<FastOtResult> {
+    Err(err!(
+        "method 'xla-origin' needs the PJRT runtime; rebuild with `cargo build --features xla`"
+    ))
+}
+
+/// Legacy-shaped core: positional knobs → [`SolveOptions`] with the
+/// group-lasso regularizer pinned (so `GRPOT_REG` can never re-route a
+/// pre-trait call site). Panics where the old terminal panicked
+/// (unavailable method, invalid hyperparameters).
+#[allow(clippy::too_many_arguments)]
+fn solve_full_inner(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    lbfgs: LbfgsOptions,
+    x0: Option<&[f64]>,
+    ctx: &ParallelCtx,
+    simd: SimdMode,
+) -> FastOtResult {
+    let mut opts = SolveOptions::new()
+        .gamma(gamma)
+        .rho(rho)
+        .r(r)
+        .lbfgs(lbfgs)
+        .threads(ctx.threads())
+        .simd(simd)
+        .regularizer(RegKind::GroupLasso)
+        .ctx(ctx.clone());
+    if let Some(x0) = x0 {
+        opts = opts.warm_start(x0.to_vec());
+    }
+    solve(prob, method, &opts).unwrap_or_else(|e| panic!("{e}"))
+}
+
 /// Solve one (method, γ, ρ) job, returning the full solver result.
 pub fn solve_full(
     prob: &OtProblem,
@@ -74,13 +161,23 @@ pub fn solve_full(
     rho: f64,
     r: usize,
     max_iters: usize,
-) -> crate::ot::fastot::FastOtResult {
-    solve_full_threads(prob, method, gamma, rho, r, max_iters, 1)
+) -> FastOtResult {
+    solve_full_inner(
+        prob,
+        method,
+        gamma,
+        rho,
+        r,
+        LbfgsOptions { max_iters, ..Default::default() },
+        None,
+        &ParallelCtx::new(1),
+        SimdMode::Auto,
+    )
 }
 
-/// [`solve_full_threads`] with an explicit SIMD policy (the `solve
-/// --simd` flag's entry; explicit modes win over `GRPOT_SIMD`).
+/// [`solve_full_threads`] with an explicit SIMD policy.
 #[allow(clippy::too_many_arguments)]
+#[deprecated(note = "use `sweep::solve` with `SolveOptions::threads`/`simd`")]
 pub fn solve_full_simd(
     prob: &OtProblem,
     method: Method,
@@ -90,8 +187,8 @@ pub fn solve_full_simd(
     max_iters: usize,
     threads: usize,
     simd: SimdMode,
-) -> crate::ot::fastot::FastOtResult {
-    solve_full_warm_ctx_simd(
+) -> FastOtResult {
+    solve_full_inner(
         prob,
         method,
         gamma,
@@ -106,6 +203,7 @@ pub fn solve_full_simd(
 
 /// [`solve_full`] with `threads` intra-solve oracle workers. The solve
 /// is deterministic: any thread count returns the bit-identical result.
+#[deprecated(note = "use `sweep::solve` with `SolveOptions::threads`")]
 pub fn solve_full_threads(
     prob: &OtProblem,
     method: Method,
@@ -114,8 +212,8 @@ pub fn solve_full_threads(
     r: usize,
     max_iters: usize,
     threads: usize,
-) -> crate::ot::fastot::FastOtResult {
-    solve_full_warm(
+) -> FastOtResult {
+    solve_full_inner(
         prob,
         method,
         gamma,
@@ -123,19 +221,15 @@ pub fn solve_full_threads(
         r,
         LbfgsOptions { max_iters, ..Default::default() },
         None,
-        threads,
+        &ParallelCtx::new(threads),
+        SimdMode::Auto,
     )
 }
 
 /// Solve one (method, γ, ρ) job with explicit L-BFGS options, an
-/// optional warm-start iterate and an intra-solve thread count — the
-/// one-shot solve entry. `x0 = None` starts from the origin exactly
-/// like [`solve_full`]; `threads = 1` is the serial hot path. Creates a
-/// fresh [`ParallelCtx`] per call; repeated solvers (the serving
-/// engine's workers, the serial sweep loop) hold a long-lived ctx and
-/// call [`solve_full_warm_ctx`] so oracle workers spawn once, not once
-/// per solve.
+/// optional warm-start iterate and an intra-solve thread count.
 #[allow(clippy::too_many_arguments)]
+#[deprecated(note = "use `sweep::solve` with `SolveOptions::lbfgs`/`warm_start`")]
 pub fn solve_full_warm(
     prob: &OtProblem,
     method: Method,
@@ -145,15 +239,24 @@ pub fn solve_full_warm(
     lbfgs: LbfgsOptions,
     x0: Option<&[f64]>,
     threads: usize,
-) -> crate::ot::fastot::FastOtResult {
-    solve_full_warm_ctx(prob, method, gamma, rho, r, lbfgs, x0, &ParallelCtx::new(threads))
+) -> FastOtResult {
+    solve_full_inner(
+        prob,
+        method,
+        gamma,
+        rho,
+        r,
+        lbfgs,
+        x0,
+        &ParallelCtx::new(threads),
+        SimdMode::Auto,
+    )
 }
 
 /// [`solve_full_warm`] over a caller-provided long-lived parallel
-/// context — the serving engine's solve entry (one ctx per engine
-/// worker, threaded through every batch). Deterministic: any ctx thread
-/// count returns the bit-identical result.
+/// context.
 #[allow(clippy::too_many_arguments)]
+#[deprecated(note = "use `sweep::solve` with `SolveOptions::ctx`")]
 pub fn solve_full_warm_ctx(
     prob: &OtProblem,
     method: Method,
@@ -163,17 +266,13 @@ pub fn solve_full_warm_ctx(
     lbfgs: LbfgsOptions,
     x0: Option<&[f64]>,
     ctx: &ParallelCtx,
-) -> crate::ot::fastot::FastOtResult {
-    // Auto: runtime-dispatched SIMD kernels; GRPOT_SIMD may replace
-    // the default. Callers forcing a backend programmatically use
-    // [`solve_full_warm_ctx_simd`].
-    solve_full_warm_ctx_simd(prob, method, gamma, rho, r, lbfgs, x0, ctx, SimdMode::Auto)
+) -> FastOtResult {
+    solve_full_inner(prob, method, gamma, rho, r, lbfgs, x0, ctx, SimdMode::Auto)
 }
 
-/// [`solve_full_warm_ctx`] with an explicit SIMD policy — the
-/// programmatic backend knob (`SimdMode::Scalar` forces the reference
-/// kernels; explicit modes win over `GRPOT_SIMD`).
+/// [`solve_full_warm_ctx`] with an explicit SIMD policy.
 #[allow(clippy::too_many_arguments)]
+#[deprecated(note = "use `sweep::solve` with `SolveOptions::ctx`/`simd`")]
 pub fn solve_full_warm_ctx_simd(
     prob: &OtProblem,
     method: Method,
@@ -184,44 +283,24 @@ pub fn solve_full_warm_ctx_simd(
     x0: Option<&[f64]>,
     ctx: &ParallelCtx,
     simd: SimdMode,
-) -> crate::ot::fastot::FastOtResult {
-    let cfg = FastOtConfig {
-        gamma,
-        rho,
-        r,
-        use_working_set: method != Method::FastNoWs,
-        threads: ctx.threads(),
-        simd,
-        lbfgs,
-    };
-    let x0 = x0.map(<[f64]>::to_vec).unwrap_or_else(|| vec![0.0; prob.dim()]);
-    match method {
-        Method::Fast | Method::FastNoWs => {
-            crate::ot::fastot::solve_fast_ot_ctx(prob, &cfg, x0, ctx)
-        }
-        Method::Origin => crate::ot::origin::solve_origin_ctx(prob, &cfg, x0, ctx),
-        #[cfg(feature = "xla")]
-        Method::XlaOrigin => {
-            let runtime = crate::runtime::PjrtRuntime::cpu().expect("pjrt client");
-            let params = cfg.params();
-            let mut oracle = crate::runtime::XlaDualOracle::from_problem(
-                &runtime,
-                prob,
-                &params,
-                &crate::runtime::artifact_dir(),
-            )
-            .expect("artifact for problem shape (run `make artifacts`)");
-            crate::ot::fastot::drive_from(prob, &cfg, &mut oracle, "xla-origin", x0)
-        }
-        // Backstop for direct programmatic calls; every user-facing
-        // entry point rejects the method earlier via
-        // `Method::ensure_available`, so this is unreachable from the
-        // CLI, sweep and TCP-service paths.
-        #[cfg(not(feature = "xla"))]
-        Method::XlaOrigin => panic!(
-            "method 'xla-origin' needs the PJRT runtime; rebuild with `cargo build --features xla`"
-        ),
-    }
+) -> FastOtResult {
+    solve_full_inner(prob, method, gamma, rho, r, lbfgs, x0, ctx, simd)
+}
+
+/// Solve one (method, γ, ρ) job under `opts` and fold the result into a
+/// [`SweepRecord`] — the sweep loop's per-job entry.
+pub fn run_job_opts(prob: &OtProblem, method: Method, opts: &SolveOptions) -> Result<SweepRecord> {
+    let res = solve(prob, method, opts)?;
+    Ok(SweepRecord {
+        method,
+        gamma: opts.gamma,
+        rho: opts.rho,
+        wall_time_s: res.wall_time_s,
+        dual_objective: res.dual_objective,
+        iterations: res.iterations,
+        grads_computed: res.stats.grads_computed,
+        grads_skipped: res.stats.grads_skipped,
+    })
 }
 
 /// Solve one (method, γ, ρ) job on a prepared problem.
@@ -233,11 +312,12 @@ pub fn run_job(
     r: usize,
     max_iters: usize,
 ) -> SweepRecord {
-    run_job_threads(prob, method, gamma, rho, r, max_iters, 1)
+    run_job_inner(prob, method, gamma, rho, r, max_iters, &ParallelCtx::new(1))
 }
 
 /// [`run_job`] with `threads` intra-solve oracle workers per job.
 #[allow(clippy::too_many_arguments)]
+#[deprecated(note = "use `sweep::run_job_opts` with `SolveOptions::threads`")]
 pub fn run_job_threads(
     prob: &OtProblem,
     method: Method,
@@ -247,13 +327,12 @@ pub fn run_job_threads(
     max_iters: usize,
     threads: usize,
 ) -> SweepRecord {
-    run_job_ctx(prob, method, gamma, rho, r, max_iters, &ParallelCtx::new(threads))
+    run_job_inner(prob, method, gamma, rho, r, max_iters, &ParallelCtx::new(threads))
 }
 
-/// [`run_job`] over a caller-provided long-lived parallel context —
-/// the serial sweep loop reuses one ctx (one parked worker set) across
-/// the whole grid.
+/// [`run_job`] over a caller-provided long-lived parallel context.
 #[allow(clippy::too_many_arguments)]
+#[deprecated(note = "use `sweep::run_job_opts` with `SolveOptions::ctx`")]
 pub fn run_job_ctx(
     prob: &OtProblem,
     method: Method,
@@ -263,7 +342,21 @@ pub fn run_job_ctx(
     max_iters: usize,
     ctx: &ParallelCtx,
 ) -> SweepRecord {
-    let res = solve_full_warm_ctx(
+    run_job_inner(prob, method, gamma, rho, r, max_iters, ctx)
+}
+
+/// Legacy-shaped job core (group lasso pinned, panics on error — the
+/// pre-trait contract).
+fn run_job_inner(
+    prob: &OtProblem,
+    method: Method,
+    gamma: f64,
+    rho: f64,
+    r: usize,
+    max_iters: usize,
+    ctx: &ParallelCtx,
+) -> SweepRecord {
+    let res = solve_full_inner(
         prob,
         method,
         gamma,
@@ -272,6 +365,7 @@ pub fn run_job_ctx(
         LbfgsOptions { max_iters, ..Default::default() },
         None,
         ctx,
+        SimdMode::Auto,
     );
     SweepRecord {
         method,
@@ -286,11 +380,12 @@ pub fn run_job_ctx(
 }
 
 /// Run the full grid described by `cfg`. When `cfg.threads > 1`, jobs
-/// run concurrently; each job additionally uses `cfg.solve_threads`
+/// run concurrently; each job additionally uses `cfg.solve.threads`
 /// intra-solve oracle workers (deterministic — wall times change, the
-/// records never do). The caller owns the `threads × solve_threads`
+/// records never do). The caller owns the `threads × solve.threads`
 /// core budget; the serving engine clamps it, the sweep trusts the
-/// config.
+/// config. Every job solves with `cfg.solve.regularizer` (γ/ρ come
+/// from the grid).
 pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
     for m in &cfg.methods {
         m.ensure_available()?;
@@ -308,37 +403,40 @@ pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
         .collect();
     metrics.incr("sweep.jobs_total", jobs.len() as u64);
 
-    let solve_threads = cfg.solve_threads.max(1);
+    let solve_threads = cfg.solve.threads.max(1);
     let records: Vec<SweepRecord> = if cfg.threads <= 1 {
         // One long-lived ctx (one parked worker set) reused across the
         // whole grid: the per-solve spawn cost disappears entirely.
         let ctx = ParallelCtx::new(solve_threads);
-        jobs.iter()
-            .map(|&(m, g, r)| {
-                let rec = run_job_ctx(&prob, m, g, r, cfg.r, cfg.max_iters, &ctx);
-                metrics.incr("sweep.jobs_done", 1);
-                metrics.observe("sweep.job_seconds", rec.wall_time_s);
-                rec
-            })
-            .collect()
+        let mut recs = Vec::with_capacity(jobs.len());
+        for &(m, g, r) in &jobs {
+            let opts = cfg.solve.clone().gamma(g).rho(r).ctx(ctx.clone());
+            let rec = run_job_opts(&prob, m, &opts)?;
+            metrics.incr("sweep.jobs_done", 1);
+            metrics.observe("sweep.job_seconds", rec.wall_time_s);
+            recs.push(rec);
+        }
+        recs
     } else {
         let results = Arc::new(Mutex::new(Vec::with_capacity(jobs.len())));
         let pool = ThreadPool::new(cfg.threads);
         for &(m, g, r) in &jobs {
             let prob = Arc::clone(&prob);
             let results = Arc::clone(&results);
-            let (rr, mi) = (cfg.r, cfg.max_iters);
+            // Concurrent jobs must not share one ctx (its dispatch
+            // serializes), so each job owns a solve-lifetime ctx;
+            // the parked set still amortizes over every eval of
+            // that solve.
+            let mut opts = cfg.solve.clone().gamma(g).rho(r).threads(solve_threads);
+            opts.ctx = None;
             pool.execute(move || {
-                // Concurrent jobs must not share one ctx (its dispatch
-                // serializes), so each job owns a solve-lifetime ctx;
-                // the parked set still amortizes over every eval of
-                // that solve.
-                let rec = run_job_threads(&prob, m, g, r, rr, mi, solve_threads);
+                let rec = run_job_opts(&prob, m, &opts);
                 results.lock().unwrap().push(rec);
             });
         }
         pool.join();
-        let mut recs = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+        let recs = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+        let mut recs = recs.into_iter().collect::<Result<Vec<SweepRecord>>>()?;
         // Deterministic order for reports.
         recs.sort_by(|a, b| {
             (a.method.name(), a.gamma, a.rho)
@@ -434,10 +532,10 @@ mod tests {
             gammas: vec![0.1, 1.0],
             rhos: vec![0.4, 0.8],
             methods: vec![Method::Fast, Method::Origin],
-            r: 5,
             threads,
-            solve_threads: 1,
-            max_iters: 60,
+            // Pin the regularizer so a `GRPOT_REG` override in the
+            // environment cannot re-route this determinism check.
+            solve: SolveOptions::new().r(5).max_iters(60).regularizer(RegKind::GroupLasso),
         }
     }
 
@@ -495,7 +593,7 @@ mod tests {
         let metrics = Metrics::new();
         let serial = run_sweep(&tiny_cfg(1), &metrics).unwrap();
         let mut cfg = tiny_cfg(1);
-        cfg.solve_threads = 4;
+        cfg.solve.threads = 4;
         let threaded = run_sweep(&cfg, &metrics).unwrap();
         for (s, t) in serial.records.iter().zip(&threaded.records) {
             assert_eq!(s.method, t.method);

@@ -24,7 +24,11 @@
 //! * [`groups`], [`data`] — group structure and the four dataset
 //!   families used in the paper's evaluation.
 //! * [`ot`] — the OT core: dual oracle, dense baseline, screening, the
-//!   Algorithm-1 driver, plan recovery, entropic/EMD baselines.
+//!   Algorithm-1 driver, plan recovery, entropic/EMD baselines. The
+//!   [`ot::regularizer`] module makes the conjugate pair Ω*/∇Ω* a
+//!   pluggable trait (group lasso, squared ℓ2, negative entropy) and
+//!   [`ot::solve::SolveOptions`] is the one builder every solver entry
+//!   point consumes.
 //! * [`simd`] — runtime-dispatched SIMD column-lane oracle kernels
 //!   (AVX2 + portable mirror), bit-identical to the scalar kernels;
 //!   `GRPOT_SIMD={auto,scalar,portable}` / `FastOtConfig.simd` select
@@ -87,6 +91,8 @@ pub mod prelude {
     pub use crate::ot::fastot::{solve_fast_ot, FastOtConfig, FastOtResult};
     pub use crate::ot::origin::solve_origin;
     pub use crate::ot::plan::TransportPlan;
+    pub use crate::ot::regularizer::{RegKind, Regularizer};
+    pub use crate::ot::solve::SolveOptions;
     pub use crate::rng::Pcg64;
     pub use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
 }

@@ -18,6 +18,8 @@ use grpot::error::{Context, Result};
 use grpot::jsonlite::Value;
 use grpot::ot::dual::{DualParams, OtProblem};
 use grpot::ot::plan::recover_plan;
+use grpot::ot::regularizer::{recover_plan_reg, AnyRegularizer, RegKind};
+use grpot::ot::solve::SolveOptions;
 use grpot::serve::loadgen::{run_load, LoadScenario};
 use grpot::serve::ServeConfig;
 use grpot::solvers::lbfgs::LbfgsOptions;
@@ -70,6 +72,11 @@ fn app() -> App {
             )
             .arg(ArgSpec::opt("max-iters", "L-BFGS iteration cap per solve").default("1000"))
             .arg(ArgSpec::opt("r", "snapshot interval").default("10"))
+            .arg(ArgSpec::opt(
+                "reg",
+                "default regularizer for requests that don't name one: \
+                 group_lasso|squared_l2|negentropy (default: $GRPOT_REG or group_lasso)",
+            ))
     };
     App::new(
         "grpot",
@@ -89,6 +96,10 @@ fn app() -> App {
                 "simd",
                 "oracle kernel dispatch: auto|scalar|portable (default: $GRPOT_SIMD or auto)",
             ))
+            .arg(ArgSpec::opt(
+                "reg",
+                "regularizer: group_lasso|squared_l2|negentropy (default: $GRPOT_REG or group_lasso)",
+            ))
             .arg(ArgSpec::switch(
                 "plan-stats",
                 "also recover the plan and print its statistics",
@@ -105,6 +116,10 @@ fn app() -> App {
                     .default("1"),
             )
             .arg(ArgSpec::opt("max-iters", "L-BFGS iteration cap").default("1000"))
+            .arg(ArgSpec::opt(
+                "reg",
+                "regularizer: group_lasso|squared_l2|negentropy (default: $GRPOT_REG or group_lasso)",
+            ))
             .arg(ArgSpec::opt("config", "JSON config file (overrides flags)"))
             .arg(ArgSpec::opt("out", "write the JSON report here")),
     ))
@@ -158,22 +173,37 @@ fn cmd_solve(m: &grpot::cli::Matches) -> Result<()> {
         None => grpot::simd::SimdMode::Auto,
     };
     let dispatch = grpot::simd::Dispatch::resolve(simd);
+    // An explicit --reg wins over GRPOT_REG; absent flag, the unset
+    // option defers to the env var (mirroring --simd / GRPOT_SIMD).
+    let mut opts = SolveOptions::new()
+        .gamma(gamma)
+        .rho(rho)
+        .r(r)
+        .max_iters(1000)
+        .threads(threads)
+        .simd(simd);
+    if let Some(s) = m.get("reg") {
+        opts = opts.regularizer(RegKind::parse(s).context("--reg")?);
+    }
+    let kind = opts.resolve_regularizer()?;
     eprintln!("dataset: {}", registry::describe(&spec));
     let pair = registry::build_pair(&spec)?;
     let prob = OtProblem::from_dataset(&pair);
     eprintln!(
-        "problem: m={} n={} |L|={} threads={} simd={}",
+        "problem: m={} n={} |L|={} threads={} simd={} reg={}",
         prob.m(),
         prob.n(),
         prob.groups.num_groups(),
         threads.max(1),
-        dispatch.name()
+        dispatch.name(),
+        kind.name()
     );
-    let res = sweep::solve_full_simd(&prob, method, gamma, rho, r, 1000, threads, simd);
+    let res = sweep::solve(&prob, method, &opts)?;
     let mut out = Value::obj()
         .set("method", method.name())
         .set("threads", threads.max(1))
         .set("simd", dispatch.name())
+        .set("regularizer", kind.name())
         .set("gamma", gamma)
         .set("rho", rho)
         .set("dual_objective", res.dual_objective)
@@ -183,17 +213,28 @@ fn cmd_solve(m: &grpot::cli::Matches) -> Result<()> {
         .set("grads_skipped", res.stats.grads_skipped);
     if m.get_flag("plan-stats") {
         let params = DualParams::new(gamma, rho);
-        let plan = recover_plan(&prob, &params, &res.x);
+        // The group-lasso plan uses the specialized recovery (and its
+        // primal objective); other regularizers go through the generic
+        // ∇Ω* recovery, whose primal is not the group-lasso objective.
+        let plan = match kind {
+            RegKind::GroupLasso => recover_plan(&prob, &params, &res.x),
+            other => {
+                let reg = AnyRegularizer::build(other, gamma, rho, &prob.groups)?;
+                recover_plan_reg(&prob, &reg, &res.x)
+            }
+        };
         let (va, vb) = plan.marginal_violation(&prob);
         out = out
             .set("transport_cost", plan.transport_cost(&prob))
-            .set("primal_objective", plan.primal_objective(&prob, &params))
             .set("plan_density", plan.density(1e-12))
             .set("group_sparsity", plan.group_sparsity(&prob, 1e-12))
             .set("single_class_columns", plan.single_class_columns(&prob, 1e-12))
             .set("marginal_violation_a", va)
             .set("marginal_violation_b", vb)
             .set("otda_accuracy", grpot::eval::otda_accuracy(&pair, &prob, &plan));
+        if kind == RegKind::GroupLasso {
+            out = out.set("primal_objective", plan.primal_objective(&prob, &params));
+        }
     }
     println!("{}", out.to_json());
     Ok(())
@@ -209,15 +250,19 @@ fn cmd_sweep(m: &grpot::cli::Matches) -> Result<()> {
             .split(',')
             .map(|s| Method::parse(s.trim()))
             .collect::<Result<Vec<_>>>()?;
+        let mut solve = SolveOptions::new()
+            .threads(m.get_usize("solve-threads")?)
+            .max_iters(m.get_usize("max-iters")?);
+        if let Some(s) = m.get("reg") {
+            solve = solve.regularizer(RegKind::parse(s).context("--reg")?);
+        }
         SweepConfig {
             dataset: dataset_spec(m)?,
             gammas: m.get_f64_list("gammas")?,
             rhos: m.get_f64_list("rhos")?,
             methods,
-            r: 10,
             threads: m.get_usize("threads")?,
-            solve_threads: m.get_usize("solve-threads")?,
-            max_iters: m.get_usize("max-iters")?,
+            solve,
         }
     };
     eprintln!(
@@ -267,9 +312,17 @@ fn engine_config(m: &grpot::cli::Matches) -> Result<ServeConfig, grpot::cli::Cli
     } else {
         0.0
     };
+    let mut solve = SolveOptions::new()
+        .threads(m.get_usize("threads")?)
+        .r(m.get_usize("r")?)
+        .lbfgs(LbfgsOptions { max_iters: m.get_usize("max-iters")?, ..Default::default() });
+    if let Some(s) = m.get("reg") {
+        let kind = RegKind::parse(s)
+            .map_err(|e| grpot::cli::CliError(format!("--reg: {e}")))?;
+        solve = solve.regularizer(kind);
+    }
     Ok(ServeConfig {
         workers: m.get_usize("workers")?,
-        threads_per_solve: m.get_usize("threads")?,
         core_budget: m.get_usize("core-budget")?,
         queue_capacity: m.get_usize("queue-capacity")?,
         max_batch: m.get_usize("max-batch")?,
@@ -282,8 +335,7 @@ fn engine_config(m: &grpot::cli::Matches) -> Result<ServeConfig, grpot::cli::Cli
         } else {
             None
         },
-        r: m.get_usize("r")?,
-        lbfgs: LbfgsOptions { max_iters: m.get_usize("max-iters")?, ..Default::default() },
+        solve,
     })
 }
 
@@ -334,16 +386,18 @@ fn cmd_bench_serve(m: &grpot::cli::Matches) -> Result<()> {
         cycles: m.get_usize("cycles")?,
         clients: m.get_usize("clients")?,
         method,
+        regularizer: cfg.solve.resolve_regularizer()?,
         deadline: None,
     };
     eprintln!(
-        "bench-serve: {} | {} clients × {} cycles × {} grid points | {} workers × {} threads",
+        "bench-serve: {} | {} clients × {} cycles × {} grid points | {} workers × {} threads | reg={}",
         registry::describe(&scenario.spec),
         scenario.clients,
         scenario.cycles,
         scenario.gammas.len() * scenario.rhos.len(),
         cfg.workers,
-        cfg.threads_per_solve
+        cfg.solve.threads,
+        scenario.regularizer.name()
     );
     let report = run_load(cfg, &scenario);
     report.print_summary();
@@ -442,6 +496,11 @@ fn cmd_info() -> Result<()> {
         grpot::simd::Dispatch::resolve(grpot::simd::SimdMode::Auto).name(),
         std::env::var("GRPOT_SIMD").unwrap_or_else(|_| "unset".into())
     );
+    println!(
+        "regularizers: group_lasso, squared_l2, negentropy (default: {}, GRPOT_REG={})",
+        RegKind::env_default().map_or("invalid", |k| k.name()),
+        std::env::var("GRPOT_REG").unwrap_or_else(|_| "unset".into())
+    );
     print_runtime_info();
     Ok(())
 }
@@ -453,6 +512,14 @@ fn main() {
     if let Ok(v) = std::env::var("GRPOT_SIMD") {
         if let Err(e) = grpot::simd::SimdMode::parse(&v) {
             eprintln!("GRPOT_SIMD: {e}");
+            std::process::exit(2);
+        }
+    }
+    // Same policy for the regularizer knob: a malformed GRPOT_REG is
+    // one clear startup error, not a late per-solve failure.
+    if let Ok(v) = std::env::var("GRPOT_REG") {
+        if let Err(e) = RegKind::parse(&v) {
+            eprintln!("GRPOT_REG: {e}");
             std::process::exit(2);
         }
     }

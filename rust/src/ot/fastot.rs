@@ -7,7 +7,11 @@
 //! observable in tests and benchmarks.
 
 use super::dual::{DualOracle, DualParams, OracleStats, OtProblem};
+use super::regularizer::{AnyRegularizer, DenseRegOracle, Regularizer};
 use super::screening::ScreeningOracle;
+use super::solve::SolveOptions;
+use crate::err;
+use crate::error::Result;
 use crate::pool::ParallelCtx;
 use crate::simd::SimdMode;
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
@@ -32,8 +36,8 @@ pub struct FastOtConfig {
     /// paper-faithful single-core default of 1. Workers are spawned
     /// once per solve (persistent parked set inside the oracle's
     /// [`crate::pool::ParallelCtx`]); callers that solve repeatedly
-    /// should pass a long-lived ctx via [`solve_fast_ot_ctx`] /
-    /// [`crate::ot::origin::solve_origin_ctx`] instead, which this
+    /// should pass a long-lived ctx via
+    /// [`crate::ot::solve::SolveOptions::ctx`] instead, which this
     /// field then defers to.
     pub threads: usize,
     /// SIMD policy for the oracle kernels: `Auto` (default) runtime-
@@ -155,6 +159,65 @@ pub fn drive_from(
     }
 }
 
+/// The screened solve every entry point funnels into: group-lasso
+/// oracle on the caller's ctx (`cfg.threads` is ignored in favor of
+/// `ctx.threads()`). The oracle's column-parallel hot loops run on the
+/// ctx's persistent parked workers, so a serving worker's consecutive
+/// solves — warm restarts included — never respawn threads. Determinism
+/// is untouched (same fixed chunk grid, same ordered reduction).
+fn solve_fast_ot_inner(
+    prob: &OtProblem,
+    cfg: &FastOtConfig,
+    x0: Vec<f64>,
+    ctx: &ParallelCtx,
+) -> FastOtResult {
+    let mut oracle =
+        ScreeningOracle::build(prob, cfg.params(), cfg.use_working_set, ctx.clone(), cfg.simd);
+    let label = if cfg.use_working_set { "fast" } else { "fast-nows" };
+    drive_from(prob, cfg, &mut oracle, label, x0)
+}
+
+/// Resolve a warm-start iterate for the full dual (dimension-checked).
+pub(crate) fn full_dual_x0(prob: &OtProblem, opts: &SolveOptions) -> Result<Vec<f64>> {
+    match &opts.warm_start {
+        Some(x0) if x0.len() != prob.dim() => Err(err!(
+            "warm-start iterate has length {}, the full dual needs m + n = {}",
+            x0.len(),
+            prob.dim()
+        )),
+        Some(x0) => Ok(x0.clone()),
+        None => Ok(vec![0.0; prob.dim()]),
+    }
+}
+
+/// The unified fast-method entry: solve the (screened, where the
+/// regularizer admits screening) full dual under `opts`.
+///
+/// * Group lasso (the default): the paper's Algorithm 1/2 path,
+///   bit-identical to [`solve_fast_ot`] — SIMD kernels, safe skipping,
+///   working set.
+/// * Squared ℓ2 / negative entropy: no screening rule exists, so the
+///   solve runs the generic dense oracle
+///   ([`crate::ot::regularizer::DenseRegOracle`]) through the same
+///   Algorithm-1 driver; the result's method label is
+///   `"fast+<regularizer>"`.
+pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<FastOtResult> {
+    let kind = opts.resolve_regularizer()?;
+    let reg = AnyRegularizer::build(kind, opts.gamma, opts.rho, &prob.groups)?;
+    let x0 = full_dual_x0(prob, opts)?;
+    let cfg = opts.fastot_config();
+    let ctx = opts.make_ctx();
+    match reg {
+        AnyRegularizer::GroupLasso(_) => Ok(solve_fast_ot_inner(prob, &cfg, x0, &ctx)),
+        other => {
+            let label =
+                format!("{}+{}", if cfg.use_working_set { "fast" } else { "fast-nows" }, other.name());
+            let mut oracle = DenseRegOracle::new(prob, other, ctx);
+            Ok(drive_from(prob, &cfg, &mut oracle, &label, x0))
+        }
+    }
+}
+
 /// Solve with the paper's method (both ideas enabled by default).
 pub fn solve_fast_ot(prob: &OtProblem, cfg: &FastOtConfig) -> FastOtResult {
     solve_fast_ot_from(prob, cfg, vec![0.0; prob.dim()])
@@ -162,30 +225,18 @@ pub fn solve_fast_ot(prob: &OtProblem, cfg: &FastOtConfig) -> FastOtResult {
 
 /// Solve with the paper's method from a warm-start iterate `x0`.
 pub fn solve_fast_ot_from(prob: &OtProblem, cfg: &FastOtConfig, x0: Vec<f64>) -> FastOtResult {
-    solve_fast_ot_ctx(prob, cfg, x0, &ParallelCtx::new(cfg.threads))
+    solve_fast_ot_inner(prob, cfg, x0, &ParallelCtx::new(cfg.threads))
 }
 
-/// [`solve_fast_ot_from`] over a caller-provided long-lived parallel
-/// context (`cfg.threads` is ignored in favor of `ctx.threads()`): the
-/// oracle's column-parallel hot loops run on the ctx's persistent
-/// parked workers, so a serving worker's consecutive solves — warm
-/// restarts included — never respawn threads. Determinism is untouched
-/// (same fixed chunk grid, same ordered reduction).
+/// [`solve_fast_ot_from`] over a caller-provided parallel context.
+#[deprecated(note = "use `fastot::solve` with `SolveOptions::ctx`/`warm_start`")]
 pub fn solve_fast_ot_ctx(
     prob: &OtProblem,
     cfg: &FastOtConfig,
     x0: Vec<f64>,
     ctx: &ParallelCtx,
 ) -> FastOtResult {
-    let mut oracle = ScreeningOracle::with_ctx_simd(
-        prob,
-        cfg.params(),
-        cfg.use_working_set,
-        ctx.clone(),
-        cfg.simd,
-    );
-    let label = if cfg.use_working_set { "fast" } else { "fast-nows" };
-    drive_from(prob, cfg, &mut oracle, label, x0)
+    solve_fast_ot_inner(prob, cfg, x0, ctx)
 }
 
 /// Per-iteration diagnostics used by the Fig. B/C benchmarks: runs the
@@ -207,7 +258,7 @@ pub fn solve_fast_ot_traced(
     cfg: &FastOtConfig,
 ) -> (FastOtResult, Vec<IterationTrace>) {
     let start = Instant::now();
-    let mut oracle = ScreeningOracle::with_ctx_simd(
+    let mut oracle = ScreeningOracle::build(
         prob,
         cfg.params(),
         cfg.use_working_set,

@@ -12,9 +12,14 @@
 //!   2017 ℓ1ℓ2 group regularization via generalized conditional
 //!   gradient).
 //! * [`emd`] — exact LP optimal transport via network simplex.
-//! * [`semidual`] — the semi-dual group-sparse formulation (extension).
+//! * [`semidual`] — the semi-dual formulation (extension).
 //! * [`pack`] — packed cost tiles for the SIMD column-lane kernels
 //!   ([`crate::simd`]).
+//! * [`regularizer`] — the pluggable [`regularizer::Regularizer`] /
+//!   [`regularizer::ScreeningRule`] traits: group lasso (the paper's,
+//!   byte-identical behind the trait), squared ℓ2 and negative entropy.
+//! * [`solve`] — the unified [`solve::SolveOptions`] builder consumed
+//!   by one `solve(problem, &opts)` entry per solver family.
 
 pub mod dual;
 pub mod emd;
@@ -22,6 +27,8 @@ pub mod fastot;
 pub mod origin;
 pub mod pack;
 pub mod plan;
+pub mod regularizer;
 pub mod screening;
 pub mod semidual;
 pub mod sinkhorn;
+pub mod solve;

@@ -6,6 +6,10 @@ use super::dual::{
     eval_dense_with, ColChunkScratch, DualOracle, DualParams, KernelConsts, OracleStats,
     OtProblem, SimdEngine,
 };
+use super::fastot::{drive_from, full_dual_x0, FastOtConfig, FastOtResult};
+use super::regularizer::{AnyRegularizer, DenseRegOracle, Regularizer};
+use super::solve::SolveOptions;
+use crate::error::Result;
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
 use crate::simd::{Dispatch, SimdMode};
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
@@ -37,21 +41,52 @@ impl<'a> OriginOracle<'a> {
     /// Create with `threads` intra-evaluation workers (1 = serial) on a
     /// fresh [`ParallelCtx`] owned by this oracle.
     pub fn with_threads(prob: &'a OtProblem, params: DualParams, threads: usize) -> Self {
-        Self::with_ctx(prob, params, ParallelCtx::new(threads))
+        Self::build(prob, params, ParallelCtx::new(threads), SimdMode::Auto)
+    }
+
+    /// Create from the unified options surface: γ/ρ, ctx/threads and
+    /// SIMD policy come from `opts` (`opts.regularizer` is not
+    /// consulted — this oracle *is* the dense group-lasso baseline; the
+    /// generic path is [`super::regularizer::DenseRegOracle`]).
+    pub fn with_options(prob: &'a OtProblem, opts: &SolveOptions) -> Self {
+        Self::build(prob, DualParams::new(opts.gamma, opts.rho), opts.make_ctx(), opts.simd)
     }
 
     /// Create over a caller-provided parallel context (the serving
     /// engine's per-worker long-lived ctx; clones share its parked
     /// worker set). SIMD policy is `Auto` (runtime-dispatched;
     /// `GRPOT_SIMD` overrides).
+    #[deprecated(note = "use `OriginOracle::with_options` with `SolveOptions::ctx`")]
     pub fn with_ctx(prob: &'a OtProblem, params: DualParams, ctx: ParallelCtx) -> Self {
-        Self::with_ctx_simd(prob, params, ctx, SimdMode::Auto)
+        Self::build(prob, params, ctx, SimdMode::Auto)
     }
 
-    /// [`OriginOracle::with_ctx`] with an explicit SIMD policy —
+    /// Caller-provided context with an explicit SIMD policy —
     /// `SimdMode::Scalar` forces the reference scalar kernels. Scalar
     /// and vector backends return byte-equal results either way.
+    #[deprecated(note = "use `OriginOracle::with_options` with `SolveOptions::ctx`/`simd`")]
     pub fn with_ctx_simd(
+        prob: &'a OtProblem,
+        params: DualParams,
+        ctx: ParallelCtx,
+        simd: SimdMode,
+    ) -> Self {
+        Self::build(prob, params, ctx, simd)
+    }
+
+    /// Convenience: fresh ctx + explicit SIMD policy (benches/tests).
+    #[deprecated(note = "use `OriginOracle::with_options` with `SolveOptions::threads`/`simd`")]
+    pub fn with_simd(
+        prob: &'a OtProblem,
+        params: DualParams,
+        threads: usize,
+        simd: SimdMode,
+    ) -> Self {
+        Self::build(prob, params, ParallelCtx::new(threads), simd)
+    }
+
+    /// The one real constructor every public entry funnels into.
+    pub(crate) fn build(
         prob: &'a OtProblem,
         params: DualParams,
         ctx: ParallelCtx,
@@ -71,16 +106,6 @@ impl<'a> OriginOracle<'a> {
             slots,
             engine,
         }
-    }
-
-    /// Convenience: fresh ctx + explicit SIMD policy (benches/tests).
-    pub fn with_simd(
-        prob: &'a OtProblem,
-        params: DualParams,
-        threads: usize,
-        simd: SimdMode,
-    ) -> Self {
-        Self::with_ctx_simd(prob, params, ParallelCtx::new(threads), simd)
     }
 
     pub fn params(&self) -> &DualParams {
@@ -119,42 +144,64 @@ impl DualOracle for OriginOracle<'_> {
     }
 }
 
+/// The dense-baseline solve every entry point funnels into
+/// (`cfg.threads` is ignored in favor of `ctx.threads()`).
+fn solve_origin_inner(
+    prob: &OtProblem,
+    cfg: &FastOtConfig,
+    x0: Vec<f64>,
+    ctx: &ParallelCtx,
+) -> FastOtResult {
+    let params = DualParams::new(cfg.gamma, cfg.rho);
+    let mut oracle = OriginOracle::build(prob, params, ctx.clone(), cfg.simd);
+    drive_from(prob, cfg, &mut oracle, "origin", x0)
+}
+
+/// The unified dense-baseline entry: solve the full dual under `opts`
+/// with no screening, whatever the regularizer.
+///
+/// * Group lasso (the default): the SIMD-kerneled [`OriginOracle`],
+///   bit-identical to [`solve_origin`].
+/// * Squared ℓ2 / negative entropy: the generic scalar
+///   [`super::regularizer::DenseRegOracle`]; the result's method label
+///   is `"origin+<regularizer>"`.
+pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<FastOtResult> {
+    let kind = opts.resolve_regularizer()?;
+    let reg = AnyRegularizer::build(kind, opts.gamma, opts.rho, &prob.groups)?;
+    let x0 = full_dual_x0(prob, opts)?;
+    let cfg = opts.fastot_config();
+    let ctx = opts.make_ctx();
+    match reg {
+        AnyRegularizer::GroupLasso(_) => Ok(solve_origin_inner(prob, &cfg, x0, &ctx)),
+        other => {
+            let label = format!("origin+{}", other.name());
+            let mut oracle = DenseRegOracle::new(prob, other, ctx);
+            Ok(drive_from(prob, &cfg, &mut oracle, &label, x0))
+        }
+    }
+}
+
 /// Solve the dual with the dense baseline. Drives L-BFGS in the same
 /// r-iteration blocks as [`crate::ot::fastot::solve_fast_ot`] so the two
 /// trajectories are directly comparable (Theorem 2).
-pub fn solve_origin(
-    prob: &OtProblem,
-    cfg: &crate::ot::fastot::FastOtConfig,
-) -> crate::ot::fastot::FastOtResult {
-    let mut oracle = OriginOracle::with_ctx_simd(
-        prob,
-        DualParams::new(cfg.gamma, cfg.rho),
-        ParallelCtx::new(cfg.threads),
-        cfg.simd,
-    );
-    crate::ot::fastot::drive(prob, cfg, &mut oracle, "origin")
+pub fn solve_origin(prob: &OtProblem, cfg: &FastOtConfig) -> FastOtResult {
+    solve_origin_from(prob, cfg, vec![0.0; prob.dim()])
 }
 
 /// Dense-baseline solve from a warm-start iterate `x0`.
-pub fn solve_origin_from(
-    prob: &OtProblem,
-    cfg: &crate::ot::fastot::FastOtConfig,
-    x0: Vec<f64>,
-) -> crate::ot::fastot::FastOtResult {
-    solve_origin_ctx(prob, cfg, x0, &ParallelCtx::new(cfg.threads))
+pub fn solve_origin_from(prob: &OtProblem, cfg: &FastOtConfig, x0: Vec<f64>) -> FastOtResult {
+    solve_origin_inner(prob, cfg, x0, &ParallelCtx::new(cfg.threads))
 }
 
-/// [`solve_origin_from`] over a caller-provided long-lived parallel
-/// context (`cfg.threads` is ignored in favor of `ctx.threads()`).
+/// [`solve_origin_from`] over a caller-provided parallel context.
+#[deprecated(note = "use `origin::solve` with `SolveOptions::ctx`/`warm_start`")]
 pub fn solve_origin_ctx(
     prob: &OtProblem,
-    cfg: &crate::ot::fastot::FastOtConfig,
+    cfg: &FastOtConfig,
     x0: Vec<f64>,
     ctx: &ParallelCtx,
-) -> crate::ot::fastot::FastOtResult {
-    let params = DualParams::new(cfg.gamma, cfg.rho);
-    let mut oracle = OriginOracle::with_ctx_simd(prob, params, ctx.clone(), cfg.simd);
-    crate::ot::fastot::drive_from(prob, cfg, &mut oracle, "origin", x0)
+) -> FastOtResult {
+    solve_origin_inner(prob, cfg, x0, ctx)
 }
 
 /// Convenience: solve with explicit L-BFGS options (tests).

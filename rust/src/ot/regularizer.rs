@@ -1,0 +1,802 @@
+//! Pluggable regularizers for the OT dual/semi-dual oracles.
+//!
+//! The paper's machinery is specific to the group-sparse (ℓ1ℓ2 + ½‖·‖²)
+//! regularizer, but the oracle structure is not: every smooth relaxed
+//! dual evaluation reduces to, per column `j`, the conjugate pair
+//!
+//! ```text
+//! ψ_j   = Ω*(f_j)          (value),      f_j = α + β_j·1 − c_j
+//! t_j   = ∇Ω*(f_j)         (gradient = transported mass)
+//! ```
+//!
+//! and every semi-dual evaluation to the constrained inner maximization
+//! `max {⟨f, t⟩ − Ω(t) : t ≥ 0, 1ᵀt = b_j}` (Blondel, Seguy & Rolet
+//! 2018's `delta_Omega` / `max_Omega` pair). The [`Regularizer`] trait
+//! captures exactly that interface; [`GroupLasso`] is the paper's
+//! regularizer moved behind it, [`SquaredL2`] and [`NegEntropy`] are the
+//! two classic smooth alternatives.
+//!
+//! Safe screening is regularizer-specific: the paper's Eq. 6/7 bounds
+//! hold for the group-lasso conjugate only. The [`ScreeningRule`] trait
+//! isolates that arithmetic, so the paper's safe-skip bound becomes one
+//! implementation of a generic screening interface
+//! ([`GroupLassoRule`], consumed by
+//! [`crate::ot::screening::ScreeningOracle`]); regularizers without a
+//! rule simply run dense.
+//!
+//! **Byte-identity contract.** [`GroupLasso::delta_omega`] performs the
+//! same floating-point operations in the same order as the scalar
+//! reference kernel [`crate::ot::dual::group_grad_contrib`], and
+//! [`DenseRegOracle`] stages/reduces per-chunk partials in the same
+//! ascending order as the dense evaluator — so a group-lasso solve
+//! through the trait is bit-identical to the pre-trait path (asserted by
+//! `tests/regularizer_equivalence.rs`). The production group-lasso path
+//! (SIMD kernels, screening, packed tiles) is untouched and stays the
+//! default.
+
+use super::dual::{DualOracle, DualParams, KernelConsts, OracleStats, OtProblem};
+use super::semidual::waterfill;
+use crate::err;
+use crate::error::Result;
+use crate::groups::GroupStructure;
+use crate::linalg::Mat;
+use crate::pool::{fixed_chunk_ranges, ParallelCtx};
+use std::ops::Range;
+
+/// Which regularizer a solve uses — the wire/CLI/config-level selector
+/// (`grpot solve --reg`, the serve request's `regularizer` field,
+/// `SweepConfig`). Parsing mirrors [`crate::coordinator::config::Method`]:
+/// unknown names are a structured error, never a panic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RegKind {
+    /// The paper's group-sparse regularizer: ½λ‖t‖² + τ Σ_l ‖t_[l]‖₂.
+    /// The only kind with a safe-screening rule; the production path.
+    #[default]
+    GroupLasso,
+    /// Squared ℓ2: (γ/2)‖t‖² (Blondel et al. 2018). Smooth dual and an
+    /// exact-marginal semi-dual (water-filling inner problem).
+    SquaredL2,
+    /// Negative entropy: γ Σ t ln t (Cuturi 2013's smoothing). Smooth
+    /// dual and a softmax semi-dual.
+    NegEntropy,
+}
+
+impl RegKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RegKind::GroupLasso => "group_lasso",
+            RegKind::SquaredL2 => "squared_l2",
+            RegKind::NegEntropy => "negentropy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RegKind> {
+        match s {
+            "group_lasso" | "group-lasso" | "grouplasso" | "gl" => Ok(RegKind::GroupLasso),
+            "squared_l2" | "squared-l2" | "l2" => Ok(RegKind::SquaredL2),
+            "negentropy" | "neg_entropy" | "entropy" => Ok(RegKind::NegEntropy),
+            other => Err(err!(
+                "unknown regularizer '{other}' (expected group_lasso|squared_l2|negentropy)"
+            )),
+        }
+    }
+
+    /// The default kind when a [`crate::ot::solve::SolveOptions`] leaves
+    /// `regularizer` unset: `GRPOT_REG` if present (a bad value is a
+    /// structured error), else [`RegKind::GroupLasso`]. Like
+    /// `GRPOT_SIMD`, the env var replaces only the unset default — an
+    /// explicit selection always wins, so the legacy (pre-trait) entry
+    /// points, which pin the group-lasso kind, can never be re-routed
+    /// by the environment.
+    pub fn env_default() -> Result<RegKind> {
+        match std::env::var("GRPOT_REG") {
+            Ok(s) => RegKind::parse(&s),
+            Err(_) => Ok(RegKind::GroupLasso),
+        }
+    }
+
+    /// Whether the kind has a safe-screening rule (Eq. 6/7 bounds).
+    pub fn supports_screening(&self) -> bool {
+        matches!(self, RegKind::GroupLasso)
+    }
+
+    /// Whether the kind has a semi-dual inner solver (`max_omega`).
+    pub fn supports_semidual(&self) -> bool {
+        !matches!(self, RegKind::GroupLasso)
+    }
+}
+
+/// Safe-screening bound arithmetic for one regularizer — the generic
+/// interface the paper's Eq. 6 (upper) and Eq. 7 (lower) bounds
+/// implement. A (group `l`, column `j`) pair whose
+/// `upper_bound ≤ threshold` is provably zero and may be skipped; one
+/// whose `lower_bound > threshold` is provably active and may bypass
+/// the check (working-set membership). Implementations must be pure
+/// functions of their scalar inputs so the screened walk stays
+/// bit-deterministic.
+pub trait ScreeningRule: Sync {
+    /// The activation threshold the bounds are compared against (τ for
+    /// the group lasso).
+    fn threshold(&self) -> f64;
+
+    /// Upper bound on `z_{l,j}` from the snapshot norm and the positive
+    /// iterate deltas (Eq. 6): sound whenever it is ≥ the exact z.
+    fn upper_bound(&self, snap_z: f64, da_pos: f64, sqrt_g: f64, db_pos: f64) -> f64;
+
+    /// Lower bound on `z_{l,j}` from the snapshot k̃/õ norms and the
+    /// iterate deltas (Eq. 7): sound whenever it is ≤ the exact z.
+    #[allow(clippy::too_many_arguments)]
+    fn lower_bound(
+        &self,
+        snap_k: f64,
+        snap_o: f64,
+        da_nrm: f64,
+        da_neg: f64,
+        sqrt_g: f64,
+        db_abs: f64,
+        db_neg: f64,
+    ) -> f64;
+}
+
+/// The paper's bounds (Lemmas 1–6) as a [`ScreeningRule`]. The bodies
+/// are the exact expressions the screened oracle inlined before the
+/// refactor — same operations, same order, so screening decisions are
+/// byte-identical.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupLassoRule {
+    /// The group-sparsity threshold τ = γρ.
+    pub tau: f64,
+}
+
+impl ScreeningRule for GroupLassoRule {
+    #[inline]
+    fn threshold(&self) -> f64 {
+        self.tau
+    }
+
+    #[inline]
+    fn upper_bound(&self, snap_z: f64, da_pos: f64, sqrt_g: f64, db_pos: f64) -> f64 {
+        snap_z + da_pos + sqrt_g * db_pos
+    }
+
+    #[inline]
+    fn lower_bound(
+        &self,
+        snap_k: f64,
+        snap_o: f64,
+        da_nrm: f64,
+        da_neg: f64,
+        sqrt_g: f64,
+        db_abs: f64,
+        db_neg: f64,
+    ) -> f64 {
+        snap_k - da_nrm - sqrt_g * db_abs - snap_o - da_neg - sqrt_g * db_neg
+    }
+}
+
+/// The conjugate value/gradient interface every dual oracle needs, plus
+/// the semi-dual inner maximization where one exists.
+///
+/// Contract:
+/// * `delta_omega(f, grad)` returns `(Ω*(f), 1ᵀ∇Ω*(f))` for one column
+///   slack vector `f = α + β_j·1 − c_j` and **accumulates** `∇Ω*(f)`
+///   into `grad` (callers pass per-chunk partial gradients).
+/// * `max_omega(f, mass, t)` solves
+///   `max {⟨f, t⟩ − Ω(t) : t ≥ 0, 1ᵀt = mass}`, writes the maximizer
+///   into `t` and returns the value — `None` when the regularizer has
+///   no semi-dual solver.
+/// * `grad_units` is the per-column unit of the `grads_computed`
+///   counter: the group lasso counts per (group, column) pair like the
+///   dense baseline; scalar regularizers count per column.
+pub trait Regularizer: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Conjugate value and mass for one column; accumulates the
+    /// conjugate gradient (= transported mass per source point) into
+    /// `grad`. Returns `(psi, mass)`.
+    fn delta_omega(&self, f: &[f64], grad: &mut [f64]) -> (f64, f64);
+
+    /// Semi-dual inner maximization under the exact column marginal;
+    /// `None` when unsupported.
+    fn max_omega(&self, _f: &[f64], _mass: f64, _t: &mut [f64]) -> Option<f64> {
+        None
+    }
+
+    /// How many `grads_computed` units one `delta_omega` call accounts
+    /// for (see trait docs).
+    fn grad_units(&self) -> u64 {
+        1
+    }
+
+    fn supports_semidual(&self) -> bool {
+        false
+    }
+
+    /// The safe-screening rule, when the conjugate admits one.
+    fn screening(&self) -> Option<&dyn ScreeningRule> {
+        None
+    }
+}
+
+/// The paper's group-sparse regularizer behind the trait: the exact
+/// scalar arithmetic of [`crate::ot::dual::group_grad_contrib`] on a
+/// materialized column (two passes per group, positive-part norm, skip
+/// at `z² ≤ τ²`).
+pub struct GroupLasso {
+    consts: KernelConsts,
+    groups: GroupStructure,
+    rule: GroupLassoRule,
+}
+
+impl GroupLasso {
+    pub fn new(params: &DualParams, groups: &GroupStructure) -> Self {
+        params.validate();
+        let consts = KernelConsts::new(params);
+        GroupLasso { rule: GroupLassoRule { tau: consts.tau }, consts, groups: groups.clone() }
+    }
+}
+
+impl Regularizer for GroupLasso {
+    fn name(&self) -> &'static str {
+        RegKind::GroupLasso.name()
+    }
+
+    fn delta_omega(&self, f: &[f64], grad: &mut [f64]) -> (f64, f64) {
+        let mut psi = 0.0;
+        let mut col_mass = 0.0;
+        for l in 0..self.groups.num_groups() {
+            let range = self.groups.range(l);
+            // Pass 1: z² = ‖[f_[l]]₊‖² — identical expression order to
+            // the fused kernel (fp recomputed in pass 2; max(f, 0) is
+            // exact, so the value is bitwise the staged one).
+            let mut zsq = 0.0;
+            for i in range.clone() {
+                let v = f[i];
+                let fp = if v > 0.0 { v } else { 0.0 };
+                zsq += fp * fp;
+            }
+            if zsq <= self.consts.tau_sq {
+                continue;
+            }
+            let z = zsq.sqrt();
+            let slack = z - self.consts.tau;
+            let scale = slack * self.consts.inv_lq / z;
+            let mut mass = 0.0;
+            for i in range {
+                let v = f[i];
+                let fp = if v > 0.0 { v } else { 0.0 };
+                let t = scale * fp;
+                grad[i] += t;
+                mass += t;
+            }
+            psi += slack * slack * self.consts.half_inv_lq;
+            col_mass += mass;
+        }
+        (psi, col_mass)
+    }
+
+    fn grad_units(&self) -> u64 {
+        self.groups.num_groups() as u64
+    }
+
+    fn screening(&self) -> Option<&dyn ScreeningRule> {
+        Some(&self.rule)
+    }
+}
+
+/// Squared-ℓ2 regularizer Ω(t) = (γ/2)‖t‖²: conjugate
+/// Ω*(f) = ‖[f]₊‖²/(2γ), ∇Ω*(f) = [f]₊/γ; the semi-dual inner problem
+/// is the water-filling / simplex projection already used by the
+/// quadratic semi-dual solver.
+pub struct SquaredL2 {
+    gamma: f64,
+}
+
+impl SquaredL2 {
+    pub fn new(gamma: f64) -> Result<Self> {
+        if !(gamma.is_finite() && gamma > 0.0) {
+            return Err(err!("squared_l2 needs gamma > 0, got {gamma}"));
+        }
+        Ok(SquaredL2 { gamma })
+    }
+}
+
+impl Regularizer for SquaredL2 {
+    fn name(&self) -> &'static str {
+        RegKind::SquaredL2.name()
+    }
+
+    fn delta_omega(&self, f: &[f64], grad: &mut [f64]) -> (f64, f64) {
+        let inv_g = 1.0 / self.gamma;
+        let mut sq = 0.0;
+        let mut mass = 0.0;
+        for (gi, &v) in grad.iter_mut().zip(f) {
+            if v > 0.0 {
+                sq += v * v;
+                let t = v * inv_g;
+                *gi += t;
+                mass += t;
+            }
+        }
+        (0.5 * sq * inv_g, mass)
+    }
+
+    fn max_omega(&self, f: &[f64], mass: f64, t: &mut [f64]) -> Option<f64> {
+        let (tv, val) = waterfill(f, self.gamma, mass);
+        t.copy_from_slice(&tv);
+        Some(val)
+    }
+
+    fn supports_semidual(&self) -> bool {
+        true
+    }
+}
+
+/// Negative-entropy regularizer Ω(t) = γ Σ t ln t: conjugate
+/// Ω*(f) = γ Σ exp(f/γ − 1) with ∇Ω*(f) = exp(f/γ − 1) (Blondel et
+/// al.'s `delta_Omega`); the semi-dual inner maximizer is the softmax
+/// `t = mass·softmax(f/γ)` with value `mass·(max + γ(ln s − ln mass))`
+/// computed in max-shifted (overflow-safe) form. The *dual* conjugate
+/// is evaluated unshifted — faithful to the reference formulas — so
+/// extremely large `f/γ` can overflow to `inf`; keep γ away from 0 on
+/// the full-dual path (the semi-dual path is stabilized).
+pub struct NegEntropy {
+    gamma: f64,
+}
+
+impl NegEntropy {
+    pub fn new(gamma: f64) -> Result<Self> {
+        if !(gamma.is_finite() && gamma > 0.0) {
+            return Err(err!("negentropy needs gamma > 0, got {gamma}"));
+        }
+        Ok(NegEntropy { gamma })
+    }
+}
+
+impl Regularizer for NegEntropy {
+    fn name(&self) -> &'static str {
+        RegKind::NegEntropy.name()
+    }
+
+    fn delta_omega(&self, f: &[f64], grad: &mut [f64]) -> (f64, f64) {
+        let inv_g = 1.0 / self.gamma;
+        let mut mass = 0.0;
+        for (gi, &v) in grad.iter_mut().zip(f) {
+            let t = (v * inv_g - 1.0).exp();
+            *gi += t;
+            mass += t;
+        }
+        (self.gamma * mass, mass)
+    }
+
+    fn max_omega(&self, f: &[f64], mass: f64, t: &mut [f64]) -> Option<f64> {
+        let mut mx = f64::NEG_INFINITY;
+        for &v in f {
+            mx = mx.max(v);
+        }
+        let inv_g = 1.0 / self.gamma;
+        let mut s = 0.0;
+        for (ti, &v) in t.iter_mut().zip(f) {
+            let e = ((v - mx) * inv_g).exp();
+            *ti = e;
+            s += e;
+        }
+        let scale = mass / s;
+        for ti in t.iter_mut() {
+            *ti *= scale;
+        }
+        Some(mass * (mx + self.gamma * (s.ln() - mass.ln())))
+    }
+
+    fn supports_semidual(&self) -> bool {
+        true
+    }
+}
+
+// `&R` works wherever `R` does — oracles borrow shared regularizers.
+impl<R: Regularizer + ?Sized> Regularizer for &R {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn delta_omega(&self, f: &[f64], grad: &mut [f64]) -> (f64, f64) {
+        (**self).delta_omega(f, grad)
+    }
+    fn max_omega(&self, f: &[f64], mass: f64, t: &mut [f64]) -> Option<f64> {
+        (**self).max_omega(f, mass, t)
+    }
+    fn grad_units(&self) -> u64 {
+        (**self).grad_units()
+    }
+    fn supports_semidual(&self) -> bool {
+        (**self).supports_semidual()
+    }
+    fn screening(&self) -> Option<&dyn ScreeningRule> {
+        (**self).screening()
+    }
+}
+
+/// Enum dispatch over the shipped regularizers — what the solve entry
+/// points instantiate from a [`RegKind`] (no boxing on the hot path;
+/// the match disappears behind the per-column call).
+pub enum AnyRegularizer {
+    GroupLasso(GroupLasso),
+    SquaredL2(SquaredL2),
+    NegEntropy(NegEntropy),
+}
+
+impl AnyRegularizer {
+    /// Instantiate `kind` for a problem's group structure and (γ, ρ).
+    /// Scalar regularizers use γ only; ρ is the group-lasso balance.
+    pub fn build(kind: RegKind, gamma: f64, rho: f64, groups: &GroupStructure) -> Result<Self> {
+        if !(gamma.is_finite() && gamma > 0.0) {
+            return Err(err!("regularizer '{}' needs gamma > 0, got {gamma}", kind.name()));
+        }
+        Ok(match kind {
+            RegKind::GroupLasso => {
+                if !(rho.is_finite() && (0.0..1.0).contains(&rho)) {
+                    return Err(err!("group_lasso needs rho in [0, 1), got {rho}"));
+                }
+                AnyRegularizer::GroupLasso(GroupLasso::new(&DualParams::new(gamma, rho), groups))
+            }
+            RegKind::SquaredL2 => AnyRegularizer::SquaredL2(SquaredL2::new(gamma)?),
+            RegKind::NegEntropy => AnyRegularizer::NegEntropy(NegEntropy::new(gamma)?),
+        })
+    }
+}
+
+impl Regularizer for AnyRegularizer {
+    fn name(&self) -> &'static str {
+        match self {
+            AnyRegularizer::GroupLasso(r) => r.name(),
+            AnyRegularizer::SquaredL2(r) => r.name(),
+            AnyRegularizer::NegEntropy(r) => r.name(),
+        }
+    }
+
+    fn delta_omega(&self, f: &[f64], grad: &mut [f64]) -> (f64, f64) {
+        match self {
+            AnyRegularizer::GroupLasso(r) => r.delta_omega(f, grad),
+            AnyRegularizer::SquaredL2(r) => r.delta_omega(f, grad),
+            AnyRegularizer::NegEntropy(r) => r.delta_omega(f, grad),
+        }
+    }
+
+    fn max_omega(&self, f: &[f64], mass: f64, t: &mut [f64]) -> Option<f64> {
+        match self {
+            AnyRegularizer::GroupLasso(r) => r.max_omega(f, mass, t),
+            AnyRegularizer::SquaredL2(r) => r.max_omega(f, mass, t),
+            AnyRegularizer::NegEntropy(r) => r.max_omega(f, mass, t),
+        }
+    }
+
+    fn grad_units(&self) -> u64 {
+        match self {
+            AnyRegularizer::GroupLasso(r) => r.grad_units(),
+            AnyRegularizer::SquaredL2(r) => r.grad_units(),
+            AnyRegularizer::NegEntropy(r) => r.grad_units(),
+        }
+    }
+
+    fn supports_semidual(&self) -> bool {
+        match self {
+            AnyRegularizer::GroupLasso(r) => r.supports_semidual(),
+            AnyRegularizer::SquaredL2(r) => r.supports_semidual(),
+            AnyRegularizer::NegEntropy(r) => r.supports_semidual(),
+        }
+    }
+
+    fn screening(&self) -> Option<&dyn ScreeningRule> {
+        match self {
+            AnyRegularizer::GroupLasso(r) => r.screening(),
+            AnyRegularizer::SquaredL2(r) => r.screening(),
+            AnyRegularizer::NegEntropy(r) => r.screening(),
+        }
+    }
+}
+
+/// Per-chunk scratch for [`DenseRegOracle`].
+struct RegChunk {
+    /// Partial ∇α contribution (length m).
+    grad_alpha: Vec<f64>,
+    /// Per-column transported mass (∂/∂β_j), length = chunk width.
+    col_mass: Vec<f64>,
+    /// `α + β_j·1 − c_j` staging buffer (length m).
+    fcol: Vec<f64>,
+    /// Partial Σ_j ψ_j, folded in ascending column order.
+    psi: f64,
+    /// `grads_computed` units this chunk contributed.
+    grads: u64,
+}
+
+/// Dense negated-dual oracle over any [`Regularizer`] — the generic
+/// counterpart of [`crate::ot::origin::OriginOracle`]. Column chunks
+/// evaluate in parallel on the context's persistent parked workers and
+/// partials combine in fixed ascending chunk order, so results are
+/// bit-identical for every thread count; for [`GroupLasso`] the whole
+/// evaluation is additionally bit-identical to the specialized dense
+/// evaluator (same per-element arithmetic, same accumulation order).
+/// The walk is scalar — regularizer-specific SIMD stays with the
+/// specialized group-lasso kernels.
+pub struct DenseRegOracle<'a, R: Regularizer> {
+    prob: &'a OtProblem,
+    reg: R,
+    ctx: ParallelCtx,
+    ranges: Vec<Range<usize>>,
+    slots: Vec<RegChunk>,
+    stats: OracleStats,
+}
+
+impl<'a, R: Regularizer> DenseRegOracle<'a, R> {
+    pub fn new(prob: &'a OtProblem, reg: R, ctx: ParallelCtx) -> Self {
+        let m = prob.m();
+        let ranges = fixed_chunk_ranges(prob.n());
+        let slots = ranges
+            .iter()
+            .map(|r| RegChunk {
+                grad_alpha: vec![0.0; m],
+                col_mass: vec![0.0; r.len()],
+                fcol: vec![0.0; m],
+                psi: 0.0,
+                grads: 0,
+            })
+            .collect();
+        DenseRegOracle { prob, reg, ctx, ranges, slots, stats: OracleStats::default() }
+    }
+
+    pub fn regularizer(&self) -> &R {
+        &self.reg
+    }
+}
+
+impl<R: Regularizer> DualOracle for DenseRegOracle<'_, R> {
+    fn shape(&self) -> (usize, usize) {
+        (self.prob.m(), self.prob.n())
+    }
+
+    fn eval(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let m = self.prob.m();
+        let n = self.prob.n();
+        debug_assert_eq!(x.len(), m + n);
+        debug_assert_eq!(grad.len(), m + n);
+        let (alpha, beta) = x.split_at(m);
+        for (gi, &ai) in grad[..m].iter_mut().zip(&self.prob.a) {
+            *gi = -ai;
+        }
+        for (gj, &bj) in grad[m..].iter_mut().zip(&self.prob.b) {
+            *gj = -bj;
+        }
+        let (grad_alpha, grad_beta) = grad.split_at_mut(m);
+
+        let prob = self.prob;
+        let reg = &self.reg;
+        let units = reg.grad_units();
+        self.ctx.map_chunks(&self.ranges, &mut self.slots, |_, range, slot| {
+            slot.psi = 0.0;
+            slot.grads = 0;
+            for v in slot.grad_alpha.iter_mut() {
+                *v = 0.0;
+            }
+            for (k, j) in range.enumerate() {
+                let c_j = prob.cost_t().row(j);
+                let beta_j = beta[j];
+                for ((fi, &ai), &ci) in slot.fcol.iter_mut().zip(alpha).zip(c_j) {
+                    *fi = ai + beta_j - ci;
+                }
+                let (psi, mass) = reg.delta_omega(&slot.fcol, &mut slot.grad_alpha);
+                slot.psi += psi;
+                slot.col_mass[k] = mass;
+                slot.grads += units;
+            }
+        });
+
+        // Ordered reduction, ascending chunks — the determinism (and,
+        // for the group lasso, byte-identity) anchor.
+        let mut psi_total = 0.0;
+        let mut grads = 0u64;
+        for (slot, range) in self.slots.iter().zip(&self.ranges) {
+            psi_total += slot.psi;
+            grads += slot.grads;
+            for (g, &p) in grad_alpha.iter_mut().zip(&slot.grad_alpha) {
+                *g += p;
+            }
+            for (k, j) in range.clone().enumerate() {
+                grad_beta[j] += slot.col_mass[k];
+            }
+        }
+        self.stats.grads_computed += grads;
+        self.stats.record_eval(grads);
+
+        let dual = crate::linalg::dot(alpha, &self.prob.a)
+            + crate::linalg::dot(beta, &self.prob.b)
+            - psi_total;
+        -dual
+    }
+
+    fn stats(&self) -> &OracleStats {
+        &self.stats
+    }
+}
+
+/// Recover the transport plan at a full-dual solution `x = [α; β]` for
+/// any regularizer: column `j` of the plan is `∇Ω*(α + β_j·1 − c_j)`.
+/// (For the group lasso this reproduces the specialized
+/// [`crate::ot::plan`] recovery.)
+pub fn recover_plan_reg(prob: &OtProblem, reg: &dyn Regularizer, x: &[f64]) -> Mat {
+    let m = prob.m();
+    let n = prob.n();
+    assert_eq!(x.len(), m + n);
+    let (alpha, beta) = x.split_at(m);
+    let mut plan = Mat::zeros(m, n);
+    let mut fcol = vec![0.0; m];
+    let mut tcol = vec![0.0; m];
+    for j in 0..n {
+        let c_j = prob.cost_t().row(j);
+        for i in 0..m {
+            fcol[i] = alpha[i] + beta[j] - c_j[i];
+        }
+        for v in tcol.iter_mut() {
+            *v = 0.0;
+        }
+        reg.delta_omega(&fcol, &mut tcol);
+        for (i, &t) in tcol.iter().enumerate() {
+            plan[(i, j)] = t;
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ot::dual::eval_dense;
+    use crate::rng::Pcg64;
+
+    fn random_problem(seed: u64, l: usize, g: usize, n: usize) -> OtProblem {
+        let mut rng = Pcg64::new(seed);
+        let m = l * g;
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+        let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+        OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+    }
+
+    #[test]
+    fn regkind_parse_roundtrip_and_errors() {
+        for k in [RegKind::GroupLasso, RegKind::SquaredL2, RegKind::NegEntropy] {
+            assert_eq!(RegKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(RegKind::parse("l2").unwrap(), RegKind::SquaredL2);
+        assert_eq!(RegKind::parse("entropy").unwrap(), RegKind::NegEntropy);
+        let e = RegKind::parse("bogus").unwrap_err();
+        assert!(e.0.contains("unknown regularizer"), "{e}");
+        assert!(RegKind::GroupLasso.supports_screening());
+        assert!(!RegKind::SquaredL2.supports_screening());
+        assert!(RegKind::NegEntropy.supports_semidual());
+        assert!(!RegKind::GroupLasso.supports_semidual());
+    }
+
+    #[test]
+    fn build_rejects_bad_hyperparameters() {
+        let prob = random_problem(1, 2, 2, 3);
+        for kind in [RegKind::GroupLasso, RegKind::SquaredL2, RegKind::NegEntropy] {
+            assert!(AnyRegularizer::build(kind, 0.0, 0.5, &prob.groups).is_err());
+            assert!(AnyRegularizer::build(kind, f64::NAN, 0.5, &prob.groups).is_err());
+        }
+        assert!(AnyRegularizer::build(RegKind::GroupLasso, 1.0, 1.0, &prob.groups).is_err());
+        assert!(AnyRegularizer::build(RegKind::GroupLasso, 1.0, 0.0, &prob.groups).is_ok());
+    }
+
+    /// The anchor test: a group-lasso trait evaluation is bitwise equal
+    /// to the specialized dense evaluator at arbitrary points.
+    #[test]
+    fn group_lasso_trait_eval_matches_dense_bitwise() {
+        let prob = random_problem(7, 4, 3, 23);
+        for (gamma, rho) in [(0.1, 0.3), (1.0, 0.5), (8.0, 0.8)] {
+            let params = DualParams::new(gamma, rho);
+            let reg = GroupLasso::new(&params, &prob.groups);
+            for threads in [1usize, 4] {
+                let mut oracle = DenseRegOracle::new(&prob, &reg, ParallelCtx::new(threads));
+                let mut rng = Pcg64::new(0xF00D);
+                let mut x = vec![0.0; prob.dim()];
+                for _ in 0..6 {
+                    for v in x.iter_mut() {
+                        *v += rng.uniform(-0.3, 0.35);
+                    }
+                    let mut g1 = vec![0.0; prob.dim()];
+                    let f1 = oracle.eval(&x, &mut g1);
+                    let mut g2 = vec![0.0; prob.dim()];
+                    let (f2, n2) = eval_dense(&prob, &params, &x, &mut g2);
+                    assert_eq!(f1, f2, "objective γ={gamma} ρ={rho} threads={threads}");
+                    assert_eq!(g1, g2, "gradient γ={gamma} ρ={rho} threads={threads}");
+                    assert_eq!(oracle.stats().per_eval_grads.last(), Some(&n2));
+                }
+            }
+        }
+    }
+
+    fn finite_diff_check(reg: &dyn Regularizer, seed: u64) {
+        // ψ and ∇ψ from delta_omega must be consistent: central
+        // differences of the value against the returned gradient.
+        let mut rng = Pcg64::new(seed);
+        let m = 7;
+        let f: Vec<f64> = (0..m).map(|_| rng.uniform(-0.8, 0.9)).collect();
+        let val_of = |f: &[f64]| {
+            let mut sink = vec![0.0; m];
+            reg.delta_omega(f, &mut sink).0
+        };
+        let mut grad = vec![0.0; m];
+        reg.delta_omega(&f, &mut grad);
+        let h = 1e-6;
+        for i in 0..m {
+            let mut fp = f.clone();
+            fp[i] += h;
+            let mut fm = f.clone();
+            fm[i] -= h;
+            let fd = (val_of(&fp) - val_of(&fm)) / (2.0 * h);
+            assert!(
+                (fd - grad[i]).abs() <= 1e-5 * (1.0 + fd.abs()),
+                "coordinate {i}: fd={fd} grad={}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_regularizer_gradients_match_finite_differences() {
+        finite_diff_check(&SquaredL2::new(0.7).unwrap(), 11);
+        finite_diff_check(&NegEntropy::new(0.7).unwrap(), 13);
+        let prob = random_problem(5, 3, 2, 4);
+        let gl = GroupLasso::new(&DualParams::new(0.6, 0.4), &prob.groups);
+        // Group-lasso conjugate is C¹ too (away from the kink z = τ).
+        finite_diff_check(&gl, 17);
+    }
+
+    #[test]
+    fn negentropy_max_omega_is_softmax() {
+        let reg = NegEntropy::new(0.5).unwrap();
+        let f = [0.3, -0.2, 0.9, 0.1];
+        let mass = 0.25;
+        let mut t = [0.0; 4];
+        let val = reg.max_omega(&f, mass, &mut t).unwrap();
+        // Marginal holds exactly up to roundoff.
+        let s: f64 = t.iter().sum();
+        assert!((s - mass).abs() < 1e-12, "mass {s}");
+        // Closed form: t_i ∝ exp(f_i/γ).
+        let w: Vec<f64> = f.iter().map(|&v| (v / 0.5).exp()).collect();
+        let ws: f64 = w.iter().sum();
+        for (ti, wi) in t.iter().zip(&w) {
+            assert!((ti - mass * wi / ws).abs() < 1e-12);
+        }
+        // Value matches ⟨f, t⟩ − γ Σ t ln t.
+        let direct: f64 = f.iter().zip(&t).map(|(&fi, &ti)| fi * ti).sum::<f64>()
+            - 0.5 * t.iter().map(|&ti| ti * ti.ln()).sum::<f64>();
+        assert!((val - direct).abs() < 1e-12, "val={val} direct={direct}");
+    }
+
+    #[test]
+    fn squared_l2_max_omega_delegates_to_waterfill() {
+        let reg = SquaredL2::new(0.7).unwrap();
+        let f = [1.0, -0.5, 0.3, 0.0];
+        let mut t = [0.0; 4];
+        let val = reg.max_omega(&f, 1.0, &mut t).unwrap();
+        let (tw, vw) = waterfill(&f, 0.7, 1.0);
+        assert_eq!(t.to_vec(), tw);
+        assert_eq!(val, vw);
+    }
+
+    #[test]
+    fn recover_plan_reg_columns_are_conjugate_gradients() {
+        let prob = random_problem(3, 3, 2, 5);
+        let reg = SquaredL2::new(0.4).unwrap();
+        let mut rng = Pcg64::new(21);
+        let x: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.4, 0.5)).collect();
+        let plan = recover_plan_reg(&prob, &reg, &x);
+        let (alpha, beta) = x.split_at(prob.m());
+        for j in 0..prob.n() {
+            let c_j = prob.cost_t().row(j);
+            for i in 0..prob.m() {
+                let want = ((alpha[i] + beta[j] - c_j[i]).max(0.0)) / 0.4;
+                assert!((plan[(i, j)] - want).abs() < 1e-15);
+            }
+        }
+    }
+}

@@ -18,11 +18,20 @@
 //! exact same kernel as the dense baseline
 //! ([`crate::ot::dual::group_grad_contrib`]), so the optimization
 //! trajectory is identical (Theorem 2).
+//!
+//! The bound arithmetic itself lives in the
+//! [`crate::ot::regularizer::ScreeningRule`] implementation
+//! [`GroupLassoRule`] — the paper's Eq. 6/7 as one instance of the
+//! generic screening interface. The rule is a statically dispatched
+//! field, so the screened walk compiles to the same code as the
+//! pre-trait inlined expressions and every decision stays byte-equal.
 
 use super::dual::{
     exact_z, panel_count, panel_ranges, quad_pair, reduce_chunks, scalar_pair, ColChunkScratch,
     DualOracle, DualParams, KernelConsts, OracleStats, OtProblem, SimdEngine, PANEL_COLS,
 };
+use super::regularizer::{GroupLassoRule, ScreeningRule};
+use super::solve::SolveOptions;
 use crate::linalg;
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
 use crate::simd::{snapshot_quad, Dispatch, SimdMode, LANES};
@@ -105,6 +114,14 @@ pub struct ScreeningOracle<'a> {
     params: DualParams,
     /// Precomputed (γ, ρ)-derived kernel constants (τ, τ², 1/λ, …).
     consts: KernelConsts,
+    /// The paper's Eq. 6/7 bounds as a [`ScreeningRule`] — the safe-skip
+    /// arithmetic this oracle consults (statically dispatched, inlined:
+    /// the expressions are byte-identical to the pre-trait inlined
+    /// forms). The oracle itself remains group-lasso-specific (its
+    /// snapshot norms are positive-part group norms); other
+    /// regularizers run dense via
+    /// [`crate::ot::regularizer::DenseRegOracle`].
+    rule: GroupLassoRule,
     use_ws: bool,
     // Snapshot state (Definitions 1–2), refreshed by `refresh`.
     snap_alpha: Vec<f64>,
@@ -158,31 +175,54 @@ impl<'a> ScreeningOracle<'a> {
         use_working_set: bool,
         threads: usize,
     ) -> Self {
-        Self::with_ctx(prob, params, use_working_set, ParallelCtx::new(threads))
+        Self::build(prob, params, use_working_set, ParallelCtx::new(threads), SimdMode::Auto)
     }
 
-    /// [`ScreeningOracle::new`] over a caller-provided parallel context
-    /// — the serving engine threads one long-lived ctx per engine
-    /// worker through every solve, so oracle workers are spawned once
-    /// per engine worker, not once per solve (let alone per eval).
-    /// Evaluations, snapshot refreshes and working-set rebuilds shard
-    /// over fixed column chunks with a deterministic ordered reduction,
-    /// so every thread count (including 1) produces bit-identical
-    /// gradients, objectives and screening decisions.
+    /// Create from a [`SolveOptions`] — the builder-API constructor.
+    /// `opts.regularizer` is not consulted: this oracle *is* the
+    /// group-lasso screened oracle (γ = `opts.gamma`, ρ = `opts.rho`);
+    /// the regularizer-dispatched entry is [`crate::ot::fastot::solve`].
+    pub fn with_options(prob: &'a OtProblem, opts: &SolveOptions) -> Self {
+        Self::build(
+            prob,
+            DualParams::new(opts.gamma, opts.rho),
+            opts.use_working_set,
+            opts.make_ctx(),
+            opts.simd,
+        )
+    }
+
+    /// [`ScreeningOracle::new`] over a caller-provided parallel context.
+    #[deprecated(note = "use `ScreeningOracle::with_options` with `SolveOptions::ctx`")]
     pub fn with_ctx(
         prob: &'a OtProblem,
         params: DualParams,
         use_working_set: bool,
         ctx: ParallelCtx,
     ) -> Self {
-        Self::with_ctx_simd(prob, params, use_working_set, ctx, SimdMode::Auto)
+        Self::build(prob, params, use_working_set, ctx, SimdMode::Auto)
     }
 
-    /// [`ScreeningOracle::with_ctx`] with an explicit SIMD policy —
-    /// `SimdMode::Scalar` forces the reference scalar kernels (and
-    /// skips packing the cost tiles). Every backend returns byte-equal
-    /// gradients, objectives, screening decisions and counters.
+    /// [`ScreeningOracle::new`] with a ctx and an explicit SIMD policy.
+    #[deprecated(note = "use `ScreeningOracle::with_options` with `SolveOptions::ctx`/`simd`")]
     pub fn with_ctx_simd(
+        prob: &'a OtProblem,
+        params: DualParams,
+        use_working_set: bool,
+        ctx: ParallelCtx,
+        simd: SimdMode,
+    ) -> Self {
+        Self::build(prob, params, use_working_set, ctx, simd)
+    }
+
+    /// The real constructor behind every entry point: snapshots at
+    /// `x = 0`, ℕ = ∅, a fixed column-chunk grid over the caller's
+    /// parallel context and a resolved SIMD engine. Evaluations,
+    /// snapshot refreshes and working-set rebuilds shard over the fixed
+    /// chunks with a deterministic ordered reduction, so every thread
+    /// count (including 1) and every SIMD backend produces bit-identical
+    /// gradients, objectives, screening decisions and counters.
+    pub(crate) fn build(
         prob: &'a OtProblem,
         params: DualParams,
         use_working_set: bool,
@@ -204,9 +244,11 @@ impl<'a> ScreeningOracle<'a> {
             panel_off.push(total_panels);
             total_panels += panel_count(r.len());
         }
+        let consts = KernelConsts::new(&params);
         let mut o = ScreeningOracle {
             prob,
-            consts: KernelConsts::new(&params),
+            rule: GroupLassoRule { tau: consts.tau },
+            consts,
             params,
             use_ws: use_working_set,
             snap_alpha: vec![0.0; m],
@@ -229,7 +271,8 @@ impl<'a> ScreeningOracle<'a> {
         o
     }
 
-    /// Convenience: fresh ctx + explicit SIMD policy (benches/tests).
+    /// Convenience: fresh ctx + explicit SIMD policy.
+    #[deprecated(note = "use `ScreeningOracle::with_options` with `SolveOptions::threads`/`simd`")]
     pub fn with_simd(
         prob: &'a OtProblem,
         params: DualParams,
@@ -237,7 +280,13 @@ impl<'a> ScreeningOracle<'a> {
         threads: usize,
         simd: SimdMode,
     ) -> Self {
-        Self::with_ctx_simd(prob, params, use_working_set, ParallelCtx::new(threads), simd)
+        Self::build(prob, params, use_working_set, ParallelCtx::new(threads), simd)
+    }
+
+    /// The safe-screening rule this oracle consults (the paper's Eq.
+    /// 6/7 bounds).
+    pub fn rule(&self) -> &dyn ScreeningRule {
+        &self.rule
     }
 
     pub fn params(&self) -> &DualParams {
@@ -412,7 +461,8 @@ impl<'a> ScreeningOracle<'a> {
         let snap_k = &self.snap_k;
         let snap_o = &self.snap_o;
         let (da_nrm, da_neg) = (&da_nrm, &da_neg);
-        let tau = self.consts.tau;
+        let rule = &self.rule;
+        let tau = rule.threshold();
         let ranges = &self.ranges;
 
         struct WsPart<'s> {
@@ -432,13 +482,16 @@ impl<'a> ScreeningOracle<'a> {
                 let base = col * num_groups;
                 let snap_base = j * num_groups;
                 for l in 0..num_groups {
-                    // Eq. 7.
-                    let lower = snap_k[snap_base + l]
-                        - da_nrm[l]
-                        - sqrt_g[l] * db_abs
-                        - snap_o[snap_base + l]
-                        - da_neg[l]
-                        - sqrt_g[l] * db_neg;
+                    // Eq. 7 (the rule's lower bound).
+                    let lower = rule.lower_bound(
+                        snap_k[snap_base + l],
+                        snap_o[snap_base + l],
+                        da_nrm[l],
+                        da_neg[l],
+                        sqrt_g[l],
+                        db_abs,
+                        db_neg,
+                    );
                     let member = lower > tau;
                     part.mask[base + l] = member;
                     part.members += usize::from(member);
@@ -486,16 +539,19 @@ impl<'a> ScreeningOracle<'a> {
             let base = j * num_groups;
             for l in 0..num_groups {
                 let z = exact_z(alpha, beta_j, c_j, self.prob.groups.range(l));
-                let ub = self.snap_z[base + l] + da_pos[l] + sqrt_g[l] * db_pos;
+                let ub = self.rule.upper_bound(self.snap_z[base + l], da_pos[l], sqrt_g[l], db_pos);
                 out.mean_upper += ub - z;
                 out.max_upper = out.max_upper.max(ub - z);
                 if self.use_ws {
-                    let lb = self.snap_k[base + l]
-                        - da_nrm[l]
-                        - sqrt_g[l] * db_abs
-                        - self.snap_o[base + l]
-                        - da_neg[l]
-                        - sqrt_g[l] * db_neg;
+                    let lb = self.rule.lower_bound(
+                        self.snap_k[base + l],
+                        self.snap_o[base + l],
+                        da_nrm[l],
+                        da_neg[l],
+                        sqrt_g[l],
+                        db_abs,
+                        db_neg,
+                    );
                     out.mean_lower += z - lb;
                     out.max_lower = out.max_lower.max(z - lb);
                 }
@@ -541,7 +597,8 @@ impl DualOracle for ScreeningOracle<'_> {
         let (grad_alpha, grad_beta) = grad.split_at_mut(m);
 
         let consts = &self.consts;
-        let tau = consts.tau;
+        let rule = &self.rule;
+        let tau = rule.threshold();
         let prob = self.prob;
         let sqrt_g = &prob.groups.sqrt_sizes;
         let snap_z = &self.snap_z;
@@ -593,8 +650,11 @@ impl DualOracle for ScreeningOracle<'_> {
                 let pmax_base = (panel_off[c] + p) * num_groups;
                 for l in 0..num_groups {
                     // O(1) quiet-panel screen (valid upper bound on
-                    // every pair's z̄ in the panel).
-                    if snap_z_pmax[pmax_base + l] + da_pos[l] + sqrt_g[l] * db_max <= tau {
+                    // every pair's z̄ in the panel — the rule applied
+                    // to the panel-max snapshot norm).
+                    if rule.upper_bound(snap_z_pmax[pmax_base + l], da_pos[l], sqrt_g[l], db_max)
+                        <= tau
+                    {
                         slot.ub_checks += plen as u64;
                         slot.skipped += plen as u64;
                         continue;
@@ -613,7 +673,8 @@ impl DualOracle for ScreeningOracle<'_> {
                         } else {
                             // Upper bound check (Alg. 2 lines 6–13).
                             slot.ub_checks += 1;
-                            let ub = snap_z[base + l] + da_pos[l] + sqrt_g[l] * db_pos[t];
+                            let ub =
+                                rule.upper_bound(snap_z[base + l], da_pos[l], sqrt_g[l], db_pos[t]);
                             if ub <= tau {
                                 slot.skipped += 1;
                                 false
@@ -764,10 +825,12 @@ mod tests {
         let prob = random_problem(3, 4, 3, 23);
         let params = DualParams::new(0.5, 0.6);
         for ws in [false, true] {
-            let mut scalar = ScreeningOracle::with_simd(&prob, params, ws, 1, SimdMode::Scalar);
-            let mut auto = ScreeningOracle::with_simd(&prob, params, ws, 1, SimdMode::Auto);
-            let mut portable =
-                ScreeningOracle::with_simd(&prob, params, ws, 2, SimdMode::Portable);
+            let of = |threads: usize, simd| {
+                ScreeningOracle::build(&prob, params, ws, ParallelCtx::new(threads), simd)
+            };
+            let mut scalar = of(1, SimdMode::Scalar);
+            let mut auto = of(1, SimdMode::Auto);
+            let mut portable = of(2, SimdMode::Portable);
             let mut rng = Pcg64::new(5);
             let mut x = vec![0.0; prob.dim()];
             for step in 0..10 {

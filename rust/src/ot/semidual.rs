@@ -22,6 +22,10 @@
 //! relaxed dual only approaches them as γ → 0).
 
 use super::dual::{DualOracle, OracleStats, OtProblem};
+use super::regularizer::{AnyRegularizer, Regularizer};
+use super::solve::SolveOptions;
+use crate::err;
+use crate::error::Result;
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
 use crate::simd::{sub_into, Dispatch, SimdMode};
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
@@ -100,19 +104,31 @@ impl<'a> SemiDualOracle<'a> {
     /// Create with `threads` intra-evaluation workers (1 = serial) on a
     /// fresh [`ParallelCtx`] owned by this oracle.
     pub fn with_threads(prob: &'a OtProblem, gamma: f64, threads: usize) -> Self {
-        Self::with_ctx(prob, gamma, ParallelCtx::new(threads))
+        Self::build(prob, gamma, ParallelCtx::new(threads), SimdMode::Auto)
     }
 
     /// Create over a caller-provided long-lived parallel context: the
     /// inner column problems run on its persistent parked workers, so
     /// repeated solves reuse one worker set instead of forking per
     /// evaluation. SIMD policy is `Auto` (`GRPOT_SIMD` overrides).
+    #[deprecated(note = "use `semidual::solve` with `SolveOptions::ctx`")]
     pub fn with_ctx(prob: &'a OtProblem, gamma: f64, ctx: ParallelCtx) -> Self {
-        Self::with_ctx_simd(prob, gamma, ctx, SimdMode::Auto)
+        Self::build(prob, gamma, ctx, SimdMode::Auto)
     }
 
-    /// [`SemiDualOracle::with_ctx`] with an explicit SIMD policy.
+    /// Caller-provided context with an explicit SIMD policy.
+    #[deprecated(note = "use `semidual::solve` with `SolveOptions::ctx`/`simd`")]
     pub fn with_ctx_simd(
+        prob: &'a OtProblem,
+        gamma: f64,
+        ctx: ParallelCtx,
+        simd: SimdMode,
+    ) -> Self {
+        Self::build(prob, gamma, ctx, simd)
+    }
+
+    /// The one real constructor every public entry funnels into.
+    pub(crate) fn build(
         prob: &'a OtProblem,
         gamma: f64,
         ctx: ParallelCtx,
@@ -190,6 +206,110 @@ impl DualOracle for SemiDualOracle<'_> {
     }
 }
 
+/// Per-chunk scratch for the generic semi-dual evaluation.
+struct SemiRegChunk {
+    /// Partial `Σ_j t_j` gradient contribution (length m).
+    grad: Vec<f64>,
+    /// `α − c_j` staging buffer (length m).
+    fcol: Vec<f64>,
+    /// Inner-solution buffer for `max_omega` (length m).
+    tbuf: Vec<f64>,
+    /// Partial `Σ_j val_j`.
+    semid: f64,
+}
+
+/// Negated semi-dual oracle over α for *any* regularizer whose
+/// [`Regularizer::max_omega`] is implemented (squared ℓ2, negative
+/// entropy). Mirrors [`SemiDualOracle`] exactly — same fixed chunk
+/// grid, same staging (`fcol[i] = α_i − c_ij`, bitwise equal to the
+/// SIMD `sub_into` since element-wise IEEE subtraction is exact), same
+/// ordered reduction, same [`OracleStats`] accounting — so routing the
+/// quadratic regularizer through the trait is byte-identical to the
+/// legacy oracle.
+pub struct SemiRegOracle<'a, R: Regularizer> {
+    prob: &'a OtProblem,
+    reg: R,
+    ctx: ParallelCtx,
+    ranges: Vec<Range<usize>>,
+    slots: Vec<SemiRegChunk>,
+    stats: OracleStats,
+}
+
+impl<'a, R: Regularizer> SemiRegOracle<'a, R> {
+    /// Panics if `reg` does not support the semi-dual (no `max_omega`).
+    pub fn new(prob: &'a OtProblem, reg: R, ctx: ParallelCtx) -> Self {
+        assert!(
+            reg.supports_semidual(),
+            "regularizer '{}' has no semi-dual inner maximization",
+            reg.name()
+        );
+        let m = prob.m();
+        let ranges = fixed_chunk_ranges(prob.n());
+        let slots = (0..ranges.len())
+            .map(|_| SemiRegChunk {
+                grad: vec![0.0; m],
+                fcol: vec![0.0; m],
+                tbuf: vec![0.0; m],
+                semid: 0.0,
+            })
+            .collect();
+        SemiRegOracle { prob, reg, ctx, ranges, slots, stats: OracleStats::default() }
+    }
+
+    pub fn regularizer(&self) -> &R {
+        &self.reg
+    }
+}
+
+impl<R: Regularizer> DualOracle for SemiRegOracle<'_, R> {
+    fn shape(&self) -> (usize, usize) {
+        (self.prob.m(), 0)
+    }
+
+    fn eval(&mut self, alpha: &[f64], grad: &mut [f64]) -> f64 {
+        let m = self.prob.m();
+        let n = self.prob.n();
+        assert_eq!(alpha.len(), m);
+        for (g, &ai) in grad.iter_mut().zip(&self.prob.a) {
+            *g = -ai;
+        }
+        let prob = self.prob;
+        let reg = &self.reg;
+        self.ctx.map_chunks(&self.ranges, &mut self.slots, |_, range, slot| {
+            slot.semid = 0.0;
+            for v in slot.grad.iter_mut() {
+                *v = 0.0;
+            }
+            for j in range {
+                let c_j = prob.cost_t().row(j);
+                for (fi, (&ai, &ci)) in slot.fcol.iter_mut().zip(alpha.iter().zip(c_j)) {
+                    *fi = ai - ci;
+                }
+                let val = reg
+                    .max_omega(&slot.fcol, prob.b[j], &mut slot.tbuf)
+                    .expect("constructor checked semi-dual support");
+                slot.semid += val;
+                for (g, &ti) in slot.grad.iter_mut().zip(&slot.tbuf) {
+                    *g += ti;
+                }
+            }
+        });
+        let mut semid = crate::linalg::dot(alpha, &self.prob.a);
+        for slot in &self.slots {
+            semid -= slot.semid;
+            for (g, &pi) in grad.iter_mut().zip(&slot.grad) {
+                *g += pi;
+            }
+        }
+        self.stats.record_eval(n as u64);
+        -semid
+    }
+
+    fn stats(&self) -> &OracleStats {
+        &self.stats
+    }
+}
+
 /// Result of the semi-dual solve.
 pub struct SemiDualResult {
     pub alpha: Vec<f64>,
@@ -198,25 +318,89 @@ pub struct SemiDualResult {
     pub iterations: usize,
 }
 
+/// The unified semi-dual entry: solve `max_α αᵀa + Σ_j b_j σ_j(α)`
+/// under `opts` for any regularizer with a semi-dual inner
+/// maximization.
+///
+/// * Squared ℓ2: byte-identical to [`solve_semidual`] at the same
+///   γ/L-BFGS options (the trait path stages and water-fills in the
+///   exact legacy order).
+/// * Negative entropy: the inner problem is a stabilized softmax —
+///   the plan's columns hit the marginals `b` exactly by construction.
+/// * Group lasso couples rows *within* a group across the column
+///   simplex, so no separable `max_omega` exists: requesting it is a
+///   structured error, not a panic.
+///
+/// `opts.warm_start`, when set, is the initial `α` (length m);
+/// `opts.simd` is ignored (the generic staging loop is scalar and
+/// bitwise equal to the SIMD staging); `opts.rho`/`opts.r`/
+/// `opts.use_working_set` do not apply to the semi-dual.
+pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<SemiDualResult> {
+    let kind = opts.resolve_regularizer()?;
+    if !kind.supports_semidual() {
+        return Err(err!(
+            "regularizer '{}' has no semi-dual (group coupling breaks column separability); \
+             use squared_l2 or negentropy, or solve the full dual instead",
+            kind.name()
+        ));
+    }
+    let reg = AnyRegularizer::build(kind, opts.gamma, opts.rho, &prob.groups)?;
+    let m = prob.m();
+    let n = prob.n();
+    let x0 = match &opts.warm_start {
+        Some(a0) if a0.len() != m => {
+            return Err(err!(
+                "warm-start iterate has length {}, the semi-dual needs m = {}",
+                a0.len(),
+                m
+            ))
+        }
+        Some(a0) => a0.clone(),
+        None => vec![0.0; m],
+    };
+    let mut oracle = SemiRegOracle::new(prob, &reg, opts.make_ctx());
+    let mut solver = Lbfgs::new(x0, opts.lbfgs.clone(), &mut oracle);
+    solver.run(&mut oracle);
+    let iterations = solver.iterations();
+    let (alpha, f) = solver.into_solution();
+    let mut plan = crate::linalg::Mat::zeros(m, n);
+    let mut fcol = vec![0.0; m];
+    let mut t = vec![0.0; m];
+    for j in 0..n {
+        let c_j = prob.cost_t().row(j);
+        for i in 0..m {
+            fcol[i] = alpha[i] - c_j[i];
+        }
+        reg.max_omega(&fcol, prob.b[j], &mut t)
+            .expect("support checked above");
+        for i in 0..m {
+            plan[(i, j)] = t[i];
+        }
+    }
+    Ok(SemiDualResult { alpha, objective: -f, plan, iterations })
+}
+
 /// Solve the quadratic semi-dual with L-BFGS and recover the plan.
 pub fn solve_semidual(prob: &OtProblem, gamma: f64, opts: &LbfgsOptions) -> SemiDualResult {
-    solve_semidual_threads(prob, gamma, opts, 1)
+    solve_semidual_inner(prob, gamma, opts, &ParallelCtx::new(1), SimdMode::Auto)
 }
 
 /// [`solve_semidual`] with `threads` intra-solve oracle workers —
 /// bit-identical to the serial solve for every thread count.
+#[deprecated(note = "use `semidual::solve` with `SolveOptions::threads`")]
 pub fn solve_semidual_threads(
     prob: &OtProblem,
     gamma: f64,
     opts: &LbfgsOptions,
     threads: usize,
 ) -> SemiDualResult {
-    solve_semidual_ctx(prob, gamma, opts, &ParallelCtx::new(threads))
+    solve_semidual_inner(prob, gamma, opts, &ParallelCtx::new(threads), SimdMode::Auto)
 }
 
-/// [`solve_semidual_threads`] with an explicit SIMD policy
+/// [`solve_semidual`] with an explicit SIMD policy
 /// (`SimdMode::Scalar` forces the scalar staging loop) — byte-equal
 /// results on every backend; `tests/simd_equivalence.rs` asserts it.
+#[deprecated(note = "use `semidual::solve` with `SolveOptions::threads`/`simd`")]
 pub fn solve_semidual_simd(
     prob: &OtProblem,
     gamma: f64,
@@ -224,22 +408,37 @@ pub fn solve_semidual_simd(
     threads: usize,
     simd: SimdMode,
 ) -> SemiDualResult {
-    solve_semidual_ctx_simd(prob, gamma, opts, &ParallelCtx::new(threads), simd)
+    solve_semidual_inner(prob, gamma, opts, &ParallelCtx::new(threads), simd)
 }
 
 /// [`solve_semidual`] over a caller-provided long-lived parallel
 /// context — one parked worker set across warm/repeat solves.
+#[deprecated(note = "use `semidual::solve` with `SolveOptions::ctx`")]
 pub fn solve_semidual_ctx(
     prob: &OtProblem,
     gamma: f64,
     opts: &LbfgsOptions,
     ctx: &ParallelCtx,
 ) -> SemiDualResult {
-    solve_semidual_ctx_simd(prob, gamma, opts, ctx, SimdMode::Auto)
+    solve_semidual_inner(prob, gamma, opts, ctx, SimdMode::Auto)
 }
 
 /// [`solve_semidual_ctx`] with an explicit SIMD policy.
+#[deprecated(note = "use `semidual::solve` with `SolveOptions::ctx`/`simd`")]
 pub fn solve_semidual_ctx_simd(
+    prob: &OtProblem,
+    gamma: f64,
+    opts: &LbfgsOptions,
+    ctx: &ParallelCtx,
+    simd: SimdMode,
+) -> SemiDualResult {
+    solve_semidual_inner(prob, gamma, opts, ctx, simd)
+}
+
+/// The legacy quadratic path every shim funnels into (kept alongside
+/// [`solve`] so `tests/simd_equivalence.rs` and
+/// `tests/parallel_determinism.rs` pin its trajectory unmodified).
+fn solve_semidual_inner(
     prob: &OtProblem,
     gamma: f64,
     opts: &LbfgsOptions,
@@ -248,7 +447,7 @@ pub fn solve_semidual_ctx_simd(
 ) -> SemiDualResult {
     let m = prob.m();
     let n = prob.n();
-    let mut oracle = SemiDualOracle::with_ctx_simd(prob, gamma, ctx.clone(), simd);
+    let mut oracle = SemiDualOracle::build(prob, gamma, ctx.clone(), simd);
     let mut solver = Lbfgs::new(vec![0.0; m], opts.clone(), &mut oracle);
     solver.run(&mut oracle);
     let iterations = solver.iterations();

@@ -1,0 +1,251 @@
+//! The unified solve-options builder — one configuration surface for
+//! every solver family.
+//!
+//! PRs 3–5 grew a constructor ladder per knob (`with_threads`,
+//! `with_ctx`, `with_simd`, `with_ctx_simd`, `solve_*_ctx`,
+//! `solve_full_warm_ctx_simd`, …). [`SolveOptions`] collapses that into
+//! one builder consumed by one `solve(problem, &opts)` entry per
+//! family:
+//!
+//! * [`crate::ot::fastot::solve`] — the paper's screened full dual,
+//! * [`crate::ot::origin::solve`] — the dense full-dual baseline,
+//! * [`crate::ot::semidual::solve`] — the semi-dual (exact column
+//!   marginals),
+//! * [`crate::coordinator::sweep::solve`] — method-dispatched (the
+//!   sweep/serve/CLI entry).
+//!
+//! ```no_run
+//! use grpot::ot::solve::SolveOptions;
+//! # let prob: grpot::ot::dual::OtProblem = unimplemented!();
+//! let opts = SolveOptions::new().gamma(0.5).rho(0.6).threads(4);
+//! let res = grpot::ot::fastot::solve(&prob, &opts).unwrap();
+//! ```
+//!
+//! The legacy entry points remain as thin `#[deprecated]` shims that
+//! pin the group-lasso regularizer (so `GRPOT_REG` can never re-route
+//! them) and forward here.
+
+use super::regularizer::RegKind;
+use crate::pool::ParallelCtx;
+use crate::simd::SimdMode;
+use crate::solvers::lbfgs::LbfgsOptions;
+
+/// Options shared by every solver family. Construct with
+/// [`SolveOptions::new`] (or `Default`) and chain the builder setters;
+/// unknown-to-a-family knobs are ignored by that family (e.g. the
+/// semi-dual has no working set).
+#[derive(Clone)]
+pub struct SolveOptions {
+    /// Overall regularization strength γ (> 0).
+    pub gamma: f64,
+    /// Group/quadratic balance ρ ∈ [0, 1) — group-lasso only; scalar
+    /// regularizers ignore it.
+    pub rho: f64,
+    /// Snapshot interval `r` in solver iterations (paper: 10).
+    pub r: usize,
+    /// Enable the lower-bound working set ℕ (screened method only).
+    pub use_working_set: bool,
+    /// Inner L-BFGS options (iteration cap, tolerances, memory).
+    pub lbfgs: LbfgsOptions,
+    /// Intra-solve oracle workers. Deterministic: results are
+    /// bit-identical for every value. Ignored when `ctx` is set.
+    pub threads: usize,
+    /// SIMD policy for the specialized group-lasso kernels (`GRPOT_SIMD`
+    /// replaces the `Auto` default; explicit modes win). The generic
+    /// regularizer path is scalar and ignores this.
+    pub simd: SimdMode,
+    /// Which regularizer to solve with. `None` defers to
+    /// [`RegKind::env_default`] (`GRPOT_REG`, else group lasso); the
+    /// legacy shims pin `Some(GroupLasso)`.
+    pub regularizer: Option<RegKind>,
+    /// Warm-start iterate: `[α; β]` for the full dual, `α` for the
+    /// semi-dual. `None` starts at the origin.
+    pub warm_start: Option<Vec<f64>>,
+    /// Long-lived parallel context; clones share its parked worker set,
+    /// so repeated solves (the serving engine, the sweep loop) never
+    /// respawn threads. When set, `threads` is ignored in favor of
+    /// `ctx.threads()`.
+    pub ctx: Option<ParallelCtx>,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            gamma: 1.0,
+            rho: 0.5,
+            r: 10,
+            use_working_set: true,
+            lbfgs: LbfgsOptions::default(),
+            threads: 1,
+            simd: SimdMode::Auto,
+            regularizer: None,
+            warm_start: None,
+            ctx: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for SolveOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolveOptions")
+            .field("gamma", &self.gamma)
+            .field("rho", &self.rho)
+            .field("r", &self.r)
+            .field("use_working_set", &self.use_working_set)
+            .field("lbfgs", &self.lbfgs)
+            .field("threads", &self.threads)
+            .field("simd", &self.simd)
+            .field("regularizer", &self.regularizer)
+            .field("warm_start", &self.warm_start.as_ref().map(Vec::len))
+            .field("ctx_threads", &self.ctx.as_ref().map(ParallelCtx::threads))
+            .finish()
+    }
+}
+
+impl SolveOptions {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn gamma(mut self, gamma: f64) -> Self {
+        self.gamma = gamma;
+        self
+    }
+
+    pub fn rho(mut self, rho: f64) -> Self {
+        self.rho = rho;
+        self
+    }
+
+    /// Snapshot interval `r`.
+    pub fn r(mut self, r: usize) -> Self {
+        self.r = r;
+        self
+    }
+
+    /// Shorthand for capping `lbfgs.max_iters`.
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.lbfgs.max_iters = max_iters;
+        self
+    }
+
+    pub fn lbfgs(mut self, lbfgs: LbfgsOptions) -> Self {
+        self.lbfgs = lbfgs;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn simd(mut self, simd: SimdMode) -> Self {
+        self.simd = simd;
+        self
+    }
+
+    pub fn regularizer(mut self, kind: RegKind) -> Self {
+        self.regularizer = Some(kind);
+        self
+    }
+
+    pub fn warm_start(mut self, x0: Vec<f64>) -> Self {
+        self.warm_start = Some(x0);
+        self
+    }
+
+    pub fn ctx(mut self, ctx: ParallelCtx) -> Self {
+        self.ctx = Some(ctx);
+        self
+    }
+
+    pub fn working_set(mut self, use_working_set: bool) -> Self {
+        self.use_working_set = use_working_set;
+        self
+    }
+
+    /// The effective regularizer kind: the explicit selection, else the
+    /// `GRPOT_REG`/group-lasso default (a bad env value is an error).
+    pub fn resolve_regularizer(&self) -> crate::error::Result<RegKind> {
+        match self.regularizer {
+            Some(kind) => Ok(kind),
+            None => RegKind::env_default(),
+        }
+    }
+
+    /// The parallel context this solve runs on: the configured one
+    /// (shared parked workers), else a fresh solve-lifetime context.
+    pub fn make_ctx(&self) -> ParallelCtx {
+        match &self.ctx {
+            Some(ctx) => ctx.clone(),
+            None => ParallelCtx::new(self.threads),
+        }
+    }
+
+    /// View as the legacy per-solve config (the Algorithm-1 driver's
+    /// parameter block).
+    pub fn fastot_config(&self) -> super::fastot::FastOtConfig {
+        super::fastot::FastOtConfig {
+            gamma: self.gamma,
+            rho: self.rho,
+            r: self.r,
+            use_working_set: self.use_working_set,
+            threads: self.threads,
+            simd: self.simd,
+            lbfgs: self.lbfgs.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_every_knob() {
+        let opts = SolveOptions::new()
+            .gamma(0.3)
+            .rho(0.7)
+            .r(5)
+            .max_iters(42)
+            .threads(3)
+            .simd(SimdMode::Scalar)
+            .regularizer(RegKind::SquaredL2)
+            .warm_start(vec![0.0; 4])
+            .working_set(false);
+        assert_eq!(opts.gamma, 0.3);
+        assert_eq!(opts.rho, 0.7);
+        assert_eq!(opts.r, 5);
+        assert_eq!(opts.lbfgs.max_iters, 42);
+        assert_eq!(opts.threads, 3);
+        assert_eq!(opts.simd, SimdMode::Scalar);
+        assert_eq!(opts.regularizer, Some(RegKind::SquaredL2));
+        assert_eq!(opts.warm_start.as_ref().map(Vec::len), Some(4));
+        assert!(!opts.use_working_set);
+        let cfg = opts.fastot_config();
+        assert_eq!(cfg.gamma, 0.3);
+        assert_eq!(cfg.lbfgs.max_iters, 42);
+        assert!(!cfg.use_working_set);
+    }
+
+    #[test]
+    fn explicit_regularizer_wins_over_env_default() {
+        let opts = SolveOptions::new().regularizer(RegKind::NegEntropy);
+        assert_eq!(opts.resolve_regularizer().unwrap(), RegKind::NegEntropy);
+        // Unset: defers to the env/group-lasso default. We don't set
+        // the env var here (process-global); the GRPOT_REG CI shard
+        // covers the env side end to end.
+        if std::env::var("GRPOT_REG").is_err() {
+            let opts = SolveOptions::new();
+            assert_eq!(opts.resolve_regularizer().unwrap(), RegKind::GroupLasso);
+        }
+    }
+
+    #[test]
+    fn ctx_threads_take_precedence() {
+        let opts = SolveOptions::new().threads(1).ctx(crate::pool::ParallelCtx::new(3));
+        assert_eq!(opts.make_ctx().threads(), 3);
+        let opts = SolveOptions::new().threads(2);
+        assert_eq!(opts.make_ctx().threads(), 2);
+    }
+}

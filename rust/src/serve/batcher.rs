@@ -9,6 +9,7 @@
 
 use super::queue::{AdmissionQueue, Ticket};
 use crate::coordinator::config::Method;
+use crate::ot::regularizer::RegKind;
 use std::borrow::Borrow;
 use std::collections::BTreeMap;
 
@@ -47,30 +48,40 @@ pub struct JobKey {
     pub gamma: f64,
     pub rho: f64,
     pub method: Method,
+    pub regularizer: RegKind,
     pub warm_start: bool,
 }
 
-/// Group ticket indices by identical (γ, ρ, method, warm) so each
-/// distinct job is solved exactly once. Deterministic order (sorted by
-/// the key's bits), each group's indices in arrival order. Accepts
-/// owned or borrowed tickets (the engine batches over `&Ticket`s).
+/// Group ticket indices by identical (γ, ρ, method, regularizer, warm)
+/// so each distinct job is solved exactly once. Deterministic order
+/// (sorted by the key's bits), each group's indices in arrival order.
+/// Accepts owned or borrowed tickets (the engine batches over
+/// `&Ticket`s).
 pub fn unique_jobs<T: Borrow<Ticket>>(tickets: &[T]) -> Vec<(JobKey, Vec<usize>)> {
-    let mut groups: BTreeMap<(u64, u64, &'static str, bool), Vec<usize>> = BTreeMap::new();
+    let mut groups: BTreeMap<(u64, u64, &'static str, &'static str, bool), Vec<usize>> =
+        BTreeMap::new();
     for (i, t) in tickets.iter().enumerate() {
         let r = &t.borrow().request;
         groups
-            .entry((r.gamma.to_bits(), r.rho.to_bits(), r.method.name(), r.warm_start))
+            .entry((
+                r.gamma.to_bits(),
+                r.rho.to_bits(),
+                r.method.name(),
+                r.regularizer.name(),
+                r.warm_start,
+            ))
             .or_default()
             .push(i);
     }
     groups
         .into_iter()
-        .map(|((gamma_bits, rho_bits, method, warm_start), idxs)| {
+        .map(|((gamma_bits, rho_bits, method, regularizer, warm_start), idxs)| {
             (
                 JobKey {
                     gamma: f64::from_bits(gamma_bits),
                     rho: f64::from_bits(rho_bits),
                     method: Method::parse(method).expect("name round-trips"),
+                    regularizer: RegKind::parse(regularizer).expect("name round-trips"),
                     warm_start,
                 },
                 idxs,
@@ -94,6 +105,7 @@ mod tests {
                 gamma,
                 rho,
                 method: Method::Fast,
+                regularizer: RegKind::GroupLasso,
                 deadline: None,
                 warm_start: true,
             },

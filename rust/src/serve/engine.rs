@@ -35,12 +35,13 @@ use super::ServeConfig;
 use crate::coordinator::config::{DatasetSpec, Method};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::build_pair;
-use crate::coordinator::sweep::solve_full_warm_ctx;
+use crate::coordinator::sweep;
 use crate::data::DomainPair;
 use crate::err;
 use crate::error::GrpotError;
 use crate::ot::dual::OtProblem;
 use crate::ot::fastot::FastOtResult;
+use crate::ot::regularizer::RegKind;
 use crate::pool::{BoundedQueue, ParallelCtx, PushError};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -53,6 +54,10 @@ pub struct SolveRequest {
     pub gamma: f64,
     pub rho: f64,
     pub method: Method,
+    /// Which regularizer to solve with (the wire protocol's optional
+    /// `regularizer` field; unknown values are rejected at parse time
+    /// with a structured error, never a panic).
+    pub regularizer: RegKind,
     /// Relative deadline; falls back to the engine default when `None`.
     pub deadline: Option<Duration>,
     /// Allow seeding from the warm-start cache (default true).
@@ -158,7 +163,7 @@ impl ProblemCache {
 struct EngineState {
     cfg: ServeConfig,
     /// Effective intra-solve thread count after clamping
-    /// `workers × threads_per_solve` to the core budget.
+    /// `workers × solve.threads` to the core budget.
     threads_per_solve: usize,
     queue: AdmissionQueue,
     problems: Mutex<ProblemCache>,
@@ -196,7 +201,7 @@ impl Engine {
     ///
     /// Intra-op threading composes with worker concurrency under a core
     /// budget: the effective per-solve thread count is clamped so
-    /// `workers × threads_per_solve ≤ core_budget` (autodetected from
+    /// `workers × solve.threads ≤ core_budget` (autodetected from
     /// `available_parallelism` when the config leaves it 0). Clamping
     /// changes wall time only — solves are deterministic in the thread
     /// count, so results are unaffected. Each engine worker owns one
@@ -211,7 +216,7 @@ impl Engine {
         } else {
             std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
         };
-        let threads_per_solve = cfg.threads_per_solve.max(1).min((budget / workers).max(1));
+        let threads_per_solve = cfg.solve.threads.max(1).min((budget / workers).max(1));
         let state = Arc::new(EngineState {
             threads_per_solve,
             queue: BoundedQueue::new(cfg.queue_capacity.max(1)),
@@ -265,6 +270,18 @@ impl Engine {
     /// (`workers × threads_per_solve ≤ core_budget`).
     pub fn threads_per_solve(&self) -> usize {
         self.state.threads_per_solve
+    }
+
+    /// The regularizer applied to requests that don't name one: the
+    /// configured [`ServeConfig::solve`] default, resolved through
+    /// `GRPOT_REG` / group-lasso when the config leaves it unset. A
+    /// broken env var falls back to the explicit field rather than
+    /// erroring (launch validation already rejected it for the CLI).
+    pub fn default_regularizer(&self) -> RegKind {
+        let solve = &self.state.cfg.solve;
+        solve
+            .resolve_regularizer()
+            .unwrap_or_else(|_| solve.regularizer.unwrap_or_default())
     }
 
     /// Submit one request and block until its response. Admission
@@ -424,7 +441,7 @@ fn handle_batch(state: &EngineState, batch: &Batch, ctx: &ParallelCtx) {
     };
     let batch_size = live.len();
 
-    // Each distinct (γ, ρ, method, warm) job solves once.
+    // Each distinct (γ, ρ, method, regularizer, warm) job solves once.
     for (job, idxs) in unique_jobs(&live) {
         solve_job(state, &batch.dataset_key, &problem, batch_size, &live, job, &idxs, ctx);
     }
@@ -459,10 +476,18 @@ fn solve_job(
         return;
     }
 
-    // Warm-start seed from the dual cache.
+    // Warm-start seed from the dual cache. Non-group-lasso duals live
+    // under a regularizer-suffixed key: a warm start from any iterate is
+    // sound (Theorem 2 holds from every starting point), but seeding
+    // from a *different* regularizer's optimum would waste the hit.
+    let warm_key = if job.regularizer == RegKind::GroupLasso {
+        dataset_key.to_string()
+    } else {
+        format!("{dataset_key}|{}", job.regularizer.name())
+    };
     let want_warm = job.warm_start && state.cfg.warm_start;
     let seed = if want_warm {
-        state.duals.lookup(dataset_key, job.gamma, job.rho)
+        state.duals.lookup(&warm_key, job.gamma, job.rho)
     } else {
         None
     };
@@ -482,20 +507,30 @@ fn solve_job(
     // `xla-origin` in a `--features xla` build against the stub.
     let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         m.time_hist("serve.solve_seconds", || {
-            solve_full_warm_ctx(
-                &problem.prob,
-                job.method,
-                job.gamma,
-                job.rho,
-                state.cfg.r,
-                state.cfg.lbfgs.clone(),
-                x0,
-                ctx,
-            )
+            let mut opts = state
+                .cfg
+                .solve
+                .clone()
+                .gamma(job.gamma)
+                .rho(job.rho)
+                .regularizer(job.regularizer)
+                .ctx(ctx.clone());
+            if let Some(x0) = x0 {
+                opts = opts.warm_start(x0.to_vec());
+            }
+            sweep::solve(&problem.prob, job.method, &opts)
         })
     }));
     let result = match solved {
-        Ok(r) => r,
+        Ok(Ok(r)) => r,
+        Ok(Err(e)) => {
+            // Solver-side validation (e.g. a regularizer the method
+            // can't run) answers every waiter with a structured error.
+            for t in targets {
+                t.respond(Err(RejectReason::Failed(e.clone())));
+            }
+            return;
+        }
         Err(panic) => {
             let what = panic_message(panic.as_ref());
             m.incr("serve.solve_panics", 1);
@@ -512,7 +547,7 @@ fn solve_job(
     if state.cfg.warm_start {
         state
             .duals
-            .insert(dataset_key, job.gamma, job.rho, result.x.clone());
+            .insert(&warm_key, job.gamma, job.rho, result.x.clone());
         m.set_gauge("serve.warm_cache_bytes", state.duals.bytes() as f64);
     }
 
@@ -556,6 +591,7 @@ mod tests {
             gamma,
             rho,
             method: Method::Fast,
+            regularizer: RegKind::GroupLasso,
             deadline: None,
             warm_start: true,
         }
@@ -567,8 +603,11 @@ mod tests {
 
     #[test]
     fn solve_roundtrip_and_warm_second_hit() {
-        let engine =
-            tiny_engine(ServeConfig { workers: 2, lbfgs: tight_lbfgs(), ..Default::default() });
+        let engine = tiny_engine(ServeConfig {
+            workers: 2,
+            solve: crate::ot::solve::SolveOptions::new().lbfgs(tight_lbfgs()),
+            ..Default::default()
+        });
         let cold = engine.submit(request(5, 1.0, 0.5)).expect("cold solve");
         assert!(!cold.warm_started);
         assert!(cold.result.dual_objective > 0.0);
@@ -640,6 +679,25 @@ mod tests {
         // Submits after shutdown are refused, not hung.
         let err = engine.submit(request(2, 0.5, 0.5)).unwrap_err();
         assert_eq!(err.kind(), "shutdown");
+    }
+
+    #[test]
+    fn requests_pick_their_regularizer() {
+        let engine = tiny_engine(ServeConfig { workers: 1, ..Default::default() });
+        for kind in [RegKind::SquaredL2, RegKind::NegEntropy] {
+            let mut req = request(3, 0.5, 0.5);
+            req.regularizer = kind;
+            let reply = engine.submit(req).expect("solve");
+            assert!(
+                reply.result.method.contains(kind.name()),
+                "label '{}' should carry '{}'",
+                reply.result.method,
+                kind.name()
+            );
+            assert!(reply.result.dual_objective.is_finite());
+        }
+        assert_eq!(engine.metrics().get("serve.solves"), 2);
+        engine.shutdown();
     }
 
     #[test]

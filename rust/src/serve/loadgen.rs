@@ -16,6 +16,7 @@ use super::engine::{Engine, RejectReason, SolveRequest};
 use super::ServeConfig;
 use crate::benchlib::percentile_sorted;
 use crate::coordinator::config::{DatasetSpec, Method};
+use crate::ot::regularizer::RegKind;
 use crate::coordinator::metrics::Metrics;
 use crate::jsonlite::Value;
 use std::sync::{Arc, Mutex};
@@ -32,6 +33,8 @@ pub struct LoadScenario {
     /// Concurrent closed-loop clients.
     pub clients: usize,
     pub method: Method,
+    /// Regularizer stamped on every request.
+    pub regularizer: RegKind,
     /// Per-request deadline forwarded to the engine.
     pub deadline: Option<Duration>,
 }
@@ -45,6 +48,7 @@ impl Default for LoadScenario {
             cycles: 2,
             clients: 4,
             method: Method::Fast,
+            regularizer: RegKind::GroupLasso,
             deadline: None,
         }
     }
@@ -160,6 +164,7 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
                             gamma,
                             rho,
                             method: scenario.method,
+                            regularizer: scenario.regularizer,
                             deadline: scenario.deadline,
                             warm_start: true,
                         });
@@ -241,6 +246,7 @@ mod tests {
             cycles: 2,
             clients: 3,
             method: Method::Fast,
+            regularizer: RegKind::GroupLasso,
             deadline: None,
         }
     }

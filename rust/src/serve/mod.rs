@@ -23,7 +23,7 @@
 //!   hold from any starting point (Theorem 2), so warm starts change
 //!   iteration counts, never results.
 //! * [`engine`] — the engine itself: worker threads consuming batches
-//!   from the queue, solving via [`crate::coordinator::sweep::solve_full_warm_ctx`]
+//!   from the queue, solving via [`crate::coordinator::sweep::solve`]
 //!   and publishing per-request metrics (latency percentiles, queue
 //!   depth, warm hit/miss, rejections).
 //!
@@ -39,7 +39,7 @@ pub mod queue;
 pub use cache::DualCache;
 pub use engine::{CachedProblem, Engine, EngineReply, RejectReason, SolveRequest};
 
-use crate::solvers::lbfgs::LbfgsOptions;
+use crate::ot::solve::SolveOptions;
 use std::time::Duration;
 
 /// Engine tuning knobs. The defaults suit the in-repo demo datasets;
@@ -66,19 +66,20 @@ pub struct ServeConfig {
     /// Maximum hyperparameter distance `√((Δln γ)² + (Δρ)²)` at which a
     /// cached dual still seeds a solve.
     pub warm_radius: f64,
-    /// Snapshot interval `r` passed to the Algorithm-1 driver.
-    pub r: usize,
-    /// Intra-solve oracle workers per engine solve (deterministic:
-    /// results are bit-identical to serial). The engine clamps the
-    /// effective value so `workers × threads_per_solve` never exceeds
+    /// Per-solve options for every engine solve (snapshot interval `r`,
+    /// L-BFGS caps, SIMD policy, default regularizer — a request's
+    /// explicit `regularizer` wins). `solve.threads` is the intra-solve
+    /// oracle worker count (deterministic: results are bit-identical to
+    /// serial); the engine clamps the effective value so
+    /// `workers × solve.threads` never exceeds
     /// [`ServeConfig::core_budget`] — micro-batched serving and intra-op
-    /// parallelism compose instead of oversubscribing.
-    pub threads_per_solve: usize,
-    /// Core budget for the `workers × threads_per_solve` product;
+    /// parallelism compose instead of oversubscribing. `solve.gamma`/
+    /// `solve.rho`/`solve.warm_start`/`solve.ctx` are per-request /
+    /// per-worker and overridden by the engine.
+    pub solve: SolveOptions,
+    /// Core budget for the `workers × solve.threads` product;
     /// 0 = autodetect via `std::thread::available_parallelism`.
     pub core_budget: usize,
-    /// Inner-solver options for every engine solve.
-    pub lbfgs: LbfgsOptions,
 }
 
 impl Default for ServeConfig {
@@ -92,10 +93,8 @@ impl Default for ServeConfig {
             problem_cache_entries: 32,
             warm_start: true,
             warm_radius: 2.0,
-            r: 10,
-            threads_per_solve: 1,
+            solve: SolveOptions::new(),
             core_budget: 0,
-            lbfgs: LbfgsOptions::default(),
         }
     }
 }
@@ -112,7 +111,8 @@ mod tests {
         assert!(cfg.max_batch >= 1);
         assert!(cfg.warm_start);
         assert!(cfg.warm_cache_bytes > 0);
-        assert_eq!(cfg.threads_per_solve, 1, "serving defaults to serial solves");
+        assert_eq!(cfg.solve.threads, 1, "serving defaults to serial solves");
         assert_eq!(cfg.core_budget, 0, "core budget autodetects by default");
+        assert_eq!(cfg.solve.regularizer, None, "requests pick the regularizer");
     }
 }

@@ -127,6 +127,7 @@ mod tests {
             gamma: 1.0,
             rho: 0.5,
             method: Method::Fast,
+            regularizer: crate::ot::regularizer::RegKind::GroupLasso,
             deadline,
             warm_start: true,
         }

@@ -6,6 +6,7 @@ use grpot::coordinator::metrics::Metrics;
 use grpot::coordinator::service::{serve, Client};
 use grpot::coordinator::sweep::run_sweep;
 use grpot::jsonlite::Value;
+use grpot::ot::solve::SolveOptions;
 
 fn small_dataset() -> Value {
     Value::obj()
@@ -95,6 +96,57 @@ fn grpot_raw(raw: &str) -> Value {
 }
 
 #[test]
+fn service_regularizer_wire_round_trip_and_rejection() {
+    let handle = serve("127.0.0.1:0", 1).expect("bind");
+    let mut c = Client::connect(&handle.addr).expect("connect");
+    let solve_req = |reg: Option<&str>| {
+        let mut v = Value::obj()
+            .set("op", "solve")
+            .set("dataset", small_dataset())
+            .set("gamma", 0.5)
+            .set("rho", 0.5)
+            .set("method", "fast");
+        if let Some(reg) = reg {
+            v = v.set("regularizer", reg);
+        }
+        v
+    };
+    for reg in ["squared_l2", "negentropy"] {
+        let resp = c.call(&solve_req(Some(reg))).expect("solve");
+        assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp}");
+        assert_eq!(resp.get("regularizer").and_then(Value::as_str), Some(reg), "{resp}");
+        let obj = resp.get("dual_objective").and_then(Value::as_f64).unwrap();
+        assert!(obj.is_finite(), "{resp}");
+    }
+    // Omitted → the engine's default, echoed back so clients can see
+    // what actually ran.
+    let resp = c.call(&solve_req(None)).expect("solve");
+    let default = grpot::ot::regularizer::RegKind::env_default().unwrap();
+    assert_eq!(
+        resp.get("regularizer").and_then(Value::as_str),
+        Some(default.name()),
+        "{resp}"
+    );
+    // Unknown value → structured rejection (error_kind + id echo), and
+    // the connection survives.
+    let resp = c
+        .call(&solve_req(Some("lasso-soup")).set("id", 7usize))
+        .expect("call survives bad regularizer");
+    assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(false), "{resp}");
+    assert_eq!(resp.get("error_kind").and_then(Value::as_str), Some("failed"), "{resp}");
+    assert_eq!(resp.get("id").and_then(Value::as_usize), Some(7), "{resp}");
+    assert!(
+        resp.get("error")
+            .and_then(Value::as_str)
+            .unwrap()
+            .contains("unknown regularizer"),
+        "{resp}"
+    );
+    assert!(c.ping().expect("ping after rejection"));
+    handle.shutdown();
+}
+
+#[test]
 fn sweep_from_config_file() {
     let dir = std::env::temp_dir().join(format!("grpot-e2e-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
@@ -135,10 +187,8 @@ fn sweep_includes_ablation_method() {
         gammas: vec![0.5],
         rhos: vec![0.6],
         methods: vec![Method::Fast, Method::FastNoWs, Method::Origin],
-        r: 5,
         threads: 1,
-        solve_threads: 1,
-        max_iters: 80,
+        solve: SolveOptions::new().r(5).max_iters(80),
     };
     let report = run_sweep(&cfg, &Metrics::new()).expect("sweep");
     assert_eq!(report.records.len(), 3);

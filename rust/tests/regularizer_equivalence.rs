@@ -1,0 +1,338 @@
+//! The regularizer-trait refactor's contract, end to end:
+//!
+//! * Group lasso routed through the `Regularizer` trait and the
+//!   `SolveOptions` entry points is *byte-equal* to the pre-trait
+//!   `solve_fast_ot` / `solve_origin` paths — solution, objective,
+//!   iteration counts and full `OracleStats`, across hyperparameters,
+//!   thread counts and SIMD dispatch, cold and warm-started.
+//! * The new conjugates (squared ℓ2, negative entropy) are consistent:
+//!   their oracle gradients match central finite differences, squared
+//!   ℓ2 through the trait reproduces the legacy quadratic semi-dual
+//!   byte for byte, and the full-dual and semi-dual solves of the same
+//!   smoothed problem agree at the optimum.
+//! * `GRPOT_REG` replaces only the *unset* default: explicit selections
+//!   and the legacy (pre-trait) entry points can never be re-routed.
+
+use grpot::linalg::Mat;
+use grpot::ot::dual::{DualOracle, OracleStats, OtProblem};
+use grpot::ot::fastot::{self, solve_fast_ot, solve_fast_ot_from, FastOtConfig, FastOtResult};
+use grpot::ot::origin::{self, solve_origin};
+use grpot::ot::regularizer::{AnyRegularizer, DenseRegOracle, RegKind};
+use grpot::ot::semidual::{self, solve_semidual};
+use grpot::ot::solve::SolveOptions;
+use grpot::pool::ParallelCtx;
+use grpot::rng::Pcg64;
+use grpot::simd::SimdMode;
+use grpot::solvers::lbfgs::LbfgsOptions;
+
+fn random_problem(seed: u64, l: usize, g: usize, n: usize) -> OtProblem {
+    let mut rng = Pcg64::new(seed);
+    let m = l * g;
+    let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+    let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+    OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+}
+
+fn assert_stats_eq(a: &OracleStats, b: &OracleStats, what: &str) {
+    assert_eq!(a.evals, b.evals, "{what}: evals");
+    assert_eq!(a.grads_computed, b.grads_computed, "{what}: grads_computed");
+    assert_eq!(a.grads_skipped, b.grads_skipped, "{what}: grads_skipped");
+    assert_eq!(a.ub_checks, b.ub_checks, "{what}: ub_checks");
+    assert_eq!(a.ws_hits, b.ws_hits, "{what}: ws_hits");
+    assert_eq!(a.per_eval_grads, b.per_eval_grads, "{what}: per_eval_grads");
+}
+
+fn assert_results_identical(a: &FastOtResult, b: &FastOtResult, what: &str) {
+    assert_eq!(a.x, b.x, "{what}: solution bytes");
+    assert_eq!(a.dual_objective, b.dual_objective, "{what}: objective");
+    assert_eq!(a.iterations, b.iterations, "{what}: iterations");
+    assert_eq!(a.outer_rounds, b.outer_rounds, "{what}: outer rounds");
+    assert_stats_eq(&a.stats, &b.stats, what);
+}
+
+fn legacy_cfg(gamma: f64, rho: f64, threads: usize, simd: SimdMode) -> FastOtConfig {
+    FastOtConfig {
+        gamma,
+        rho,
+        threads,
+        simd,
+        lbfgs: LbfgsOptions { max_iters: 120, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn trait_opts(gamma: f64, rho: f64, threads: usize, simd: SimdMode) -> SolveOptions {
+    SolveOptions::new()
+        .gamma(gamma)
+        .rho(rho)
+        .threads(threads)
+        .simd(simd)
+        .regularizer(RegKind::GroupLasso)
+        .lbfgs(LbfgsOptions { max_iters: 120, ..Default::default() })
+}
+
+/// The acceptance-criterion test: the group lasso through the trait
+/// (`fastot::solve` / `origin::solve` + `SolveOptions`) is byte-equal
+/// to the pre-refactor entry points across (γ, ρ) hitting both the
+/// skip-heavy and the dense regime, 1 and 4 threads, scalar and
+/// dispatched SIMD.
+#[test]
+fn group_lasso_via_trait_is_byte_identical() {
+    let prob = random_problem(0x9E61, 4, 4, 31);
+    for (gamma, rho) in [(0.1, 0.3), (1.0, 0.5), (8.0, 0.8)] {
+        for threads in [1usize, 4] {
+            for simd in [SimdMode::Scalar, SimdMode::Auto] {
+                let what = format!("γ={gamma} ρ={rho} threads={threads} simd={simd:?}");
+                let legacy = solve_fast_ot(&prob, &legacy_cfg(gamma, rho, threads, simd));
+                let traited = fastot::solve(&prob, &trait_opts(gamma, rho, threads, simd))
+                    .expect("group-lasso solve");
+                assert_results_identical(&legacy, &traited, &format!("fast {what}"));
+                let legacy_o = solve_origin(&prob, &legacy_cfg(gamma, rho, threads, simd));
+                let traited_o = origin::solve(&prob, &trait_opts(gamma, rho, threads, simd))
+                    .expect("group-lasso origin solve");
+                assert_results_identical(&legacy_o, &traited_o, &format!("origin {what}"));
+            }
+        }
+    }
+}
+
+/// Warm starts through `SolveOptions::warm_start` reproduce
+/// `solve_fast_ot_from` byte for byte, and a caller-provided
+/// `ParallelCtx` matches the internally-built one.
+#[test]
+fn warm_start_and_ctx_options_match_legacy() {
+    let prob = random_problem(0x9E62, 3, 4, 27);
+    let mut rng = Pcg64::new(17);
+    let x0: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.2, 0.3)).collect();
+    let legacy =
+        solve_fast_ot_from(&prob, &legacy_cfg(0.6, 0.55, 2, SimdMode::Auto), x0.clone());
+    let traited = fastot::solve(
+        &prob,
+        &trait_opts(0.6, 0.55, 2, SimdMode::Auto).warm_start(x0.clone()),
+    )
+    .expect("warm solve");
+    assert_results_identical(&legacy, &traited, "warm fast");
+    let ctx = ParallelCtx::new(2);
+    let with_ctx = fastot::solve(
+        &prob,
+        &trait_opts(0.6, 0.55, 1, SimdMode::Auto).ctx(ctx).warm_start(x0),
+    )
+    .expect("ctx solve");
+    assert_results_identical(&legacy, &with_ctx, "ctx fast");
+}
+
+/// A wrong-length warm start is a structured error, not a panic.
+#[test]
+fn bad_warm_start_length_is_an_error() {
+    let prob = random_problem(0x9E63, 2, 3, 11);
+    let e = fastot::solve(
+        &prob,
+        &trait_opts(0.5, 0.5, 1, SimdMode::Auto).warm_start(vec![0.0; 3]),
+    )
+    .unwrap_err();
+    assert!(e.0.contains("warm-start"), "{e}");
+    let e = semidual::solve(
+        &prob,
+        &SolveOptions::new()
+            .gamma(0.5)
+            .regularizer(RegKind::SquaredL2)
+            .warm_start(vec![0.0; prob.dim()]),
+    )
+    .unwrap_err();
+    assert!(e.0.contains("warm-start"), "{e}");
+}
+
+/// Oracle gradients for the new conjugates match central finite
+/// differences of the oracle objective.
+#[test]
+fn new_regularizer_gradients_match_finite_differences() {
+    let prob = random_problem(0x9E64, 3, 3, 13);
+    let dim = prob.dim();
+    let mut rng = Pcg64::new(23);
+    let x: Vec<f64> = (0..dim).map(|_| rng.uniform(-0.4, 0.4)).collect();
+    for kind in [RegKind::SquaredL2, RegKind::NegEntropy] {
+        let reg = AnyRegularizer::build(kind, 0.7, 0.5, &prob.groups).unwrap();
+        let mut oracle = DenseRegOracle::new(&prob, reg, ParallelCtx::new(1));
+        let mut grad = vec![0.0; dim];
+        oracle.eval(&x, &mut grad);
+        let h = 1e-6;
+        for i in 0..dim {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[i] += h;
+            xm[i] -= h;
+            let mut scratch = vec![0.0; dim];
+            let fp = oracle.eval(&xp, &mut scratch);
+            let fm = oracle.eval(&xm, &mut scratch);
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                (fd - grad[i]).abs() <= 1e-5 * grad[i].abs().max(1.0),
+                "{}: grad[{i}] = {} vs fd {}",
+                kind.name(),
+                grad[i],
+                fd
+            );
+        }
+    }
+}
+
+/// At ρ = 0 the group-lasso conjugate degenerates to the squared-ℓ2
+/// conjugate (τ = 0, λ = γ), so both regularizers minimize the same
+/// function — the optima must coincide (to solver tolerance; the
+/// group-lasso kernel's √·² round trip keeps this from being bitwise).
+#[test]
+fn squared_l2_matches_group_lasso_at_rho_zero() {
+    let prob = random_problem(0x9E65, 3, 3, 17);
+    let tight = LbfgsOptions { max_iters: 3000, ftol: 1e-13, gtol: 1e-9, ..Default::default() };
+    let gl = fastot::solve(
+        &prob,
+        &SolveOptions::new()
+            .gamma(0.8)
+            .rho(0.0)
+            .regularizer(RegKind::GroupLasso)
+            .lbfgs(tight.clone()),
+    )
+    .expect("group-lasso ρ=0");
+    let l2 = fastot::solve(
+        &prob,
+        &SolveOptions::new()
+            .gamma(0.8)
+            .rho(0.0)
+            .regularizer(RegKind::SquaredL2)
+            .lbfgs(tight),
+    )
+    .expect("squared-l2");
+    assert!(
+        (gl.dual_objective - l2.dual_objective).abs() <= 1e-6,
+        "gl={} l2={}",
+        gl.dual_objective,
+        l2.dual_objective
+    );
+    assert_eq!(l2.method, "fast+squared_l2");
+}
+
+/// Squared ℓ2 through the trait semi-dual reproduces the legacy
+/// quadratic semi-dual byte for byte (same staging and water-filling
+/// order), at 1 and 4 oracle threads.
+#[test]
+fn semidual_squared_l2_is_byte_identical_to_legacy() {
+    let prob = random_problem(0x9E66, 3, 4, 23);
+    let lbfgs = LbfgsOptions { max_iters: 200, ..Default::default() };
+    let legacy = solve_semidual(&prob, 0.2, &lbfgs);
+    for threads in [1usize, 4] {
+        let traited = semidual::solve(
+            &prob,
+            &SolveOptions::new()
+                .gamma(0.2)
+                .regularizer(RegKind::SquaredL2)
+                .threads(threads)
+                .lbfgs(lbfgs.clone()),
+        )
+        .expect("semi-dual squared-l2");
+        assert_eq!(legacy.alpha, traited.alpha, "threads={threads}: alpha bytes");
+        assert_eq!(legacy.objective, traited.objective, "threads={threads}: objective");
+        assert_eq!(legacy.iterations, traited.iterations, "threads={threads}: iterations");
+        assert_eq!(legacy.plan, traited.plan, "threads={threads}: plan");
+    }
+}
+
+/// The entropic semi-dual: its inner softmax satisfies the column
+/// marginals by construction, the plan is nonnegative, and thread
+/// counts don't change the bytes.
+#[test]
+fn semidual_negentropy_solves_and_hits_marginals() {
+    let prob = random_problem(0x9E67, 3, 3, 19);
+    let opts = SolveOptions::new()
+        .gamma(0.5)
+        .regularizer(RegKind::NegEntropy)
+        .lbfgs(LbfgsOptions { max_iters: 300, ..Default::default() });
+    let res = semidual::solve(&prob, &opts).expect("entropic semi-dual");
+    assert!(res.objective.is_finite());
+    for j in 0..prob.n() {
+        let mut col = 0.0;
+        for i in 0..prob.m() {
+            let v = res.plan[(i, j)];
+            assert!(v >= 0.0, "plan[{i},{j}] = {v}");
+            col += v;
+        }
+        assert!(
+            (col - prob.b[j]).abs() <= 1e-12 * prob.b[j].max(1.0),
+            "column {j} mass {col} vs b {}",
+            prob.b[j]
+        );
+    }
+    let threaded = semidual::solve(&prob, &opts.clone().threads(4)).expect("threaded");
+    assert_eq!(res.alpha, threaded.alpha, "semi-dual determinism across threads");
+}
+
+/// Full-dual and semi-dual solves of the same smoothed squared-ℓ2
+/// problem agree at the optimum (strong duality of the relaxation).
+#[test]
+fn full_dual_and_semidual_squared_l2_agree() {
+    let prob = random_problem(0x9E68, 2, 4, 13);
+    let tight = LbfgsOptions { max_iters: 4000, ftol: 1e-13, gtol: 1e-9, ..Default::default() };
+    let full = fastot::solve(
+        &prob,
+        &SolveOptions::new()
+            .gamma(0.6)
+            .rho(0.0)
+            .regularizer(RegKind::SquaredL2)
+            .lbfgs(tight.clone()),
+    )
+    .expect("full dual");
+    let semi = semidual::solve(
+        &prob,
+        &SolveOptions::new().gamma(0.6).regularizer(RegKind::SquaredL2).lbfgs(tight),
+    )
+    .expect("semi-dual");
+    assert!(
+        (full.dual_objective - semi.objective).abs()
+            <= 1e-6 * semi.objective.abs().max(1.0),
+        "full={} semi={}",
+        full.dual_objective,
+        semi.objective
+    );
+}
+
+/// The group lasso has no separable semi-dual: asking for one is a
+/// structured error, not a panic.
+#[test]
+fn group_lasso_semidual_is_rejected() {
+    let prob = random_problem(0x9E69, 2, 3, 11);
+    let e = semidual::solve(
+        &prob,
+        &SolveOptions::new().gamma(0.5).rho(0.5).regularizer(RegKind::GroupLasso),
+    )
+    .unwrap_err();
+    assert!(e.0.contains("semi-dual"), "{e}");
+}
+
+/// `GRPOT_REG` fills only the *unset* default: explicit selections and
+/// the legacy pinned-group-lasso entry points are never re-routed. The
+/// env var is process-global, so this is the only test that touches it,
+/// and every other test in this binary pins its regularizer explicitly.
+#[test]
+fn env_default_fills_only_the_unset_option() {
+    let prob = random_problem(0x9E6A, 2, 3, 11);
+    let pinned = fastot::solve(&prob, &trait_opts(0.5, 0.5, 1, SimdMode::Auto)).unwrap();
+    std::env::set_var("GRPOT_REG", "squared_l2");
+    let unset = SolveOptions::new().gamma(0.5).rho(0.0);
+    assert_eq!(unset.resolve_regularizer().unwrap(), RegKind::SquaredL2);
+    let via_env = fastot::solve(
+        &prob,
+        &unset.lbfgs(LbfgsOptions { max_iters: 120, ..Default::default() }),
+    )
+    .unwrap();
+    assert_eq!(via_env.method, "fast+squared_l2", "unset option follows the env");
+    // Explicit selections and the legacy entry point ignore the env.
+    let explicit = fastot::solve(&prob, &trait_opts(0.5, 0.5, 1, SimdMode::Auto)).unwrap();
+    let legacy = solve_fast_ot(&prob, &legacy_cfg(0.5, 0.5, 1, SimdMode::Auto));
+    std::env::remove_var("GRPOT_REG");
+    assert_results_identical(&pinned, &explicit, "explicit selection under env");
+    assert_results_identical(&legacy, &explicit, "legacy entry point under env");
+    // A malformed value is a structured error at resolution time.
+    std::env::set_var("GRPOT_REG", "lasso-soup");
+    let e = SolveOptions::new().resolve_regularizer().unwrap_err();
+    std::env::remove_var("GRPOT_REG");
+    assert!(e.0.contains("unknown regularizer"), "{e}");
+}

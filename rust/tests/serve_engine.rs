@@ -6,6 +6,8 @@ use grpot::coordinator::config::{DatasetSpec, Method};
 use grpot::coordinator::metrics::Metrics;
 use grpot::coordinator::service::{serve_with, Client};
 use grpot::jsonlite::Value;
+use grpot::ot::regularizer::RegKind;
+use grpot::ot::solve::SolveOptions;
 use grpot::serve::{Engine, RejectReason, ServeConfig, SolveRequest};
 use grpot::solvers::lbfgs::LbfgsOptions;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -27,6 +29,7 @@ fn request(seed: u64, gamma: f64, rho: f64) -> SolveRequest {
         gamma,
         rho,
         method: Method::Fast,
+        regularizer: RegKind::GroupLasso,
         deadline: None,
         warm_start: true,
     }
@@ -85,7 +88,11 @@ fn hammer_no_deadlocks_no_lost_responses() {
 fn warm_started_solve_matches_cold_dual_objective() {
     let metrics = Arc::new(Metrics::new());
     let engine = Engine::start(
-        ServeConfig { workers: 2, lbfgs: tight_lbfgs(), ..Default::default() },
+        ServeConfig {
+            workers: 2,
+            solve: SolveOptions::new().lbfgs(tight_lbfgs()),
+            ..Default::default()
+        },
         Arc::clone(&metrics),
     );
     // Cold reference: warm starts disabled for this request.
@@ -126,7 +133,12 @@ fn engine_clamps_intra_solve_threads_to_core_budget() {
     // budget: 2 workers under a 4-core budget cap an 8-thread request
     // at 2 threads per solve.
     let capped = Engine::start(
-        ServeConfig { workers: 2, threads_per_solve: 8, core_budget: 4, ..Default::default() },
+        ServeConfig {
+            workers: 2,
+            solve: SolveOptions::new().threads(8),
+            core_budget: 4,
+            ..Default::default()
+        },
         Arc::new(Metrics::new()),
     );
     assert_eq!(capped.threads_per_solve(), 2);
@@ -135,7 +147,12 @@ fn engine_clamps_intra_solve_threads_to_core_budget() {
     // A budget already consumed by the workers floors at 1 thread per
     // solve (worker concurrency wins; intra-op parallelism yields).
     let floored = Engine::start(
-        ServeConfig { workers: 4, threads_per_solve: 8, core_budget: 2, ..Default::default() },
+        ServeConfig {
+            workers: 4,
+            solve: SolveOptions::new().threads(8),
+            core_budget: 2,
+            ..Default::default()
+        },
         Arc::new(Metrics::new()),
     );
     assert_eq!(floored.threads_per_solve(), 1);
@@ -143,7 +160,12 @@ fn engine_clamps_intra_solve_threads_to_core_budget() {
 
     // Requests under the budget pass through unclamped.
     let roomy = Engine::start(
-        ServeConfig { workers: 2, threads_per_solve: 3, core_budget: 64, ..Default::default() },
+        ServeConfig {
+            workers: 2,
+            solve: SolveOptions::new().threads(3),
+            core_budget: 64,
+            ..Default::default()
+        },
         Arc::new(Metrics::new()),
     );
     assert_eq!(roomy.threads_per_solve(), 3);
@@ -154,7 +176,11 @@ fn engine_clamps_intra_solve_threads_to_core_budget() {
 fn multithreaded_warm_solves_match_cold_serial() {
     // Reference: cold solve on a serial single-worker engine.
     let serial = Engine::start(
-        ServeConfig { workers: 1, lbfgs: tight_lbfgs(), ..Default::default() },
+        ServeConfig {
+            workers: 1,
+            solve: SolveOptions::new().lbfgs(tight_lbfgs()),
+            ..Default::default()
+        },
         Arc::new(Metrics::new()),
     );
     let mut cold_req = request(77, 0.9, 0.5);
@@ -167,9 +193,8 @@ fn multithreaded_warm_solves_match_cold_serial() {
     let threaded = Engine::start(
         ServeConfig {
             workers: 2,
-            threads_per_solve: 4,
+            solve: SolveOptions::new().threads(4).lbfgs(tight_lbfgs()),
             core_budget: 64,
-            lbfgs: tight_lbfgs(),
             ..Default::default()
         },
         Arc::new(Metrics::new()),

@@ -10,10 +10,11 @@
 #   * bench_serve        — serving-engine closed-loop load harness
 #   * hotpath_microbench — isolated oracle kernels (incl. the
 #                          scalar-vs-SIMD kernel cases and their speedup
-#                          ratios) + bare dispatch cost
+#                          ratios, and per-regularizer trait-oracle
+#                          rows) + bare dispatch cost
 #
 # then collects every CSV the benches emitted into one machine-readable
-# JSON file (default: BENCH_PR5.json at the repo root; override with
+# JSON file (default: BENCH_PR6.json at the repo root; override with
 # GRPOT_BENCH_JSON). The JSON records the mode, so a smoke-mode CI run
 # is never mistaken for a real measurement.
 #
@@ -25,7 +26,7 @@ set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
 
-OUT="${GRPOT_BENCH_JSON:-$ROOT/BENCH_PR5.json}"
+OUT="${GRPOT_BENCH_JSON:-$ROOT/BENCH_PR6.json}"
 REPORT_DIR="${GRPOT_REPORT_DIR:-$ROOT/rust/reports}"
 export GRPOT_REPORT_DIR="$REPORT_DIR"
 

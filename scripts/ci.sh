@@ -2,7 +2,9 @@
 # Local CI gate — mirrors .github/workflows/ci.yml exactly:
 #
 #   1. cargo fmt --check
-#   2. cargo clippy --all-targets -- -D warnings
+#   2. cargo clippy --all-targets -- -D warnings -A deprecated
+#      (the deprecated constructor shims kept for the SolveOptions
+#      migration are exercised on purpose by the compat tests)
 #   3. cargo build --release            (tier-1, part 1)
 #   4. cargo test -q                    (tier-1, part 2)
 #   5. GRPOT_TEST_THREADS=4 shard: the theorem2_equivalence suite
@@ -15,14 +17,19 @@
 #      entry point, plus simd_equivalence and parallel_determinism, so
 #      both dispatch paths (scalar and runtime-selected SIMD) are gated
 #      on every push — the default runs above exercise auto dispatch
-#   7. cargo build --release --features xla   (in-tree stub must keep compiling)
-#   8. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
+#   7. GRPOT_REG={squared_l2,negentropy} shards: the regularizer env
+#      default is pushed through the trait-dispatched solver path while
+#      theorem2_equivalence re-runs alongside to prove the pinned
+#      group-lasso entry points never re-route under the env var
+#   8. cargo build --release --features xla   (in-tree stub must keep compiling)
+#   9. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
 #      (includes bench_parallel, which asserts thread-count determinism,
 #      the fork-join-vs-persistent dispatch equivalence and the
-#      scalar-vs-SIMD kernel equivalence)
-#   9. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf trio again
+#      scalar-vs-SIMD kernel equivalence, and hotpath_microbench, which
+#      now reports per-regularizer trait-oracle rows)
+#  10. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf trio again
 #      through the bench.sh wrapper, checking the machine-readable
-#      BENCH_PR5.json emission end to end (written to a temp file so a
+#      bench JSON emission end to end (written to a temp file so a
 #      smoke run never clobbers real recorded numbers)
 #
 # Everything except step 7 runs with default features only (zero
@@ -47,8 +54,8 @@ if [[ "$NO_LINT" == 0 ]]; then
     step "cargo fmt --check"
     cargo fmt --check
 
-    step "cargo clippy --all-targets -- -D warnings"
-    cargo clippy --all-targets -- -D warnings
+    step "cargo clippy --all-targets -- -D warnings -A deprecated"
+    cargo clippy --all-targets -- -D warnings -A deprecated
 fi
 
 step "cargo build --release"
@@ -68,6 +75,13 @@ GRPOT_SIMD=scalar cargo test -q \
     --test theorem2_equivalence \
     --test simd_equivalence \
     --test parallel_determinism
+
+for reg in squared_l2 negentropy; do
+    step "cargo test -q (GRPOT_REG=$reg regularizer shard)"
+    GRPOT_REG="$reg" cargo test -q \
+        --test regularizer_equivalence \
+        --test theorem2_equivalence
+done
 
 step "cargo build --release --features xla (offline stub)"
 cargo build --release --features xla
@@ -94,7 +108,7 @@ for b in "${BENCHES[@]}"; do
     GRPOT_BENCH_SMOKE=1 cargo bench --bench "$b"
 done
 
-step "bench.sh smoke (machine-readable BENCH_PR4.json emission)"
+step "bench.sh smoke (machine-readable bench JSON emission)"
 BENCH_JSON_TMP="$(mktemp -t grpot-bench-smoke-XXXXXX.json)"
 GRPOT_BENCH_SMOKE=1 GRPOT_BENCH_JSON="$BENCH_JSON_TMP" bash ../scripts/bench.sh
 test -s "$BENCH_JSON_TMP" || { echo "bench.sh produced no JSON"; exit 1; }
