@@ -55,6 +55,9 @@ pub struct GainRow {
     pub t_origin: f64,
     pub t_fast: f64,
     pub gain: f64,
+    /// Fraction of group gradients the fast method skipped over the ρ
+    /// grid — the paper's headline telemetry, aggregated like the times.
+    pub skip_rate: f64,
     /// Same dual objectives across methods on the whole ρ grid?
     pub objectives_match: bool,
 }
@@ -69,11 +72,14 @@ pub fn gain_sweep(prob: &OtProblem, gammas: &[f64], rhos: &[f64], r: usize) -> V
             let mut t_fast = 0.0;
             let mut t_origin = 0.0;
             let mut objectives_match = true;
+            let (mut computed, mut skipped) = (0u64, 0u64);
             for &rho in rhos {
                 let f = run_job(prob, Method::Fast, gamma, rho, r, mi);
                 let o = run_job(prob, Method::Origin, gamma, rho, r, mi);
                 t_fast += f.wall_time_s;
                 t_origin += o.wall_time_s;
+                computed += f.grads_computed;
+                skipped += f.grads_skipped;
                 objectives_match &= f.dual_objective == o.dual_objective;
             }
             GainRow {
@@ -81,6 +87,7 @@ pub fn gain_sweep(prob: &OtProblem, gammas: &[f64], rhos: &[f64], r: usize) -> V
                 t_origin,
                 t_fast,
                 gain: t_origin / t_fast.max(1e-12),
+                skip_rate: grpot::obs::report::skipped_fraction(computed, skipped),
                 objectives_match,
             }
         })
@@ -94,8 +101,10 @@ pub fn emit_gain_table(
     stem: &str,
     blocks: &[(String, Vec<GainRow>)],
 ) {
-    let mut table =
-        Table::new(title, &["case", "gamma", "t_origin[s]", "t_fast[s]", "gain", "thm2"]);
+    let mut table = Table::new(
+        title,
+        &["case", "gamma", "t_origin[s]", "t_fast[s]", "gain", "skip_rate", "thm2"],
+    );
     for (label, rows) in blocks {
         for row in rows {
             table.row(vec![
@@ -104,6 +113,7 @@ pub fn emit_gain_table(
                 format!("{:.4}", row.t_origin),
                 format!("{:.4}", row.t_fast),
                 format!("{:.2}x", row.gain),
+                format!("{:.3}", row.skip_rate),
                 if row.objectives_match { "ok".into() } else { "MISMATCH".into() },
             ]);
         }

@@ -31,7 +31,10 @@ fn main() {
         println!("|L|={l} (m=n={}) …", prob.m());
         let rows = gain_sweep(&prob, &gammas, &rhos, 10);
         for r in &rows {
-            println!("  gamma={:<8} gain={:.2}x", r.gamma, r.gain);
+            println!(
+                "  gamma={:<8} gain={:.2}x skip_rate={:.3}",
+                r.gamma, r.gain, r.skip_rate
+            );
             assert!(r.objectives_match, "Theorem 2 violated at |L|={l}");
         }
         blocks.push((format!("L={l}"), rows));

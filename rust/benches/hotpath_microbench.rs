@@ -145,6 +145,42 @@ fn main() {
     }
     ratio_table.emit(&report_dir(), "hotpath_simd_speedup");
 
+    // Tracing overhead on the full fast solve: GRPOT_TRACE=off (one
+    // relaxed atomic load per gate) vs full (solve + outer-round spans
+    // into the per-thread rings). Byte-equality of the solver outputs
+    // across modes is asserted before timing — the observability layer
+    // must never perturb the math it watches.
+    {
+        use grpot::coordinator::sweep;
+        use grpot::obs::{self, TraceMode};
+        let trace_opts = SolveOptions::new().gamma(1.0).rho(0.5).max_iters(common::max_iters());
+        obs::set_trace_mode(TraceMode::Off);
+        let off_res = sweep::solve(&prob, grpot::coordinator::config::Method::Fast, &trace_opts)
+            .expect("solve");
+        obs::set_trace_mode(TraceMode::Full);
+        let full_res = sweep::solve(&prob, grpot::coordinator::config::Method::Fast, &trace_opts)
+            .expect("solve");
+        assert_eq!(
+            off_res.dual_objective.to_bits(),
+            full_res.dual_objective.to_bits(),
+            "tracing perturbed the objective"
+        );
+        for (a, b) in off_res.x.iter().zip(&full_res.x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "tracing perturbed the dual variables");
+        }
+        obs::set_trace_mode(TraceMode::Off);
+        let t = bench_fn("solve-trace-off", &opts, || {
+            let _ = sweep::solve(&prob, grpot::coordinator::config::Method::Fast, &trace_opts);
+        });
+        record("fast solve (GRPOT_TRACE=off)", t.seconds() * 1e3);
+        obs::set_trace_mode(TraceMode::Full);
+        let t = bench_fn("solve-trace-full", &opts, || {
+            let _ = sweep::solve(&prob, grpot::coordinator::config::Method::Fast, &trace_opts);
+        });
+        record("fast solve (GRPOT_TRACE=full)", t.seconds() * 1e3);
+        obs::set_trace_mode(TraceMode::Off);
+    }
+
     // Bare dispatch latency on a near-empty job — the per-eval floor the
     // screened sparse regime pays: persistent parked handoff vs the
     // PR-3 scoped fork-join over the same 32-chunk grid.

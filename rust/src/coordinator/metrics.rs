@@ -1,13 +1,20 @@
-//! Process-wide metrics: named counters, timers, gauges and windowed
-//! histograms with JSON snapshots. Shared across the sweep scheduler,
-//! the serving engine and the TCP service (all atomic / mutex-protected;
-//! cheap enough for per-request use).
+//! Process-wide metrics: named counters, timers, gauges, windowed
+//! histograms and fixed-bucket histograms with JSON snapshots. Shared
+//! across the sweep scheduler, the serving engine and the TCP service
+//! (all atomic / lock-protected; cheap enough for per-request use).
+//!
+//! Locking discipline: counters live in a **read-mostly registry** — an
+//! `RwLock` map of `Arc<AtomicU64>` cells. The hot path (`incr` on an
+//! existing name) takes the read lock and a relaxed `fetch_add`; the
+//! write lock is taken only the first time a name appears, and the
+//! serving engine pre-registers its full metric surface at startup so
+//! steady-state traffic never writes the map at all.
 
 use crate::benchlib::percentile_sorted;
 use crate::jsonlite::Value;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 /// Sliding-window size per histogram: percentiles are computed over the
@@ -15,16 +22,27 @@ use std::time::Instant;
 /// tail latency, not its all-time history.
 const HIST_WINDOW: usize = 4096;
 
-/// Ring buffer of recent samples plus an all-time count.
+/// Ring buffer of recent samples plus all-time count and sum.
 #[derive(Clone, Debug, Default)]
 struct Window {
     samples: Vec<f64>,
     next: usize,
     total: u64,
+    /// All-time sum of recorded samples (Prometheus `_sum`).
+    sum: f64,
+    /// NaN samples rejected at `record` (they would poison percentiles).
+    nan_rejected: u64,
 }
 
 impl Window {
     fn record(&mut self, v: f64) {
+        // A NaN sample must never enter the window: percentile math and
+        // the `sorted` comparator both assume ordered values. Count the
+        // rejection so a misbehaving producer is visible, not silent.
+        if v.is_nan() {
+            self.nan_rejected += 1;
+            return;
+        }
         if self.samples.len() < HIST_WINDOW {
             self.samples.push(v);
         } else {
@@ -32,15 +50,18 @@ impl Window {
             self.next = (self.next + 1) % HIST_WINDOW;
         }
         self.total += 1;
+        self.sum += v;
     }
 
     /// Ascending copy of the window (one sort serves many percentiles).
+    /// `total_cmp` is a total order, so this cannot panic even if the
+    /// NaN guard above is ever bypassed.
     fn sorted(&self) -> Option<Vec<f64>> {
         if self.samples.is_empty() {
             return None;
         }
         let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Some(sorted)
     }
 
@@ -49,16 +70,85 @@ impl Window {
     }
 }
 
+/// Fixed-bucket cumulative histogram (Prometheus `_bucket{le=…}`):
+/// per-bucket counts are *non*-cumulative in memory; the renderer
+/// accumulates. The implicit `+Inf` bucket is the last slot.
+#[derive(Clone, Debug)]
+struct FixedHist {
+    /// Ascending upper bounds; one extra count slot holds `+Inf`.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    total: u64,
+}
+
+impl FixedHist {
+    fn new(bounds: &[f64]) -> FixedHist {
+        let mut bounds: Vec<f64> = bounds.iter().copied().filter(|b| !b.is_nan()).collect();
+        bounds.sort_by(f64::total_cmp);
+        bounds.dedup();
+        let slots = bounds.len() + 1;
+        FixedHist { bounds, counts: vec![0; slots], sum: 0.0, total: 0 }
+    }
+
+    fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.total += 1;
+    }
+
+    fn to_json(&self) -> Value {
+        let mut buckets: Vec<Value> = Vec::with_capacity(self.counts.len());
+        for (i, &c) in self.counts.iter().enumerate() {
+            let le = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            // +Inf serializes as null in jsonlite; the renderer treats a
+            // missing/odd `le` as +Inf, so the round trip is lossless.
+            let mut b = Value::obj().set("count", c);
+            if le.is_finite() {
+                b = b.set("le", le);
+            }
+            buckets.push(b);
+        }
+        Value::obj().set("buckets", Value::Arr(buckets))
+    }
+}
+
+/// Exponential bucket bounds: `start, start·factor, …` (`count` bounds;
+/// the `+Inf` bucket is implicit). The serving engine's latency
+/// histograms use `exp_buckets(1e-4, 2.0, 16)` ≈ 100 µs … 3.3 s.
+pub fn exp_buckets(start: f64, factor: f64, count: usize) -> Vec<f64> {
+    assert!(start > 0.0 && factor > 1.0, "need start > 0 and factor > 1");
+    let mut out = Vec::with_capacity(count);
+    let mut b = start;
+    for _ in 0..count {
+        out.push(b);
+        b *= factor;
+    }
+    out
+}
+
 /// A registry of counters, timers, gauges and histograms.
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    /// Read-mostly: `incr` on a known name is a read lock + relaxed add.
+    counters: RwLock<BTreeMap<String, Arc<AtomicU64>>>,
     /// Sum of seconds and sample count per timer name.
     timers: Mutex<BTreeMap<String, (f64, u64)>>,
     /// Last-write-wins instantaneous values (queue depth, cache bytes).
     gauges: Mutex<BTreeMap<String, f64>>,
     /// Recent-window sample distributions (latency percentiles).
     hists: Mutex<BTreeMap<String, Window>>,
+    /// Fixed-bucket histograms (Prometheus-style `le` series), fed by
+    /// the same `observe_hist` calls once registered.
+    buckets: Mutex<BTreeMap<String, FixedHist>>,
 }
 
 impl Metrics {
@@ -66,18 +156,38 @@ impl Metrics {
         Self::default()
     }
 
+    /// Counter cell for `name`, inserting on first use. The fast path
+    /// is the read lock; the write lock is taken at most once per name.
+    fn counter_cell(&self, name: &str) -> Arc<AtomicU64> {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            return Arc::clone(c);
+        }
+        let mut map = self.counters.write().unwrap();
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(AtomicU64::new(0))),
+        )
+    }
+
+    /// Pre-insert counter names so later `incr` calls never take the
+    /// write lock (the engine registers its surface at startup).
+    pub fn register_counters(&self, names: &[&str]) {
+        let mut map = self.counters.write().unwrap();
+        for name in names {
+            map.entry((*name).to_string())
+                .or_insert_with(|| Arc::new(AtomicU64::new(0)));
+        }
+    }
+
     /// Increment a named counter.
     pub fn incr(&self, name: &str, by: u64) {
-        let mut map = self.counters.lock().unwrap();
-        map.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(by, Ordering::Relaxed);
+        self.counter_cell(name).fetch_add(by, Ordering::Relaxed);
     }
 
     /// Read a counter (0 when unset).
     pub fn get(&self, name: &str) -> u64 {
         self.counters
-            .lock()
+            .read()
             .unwrap()
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
@@ -116,10 +226,29 @@ impl Metrics {
         self.gauges.lock().unwrap().get(name).copied()
     }
 
-    /// Record a sample into a windowed histogram (for percentiles).
+    /// Register a fixed-bucket histogram under `name` with the given
+    /// ascending upper bounds (`+Inf` implicit). Subsequent
+    /// `observe_hist(name, …)` calls feed both the percentile window
+    /// and the buckets; re-registration is a no-op.
+    pub fn register_hist_buckets(&self, name: &str, bounds: &[f64]) {
+        self.buckets
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| FixedHist::new(bounds));
+    }
+
+    /// Record a sample into a windowed histogram (for percentiles) and,
+    /// when buckets are registered under the same name, into the
+    /// fixed-bucket histogram too.
     pub fn observe_hist(&self, name: &str, value: f64) {
         let mut map = self.hists.lock().unwrap();
         map.entry(name.to_string()).or_default().record(value);
+        drop(map);
+        let mut buckets = self.buckets.lock().unwrap();
+        if let Some(h) = buckets.get_mut(name) {
+            h.record(value);
+        }
     }
 
     /// Time a closure and record the duration into a histogram.
@@ -140,11 +269,33 @@ impl Metrics {
         self.hists.lock().unwrap().get(name).map(|w| w.total).unwrap_or(0)
     }
 
-    /// JSON snapshot of every counter, timer, gauge and histogram
-    /// (histograms report p50/p95/p99 over their recent window).
+    /// All-time mean of a histogram's samples (None when empty).
+    pub fn hist_mean(&self, name: &str) -> Option<f64> {
+        self.hists
+            .lock()
+            .unwrap()
+            .get(name)
+            .filter(|w| w.total > 0)
+            .map(|w| w.sum / w.total as f64)
+    }
+
+    /// NaN samples rejected from a histogram (0 when none or unset).
+    pub fn hist_nan_rejected(&self, name: &str) -> u64 {
+        self.hists
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|w| w.nan_rejected)
+            .unwrap_or(0)
+    }
+
+    /// JSON snapshot of every counter, timer, gauge and histogram.
+    /// Histograms report p50/p95/p99 over their recent window plus the
+    /// all-time count/sum; bucket-registered ones add a `buckets` array
+    /// (the shape [`crate::obs::prom::render`] consumes).
     pub fn snapshot(&self) -> Value {
         let mut counters = Value::obj();
-        for (k, v) in self.counters.lock().unwrap().iter() {
+        for (k, v) in self.counters.read().unwrap().iter() {
             counters = counters.set(k, v.load(Ordering::Relaxed));
         }
         let mut timers = Value::obj();
@@ -161,13 +312,20 @@ impl Metrics {
         for (k, v) in self.gauges.lock().unwrap().iter() {
             gauges = gauges.set(k, *v);
         }
+        let bucket_map = self.buckets.lock().unwrap();
         let mut hists = Value::obj();
         for (k, w) in self.hists.lock().unwrap().iter() {
-            let mut h = Value::obj().set("count", w.total);
+            let mut h = Value::obj().set("count", w.total).set("sum", w.sum);
+            if w.nan_rejected > 0 {
+                h = h.set("nan_rejected", w.nan_rejected);
+            }
             if let Some(sorted) = w.sorted() {
                 for (label, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
                     h = h.set(label, percentile_sorted(&sorted, p));
                 }
+            }
+            if let Some(fixed) = bucket_map.get(k) {
+                h = h.set("buckets", fixed.to_json().get("buckets").cloned().unwrap());
             }
             hists = hists.set(k, h);
         }
@@ -190,6 +348,17 @@ mod tests {
         m.incr("jobs", 2);
         assert_eq!(m.get("jobs"), 3);
         assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn preregistered_counters_report_zero() {
+        let m = Metrics::new();
+        m.register_counters(&["a", "b"]);
+        assert_eq!(m.get("a"), 0);
+        let v = m.snapshot();
+        assert_eq!(v.get_path(&["counters", "b"]).unwrap().as_usize(), Some(0));
+        m.incr("a", 2);
+        assert_eq!(m.get("a"), 2);
     }
 
     #[test]
@@ -230,6 +399,7 @@ mod tests {
             m.observe_hist("lat", i as f64);
         }
         assert_eq!(m.hist_count("lat"), 100);
+        assert_eq!(m.hist_mean("lat"), Some(50.5));
         let p50 = m.hist_percentile("lat", 50.0).unwrap();
         let p99 = m.hist_percentile("lat", 99.0).unwrap();
         assert!((p50 - 50.5).abs() < 1.0, "p50={p50}");
@@ -252,6 +422,55 @@ mod tests {
         }
         assert_eq!(m.hist_count("w"), 2 * HIST_WINDOW as u64);
         assert_eq!(m.hist_percentile("w", 50.0), Some(100.0));
+    }
+
+    #[test]
+    fn nan_samples_are_rejected_not_recorded() {
+        let m = Metrics::new();
+        m.observe_hist("h", 1.0);
+        m.observe_hist("h", f64::NAN);
+        m.observe_hist("h", 3.0);
+        assert_eq!(m.hist_count("h"), 2);
+        assert_eq!(m.hist_nan_rejected("h"), 1);
+        assert_eq!(m.hist_mean("h"), Some(2.0));
+        // Percentile math still works — sorted() no longer panics on
+        // any input thanks to total_cmp.
+        assert!(m.hist_percentile("h", 99.0).unwrap() <= 3.0);
+        let v = m.snapshot();
+        assert_eq!(
+            v.get_path(&["hists", "h", "nan_rejected"]).unwrap().as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn fixed_buckets_count_cumulatively_in_snapshot() {
+        let m = Metrics::new();
+        m.register_hist_buckets("lat", &[0.1, 1.0]);
+        for v in [0.05, 0.5, 0.7, 5.0] {
+            m.observe_hist("lat", v);
+        }
+        let v = m.snapshot();
+        let buckets = v
+            .get_path(&["hists", "lat", "buckets"])
+            .and_then(Value::as_arr)
+            .expect("buckets");
+        assert_eq!(buckets.len(), 3); // 0.1, 1.0, +Inf
+        let counts: Vec<u64> = buckets
+            .iter()
+            .map(|b| b.get("count").and_then(Value::as_usize).unwrap() as u64)
+            .collect();
+        assert_eq!(counts, vec![1, 2, 1]); // non-cumulative in memory
+        assert!(buckets[2].get("le").is_none()); // +Inf slot
+        // The prom renderer turns these into a cumulative le-series.
+        let text = crate::obs::prom::render(&v);
+        assert!(text.contains("grpot_lat_bucket{le=\"+Inf\"} 4"), "{text}");
+    }
+
+    #[test]
+    fn exp_buckets_grow_geometrically() {
+        let b = exp_buckets(0.001, 10.0, 4);
+        assert_eq!(b, vec![0.001, 0.01, 0.1, 1.0]);
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! ```json
 //! {"op": "ping"}
 //! {"op": "metrics"}
+//! {"op": "metrics_prom"}
+//! {"op": "trace"}
 //! {"op": "solve", "dataset": {"family": "synthetic", "param1": 10,
 //!   "param2": 10, "seed": 1}, "gamma": 1.0, "rho": 0.5, "method": "fast",
-//!   "regularizer": "group_lasso", "deadline_ms": 2000, "warm_start": true}
+//!   "regularizer": "group_lasso", "deadline_ms": 2000, "warm_start": true,
+//!   "telemetry": true}
 //! {"op": "shutdown"}
 //! ```
 //!
@@ -21,8 +24,17 @@
 //! rejections additionally carry a machine-readable `"error_kind"`
 //! (`queue_full` | `deadline_exceeded` | `shutdown` | `failed`) so
 //! clients can distinguish backpressure from bad requests. Successful
-//! solves report `warm_started`, `batch_size` and `queue_wait_s` next
-//! to the solver fields, and echo the `regularizer` they solved with.
+//! solves report `warm_started`, `batch_size`, `queue_wait_s` and the
+//! request's `trace_id` next to the solver fields, echo the
+//! `regularizer` they solved with, and — when the request set
+//! `"telemetry": true` — attach the solve's compact
+//! [`crate::obs::SolveReport`] under `"telemetry"`.
+//!
+//! `metrics_prom` returns the same counters as `metrics` rendered in
+//! Prometheus text exposition format (one string under `"prom"`);
+//! `trace` drains the in-process span rings as Chrome trace-event JSON
+//! under `"trace"` (empty unless the server runs with `GRPOT_TRACE`
+//! set).
 
 use super::config::{DatasetSpec, Method};
 use super::metrics::Metrics;
@@ -207,6 +219,9 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
     match op {
         "ping" => Ok(Value::obj().set("pong", true)),
         "metrics" => Ok(Value::obj().set("metrics", state.metrics.snapshot())),
+        "metrics_prom" => Ok(Value::obj()
+            .set("prom", crate::obs::prom::render(&state.metrics.snapshot()))),
+        "trace" => Ok(Value::obj().set("trace", crate::obs::span::drain_chrome_json())),
         "shutdown" => {
             state.stop.store(true, Ordering::SeqCst);
             Ok(Value::obj().set("stopping", true))
@@ -312,7 +327,13 @@ fn handle_request(line: &str, state: &Arc<ServerState>) -> Result<Value> {
                 .set("otda_accuracy", acc)
                 .set("warm_started", reply.warm_started)
                 .set("batch_size", reply.batch_size)
-                .set("queue_wait_s", reply.queue_wait_s);
+                .set("queue_wait_s", reply.queue_wait_s)
+                .set("trace_id", reply.trace_id);
+            if req.get("telemetry").and_then(Value::as_bool).unwrap_or(false) {
+                if let Some(report) = &reply.telemetry {
+                    v = v.set("telemetry", report.compact_json());
+                }
+            }
             if let Some(id) = req.get("id") {
                 v = v.set("id", id.clone());
             }

@@ -37,6 +37,12 @@ pub struct SweepRecord {
 }
 
 impl SweepRecord {
+    /// The paper's headline quantity for this job: fraction of group
+    /// gradients safe screening skipped.
+    pub fn skipped_group_fraction(&self) -> f64 {
+        crate::obs::report::skipped_fraction(self.grads_computed, self.grads_skipped)
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj()
             .set("method", self.method.name())
@@ -47,6 +53,7 @@ impl SweepRecord {
             .set("iterations", self.iterations)
             .set("grads_computed", self.grads_computed)
             .set("grads_skipped", self.grads_skipped)
+            .set("skipped_group_fraction", self.skipped_group_fraction())
     }
 }
 
@@ -79,6 +86,9 @@ pub struct SweepReport {
 /// group-lasso only (the compiled artifact bakes in the group-lasso
 /// kernel).
 pub fn solve(prob: &OtProblem, method: Method, opts: &SolveOptions) -> Result<FastOtResult> {
+    // Once-only: lets `GRPOT_TRACE=full cargo test/bench` trace without
+    // the CLI launch hook; free after the first call.
+    crate::obs::latch_env_once();
     match method {
         Method::Fast | Method::FastNoWs => {
             let opts = opts.clone().working_set(method != Method::FastNoWs);

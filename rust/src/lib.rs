@@ -41,6 +41,10 @@
 //! * [`serve`] — the serving engine: admission-controlled request queue
 //!   with deadlines and backpressure, micro-batching, a warm-start dual
 //!   cache, and a closed-loop load generator.
+//! * [`obs`] — observability: per-request trace IDs and span rings with
+//!   a Chrome-trace exporter (`GRPOT_TRACE={off,spans,full}`), per-solve
+//!   [`obs::SolveReport`] telemetry via the `SolveOptions` observer
+//!   hook, and a Prometheus text-exposition renderer.
 //! * [`coordinator`] — the L3 system: config, hyperparameter sweep
 //!   scheduler, metrics, TCP service (wired on top of [`serve`]).
 //! * [`eval`] — domain-adaptation evaluation (1-NN transfer accuracy).
@@ -72,6 +76,7 @@ pub mod eval;
 pub mod groups;
 pub mod jsonlite;
 pub mod linalg;
+pub mod obs;
 pub mod ot;
 pub mod pool;
 pub mod rng;

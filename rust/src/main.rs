@@ -7,6 +7,7 @@
 //! * `serve`   — start the TCP OT service (serving-engine backed).
 //! * `request` — send one solve request to a running service.
 //! * `bench-serve` — closed-loop load test of the serving engine.
+//! * `metrics` — fetch a running service's metrics (JSON or Prometheus).
 //! * `validate-artifacts` — check AOT artifacts load & match Rust numerics.
 //! * `info`    — build/runtime information.
 
@@ -125,12 +126,21 @@ fn app() -> App {
     ))
     .subcommand(engine_args(
         App::new("serve", "start the TCP OT service")
-            .arg(ArgSpec::opt("bind", "listen address").default("127.0.0.1:7677")),
+            .arg(ArgSpec::opt("bind", "listen address").default("127.0.0.1:7677"))
+            .arg(ArgSpec::opt(
+                "trace-out",
+                "write Chrome trace-event JSON here on shutdown (needs GRPOT_TRACE)",
+            )),
     ))
     .subcommand(
         App::new("request", "send one solve request to a running service")
             .arg(ArgSpec::opt("addr", "service address").default("127.0.0.1:7677"))
             .arg(ArgSpec::opt("json", "raw request JSON").required()),
+    )
+    .subcommand(
+        App::new("metrics", "fetch a running service's metrics")
+            .arg(ArgSpec::opt("addr", "service address").default("127.0.0.1:7677"))
+            .arg(ArgSpec::opt("format", "json|prom").default("json")),
     )
     .subcommand(dataset_args(engine_args(
         App::new("bench-serve", "closed-loop load test of the serving engine")
@@ -342,6 +352,12 @@ fn engine_config(m: &grpot::cli::Matches) -> Result<ServeConfig, grpot::cli::Cli
 fn cmd_serve(m: &grpot::cli::Matches) -> Result<()> {
     let bind = m.get("bind").unwrap_or("127.0.0.1:7677");
     let cfg = engine_config(m)?;
+    if m.get("trace-out").is_some() && !grpot::obs::enabled() {
+        eprintln!(
+            "note: --trace-out set but GRPOT_TRACE is off; \
+             the trace file will be empty (set GRPOT_TRACE=spans or full)"
+        );
+    }
     let handle = service::serve_with(bind, cfg)?;
     eprintln!("grpot service listening on {}", handle.addr);
     eprintln!("send {{\"op\":\"shutdown\"}} to stop");
@@ -357,6 +373,40 @@ fn cmd_serve(m: &grpot::cli::Matches) -> Result<()> {
             }
             Err(_) => break,
         }
+    }
+    if let Some(out) = m.get("trace-out") {
+        let trace = grpot::obs::span::drain_chrome_json();
+        std::fs::write(out, trace.to_json())
+            .with_context(|| format!("writing trace to {out}"))?;
+        eprintln!("trace written to {out} (load in chrome://tracing or Perfetto)");
+    }
+    Ok(())
+}
+
+fn cmd_metrics(m: &grpot::cli::Matches) -> Result<()> {
+    let addr: std::net::SocketAddr = m
+        .get("addr")
+        .unwrap_or("127.0.0.1:7677")
+        .parse()
+        .context("bad --addr")?;
+    let format = m.get("format").unwrap_or("json");
+    let mut client = service::Client::connect(&addr)?;
+    match format {
+        "json" => {
+            let resp = client.call(&Value::obj().set("op", "metrics"))?;
+            match resp.get("metrics") {
+                Some(mm) => println!("{}", mm.to_json()),
+                None => grpot::bail!("malformed metrics response: {}", resp.to_json()),
+            }
+        }
+        "prom" => {
+            let resp = client.call(&Value::obj().set("op", "metrics_prom"))?;
+            match resp.get("prom").and_then(Value::as_str) {
+                Some(text) => print!("{text}"),
+                None => grpot::bail!("malformed metrics_prom response: {}", resp.to_json()),
+            }
+        }
+        other => grpot::bail!("unknown --format '{other}' (expected json|prom)"),
     }
     Ok(())
 }
@@ -501,6 +551,12 @@ fn cmd_info() -> Result<()> {
         RegKind::env_default().map_or("invalid", |k| k.name()),
         std::env::var("GRPOT_REG").unwrap_or_else(|_| "unset".into())
     );
+    println!(
+        "trace: {} (GRPOT_TRACE={}, ring capacity {} spans/thread)",
+        grpot::obs::trace_mode().name(),
+        std::env::var("GRPOT_TRACE").unwrap_or_else(|_| "unset".into()),
+        grpot::obs::ring::DEFAULT_RING_CAPACITY
+    );
     print_runtime_info();
     Ok(())
 }
@@ -523,6 +579,12 @@ fn main() {
             std::process::exit(2);
         }
     }
+    // And GRPOT_TRACE: validate + latch the tracing mode once at launch
+    // (the hot paths read a single atomic thereafter).
+    if let Err(e) = grpot::obs::init_from_env() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
     let parsed = match app().parse_env() {
         Ok(p) => p,
         Err(e) => {
@@ -536,6 +598,7 @@ fn main() {
             "sweep" => cmd_sweep(m),
             "serve" => cmd_serve(m),
             "request" => cmd_request(m),
+            "metrics" => cmd_metrics(m),
             "bench-serve" => cmd_bench_serve(m),
             "validate-artifacts" => cmd_validate_artifacts(m),
             "info" => cmd_info(),

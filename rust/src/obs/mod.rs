@@ -1,0 +1,167 @@
+//! Zero-dependency observability subsystem: the `GRPOT_TRACE` knob,
+//! per-thread span rings with a Chrome-trace exporter, per-solve
+//! telemetry reports, and a Prometheus text-exposition renderer.
+//!
+//! Three pillars:
+//!
+//! * **Tracing** ([`span`], [`ring`]) — per-request trace IDs are minted
+//!   at admission ([`next_trace_id`]) and threaded queue → batcher →
+//!   engine worker → solve. Hierarchical spans land in per-thread
+//!   seqlock ring buffers (fixed capacity, drop-oldest, no locks on the
+//!   record path) and are drained on demand into Chrome
+//!   trace-event-format JSON ([`span::drain_chrome_json`]), which opens
+//!   directly in `chrome://tracing` / Perfetto.
+//! * **Solver telemetry** ([`report`]) — a [`SolveReport`] assembled per
+//!   solve via the `SolveOptions` observer hook: per-outer-round
+//!   screening skip counts, the skipped-group fraction (the paper's
+//!   headline quantity, Lemmas 1–3), working-set density trajectory,
+//!   SIMD backend, L-BFGS evaluation counts and pool utilization.
+//! * **Exporters** ([`prom`]) — Prometheus text exposition rendered from
+//!   a [`crate::coordinator::metrics::Metrics`] snapshot (counters,
+//!   gauges, timers, windowed summaries and fixed-bucket histograms).
+//!
+//! The knob: `GRPOT_TRACE=off|spans|full` (default `off`). The disabled
+//! path is compile-out-cheap — one relaxed atomic load, no allocation,
+//! no `Instant::now` — so it cannot perturb the bit-exact solver math
+//! or its wall-time within noise. `spans` records the request-level
+//! span taxonomy (queue wait, batch, solve); `full` additionally
+//! records solver-internal spans (per solve and per outer round).
+
+pub mod prom;
+pub mod report;
+pub mod ring;
+pub mod span;
+
+pub use report::{ObserverHook, PoolUtilization, RoundTelemetry, SolveReport};
+pub use span::{names, next_trace_id, record_span_at, Span};
+
+use crate::err;
+use crate::error::GrpotError;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Tracing level. Ordered: `Off < Spans < Full`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceMode {
+    /// No spans recorded; the record path is a single relaxed load.
+    #[default]
+    Off = 0,
+    /// Request-level spans (queue wait, batch, engine solve).
+    Spans = 1,
+    /// Request-level plus solver-internal spans (solve, outer rounds).
+    Full = 2,
+}
+
+impl TraceMode {
+    /// Parse the `GRPOT_TRACE` value. Unknown values are an error (the
+    /// CLI validates at launch and exits 2, mirroring `GRPOT_SIMD`).
+    pub fn parse(s: &str) -> Result<TraceMode, GrpotError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" | "" => Ok(TraceMode::Off),
+            "spans" => Ok(TraceMode::Spans),
+            "full" => Ok(TraceMode::Full),
+            other => Err(err!(
+                "unknown trace mode '{other}' (expected off|spans|full)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceMode::Off => "off",
+            TraceMode::Spans => "spans",
+            TraceMode::Full => "full",
+        }
+    }
+}
+
+/// Process-wide trace mode. Relaxed everywhere: the knob is a coarse
+/// on/off switch, not a synchronization point.
+static TRACE_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Set once the mode has been chosen explicitly (CLI launch or a test's
+/// [`set_trace_mode`]); [`latch_env_once`] then leaves the mode alone.
+static MODE_EXPLICIT: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// Current mode (one relaxed load).
+#[inline]
+pub fn trace_mode() -> TraceMode {
+    match TRACE_MODE.load(Ordering::Relaxed) {
+        1 => TraceMode::Spans,
+        2 => TraceMode::Full,
+        _ => TraceMode::Off,
+    }
+}
+
+/// Whether any span recording is on. THE hot-path gate: callers must
+/// branch on this before touching `Instant::now` or the rings.
+#[inline]
+pub fn enabled() -> bool {
+    TRACE_MODE.load(Ordering::Relaxed) != 0
+}
+
+/// Whether solver-internal (`full`) spans are on.
+#[inline]
+pub fn full_enabled() -> bool {
+    TRACE_MODE.load(Ordering::Relaxed) >= 2
+}
+
+/// Set the process-wide trace mode (tests and the CLI launcher). An
+/// explicit set always wins over the [`latch_env_once`] fallback.
+pub fn set_trace_mode(mode: TraceMode) {
+    MODE_EXPLICIT.store(true, Ordering::Relaxed);
+    TRACE_MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// Read `GRPOT_TRACE`, validate it, and install the mode. Returns the
+/// installed mode; a malformed value is an error the caller turns into
+/// a launch failure (never a late per-request surprise).
+pub fn init_from_env() -> Result<TraceMode, GrpotError> {
+    let mode = match std::env::var("GRPOT_TRACE") {
+        Ok(v) => TraceMode::parse(&v).map_err(|e| err!("GRPOT_TRACE: {e}"))?,
+        Err(_) => TraceMode::Off,
+    };
+    set_trace_mode(mode);
+    Ok(mode)
+}
+
+/// Once-only best-effort env latch for processes without a launch hook
+/// (test binaries, benches, embedders): the *first* call installs a
+/// valid `GRPOT_TRACE` value; later calls — and any explicit
+/// [`set_trace_mode`] before or after — win over the env. A malformed
+/// value is silently ignored here (the CLI's [`init_from_env`] is the
+/// strict validator). Called from solver/engine cold entry points, so
+/// `GRPOT_TRACE=full cargo test` actually traces.
+pub fn latch_env_once() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        if MODE_EXPLICIT.load(Ordering::Relaxed) {
+            return; // an explicit set_trace_mode already happened
+        }
+        if let Ok(v) = std::env::var("GRPOT_TRACE") {
+            if let Ok(mode) = TraceMode::parse(&v) {
+                TRACE_MODE.store(mode as u8, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_modes() {
+        assert_eq!(TraceMode::parse("off").unwrap(), TraceMode::Off);
+        assert_eq!(TraceMode::parse("SPANS").unwrap(), TraceMode::Spans);
+        assert_eq!(TraceMode::parse(" full ").unwrap(), TraceMode::Full);
+        assert!(TraceMode::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn mode_ordering_gates_full() {
+        assert!(TraceMode::Off < TraceMode::Spans);
+        assert!(TraceMode::Spans < TraceMode::Full);
+        assert_eq!(TraceMode::Full.name(), "full");
+    }
+}

@@ -1,0 +1,193 @@
+//! Prometheus text-exposition renderer.
+//!
+//! Renders a [`crate::coordinator::metrics::Metrics`] JSON snapshot —
+//! *not* the registry's internals, so the exporter and the registry
+//! evolve independently — into the Prometheus text format (version
+//! 0.0.4): `# HELP`/`# TYPE` headers, counters, gauges, summaries with
+//! quantile labels for the windowed histograms, and real cumulative
+//! `_bucket{le="…"}` series for fixed-bucket histograms. Reachable as
+//! the `metrics_prom` wire op and `grpot metrics --format prom`.
+
+use crate::jsonlite::Value;
+use std::fmt::Write as _;
+
+/// Prefix stamped on every exported metric name.
+const PREFIX: &str = "grpot_";
+
+/// Sanitize a dotted metric name into a Prometheus identifier:
+/// `serve.solve_seconds` → `grpot_serve_solve_seconds`.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(PREFIX.len() + name.len());
+    out.push_str(PREFIX);
+    for (i, ch) in name.chars().enumerate() {
+        let ok = ch.is_ascii_alphanumeric() || ch == '_' || ch == ':';
+        let ok = ok && !(i == 0 && ch.is_ascii_digit());
+        out.push(if ok { ch } else { '_' });
+    }
+    out
+}
+
+/// Format a sample value: integers without a decimal point, +Inf as
+/// Prometheus spells it.
+fn prom_num(x: f64) -> String {
+    if x.is_infinite() && x > 0.0 {
+        "+Inf".to_string()
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render a metrics snapshot (the exact value `Metrics::snapshot`
+/// returns) as Prometheus text exposition.
+pub fn render(snapshot: &Value) -> String {
+    let mut out = String::new();
+
+    if let Some(Value::Obj(counters)) = snapshot.get("counters") {
+        for (name, v) in counters {
+            let n = prom_name(name);
+            header(&mut out, &n, "counter", "grpot counter");
+            let _ = writeln!(out, "{n} {}", prom_num(v.as_f64().unwrap_or(0.0)));
+        }
+    }
+
+    if let Some(Value::Obj(gauges)) = snapshot.get("gauges") {
+        for (name, v) in gauges {
+            let n = prom_name(name);
+            header(&mut out, &n, "gauge", "grpot gauge");
+            let _ = writeln!(out, "{n} {}", prom_num(v.as_f64().unwrap_or(0.0)));
+        }
+    }
+
+    // Timers are (sum of seconds, count) pairs — a quantile-less
+    // summary in Prometheus terms.
+    if let Some(Value::Obj(timers)) = snapshot.get("timers") {
+        for (name, v) in timers {
+            let n = prom_name(&format!("{name}_seconds"));
+            header(&mut out, &n, "summary", "grpot timer");
+            let sum = v.get("total_s").and_then(Value::as_f64).unwrap_or(0.0);
+            let count = v.get("count").and_then(Value::as_f64).unwrap_or(0.0);
+            let _ = writeln!(out, "{n}_sum {}", prom_num(sum));
+            let _ = writeln!(out, "{n}_count {}", prom_num(count));
+        }
+    }
+
+    if let Some(Value::Obj(hists)) = snapshot.get("hists") {
+        for (name, v) in hists {
+            let n = prom_name(name);
+            let count = v.get("count").and_then(Value::as_f64).unwrap_or(0.0);
+            let sum = v.get("sum").and_then(Value::as_f64);
+            match v.get("buckets").and_then(Value::as_arr) {
+                // Fixed-bucket histogram: cumulative le-series.
+                Some(buckets) => {
+                    header(&mut out, &n, "histogram", "grpot histogram");
+                    let mut cum = 0.0;
+                    for b in buckets {
+                        let le = b.get("le").and_then(Value::as_f64).unwrap_or(f64::INFINITY);
+                        cum += b.get("count").and_then(Value::as_f64).unwrap_or(0.0);
+                        let _ = writeln!(
+                            out,
+                            "{n}_bucket{{le=\"{}\"}} {}",
+                            prom_num(le),
+                            prom_num(cum)
+                        );
+                    }
+                    let _ = writeln!(out, "{n}_sum {}", prom_num(sum.unwrap_or(0.0)));
+                    let _ = writeln!(out, "{n}_count {}", prom_num(count));
+                }
+                // Window-only histogram: quantile summary over the
+                // recent window plus the all-time count.
+                None => {
+                    header(&mut out, &n, "summary", "grpot summary");
+                    for (label, q) in [("p50", "0.5"), ("p95", "0.95"), ("p99", "0.99")] {
+                        if let Some(x) = v.get(label).and_then(Value::as_f64) {
+                            let _ = writeln!(out, "{n}{{quantile=\"{q}\"}} {}", prom_num(x));
+                        }
+                    }
+                    if let Some(s) = sum {
+                        let _ = writeln!(out, "{n}_sum {}", prom_num(s));
+                    }
+                    let _ = writeln!(out, "{n}_count {}", prom_num(count));
+                }
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_sanitized() {
+        assert_eq!(prom_name("serve.solve_seconds"), "grpot_serve_solve_seconds");
+        assert_eq!(prom_name("a-b c"), "grpot_a_b_c");
+    }
+
+    #[test]
+    fn renders_counters_and_gauges() {
+        let snap = Value::obj()
+            .set("counters", Value::obj().set("serve.requests", 7u64))
+            .set("gauges", Value::obj().set("serve.queue_depth", 2.5))
+            .set("timers", Value::obj())
+            .set("hists", Value::obj());
+        let text = render(&snap);
+        assert!(text.contains("# TYPE grpot_serve_requests counter"));
+        assert!(text.contains("grpot_serve_requests 7\n"));
+        assert!(text.contains("# TYPE grpot_serve_queue_depth gauge"));
+        assert!(text.contains("grpot_serve_queue_depth 2.5\n"));
+    }
+
+    #[test]
+    fn renders_bucketed_histogram_cumulatively() {
+        let buckets = Value::Arr(vec![
+            Value::obj().set("le", 0.1).set("count", 3u64),
+            Value::obj().set("le", 1.0).set("count", 2u64),
+            Value::obj().set("le", f64::INFINITY).set("count", 1u64),
+        ]);
+        let snap = Value::obj()
+            .set("counters", Value::obj())
+            .set("gauges", Value::obj())
+            .set("timers", Value::obj())
+            .set(
+                "hists",
+                Value::obj().set(
+                    "lat",
+                    Value::obj().set("count", 6u64).set("sum", 4.5).set("buckets", buckets),
+                ),
+            );
+        let text = render(&snap);
+        assert!(text.contains("# TYPE grpot_lat histogram"));
+        assert!(text.contains("grpot_lat_bucket{le=\"0.1\"} 3\n"));
+        assert!(text.contains("grpot_lat_bucket{le=\"1\"} 5\n"));
+        assert!(text.contains("grpot_lat_bucket{le=\"+Inf\"} 6\n"));
+        assert!(text.contains("grpot_lat_sum 4.5\n"));
+        assert!(text.contains("grpot_lat_count 6\n"));
+    }
+
+    #[test]
+    fn renders_window_histogram_as_summary() {
+        let snap = Value::obj()
+            .set("counters", Value::obj())
+            .set("gauges", Value::obj())
+            .set("timers", Value::obj().set("t", Value::obj().set("total_s", 3.0).set("count", 2u64)))
+            .set(
+                "hists",
+                Value::obj().set("w", Value::obj().set("count", 4u64).set("p50", 1.5).set("p99", 9.0)),
+            );
+        let text = render(&snap);
+        assert!(text.contains("# TYPE grpot_w summary"));
+        assert!(text.contains("grpot_w{quantile=\"0.5\"} 1.5\n"));
+        assert!(text.contains("grpot_w_count 4\n"));
+        assert!(text.contains("grpot_t_seconds_sum 3\n"));
+        assert!(text.contains("grpot_t_seconds_count 2\n"));
+    }
+}

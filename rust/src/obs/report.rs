@@ -1,0 +1,259 @@
+//! Per-solve telemetry: [`SolveReport`] and the observer hook that
+//! delivers it.
+//!
+//! A report is assembled by the Algorithm-1 driver (and the semi-dual
+//! solver) from counters the solve *already* maintains — `OracleStats`,
+//! the working-set size, the pool's park/wake counters — so producing
+//! it never touches the bit-exact kernel math. The headline field is
+//! [`SolveReport::skipped_group_fraction`]: the fraction of group
+//! gradients the paper's safe-screening bound (Lemmas 1–3) skipped,
+//! computed from the same counters the solver result carries, so the
+//! two agree byte-for-byte.
+
+use crate::jsonlite::Value;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Skipped-group fraction from raw counters: `skipped / (computed +
+/// skipped)`, 0 when nothing was evaluated.
+pub fn skipped_fraction(grads_computed: u64, grads_skipped: u64) -> f64 {
+    let total = grads_computed + grads_skipped;
+    if total == 0 {
+        0.0
+    } else {
+        grads_skipped as f64 / total as f64
+    }
+}
+
+/// Screening counters for one outer round (one `r`-iteration L-BFGS
+/// block + working-set refresh): deltas of the oracle's cumulative
+/// counters across the round.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RoundTelemetry {
+    /// 1-based outer-round index.
+    pub round: u32,
+    pub grads_computed: u64,
+    pub grads_skipped: u64,
+    pub ub_checks: u64,
+    pub ws_hits: u64,
+    /// Working-set density |ℕ| / (L·n) *after* this round's refresh
+    /// (None for oracles without a working set).
+    pub ws_density: Option<f64>,
+}
+
+impl RoundTelemetry {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj()
+            .set("round", self.round as u64)
+            .set("grads_computed", self.grads_computed)
+            .set("grads_skipped", self.grads_skipped)
+            .set("ub_checks", self.ub_checks)
+            .set("ws_hits", self.ws_hits)
+            .set(
+                "skip_rate",
+                skipped_fraction(self.grads_computed, self.grads_skipped),
+            );
+        if let Some(d) = self.ws_density {
+            v = v.set("ws_density", d);
+        }
+        v
+    }
+}
+
+/// Worker-pool utilization over one solve: busy vs parked nanoseconds
+/// and park/wake transition counts, from the pool's always-on counters
+/// (nanosecond timing only accumulates while tracing is enabled).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolUtilization {
+    pub busy_ns: u64,
+    pub parked_ns: u64,
+    pub parks: u64,
+    pub wakes: u64,
+}
+
+impl PoolUtilization {
+    /// Counter delta `self − earlier` (saturating; pools are shared
+    /// across solves, so per-solve numbers are start/end differences).
+    pub fn since(&self, earlier: &PoolUtilization) -> PoolUtilization {
+        PoolUtilization {
+            busy_ns: self.busy_ns.saturating_sub(earlier.busy_ns),
+            parked_ns: self.parked_ns.saturating_sub(earlier.parked_ns),
+            parks: self.parks.saturating_sub(earlier.parks),
+            wakes: self.wakes.saturating_sub(earlier.wakes),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("busy_ns", self.busy_ns)
+            .set("parked_ns", self.parked_ns)
+            .set("parks", self.parks)
+            .set("wakes", self.wakes)
+    }
+}
+
+/// Everything one solve can tell an operator, assembled at the end of
+/// the run and delivered through [`ObserverHook`].
+#[derive(Clone, Debug, Default)]
+pub struct SolveReport {
+    /// Solver label (`fast`, `origin`, `semidual+negentropy`, …).
+    pub method: String,
+    /// Request trace ID (0 outside the serving path).
+    pub trace_id: u64,
+    /// L-BFGS iterations taken.
+    pub iterations: usize,
+    /// Outer rounds completed (working-set refreshes).
+    pub outer_rounds: usize,
+    /// Oracle (value+gradient) evaluations.
+    pub evals: u64,
+    /// Evaluations beyond one per iteration — line-search backtracks.
+    pub line_search_evals: u64,
+    pub grads_computed: u64,
+    pub grads_skipped: u64,
+    pub ub_checks: u64,
+    pub ws_hits: u64,
+    /// The paper's headline quantity: fraction of group gradients the
+    /// screening bound skipped. Equals
+    /// [`skipped_fraction`]`(grads_computed, grads_skipped)` over the
+    /// same `OracleStats` the solver result carries.
+    pub skipped_group_fraction: f64,
+    /// Kernel backend the oracle dispatched to (`scalar`, `avx2`, …).
+    pub simd_backend: &'static str,
+    /// Per-outer-round counter deltas (the density trajectory).
+    pub rounds: Vec<RoundTelemetry>,
+    /// Worker-pool utilization delta across this solve.
+    pub pool: PoolUtilization,
+    pub wall_time_s: f64,
+}
+
+impl SolveReport {
+    /// Full JSON (sweep reports, `--trace-out` sidecars).
+    pub fn to_json(&self) -> Value {
+        self.compact_json().set(
+            "rounds",
+            Value::Arr(self.rounds.iter().map(RoundTelemetry::to_json).collect()),
+        )
+    }
+
+    /// Compact JSON for the serve response's `"telemetry"` echo: the
+    /// scalars only, no per-round trajectory.
+    pub fn compact_json(&self) -> Value {
+        Value::obj()
+            .set("method", self.method.as_str())
+            .set("trace_id", self.trace_id)
+            .set("iterations", self.iterations)
+            .set("outer_rounds", self.outer_rounds)
+            .set("evals", self.evals)
+            .set("line_search_evals", self.line_search_evals)
+            .set("grads_computed", self.grads_computed)
+            .set("grads_skipped", self.grads_skipped)
+            .set("ub_checks", self.ub_checks)
+            .set("ws_hits", self.ws_hits)
+            .set("skipped_group_fraction", self.skipped_group_fraction)
+            .set("simd_backend", self.simd_backend)
+            .set("pool", self.pool.to_json())
+            .set("wall_time_s", self.wall_time_s)
+    }
+}
+
+/// Shareable observer invoked with the finished [`SolveReport`]. Cloned
+/// into solver configs; the wrapper keeps those configs `Debug` +
+/// `Clone` without exposing the closure.
+#[derive(Clone)]
+pub struct ObserverHook(Arc<dyn Fn(&SolveReport) + Send + Sync>);
+
+impl ObserverHook {
+    pub fn new(f: impl Fn(&SolveReport) + Send + Sync + 'static) -> ObserverHook {
+        ObserverHook(Arc::new(f))
+    }
+
+    /// Hook that stores the last report in a shared cell — the common
+    /// "run one solve, read its report" pattern.
+    pub fn capture() -> (ObserverHook, Arc<Mutex<Option<SolveReport>>>) {
+        let cell: Arc<Mutex<Option<SolveReport>>> = Arc::new(Mutex::new(None));
+        let sink = Arc::clone(&cell);
+        let hook = ObserverHook::new(move |r| {
+            *sink.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+                Some(r.clone());
+        });
+        (hook, cell)
+    }
+
+    pub fn emit(&self, report: &SolveReport) {
+        (self.0)(report);
+    }
+}
+
+impl fmt::Debug for ObserverHook {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("ObserverHook(..)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skipped_fraction_edges() {
+        assert_eq!(skipped_fraction(0, 0), 0.0);
+        assert_eq!(skipped_fraction(1, 3), 0.75);
+        assert_eq!(skipped_fraction(5, 0), 0.0);
+    }
+
+    #[test]
+    fn capture_hook_stores_last_report() {
+        let (hook, cell) = ObserverHook::capture();
+        assert!(cell.lock().unwrap().is_none());
+        let mut report = SolveReport { trace_id: 9, ..Default::default() };
+        report.skipped_group_fraction = 0.5;
+        hook.emit(&report);
+        let got = cell.lock().unwrap().clone().expect("captured");
+        assert_eq!(got.trace_id, 9);
+        assert_eq!(got.skipped_group_fraction, 0.5);
+        assert_eq!(format!("{hook:?}"), "ObserverHook(..)");
+    }
+
+    #[test]
+    fn pool_delta_saturates() {
+        let a = PoolUtilization { busy_ns: 10, parked_ns: 5, parks: 2, wakes: 2 };
+        let b = PoolUtilization { busy_ns: 25, parked_ns: 9, parks: 3, wakes: 4 };
+        assert_eq!(
+            b.since(&a),
+            PoolUtilization { busy_ns: 15, parked_ns: 4, parks: 1, wakes: 2 }
+        );
+        assert_eq!(a.since(&b).busy_ns, 0);
+    }
+
+    #[test]
+    fn report_json_roundtrips_headline_fields() {
+        let report = SolveReport {
+            method: "fast".into(),
+            trace_id: 3,
+            grads_computed: 10,
+            grads_skipped: 30,
+            skipped_group_fraction: 0.75,
+            simd_backend: "scalar",
+            rounds: vec![RoundTelemetry {
+                round: 1,
+                grads_computed: 10,
+                grads_skipped: 30,
+                ws_density: Some(0.25),
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let v = report.to_json();
+        assert_eq!(
+            v.get("skipped_group_fraction").and_then(Value::as_f64),
+            Some(0.75)
+        );
+        let rounds = v.get("rounds").and_then(Value::as_arr).unwrap();
+        assert_eq!(rounds.len(), 1);
+        assert_eq!(
+            rounds[0].get("ws_density").and_then(Value::as_f64),
+            Some(0.25)
+        );
+        assert_eq!(rounds[0].get("skip_rate").and_then(Value::as_f64), Some(0.75));
+    }
+}

@@ -1,0 +1,212 @@
+//! Per-thread span rings: fixed-capacity, drop-oldest, lock-free on the
+//! record path.
+//!
+//! Each recording thread owns one [`Ring`] (created on its first span
+//! and registered once in a global list — the only lock, taken once per
+//! thread lifetime, never per span). A ring slot is a seqlock over five
+//! `AtomicU64` words: the writer bumps the sequence to odd, stores the
+//! payload, then bumps to even; a drain snapshots slots read-only and
+//! skips any slot whose sequence was odd or changed mid-read. Written
+//! entirely in safe code — the crate's `unsafe` inventory (SIMD kernels
+//! + the pool's type-erased job handoff) is unchanged.
+//!
+//! Overflow drops the *oldest* entries by construction: the writer
+//! overwrites `head % capacity` and readers can observe at most the
+//! last `capacity` spans per thread. Draining is non-destructive (a
+//! read-only snapshot), so concurrent drains and in-flight writers
+//! never coordinate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Spans retained per thread (~5 words each). Enough for the tail of a
+/// load run; older spans age out.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// One recorded span, as drained from a ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Index into [`super::names::ALL`].
+    pub name_id: u32,
+    /// Small per-thread ordinal (Chrome's `tid`).
+    pub tid: u32,
+    /// Request trace ID (0 for spans outside any request).
+    pub trace_id: u64,
+    /// Start, nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// Seqlock slot: `seq` odd while a write is in flight, even when the
+/// payload words are consistent; 0 means never written.
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    name_tid: AtomicU64,
+    trace: AtomicU64,
+    start: AtomicU64,
+    dur: AtomicU64,
+}
+
+/// Fixed-capacity drop-oldest span buffer for a single writer thread.
+pub struct Ring {
+    slots: Vec<Slot>,
+    head: AtomicU64,
+}
+
+impl Ring {
+    pub fn with_capacity(capacity: usize) -> Ring {
+        let capacity = capacity.max(1);
+        let mut slots = Vec::with_capacity(capacity);
+        slots.resize_with(capacity, Slot::default);
+        Ring { slots, head: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Spans ever recorded (monotonic; `min(recorded, capacity)` are
+    /// still resident).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Record one span. Single-producer per ring (each thread writes
+    /// only its own); drains may run concurrently and will skip this
+    /// slot while the write is in flight.
+    pub fn record(&self, name_id: u32, tid: u32, trace_id: u64, start_ns: u64, dur_ns: u64) {
+        let h = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(h % self.slots.len() as u64) as usize];
+        let seq = slot.seq.load(Ordering::Relaxed);
+        slot.seq.store(seq | 1, Ordering::Release); // mark write in flight
+        slot.name_tid
+            .store(((name_id as u64) << 32) | tid as u64, Ordering::Release);
+        slot.trace.store(trace_id, Ordering::Release);
+        slot.start.store(start_ns, Ordering::Release);
+        slot.dur.store(dur_ns, Ordering::Release);
+        slot.seq.store((seq | 1).wrapping_add(1), Ordering::Release); // even again
+    }
+
+    /// Read-only snapshot of every stable slot. Slots that were never
+    /// written, or whose writer was mid-store across every retry, are
+    /// skipped — a drain never blocks a writer and never reads a torn
+    /// span.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        for slot in &self.slots {
+            for _retry in 0..4 {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 == 0 {
+                    break; // never written
+                }
+                if s1 & 1 == 1 {
+                    continue; // write in flight; retry
+                }
+                let name_tid = slot.name_tid.load(Ordering::Acquire);
+                let trace = slot.trace.load(Ordering::Acquire);
+                let start = slot.start.load(Ordering::Acquire);
+                let dur = slot.dur.load(Ordering::Acquire);
+                let s2 = slot.seq.load(Ordering::Acquire);
+                if s1 != s2 {
+                    continue; // overwritten mid-read; retry
+                }
+                out.push(SpanEvent {
+                    name_id: (name_tid >> 32) as u32,
+                    tid: name_tid as u32,
+                    trace_id: trace,
+                    start_ns: start,
+                    dur_ns: dur,
+                });
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Global list of every thread's ring. Locked once per thread lifetime
+/// (registration) and per drain — never on the span record path.
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Small per-thread ordinal for Chrome's `tid` field (OS thread IDs are
+/// not portably numeric).
+fn next_tid() -> u32 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed) as u32
+}
+
+thread_local! {
+    static LOCAL: std::cell::OnceCell<(Arc<Ring>, u32)> = const { std::cell::OnceCell::new() };
+}
+
+/// Run `f` against the calling thread's ring (created and registered on
+/// first use) and its trace `tid`.
+pub fn with_local<T>(f: impl FnOnce(&Ring, u32) -> T) -> T {
+    LOCAL.with(|cell| {
+        let (ring, tid) = cell.get_or_init(|| {
+            let ring = Arc::new(Ring::with_capacity(DEFAULT_RING_CAPACITY));
+            registry()
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .push(Arc::clone(&ring));
+            (ring, next_tid())
+        });
+        f(ring, *tid)
+    })
+}
+
+/// Snapshot every registered ring (all threads, read-only).
+pub fn snapshot_all() -> Vec<SpanEvent> {
+    let rings: Vec<Arc<Ring>> = registry()
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .iter()
+        .map(Arc::clone)
+        .collect();
+    let mut out = Vec::new();
+    for ring in rings {
+        out.extend(ring.snapshot());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overflow_keeps_newest() {
+        let ring = Ring::with_capacity(4);
+        for i in 0..10u64 {
+            ring.record(0, 1, i, i * 100, 10);
+        }
+        assert_eq!(ring.recorded(), 10);
+        let mut got: Vec<u64> = ring.snapshot().iter().map(|e| e.trace_id).collect();
+        got.sort_unstable();
+        // Capacity 4 → exactly the newest four survive, none torn.
+        assert_eq!(got, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn snapshot_of_empty_ring_is_empty() {
+        let ring = Ring::with_capacity(8);
+        assert!(ring.snapshot().is_empty());
+        assert_eq!(ring.recorded(), 0);
+    }
+
+    #[test]
+    fn event_words_roundtrip() {
+        let ring = Ring::with_capacity(2);
+        ring.record(7, 42, 0xDEAD, 123, 456);
+        let got = ring.snapshot();
+        assert_eq!(
+            got,
+            vec![SpanEvent { name_id: 7, tid: 42, trace_id: 0xDEAD, start_ns: 123, dur_ns: 456 }]
+        );
+    }
+}

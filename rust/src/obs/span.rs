@@ -1,0 +1,180 @@
+//! Trace IDs, span guards and the Chrome trace-event exporter.
+//!
+//! Trace IDs are minted at admission ([`next_trace_id`] — one relaxed
+//! `fetch_add`, always on, no allocation) and threaded through the
+//! ticket → batch → engine worker → solve chain. Spans are recorded via
+//! RAII guards ([`Span`]) or retroactively from timestamps the caller
+//! already holds ([`record_span_at`] — e.g. queue wait, measured from
+//! the ticket's existing `submitted` instant, so the hot path pays zero
+//! extra clock reads). When tracing is off every entry point is a
+//! single relaxed atomic load.
+
+use super::ring;
+use crate::jsonlite::Value;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The static span taxonomy. Span names are interned as indices into
+/// [`names::ALL`] so the record path never touches a string.
+pub mod names {
+    /// Submit → dequeue, per ticket (recorded retroactively at dequeue).
+    pub const QUEUE_WAIT: u32 = 0;
+    /// One micro-batch through `handle_batch` (triage + dataset + jobs).
+    pub const ENGINE_BATCH: u32 = 1;
+    /// One deduplicated solve job inside a batch.
+    pub const ENGINE_SOLVE: u32 = 2;
+    /// One Algorithm-1 solver run (full mode).
+    pub const SOLVE: u32 = 3;
+    /// One `r`-iteration block + working-set refresh (full mode).
+    pub const OUTER_ROUND: u32 = 4;
+    /// Dataset generation + problem preparation for a cold cache miss.
+    pub const DATASET_BUILD: u32 = 5;
+
+    pub const ALL: [&str; 6] = [
+        "queue.wait",
+        "engine.batch",
+        "engine.solve",
+        "solve",
+        "solve.outer_round",
+        "engine.dataset_build",
+    ];
+}
+
+/// Mint a fresh nonzero trace ID. Always on (whether or not spans are
+/// recorded) so responses can echo an ID in every mode.
+pub fn next_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Process trace epoch: all span timestamps are nanoseconds since this
+/// instant. Initialized on the first *enabled* span — the off path
+/// never touches it.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn ns_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_nanos() as u64
+}
+
+/// RAII span guard: records `[start, drop)` into the calling thread's
+/// ring. Construction when tracing is off is one relaxed load — no
+/// clock read, no allocation, nothing on drop.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+struct SpanInner {
+    name_id: u32,
+    trace_id: u64,
+    start: Instant,
+}
+
+impl Span {
+    /// Start a request-level span (recorded in `spans` and `full` mode).
+    pub fn start(name_id: u32, trace_id: u64) -> Span {
+        if !super::enabled() {
+            return Span { inner: None };
+        }
+        Span { inner: Some(SpanInner { name_id, trace_id, start: Instant::now() }) }
+    }
+
+    /// Start a solver-internal span (recorded in `full` mode only).
+    pub fn start_full(name_id: u32, trace_id: u64) -> Span {
+        if !super::full_enabled() {
+            return Span { inner: None };
+        }
+        Span { inner: Some(SpanInner { name_id, trace_id, start: Instant::now() }) }
+    }
+
+    /// Whether this guard will record on drop.
+    pub fn is_recording(&self) -> bool {
+        self.inner.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            let start_ns = ns_since_epoch(inner.start);
+            let dur_ns = inner.start.elapsed().as_nanos() as u64;
+            ring::with_local(|ring, tid| {
+                ring.record(inner.name_id, tid, inner.trace_id, start_ns, dur_ns);
+            });
+        }
+    }
+}
+
+/// Record a span retroactively from instants the caller already holds
+/// (e.g. queue wait from the ticket's `submitted` timestamp). No-op
+/// when tracing is off.
+pub fn record_span_at(name_id: u32, trace_id: u64, start: Instant, end: Instant) {
+    if !super::enabled() {
+        return;
+    }
+    let start_ns = ns_since_epoch(start);
+    let dur_ns = end.saturating_duration_since(start).as_nanos() as u64;
+    ring::with_local(|ring, tid| {
+        ring.record(name_id, tid, trace_id, start_ns, dur_ns);
+    });
+}
+
+/// Drain every thread's ring into Chrome trace-event-format JSON
+/// (`{"traceEvents": [...]}`; complete `"ph": "X"` events with
+/// microsecond timestamps) — loads directly in `chrome://tracing` and
+/// Perfetto. Non-destructive: rings keep their contents.
+pub fn drain_chrome_json() -> Value {
+    let mut events = ring::snapshot_all();
+    events.sort_by_key(|e| (e.start_ns, e.tid));
+    let items: Vec<Value> = events
+        .iter()
+        .map(|e| {
+            let name = names::ALL
+                .get(e.name_id as usize)
+                .copied()
+                .unwrap_or("unknown");
+            Value::obj()
+                .set("name", name)
+                .set("ph", "X")
+                .set("ts", e.start_ns as f64 / 1e3)
+                .set("dur", e.dur_ns as f64 / 1e3)
+                .set("pid", 1u64)
+                .set("tid", e.tid as u64)
+                .set("args", Value::obj().set("trace_id", e.trace_id))
+        })
+        .collect();
+    Value::obj()
+        .set("traceEvents", Value::Arr(items))
+        .set("displayTimeUnit", "ms")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn span_off_mode_records_nothing() {
+        // Unit tests leave the global mode at Off.
+        let s = Span::start(names::SOLVE, 1);
+        assert!(!s.is_recording());
+        let f = Span::start_full(names::OUTER_ROUND, 1);
+        assert!(!f.is_recording());
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let doc = drain_chrome_json();
+        assert!(doc.get("traceEvents").and_then(Value::as_arr).is_some());
+    }
+}

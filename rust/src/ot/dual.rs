@@ -355,6 +355,24 @@ pub trait DualOracle {
 
     /// Counter access.
     fn stats(&self) -> &OracleStats;
+
+    /// SIMD dispatch this oracle's kernels actually use, when known
+    /// (telemetry only; never consulted by the math).
+    fn simd_dispatch(&self) -> Option<crate::simd::Dispatch> {
+        None
+    }
+
+    /// Working-set density |ℕ| / (L·n), when the oracle maintains a
+    /// working set (telemetry only).
+    fn working_set_density(&self) -> Option<f64> {
+        None
+    }
+
+    /// The parallel context driving this oracle's chunked evaluation,
+    /// when it owns one (telemetry only; used to read pool counters).
+    fn parallel_ctx(&self) -> Option<&crate::pool::ParallelCtx> {
+        None
+    }
 }
 
 /// Compute `ψ` and `∇ψ` contributions of one `(group, column)` pair and

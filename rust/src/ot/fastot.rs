@@ -12,6 +12,8 @@ use super::screening::ScreeningOracle;
 use super::solve::SolveOptions;
 use crate::err;
 use crate::error::Result;
+use crate::obs::report::skipped_fraction;
+use crate::obs::{names, ObserverHook, RoundTelemetry, Span};
 use crate::pool::ParallelCtx;
 use crate::simd::SimdMode;
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
@@ -50,6 +52,14 @@ pub struct FastOtConfig {
     pub simd: SimdMode,
     /// Inner solver options.
     pub lbfgs: LbfgsOptions,
+    /// Telemetry observer: invoked once with the finished
+    /// [`crate::obs::SolveReport`]. Telemetry is assembled from counters
+    /// the solve already maintains, so `None` (the default) and `Some`
+    /// produce byte-identical solver results.
+    pub observer: Option<ObserverHook>,
+    /// Request trace ID stamped on this solve's spans and report (0
+    /// outside the serving path).
+    pub trace_id: u64,
 }
 
 impl Default for FastOtConfig {
@@ -62,6 +72,8 @@ impl Default for FastOtConfig {
             threads: 1,
             simd: SimdMode::Auto,
             lbfgs: LbfgsOptions::default(),
+            observer: None,
+            trace_id: 0,
         }
     }
 }
@@ -129,12 +141,36 @@ pub fn drive_from(
     assert!(cfg.r >= 1, "snapshot interval must be >= 1");
     assert_eq!(x0.len(), prob.dim(), "warm-start iterate has wrong dimension");
     let start = Instant::now();
+    // Telemetry reads counters the solve maintains anyway; with no
+    // observer nothing below allocates or branches per iteration.
+    let observing = cfg.observer.is_some();
+    let pool_at_start =
+        if observing { oracle.parallel_ctx().map(|c| c.pool_stats()) } else { None };
+    let counters = |s: &OracleStats| (s.grads_computed, s.grads_skipped, s.ub_checks, s.ws_hits);
+    let mut prev = counters(oracle.stats());
+    let mut rounds: Vec<RoundTelemetry> = Vec::new();
+    let round_delta = |oracle: &dyn DualOracle,
+                       prev: &mut (u64, u64, u64, u64),
+                       rounds: &mut Vec<RoundTelemetry>| {
+        let cur = counters(oracle.stats());
+        rounds.push(RoundTelemetry {
+            round: rounds.len() as u32 + 1,
+            grads_computed: cur.0 - prev.0,
+            grads_skipped: cur.1 - prev.1,
+            ub_checks: cur.2 - prev.2,
+            ws_hits: cur.3 - prev.3,
+            ws_density: oracle.working_set_density(),
+        });
+        *prev = cur;
+    };
+    let _solve_span = Span::start_full(names::SOLVE, cfg.trace_id);
     if x0.iter().any(|&v| v != 0.0) {
         oracle.refresh(&x0);
     }
     let mut solver = Lbfgs::new(x0, cfg.lbfgs.clone(), oracle);
     let mut outer_rounds = 0usize;
     let stop = 'outer: loop {
+        let _round_span = Span::start_full(names::OUTER_ROUND, cfg.trace_id);
         for _ in 0..cfg.r {
             match solver.step(oracle) {
                 StepStatus::Continue => {}
@@ -144,17 +180,54 @@ pub fn drive_from(
         // Algorithm 1, lines 4–15.
         oracle.refresh(solver.x());
         outer_rounds += 1;
+        if observing {
+            round_delta(&*oracle, &mut prev, &mut rounds);
+        }
     };
     let iterations = solver.iterations();
     let (x, f) = solver.into_solution();
+    let stats = oracle.stats().clone();
+    let wall_time_s = start.elapsed().as_secs_f64();
+    if let Some(hook) = &cfg.observer {
+        // The terminal (partial) round, if any counters moved since the
+        // last refresh.
+        if counters(&stats) != prev {
+            round_delta(&*oracle, &mut prev, &mut rounds);
+        }
+        let report = crate::obs::SolveReport {
+            method: method.to_string(),
+            trace_id: cfg.trace_id,
+            iterations,
+            outer_rounds,
+            evals: stats.evals,
+            // One eval seeds L-BFGS and each iteration needs one; the
+            // rest are line-search backtracks.
+            line_search_evals: stats.evals.saturating_sub(iterations as u64 + 1),
+            grads_computed: stats.grads_computed,
+            grads_skipped: stats.grads_skipped,
+            ub_checks: stats.ub_checks,
+            ws_hits: stats.ws_hits,
+            // Same counters FastOtResult.stats carries — the report and
+            // the result agree byte-for-byte by construction.
+            skipped_group_fraction: skipped_fraction(stats.grads_computed, stats.grads_skipped),
+            simd_backend: oracle.simd_dispatch().map(|d| d.name()).unwrap_or("scalar"),
+            rounds,
+            pool: match (oracle.parallel_ctx(), pool_at_start) {
+                (Some(ctx), Some(at_start)) => ctx.pool_stats().since(&at_start),
+                _ => crate::obs::PoolUtilization::default(),
+            },
+            wall_time_s,
+        };
+        hook.emit(&report);
+    }
     FastOtResult {
         x,
         dual_objective: -f,
         iterations,
         outer_rounds,
         stop,
-        stats: oracle.stats().clone(),
-        wall_time_s: start.elapsed().as_secs_f64(),
+        stats,
+        wall_time_s,
         method: method.to_string(),
     }
 }

@@ -142,6 +142,14 @@ impl DualOracle for OriginOracle<'_> {
     fn stats(&self) -> &OracleStats {
         &self.stats
     }
+
+    fn simd_dispatch(&self) -> Option<Dispatch> {
+        Some(self.engine.dispatch)
+    }
+
+    fn parallel_ctx(&self) -> Option<&ParallelCtx> {
+        Some(&self.ctx)
+    }
 }
 
 /// The dense-baseline solve every entry point funnels into

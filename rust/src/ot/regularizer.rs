@@ -615,6 +615,10 @@ impl<R: Regularizer> DualOracle for DenseRegOracle<'_, R> {
     fn stats(&self) -> &OracleStats {
         &self.stats
     }
+
+    fn parallel_ctx(&self) -> Option<&ParallelCtx> {
+        Some(&self.ctx)
+    }
 }
 
 /// Recover the transport plan at a full-dual solution `x = [α; β]` for

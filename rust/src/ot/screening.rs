@@ -773,6 +773,18 @@ impl DualOracle for ScreeningOracle<'_> {
     fn stats(&self) -> &OracleStats {
         &self.stats
     }
+
+    fn simd_dispatch(&self) -> Option<Dispatch> {
+        Some(self.engine.dispatch)
+    }
+
+    fn working_set_density(&self) -> Option<f64> {
+        self.use_ws.then(|| ScreeningOracle::working_set_density(self))
+    }
+
+    fn parallel_ctx(&self) -> Option<&ParallelCtx> {
+        Some(&self.ctx)
+    }
 }
 
 #[cfg(test)]

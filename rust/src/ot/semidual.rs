@@ -204,6 +204,14 @@ impl DualOracle for SemiDualOracle<'_> {
     fn stats(&self) -> &OracleStats {
         &self.stats
     }
+
+    fn simd_dispatch(&self) -> Option<Dispatch> {
+        Some(self.dispatch)
+    }
+
+    fn parallel_ctx(&self) -> Option<&ParallelCtx> {
+        Some(&self.ctx)
+    }
 }
 
 /// Per-chunk scratch for the generic semi-dual evaluation.
@@ -308,6 +316,10 @@ impl<R: Regularizer> DualOracle for SemiRegOracle<'_, R> {
     fn stats(&self) -> &OracleStats {
         &self.stats
     }
+
+    fn parallel_ctx(&self) -> Option<&ParallelCtx> {
+        Some(&self.ctx)
+    }
 }
 
 /// Result of the semi-dual solve.
@@ -358,11 +370,44 @@ pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<SemiDualResult> {
         Some(a0) => a0.clone(),
         None => vec![0.0; m],
     };
-    let mut oracle = SemiRegOracle::new(prob, &reg, opts.make_ctx());
+    let start = std::time::Instant::now();
+    let ctx = opts.make_ctx();
+    let pool_at_start =
+        if opts.observer.is_some() { Some(ctx.pool_stats()) } else { None };
+    let _solve_span = crate::obs::Span::start_full(crate::obs::names::SOLVE, opts.trace_id);
+    let mut oracle = SemiRegOracle::new(prob, &reg, ctx.clone());
     let mut solver = Lbfgs::new(x0, opts.lbfgs.clone(), &mut oracle);
     solver.run(&mut oracle);
     let iterations = solver.iterations();
     let (alpha, f) = solver.into_solution();
+    if let Some(hook) = &opts.observer {
+        // The semi-dual has no screening or working set, so the report
+        // carries the eval counters and pool utilization only.
+        let stats = oracle.stats();
+        hook.emit(&crate::obs::SolveReport {
+            method: format!("semidual+{}", reg.name()),
+            trace_id: opts.trace_id,
+            iterations,
+            outer_rounds: 0,
+            evals: stats.evals,
+            line_search_evals: stats.evals.saturating_sub(iterations as u64 + 1),
+            grads_computed: stats.grads_computed,
+            grads_skipped: stats.grads_skipped,
+            ub_checks: stats.ub_checks,
+            ws_hits: stats.ws_hits,
+            skipped_group_fraction: crate::obs::report::skipped_fraction(
+                stats.grads_computed,
+                stats.grads_skipped,
+            ),
+            simd_backend: "scalar",
+            rounds: Vec::new(),
+            pool: match pool_at_start {
+                Some(at_start) => ctx.pool_stats().since(&at_start),
+                None => crate::obs::PoolUtilization::default(),
+            },
+            wall_time_s: start.elapsed().as_secs_f64(),
+        });
+    }
     let mut plan = crate::linalg::Mat::zeros(m, n);
     let mut fcol = vec![0.0; m];
     let mut t = vec![0.0; m];

@@ -66,6 +66,14 @@ pub struct SolveOptions {
     /// respawn threads. When set, `threads` is ignored in favor of
     /// `ctx.threads()`.
     pub ctx: Option<ParallelCtx>,
+    /// Telemetry observer invoked once with the finished
+    /// [`crate::obs::SolveReport`]. Reports are assembled from counters
+    /// the solve maintains anyway, so setting this never changes solver
+    /// output.
+    pub observer: Option<crate::obs::ObserverHook>,
+    /// Request trace ID stamped on spans and the report (0 = not part
+    /// of a traced request).
+    pub trace_id: u64,
 }
 
 impl Default for SolveOptions {
@@ -81,6 +89,8 @@ impl Default for SolveOptions {
             regularizer: None,
             warm_start: None,
             ctx: None,
+            observer: None,
+            trace_id: 0,
         }
     }
 }
@@ -98,6 +108,8 @@ impl std::fmt::Debug for SolveOptions {
             .field("regularizer", &self.regularizer)
             .field("warm_start", &self.warm_start.as_ref().map(Vec::len))
             .field("ctx_threads", &self.ctx.as_ref().map(ParallelCtx::threads))
+            .field("observer", &self.observer.is_some())
+            .field("trace_id", &self.trace_id)
             .finish()
     }
 }
@@ -164,6 +176,19 @@ impl SolveOptions {
         self
     }
 
+    /// Install a telemetry observer (see
+    /// [`crate::obs::ObserverHook::capture`] for the common pattern).
+    pub fn observer(mut self, hook: crate::obs::ObserverHook) -> Self {
+        self.observer = Some(hook);
+        self
+    }
+
+    /// Stamp this solve's spans and report with a request trace ID.
+    pub fn trace_id(mut self, trace_id: u64) -> Self {
+        self.trace_id = trace_id;
+        self
+    }
+
     /// The effective regularizer kind: the explicit selection, else the
     /// `GRPOT_REG`/group-lasso default (a bad env value is an error).
     pub fn resolve_regularizer(&self) -> crate::error::Result<RegKind> {
@@ -193,6 +218,8 @@ impl SolveOptions {
             threads: self.threads,
             simd: self.simd,
             lbfgs: self.lbfgs.clone(),
+            observer: self.observer.clone(),
+            trace_id: self.trace_id,
         }
     }
 }

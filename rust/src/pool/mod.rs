@@ -36,10 +36,11 @@
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
+use std::time::Instant;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -392,12 +393,27 @@ struct PoolState {
     shutdown: bool,
 }
 
+/// Pool utilization counters, read by [`ParallelCtx::pool_stats`] for
+/// solver telemetry. Park/wake transition counts are always on (one
+/// relaxed add per worker per job — off the per-chunk path entirely);
+/// the nanosecond busy/parked clocks only accumulate while tracing is
+/// enabled ([`crate::obs::enabled`]), so `GRPOT_TRACE=off` adds no
+/// `Instant::now` calls to the handoff.
+#[derive(Default)]
+struct PoolCounters {
+    parks: AtomicU64,
+    wakes: AtomicU64,
+    busy_ns: AtomicU64,
+    parked_ns: AtomicU64,
+}
+
 struct PoolShared {
     state: Mutex<PoolState>,
     /// Workers park here between jobs.
     work: Condvar,
     /// The dispatcher parks here until `finished == participants`.
     done: Condvar,
+    stats: PoolCounters,
 }
 
 /// The spawned half of a [`ParallelCtx`]: `threads − 1` parked worker
@@ -425,6 +441,7 @@ impl WorkerSet {
             }),
             work: Condvar::new(),
             done: Condvar::new(),
+            stats: PoolCounters::default(),
         });
         let handles = (0..workers)
             .map(|w| {
@@ -504,24 +521,55 @@ fn worker_loop(shared: &PoolShared, w: usize) {
     loop {
         let job = {
             let mut st = shared.state.lock().unwrap();
-            loop {
+            // `parked_at` is set on the first actual condvar wait of this
+            // park episode; spurious wakeups that fall back to sleep keep
+            // the original timestamp so the episode is counted once.
+            let mut parked_at: Option<Instant> = None;
+            let job = loop {
                 if st.shutdown {
-                    return;
+                    break None;
                 }
                 if st.generation > seen {
                     if let Some(job) = st.job {
                         seen = st.generation;
-                        break job;
+                        break Some(job);
+                    }
+                }
+                if parked_at.is_none() {
+                    shared.stats.parks.fetch_add(1, Ordering::Relaxed);
+                    if crate::obs::enabled() {
+                        parked_at = Some(Instant::now());
                     }
                 }
                 st = shared.work.wait(st).unwrap();
+            };
+            drop(st);
+            if let Some(t) = parked_at {
+                shared
+                    .stats
+                    .parked_ns
+                    .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            match job {
+                Some(job) => {
+                    shared.stats.wakes.fetch_add(1, Ordering::Relaxed);
+                    job
+                }
+                None => return,
             }
         };
         if w >= job.participants {
             // No block for this worker this generation; back to sleep.
             continue;
         }
+        let busy_at = if crate::obs::enabled() { Some(Instant::now()) } else { None };
         let out = catch_unwind(AssertUnwindSafe(|| unsafe { (job.run)(job.env, w + 1) }));
+        if let Some(t) = busy_at {
+            shared
+                .stats
+                .busy_ns
+                .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
         let mut st = shared.state.lock().unwrap();
         if let Err(p) = out {
             // Keep the first payload; the job still counts as finished
@@ -661,6 +709,27 @@ impl ParallelCtx {
     /// pool-lifecycle tests assert it returns to 0 after `Drop`.
     pub fn live_worker_counter(&self) -> Arc<AtomicUsize> {
         Arc::clone(&self.pool.live)
+    }
+
+    /// Cumulative utilization counters of this ctx's parked worker set
+    /// (all zeros before the lazy spawn and for serial contexts). The
+    /// counters are pool-lifetime totals; per-solve numbers are deltas
+    /// via [`crate::obs::PoolUtilization::since`]. Park/wake counts are
+    /// always on; the nanosecond clocks accumulate only while tracing
+    /// is enabled.
+    pub fn pool_stats(&self) -> crate::obs::PoolUtilization {
+        match self.pool.set.get() {
+            Some(set) => {
+                let s = &set.shared.stats;
+                crate::obs::PoolUtilization {
+                    busy_ns: s.busy_ns.load(Ordering::Relaxed),
+                    parked_ns: s.parked_ns.load(Ordering::Relaxed),
+                    parks: s.parks.load(Ordering::Relaxed),
+                    wakes: s.wakes.load(Ordering::Relaxed),
+                }
+            }
+            None => crate::obs::PoolUtilization::default(),
+        }
     }
 
     /// Map over pre-chunked work: `map(chunk_idx, range, slot)` runs

@@ -12,6 +12,7 @@
 //! (the paper's grid spans 1e-3…1e3) while ρ lives on [0, 1), so
 //! `√((Δln γ)² + (Δρ)²)` weighs both axes comparably.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// A cache hit: the seed vector plus how it matched.
@@ -48,6 +49,9 @@ pub struct DualCache {
     state: Mutex<CacheState>,
     budget: usize,
     radius: f64,
+    /// Entries evicted by the LRU budget loop since construction
+    /// (telemetry; the engine publishes it as a gauge).
+    evictions: AtomicU64,
 }
 
 /// Distance in `(ln γ, ρ)` space over *pre-computed* logs (see
@@ -70,7 +74,13 @@ impl DualCache {
             state: Mutex::new(CacheState { entries: Vec::new(), clock: 0, bytes: 0 }),
             budget,
             radius,
+            evictions: AtomicU64::new(0),
         }
+    }
+
+    /// Entries evicted by the byte-budget LRU loop so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Current entry count.
@@ -131,6 +141,7 @@ impl DualCache {
                 .expect("bytes > 0 implies entries");
             let gone = st.entries.swap_remove(lru);
             st.bytes -= gone.bytes;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -214,6 +225,7 @@ mod tests {
         // Inserting a fourth evicts the LRU — now (1.0, 0.4).
         c.insert("ds", 1.0, 0.8, dual(4.0, len));
         assert_eq!(c.len(), 3);
+        assert_eq!(c.evictions(), 1);
         assert!(c.bytes() <= 3 * 128);
         assert!(c.lookup("ds", 1.0, 0.2).is_some_and(|s| s.exact));
         assert!(c.lookup("ds", 1.0, 0.8).is_some_and(|s| s.exact));

@@ -23,10 +23,19 @@
 //! | `serve.warm_hits` / `serve.warm_misses` | counter | dual-cache outcome per solve |
 //! | `serve.queue_depth` | gauge | queue depth after the last submit/batch |
 //! | `serve.warm_cache_bytes` | gauge | resident warm-cache bytes |
-//! | `serve.latency_seconds` | hist | end-to-end submit→response |
-//! | `serve.solve_seconds` | hist | solver wall time per job |
+//! | `serve.warm_cache_evictions` | gauge | cumulative warm-cache LRU evictions |
+//! | `serve.latency_seconds` | hist | end-to-end submit→response (+ fixed buckets) |
+//! | `serve.solve_seconds` | hist | solver wall time per job (+ fixed buckets) |
 //! | `serve.batch_size` | hist | tickets per batch |
 //! | `service.cache_hits` / `service.cache_misses` | counter | problem-cache outcome |
+//!
+//! Observability: every ticket gets a trace ID at admission
+//! ([`super::queue::Ticket::new`]), echoed in [`EngineReply::trace_id`].
+//! With `GRPOT_TRACE` on, the engine records `queue.wait` (retroactive,
+//! from the ticket's existing timestamps), `engine.batch`,
+//! `engine.dataset_build` and `engine.solve` spans; each solve's
+//! [`crate::obs::SolveReport`] is captured via the `SolveOptions`
+//! observer hook and shared by every reply in the batch.
 
 use super::batcher::{next_batch, unique_jobs, Batch, JobKey};
 use super::cache::DualCache;
@@ -82,6 +91,13 @@ pub struct EngineReply {
     pub batch_size: usize,
     /// Seconds between submit and solve start.
     pub queue_wait_s: f64,
+    /// This request's trace ID (minted at admission, always nonzero).
+    pub trace_id: u64,
+    /// Telemetry for the solve that answered this request, shared by
+    /// every ticket the batch deduplicated onto it. The report's
+    /// `trace_id` is the first target's — other tickets keep their own
+    /// in [`EngineReply::trace_id`].
+    pub telemetry: Option<Arc<crate::obs::SolveReport>>,
 }
 
 /// Structured rejection — every way a request can fail without (or
@@ -210,6 +226,9 @@ impl Engine {
     /// population is `workers` plus at most
     /// `workers × (threads_per_solve − 1)` parked oracle workers.
     pub fn start(cfg: ServeConfig, metrics: Arc<Metrics>) -> Engine {
+        // Once-only: embedders and test binaries get `GRPOT_TRACE`
+        // honored without the CLI launch hook.
+        crate::obs::latch_env_once();
         let workers = cfg.workers.max(1);
         let budget = if cfg.core_budget > 0 {
             cfg.core_budget
@@ -227,8 +246,10 @@ impl Engine {
             cfg,
         });
         // Pre-register the full metric surface so the service's
-        // `metrics` op reports every serving counter from request one.
-        for name in [
+        // `metrics` op reports every serving counter from request one —
+        // and so steady-state `incr` calls never take the counter map's
+        // write lock.
+        state.metrics.register_counters(&[
             "serve.requests",
             "serve.rejected_queue_full",
             "serve.rejected_deadline",
@@ -239,11 +260,15 @@ impl Engine {
             "serve.warm_misses",
             "service.cache_hits",
             "service.cache_misses",
-        ] {
-            state.metrics.incr(name, 0);
-        }
+        ]);
         state.metrics.set_gauge("serve.queue_depth", 0.0);
         state.metrics.set_gauge("serve.warm_cache_bytes", 0.0);
+        state.metrics.set_gauge("serve.warm_cache_evictions", 0.0);
+        // Fixed Prometheus-style buckets alongside the percentile
+        // windows: ~100 µs … 3.3 s, doubling.
+        let bounds = crate::coordinator::metrics::exp_buckets(1e-4, 2.0, 16);
+        state.metrics.register_hist_buckets("serve.latency_seconds", &bounds);
+        state.metrics.register_hist_buckets("serve.solve_seconds", &bounds);
         let workers = (0..workers)
             .map(|i| {
                 let st = Arc::clone(&state);
@@ -393,11 +418,15 @@ fn handle_batch(state: &EngineState, batch: &Batch, ctx: &ParallelCtx) {
     let m = &state.metrics;
     m.incr("serve.batches", 1);
     m.observe_hist("serve.batch_size", batch.len() as f64);
+    let _batch_span = crate::obs::Span::start(crate::obs::names::ENGINE_BATCH, 0);
 
     // Deadline triage on dequeue: expired tickets never touch a solver.
     let now = Instant::now();
     let mut live: Vec<&Ticket> = Vec::with_capacity(batch.len());
     for t in &batch.tickets {
+        // Queue wait is recorded retroactively from instants the ticket
+        // already carries — the admission hot path reads no extra clock.
+        crate::obs::record_span_at(crate::obs::names::QUEUE_WAIT, t.trace_id, t.submitted, now);
         if t.expired(now) {
             m.incr("serve.rejected_deadline", 1);
             t.respond(Err(RejectReason::DeadlineExceeded { waited_s: t.waited_s(now) }));
@@ -415,6 +444,8 @@ fn handle_batch(state: &EngineState, batch: &Batch, ctx: &ParallelCtx) {
     // unwind-guarded: a panicking build must answer its tickets instead
     // of killing the worker.
     let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _build_span =
+            crate::obs::Span::start(crate::obs::names::DATASET_BUILD, live[0].trace_id);
         cached_problem(state, &batch.dataset_key, &live[0].request.spec)
     }));
     let problem = match built {
@@ -505,8 +536,15 @@ fn solve_job(
     // submitter waits forever) or kill the worker: catch the unwind and
     // answer with a structured failure instead. Reachable e.g. via
     // `xla-origin` in a `--features xla` build against the stub.
+    // Telemetry: the solver fills one SolveReport per solve through the
+    // observer hook; every ticket coalesced into this job shares it. The
+    // first target's trace ID stamps the solve/outer-round spans.
+    let (hook, report_cell) = crate::obs::ObserverHook::capture();
+    let solve_trace_id = targets[0].trace_id;
     let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         m.time_hist("serve.solve_seconds", || {
+            let _solve_span =
+                crate::obs::Span::start(crate::obs::names::ENGINE_SOLVE, solve_trace_id);
             let mut opts = state
                 .cfg
                 .solve
@@ -514,7 +552,9 @@ fn solve_job(
                 .gamma(job.gamma)
                 .rho(job.rho)
                 .regularizer(job.regularizer)
-                .ctx(ctx.clone());
+                .ctx(ctx.clone())
+                .observer(hook.clone())
+                .trace_id(solve_trace_id);
             if let Some(x0) = x0 {
                 opts = opts.warm_start(x0.to_vec());
             }
@@ -549,8 +589,11 @@ fn solve_job(
             .duals
             .insert(&warm_key, job.gamma, job.rho, result.x.clone());
         m.set_gauge("serve.warm_cache_bytes", state.duals.bytes() as f64);
+        m.set_gauge("serve.warm_cache_evictions", state.duals.evictions() as f64);
     }
 
+    let telemetry: Option<Arc<crate::obs::SolveReport>> =
+        report_cell.lock().unwrap().take().map(Arc::new);
     let result = Arc::new(result);
     for t in targets {
         t.respond(Ok(EngineReply {
@@ -559,6 +602,8 @@ fn solve_job(
             warm_started,
             batch_size,
             queue_wait_s: t.waited_s(now),
+            trace_id: t.trace_id,
+            telemetry: telemetry.clone(),
         }));
     }
 }

@@ -86,6 +86,10 @@ pub struct LoadReport {
     pub warm_misses: u64,
     /// `warm_hits / (warm_hits + warm_misses)`, 0 when no solves ran.
     pub warm_hit_rate: f64,
+    /// Mean seconds a served request spent queued before its batch ran.
+    pub mean_queue_wait_ms: f64,
+    /// Mean seconds per engine solve (`serve.solve_seconds` histogram).
+    pub mean_solve_ms: f64,
 }
 
 impl LoadReport {
@@ -107,6 +111,8 @@ impl LoadReport {
             .set("warm_hits", self.warm_hits)
             .set("warm_misses", self.warm_misses)
             .set("warm_hit_rate", self.warm_hit_rate)
+            .set("mean_queue_wait_ms", self.mean_queue_wait_ms)
+            .set("mean_solve_ms", self.mean_solve_ms)
     }
 
     /// Human-readable multi-line summary.
@@ -128,6 +134,10 @@ impl LoadReport {
             self.warm_hits,
             self.warm_misses
         );
+        println!(
+            "spans      : mean time-in-queue {:.2} ms | mean time-in-solve {:.2} ms per request",
+            self.mean_queue_wait_ms, self.mean_solve_ms
+        );
     }
 }
 
@@ -138,15 +148,18 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
     let engine = Engine::start(cfg, Arc::clone(&metrics));
 
     let latencies = Mutex::new(Vec::with_capacity(scenario.total_requests()));
+    let queue_waits = Mutex::new(Vec::with_capacity(scenario.total_requests()));
     let counts = Mutex::new([0usize; 4]); // ok, queue_full, deadline, failed
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for c in 0..scenario.clients {
             let engine = &engine;
             let latencies = &latencies;
+            let queue_waits = &queue_waits;
             let counts = &counts;
             s.spawn(move || {
                 let mut local_lat = Vec::with_capacity(scenario.requests_per_client());
+                let mut local_wait = Vec::with_capacity(scenario.requests_per_client());
                 let mut local = [0usize; 4];
                 // Offset each client's walk so concurrent clients mix
                 // distinct and identical keys deterministically.
@@ -172,8 +185,9 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
                         // requests count toward latency and throughput,
                         // otherwise shed load would flatter the numbers.
                         let slot = match out {
-                            Ok(_) => {
+                            Ok(reply) => {
                                 local_lat.push(t.elapsed().as_secs_f64());
+                                local_wait.push(reply.queue_wait_s);
                                 0
                             }
                             Err(RejectReason::QueueFull { .. }) => 1,
@@ -184,6 +198,7 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
                     }
                 }
                 latencies.lock().unwrap().extend(local_lat);
+                queue_waits.lock().unwrap().extend(local_wait);
                 let mut shared = counts.lock().unwrap();
                 for (acc, v) in shared.iter_mut().zip(local) {
                     *acc += v;
@@ -195,7 +210,16 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
     engine.shutdown();
 
     let mut lats = latencies.into_inner().unwrap();
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN latency (it
+    // cannot happen today, but Instant math is not worth betting on)
+    // must not kill the report thread.
+    lats.sort_by(f64::total_cmp);
+    let waits = queue_waits.into_inner().unwrap();
+    let mean_queue_wait_ms = if waits.is_empty() {
+        0.0
+    } else {
+        waits.iter().sum::<f64>() / waits.len() as f64 * 1e3
+    };
     let pct = |p: f64| -> f64 {
         if lats.is_empty() {
             0.0
@@ -225,6 +249,8 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
         warm_hits,
         warm_misses,
         warm_hit_rate: if warm_total > 0 { warm_hits as f64 / warm_total as f64 } else { 0.0 },
+        mean_queue_wait_ms,
+        mean_solve_ms: metrics.hist_mean("serve.solve_seconds").unwrap_or(0.0) * 1e3,
     }
 }
 
@@ -271,5 +297,10 @@ mod tests {
         assert!(report.throughput_rps > 0.0);
         let v = report.to_json();
         assert_eq!(v.get("ok").and_then(Value::as_usize), Some(report.ok));
+        // Span summary fields: queue waits are recorded per served
+        // request, solve time comes from the engine histogram.
+        assert!(report.mean_queue_wait_ms >= 0.0);
+        assert!(report.mean_solve_ms > 0.0, "no solve time: {report:?}");
+        assert!(v.get("mean_solve_ms").is_some());
     }
 }

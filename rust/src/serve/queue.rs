@@ -71,6 +71,10 @@ pub struct Ticket {
     /// Precomputed [`crate::coordinator::config::DatasetSpec::cache_key`]
     /// — the batcher's coalescing key.
     pub dataset_key: String,
+    /// Request trace ID, minted at admission and threaded through the
+    /// batch → worker → solve chain into the reply (and, when tracing
+    /// is on, stamped on every span this request produces).
+    pub trace_id: u64,
     pub submitted: Instant,
     /// Absolute deadline (request-level, falling back to the engine
     /// default). `None` = may wait indefinitely.
@@ -92,6 +96,7 @@ impl Ticket {
             .map(|d| submitted + d);
         let ticket = Ticket {
             dataset_key: request.spec.cache_key(),
+            trace_id: crate::obs::next_trace_id(),
             request,
             submitted,
             deadline,
@@ -166,5 +171,13 @@ mod tests {
     fn ticket_precomputes_dataset_key() {
         let (t, _slot) = Ticket::new(request(None), None);
         assert_eq!(t.dataset_key, DatasetSpec::default().cache_key());
+    }
+
+    #[test]
+    fn tickets_get_unique_trace_ids() {
+        let (a, _s1) = Ticket::new(request(None), None);
+        let (b, _s2) = Ticket::new(request(None), None);
+        assert_ne!(a.trace_id, 0);
+        assert_ne!(a.trace_id, b.trace_id);
     }
 }

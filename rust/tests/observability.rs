@@ -1,0 +1,304 @@
+//! Observability integration: trace-ID propagation through the serving
+//! engine under concurrency, span-ring overflow semantics, the
+//! SolveReport ↔ OracleStats byte-match contract, a Prometheus
+//! round-trip through an in-test parser, and the zero-perturbation
+//! guarantee (tracing off or on, solver outputs are byte-identical).
+//!
+//! Trace mode and the span rings are process-global and `cargo test`
+//! runs tests concurrently, so every assertion here tolerates *foreign*
+//! spans (from sibling tests) and only ever asserts the **presence** of
+//! its own trace IDs, never the absence of others.
+
+use grpot::coordinator::config::{DatasetSpec, Method};
+use grpot::coordinator::metrics::{exp_buckets, Metrics};
+use grpot::coordinator::sweep;
+use grpot::obs::ring::Ring;
+use grpot::obs::{self, ObserverHook, TraceMode};
+use grpot::ot::dual::OtProblem;
+use grpot::ot::regularizer::RegKind;
+use grpot::ot::solve::SolveOptions;
+use grpot::serve::{Engine, ServeConfig, SolveRequest};
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Trace mode is process-global and tests in this binary run on
+/// concurrent threads: every test that *sets* the mode holds this lock
+/// for its whole body so they serialize against each other. (Other
+/// test binaries are separate processes and unaffected.)
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn mode_guard() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn tiny_spec(seed: u64) -> DatasetSpec {
+    DatasetSpec {
+        family: "synthetic".into(),
+        param1: 4,
+        param2: 5,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn request(seed: u64, gamma: f64, rho: f64) -> SolveRequest {
+    SolveRequest {
+        spec: tiny_spec(seed),
+        gamma,
+        rho,
+        method: Method::Fast,
+        regularizer: RegKind::GroupLasso,
+        deadline: None,
+        warm_start: true,
+    }
+}
+
+fn tiny_problem(seed: u64) -> OtProblem {
+    let pair = grpot::coordinator::registry::build_pair(&tiny_spec(seed)).expect("dataset");
+    OtProblem::from_dataset(&pair)
+}
+
+/// Trace-ID propagation: every reply carries the unique nonzero ID
+/// minted at admission, and with tracing on the queue-wait spans those
+/// requests produced are drained with the same IDs stamped on them.
+#[test]
+fn trace_ids_propagate_through_engine_under_concurrency() {
+    let _serial = mode_guard();
+    obs::set_trace_mode(TraceMode::Full);
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::start(
+        ServeConfig { workers: 3, queue_capacity: 256, ..Default::default() },
+        Arc::clone(&metrics),
+    );
+    let ids = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for c in 0..6usize {
+            let engine = &engine;
+            let ids = &ids;
+            s.spawn(move || {
+                let gammas = [0.2, 1.0, 5.0];
+                for k in 0..4usize {
+                    let reply = engine
+                        .submit(request(3, gammas[(c + k) % gammas.len()], 0.5))
+                        .expect("request served");
+                    assert_ne!(reply.trace_id, 0, "reply must carry the admission trace ID");
+                    ids.lock().unwrap().push(reply.trace_id);
+                }
+            });
+        }
+    });
+    engine.shutdown();
+    let ids = ids.into_inner().unwrap();
+    let unique: HashSet<u64> = ids.iter().copied().collect();
+    assert_eq!(unique.len(), ids.len(), "trace IDs must be unique per request");
+
+    // Every request waited in the queue, so every trace ID must appear
+    // on at least one drained queue-wait span. Foreign spans from
+    // concurrently running tests are fine; missing *ours* is not.
+    let spans = grpot::obs::ring::snapshot_all();
+    let queue_ids: HashSet<u64> = spans
+        .iter()
+        .filter(|e| e.name_id == grpot::obs::names::QUEUE_WAIT)
+        .map(|e| e.trace_id)
+        .collect();
+    for id in &unique {
+        assert!(queue_ids.contains(id), "no queue.wait span drained for trace ID {id}");
+    }
+    // Solve + batch spans exist too (trace IDs of batch spans are 0;
+    // just check the engine recorded some work under Full).
+    assert!(
+        spans.iter().any(|e| e.name_id == grpot::obs::names::ENGINE_SOLVE),
+        "no engine.solve span drained"
+    );
+    obs::set_trace_mode(TraceMode::Off);
+}
+
+/// Ring overflow drops the oldest spans and never yields a torn event,
+/// even with a concurrent reader hammering snapshots mid-write.
+#[test]
+fn ring_overflow_drops_oldest_without_tearing() {
+    let ring = Arc::new(Ring::with_capacity(64));
+    let writes: u64 = 20_000;
+    let done = Arc::new(AtomicU64::new(0));
+    let reader = {
+        let ring = Arc::clone(&ring);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let mut drains = 0u64;
+            while done.load(Ordering::Acquire) == 0 {
+                for e in ring.snapshot() {
+                    // Writer encodes trace_id == start_ns == i and
+                    // dur_ns == i + 1; a torn read breaks the relation.
+                    assert_eq!(e.trace_id, e.start_ns, "torn span: {e:?}");
+                    assert_eq!(e.dur_ns, e.start_ns + 1, "torn span: {e:?}");
+                }
+                drains += 1;
+            }
+            drains
+        })
+    };
+    for i in 0..writes {
+        ring.record(0, 1, i, i, i + 1);
+    }
+    done.store(1, Ordering::Release);
+    assert!(reader.join().unwrap() > 0);
+
+    assert_eq!(ring.recorded(), writes);
+    let survivors: Vec<u64> = ring.snapshot().iter().map(|e| e.trace_id).collect();
+    assert_eq!(survivors.len(), 64);
+    // Drop-oldest: everything still resident is from the newest window.
+    for id in &survivors {
+        assert!(*id >= writes - 64, "stale span {id} survived past capacity");
+    }
+}
+
+/// The observer's SolveReport is built from the *same* OracleStats the
+/// solver returns — counters byte-match, and the headline
+/// skipped-group fraction is exactly skipped / (computed + skipped).
+#[test]
+fn solve_report_counters_match_oracle_stats() {
+    let prob = tiny_problem(7);
+    let (hook, cell) = ObserverHook::capture();
+    let opts = SolveOptions::new()
+        .gamma(1.0)
+        .rho(0.5)
+        .observer(hook)
+        .trace_id(424242);
+    let res = sweep::solve(&prob, Method::Fast, &opts).expect("solve");
+    let report = cell.lock().unwrap().take().expect("observer must fire once");
+
+    assert_eq!(report.trace_id, 424242);
+    assert_eq!(report.method, "fast");
+    assert_eq!(report.iterations, res.iterations);
+    assert_eq!(report.outer_rounds, res.outer_rounds);
+    assert_eq!(report.evals, res.stats.evals);
+    assert_eq!(report.grads_computed, res.stats.grads_computed);
+    assert_eq!(report.grads_skipped, res.stats.grads_skipped);
+    assert_eq!(report.ub_checks, res.stats.ub_checks);
+    assert_eq!(report.ws_hits, res.stats.ws_hits);
+    let total = res.stats.grads_computed + res.stats.grads_skipped;
+    assert!(total > 0);
+    let expect = res.stats.grads_skipped as f64 / total as f64;
+    assert_eq!(report.skipped_group_fraction.to_bits(), expect.to_bits());
+
+    // Per-round telemetry sums back to the totals (the rounds partition
+    // the counter deltas).
+    let sum_computed: u64 = report.rounds.iter().map(|r| r.grads_computed).sum();
+    let sum_skipped: u64 = report.rounds.iter().map(|r| r.grads_skipped).sum();
+    assert_eq!(sum_computed, report.grads_computed);
+    assert_eq!(sum_skipped, report.grads_skipped);
+    assert!(report.wall_time_s >= 0.0);
+    assert!(!report.simd_backend.is_empty());
+}
+
+/// Minimal Prometheus text-exposition parser: `name{labels} value`
+/// lines plus `# TYPE` headers. Enough to round-trip our renderer.
+fn parse_prom(text: &str) -> (Vec<(String, String)>, Vec<(String, f64)>) {
+    let mut types = Vec::new();
+    let mut samples = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("type name").to_string();
+            let kind = it.next().expect("type kind").to_string();
+            assert!(it.next().is_none(), "trailing junk in TYPE line: {line}");
+            types.push((name, kind));
+        } else if line.starts_with('#') {
+            continue; // HELP or comment
+        } else {
+            let (key, value) = line.rsplit_once(' ').expect("sample line: {line}");
+            let v = if value == "+Inf" { f64::INFINITY } else { value.parse().unwrap() };
+            samples.push((key.to_string(), v));
+        }
+    }
+    (types, samples)
+}
+
+#[test]
+fn prometheus_round_trip() {
+    let m = Metrics::new();
+    m.register_counters(&["serve.requests"]);
+    m.incr("serve.requests", 7);
+    m.set_gauge("queue.depth", 3.0);
+    m.register_hist_buckets("lat", &exp_buckets(0.001, 10.0, 3)); // 1ms, 10ms, 100ms
+    m.observe_hist("lat", 0.0005);
+    m.observe_hist("lat", 0.05);
+    m.observe_hist("lat", 2.0);
+    let text = grpot::obs::prom::render(&m.snapshot());
+
+    let (types, samples) = parse_prom(&text);
+    let kind = |n: &str| types.iter().find(|(t, _)| t == n).map(|(_, k)| k.as_str());
+    assert_eq!(kind("grpot_serve_requests"), Some("counter"));
+    assert_eq!(kind("grpot_queue_depth"), Some("gauge"));
+    assert_eq!(kind("grpot_lat"), Some("histogram"));
+
+    let val = |k: &str| {
+        samples
+            .iter()
+            .find(|(s, _)| s == k)
+            .unwrap_or_else(|| panic!("missing sample {k} in:\n{text}"))
+            .1
+    };
+    assert_eq!(val("grpot_serve_requests"), 7.0);
+    assert_eq!(val("grpot_queue_depth"), 3.0);
+    // Cumulative buckets: 0.0005 ≤ 0.001; 0.05 ≤ 0.1; 2.0 only in +Inf.
+    assert_eq!(val("grpot_lat_bucket{le=\"0.001\"}"), 1.0);
+    assert_eq!(val("grpot_lat_bucket{le=\"0.01\"}"), 1.0);
+    assert_eq!(val("grpot_lat_bucket{le=\"0.1\"}"), 2.0);
+    assert_eq!(val("grpot_lat_bucket{le=\"+Inf\"}"), 3.0);
+    assert_eq!(val("grpot_lat_count"), 3.0);
+    assert!((val("grpot_lat_sum") - 2.0505).abs() < 1e-12);
+}
+
+/// The zero-perturbation guarantee: the same solve with tracing Off and
+/// Full produces byte-identical dual variables, objective and counters.
+/// Tracing reads counters the solver already maintains; it must never
+/// change what the solver computes.
+#[test]
+fn tracing_mode_never_perturbs_solver_results() {
+    let _serial = mode_guard();
+    let prob = tiny_problem(13);
+    let opts = SolveOptions::new().gamma(0.8).rho(0.6).trace_id(7);
+    let run = || sweep::solve(&prob, Method::Fast, &opts).expect("solve");
+
+    obs::set_trace_mode(TraceMode::Off);
+    let off = run();
+    obs::set_trace_mode(TraceMode::Full);
+    let full = run();
+    obs::set_trace_mode(TraceMode::Off);
+    let off2 = run();
+
+    for (a, b) in [(&off, &full), (&off, &off2)] {
+        assert_eq!(a.x.len(), b.x.len());
+        for (xa, xb) in a.x.iter().zip(&b.x) {
+            assert_eq!(xa.to_bits(), xb.to_bits(), "dual variables diverged");
+        }
+        assert_eq!(a.dual_objective.to_bits(), b.dual_objective.to_bits());
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.outer_rounds, b.outer_rounds);
+        assert_eq!(a.stats, b.stats, "oracle counters diverged");
+    }
+}
+
+/// An observer on SolveOptions also never perturbs the solve: with and
+/// without the hook, outputs are byte-identical (the report is built
+/// *from* the result, not folded into it).
+#[test]
+fn observer_hook_never_perturbs_solver_results() {
+    let prob = tiny_problem(29);
+    let base = SolveOptions::new().gamma(1.5).rho(0.4);
+    let plain = sweep::solve(&prob, Method::Fast, &base).expect("solve");
+    let (hook, cell) = ObserverHook::capture();
+    let observed =
+        sweep::solve(&prob, Method::Fast, &base.clone().observer(hook)).expect("solve");
+    assert!(cell.lock().unwrap().is_some());
+    for (xa, xb) in plain.x.iter().zip(&observed.x) {
+        assert_eq!(xa.to_bits(), xb.to_bits());
+    }
+    assert_eq!(plain.dual_objective.to_bits(), observed.dual_objective.to_bits());
+    assert_eq!(plain.stats, observed.stats);
+}

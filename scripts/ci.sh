@@ -21,13 +21,17 @@
 #      default is pushed through the trait-dispatched solver path while
 #      theorem2_equivalence re-runs alongside to prove the pinned
 #      group-lasso entry points never re-route under the env var
-#   8. cargo build --release --features xla   (in-tree stub must keep compiling)
-#   9. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
+#   8. GRPOT_TRACE=full shard: the bit-exactness suites plus the
+#      observability suite re-run with tracing fully on, gating the
+#      zero-perturbation contract (spans and telemetry never change
+#      solver output) under the most intrusive trace mode
+#   9. cargo build --release --features xla   (in-tree stub must keep compiling)
+#  10. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
 #      (includes bench_parallel, which asserts thread-count determinism,
 #      the fork-join-vs-persistent dispatch equivalence and the
 #      scalar-vs-SIMD kernel equivalence, and hotpath_microbench, which
 #      now reports per-regularizer trait-oracle rows)
-#  10. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf trio again
+#  11. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf benches again
 #      through the bench.sh wrapper, checking the machine-readable
 #      bench JSON emission end to end (written to a temp file so a
 #      smoke run never clobbers real recorded numbers)
@@ -82,6 +86,13 @@ for reg in squared_l2 negentropy; do
         --test regularizer_equivalence \
         --test theorem2_equivalence
 done
+
+step "cargo test -q (GRPOT_TRACE=full observability shard)"
+GRPOT_TRACE=full cargo test -q \
+    --test theorem2_equivalence \
+    --test parallel_determinism \
+    --test simd_equivalence \
+    --test observability
 
 step "cargo build --release --features xla (offline stub)"
 cargo build --release --features xla
