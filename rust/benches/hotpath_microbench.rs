@@ -181,6 +181,40 @@ fn main() {
         obs::set_trace_mode(TraceMode::Off);
     }
 
+    // Cancellation-checkpoint overhead on the full fast solve: no token
+    // (a plain Option test per iteration) vs an armed far-future
+    // deadline token (one relaxed atomic load + a clock read per
+    // iteration). Uncancelled tokens must never perturb the math —
+    // byte-equality is asserted before timing.
+    {
+        use grpot::coordinator::sweep;
+        use grpot::fault::CancelToken;
+        let far = std::time::Instant::now() + std::time::Duration::from_secs(3600);
+        let base_opts = SolveOptions::new().gamma(1.0).rho(0.5).max_iters(common::max_iters());
+        let armed_opts = base_opts.clone().cancel(CancelToken::with_deadline(far));
+        let plain_res = sweep::solve(&prob, grpot::coordinator::config::Method::Fast, &base_opts)
+            .expect("solve");
+        let armed_res = sweep::solve(&prob, grpot::coordinator::config::Method::Fast, &armed_opts)
+            .expect("solve");
+        assert_eq!(
+            plain_res.dual_objective.to_bits(),
+            armed_res.dual_objective.to_bits(),
+            "an uncancelled token perturbed the objective"
+        );
+        for (a, b) in plain_res.x.iter().zip(&armed_res.x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "an uncancelled token perturbed the duals");
+        }
+        assert_eq!(plain_res.iterations, armed_res.iterations);
+        let t = bench_fn("solve-no-token", &opts, || {
+            let _ = sweep::solve(&prob, grpot::coordinator::config::Method::Fast, &base_opts);
+        });
+        record("fast solve (no cancel token)", t.seconds() * 1e3);
+        let t = bench_fn("solve-armed-token", &opts, || {
+            let _ = sweep::solve(&prob, grpot::coordinator::config::Method::Fast, &armed_opts);
+        });
+        record("fast solve (armed deadline token)", t.seconds() * 1e3);
+    }
+
     // Bare dispatch latency on a near-empty job — the per-eval floor the
     // screened sparse regime pays: persistent parked handoff vs the
     // PR-3 scoped fork-join over the same 32-chunk grid.

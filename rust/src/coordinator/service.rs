@@ -22,8 +22,9 @@
 //!
 //! Responses: `{"ok": true, …}` or `{"ok": false, "error": "…"}`; engine
 //! rejections additionally carry a machine-readable `"error_kind"`
-//! (`queue_full` | `deadline_exceeded` | `shutdown` | `failed`) so
-//! clients can distinguish backpressure from bad requests. Successful
+//! (`queue_full` | `deadline_exceeded` | `shutdown` | `quarantined` |
+//! `overloaded` | `failed`) so clients can distinguish backpressure,
+//! circuit-broken datasets and overload from bad requests. Successful
 //! solves report `warm_started`, `batch_size`, `queue_wait_s` and the
 //! request's `trace_id` next to the solver fields, echo the
 //! `regularizer` they solved with, and — when the request set
@@ -189,6 +190,12 @@ fn handle_conn(stream: TcpStream, state: &Arc<ServerState>) {
     let _ = peer;
 }
 
+/// Hard caps on client-controlled dataset sizes: a single line of JSON
+/// must not be able to commission an `m × n` cost matrix that exhausts
+/// memory. Generous for the in-repo generators, tiny next to what an
+/// `O(mn)` build could otherwise be asked for.
+const MAX_DATASET_SAMPLES: usize = 100_000;
+
 fn parse_dataset(v: &Value) -> Result<DatasetSpec> {
     let d = v.get("dataset").ok_or_else(|| err!("missing 'dataset'"))?;
     let mut spec = DatasetSpec::default();
@@ -201,10 +208,25 @@ fn parse_dataset(v: &Value) -> Result<DatasetSpec> {
     if let Some(x) = d.get("param2").and_then(Value::as_usize) {
         spec.param2 = x;
     }
+    if spec.param1 > MAX_DATASET_SAMPLES || spec.param2 > MAX_DATASET_SAMPLES {
+        return Err(err!(
+            "dataset params too large ({} × {}; cap {MAX_DATASET_SAMPLES} per side)",
+            spec.param1,
+            spec.param2
+        ));
+    }
     if let Some(x) = d.get("scale").and_then(Value::as_f64) {
+        // Non-finite or non-positive scales would propagate NaN/degenerate
+        // costs into the shared problem cache; reject at the wire.
+        if !x.is_finite() || x <= 0.0 || x > 1e12 {
+            return Err(err!("dataset scale must be finite, positive and ≤ 1e12 (got {x})"));
+        }
         spec.scale = x;
     }
     if let Some(x) = d.get("seed").and_then(Value::as_f64) {
+        if !x.is_finite() || x < 0.0 {
+            return Err(err!("dataset seed must be a finite nonnegative number (got {x})"));
+        }
         spec.seed = x as u64;
     }
     Ok(spec)

@@ -1,0 +1,571 @@
+//! Fault-tolerance substrate: cooperative cancellation and deterministic
+//! fault injection.
+//!
+//! Two pieces, both zero-dependency and compile-out-cheap:
+//!
+//! * **[`CancelToken`]** — a shared `AtomicU64` carrying an absolute
+//!   deadline plus a manual-cancel bit. Solvers poll it between L-BFGS
+//!   iterations / outer rounds (one relaxed load per check when armed,
+//!   a plain `Option` test when not), so an expired deadline terminates
+//!   a solve at the next checkpoint with a structured error instead of
+//!   burning a worker to completion. Cancellation never changes the
+//!   math: an uncancelled solve is byte-identical to one run without a
+//!   token (Theorem 2 guarantees correctness from any iterate, so
+//!   stopping early is always *safe*, merely unconverged).
+//! * **The failpoint registry** — named injection sites
+//!   ([`sites`]) armed via `GRPOT_FAULTS="site:action:every-N"` with
+//!   actions `panic` | `delay(ms)` | `err`. When no faults are
+//!   installed, [`check`] is a single relaxed load ([`obs::trace_mode`]
+//!   discipline — the registry cannot perturb bit-exactness or
+//!   wall-time within noise). Deterministic by construction: the N-th
+//!   hit of a site fires, independent of timing.
+//!
+//! The knob mirrors `GRPOT_TRACE`: the CLI validates `GRPOT_FAULTS` at
+//! launch and exits 2 on a malformed value ([`init_from_env`]); test
+//! binaries and benches latch the env once, best-effort
+//! ([`latch_env_once`]); tests install programmatically
+//! ([`set_faults`] / [`clear`]).
+
+use crate::err;
+use crate::error::GrpotError;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Cancellation tokens
+// ---------------------------------------------------------------------------
+
+/// Process-wide epoch for deadline encoding. `Instant` has no absolute
+/// representation, so deadlines are stored as nanoseconds since the
+/// first token ever created — monotone, cheap to compare, and immune to
+/// wall-clock adjustments.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds from the epoch to `t`, saturating at zero for instants
+/// before the epoch (an already-past deadline must read as expired, not
+/// unarmed).
+fn nanos_since_epoch(t: Instant) -> u64 {
+    t.checked_duration_since(epoch())
+        .map(|d| d.as_nanos().min((u64::MAX >> 1) as u128) as u64)
+        .unwrap_or(0)
+}
+
+/// Shared token state. Bit layout of `bits`:
+/// * bit 0 — manual-cancel flag (set by [`CancelToken::cancel`]);
+/// * bits 1..=63 — absolute deadline in nanoseconds since [`EPOCH`],
+///   clamped to ≥ 1 so a pre-epoch deadline still arms; 0 = no deadline.
+struct TokenState {
+    bits: AtomicU64,
+}
+
+impl TokenState {
+    fn new(deadline: Option<Instant>) -> TokenState {
+        let bits = match deadline {
+            Some(t) => nanos_since_epoch(t).max(1) << 1,
+            None => 0,
+        };
+        TokenState { bits: AtomicU64::new(bits) }
+    }
+}
+
+/// Cooperative cancellation handle: an absolute deadline plus a
+/// manual-cancel bit behind one shared `AtomicU64`.
+///
+/// Clones share state — cancelling any clone cancels them all. A
+/// [`child`](CancelToken::child) token additionally observes its
+/// parent, so the serve engine can cancel every in-flight solve at
+/// shutdown through one parent token while each job keeps its own
+/// deadline.
+///
+/// The uncancelled fast path is one relaxed load per clause (own bits,
+/// then parent bits); `Instant::now()` is only consulted when a
+/// deadline is actually armed.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<TokenState>,
+    parent: Option<Arc<TokenState>>,
+}
+
+impl CancelToken {
+    /// A token with no deadline; fires only on explicit [`cancel`](Self::cancel).
+    pub fn new() -> CancelToken {
+        CancelToken { inner: Arc::new(TokenState::new(None)), parent: None }
+    }
+
+    /// A token that reads cancelled once `deadline` passes.
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken { inner: Arc::new(TokenState::new(Some(deadline))), parent: None }
+    }
+
+    /// A child token: cancelled when *either* its own deadline passes /
+    /// [`cancel`](Self::cancel) is called on it, or `self` (the parent)
+    /// is cancelled. The child does not propagate back to the parent.
+    pub fn child(&self, deadline: Option<Instant>) -> CancelToken {
+        CancelToken {
+            inner: Arc::new(TokenState::new(deadline)),
+            parent: Some(Arc::clone(&self.inner)),
+        }
+    }
+
+    /// Flip the manual-cancel bit; every clone and child observes it.
+    pub fn cancel(&self) {
+        self.inner.bits.fetch_or(1, Ordering::Relaxed);
+    }
+
+    /// Whether the token reads cancelled: manual bit set (own or
+    /// parent), or an armed deadline has passed.
+    #[inline]
+    pub fn is_cancelled(&self) -> bool {
+        let own = self.inner.bits.load(Ordering::Relaxed);
+        let par = match &self.parent {
+            Some(p) => p.bits.load(Ordering::Relaxed),
+            None => 0,
+        };
+        if (own | par) & 1 != 0 {
+            return true;
+        }
+        let own_dl = own >> 1;
+        let par_dl = par >> 1;
+        if own_dl == 0 && par_dl == 0 {
+            return false;
+        }
+        let now = nanos_since_epoch(Instant::now());
+        (own_dl != 0 && now >= own_dl) || (par_dl != 0 && now >= par_dl)
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::new()
+    }
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let bits = self.inner.bits.load(Ordering::Relaxed);
+        f.debug_struct("CancelToken")
+            .field("cancelled", &self.is_cancelled())
+            .field("deadline_armed", &(bits >> 1 != 0))
+            .field("has_parent", &self.parent.is_some())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failpoint registry
+// ---------------------------------------------------------------------------
+
+/// The registered injection sites. `check` at an unknown site is legal
+/// (it simply never fires), but specs referencing a site outside this
+/// list are rejected at parse time — a typo'd `GRPOT_FAULTS` must fail
+/// loudly, not silently never fire.
+pub mod sites {
+    /// `Engine::submit`, before admission control.
+    pub const QUEUE_ADMIT: &str = "queue.admit";
+    /// `batcher::next_batch`, after a batch is formed.
+    pub const BATCHER_FLUSH: &str = "batcher.flush";
+    /// Engine dataset build, inside the per-batch unwind guard.
+    pub const ENGINE_DATASET_BUILD: &str = "engine.dataset_build";
+    /// Engine solve, inside the per-job unwind guard.
+    pub const ENGINE_SOLVE: &str = "engine.solve";
+    /// Warm-start dual-cache insert (faults skip the insert, never the
+    /// request).
+    pub const CACHE_INSERT: &str = "cache.insert";
+    /// Per-iteration oracle evaluation in the solver drivers.
+    pub const ORACLE_EVAL: &str = "oracle.eval";
+
+    /// Every registered site (docs, CLI `info`, chaos sweeps).
+    pub const ALL: [&str; 6] = [
+        QUEUE_ADMIT,
+        BATCHER_FLUSH,
+        ENGINE_DATASET_BUILD,
+        ENGINE_SOLVE,
+        CACHE_INSERT,
+        ORACLE_EVAL,
+    ];
+}
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// `panic!` at the site (exercises unwind guards).
+    Panic,
+    /// Sleep for the given milliseconds, then continue normally
+    /// (exercises deadline/cancellation paths).
+    Delay(u64),
+    /// Return a structured `GrpotError` from the site (exercises error
+    /// plumbing; sites without an error channel escalate to a panic and
+    /// document it).
+    Err,
+}
+
+/// One armed failpoint: fire `action` on every `every`-th hit of `site`.
+struct FaultSpec {
+    site: String,
+    action: Action,
+    every: u64,
+    hits: AtomicU64,
+}
+
+/// Fast-path gate: true iff at least one spec is installed. [`check`]
+/// reads only this when the registry is empty.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Set once faults were chosen explicitly (CLI launch or a test's
+/// [`set_faults`]/[`clear`]); [`latch_env_once`] then leaves them alone.
+static EXPLICIT: AtomicBool = AtomicBool::new(false);
+
+/// Total faults fired since process start (all sites, all actions).
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+static REGISTRY: Mutex<Vec<FaultSpec>> = Mutex::new(Vec::new());
+
+fn registry() -> std::sync::MutexGuard<'static, Vec<FaultSpec>> {
+    // A panic *at a failpoint* happens while the lock is not held (the
+    // guard drops before the action runs), but stay poison-tolerant
+    // anyway: the registry is plain data.
+    REGISTRY.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Parse a `GRPOT_FAULTS` value: comma-separated `site:action:every-N`
+/// entries, e.g. `engine.solve:panic:every-3,oracle.eval:delay(5):every-1`.
+/// `off`, `0` and the empty string mean no faults. Unknown sites,
+/// actions, or a malformed cadence are errors.
+pub fn parse(s: &str) -> Result<Vec<(String, Action, u64)>, GrpotError> {
+    let s = s.trim();
+    if s.is_empty() || s.eq_ignore_ascii_case("off") || s == "0" {
+        return Ok(Vec::new());
+    }
+    let mut specs = Vec::new();
+    for entry in s.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() != 3 {
+            return Err(err!(
+                "malformed fault spec '{entry}' (expected site:action:every-N)"
+            ));
+        }
+        let site = parts[0].trim();
+        if !sites::ALL.contains(&site) {
+            return Err(err!(
+                "unknown fault site '{site}' (expected one of {})",
+                sites::ALL.join("|")
+            ));
+        }
+        let action = parse_action(parts[1].trim())
+            .ok_or_else(|| err!("unknown fault action '{}' (expected panic|delay(ms)|err)", parts[1].trim()))?;
+        let every = parts[2]
+            .trim()
+            .strip_prefix("every-")
+            .and_then(|n| n.parse::<u64>().ok())
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| err!("malformed fault cadence '{}' (expected every-N, N ≥ 1)", parts[2].trim()))?;
+        specs.push((site.to_string(), action, every));
+    }
+    Ok(specs)
+}
+
+fn parse_action(s: &str) -> Option<Action> {
+    match s.to_ascii_lowercase().as_str() {
+        "panic" => Some(Action::Panic),
+        "err" => Some(Action::Err),
+        other => other
+            .strip_prefix("delay(")
+            .and_then(|rest| rest.strip_suffix(')'))
+            .and_then(|ms| ms.trim().parse::<u64>().ok())
+            .map(Action::Delay),
+    }
+}
+
+/// Install a fault set programmatically (tests, the CLI launcher). An
+/// explicit install always wins over the [`latch_env_once`] fallback.
+/// Hit counters start at zero.
+pub fn set_faults(specs: &[(String, Action, u64)]) {
+    EXPLICIT.store(true, Ordering::Relaxed);
+    let mut reg = registry();
+    reg.clear();
+    for (site, action, every) in specs {
+        reg.push(FaultSpec {
+            site: site.clone(),
+            action: *action,
+            every: *every,
+            hits: AtomicU64::new(0),
+        });
+    }
+    ARMED.store(!reg.is_empty(), Ordering::Relaxed);
+}
+
+/// Remove every installed fault; [`check`] returns to the single-load
+/// fast path.
+pub fn clear() {
+    set_faults(&[]);
+}
+
+/// Total faults fired since process start.
+pub fn injected() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Human-readable summary of the installed fault set (CLI `info`).
+pub fn describe() -> String {
+    let reg = registry();
+    if reg.is_empty() {
+        return "off".to_string();
+    }
+    reg.iter()
+        .map(|f| {
+            let action = match f.action {
+                Action::Panic => "panic".to_string(),
+                Action::Delay(ms) => format!("delay({ms})"),
+                Action::Err => "err".to_string(),
+            };
+            format!("{}:{}:every-{}", f.site, action, f.every)
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Read `GRPOT_FAULTS`, validate it, and install the fault set. A
+/// malformed value is an error the caller turns into a launch failure
+/// (never a late per-request surprise) — mirrors `GRPOT_TRACE`.
+pub fn init_from_env() -> Result<usize, GrpotError> {
+    let specs = match std::env::var("GRPOT_FAULTS") {
+        Ok(v) => parse(&v).map_err(|e| err!("GRPOT_FAULTS: {e}"))?,
+        Err(_) => Vec::new(),
+    };
+    set_faults(&specs);
+    Ok(specs.len())
+}
+
+/// Once-only best-effort env latch for processes without a launch hook
+/// (test binaries, benches, embedders): the *first* call installs a
+/// valid `GRPOT_FAULTS` value; later calls — and any explicit
+/// [`set_faults`] before or after — win over the env. A malformed value
+/// is silently ignored here (the CLI's [`init_from_env`] is the strict
+/// validator). Called from `Engine::start`, so
+/// `GRPOT_FAULTS=… cargo test` actually injects.
+pub fn latch_env_once() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        if EXPLICIT.load(Ordering::Relaxed) {
+            return; // an explicit set_faults already happened
+        }
+        if let Ok(v) = std::env::var("GRPOT_FAULTS") {
+            if let Ok(specs) = parse(&v) {
+                let mut reg = registry();
+                reg.clear();
+                for (site, action, every) in specs {
+                    reg.push(FaultSpec { site, action, every, hits: AtomicU64::new(0) });
+                }
+                ARMED.store(!reg.is_empty(), Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// THE injection point. With no faults installed this is a single
+/// relaxed load; with faults installed, the `every`-th hit of `site`
+/// fires its action: `panic` unwinds, `delay` sleeps then returns
+/// `Ok`, `err` returns a structured error. Call sites without an error
+/// channel escalate `Err` to a panic (their unwind guards keep the
+/// never-hang guarantee).
+#[inline]
+pub fn check(site: &str) -> crate::error::Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    check_slow(site)
+}
+
+#[cold]
+fn check_slow(site: &str) -> crate::error::Result<()> {
+    // Decide under the lock, act outside it: a panic action must not
+    // poison the registry, and a delay must not block other sites.
+    let fire = {
+        let reg = registry();
+        reg.iter().find(|f| f.site == site).and_then(|f| {
+            let n = f.hits.fetch_add(1, Ordering::Relaxed) + 1;
+            if n % f.every == 0 { Some((f.action, n)) } else { None }
+        })
+    };
+    let Some((action, n)) = fire else {
+        return Ok(());
+    };
+    INJECTED.fetch_add(1, Ordering::Relaxed);
+    match action {
+        Action::Panic => panic!("failpoint {site}: injected panic (hit {n})"),
+        Action::Delay(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        Action::Err => Err(err!("failpoint {site}: injected error (hit {n})")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Fault-installing tests share the process-global registry, so
+    /// they serialize on this lock (same pattern as the trace-mode
+    /// tests in `tests/observability.rs`).
+    static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        FAULT_LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn fresh_token_is_not_cancelled() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        assert!(format!("{t:?}").contains("cancelled: false"));
+    }
+
+    #[test]
+    fn manual_cancel_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        t.cancel();
+        assert!(t.is_cancelled());
+        assert!(c.is_cancelled());
+    }
+
+    #[test]
+    fn past_deadline_reads_cancelled_future_does_not() {
+        let past = CancelToken::with_deadline(Instant::now() - Duration::from_secs(1));
+        assert!(past.is_cancelled());
+        let future = CancelToken::with_deadline(Instant::now() + Duration::from_secs(3600));
+        assert!(!future.is_cancelled());
+        // The deadline arms even when it predates the process epoch
+        // (encoding clamps to ≥ 1 instead of collapsing to "no deadline").
+        assert!(format!("{past:?}").contains("deadline_armed: true"));
+    }
+
+    #[test]
+    fn deadline_expiry_flips_the_token() {
+        let t = CancelToken::with_deadline(Instant::now() + Duration::from_millis(20));
+        assert!(!t.is_cancelled());
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn child_observes_parent_cancel_but_not_vice_versa() {
+        let parent = CancelToken::new();
+        let child = parent.child(None);
+        assert!(!child.is_cancelled());
+        parent.cancel();
+        assert!(child.is_cancelled());
+
+        let parent2 = CancelToken::new();
+        let child2 = parent2.child(None);
+        child2.cancel();
+        assert!(child2.is_cancelled());
+        assert!(!parent2.is_cancelled());
+    }
+
+    #[test]
+    fn child_keeps_its_own_deadline() {
+        let parent = CancelToken::new();
+        let child = parent.child(Some(Instant::now() - Duration::from_secs(1)));
+        assert!(child.is_cancelled());
+        assert!(!parent.is_cancelled());
+    }
+
+    #[test]
+    fn parse_accepts_the_grammar() {
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse("off").unwrap().is_empty());
+        assert!(parse("0").unwrap().is_empty());
+        let specs = parse("engine.solve:panic:every-3, oracle.eval:delay(5):every-1").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0], ("engine.solve".to_string(), Action::Panic, 3));
+        assert_eq!(specs[1], ("oracle.eval".to_string(), Action::Delay(5), 1));
+        assert_eq!(parse("cache.insert:err:every-2").unwrap()[0].1, Action::Err);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(parse("bogus.site:panic:every-1").is_err());
+        assert!(parse("engine.solve:explode:every-1").is_err());
+        assert!(parse("engine.solve:panic:every-0").is_err());
+        assert!(parse("engine.solve:panic:always").is_err());
+        assert!(parse("engine.solve:panic").is_err());
+        assert!(parse("engine.solve:delay(ms):every-1").is_err());
+    }
+
+    #[test]
+    fn empty_registry_is_inert_and_cheap() {
+        let _g = guard();
+        clear();
+        for site in sites::ALL {
+            assert!(check(site).is_ok());
+        }
+    }
+
+    // Firing tests install *test-only* site names via `set_faults`
+    // ([`check`] matches any string; only `parse` restricts names):
+    // these unit tests share a process with every other lib test, and
+    // arming a production site — even briefly — could fire into a
+    // concurrently running engine/solver test.
+
+    #[test]
+    fn err_fires_on_cadence() {
+        let _g = guard();
+        set_faults(&[("test.cadence".to_string(), Action::Err, 3)]);
+        assert!(check("test.cadence").is_ok()); // hit 1
+        assert!(check("test.cadence").is_ok()); // hit 2
+        let e = check("test.cadence").unwrap_err(); // hit 3 fires
+        assert!(e.to_string().contains("failpoint test.cadence"));
+        assert!(check("test.cadence").is_ok()); // hit 4
+        // Other sites are untouched.
+        assert!(check(sites::ENGINE_SOLVE).is_ok());
+        clear();
+    }
+
+    #[test]
+    fn panic_action_panics_with_site_name() {
+        let _g = guard();
+        set_faults(&[("test.panic".to_string(), Action::Panic, 1)]);
+        let res = std::panic::catch_unwind(|| check("test.panic"));
+        clear();
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("failpoint test.panic"), "{msg}");
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_continues() {
+        let _g = guard();
+        set_faults(&[("test.delay".to_string(), Action::Delay(10), 1)]);
+        let before = injected();
+        let start = Instant::now();
+        assert!(check("test.delay").is_ok());
+        assert!(start.elapsed() >= Duration::from_millis(10));
+        assert!(injected() > before);
+        clear();
+    }
+
+    #[test]
+    fn describe_round_trips_the_grammar() {
+        let _g = guard();
+        // Real site names (parse insists), but cadences far beyond what
+        // any concurrent test could hit during the install window.
+        let specs =
+            parse("engine.solve:panic:every-999983,oracle.eval:delay(5):every-999979").unwrap();
+        set_faults(&specs);
+        let shown = describe();
+        clear();
+        assert_eq!(parse(&shown).unwrap(), specs);
+        assert_eq!(describe(), "off");
+    }
+}

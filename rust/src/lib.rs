@@ -41,6 +41,10 @@
 //! * [`serve`] — the serving engine: admission-controlled request queue
 //!   with deadlines and backpressure, micro-batching, a warm-start dual
 //!   cache, and a closed-loop load generator.
+//! * [`fault`] — fault tolerance: cooperative [`fault::CancelToken`]s
+//!   polled by the solver drivers (deadlines abort mid-solve with a
+//!   structured error) and a deterministic failpoint registry
+//!   (`GRPOT_FAULTS=site:action:every-N`, off = one relaxed load).
 //! * [`obs`] — observability: per-request trace IDs and span rings with
 //!   a Chrome-trace exporter (`GRPOT_TRACE={off,spans,full}`), per-solve
 //!   [`obs::SolveReport`] telemetry via the `SolveOptions` observer
@@ -73,6 +77,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod eval;
+pub mod fault;
 pub mod groups;
 pub mod jsonlite;
 pub mod linalg;

@@ -73,6 +73,21 @@ fn app() -> App {
             )
             .arg(ArgSpec::opt("max-iters", "L-BFGS iteration cap per solve").default("1000"))
             .arg(ArgSpec::opt("r", "snapshot interval").default("10"))
+            .arg(
+                ArgSpec::opt(
+                    "breaker-threshold",
+                    "consecutive dataset failures before quarantine (0 disables)",
+                )
+                .default("3"),
+            )
+            .arg(
+                ArgSpec::opt("breaker-cooldown-ms", "quarantine cooldown before a probe")
+                    .default("5000"),
+            )
+            .arg(ArgSpec::switch(
+                "no-shed",
+                "disable load shedding of requests that cannot meet their deadline",
+            ))
             .arg(ArgSpec::opt(
                 "reg",
                 "default regularizer for requests that don't name one: \
@@ -149,6 +164,10 @@ fn app() -> App {
             .arg(ArgSpec::opt("gammas", "γ grid").default("0.1,1"))
             .arg(ArgSpec::opt("rhos", "ρ grid").default("0.4,0.8"))
             .arg(ArgSpec::opt("method", "fast|fast-nows|origin|xla-origin").default("fast"))
+            .arg(ArgSpec::opt(
+                "chaos-seed",
+                "seeded chaos mode: perturb every third request (deadlines, bad γ, poisoned dataset)",
+            ))
             .arg(ArgSpec::opt("out", "write the JSON report here")),
     )))
     .subcommand(
@@ -345,6 +364,15 @@ fn engine_config(m: &grpot::cli::Matches) -> Result<ServeConfig, grpot::cli::Cli
         } else {
             None
         },
+        breaker_threshold: m.get_usize("breaker-threshold")?.min(u32::MAX as usize) as u32,
+        breaker_cooldown: {
+            // Same clamp policy as deadlines: from_secs_f64 panics on
+            // non-finite or overflowing input.
+            let ms = m.get_f64("breaker-cooldown-ms")?;
+            let ms = if ms.is_finite() && ms > 0.0 { ms.min(86_400_000.0) } else { 0.0 };
+            std::time::Duration::from_secs_f64(ms / 1e3)
+        },
+        shed: !m.get_flag("no-shed"),
         solve,
     })
 }
@@ -438,6 +466,10 @@ fn cmd_bench_serve(m: &grpot::cli::Matches) -> Result<()> {
         method,
         regularizer: cfg.solve.resolve_regularizer()?,
         deadline: None,
+        chaos_seed: match m.get("chaos-seed") {
+            Some(_) => Some(m.get_usize("chaos-seed")? as u64),
+            None => None,
+        },
     };
     eprintln!(
         "bench-serve: {} | {} clients × {} cycles × {} grid points | {} workers × {} threads | reg={}",
@@ -557,6 +589,11 @@ fn cmd_info() -> Result<()> {
         std::env::var("GRPOT_TRACE").unwrap_or_else(|_| "unset".into()),
         grpot::obs::ring::DEFAULT_RING_CAPACITY
     );
+    println!(
+        "faults: {} (GRPOT_FAULTS={})",
+        grpot::fault::describe(),
+        std::env::var("GRPOT_FAULTS").unwrap_or_else(|_| "unset".into())
+    );
     print_runtime_info();
     Ok(())
 }
@@ -582,6 +619,12 @@ fn main() {
     // And GRPOT_TRACE: validate + latch the tracing mode once at launch
     // (the hot paths read a single atomic thereafter).
     if let Err(e) = grpot::obs::init_from_env() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+    // And GRPOT_FAULTS: a malformed failpoint spec is a launch error,
+    // not a per-request surprise deep inside a worker.
+    if let Err(e) = grpot::fault::init_from_env() {
         eprintln!("{e}");
         std::process::exit(2);
     }

@@ -100,6 +100,11 @@ pub struct SolveReport {
     pub method: String,
     /// Request trace ID (0 outside the serving path).
     pub trace_id: u64,
+    /// Why the solver stopped ([`crate::solvers::StopReason::name`]:
+    /// `grad_tol` | `ftol` | `max_iters` | `line_search_failed` |
+    /// `cancelled`; empty when unset). Distinguishes a mid-solve
+    /// cancellation from a converged result in telemetry.
+    pub stop: &'static str,
     /// L-BFGS iterations taken.
     pub iterations: usize,
     /// Outer rounds completed (working-set refreshes).
@@ -141,6 +146,7 @@ impl SolveReport {
         Value::obj()
             .set("method", self.method.as_str())
             .set("trace_id", self.trace_id)
+            .set("stop", self.stop)
             .set("iterations", self.iterations)
             .set("outer_rounds", self.outer_rounds)
             .set("evals", self.evals)

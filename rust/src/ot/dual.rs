@@ -234,6 +234,76 @@ impl OtProblem {
         OtProblem { a: a_perm, b, cost_t, groups, tiles: OnceLock::new() }
     }
 
+    /// Checked [`OtProblem::from_dataset`]: audits the generated pair
+    /// (non-empty domains, matching label count, finite coordinates —
+    /// a degenerate all-equal source would otherwise normalize the cost
+    /// to NaN) and returns a structured error instead of panicking or
+    /// poisoning downstream solves. The serving engine builds every
+    /// cached problem through this entry so an untrusted dataset spec
+    /// can never install non-finite costs.
+    pub fn try_from_dataset(pair: &DomainPair) -> crate::error::Result<OtProblem> {
+        let m = pair.source.x.rows();
+        let n = pair.target.x.rows();
+        if m == 0 || n == 0 {
+            return Err(crate::err!("dataset has empty domain (source {m} × target {n})"));
+        }
+        if pair.source.labels.len() != m {
+            return Err(crate::err!(
+                "dataset has {} labels for {m} source samples",
+                pair.source.labels.len()
+            ));
+        }
+        if !pair.source.x.as_slice().iter().all(|v| v.is_finite())
+            || !pair.target.x.as_slice().iter().all(|v| v.is_finite())
+        {
+            return Err(crate::err!("dataset contains non-finite coordinates"));
+        }
+        let prob = OtProblem::from_dataset(pair);
+        if !prob.cost_t.as_slice().iter().all(|v| v.is_finite()) {
+            return Err(crate::err!(
+                "dataset produced a non-finite normalized cost (degenerate coordinates?)"
+            ));
+        }
+        Ok(prob)
+    }
+
+    /// Checked [`OtProblem::from_parts`]: dimension mismatches and
+    /// non-finite / non-probability inputs come back as structured
+    /// errors instead of the unchecked constructor's panics.
+    pub fn try_from_parts(
+        a: Vec<f64>,
+        b: Vec<f64>,
+        cost: &Mat,
+        labels: &[usize],
+    ) -> crate::error::Result<OtProblem> {
+        let (m, n) = cost.shape();
+        if m == 0 || n == 0 {
+            return Err(crate::err!("cost matrix has empty dimension ({m} × {n})"));
+        }
+        if a.len() != m || b.len() != n || labels.len() != m {
+            return Err(crate::err!(
+                "shape mismatch: cost {m}×{n}, |a|={}, |b|={}, |labels|={}",
+                a.len(),
+                b.len(),
+                labels.len()
+            ));
+        }
+        if !cost.as_slice().iter().all(|v| v.is_finite()) {
+            return Err(crate::err!("cost matrix contains non-finite entries"));
+        }
+        for (name, marg) in [("a", &a), ("b", &b)] {
+            if !marg.iter().all(|v| v.is_finite() && *v >= 0.0) {
+                return Err(crate::err!(
+                    "marginal {name} must be finite and nonnegative"
+                ));
+            }
+            if marg.iter().sum::<f64>() <= 0.0 {
+                return Err(crate::err!("marginal {name} has zero total mass"));
+            }
+        }
+        Ok(OtProblem::from_parts(a, b, cost, labels))
+    }
+
     #[inline]
     pub fn m(&self) -> usize {
         self.a.len()
@@ -1237,6 +1307,56 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn try_from_parts_validates_inputs() {
+        let cost = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        // Well-formed inputs succeed and match the unchecked path.
+        let ok = OtProblem::try_from_parts(vec![0.6, 0.4], vec![0.5, 0.5], &cost, &[1, 0])
+            .expect("valid parts");
+        assert_eq!(ok.a, vec![0.4, 0.6]);
+        // Shape mismatch.
+        let e = OtProblem::try_from_parts(vec![0.5; 3], vec![0.5, 0.5], &cost, &[1, 0])
+            .unwrap_err();
+        assert!(e.to_string().contains("shape mismatch"), "{e}");
+        // Non-finite cost.
+        let bad = Mat::from_vec(2, 2, vec![1.0, f64::NAN, 3.0, 4.0]);
+        let e = OtProblem::try_from_parts(vec![0.5, 0.5], vec![0.5, 0.5], &bad, &[0, 1])
+            .unwrap_err();
+        assert!(e.to_string().contains("non-finite"), "{e}");
+        // Negative / zero-mass marginals.
+        let e = OtProblem::try_from_parts(vec![-0.1, 1.1], vec![0.5, 0.5], &cost, &[0, 1])
+            .unwrap_err();
+        assert!(e.to_string().contains("nonnegative"), "{e}");
+        let e = OtProblem::try_from_parts(vec![0.5, 0.5], vec![0.0, 0.0], &cost, &[0, 1])
+            .unwrap_err();
+        assert!(e.to_string().contains("zero total mass"), "{e}");
+        // Empty dimension.
+        let empty = Mat::zeros(0, 2);
+        let e = OtProblem::try_from_parts(vec![], vec![0.5, 0.5], &empty, &[]).unwrap_err();
+        assert!(e.to_string().contains("empty"), "{e}");
+    }
+
+    #[test]
+    fn try_from_dataset_accepts_generated_pairs_and_rejects_poison() {
+        let spec = crate::coordinator::config::DatasetSpec {
+            family: "synthetic".into(),
+            param1: 3,
+            param2: 4,
+            seed: 1,
+            ..Default::default()
+        };
+        let pair = crate::coordinator::registry::build_pair(&spec).unwrap();
+        let checked = OtProblem::try_from_dataset(&pair).expect("generated pair is valid");
+        let unchecked = OtProblem::from_dataset(&pair);
+        assert_eq!(checked.a, unchecked.a);
+        assert_eq!(checked.b, unchecked.b);
+        // Poison a coordinate: the checked path reports, never panics.
+        let mut bad = crate::coordinator::registry::build_pair(&spec).unwrap();
+        bad.source.x[(0, 0)] = f64::INFINITY;
+        let e = OtProblem::try_from_dataset(&bad).unwrap_err();
+        assert!(e.to_string().contains("non-finite"), "{e}");
     }
 
     #[test]

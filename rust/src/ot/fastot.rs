@@ -60,6 +60,15 @@ pub struct FastOtConfig {
     /// Request trace ID stamped on this solve's spans and report (0
     /// outside the serving path).
     pub trace_id: u64,
+    /// Cooperative cancellation token polled once per L-BFGS iteration.
+    /// `None` (the default) skips the check entirely; an armed but
+    /// uncancelled token costs one relaxed load per iteration and the
+    /// solve stays byte-identical to a token-free run. On cancellation
+    /// the driver stops at the next iteration boundary with
+    /// [`StopReason::Cancelled`] — the iterate is valid, merely
+    /// unconverged (Theorem 2 holds from any point, so partial results
+    /// are never wrong, just early).
+    pub cancel: Option<crate::fault::CancelToken>,
 }
 
 impl Default for FastOtConfig {
@@ -74,6 +83,7 @@ impl Default for FastOtConfig {
             lbfgs: LbfgsOptions::default(),
             observer: None,
             trace_id: 0,
+            cancel: None,
         }
     }
 }
@@ -172,6 +182,19 @@ pub fn drive_from(
     let stop = 'outer: loop {
         let _round_span = Span::start_full(names::OUTER_ROUND, cfg.trace_id);
         for _ in 0..cfg.r {
+            // Cancellation checkpoint: a plain Option test when no
+            // token is attached, one relaxed load when one is. Checked
+            // before the step so an expired deadline never pays for
+            // another oracle evaluation.
+            if cfg.cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+                break 'outer StopReason::Cancelled;
+            }
+            // The driver has no error channel; an `err` failpoint here
+            // escalates to a panic that the serving engine's unwind
+            // guard turns into a structured failure.
+            if let Err(e) = crate::fault::check(crate::fault::sites::ORACLE_EVAL) {
+                panic!("{e}");
+            }
             match solver.step(oracle) {
                 StepStatus::Continue => {}
                 StepStatus::Stopped(reason) => break 'outer reason,
@@ -197,6 +220,7 @@ pub fn drive_from(
         let report = crate::obs::SolveReport {
             method: method.to_string(),
             trace_id: cfg.trace_id,
+            stop: stop.name(),
             iterations,
             outer_rounds,
             evals: stats.evals,
@@ -504,6 +528,33 @@ mod tests {
             assert!(t.mean_upper_err >= -1e-12);
             assert!(t.mean_lower_err >= -1e-12);
         }
+    }
+
+    #[test]
+    fn cancelled_token_stops_at_first_checkpoint() {
+        let prob = random_problem(5, 3, 3, 6);
+        let token = crate::fault::CancelToken::new();
+        token.cancel();
+        let cfg = FastOtConfig { cancel: Some(token), ..Default::default() };
+        let res = solve_fast_ot(&prob, &cfg);
+        assert_eq!(res.stop, StopReason::Cancelled);
+        assert_eq!(res.iterations, 0);
+        assert!(!res.stop.converged());
+    }
+
+    #[test]
+    fn armed_uncancelled_token_is_byte_identical() {
+        let prob = random_problem(21, 4, 3, 9);
+        let base = FastOtConfig { gamma: 0.7, rho: 0.5, ..Default::default() };
+        let plain = solve_fast_ot(&prob, &base);
+        let token = crate::fault::CancelToken::with_deadline(
+            Instant::now() + std::time::Duration::from_secs(3600),
+        );
+        let armed = solve_fast_ot(&prob, &FastOtConfig { cancel: Some(token), ..base });
+        assert_eq!(plain.x, armed.x);
+        assert_eq!(plain.dual_objective, armed.dual_objective);
+        assert_eq!(plain.iterations, armed.iterations);
+        assert_eq!(plain.stop, armed.stop);
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::error::Result;
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
 use crate::simd::{sub_into, Dispatch, SimdMode};
 use crate::solvers::lbfgs::{Lbfgs, LbfgsOptions};
+use crate::solvers::{StepStatus, StopReason};
 use std::ops::Range;
 
 /// Solve the inner water-filling problem: maximize `fᵀt − (γ/2)‖t‖²`
@@ -377,7 +378,25 @@ pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<SemiDualResult> {
     let _solve_span = crate::obs::Span::start_full(crate::obs::names::SOLVE, opts.trace_id);
     let mut oracle = SemiRegOracle::new(prob, &reg, ctx.clone());
     let mut solver = Lbfgs::new(x0, opts.lbfgs.clone(), &mut oracle);
-    solver.run(&mut oracle);
+    // Stepped (not `run`) so cancellation and failpoints get a
+    // checkpoint between iterations; without a token this is the same
+    // call sequence and the results stay byte-identical.
+    let stop = loop {
+        if opts.cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+            break StopReason::Cancelled;
+        }
+        crate::fault::check(crate::fault::sites::ORACLE_EVAL)?;
+        match solver.step(&mut oracle) {
+            StepStatus::Continue => {}
+            StepStatus::Stopped(reason) => break reason,
+        }
+    };
+    if stop == StopReason::Cancelled {
+        return Err(err!(
+            "solve cancelled after {} semi-dual iterations (deadline passed or caller cancelled)",
+            solver.iterations()
+        ));
+    }
     let iterations = solver.iterations();
     let (alpha, f) = solver.into_solution();
     if let Some(hook) = &opts.observer {
@@ -387,6 +406,7 @@ pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<SemiDualResult> {
         hook.emit(&crate::obs::SolveReport {
             method: format!("semidual+{}", reg.name()),
             trace_id: opts.trace_id,
+            stop: stop.name(),
             iterations,
             outer_rounds: 0,
             evals: stats.evals,

@@ -74,6 +74,11 @@ pub struct SolveOptions {
     /// Request trace ID stamped on spans and the report (0 = not part
     /// of a traced request).
     pub trace_id: u64,
+    /// Cooperative cancellation token polled between solver iterations.
+    /// `None` (the default) removes the check entirely; an uncancelled
+    /// token costs one relaxed load per iteration and never changes
+    /// solver output.
+    pub cancel: Option<crate::fault::CancelToken>,
 }
 
 impl Default for SolveOptions {
@@ -91,6 +96,7 @@ impl Default for SolveOptions {
             ctx: None,
             observer: None,
             trace_id: 0,
+            cancel: None,
         }
     }
 }
@@ -110,6 +116,7 @@ impl std::fmt::Debug for SolveOptions {
             .field("ctx_threads", &self.ctx.as_ref().map(ParallelCtx::threads))
             .field("observer", &self.observer.is_some())
             .field("trace_id", &self.trace_id)
+            .field("cancel", &self.cancel.is_some())
             .finish()
     }
 }
@@ -189,6 +196,13 @@ impl SolveOptions {
         self
     }
 
+    /// Attach a cooperative cancellation token (deadline and/or manual
+    /// cancel); the solve stops at the next checkpoint once it fires.
+    pub fn cancel(mut self, token: crate::fault::CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
     /// The effective regularizer kind: the explicit selection, else the
     /// `GRPOT_REG`/group-lasso default (a bad env value is an error).
     pub fn resolve_regularizer(&self) -> crate::error::Result<RegKind> {
@@ -220,6 +234,7 @@ impl SolveOptions {
             lbfgs: self.lbfgs.clone(),
             observer: self.observer.clone(),
             trace_id: self.trace_id,
+            cancel: self.cancel.clone(),
         }
     }
 }
@@ -239,7 +254,8 @@ mod tests {
             .simd(SimdMode::Scalar)
             .regularizer(RegKind::SquaredL2)
             .warm_start(vec![0.0; 4])
-            .working_set(false);
+            .working_set(false)
+            .cancel(crate::fault::CancelToken::new());
         assert_eq!(opts.gamma, 0.3);
         assert_eq!(opts.rho, 0.7);
         assert_eq!(opts.r, 5);
@@ -249,10 +265,12 @@ mod tests {
         assert_eq!(opts.regularizer, Some(RegKind::SquaredL2));
         assert_eq!(opts.warm_start.as_ref().map(Vec::len), Some(4));
         assert!(!opts.use_working_set);
+        assert!(opts.cancel.is_some());
         let cfg = opts.fastot_config();
         assert_eq!(cfg.gamma, 0.3);
         assert_eq!(cfg.lbfgs.max_iters, 42);
         assert!(!cfg.use_working_set);
+        assert!(cfg.cancel.is_some());
     }
 
     #[test]

@@ -39,6 +39,13 @@ pub fn next_batch(queue: &AdmissionQueue, max_batch: usize) -> Option<Batch> {
     if max_batch > 1 {
         tickets.extend(queue.drain_matching(max_batch - 1, |t| t.dataset_key == dataset_key));
     }
+    // `batcher.flush` failpoint. This path has no error channel, so an
+    // injected `err` escalates to a panic: the worker loop's unwind
+    // guard catches it and every popped ticket answers its submitter
+    // through the Ticket `Drop` backstop instead of hanging.
+    if let Err(e) = crate::fault::check(crate::fault::sites::BATCHER_FLUSH) {
+        panic!("{e}");
+    }
     Some(Batch { dataset_key, tickets })
 }
 

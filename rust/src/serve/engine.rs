@@ -16,7 +16,11 @@
 //! |------|------|---------|
 //! | `serve.requests` | counter | submits accepted into the queue |
 //! | `serve.rejected_queue_full` | counter | backpressure rejections |
-//! | `serve.rejected_deadline` | counter | deadline expiries |
+//! | `serve.rejected_deadline` | counter | deadline expiries (pre-solve triage) |
+//! | `serve.rejected_quarantined` | counter | circuit-breaker fast-fails |
+//! | `serve.rejected_overloaded` | counter | load-shed rejections at admission |
+//! | `serve.cancelled_midsolve` | counter | solves stopped by a cancellation checkpoint |
+//! | `serve.breaker_trips` | counter | circuit-breaker open transitions |
 //! | `serve.solves` | counter | solver runs (≤ requests: batching dedupes) |
 //! | `serve.solve_panics` | counter | solves that panicked (answered as `failed`) |
 //! | `serve.batches` | counter | micro-batches executed |
@@ -36,6 +40,20 @@
 //! `engine.dataset_build` and `engine.solve` spans; each solve's
 //! [`crate::obs::SolveReport`] is captured via the `SolveOptions`
 //! observer hook and shared by every reply in the batch.
+//!
+//! Fault tolerance: every solve carries a [`crate::fault::CancelToken`]
+//! derived from its targets' deadlines and parented on the engine's
+//! shutdown token, so an expired deadline (or [`Engine::shutdown`])
+//! stops the solver at its next iteration checkpoint — distinguishable
+//! from pre-solve triage via `serve.cancelled_midsolve`. A per-dataset
+//! circuit breaker quarantines keys whose builds/solves fail
+//! `breaker_threshold` times in a row ([`RejectReason::Quarantined`],
+//! half-open probe after the cooldown), and admission sheds load when
+//! the estimated queue wait already exceeds a request's deadline
+//! ([`RejectReason::Overloaded`]). `GRPOT_FAULTS` failpoints
+//! (`queue.admit`, `engine.dataset_build`, `engine.solve`,
+//! `cache.insert`) inject deterministic failures inside the same unwind
+//! guards that protect real traffic.
 
 use super::batcher::{next_batch, unique_jobs, Batch, JobKey};
 use super::cache::DualCache;
@@ -48,10 +66,12 @@ use crate::coordinator::sweep;
 use crate::data::DomainPair;
 use crate::err;
 use crate::error::GrpotError;
+use crate::fault::{self, sites, CancelToken};
 use crate::ot::dual::OtProblem;
 use crate::ot::fastot::FastOtResult;
 use crate::ot::regularizer::RegKind;
 use crate::pool::{BoundedQueue, ParallelCtx, PushError};
+use crate::solvers::StopReason;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -110,6 +130,14 @@ pub enum RejectReason {
     DeadlineExceeded { waited_s: f64 },
     /// The engine is shutting down.
     Shutdown,
+    /// The dataset key is circuit-broken: recent builds/solves of it
+    /// failed repeatedly, so requests fast-fail until the cooldown
+    /// expires and a probe succeeds.
+    Quarantined { retry_in_s: f64 },
+    /// Load shed at admission: the estimated queue wait already exceeds
+    /// the request's deadline, so queueing could only end in a
+    /// `DeadlineExceeded` triage after burning queue capacity.
+    Overloaded { estimated_wait_s: f64 },
     /// Request validation or solver-side failure.
     Failed(GrpotError),
 }
@@ -121,6 +149,8 @@ impl RejectReason {
             RejectReason::QueueFull { .. } => "queue_full",
             RejectReason::DeadlineExceeded { .. } => "deadline_exceeded",
             RejectReason::Shutdown => "shutdown",
+            RejectReason::Quarantined { .. } => "quarantined",
+            RejectReason::Overloaded { .. } => "overloaded",
             RejectReason::Failed(_) => "failed",
         }
     }
@@ -136,6 +166,14 @@ impl std::fmt::Display for RejectReason {
                 write!(f, "deadline exceeded after waiting {waited_s:.3}s")
             }
             RejectReason::Shutdown => write!(f, "engine is shutting down"),
+            RejectReason::Quarantined { retry_in_s } => write!(
+                f,
+                "dataset quarantined after repeated failures; retry in {retry_in_s:.3}s"
+            ),
+            RejectReason::Overloaded { estimated_wait_s } => write!(
+                f,
+                "overloaded: estimated queue wait {estimated_wait_s:.3}s exceeds the deadline"
+            ),
             RejectReason::Failed(e) => write!(f, "{e}"),
         }
     }
@@ -176,6 +214,81 @@ impl ProblemCache {
     }
 }
 
+/// Per-dataset circuit-breaker state. `Closed` admits everything;
+/// `Open` fast-fails until its cooldown instant; `HalfOpen` admits
+/// exactly one probe request and quarantines the rest until the probe's
+/// outcome arrives (success closes, failure reopens).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum BState {
+    Closed,
+    Open { until: Instant },
+    HalfOpen { probe_started: Instant },
+}
+
+/// Failure history for one dataset key. Only *infrastructure* failures
+/// count — dataset-build errors/panics and solver panics — never solver
+/// non-convergence or per-request validation, which say nothing about
+/// the dataset being poisoned.
+#[derive(Clone, Copy, Debug)]
+struct Breaker {
+    consecutive: u32,
+    state: BState,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker { consecutive: 0, state: BState::Closed }
+    }
+
+    /// Admission decision for this key. `Err(retry_in_s)` = quarantined.
+    fn admit(&mut self, now: Instant, cooldown: Duration) -> Result<(), f64> {
+        match self.state {
+            BState::Closed => Ok(()),
+            BState::Open { until } => {
+                if now < until {
+                    Err(until.saturating_duration_since(now).as_secs_f64())
+                } else {
+                    // Cooldown over: this request becomes the probe.
+                    self.state = BState::HalfOpen { probe_started: now };
+                    Ok(())
+                }
+            }
+            BState::HalfOpen { probe_started } => {
+                if now.saturating_duration_since(probe_started) > cooldown {
+                    // The probe's outcome never came back (e.g. its
+                    // submitter vanished mid-flight); let a fresh probe
+                    // through rather than quarantining forever.
+                    self.state = BState::HalfOpen { probe_started: now };
+                    Ok(())
+                } else {
+                    Err(cooldown
+                        .saturating_sub(now.saturating_duration_since(probe_started))
+                        .as_secs_f64())
+                }
+            }
+        }
+    }
+
+    /// Record an infrastructure failure; returns true when this failure
+    /// trips the breaker open (new `Open` transition, for metrics).
+    fn record_failure(&mut self, now: Instant, threshold: u32, cooldown: Duration) -> bool {
+        self.consecutive = self.consecutive.saturating_add(1);
+        let was_open = matches!(self.state, BState::Open { .. });
+        // A failed half-open probe reopens immediately; otherwise trip
+        // once the consecutive run reaches the threshold.
+        if matches!(self.state, BState::HalfOpen { .. }) || self.consecutive >= threshold {
+            self.state = BState::Open { until: now + cooldown };
+            return !was_open;
+        }
+        false
+    }
+
+    fn record_success(&mut self) {
+        self.consecutive = 0;
+        self.state = BState::Closed;
+    }
+}
+
 struct EngineState {
     cfg: ServeConfig,
     /// Effective intra-solve thread count after clamping
@@ -187,7 +300,51 @@ struct EngineState {
     /// deduplicated without serializing builds of distinct datasets.
     problem_build: Mutex<BTreeMap<String, Arc<Mutex<()>>>>,
     duals: DualCache,
+    /// Per-dataset-key circuit breakers. Entries exist only for keys
+    /// with a live failure history (success removes them), so the map
+    /// stays bounded by the set of currently-failing keys.
+    breakers: Mutex<BTreeMap<String, Breaker>>,
+    /// Root cancel token: [`Engine::shutdown`] cancels it, and every
+    /// solve's per-job token is its child, so in-flight solves stop at
+    /// their next iteration checkpoint instead of running to completion
+    /// against a closed queue.
+    shutdown: CancelToken,
     metrics: Arc<Metrics>,
+}
+
+/// Circuit-breaker admission check for `key`; `None` = admitted.
+fn breaker_check(state: &EngineState, key: &str) -> Option<RejectReason> {
+    if state.cfg.breaker_threshold == 0 {
+        return None;
+    }
+    let mut map = plock(&state.breakers);
+    let b = map.get_mut(key)?; // no failure history → closed
+    match b.admit(Instant::now(), state.cfg.breaker_cooldown) {
+        Ok(()) => None,
+        Err(retry_in_s) => Some(RejectReason::Quarantined { retry_in_s }),
+    }
+}
+
+/// Record a solve/build outcome for `key`'s breaker. Success clears the
+/// key's history entirely (bounding the map); failure counts toward the
+/// threshold and may trip the breaker.
+fn breaker_record(state: &EngineState, key: &str, ok: bool) {
+    if state.cfg.breaker_threshold == 0 {
+        return;
+    }
+    let mut map = plock(&state.breakers);
+    if ok {
+        map.remove(key);
+        return;
+    }
+    let tripped = map.entry(key.to_string()).or_insert_with(Breaker::new).record_failure(
+        Instant::now(),
+        state.cfg.breaker_threshold,
+        state.cfg.breaker_cooldown,
+    );
+    if tripped {
+        state.metrics.incr("serve.breaker_trips", 1);
+    }
 }
 
 /// Poison-tolerant lock: a panic caught elsewhere (dataset asserts,
@@ -226,9 +383,10 @@ impl Engine {
     /// population is `workers` plus at most
     /// `workers × (threads_per_solve − 1)` parked oracle workers.
     pub fn start(cfg: ServeConfig, metrics: Arc<Metrics>) -> Engine {
-        // Once-only: embedders and test binaries get `GRPOT_TRACE`
-        // honored without the CLI launch hook.
+        // Once-only: embedders and test binaries get `GRPOT_TRACE` /
+        // `GRPOT_FAULTS` honored without the CLI launch hook.
         crate::obs::latch_env_once();
+        fault::latch_env_once();
         let workers = cfg.workers.max(1);
         let budget = if cfg.core_budget > 0 {
             cfg.core_budget
@@ -242,6 +400,8 @@ impl Engine {
             problems: Mutex::new(ProblemCache::default()),
             problem_build: Mutex::new(BTreeMap::new()),
             duals: DualCache::new(cfg.warm_cache_bytes, cfg.warm_radius),
+            breakers: Mutex::new(BTreeMap::new()),
+            shutdown: CancelToken::new(),
             metrics,
             cfg,
         });
@@ -253,6 +413,10 @@ impl Engine {
             "serve.requests",
             "serve.rejected_queue_full",
             "serve.rejected_deadline",
+            "serve.rejected_quarantined",
+            "serve.rejected_overloaded",
+            "serve.cancelled_midsolve",
+            "serve.breaker_trips",
             "serve.solves",
             "serve.solve_panics",
             "serve.batches",
@@ -331,6 +495,37 @@ impl Engine {
         if let Err(e) = request.method.ensure_available() {
             return Err(RejectReason::Failed(e));
         }
+        // `queue.admit` failpoint: chaos tests inject admission-path
+        // errors/panics here (a panic unwinds into the submitter —
+        // exactly what a real admission bug would do).
+        if let Err(e) = fault::check(sites::QUEUE_ADMIT) {
+            return Err(RejectReason::Failed(e));
+        }
+        // Circuit breaker: fast-fail keys with a live quarantine instead
+        // of burning queue capacity and a worker on a poisoned dataset.
+        let dataset_key = request.spec.cache_key();
+        if let Some(reason) = breaker_check(&self.state, &dataset_key) {
+            m.incr("serve.rejected_quarantined", 1);
+            return Err(reason);
+        }
+        // Load shedding: if history says this request cannot meet its
+        // deadline even before queue wait is added, reject now. Needs an
+        // observed mean solve time — a cold engine never sheds.
+        if self.state.cfg.shed {
+            if let Some(deadline) = request.deadline.or(self.state.cfg.default_deadline) {
+                if let Some(mean_solve_s) = m.hist_mean("serve.solve_seconds") {
+                    let est = shed_wait_estimate(
+                        self.state.queue.len(),
+                        self.state.cfg.workers,
+                        mean_solve_s,
+                    );
+                    if est > deadline.as_secs_f64() {
+                        m.incr("serve.rejected_overloaded", 1);
+                        return Err(RejectReason::Overloaded { estimated_wait_s: est });
+                    }
+                }
+            }
+        }
         let started = Instant::now();
         let (ticket, slot) = Ticket::new(request, self.state.cfg.default_deadline);
         match self.state.queue.try_push(ticket) {
@@ -349,9 +544,14 @@ impl Engine {
         out
     }
 
-    /// Stop accepting work, let the workers drain the queue, and join
-    /// them. Idempotent; also invoked by `Drop`.
+    /// Stop accepting work, cancel in-flight solves at their next
+    /// iteration checkpoint, answer still-queued tickets with
+    /// [`RejectReason::Shutdown`], and join the workers. Idempotent;
+    /// also invoked by `Drop`.
     pub fn shutdown(&self) {
+        // Cancel before closing the queue so a worker mid-solve stops
+        // cooperatively instead of finishing a result nobody waits for.
+        self.state.shutdown.cancel();
         self.state.queue.close();
         let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
         for h in handles {
@@ -366,6 +566,12 @@ impl Drop for Engine {
     }
 }
 
+/// Expected queue wait for a newly admitted request: everything already
+/// queued, spread across the workers, at the observed mean solve time.
+fn shed_wait_estimate(queue_len: usize, workers: usize, mean_solve_s: f64) -> f64 {
+    queue_len as f64 / workers.max(1) as f64 * mean_solve_s
+}
+
 fn worker_loop(state: &EngineState) {
     // One long-lived parallel context per engine worker: its oracle
     // workers spawn once (lazily, on the first threaded solve), park
@@ -374,11 +580,26 @@ fn worker_loop(state: &EngineState) {
     // parked threads exist, inside the core-budget clamp, and no solve
     // ever pays per-eval thread spawn cost.
     let ctx = ParallelCtx::new(state.threads_per_solve);
-    while let Some(batch) = next_batch(&state.queue, state.cfg.max_batch) {
+    loop {
+        // Both the batcher pop (which hosts the `batcher.flush`
+        // failpoint) and batch handling run under unwind guards: a
+        // panicking worker would silently shrink the pool, and any
+        // ticket the panic stranded is answered by its Drop backstop
+        // when the batch goes out of scope.
+        let popped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            next_batch(&state.queue, state.cfg.max_batch)
+        }));
+        let batch = match popped {
+            Ok(Some(batch)) => batch,
+            Ok(None) => break,
+            Err(_) => continue,
+        };
         state
             .metrics
             .set_gauge("serve.queue_depth", state.queue.len() as f64);
-        handle_batch(state, &batch, &ctx);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle_batch(state, &batch, &ctx);
+        }));
     }
 }
 
@@ -403,12 +624,22 @@ fn cached_problem(
         return Ok(hit);
     }
     state.metrics.incr("service.cache_misses", 1);
-    let built = build_pair(spec).map(|pair| {
-        let prob = OtProblem::from_dataset(&pair);
-        let cached = Arc::new(CachedProblem { pair, prob });
-        plock(&state.problems).insert(key, Arc::clone(&cached), state.cfg.problem_cache_entries);
-        cached
-    });
+    let built = fault::check(sites::ENGINE_DATASET_BUILD)
+        .and_then(|()| build_pair(spec))
+        .and_then(|pair| {
+            // Checked conversion: generated marginals/costs are audited
+            // (finite costs, positive mass) instead of trusted, so a
+            // buggy or adversarial generator yields a structured error
+            // the breaker can count, never a poisoned cache entry.
+            let prob = OtProblem::try_from_dataset(&pair)?;
+            let cached = Arc::new(CachedProblem { pair, prob });
+            plock(&state.problems).insert(
+                key,
+                Arc::clone(&cached),
+                state.cfg.problem_cache_entries,
+            );
+            Ok(cached)
+        });
     drop(build_guard);
     plock(&state.problem_build).remove(key);
     built
@@ -416,6 +647,15 @@ fn cached_problem(
 
 fn handle_batch(state: &EngineState, batch: &Batch, ctx: &ParallelCtx) {
     let m = &state.metrics;
+    // Shutdown fast-drain: once the engine is stopping, queued tickets
+    // are answered immediately instead of solved — the submitter gets a
+    // structured `Shutdown`, never a hang on a dying worker pool.
+    if state.shutdown.is_cancelled() {
+        for t in &batch.tickets {
+            t.respond(Err(RejectReason::Shutdown));
+        }
+        return;
+    }
     m.incr("serve.batches", 1);
     m.observe_hist("serve.batch_size", batch.len() as f64);
     let _batch_span = crate::obs::Span::start(crate::obs::names::ENGINE_BATCH, 0);
@@ -451,6 +691,7 @@ fn handle_batch(state: &EngineState, batch: &Batch, ctx: &ParallelCtx) {
     let problem = match built {
         Ok(Ok(p)) => p,
         Ok(Err(e)) => {
+            breaker_record(state, &batch.dataset_key, false);
             for t in &live {
                 t.respond(Err(RejectReason::Failed(e.clone())));
             }
@@ -461,6 +702,7 @@ fn handle_batch(state: &EngineState, batch: &Batch, ctx: &ParallelCtx) {
             // per-key build-lock entry so repeated bad specs can't grow
             // the map without bound.
             plock(&state.problem_build).remove(&batch.dataset_key);
+            breaker_record(state, &batch.dataset_key, false);
             let what = panic_message(panic.as_ref());
             for t in &live {
                 t.respond(Err(RejectReason::Failed(err!(
@@ -541,7 +783,25 @@ fn solve_job(
     // first target's trace ID stamps the solve/outer-round spans.
     let (hook, report_cell) = crate::obs::ObserverHook::capture();
     let solve_trace_id = targets[0].trace_id;
+
+    // Cooperative cancellation: the job's deadline is the latest of its
+    // targets' deadlines (once it passes, *every* coalesced ticket has
+    // expired; earlier-deadline targets are re-triaged below), disarmed
+    // when any target may wait indefinitely. Parenting on the engine's
+    // shutdown token lets `Engine::shutdown` stop the solve at its next
+    // checkpoint. The token only ever *stops* iteration — an uncancelled
+    // solve's arithmetic is untouched, so results stay byte-identical.
+    let job_deadline = if targets.iter().all(|t| t.deadline.is_some()) {
+        targets.iter().filter_map(|t| t.deadline).max()
+    } else {
+        None
+    };
+    let cancel = state.shutdown.child(job_deadline);
+
     let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // `engine.solve` failpoint: errors surface as solver failures,
+        // panics exercise the unwind path below.
+        fault::check(sites::ENGINE_SOLVE)?;
         m.time_hist("serve.solve_seconds", || {
             let _solve_span =
                 crate::obs::Span::start(crate::obs::names::ENGINE_SOLVE, solve_trace_id);
@@ -554,7 +814,8 @@ fn solve_job(
                 .regularizer(job.regularizer)
                 .ctx(ctx.clone())
                 .observer(hook.clone())
-                .trace_id(solve_trace_id);
+                .trace_id(solve_trace_id)
+                .cancel(cancel.clone());
             if let Some(x0) = x0 {
                 opts = opts.warm_start(x0.to_vec());
             }
@@ -566,6 +827,7 @@ fn solve_job(
         Ok(Err(e)) => {
             // Solver-side validation (e.g. a regularizer the method
             // can't run) answers every waiter with a structured error.
+            // Not a breaker event: it says nothing about the dataset.
             for t in targets {
                 t.respond(Err(RejectReason::Failed(e.clone())));
             }
@@ -574,22 +836,49 @@ fn solve_job(
         Err(panic) => {
             let what = panic_message(panic.as_ref());
             m.incr("serve.solve_panics", 1);
+            breaker_record(state, dataset_key, false);
             for t in targets {
                 t.respond(Err(RejectReason::Failed(err!("solver panicked: {what}"))));
             }
             return;
         }
     };
+    if result.stop == StopReason::Cancelled {
+        // The solver stopped at a checkpoint: either the job deadline
+        // passed mid-solve or the engine is shutting down. The iterate
+        // is discarded — no cache write, no breaker event (cancellation
+        // is the *caller's* doing, not the dataset's).
+        m.incr("serve.cancelled_midsolve", 1);
+        let now = Instant::now();
+        for t in targets {
+            let reason = if state.shutdown.is_cancelled() {
+                RejectReason::Shutdown
+            } else {
+                RejectReason::DeadlineExceeded { waited_s: t.waited_s(now) }
+            };
+            t.respond(Err(reason));
+        }
+        return;
+    }
     m.incr("serve.solves", 1);
-    // Feed the cache only while warm starts are on: with them disabled
-    // nothing ever reads the entries, so storing would just burn the
-    // byte budget on dead weight.
-    if state.cfg.warm_start {
-        state
-            .duals
-            .insert(&warm_key, job.gamma, job.rho, result.x.clone());
-        m.set_gauge("serve.warm_cache_bytes", state.duals.bytes() as f64);
-        m.set_gauge("serve.warm_cache_evictions", state.duals.evictions() as f64);
+    breaker_record(state, dataset_key, true);
+    // Feed the cache only while warm starts are on (with them disabled
+    // nothing ever reads the entries) and only from *converged* results:
+    // a max-iters iterate can sit far from the optimum, and seeding
+    // later solves from it would silently degrade warm-start quality.
+    // The insert runs in its own unwind guard with the `cache.insert`
+    // failpoint inside: cache trouble (injected or real) skips the
+    // insert but must never fail a request that already has its result.
+    if state.cfg.warm_start && result.stop.converged() {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if fault::check(sites::CACHE_INSERT).is_ok() {
+                state
+                    .duals
+                    .insert(&warm_key, job.gamma, job.rho, result.x.clone());
+                m.set_gauge("serve.warm_cache_bytes", state.duals.bytes() as f64);
+                m.set_gauge("serve.warm_cache_evictions", state.duals.evictions() as f64);
+            }
+        }));
     }
 
     let telemetry: Option<Arc<crate::obs::SolveReport>> =
@@ -768,12 +1057,109 @@ mod tests {
             RejectReason::QueueFull { capacity: 4 },
             RejectReason::DeadlineExceeded { waited_s: 0.25 },
             RejectReason::Shutdown,
+            RejectReason::Quarantined { retry_in_s: 1.5 },
+            RejectReason::Overloaded { estimated_wait_s: 0.75 },
             RejectReason::Failed(err!("boom")),
         ];
         let kinds: Vec<&str> = reasons.iter().map(RejectReason::kind).collect();
-        assert_eq!(kinds, vec!["queue_full", "deadline_exceeded", "shutdown", "failed"]);
+        assert_eq!(
+            kinds,
+            vec![
+                "queue_full",
+                "deadline_exceeded",
+                "shutdown",
+                "quarantined",
+                "overloaded",
+                "failed"
+            ]
+        );
         for r in &reasons {
             assert!(!r.to_string().is_empty());
         }
+    }
+
+    #[test]
+    fn breaker_state_machine_transitions() {
+        let t0 = Instant::now();
+        let cooldown = Duration::from_secs(5);
+        let mut b = Breaker::new();
+        // Closed admits; failures below the threshold stay closed.
+        assert!(b.admit(t0, cooldown).is_ok());
+        assert!(!b.record_failure(t0, 3, cooldown));
+        assert!(!b.record_failure(t0, 3, cooldown));
+        assert!(b.admit(t0, cooldown).is_ok());
+        // Third consecutive failure trips it open (returns true once).
+        assert!(b.record_failure(t0, 3, cooldown));
+        let retry = b.admit(t0 + Duration::from_secs(1), cooldown).unwrap_err();
+        assert!(retry > 0.0 && retry <= 5.0, "retry_in_s = {retry}");
+        // Cooldown expiry: first admit becomes the half-open probe,
+        // later arrivals stay quarantined while the probe is pending.
+        assert!(b.admit(t0 + Duration::from_secs(6), cooldown).is_ok());
+        assert!(matches!(b.state, BState::HalfOpen { .. }));
+        assert!(b.admit(t0 + Duration::from_secs(7), cooldown).is_err());
+        // A failed probe reopens immediately (another trip).
+        assert!(b.record_failure(t0 + Duration::from_secs(7), 3, cooldown));
+        assert!(b.admit(t0 + Duration::from_secs(8), cooldown).is_err());
+        // A successful probe closes and clears the run.
+        assert!(b.admit(t0 + Duration::from_secs(20), cooldown).is_ok());
+        b.record_success();
+        assert_eq!(b.state, BState::Closed);
+        assert_eq!(b.consecutive, 0);
+        assert!(b.admit(t0 + Duration::from_secs(21), cooldown).is_ok());
+    }
+
+    #[test]
+    fn breaker_quarantines_failing_dataset_key() {
+        let engine = tiny_engine(ServeConfig {
+            workers: 1,
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_secs(60),
+            ..Default::default()
+        });
+        let mut req = request(9, 1.0, 0.5);
+        req.spec.family = "nope".into();
+        // Build failures up to the threshold surface as `failed`.
+        for _ in 0..2 {
+            assert_eq!(engine.submit(req.clone()).unwrap_err().kind(), "failed");
+        }
+        // The tripped breaker now fast-fails the key at admission.
+        let err = engine.submit(req.clone()).unwrap_err();
+        assert_eq!(err.kind(), "quarantined");
+        assert!(err.to_string().contains("quarantined"), "{err}");
+        assert_eq!(engine.metrics().get("serve.breaker_trips"), 1);
+        assert_eq!(engine.metrics().get("serve.rejected_quarantined"), 1);
+        // Other dataset keys are unaffected.
+        assert!(engine.submit(request(1, 1.0, 0.5)).is_ok());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn breaker_half_open_probe_after_cooldown() {
+        let engine = tiny_engine(ServeConfig {
+            workers: 1,
+            breaker_threshold: 1,
+            breaker_cooldown: Duration::from_millis(20),
+            ..Default::default()
+        });
+        let mut req = request(11, 1.0, 0.5);
+        req.spec.family = "nope".into();
+        assert_eq!(engine.submit(req.clone()).unwrap_err().kind(), "failed"); // trips
+        assert_eq!(engine.submit(req.clone()).unwrap_err().kind(), "quarantined");
+        std::thread::sleep(Duration::from_millis(40));
+        // Cooldown over: the next request is the half-open probe and
+        // reaches the (still broken) build, which re-trips the breaker.
+        assert_eq!(engine.submit(req.clone()).unwrap_err().kind(), "failed");
+        assert_eq!(engine.submit(req.clone()).unwrap_err().kind(), "quarantined");
+        assert_eq!(engine.metrics().get("serve.breaker_trips"), 2);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shed_estimate_scales_with_depth_and_workers() {
+        assert_eq!(shed_wait_estimate(0, 4, 0.1), 0.0);
+        assert_eq!(shed_wait_estimate(8, 4, 0.1), 0.2);
+        assert_eq!(shed_wait_estimate(8, 0, 0.1), 0.8); // workers clamp to 1
+        // An empty queue never sheds, whatever the deadline.
+        assert!(shed_wait_estimate(0, 1, 100.0) <= 0.0);
     }
 }

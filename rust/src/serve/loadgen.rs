@@ -19,6 +19,7 @@ use crate::coordinator::config::{DatasetSpec, Method};
 use crate::ot::regularizer::RegKind;
 use crate::coordinator::metrics::Metrics;
 use crate::jsonlite::Value;
+use crate::rng::Pcg64;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -37,6 +38,13 @@ pub struct LoadScenario {
     pub regularizer: RegKind,
     /// Per-request deadline forwarded to the engine.
     pub deadline: Option<Duration>,
+    /// Seeded chaos mode (`None` = well-behaved clients). With a seed,
+    /// every third request per client is perturbed — a near-zero
+    /// deadline, an invalid γ, or a poisoned dataset family, chosen by
+    /// a PRNG derived from the seed — so rejections, mid-solve
+    /// cancellations and circuit-breaker quarantines are exercised
+    /// under real concurrency while staying reproducible.
+    pub chaos_seed: Option<u64>,
 }
 
 impl Default for LoadScenario {
@@ -50,6 +58,7 @@ impl Default for LoadScenario {
             method: Method::Fast,
             regularizer: RegKind::GroupLasso,
             deadline: None,
+            chaos_seed: None,
         }
     }
 }
@@ -73,6 +82,8 @@ pub struct LoadReport {
     pub ok: usize,
     pub rejected_queue_full: usize,
     pub rejected_deadline: usize,
+    pub rejected_quarantined: usize,
+    pub rejected_overloaded: usize,
     pub failed: usize,
     pub wall_s: f64,
     pub throughput_rps: f64,
@@ -99,6 +110,8 @@ impl LoadReport {
             .set("ok", self.ok)
             .set("rejected_queue_full", self.rejected_queue_full)
             .set("rejected_deadline", self.rejected_deadline)
+            .set("rejected_quarantined", self.rejected_quarantined)
+            .set("rejected_overloaded", self.rejected_overloaded)
             .set("failed", self.failed)
             .set("wall_s", self.wall_s)
             .set("throughput_rps", self.throughput_rps)
@@ -118,8 +131,14 @@ impl LoadReport {
     /// Human-readable multi-line summary.
     pub fn print_summary(&self) {
         println!(
-            "requests   : {} ok, {} queue-full, {} deadline, {} failed (of {})",
-            self.ok, self.rejected_queue_full, self.rejected_deadline, self.failed, self.requests
+            "requests   : {} ok, {} queue-full, {} deadline, {} quarantined, {} overloaded, {} failed (of {})",
+            self.ok,
+            self.rejected_queue_full,
+            self.rejected_deadline,
+            self.rejected_quarantined,
+            self.rejected_overloaded,
+            self.failed,
+            self.requests
         );
         println!("throughput : {:.2} req/s over {:.2}s", self.throughput_rps, self.wall_s);
         println!(
@@ -149,7 +168,8 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
 
     let latencies = Mutex::new(Vec::with_capacity(scenario.total_requests()));
     let queue_waits = Mutex::new(Vec::with_capacity(scenario.total_requests()));
-    let counts = Mutex::new([0usize; 4]); // ok, queue_full, deadline, failed
+    // ok, queue_full, deadline, quarantined, overloaded, failed
+    let counts = Mutex::new([0usize; 6]);
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for c in 0..scenario.clients {
@@ -160,7 +180,11 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
             s.spawn(move || {
                 let mut local_lat = Vec::with_capacity(scenario.requests_per_client());
                 let mut local_wait = Vec::with_capacity(scenario.requests_per_client());
-                let mut local = [0usize; 4];
+                let mut local = [0usize; 6];
+                let mut chaos = scenario
+                    .chaos_seed
+                    .map(|s| Pcg64::new(s ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+                let mut issued = 0usize;
                 // Offset each client's walk so concurrent clients mix
                 // distinct and identical keys deterministically.
                 let grid: Vec<(f64, f64)> = scenario
@@ -171,8 +195,7 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
                 for _cycle in 0..scenario.cycles {
                     for k in 0..grid.len() {
                         let (gamma, rho) = grid[(k + c) % grid.len()];
-                        let t = Instant::now();
-                        let out = engine.submit(SolveRequest {
+                        let mut request = SolveRequest {
                             spec: scenario.spec.clone(),
                             gamma,
                             rho,
@@ -180,7 +203,22 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
                             regularizer: scenario.regularizer,
                             deadline: scenario.deadline,
                             warm_start: true,
-                        });
+                        };
+                        // Chaos: perturb every third request on a fixed
+                        // cadence (so a run always disturbs something)
+                        // with a fault mode chosen by the seeded PRNG.
+                        if let Some(rng) = chaos.as_mut() {
+                            if issued % 3 == 0 {
+                                match (rng.uniform(0.0, 3.0)) as u32 {
+                                    0 => request.deadline = Some(Duration::from_nanos(1)),
+                                    1 => request.gamma = -1.0,
+                                    _ => request.spec.family = "chaos-poison".into(),
+                                }
+                            }
+                        }
+                        issued += 1;
+                        let t = Instant::now();
+                        let out = engine.submit(request);
                         // Rejections return in microseconds; only served
                         // requests count toward latency and throughput,
                         // otherwise shed load would flatter the numbers.
@@ -192,7 +230,9 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
                             }
                             Err(RejectReason::QueueFull { .. }) => 1,
                             Err(RejectReason::DeadlineExceeded { .. }) => 2,
-                            Err(_) => 3,
+                            Err(RejectReason::Quarantined { .. }) => 3,
+                            Err(RejectReason::Overloaded { .. }) => 4,
+                            Err(_) => 5,
                         };
                         local[slot] += 1;
                     }
@@ -227,7 +267,8 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
             percentile_sorted(&lats, p) * 1e3
         }
     };
-    let [ok, queue_full, deadline, failed] = counts.into_inner().unwrap();
+    let [ok, queue_full, deadline, quarantined, overloaded, failed] =
+        counts.into_inner().unwrap();
     let warm_hits = metrics.get("serve.warm_hits");
     let warm_misses = metrics.get("serve.warm_misses");
     let warm_total = warm_hits + warm_misses;
@@ -237,6 +278,8 @@ pub fn run_load(cfg: ServeConfig, scenario: &LoadScenario) -> LoadReport {
         ok,
         rejected_queue_full: queue_full,
         rejected_deadline: deadline,
+        rejected_quarantined: quarantined,
+        rejected_overloaded: overloaded,
         failed,
         wall_s,
         throughput_rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
@@ -274,7 +317,17 @@ mod tests {
             method: Method::Fast,
             regularizer: RegKind::GroupLasso,
             deadline: None,
+            chaos_seed: None,
         }
+    }
+
+    fn accounted(report: &LoadReport) -> usize {
+        report.ok
+            + report.rejected_queue_full
+            + report.rejected_deadline
+            + report.rejected_quarantined
+            + report.rejected_overloaded
+            + report.failed
     }
 
     #[test]
@@ -282,10 +335,7 @@ mod tests {
         let scenario = tiny_scenario();
         let report = run_load(ServeConfig { workers: 2, ..Default::default() }, &scenario);
         assert_eq!(report.requests, scenario.total_requests());
-        assert_eq!(
-            report.ok + report.rejected_queue_full + report.rejected_deadline + report.failed,
-            report.requests
-        );
+        assert_eq!(accounted(&report), report.requests);
         // Generous queue + no deadlines: everything succeeds.
         assert_eq!(report.ok, report.requests);
         // Repeated workload must warm-start.
@@ -302,5 +352,25 @@ mod tests {
         assert!(report.mean_queue_wait_ms >= 0.0);
         assert!(report.mean_solve_ms > 0.0, "no solve time: {report:?}");
         assert!(v.get("mean_solve_ms").is_some());
+    }
+
+    #[test]
+    fn chaos_mode_disturbs_but_accounts_for_every_request() {
+        let mut scenario = tiny_scenario();
+        scenario.chaos_seed = Some(7);
+        scenario.cycles = 4;
+        let report = run_load(ServeConfig { workers: 2, ..Default::default() }, &scenario);
+        assert_eq!(report.requests, scenario.total_requests());
+        // Every request — perturbed or not — lands in exactly one bucket.
+        assert_eq!(accounted(&report), report.requests);
+        // A third of requests are perturbed: at least one must have been
+        // rejected or failed, and the engine must keep serving the rest.
+        assert!(report.ok > 0, "chaos drowned every request: {report:?}");
+        assert!(report.ok < report.requests, "chaos had no effect: {report:?}");
+        // Perturbed requests never poison the report's JSON round-trip.
+        let v = report.to_json();
+        assert_eq!(v.get("failed").and_then(Value::as_usize), Some(report.failed));
+        assert!(v.get("rejected_quarantined").is_some());
+        assert!(v.get("rejected_overloaded").is_some());
     }
 }

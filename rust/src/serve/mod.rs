@@ -29,6 +29,14 @@
 //!
 //! [`loadgen`] adds the closed-loop load generator behind
 //! `grpot bench-serve` and `cargo bench --bench bench_serve`.
+//!
+//! On top of these the engine enforces deadlines *mid-solve* through
+//! cooperative [`crate::fault::CancelToken`]s (an admitted solve stops
+//! at the next iteration checkpoint once its deadline passes),
+//! quarantines persistently failing dataset keys behind a per-key
+//! circuit breaker ([`engine::RejectReason::Quarantined`]), and sheds
+//! load at admission when the estimated queue wait already exceeds a
+//! request's deadline ([`engine::RejectReason::Overloaded`]).
 
 pub mod batcher;
 pub mod cache;
@@ -80,6 +88,19 @@ pub struct ServeConfig {
     /// Core budget for the `workers × solve.threads` product;
     /// 0 = autodetect via `std::thread::available_parallelism`.
     pub core_budget: usize,
+    /// Circuit breaker: consecutive dataset-build/solve *infrastructure*
+    /// failures (errors or panics — not solver non-convergence) on one
+    /// dataset key before the key is quarantined. 0 disables the
+    /// breaker.
+    pub breaker_threshold: u32,
+    /// How long a tripped breaker fast-fails its key before letting one
+    /// half-open probe request through.
+    pub breaker_cooldown: Duration,
+    /// Overload load-shedding: reject at admission when the estimated
+    /// queue wait (queue depth / workers × mean solve seconds) already
+    /// exceeds a request's deadline — the solve could only ever be
+    /// triaged as expired after burning queue capacity.
+    pub shed: bool,
 }
 
 impl Default for ServeConfig {
@@ -95,6 +116,9 @@ impl Default for ServeConfig {
             warm_radius: 2.0,
             solve: SolveOptions::new(),
             core_budget: 0,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_secs(5),
+            shed: true,
         }
     }
 }
@@ -114,5 +138,8 @@ mod tests {
         assert_eq!(cfg.solve.threads, 1, "serving defaults to serial solves");
         assert_eq!(cfg.core_budget, 0, "core budget autodetects by default");
         assert_eq!(cfg.solve.regularizer, None, "requests pick the regularizer");
+        assert!(cfg.breaker_threshold >= 1, "breaker on by default");
+        assert!(cfg.breaker_cooldown > Duration::ZERO);
+        assert!(cfg.shed, "load shedding on by default");
     }
 }

@@ -121,6 +121,18 @@ impl Ticket {
     }
 }
 
+impl Drop for Ticket {
+    /// Never-hang backstop: a ticket dropped without a response (a
+    /// panicking code path between pop and respond) answers its
+    /// submitter with a structured failure. First-write-wins on the
+    /// slot makes this a no-op for every normally answered ticket.
+    fn drop(&mut self) {
+        self.slot.put(Err(RejectReason::Failed(crate::err!(
+            "ticket dropped without a response (internal fault)"
+        ))));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +183,23 @@ mod tests {
     fn ticket_precomputes_dataset_key() {
         let (t, _slot) = Ticket::new(request(None), None);
         assert_eq!(t.dataset_key, DatasetSpec::default().cache_key());
+    }
+
+    #[test]
+    fn dropped_ticket_answers_its_submitter() {
+        let (t, slot) = Ticket::new(request(None), None);
+        drop(t);
+        match slot.try_take() {
+            Some(Err(RejectReason::Failed(e))) => {
+                assert!(e.to_string().contains("dropped"), "{e}");
+            }
+            other => panic!("expected Failed backstop, got some={}", other.is_some()),
+        }
+        // An answered ticket's drop is a no-op (first write wins).
+        let (t, slot) = Ticket::new(request(None), None);
+        t.respond(Err(RejectReason::Shutdown));
+        drop(t);
+        assert!(matches!(slot.try_take(), Some(Err(RejectReason::Shutdown))));
     }
 
     #[test]

@@ -23,6 +23,32 @@ pub enum StopReason {
     /// The line search could not find an acceptable step (typically
     /// means we are at numerical convergence).
     LineSearchFailed,
+    /// A [`crate::fault::CancelToken`] fired (deadline or explicit
+    /// cancel); the iterate is valid but unconverged.
+    Cancelled,
+}
+
+impl StopReason {
+    /// Stable machine-readable label (telemetry, `SolveReport`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopReason::GradTol => "grad_tol",
+            StopReason::FTol => "ftol",
+            StopReason::MaxIters => "max_iters",
+            StopReason::LineSearchFailed => "line_search_failed",
+            StopReason::Cancelled => "cancelled",
+        }
+    }
+
+    /// Whether the stop indicates numerical convergence — the gate for
+    /// seeding the warm-start cache. `MaxIters` and `Cancelled` results
+    /// are valid iterates but must never seed other solves' caches.
+    pub fn converged(&self) -> bool {
+        matches!(
+            self,
+            StopReason::GradTol | StopReason::FTol | StopReason::LineSearchFailed
+        )
+    }
 }
 
 /// Outcome of one solver step.

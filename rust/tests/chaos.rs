@@ -1,0 +1,384 @@
+//! Chaos suite: deterministic fault injection against the full serving
+//! stack. Every test serializes on `FAULT_LOCK` — the failpoint
+//! registry is process-global, and a fault armed by one test must never
+//! leak into another's engine.
+//!
+//! The invariant under test is always the same: whatever is injected —
+//! panics, delays, structured errors, hostile wire input, shutdown
+//! mid-solve — every submitted request receives exactly one structured
+//! response and the engine keeps serving afterwards.
+
+use grpot::coordinator::config::{DatasetSpec, Method};
+use grpot::coordinator::metrics::Metrics;
+use grpot::coordinator::service::{serve_with, Client};
+use grpot::fault::{self, sites, Action};
+use grpot::jsonlite::Value;
+use grpot::ot::regularizer::RegKind;
+use grpot::ot::solve::SolveOptions;
+use grpot::serve::{Engine, RejectReason, ServeConfig, SolveRequest};
+use grpot::solvers::lbfgs::LbfgsOptions;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold the global fault lock for one test and guarantee the registry
+/// is empty again when the test ends, pass or fail.
+struct FaultGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn arm(specs: &[(&str, Action, u64)]) -> FaultGuard {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    let owned: Vec<(String, Action, u64)> =
+        specs.iter().map(|(s, a, n)| (s.to_string(), *a, *n)).collect();
+    fault::set_faults(&owned);
+    FaultGuard(guard)
+}
+
+fn tiny_spec(seed: u64) -> DatasetSpec {
+    DatasetSpec {
+        family: "synthetic".into(),
+        param1: 4,
+        param2: 5,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn request(seed: u64, gamma: f64, rho: f64) -> SolveRequest {
+    SolveRequest {
+        spec: tiny_spec(seed),
+        gamma,
+        rho,
+        method: Method::Fast,
+        regularizer: RegKind::GroupLasso,
+        deadline: None,
+        warm_start: true,
+    }
+}
+
+fn engine(cfg: ServeConfig) -> (Engine, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::new());
+    let engine = Engine::start(cfg, Arc::clone(&metrics));
+    (engine, metrics)
+}
+
+/// A deadline long enough to survive admission and dequeue triage but
+/// short against a solver whose every oracle evaluation sleeps 100 ms
+/// must cancel *mid-solve*: the request ends with a structured
+/// `DeadlineExceeded`, the mid-solve counter fires, and — the warm-start
+/// regression this PR fixes — the cancelled iterate never seeds the
+/// dual cache.
+#[test]
+fn midsolve_deadline_cancels_solve_and_skips_warm_cache() {
+    let _g = arm(&[(sites::ORACLE_EVAL, Action::Delay(100), 1)]);
+    let (engine, metrics) = engine(ServeConfig {
+        workers: 1,
+        solve: SolveOptions::new()
+            .lbfgs(LbfgsOptions { max_iters: 4000, ftol: 1e-13, gtol: 1e-8, ..Default::default() }),
+        ..Default::default()
+    });
+
+    let mut doomed = request(5, 0.8, 0.5);
+    doomed.deadline = Some(Duration::from_millis(150));
+    match engine.submit(doomed) {
+        Err(RejectReason::DeadlineExceeded { waited_s }) => {
+            assert!(waited_s > 0.0, "waited_s must be populated: {waited_s}");
+        }
+        other => panic!("expected mid-solve deadline expiry, got {:?}", other.map(|_| "ok")),
+    }
+    assert!(
+        metrics.get("serve.cancelled_midsolve") >= 1,
+        "the solve must stop at a cancellation checkpoint, not at triage"
+    );
+
+    // With the delay gone, the same key solves cold: the cancelled
+    // iterate must NOT have been cached (it never converged).
+    fault::clear();
+    let cold = engine.submit(request(5, 0.8, 0.5)).expect("post-chaos solve");
+    assert!(
+        !cold.warm_started,
+        "cancelled solve leaked a partial iterate into the warm-start cache"
+    );
+    // Sanity: the cache itself works — the next identical solve is warm.
+    let warm = engine.submit(request(5, 0.8, 0.5)).expect("warm solve");
+    assert!(warm.warm_started);
+    engine.shutdown();
+}
+
+/// Shutdown under load: one slow worker, several queued clients. Every
+/// submitter gets an answer — the in-flight solve stops at its next
+/// cancellation checkpoint, queued tickets fast-drain — and nobody
+/// hangs (the `thread::scope` join IS the assertion).
+#[test]
+fn shutdown_under_load_answers_every_ticket() {
+    let _g = arm(&[(sites::ORACLE_EVAL, Action::Delay(30), 1)]);
+    let (engine, metrics) = engine(ServeConfig {
+        workers: 1,
+        queue_capacity: 64,
+        ..Default::default()
+    });
+    let clients = 5;
+    let answered = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let engine = &engine;
+            let answered = &answered;
+            s.spawn(move || {
+                // Distinct γ per client so the batcher can't collapse
+                // the queue into one job.
+                match engine.submit(request(13, 0.2 + 0.1 * c as f64, 0.5)) {
+                    Ok(_) | Err(RejectReason::Shutdown) => {
+                        answered.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    }
+                    Err(other) => panic!("unexpected rejection during shutdown: {other}"),
+                }
+            });
+        }
+        // Let the first job get mid-solve and the rest queue up.
+        std::thread::sleep(Duration::from_millis(60));
+        engine.shutdown();
+    });
+    assert_eq!(answered.load(std::sync::atomic::Ordering::SeqCst), clients);
+    assert!(
+        metrics.get("serve.cancelled_midsolve") >= 1,
+        "shutdown must cancel the in-flight solve, not wait it out"
+    );
+}
+
+/// A solver that panics on every third solve degrades single requests,
+/// never the engine: panicked solves answer with structured errors,
+/// interleaved successes keep the dataset's breaker closed, and the
+/// worker pool keeps serving.
+#[test]
+fn periodic_solver_panics_degrade_requests_not_the_engine() {
+    let _g = arm(&[(sites::ENGINE_SOLVE, Action::Panic, 3)]);
+    let (engine, metrics) = engine(ServeConfig { workers: 1, ..Default::default() });
+    let mut outcomes = Vec::new();
+    for k in 0..9 {
+        outcomes.push(engine.submit(request(29, 0.2 + 0.1 * k as f64, 0.5)));
+    }
+    for (k, out) in outcomes.iter().enumerate() {
+        if (k + 1) % 3 == 0 {
+            match out {
+                Err(RejectReason::Failed(e)) => {
+                    assert!(e.to_string().contains("panicked"), "unexpected error: {e}");
+                }
+                _ => panic!("solve {} should have hit the panic failpoint", k + 1),
+            }
+        } else {
+            assert!(out.is_ok(), "solve {} should have succeeded", k + 1);
+        }
+    }
+    assert_eq!(metrics.get("serve.solve_panics"), 3);
+    // Non-consecutive failures never quarantine the key.
+    assert_eq!(metrics.get("serve.rejected_quarantined"), 0);
+    engine.shutdown();
+}
+
+/// An always-failing dataset build trips the per-key circuit breaker:
+/// after the threshold, requests fast-fail with `Quarantined` instead of
+/// burning a worker, and once the fault is gone a half-open probe closes
+/// the breaker again.
+#[test]
+fn breaker_quarantines_poisoned_dataset_then_recovers() {
+    let _g = arm(&[(sites::ENGINE_DATASET_BUILD, Action::Err, 1)]);
+    let (engine, metrics) = engine(ServeConfig {
+        workers: 1,
+        breaker_threshold: 2,
+        breaker_cooldown: Duration::from_millis(100),
+        ..Default::default()
+    });
+    // Two consecutive build failures reach the threshold…
+    for k in 0..2 {
+        match engine.submit(request(37, 0.3 + 0.1 * k as f64, 0.5)) {
+            Err(RejectReason::Failed(_)) => {}
+            other => panic!("build failpoint should fail request {k}: {:?}", other.map(|_| "ok")),
+        }
+    }
+    assert_eq!(metrics.get("serve.breaker_trips"), 1);
+    // …and the third request is rejected at admission without a build.
+    match engine.submit(request(37, 0.9, 0.5)) {
+        Err(RejectReason::Quarantined { retry_in_s }) => assert!(retry_in_s >= 0.0),
+        other => panic!("expected quarantine: {:?}", other.map(|_| "ok")),
+    }
+    assert!(metrics.get("serve.rejected_quarantined") >= 1);
+
+    // Heal the dataset, wait out the cooldown: the next request is the
+    // half-open probe, succeeds, and closes the breaker for good.
+    fault::clear();
+    std::thread::sleep(Duration::from_millis(150));
+    engine.submit(request(37, 0.9, 0.5)).expect("half-open probe must be admitted");
+    engine.submit(request(37, 1.1, 0.5)).expect("breaker must be closed after the probe");
+    engine.shutdown();
+}
+
+/// With history showing ~300 ms solves and a worker already busy, a
+/// request with a millisecond deadline is shed at admission — a
+/// structured `Overloaded`, not a queued ticket doomed to expire.
+#[test]
+fn overload_sheds_requests_that_cannot_meet_their_deadline() {
+    let _g = arm(&[(sites::ORACLE_EVAL, Action::Delay(50), 1)]);
+    let (engine, metrics) = engine(ServeConfig {
+        workers: 1,
+        // Cap iterations so delayed solves finish in ~300 ms and the
+        // solve-time histogram gets a real observation.
+        solve: SolveOptions::new()
+            .lbfgs(LbfgsOptions { max_iters: 6, ..Default::default() }),
+        ..Default::default()
+    });
+    // Seed the histogram: one completed (capped) solve.
+    engine.submit(request(43, 0.3, 0.5)).expect("seed solve");
+
+    std::thread::scope(|s| {
+        let a = s.spawn(|| engine.submit(request(43, 0.5, 0.5)));
+        // Wait until A is in the worker, then queue B behind it.
+        std::thread::sleep(Duration::from_millis(30));
+        let b = s.spawn(|| engine.submit(request(43, 0.7, 0.5)));
+        let t0 = Instant::now();
+        while engine.queue_depth() == 0 && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(engine.queue_depth() >= 1, "ticket B never queued");
+
+        // C cannot meet a 1 ms deadline behind a ~300 ms queue: shed.
+        let mut c = request(43, 0.9, 0.5);
+        c.deadline = Some(Duration::from_millis(1));
+        match engine.submit(c) {
+            Err(RejectReason::Overloaded { estimated_wait_s }) => {
+                assert!(estimated_wait_s > 0.001, "estimate too small: {estimated_wait_s}");
+            }
+            other => panic!("expected load shed: {:?}", other.map(|_| "ok")),
+        }
+        a.join().unwrap().expect("A must complete");
+        b.join().unwrap().expect("B must complete");
+    });
+    assert!(metrics.get("serve.rejected_overloaded") >= 1);
+    engine.shutdown();
+}
+
+/// Survivability sweep: every registered failpoint site × every action,
+/// firing on every hit. Whatever fires, each submit produces exactly one
+/// outcome (a reply, a structured rejection, or — only at the admission
+/// site — a propagated panic, which is that site's documented contract)
+/// and the engine shuts down cleanly afterwards.
+#[test]
+fn every_site_and_action_leaves_the_engine_answering() {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    let _cleanup = FaultGuard(guard);
+    for site in sites::ALL {
+        for action in [Action::Panic, Action::Err, Action::Delay(1)] {
+            fault::set_faults(&[(site.to_string(), action, 1)]);
+            let (engine, _metrics) = engine(ServeConfig { workers: 1, ..Default::default() });
+            for k in 0..2u64 {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    engine.submit(request(100 + k, 0.4 + 0.2 * k as f64, 0.5))
+                }));
+                match out {
+                    Ok(_reply_or_reject) => {}
+                    Err(_) => assert!(
+                        site == sites::QUEUE_ADMIT && action == Action::Panic,
+                        "only queue.admit:panic may unwind into the submitter \
+                         (got a panic from {site}:{action:?})"
+                    ),
+                }
+            }
+            fault::clear();
+            // Post-chaos: the same engine must still serve.
+            engine
+                .submit(request(200, 1.0, 0.5))
+                .unwrap_or_else(|e| panic!("engine dead after {site}:{action:?}: {e}"));
+            engine.shutdown();
+        }
+    }
+}
+
+/// Wire-level chaos: garbage bytes, malformed/hostile fields, and
+/// mid-stream disconnects must each produce a structured error (or a
+/// dropped connection) without taking the service down.
+#[test]
+fn wire_protocol_survives_garbage_and_hostile_requests() {
+    let _g = arm(&[]); // no faults; lock still serializes the suite
+    let handle = serve_with(
+        "127.0.0.1:0",
+        ServeConfig { workers: 1, ..Default::default() },
+    )
+    .expect("bind");
+
+    // Raw garbage on the socket: the connection may answer with an
+    // error object or drop — either way the listener survives.
+    {
+        let mut raw = TcpStream::connect(handle.addr).expect("connect raw");
+        raw.write_all(b"this is not json\n").expect("write garbage");
+        let mut line = String::new();
+        let _ = BufReader::new(raw).read_line(&mut line);
+        if !line.is_empty() {
+            let v = grpot::jsonlite::parse(line.trim()).expect("error reply must be JSON");
+            assert_eq!(v.get("ok").and_then(Value::as_bool), Some(false), "{v}");
+        }
+    }
+    // Mid-stream disconnect: a half-written request then a vanishing
+    // client must not wedge the per-connection reader.
+    {
+        let mut raw = TcpStream::connect(handle.addr).expect("connect raw");
+        raw.write_all(b"{\"op\":").expect("write partial");
+    }
+
+    let mut c = Client::connect(&handle.addr).expect("connect client");
+    let base = || {
+        Value::obj()
+            .set("op", "solve")
+            .set(
+                "dataset",
+                Value::obj()
+                    .set("family", "synthetic")
+                    .set("param1", 4usize)
+                    .set("param2", 5usize)
+                    .set("seed", 51usize),
+            )
+            .set("gamma", 0.5)
+            .set("rho", 0.5)
+            .set("method", "fast")
+    };
+    let expect_rejected = |c: &mut Client, req: Value, what: &str| {
+        let resp = c.call(&req).unwrap_or_else(|e| panic!("{what}: transport died: {e}"));
+        assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(false), "{what}: {resp}");
+        assert!(resp.get("error").is_some(), "{what}: missing error field: {resp}");
+    };
+    expect_rejected(&mut c, base().set("regularizer", "bogus"), "unknown regularizer");
+    expect_rejected(
+        &mut c,
+        base().set(
+            "dataset",
+            Value::obj().set("family", "synthetic").set("param1", 10_000_000usize),
+        ),
+        "oversized dataset params",
+    );
+    expect_rejected(
+        &mut c,
+        base().set(
+            "dataset",
+            Value::obj().set("family", "faces").set("scale", -1.0),
+        ),
+        "negative dataset scale",
+    );
+    expect_rejected(
+        &mut c,
+        base().set(
+            "dataset",
+            Value::obj().set("family", "synthetic").set("seed", -3.0),
+        ),
+        "negative dataset seed",
+    );
+    // After all of it, an honest request still solves.
+    let good = c.call(&base()).expect("solve");
+    assert_eq!(good.get("ok").and_then(Value::as_bool), Some(true), "{good}");
+    handle.shutdown();
+}

@@ -17,7 +17,7 @@
 # whose rows now carry the skipped-group-fraction telemetry column,
 #
 # then collects every CSV the benches emitted into one machine-readable
-# JSON file (default: BENCH_PR7.json at the repo root; override with
+# JSON file (default: BENCH_PR8.json at the repo root; override with
 # GRPOT_BENCH_JSON). The JSON records the mode, so a smoke-mode CI run
 # is never mistaken for a real measurement.
 #
@@ -29,7 +29,7 @@ set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
 
-OUT="${GRPOT_BENCH_JSON:-$ROOT/BENCH_PR7.json}"
+OUT="${GRPOT_BENCH_JSON:-$ROOT/BENCH_PR8.json}"
 REPORT_DIR="${GRPOT_REPORT_DIR:-$ROOT/rust/reports}"
 export GRPOT_REPORT_DIR="$REPORT_DIR"
 

@@ -25,13 +25,20 @@
 #      observability suite re-run with tracing fully on, gating the
 #      zero-perturbation contract (spans and telemetry never change
 #      solver output) under the most intrusive trace mode
-#   9. cargo build --release --features xla   (in-tree stub must keep compiling)
-#  10. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
+#   9. chaos shard: the chaos suite (fault injection at every failpoint
+#      site, mid-solve cancellation, circuit breaking, load shedding,
+#      hostile wire input), the bit-exactness suites re-run with the
+#      fault registry explicitly empty (GRPOT_FAULTS=off — the disarmed
+#      fast path must never perturb solver output), and a grammar gate:
+#      a malformed GRPOT_FAULTS must fail `grpot info` at launch
+#  10. cargo build --release --features xla   (in-tree stub must keep compiling)
+#  11. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
 #      (includes bench_parallel, which asserts thread-count determinism,
 #      the fork-join-vs-persistent dispatch equivalence and the
 #      scalar-vs-SIMD kernel equivalence, and hotpath_microbench, which
-#      now reports per-regularizer trait-oracle rows)
-#  11. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf benches again
+#      now reports per-regularizer trait-oracle rows and the
+#      cancellation-token overhead pair)
+#  12. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf benches again
 #      through the bench.sh wrapper, checking the machine-readable
 #      bench JSON emission end to end (written to a temp file so a
 #      smoke run never clobbers real recorded numbers)
@@ -93,6 +100,20 @@ GRPOT_TRACE=full cargo test -q \
     --test parallel_determinism \
     --test simd_equivalence \
     --test observability
+
+step "cargo test -q (chaos shard: fault injection + cancellation + breaker)"
+cargo test -q --test chaos
+# Bit-exactness with the fault registry explicitly disarmed: the
+# single-load fast path in fault::check must never perturb the math.
+GRPOT_FAULTS=off cargo test -q \
+    --test theorem2_equivalence \
+    --test simd_equivalence
+# A malformed GRPOT_FAULTS is a launch error (exit 2), never a late
+# per-request surprise inside a worker.
+if GRPOT_FAULTS="bogus.site:panic:every-1" ./target/release/grpot info >/dev/null 2>&1; then
+    echo "GRPOT_FAULTS grammar gate failed: malformed spec was accepted"
+    exit 1
+fi
 
 step "cargo build --release --features xla (offline stub)"
 cargo build --release --features xla
