@@ -1,0 +1,160 @@
+//! Cost-backend memory scaling: the factored backend's reason to exist.
+//!
+//! Sweeps problem sizes and reports, per size, the resident bytes of
+//! the dense cost representation (the n×m matrix — doubled again by the
+//! SIMD tile pack on the vector path) against the factored
+//! representation (coordinates + squared norms, O((m+n)·d)), then runs
+//! the headline experiment: the largest size is solved **factored only**
+//! under a memory budget the dense backend provably cannot satisfy. In
+//! full mode the headline problem has n·m ≥ 10⁸ cost entries (m = n =
+//! 10⁴: a 1.6 GB dense footprint with the pack, ~0.5 MB factored)
+//! against a 256 MiB budget; quick and smoke modes scale the sizes and
+//! the budget down but keep every relational assertion.
+//!
+//! At the smallest size of each sweep, both backends are built and
+//! solved and the results asserted byte-equal — the integration-level
+//! mirror of `tests/cost_equivalence.rs`, so the speed/memory rows and
+//! the equivalence guarantee come from the same binary.
+
+mod common;
+
+use common::*;
+use grpot::benchlib::{report_dir, Table, Timer};
+use grpot::data::synthetic;
+use grpot::ot::cost::CostMode;
+use grpot::ot::dual::OtProblem;
+use grpot::ot::fastot::{solve_fast_ot, FastOtConfig, FastOtResult};
+use grpot::simd::SimdMode;
+use grpot::solvers::lbfgs::LbfgsOptions;
+
+fn solve(prob: &OtProblem) -> FastOtResult {
+    let cfg = FastOtConfig {
+        gamma: 0.5,
+        rho: 0.6,
+        threads: size3(2, 4, 4),
+        simd: SimdMode::Auto,
+        lbfgs: LbfgsOptions { max_iters: size3(5, 10, 15), ..Default::default() },
+        ..Default::default()
+    };
+    solve_fast_ot(prob, &cfg)
+}
+
+/// Resident bytes of the dense backend at a given shape: the n×m
+/// matrix, plus the packed-tile copy the vector dispatch builds on
+/// first use. Computed analytically so the sweep can report sizes this
+/// machine could never materialize; validated against a real build at
+/// the smallest size.
+fn dense_resident_bytes(m: usize, n: usize) -> u128 {
+    2 * 8 * m as u128 * n as u128
+}
+
+fn human(bytes: u128) -> String {
+    if bytes >= 1 << 30 {
+        format!("{:.2} GiB", bytes as f64 / (1u64 << 30) as f64)
+    } else if bytes >= 1 << 20 {
+        format!("{:.2} MiB", bytes as f64 / (1u64 << 20) as f64)
+    } else {
+        format!("{:.1} KiB", bytes as f64 / 1024.0)
+    }
+}
+
+fn main() {
+    banner("cost-backend memory scaling");
+    // (|L|, g) per sweep point; m = n = |L|·g, d = 2. The last entry is
+    // the headline size: full mode m = n = 10⁴ ⇒ n·m = 10⁸.
+    let sizes: Vec<(usize, usize)> = size3(
+        vec![(4, 10), (8, 15), (24, 10)],
+        vec![(10, 10), (25, 20), (50, 40)],
+        vec![(25, 40), (50, 100), (100, 100)],
+    );
+    // The budget the headline solve must fit under — and the dense
+    // backend must not.
+    let budget: u128 = size3(256 << 10, 16 << 20, 256 << 20);
+
+    let mut table = Table::new(
+        "cost-backend memory scaling",
+        &["m", "n", "entries", "dense_bytes", "factored_bytes", "ratio", "t_factored[s]", "tiles_built"],
+    );
+    let mut headline: Option<(OtProblem, u128)> = None;
+    for (idx, &(l, g)) in sizes.iter().enumerate() {
+        let pair = synthetic::controlled(l, g, 0x5CA1E + idx as u64);
+        let timer = Timer::start();
+        let fact = OtProblem::try_from_dataset_mode(&pair, CostMode::Factored)
+            .expect("factored build");
+        let build_s = timer.elapsed_s();
+        let (m, n) = (fact.m(), fact.n());
+        let dense_bytes = dense_resident_bytes(m, n);
+        let fact_bytes = fact.cost_bytes() as u128;
+        assert!(
+            fact_bytes < dense_bytes,
+            "factored must be resident-smaller at every size"
+        );
+
+        if idx == 0 {
+            // Ground the analytic dense figure and the equivalence claim
+            // on a real dense build at the one size where that is cheap.
+            let dense = OtProblem::try_from_dataset_mode(&pair, CostMode::Dense)
+                .expect("dense build");
+            assert_eq!(dense.cost_bytes() as u128 * 2, dense_bytes, "analytic model drifted");
+            let rd = solve(&dense);
+            let rf = solve(&fact);
+            assert_eq!(rd.x, rf.x, "backends diverged on the smallest sweep size");
+            assert_eq!(rd.dual_objective, rf.dual_objective);
+            println!("equivalence check at m={m} n={n}: ok");
+        }
+
+        let timer = Timer::start();
+        let res = solve(&fact);
+        let solve_s = timer.elapsed_s();
+        assert!(res.dual_objective.is_finite());
+        println!(
+            "m={m:>6} n={n:>6} dense={:>10} factored={:>9} ratio={:>8.0}x build={build_s:.3}s \
+             solve={solve_s:.3}s tiles_built={}",
+            human(dense_bytes),
+            human(fact_bytes),
+            dense_bytes as f64 / fact_bytes as f64,
+            res.stats.tiles_built,
+        );
+        table.row(vec![
+            format!("{m}"),
+            format!("{n}"),
+            format!("{}", m as u128 * n as u128),
+            format!("{dense_bytes}"),
+            format!("{fact_bytes}"),
+            format!("{:.0}", dense_bytes as f64 / fact_bytes as f64),
+            format!("{solve_s:.4}"),
+            format!("{}", res.stats.tiles_built),
+        ]);
+        if idx == sizes.len() - 1 {
+            headline = Some((fact, dense_bytes));
+        }
+    }
+
+    // The headline claim: at the largest size the dense representation
+    // busts the budget while the factored problem — already built and
+    // solved above — fits with room to spare.
+    let (fact, dense_bytes) = headline.expect("non-empty sweep");
+    let entries = fact.m() as u128 * fact.n() as u128;
+    assert!(
+        dense_bytes > budget,
+        "dense {} must exceed the {} budget",
+        human(dense_bytes),
+        human(budget)
+    );
+    assert!(
+        (fact.cost_bytes() as u128) < budget,
+        "factored {} must fit the {} budget",
+        human(fact.cost_bytes() as u128),
+        human(budget)
+    );
+    if !grpot::benchlib::smoke_mode() && !grpot::benchlib::quick_mode() {
+        assert!(entries >= 100_000_000, "full-mode headline must reach n·m ≥ 10⁸");
+    }
+    println!(
+        "headline: n·m = {entries} cost entries solved factored under a {} budget \
+         (dense would need {})",
+        human(budget),
+        human(dense_bytes),
+    );
+    table.emit(&report_dir(), "bench_scale");
+}

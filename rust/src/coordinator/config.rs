@@ -3,6 +3,7 @@
 use crate::err;
 use crate::error::{Context, Result};
 use crate::jsonlite::{self, Value};
+use crate::ot::cost::CostMode;
 use crate::ot::regularizer::RegKind;
 use crate::ot::solve::SolveOptions;
 use crate::simd::SimdMode;
@@ -79,6 +80,13 @@ pub struct DatasetSpec {
     /// faces/objects: domain-size scale in (0, 1].
     pub scale: f64,
     pub seed: u64,
+    /// Cost-matrix backend for the problem built from this spec.
+    /// `Auto` (the default) defers to the serving/sweep config's
+    /// solve-level selection; an explicit request-level mode wins.
+    /// Both backends solve byte-identically — the choice only moves
+    /// the memory/latency trade-off — but they cache differently, so
+    /// the mode is part of [`DatasetSpec::cache_key`].
+    pub cost: CostMode,
 }
 
 impl Default for DatasetSpec {
@@ -89,6 +97,7 @@ impl Default for DatasetSpec {
             param2: 10,
             scale: 0.1,
             seed: 0xDA7A,
+            cost: CostMode::Auto,
         }
     }
 }
@@ -99,9 +108,24 @@ impl DatasetSpec {
     /// warm-start caches and by the micro-batcher's coalescing rule.
     pub fn cache_key(&self) -> String {
         format!(
-            "{}:{}:{}:{}:{}",
-            self.family, self.param1, self.param2, self.scale, self.seed
+            "{}:{}:{}:{}:{}:{}",
+            self.family,
+            self.param1,
+            self.param2,
+            self.scale,
+            self.seed,
+            self.cost.name()
         )
+    }
+
+    /// The cost backend this spec's problem should be built with:
+    /// request-level selection when explicit, else the engine/sweep
+    /// `fallback` (typically `SolveOptions::cost`).
+    pub fn effective_cost(&self, fallback: CostMode) -> CostMode {
+        match self.cost {
+            CostMode::Auto => fallback,
+            explicit => explicit,
+        }
     }
 }
 
@@ -156,6 +180,9 @@ impl SweepConfig {
             if let Some(x) = ds.get("seed").and_then(Value::as_f64) {
                 cfg.dataset.seed = x as u64;
             }
+            if let Some(c) = ds.get("cost") {
+                cfg.dataset.cost = parse_cost_value(c)?;
+            }
         }
         if let Some(g) = v.get("gammas") {
             cfg.gammas = g.as_f64_vec().ok_or_else(|| err!("gammas must be numbers"))?;
@@ -191,6 +218,9 @@ impl SweepConfig {
             let s = s.as_str().ok_or_else(|| err!("simd must be a string"))?;
             cfg.solve.simd = SimdMode::parse(s).map_err(|e| err!("simd: {e}"))?;
         }
+        if let Some(c) = v.get("cost") {
+            cfg.solve.cost = parse_cost_value(c)?;
+        }
         Ok(cfg)
     }
 
@@ -212,7 +242,8 @@ impl SweepConfig {
                     .set("param1", self.dataset.param1)
                     .set("param2", self.dataset.param2)
                     .set("scale", self.dataset.scale)
-                    .set("seed", self.dataset.seed),
+                    .set("seed", self.dataset.seed)
+                    .set("cost", self.dataset.cost.name()),
             )
             .set("gammas", self.gammas.as_slice())
             .set("rhos", self.rhos.as_slice())
@@ -235,7 +266,21 @@ impl SweepConfig {
                     .name(),
             )
             .set("simd", self.solve.simd.name())
+            .set("cost", self.solve.cost.name())
     }
+}
+
+/// Parse a cost-mode JSON value: either a bare string (`"factored"`) or
+/// the wire protocol's object form (`{"mode": "factored"}`).
+pub(crate) fn parse_cost_value(v: &Value) -> Result<CostMode> {
+    let s = match v.as_str() {
+        Some(s) => s,
+        None => v
+            .get("mode")
+            .and_then(Value::as_str)
+            .ok_or_else(|| err!("cost must be a string or {{\"mode\": ...}} object"))?,
+    };
+    CostMode::parse(s)
 }
 
 #[cfg(test)]
@@ -269,6 +314,7 @@ mod tests {
                 param2: 300,
                 scale: 1.0,
                 seed: 7,
+                cost: CostMode::Factored,
             },
         };
         let json = cfg.to_json().to_json();
@@ -310,6 +356,28 @@ mod tests {
         assert_eq!(a.cache_key(), b.cache_key());
         b.seed += 1;
         assert_ne!(a.cache_key(), b.cache_key());
+        let mut c = a.clone();
+        c.cost = CostMode::Factored;
+        assert_ne!(a.cache_key(), c.cache_key());
+    }
+
+    #[test]
+    fn cost_value_parses_string_and_wire_object() {
+        let s = crate::jsonlite::parse(r#""factored""#).unwrap();
+        assert_eq!(parse_cost_value(&s).unwrap(), CostMode::Factored);
+        let o = crate::jsonlite::parse(r#"{"mode": "dense"}"#).unwrap();
+        assert_eq!(parse_cost_value(&o).unwrap(), CostMode::Dense);
+        let bad = crate::jsonlite::parse(r#"{"mode": "ram-doubler"}"#).unwrap();
+        assert!(parse_cost_value(&bad).is_err());
+        assert!(parse_cost_value(&crate::jsonlite::parse("3").unwrap()).is_err());
+    }
+
+    #[test]
+    fn effective_cost_prefers_explicit_spec() {
+        let mut spec = DatasetSpec::default();
+        assert_eq!(spec.effective_cost(CostMode::Factored), CostMode::Factored);
+        spec.cost = CostMode::Dense;
+        assert_eq!(spec.effective_cost(CostMode::Factored), CostMode::Dense);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //! {"op": "metrics_prom"}
 //! {"op": "trace"}
 //! {"op": "solve", "dataset": {"family": "synthetic", "param1": 10,
-//!   "param2": 10, "seed": 1}, "gamma": 1.0, "rho": 0.5, "method": "fast",
+//!   "param2": 10, "seed": 1, "cost": {"mode": "factored"}},
+//!   "gamma": 1.0, "rho": 0.5, "method": "fast",
 //!   "regularizer": "group_lasso", "deadline_ms": 2000, "warm_start": true,
 //!   "telemetry": true}
 //! {"op": "shutdown"}
@@ -19,6 +20,13 @@
 //! `regularizer` is optional (`group_lasso` | `squared_l2` |
 //! `negentropy`); requests that omit it use the engine's configured
 //! default. Unknown values get a structured rejection, never a panic.
+//!
+//! `dataset.cost` is optional — either a bare string or
+//! `{"mode": "dense" | "factored"}` — and selects the cost-matrix
+//! backend for that dataset's cached problem; omitted (or `"auto"`)
+//! defers to the engine's configured default. Both backends return
+//! byte-identical solver results; the factored backend holds
+//! coordinates + norms instead of the m×n matrix.
 //!
 //! Responses: `{"ok": true, …}` or `{"ok": false, "error": "…"}`; engine
 //! rejections additionally carry a machine-readable `"error_kind"`
@@ -228,6 +236,9 @@ fn parse_dataset(v: &Value) -> Result<DatasetSpec> {
             return Err(err!("dataset seed must be a finite nonnegative number (got {x})"));
         }
         spec.seed = x as u64;
+    }
+    if let Some(c) = d.get("cost") {
+        spec.cost = super::config::parse_cost_value(c)?;
     }
     Ok(spec)
 }

@@ -300,6 +300,11 @@ pub fn solve_full_warm_ctx_simd(
 /// Solve one (method, γ, ρ) job under `opts` and fold the result into a
 /// [`SweepRecord`] — the sweep loop's per-job entry.
 pub fn run_job_opts(prob: &OtProblem, method: Method, opts: &SolveOptions) -> Result<SweepRecord> {
+    // `sweep.job` failpoint: chaos tests inject per-job failures here so
+    // the coordinator's surfacing path (structured error out of the
+    // grid, never a dead worker) stays covered. A panic action unwinds
+    // through the job pool exactly like a real solver bug would.
+    crate::fault::check(crate::fault::sites::SWEEP_JOB)?;
     let res = solve(prob, method, opts)?;
     Ok(SweepRecord {
         method,
@@ -401,7 +406,13 @@ pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
         m.ensure_available()?;
     }
     let pair = build_pair(&cfg.dataset)?;
-    let prob = Arc::new(OtProblem::from_dataset(&pair));
+    // The dataset-level cost selection wins over the solve-level one
+    // (same precedence as the serving engine); both backends produce
+    // byte-identical records, so this only moves the memory footprint.
+    let prob = Arc::new(OtProblem::try_from_dataset_mode(
+        &pair,
+        cfg.dataset.effective_cost(cfg.solve.cost),
+    )?);
     let jobs: Vec<(Method, f64, f64)> = cfg
         .methods
         .iter()
@@ -611,6 +622,23 @@ mod tests {
             assert_eq!(s.iterations, t.iterations);
             assert_eq!(s.grads_computed, t.grads_computed);
             assert_eq!(s.grads_skipped, t.grads_skipped);
+        }
+    }
+
+    #[test]
+    fn factored_cost_sweep_matches_dense_records() {
+        let metrics = Metrics::new();
+        let dense = run_sweep(&tiny_cfg(1), &metrics).unwrap();
+        let mut cfg = tiny_cfg(1);
+        cfg.dataset.cost = crate::ot::cost::CostMode::Factored;
+        let factored = run_sweep(&cfg, &metrics).unwrap();
+        assert_eq!(dense.records.len(), factored.records.len());
+        for (d, f) in dense.records.iter().zip(&factored.records) {
+            assert_eq!(d.method, f.method);
+            assert_eq!(d.dual_objective.to_bits(), f.dual_objective.to_bits());
+            assert_eq!(d.iterations, f.iterations);
+            assert_eq!(d.grads_computed, f.grads_computed);
+            assert_eq!(d.grads_skipped, f.grads_skipped);
         }
     }
 

@@ -178,15 +178,18 @@ pub mod sites {
     pub const CACHE_INSERT: &str = "cache.insert";
     /// Per-iteration oracle evaluation in the solver drivers.
     pub const ORACLE_EVAL: &str = "oracle.eval";
+    /// Sweep-coordinator per-job execution (`sweep::run_job_opts`).
+    pub const SWEEP_JOB: &str = "sweep.job";
 
     /// Every registered site (docs, CLI `info`, chaos sweeps).
-    pub const ALL: [&str; 6] = [
+    pub const ALL: [&str; 7] = [
         QUEUE_ADMIT,
         BATCHER_FLUSH,
         ENGINE_DATASET_BUILD,
         ENGINE_SOLVE,
         CACHE_INSERT,
         ORACLE_EVAL,
+        SWEEP_JOB,
     ];
 }
 

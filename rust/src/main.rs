@@ -17,6 +17,7 @@ use grpot::coordinator::metrics::Metrics;
 use grpot::coordinator::{registry, service, sweep};
 use grpot::error::{Context, Result};
 use grpot::jsonlite::Value;
+use grpot::ot::cost::CostMode;
 use grpot::ot::dual::{DualParams, OtProblem};
 use grpot::ot::plan::recover_plan;
 use grpot::ot::regularizer::{recover_plan_reg, AnyRegularizer, RegKind};
@@ -41,6 +42,10 @@ fn app() -> App {
                     .default("0.1"),
             )
             .arg(ArgSpec::opt("seed", "dataset generation seed").default("55930"))
+            .arg(ArgSpec::opt(
+                "cost",
+                "cost-matrix backend: dense|factored (default: $GRPOT_COST or dense)",
+            ))
     };
     let engine_args = |a: App| -> App {
         a.arg(ArgSpec::opt("workers", "solver worker threads").default("4"))
@@ -143,6 +148,11 @@ fn app() -> App {
         App::new("serve", "start the TCP OT service")
             .arg(ArgSpec::opt("bind", "listen address").default("127.0.0.1:7677"))
             .arg(ArgSpec::opt(
+                "cost",
+                "cost-matrix backend for cached problems: dense|factored \
+                 (default: $GRPOT_COST or dense; requests may override per dataset)",
+            ))
+            .arg(ArgSpec::opt(
                 "trace-out",
                 "write Chrome trace-event JSON here on shutdown (needs GRPOT_TRACE)",
             )),
@@ -177,6 +187,15 @@ fn app() -> App {
     .subcommand(App::new("info", "print build and runtime information"))
 }
 
+fn cost_mode(m: &grpot::cli::Matches) -> Result<CostMode, grpot::cli::CliError> {
+    match m.get("cost") {
+        Some(s) => {
+            CostMode::parse(s).map_err(|e| grpot::cli::CliError(format!("--cost: {e}")))
+        }
+        None => Ok(CostMode::Auto),
+    }
+}
+
 fn dataset_spec(m: &grpot::cli::Matches) -> Result<DatasetSpec, grpot::cli::CliError> {
     Ok(DatasetSpec {
         family: m.get("dataset").unwrap_or("synthetic").to_string(),
@@ -184,6 +203,7 @@ fn dataset_spec(m: &grpot::cli::Matches) -> Result<DatasetSpec, grpot::cli::CliE
         param2: m.get_usize("param2")?,
         scale: m.get_f64("scale")?,
         seed: m.get_usize("seed")? as u64,
+        cost: cost_mode(m)?,
     })
 }
 
@@ -217,21 +237,25 @@ fn cmd_solve(m: &grpot::cli::Matches) -> Result<()> {
     let kind = opts.resolve_regularizer()?;
     eprintln!("dataset: {}", registry::describe(&spec));
     let pair = registry::build_pair(&spec)?;
-    let prob = OtProblem::from_dataset(&pair);
+    // An explicit --cost wins over GRPOT_COST (the Auto default defers
+    // to the env var); both backends solve byte-identically.
+    let prob = OtProblem::try_from_dataset_mode(&pair, spec.cost)?;
     eprintln!(
-        "problem: m={} n={} |L|={} threads={} simd={} reg={}",
+        "problem: m={} n={} |L|={} threads={} simd={} reg={} cost={}",
         prob.m(),
         prob.n(),
         prob.groups.num_groups(),
         threads.max(1),
         dispatch.name(),
-        kind.name()
+        kind.name(),
+        prob.cost_mode_name()
     );
     let res = sweep::solve(&prob, method, &opts)?;
     let mut out = Value::obj()
         .set("method", method.name())
         .set("threads", threads.max(1))
         .set("simd", dispatch.name())
+        .set("cost", prob.cost_mode_name())
         .set("regularizer", kind.name())
         .set("gamma", gamma)
         .set("rho", rho)
@@ -350,6 +374,7 @@ fn engine_config(m: &grpot::cli::Matches) -> Result<ServeConfig, grpot::cli::Cli
             .map_err(|e| grpot::cli::CliError(format!("--reg: {e}")))?;
         solve = solve.regularizer(kind);
     }
+    solve = solve.cost(cost_mode(m)?);
     Ok(ServeConfig {
         workers: m.get_usize("workers")?,
         core_budget: m.get_usize("core-budget")?,
@@ -584,6 +609,11 @@ fn cmd_info() -> Result<()> {
         std::env::var("GRPOT_REG").unwrap_or_else(|_| "unset".into())
     );
     println!(
+        "cost backends: dense, factored (default: {}, GRPOT_COST={})",
+        CostMode::env_default().map_or("invalid", |c| c.name()),
+        std::env::var("GRPOT_COST").unwrap_or_else(|_| "unset".into())
+    );
+    println!(
         "trace: {} (GRPOT_TRACE={}, ring capacity {} spans/thread)",
         grpot::obs::trace_mode().name(),
         std::env::var("GRPOT_TRACE").unwrap_or_else(|_| "unset".into()),
@@ -613,6 +643,14 @@ fn main() {
     if let Ok(v) = std::env::var("GRPOT_REG") {
         if let Err(e) = RegKind::parse(&v) {
             eprintln!("GRPOT_REG: {e}");
+            std::process::exit(2);
+        }
+    }
+    // And the cost backend: a malformed GRPOT_COST must fail at launch,
+    // not when the first problem is built deep inside a worker.
+    if let Ok(v) = std::env::var("GRPOT_COST") {
+        if let Err(e) = CostMode::parse(&v) {
+            eprintln!("GRPOT_COST: {e}");
             std::process::exit(2);
         }
     }

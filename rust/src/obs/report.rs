@@ -117,6 +117,13 @@ pub struct SolveReport {
     pub grads_skipped: u64,
     pub ub_checks: u64,
     pub ws_hits: u64,
+    /// Cost tiles synthesized on demand by the factored cost backend
+    /// (0 under a dense resident matrix). Screened-out groups never
+    /// synthesize a tile, so `tiles_built` under the fast solver drops
+    /// with the skip rate. Dispatch-dependent (scalar evaluates per
+    /// group segment, vector per tile-ring miss) — a throughput
+    /// diagnostic, not part of the bit-exact solver output.
+    pub tiles_built: u64,
     /// The paper's headline quantity: fraction of group gradients the
     /// screening bound skipped. Equals
     /// [`skipped_fraction`]`(grads_computed, grads_skipped)` over the
@@ -155,6 +162,7 @@ impl SolveReport {
             .set("grads_skipped", self.grads_skipped)
             .set("ub_checks", self.ub_checks)
             .set("ws_hits", self.ws_hits)
+            .set("tiles_built", self.tiles_built)
             .set("skipped_group_fraction", self.skipped_group_fraction)
             .set("simd_backend", self.simd_backend)
             .set("pool", self.pool.to_json())

@@ -1,0 +1,534 @@
+//! Cost-matrix backends: dense (resident `n×m` transposed matrix) and
+//! factored (coordinates + squared norms, cost synthesized on demand).
+//!
+//! The dense path stores every `c_ij` twice on the vector hot path (the
+//! transposed matrix plus the SIMD tile pack), which caps problem size
+//! at memory long before compute. The factored backend instead keeps
+//! only the point coordinates and their squared norms — O((m+n)·d)
+//! instead of O(m·n) — and synthesizes squared-ℓ2 cost values lazily
+//! via the expansion
+//!
+//! ```text
+//! ‖x − y‖² = ‖x‖² + ‖y‖² − 2⟨x, y⟩
+//! ```
+//!
+//! (the same identity [`crate::linalg::sq_euclidean_cost`] expands, as
+//! in fugw's `_low_rank_squared_l2`). Synthesis replays the dense
+//! construction pipeline operation-for-operation — same `dot`, same
+//! clamp at 0, same multiply by the precomputed `1/max` — so a
+//! synthesized value is **bitwise equal** to the corresponding entry of
+//! the dense matrix, and every solver path stays byte-identical across
+//! backends (`tests/cost_equivalence.rs`).
+//!
+//! On the vector path, synthesized (panel × group) tiles are cached in
+//! a small per-chunk [`TileRing`] in the exact `[i][lane]` layout of
+//! [`crate::ot::pack::PackedCost`], so the quad kernels consume a tile
+//! stream instead of a resident pack. Screened-out groups never enter
+//! the ring at all — screening skips the *cost computation*, not just
+//! the gradient, a multiplicative win the dense layout cannot get.
+
+use crate::err;
+use crate::error::Result;
+use crate::linalg::{self, Mat};
+use crate::simd::LANES;
+use std::collections::HashMap;
+use std::ops::Range;
+
+/// Which cost backend a problem build uses — the wire/CLI/config-level
+/// selector (`--cost`, the serve request's `"cost"` field, `GRPOT_COST`).
+/// Parsing mirrors [`crate::ot::regularizer::RegKind`]: unknown names
+/// are a structured error, never a panic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CostMode {
+    /// Defer to `GRPOT_COST` when set (a bad value is a structured
+    /// error), else [`CostMode::Dense`]. An explicit selection always
+    /// wins over the environment.
+    #[default]
+    Auto,
+    /// Materialize the full transposed cost matrix (the historical
+    /// behavior, byte-for-byte).
+    Dense,
+    /// Store coordinates + squared norms only; synthesize cost tiles on
+    /// demand. Requires point coordinates (squared-ℓ2 costs), so
+    /// explicit-cost constructors ([`crate::ot::dual::OtProblem::from_parts`])
+    /// always build dense.
+    Factored,
+}
+
+impl CostMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostMode::Auto => "auto",
+            CostMode::Dense => "dense",
+            CostMode::Factored => "factored",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CostMode> {
+        match s {
+            "auto" => Ok(CostMode::Auto),
+            "dense" => Ok(CostMode::Dense),
+            "factored" | "lowrank" | "low-rank" => Ok(CostMode::Factored),
+            other => Err(err!("unknown cost mode '{other}' (expected auto|dense|factored)")),
+        }
+    }
+
+    /// The concrete backend this mode selects: `Dense`/`Factored` pass
+    /// through; `Auto` consults `GRPOT_COST` (bad value = structured
+    /// error) and falls back to `Dense` when unset.
+    pub fn resolve(self) -> Result<CostMode> {
+        match self {
+            CostMode::Auto => match std::env::var("GRPOT_COST") {
+                Ok(s) => match CostMode::parse(&s)? {
+                    CostMode::Auto => Ok(CostMode::Dense),
+                    explicit => Ok(explicit),
+                },
+                Err(_) => Ok(CostMode::Dense),
+            },
+            explicit => Ok(explicit),
+        }
+    }
+
+    /// The environment-resolved default — what an unset selection uses.
+    /// The CLI validates this at launch (exit 2 on a malformed
+    /// `GRPOT_COST`) so background solves never trip over it mid-flight.
+    pub fn env_default() -> Result<CostMode> {
+        CostMode::Auto.resolve()
+    }
+}
+
+/// The factored squared-ℓ2 cost: grouped-order source coordinates,
+/// target coordinates, their squared norms, and the reciprocal of the
+/// dense pipeline's max-normalization constant. Total footprint
+/// O((m+n)·d) — independent of m·n.
+pub struct FactoredCost {
+    /// Source coordinates (`m×d`), rows already permuted into the
+    /// problem's sorted/grouped order.
+    xs: Mat,
+    /// Target coordinates (`n×d`).
+    xt: Mat,
+    /// `‖xs_i‖²` per source row (same 4-lane [`linalg::nrm2_sq`]
+    /// accumulation the dense pipeline uses).
+    xs_sq: Vec<f64>,
+    /// `‖xt_j‖²` per target row.
+    xt_sq: Vec<f64>,
+    /// `1 / max_ij c_ij` (1.0 when the max is 0) — the exact factor
+    /// [`linalg::normalize_by_max`] would have multiplied by.
+    inv_max: f64,
+}
+
+impl FactoredCost {
+    /// Build from grouped-order source rows and target rows. One
+    /// streaming O(m·n·d) pass finds the same max entry the dense
+    /// pipeline normalizes by (entries are already clamped ≥ 0, so the
+    /// running max equals `Mat::max_abs` of the materialized matrix) —
+    /// compute-heavy but memory-flat, and amortized over a whole solve.
+    pub(crate) fn build(xs: Mat, xt: Mat) -> FactoredCost {
+        assert_eq!(xs.cols(), xt.cols(), "feature dims differ");
+        let xs_sq: Vec<f64> = (0..xs.rows()).map(|i| linalg::nrm2_sq(xs.row(i))).collect();
+        let xt_sq: Vec<f64> = (0..xt.rows()).map(|j| linalg::nrm2_sq(xt.row(j))).collect();
+        let mut max = 0.0f64;
+        for i in 0..xs.rows() {
+            let xi = xs.row(i);
+            for j in 0..xt.rows() {
+                let v = (xs_sq[i] + xt_sq[j] - 2.0 * linalg::dot(xi, xt.row(j))).max(0.0);
+                if v > max {
+                    max = v;
+                }
+            }
+        }
+        let inv_max = if max > 0.0 { 1.0 / max } else { 1.0 };
+        FactoredCost { xs, xt, xs_sq, xt_sq, inv_max }
+    }
+
+    /// Number of source points (rows of the implicit cost).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.xs.rows()
+    }
+
+    /// Number of target points (columns of the implicit cost).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.xt.rows()
+    }
+
+    /// Feature dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.xs.cols()
+    }
+
+    /// One synthesized entry `c_ij` — bitwise equal to the dense
+    /// pipeline's `normalize_by_max(sq_euclidean_cost(xs, xt))[(i, j)]`:
+    /// same expansion, same clamp, then the same single multiply by the
+    /// stored reciprocal.
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        let v = self.xs_sq[i] + self.xt_sq[j] - 2.0 * linalg::dot(self.xs.row(i), self.xt.row(j));
+        v.max(0.0) * self.inv_max
+    }
+
+    /// Synthesize the full cost column `j` (`buf[i] = c_ij`, length m).
+    pub fn fill_col(&self, j: usize, buf: &mut [f64]) {
+        debug_assert_eq!(buf.len(), self.m());
+        for (i, out) in buf.iter_mut().enumerate() {
+            *out = self.entry(i, j);
+        }
+    }
+
+    /// Synthesize one group segment of column `j`:
+    /// `buf[k] = c_{(rows.start + k), j}`.
+    #[inline]
+    pub fn fill_seg(&self, j: usize, rows: Range<usize>, buf: &mut [f64]) {
+        debug_assert_eq!(buf.len(), rows.len());
+        for (k, i) in rows.enumerate() {
+            buf[k] = self.entry(i, j);
+        }
+    }
+
+    /// Synthesize all full quads of one (panel, group) tile in the
+    /// packed `[i][lane]` layout of [`crate::ot::pack::PackedCost`]:
+    /// `buf[q·LANES·g + k·LANES + t] = c_{(rows.start + k), (j0 + q·LANES + t)}`
+    /// — quad `q`'s slice is `buf[q·LANES·g .. (q+1)·LANES·g]`, exactly
+    /// what [`crate::simd::group_quad_contrib`] consumes.
+    pub fn fill_panel_group(&self, j0: usize, quads: usize, rows: Range<usize>, buf: &mut [f64]) {
+        let g = rows.len();
+        debug_assert_eq!(buf.len(), quads * LANES * g);
+        for q in 0..quads {
+            let base = q * LANES * g;
+            for (k, i) in rows.clone().enumerate() {
+                for t in 0..LANES {
+                    buf[base + k * LANES + t] = self.entry(i, j0 + q * LANES + t);
+                }
+            }
+        }
+    }
+
+    /// Whether every synthesizable entry is finite: with finite
+    /// coordinates each entry is `(xs_sq[i] + xt_sq[j] − 2·dot)·inv_max`
+    /// clamped at 0, finite iff the norms and `inv_max` are — an O(m+n)
+    /// audit, no m×n scan.
+    pub(crate) fn is_finite(&self) -> bool {
+        self.inv_max.is_finite()
+            && self.xs_sq.iter().all(|v| v.is_finite())
+            && self.xt_sq.iter().all(|v| v.is_finite())
+    }
+
+    /// Resident bytes of the factored representation.
+    pub fn bytes(&self) -> usize {
+        std::mem::size_of::<f64>()
+            * (self.xs.rows() * self.xs.cols()
+                + self.xt.rows() * self.xt.cols()
+                + self.xs_sq.len()
+                + self.xt_sq.len())
+    }
+}
+
+/// The cost backend an [`crate::ot::dual::OtProblem`] carries. `Dense`
+/// holds the transposed (`n×m`) matrix the oracles historically walked;
+/// `Factored` holds coordinates only and synthesizes on demand.
+pub enum CostMatrix {
+    Dense(Mat),
+    Factored(FactoredCost),
+}
+
+impl CostMatrix {
+    #[inline]
+    pub fn is_factored(&self) -> bool {
+        matches!(self, CostMatrix::Factored(_))
+    }
+
+    /// Backend name for telemetry / `grpot info`.
+    pub fn mode_name(&self) -> &'static str {
+        match self {
+            CostMatrix::Dense(_) => "dense",
+            CostMatrix::Factored(_) => "factored",
+        }
+    }
+
+    /// Cost column `j` as a slice: zero-copy for dense (row `j` of the
+    /// transposed matrix), synthesized into `buf` for factored. `buf`
+    /// is resized to m on demand and untouched on the dense path.
+    pub fn col<'a>(&'a self, j: usize, buf: &'a mut Vec<f64>) -> &'a [f64] {
+        match self {
+            CostMatrix::Dense(ct) => ct.row(j),
+            CostMatrix::Factored(f) => {
+                buf.resize(f.m(), 0.0);
+                f.fill_col(j, buf);
+                buf
+            }
+        }
+    }
+
+    /// Resident bytes of the backend (what the serving engine's dataset
+    /// cache accounts — the factored entry charges coordinates, not the
+    /// m×n matrix it never materializes).
+    pub fn bytes(&self) -> usize {
+        match self {
+            CostMatrix::Dense(ct) => std::mem::size_of::<f64>() * ct.rows() * ct.cols(),
+            CostMatrix::Factored(f) => f.bytes(),
+        }
+    }
+}
+
+impl Clone for CostMatrix {
+    fn clone(&self) -> Self {
+        match self {
+            CostMatrix::Dense(ct) => CostMatrix::Dense(ct.clone()),
+            CostMatrix::Factored(f) => CostMatrix::Factored(FactoredCost {
+                xs: f.xs.clone(),
+                xt: f.xt.clone(),
+                xs_sq: f.xs_sq.clone(),
+                xt_sq: f.xt_sq.clone(),
+                inv_max: f.inv_max,
+            }),
+        }
+    }
+}
+
+impl std::fmt::Debug for CostMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CostMatrix::Dense(ct) => {
+                f.debug_struct("Dense").field("shape_t", &ct.shape()).finish()
+            }
+            CostMatrix::Factored(fc) => f
+                .debug_struct("Factored")
+                .field("m", &fc.m())
+                .field("n", &fc.n())
+                .field("d", &fc.dim())
+                .finish(),
+        }
+    }
+}
+
+/// Per-entry byte budget of one chunk's [`TileRing`]. Chunk count is
+/// capped at [`crate::pool::MAX_FIXED_CHUNKS`] (32), so the whole-solve
+/// ring footprint is bounded at 32 MiB regardless of problem size —
+/// the factored memory model stays O((m+n)·d + const).
+pub const TILE_RING_BUDGET_BYTES: usize = 1 << 20;
+
+/// A small FIFO cache of synthesized (panel, group) cost tiles, one per
+/// column-chunk scratch slot (so no sharing, no locks, and the
+/// deterministic chunk→slot assignment is untouched). Entries hold
+/// every full quad of one (panel, group) pair consecutively in the
+/// packed `[i][lane]` layout; keys are `(panel_start, group)`.
+///
+/// Tiles are a pure function of the (immutable) cost data, so entries
+/// stay valid across evaluations — the steady state of an L-BFGS solve
+/// synthesizes each surviving tile once and replays it from the ring,
+/// while tiles of screened-out groups are never synthesized at all.
+/// When the working set outgrows the budget the FIFO cursor evicts the
+/// oldest entries and the walk re-synthesizes on the next visit.
+pub struct TileRing {
+    /// f64 capacity of one entry slot (`PANEL_COLS × max_group`).
+    stride: usize,
+    /// Number of entry slots (≥ 2, sized by [`TILE_RING_BUDGET_BYTES`]).
+    capacity: usize,
+    /// Backing store, `capacity × stride`, allocated on first use so
+    /// scalar-dispatch solves never pay for it.
+    data: Vec<f64>,
+    /// Key resident in each slot (`None` = empty).
+    keys: Vec<Option<(usize, usize)>>,
+    map: HashMap<(usize, usize), usize>,
+    /// Next eviction victim (FIFO).
+    cursor: usize,
+    /// Entries synthesized over the ring's lifetime (diagnostics).
+    built: u64,
+}
+
+impl TileRing {
+    /// A ring whose entries hold up to `stride` f64s each, with as many
+    /// slots as [`TILE_RING_BUDGET_BYTES`] allows (at least 2, so an
+    /// eviction can never thrash a single-entry ring within one panel).
+    pub fn new(stride: usize) -> TileRing {
+        let stride = stride.max(1);
+        let capacity = (TILE_RING_BUDGET_BYTES / (stride * std::mem::size_of::<f64>())).max(2);
+        TileRing {
+            stride,
+            capacity,
+            data: Vec::new(),
+            keys: vec![None; capacity],
+            map: HashMap::new(),
+            cursor: 0,
+            built: 0,
+        }
+    }
+
+    /// Number of entry slots.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Entries synthesized (fill calls) over the ring's lifetime.
+    pub fn total_built(&self) -> u64 {
+        self.built
+    }
+
+    /// Resident bytes of the backing store.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Look up the tile for `key`, synthesizing `len` f64s via `fill`
+    /// on a miss (evicting the FIFO-oldest entry if the ring is full).
+    /// Returns the tile slice and whether this call built it.
+    pub fn entry(
+        &mut self,
+        key: (usize, usize),
+        len: usize,
+        fill: impl FnOnce(&mut [f64]),
+    ) -> (&[f64], bool) {
+        debug_assert!(len <= self.stride, "tile larger than ring stride");
+        if let Some(&slot) = self.map.get(&key) {
+            let base = slot * self.stride;
+            return (&self.data[base..base + len], false);
+        }
+        if self.data.is_empty() {
+            self.data = vec![0.0; self.capacity * self.stride];
+        }
+        let slot = self.cursor;
+        self.cursor = (self.cursor + 1) % self.capacity;
+        if let Some(old) = self.keys[slot].take() {
+            self.map.remove(&old);
+        }
+        let base = slot * self.stride;
+        fill(&mut self.data[base..base + len]);
+        self.keys[slot] = Some(key);
+        self.map.insert(key, slot);
+        self.built += 1;
+        (&self.data[base..base + len], true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_mode_parse_roundtrip_and_errors() {
+        for m in [CostMode::Auto, CostMode::Dense, CostMode::Factored] {
+            assert_eq!(CostMode::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(CostMode::parse("lowrank").unwrap(), CostMode::Factored);
+        let e = CostMode::parse("sparse").unwrap_err();
+        assert!(e.to_string().contains("unknown cost mode"), "{e}");
+        // Explicit modes resolve to themselves regardless of env.
+        assert_eq!(CostMode::Dense.resolve().unwrap(), CostMode::Dense);
+        assert_eq!(CostMode::Factored.resolve().unwrap(), CostMode::Factored);
+    }
+
+    #[test]
+    fn factored_entries_match_dense_pipeline_bitwise() {
+        let mut rng = crate::rng::Pcg64::new(0xC057);
+        let (m, n, d) = (7, 9, 3);
+        let xs = Mat::from_fn(m, d, |_, _| rng.uniform(-1.0, 2.0));
+        let xt = Mat::from_fn(n, d, |_, _| rng.uniform(-1.5, 1.0));
+        let mut dense = linalg::sq_euclidean_cost(&xs, &xt);
+        linalg::normalize_by_max(&mut dense);
+        let f = FactoredCost::build(xs, xt);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(
+                    f.entry(i, j).to_bits(),
+                    dense[(i, j)].to_bits(),
+                    "entry ({i}, {j})"
+                );
+            }
+        }
+        let mut col = vec![0.0; m];
+        f.fill_col(4, &mut col);
+        for i in 0..m {
+            assert_eq!(col[i].to_bits(), dense[(i, 4)].to_bits());
+        }
+        let mut seg = vec![0.0; 3];
+        f.fill_seg(2, 1..4, &mut seg);
+        for (k, i) in (1..4).enumerate() {
+            assert_eq!(seg[k].to_bits(), dense[(i, 2)].to_bits());
+        }
+        // A degenerate all-zero cost keeps inv_max at 1.0 (no scaling),
+        // matching normalize_by_max's skip.
+        let z = FactoredCost::build(Mat::zeros(2, 2), Mat::zeros(3, 2));
+        assert_eq!(z.entry(1, 2), 0.0);
+    }
+
+    #[test]
+    fn panel_group_tiles_use_packed_layout() {
+        let mut rng = crate::rng::Pcg64::new(0x7171);
+        let (m, n, d) = (6, 16, 2);
+        let xs = Mat::from_fn(m, d, |_, _| rng.uniform(0.0, 1.0));
+        let xt = Mat::from_fn(n, d, |_, _| rng.uniform(0.0, 1.0));
+        let f = FactoredCost::build(xs, xt);
+        let (j0, quads, rows) = (8usize, 2usize, 1..4);
+        let g = rows.len();
+        let mut buf = vec![0.0; quads * LANES * g];
+        f.fill_panel_group(j0, quads, rows.clone(), &mut buf);
+        for q in 0..quads {
+            for (k, i) in rows.clone().enumerate() {
+                for t in 0..LANES {
+                    assert_eq!(
+                        buf[q * LANES * g + k * LANES + t].to_bits(),
+                        f.entry(i, j0 + q * LANES + t).to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_ring_caches_evicts_and_refills() {
+        let stride = 4;
+        let mut ring = TileRing::new(stride);
+        // Shrink capacity artificially by exercising more keys than the
+        // budget allows is impractical here (the budget admits many 4-f64
+        // slots), so drive eviction directly through a tiny ring.
+        let mut tiny = TileRing { capacity: 2, keys: vec![None; 2], ..TileRing::new(stride) };
+        let fills = std::cell::Cell::new(0u32);
+        let mut get = |ring: &mut TileRing, key: (usize, usize), val: f64| {
+            let (slice, built) = ring.entry(key, 3, |buf| {
+                fills.set(fills.get() + 1);
+                buf.fill(val);
+            });
+            (slice.to_vec(), built)
+        };
+        let (v, built) = get(&mut tiny, (0, 0), 1.0);
+        assert!(built);
+        assert_eq!(v, vec![1.0; 3]);
+        let (_, built) = get(&mut tiny, (8, 1), 2.0);
+        assert!(built);
+        // Hit: no new fill, cached bytes returned.
+        let (v, built) = get(&mut tiny, (0, 0), 99.0);
+        assert!(!built);
+        assert_eq!(v, vec![1.0; 3]);
+        assert_eq!(fills.get(), 2);
+        // Third distinct key evicts the FIFO-oldest entry (key (0, 0)).
+        let (_, built) = get(&mut tiny, (16, 0), 3.0);
+        assert!(built);
+        assert_eq!(tiny.len(), 2);
+        // Refill after eviction: (0, 0) is gone and must be rebuilt.
+        let (v, built) = get(&mut tiny, (0, 0), 4.0);
+        assert!(built);
+        assert_eq!(v, vec![4.0; 3]);
+        assert_eq!(tiny.total_built(), 4);
+        // The budget-sized ring never evicts within its capacity.
+        for k in 0..ring.capacity().min(64) {
+            let (_, built) = ring.entry((k, 0), stride, |b| b.fill(k as f64));
+            assert!(built);
+        }
+        for k in 0..ring.capacity().min(64) {
+            let (slice, built) = ring.entry((k, 0), stride, |b| b.fill(-1.0));
+            assert!(!built, "entry {k} should be resident");
+            assert_eq!(slice[0], k as f64);
+        }
+    }
+}

@@ -21,8 +21,10 @@
 //! `z_{l,j} ≤ τ` — the fact both the dense baseline and the screening
 //! method exploit. Solvers *minimize* the negated dual.
 
+use super::cost::{CostMatrix, CostMode, FactoredCost, TileRing};
 use super::pack::PackedCost;
 use crate::data::DomainPair;
+use crate::fault::CancelToken;
 use crate::groups::GroupStructure;
 use crate::linalg::{self, Mat};
 use crate::pool::{fixed_chunk_ranges, ParallelCtx};
@@ -131,21 +133,24 @@ pub(crate) fn panel_count(len: usize) -> usize {
 
 /// A regularized-OT instance: marginals, cost and group structure.
 ///
-/// The cost matrix is stored **transposed** (`n×m`): the dual oracles
-/// walk column `j` of `C` in the inner loop, so row `j` of `cost_t`
-/// keeps that access contiguous. Source samples are in *sorted
-/// (grouped)* order; `groups.perm` maps back to the caller's order.
+/// The cost lives behind a [`CostMatrix`] backend. The dense backend
+/// stores it **transposed** (`n×m`): the dual oracles walk column `j`
+/// of `C` in the inner loop, so row `j` of the stored matrix keeps that
+/// access contiguous. The factored backend stores only coordinates +
+/// squared norms (O((m+n)·d)) and synthesizes bitwise-identical values
+/// on demand. Source samples are in *sorted (grouped)* order;
+/// `groups.perm` maps back to the caller's order.
 pub struct OtProblem {
     /// Source marginal `a` (length m, sums to 1).
     pub a: Vec<f64>,
     /// Target marginal `b` (length n, sums to 1).
     pub b: Vec<f64>,
-    /// Transposed cost: `cost_t[(j, i)] = c(x_S_i, x_T_j)`, sorted
-    /// order. Private so every mutation goes through
-    /// [`OtProblem::cost_t_mut`], which invalidates the packed-tile
-    /// cache below — a stale pack would silently break the
-    /// byte-equal-across-backends invariant.
-    cost_t: Mat,
+    /// The cost backend, sorted source order
+    /// (`c(x_S_i, x_T_j)` at logical position `(i, j)`). Private so
+    /// every mutation goes through [`OtProblem::cost_t_mut`], which
+    /// invalidates the packed-tile cache below — a stale pack would
+    /// silently break the byte-equal-across-backends invariant.
+    cost: CostMatrix,
     /// Group partition of the (sorted) source samples.
     pub groups: GroupStructure,
     /// Lazily packed cost tiles over the canonical chunk grid
@@ -171,7 +176,7 @@ impl Clone for OtProblem {
         OtProblem {
             a: self.a.clone(),
             b: self.b.clone(),
-            cost_t: self.cost_t.clone(),
+            cost: self.cost.clone(),
             groups: self.groups.clone(),
             tiles,
         }
@@ -183,7 +188,7 @@ impl std::fmt::Debug for OtProblem {
         f.debug_struct("OtProblem")
             .field("a", &self.a)
             .field("b", &self.b)
-            .field("cost_t", &self.cost_t)
+            .field("cost", &self.cost)
             .field("groups", &self.groups)
             .field("tiles_packed", &self.tiles.get().is_some())
             .finish()
@@ -193,22 +198,42 @@ impl std::fmt::Debug for OtProblem {
 impl OtProblem {
     /// Build from a labeled source / unlabeled target pair with squared
     /// Euclidean costs normalized by the max entry (standard practice;
-    /// gives γ a dataset-independent scale).
+    /// gives γ a dataset-independent scale). Cost backend follows
+    /// [`CostMode::Auto`] (`GRPOT_COST`, dense by default; a malformed
+    /// variable falls back to dense here — the CLI validates it at
+    /// launch, and the checked entries surface it as an error).
     pub fn from_dataset(pair: &DomainPair) -> OtProblem {
+        Self::from_dataset_mode(pair, CostMode::Auto)
+    }
+
+    /// [`OtProblem::from_dataset`] with an explicit cost backend. Both
+    /// backends run the same arithmetic — [`linalg::sq_euclidean_cost`]
+    /// materialized vs. the factored form synthesized on demand — and
+    /// are bitwise interchangeable everywhere downstream.
+    pub fn from_dataset_mode(pair: &DomainPair, mode: CostMode) -> OtProblem {
+        let mode = mode.resolve().unwrap_or(CostMode::Dense);
         let groups = GroupStructure::from_labels(&pair.source.labels);
         // Permute source rows into grouped order.
         let d = pair.source.x.cols();
         let xs = Mat::from_fn(groups.num_samples(), d, |k, c| {
             pair.source.x[(groups.perm[k], c)]
         });
-        let mut cost = linalg::sq_euclidean_cost(&xs, &pair.target.x);
-        linalg::normalize_by_max(&mut cost);
         let m = xs.rows();
         let n = pair.target.x.rows();
+        let cost = match mode {
+            CostMode::Factored => {
+                CostMatrix::Factored(FactoredCost::build(xs, pair.target.x.clone()))
+            }
+            _ => {
+                let mut cost = linalg::sq_euclidean_cost(&xs, &pair.target.x);
+                linalg::normalize_by_max(&mut cost);
+                CostMatrix::Dense(cost.transpose())
+            }
+        };
         OtProblem {
             a: vec![1.0 / m as f64; m],
             b: vec![1.0 / n as f64; n],
-            cost_t: cost.transpose(),
+            cost,
             groups,
             tiles: OnceLock::new(),
         }
@@ -231,7 +256,13 @@ impl OtProblem {
             }
         }
         let a_perm = groups.permute(&a);
-        OtProblem { a: a_perm, b, cost_t, groups, tiles: OnceLock::new() }
+        OtProblem {
+            a: a_perm,
+            b,
+            cost: CostMatrix::Dense(cost_t),
+            groups,
+            tiles: OnceLock::new(),
+        }
     }
 
     /// Checked [`OtProblem::from_dataset`]: audits the generated pair
@@ -242,6 +273,19 @@ impl OtProblem {
     /// cached problem through this entry so an untrusted dataset spec
     /// can never install non-finite costs.
     pub fn try_from_dataset(pair: &DomainPair) -> crate::error::Result<OtProblem> {
+        Self::try_from_dataset_mode(pair, CostMode::Auto)
+    }
+
+    /// Checked [`OtProblem::from_dataset_mode`]. Unlike the infallible
+    /// entry, a malformed `GRPOT_COST` surfaces here as a structured
+    /// error (the serving engine routes every wire request through
+    /// this, so a bad environment fails loudly instead of silently
+    /// solving dense).
+    pub fn try_from_dataset_mode(
+        pair: &DomainPair,
+        mode: CostMode,
+    ) -> crate::error::Result<OtProblem> {
+        let mode = mode.resolve()?;
         let m = pair.source.x.rows();
         let n = pair.target.x.rows();
         if m == 0 || n == 0 {
@@ -258,13 +302,82 @@ impl OtProblem {
         {
             return Err(crate::err!("dataset contains non-finite coordinates"));
         }
-        let prob = OtProblem::from_dataset(pair);
-        if !prob.cost_t.as_slice().iter().all(|v| v.is_finite()) {
+        let prob = OtProblem::from_dataset_mode(pair, mode);
+        if !prob.cost_finite() {
             return Err(crate::err!(
                 "dataset produced a non-finite normalized cost (degenerate coordinates?)"
             ));
         }
         Ok(prob)
+    }
+
+    /// Build directly from point coordinates: `source_x` is `m×d` with
+    /// one group label per row, `target_x` is `n×d`; marginals are
+    /// uniform and the cost is max-normalized squared ℓ2, exactly as in
+    /// [`OtProblem::from_dataset_mode`]. This is the natural entry for
+    /// the factored backend (which *is* the coordinates), but accepts
+    /// any resolved mode. All validation returns structured errors.
+    pub fn try_from_points(
+        source_x: &Mat,
+        labels: &[usize],
+        target_x: &Mat,
+        mode: CostMode,
+    ) -> crate::error::Result<OtProblem> {
+        let mode = mode.resolve()?;
+        let m = source_x.rows();
+        let n = target_x.rows();
+        if m == 0 || n == 0 {
+            return Err(crate::err!("empty point set (source {m} × target {n})"));
+        }
+        let d = source_x.cols();
+        if d == 0 {
+            return Err(crate::err!("points have zero feature dimension"));
+        }
+        if target_x.cols() != d {
+            return Err(crate::err!(
+                "feature dimension mismatch: source d={d}, target d={}",
+                target_x.cols()
+            ));
+        }
+        if labels.len() != m {
+            return Err(crate::err!("{} labels for {m} source samples", labels.len()));
+        }
+        if !source_x.as_slice().iter().all(|v| v.is_finite())
+            || !target_x.as_slice().iter().all(|v| v.is_finite())
+        {
+            return Err(crate::err!("points contain non-finite coordinates"));
+        }
+        let pair = DomainPair {
+            source: crate::data::Dataset {
+                name: "points".into(),
+                x: source_x.clone(),
+                labels: labels.to_vec(),
+            },
+            target: crate::data::Dataset {
+                name: "points".into(),
+                x: target_x.clone(),
+                labels: Vec::new(),
+            },
+        };
+        let prob = OtProblem::from_dataset_mode(&pair, mode);
+        if !prob.cost_finite() {
+            return Err(crate::err!(
+                "points produced a non-finite normalized cost (degenerate coordinates?)"
+            ));
+        }
+        Ok(prob)
+    }
+
+    /// Whether every (stored or synthesizable) cost entry is finite —
+    /// the post-construction audit the checked constructors share. For
+    /// the factored backend finite inputs make every entry finite iff
+    /// the norms and normalization constant are (each entry is a fixed
+    /// combination of them), so the check stays O(m+n).
+    fn cost_finite(&self) -> bool {
+        match &self.cost {
+            CostMatrix::Dense(ct) => ct.as_slice().iter().all(|v| v.is_finite()),
+            CostMatrix::Factored(f) => f.is_finite(),
+        }
     }
 
     /// Checked [`OtProblem::from_parts`]: dimension mismatches and
@@ -321,23 +434,78 @@ impl OtProblem {
     }
 
     /// Dense `m×n` cost in sorted-source order (copies; tests/baselines).
+    /// Works on either backend (the factored path synthesizes — only
+    /// call on sizes where materializing is acceptable).
     pub fn cost(&self) -> Mat {
-        self.cost_t.transpose()
+        match &self.cost {
+            CostMatrix::Dense(ct) => ct.transpose(),
+            CostMatrix::Factored(f) => Mat::from_fn(f.m(), f.n(), |i, j| f.entry(i, j)),
+        }
     }
 
     /// The transposed (`n×m`) cost matrix — row `j` is column `j` of
-    /// the cost, the slice the oracle inner loops walk.
+    /// the cost, the slice the dense oracle inner loops walk.
+    ///
+    /// # Panics
+    /// On the factored backend, which deliberately never materializes
+    /// this matrix; factored-aware paths go through
+    /// [`OtProblem::cost_col`] or the tile synthesis in the chunk walks.
     #[inline]
     pub fn cost_t(&self) -> &Mat {
-        &self.cost_t
+        match &self.cost {
+            CostMatrix::Dense(ct) => ct,
+            CostMatrix::Factored(_) => {
+                panic!("cost_t() called on a factored cost backend (never materialized)")
+            }
+        }
     }
 
-    /// Mutable access to the transposed cost. Drops the packed-tile
-    /// cache, so the next vector-dispatch oracle repacks from the
-    /// edited costs instead of reading stale tiles.
+    /// Mutable access to the transposed cost (dense backend only; the
+    /// factored backend has no stored matrix to edit). Drops the
+    /// packed-tile cache, so the next vector-dispatch oracle repacks
+    /// from the edited costs instead of reading stale tiles.
     pub fn cost_t_mut(&mut self) -> &mut Mat {
         self.tiles.take();
-        &mut self.cost_t
+        match &mut self.cost {
+            CostMatrix::Dense(ct) => ct,
+            CostMatrix::Factored(_) => {
+                panic!("cost_t_mut() called on a factored cost backend (never materialized)")
+            }
+        }
+    }
+
+    /// Cost column `j` as a slice: zero-copy on the dense backend,
+    /// synthesized into `buf` on the factored one. The shared entry for
+    /// every full-column consumer (semi-dual staging, plan recovery,
+    /// screening error bounds).
+    #[inline]
+    pub fn cost_col<'a>(&'a self, j: usize, buf: &'a mut Vec<f64>) -> &'a [f64] {
+        self.cost.col(j, buf)
+    }
+
+    /// The cost backend (chunk walks dispatch on it directly).
+    #[inline]
+    pub(crate) fn cost_backend(&self) -> &CostMatrix {
+        &self.cost
+    }
+
+    /// Whether the factored (synthesize-on-demand) backend is active.
+    #[inline]
+    pub fn is_factored(&self) -> bool {
+        self.cost.is_factored()
+    }
+
+    /// Cost backend name for telemetry / `grpot info`.
+    pub fn cost_mode_name(&self) -> &'static str {
+        self.cost.mode_name()
+    }
+
+    /// Resident bytes of the cost representation — what a dataset cache
+    /// should account. Dense: the n×m matrix (the packed-tile copy is
+    /// charged separately on first vector use); factored: coordinates +
+    /// norms only.
+    pub fn cost_bytes(&self) -> usize {
+        self.cost.bytes()
     }
 
     /// The packed cost tiles over the canonical chunk grid, built on
@@ -373,7 +541,11 @@ impl SimdEngine {
     /// engine a different grid, which would silently misalign tiles).
     pub(crate) fn new(prob: &OtProblem, mode: SimdMode) -> SimdEngine {
         let dispatch = Dispatch::resolve(mode);
-        let pack = dispatch.is_vector().then(|| prob.packed_cost());
+        // The factored backend never materializes the matrix a pack
+        // would read from; its vector path synthesizes tiles into the
+        // per-chunk ring instead.
+        let pack =
+            (dispatch.is_vector() && !prob.is_factored()).then(|| prob.packed_cost());
         SimdEngine { dispatch, pack }
     }
 }
@@ -393,6 +565,14 @@ pub struct OracleStats {
     pub ub_checks: u64,
     /// Group gradients routed through the working set ℕ.
     pub ws_hits: u64,
+    /// Cost tiles/segments synthesized by the factored backend during
+    /// evaluation (0 on dense). Counts *synthesis work*: on the scalar
+    /// path one per (group, column) segment filled, on the vector path
+    /// one per tile-ring miss — so screened-out groups provably never
+    /// pay cost synthesis (their count never moves), but the value is
+    /// dispatch-dependent: equality checks across backends/dispatches
+    /// must compare the other fields individually.
+    pub tiles_built: u64,
     /// Per-eval history of `grads_computed` deltas (Fig. C).
     pub per_eval_grads: Vec<u64>,
 }
@@ -459,11 +639,18 @@ pub trait DualOracle {
 /// ([`KernelConsts`]), so groups below the threshold — the common case
 /// in the screened sparse regime — never pay the `sqrt`; active groups
 /// multiply by the precomputed `1/λ_quad` instead of dividing.
+///
+/// `c_seg` is the cost *segment* for this group — `c_seg[k]` is the
+/// cost at row `range.start + k` — so the kernel reads the same slice
+/// whether it came from a resident matrix row (dense: the caller
+/// passes `&row[range]`) or was just synthesized by the factored
+/// backend. Same values, same order: the indexing change is invisible
+/// to the arithmetic.
 #[inline]
 pub fn group_grad_contrib(
     alpha: &[f64],
     beta_j: f64,
-    c_j: &[f64],
+    c_seg: &[f64],
     range: std::ops::Range<usize>,
     consts: &KernelConsts,
     grad_alpha: &mut [f64],
@@ -473,9 +660,10 @@ pub fn group_grad_contrib(
     let start = range.start;
     let g = range.len();
     debug_assert!(scratch.len() >= g);
+    debug_assert_eq!(c_seg.len(), g);
     let mut zsq = 0.0;
     for (k, i) in range.clone().enumerate() {
-        let f = alpha[i] + beta_j - c_j[i];
+        let f = alpha[i] + beta_j - c_seg[k];
         let fp = if f > 0.0 { f } else { 0.0 };
         // Branchless store keeps the loop tight; zsq only sums positives.
         scratch[k] = fp;
@@ -534,12 +722,23 @@ pub struct ColChunkScratch {
     /// Quad-kernel scratch: `[i][lane]`-interleaved `[f]₊` staging for
     /// [`crate::simd::group_quad_contrib`] (`LANES ×` max group size).
     pub(crate) quad: Vec<f64>,
+    /// Factored-backend staging for one synthesized (group, column)
+    /// cost segment (max group size; scalar path).
+    pub(crate) cost_seg: Vec<f64>,
+    /// Factored-backend tile cache for the vector path (`Some` iff the
+    /// problem is factored; allocation is lazy inside the ring, so
+    /// scalar-dispatch factored solves never pay for it). Tiles are a
+    /// pure function of the immutable cost, so the ring persists across
+    /// evaluations — the steady state replays instead of resynthesizing.
+    pub(crate) ring: Option<TileRing>,
     /// Partial `Σ ψ` over this chunk's (l, j) pairs.
     pub(crate) psi: f64,
     pub(crate) grads: u64,
     pub(crate) skipped: u64,
     pub(crate) ub_checks: u64,
     pub(crate) ws_hits: u64,
+    /// Cost segments/tiles synthesized this eval ([`OracleStats::tiles_built`]).
+    pub(crate) tiles_built: u64,
 }
 
 impl ColChunkScratch {
@@ -550,19 +749,33 @@ impl ColChunkScratch {
             psi_col: vec![0.0; max_cols],
             group: vec![0.0; max_group],
             quad: vec![0.0; LANES * max_group],
+            cost_seg: vec![0.0; max_group],
+            ring: None,
             psi: 0.0,
             grads: 0,
             skipped: 0,
             ub_checks: 0,
             ws_hits: 0,
+            tiles_built: 0,
         }
     }
 
-    /// One scratch slot per chunk of `ranges`, sized for `prob`.
+    /// One scratch slot per chunk of `ranges`, sized for `prob`. On the
+    /// factored backend each slot carries its own [`TileRing`] (slots
+    /// map 1:1 to fixed chunks, so rings are unshared and lock-free;
+    /// the per-slot byte cap × [`crate::pool::MAX_FIXED_CHUNKS`] bounds
+    /// total ring memory at a constant).
     pub(crate) fn slots_for(prob: &OtProblem, ranges: &[Range<usize>]) -> Vec<ColChunkScratch> {
         let max_cols = ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        let max_group = prob.groups.max_size();
         (0..ranges.len())
-            .map(|_| ColChunkScratch::new(prob.m(), max_cols, prob.groups.max_size()))
+            .map(|_| {
+                let mut slot = ColChunkScratch::new(prob.m(), max_cols, max_group);
+                if prob.is_factored() {
+                    slot.ring = Some(TileRing::new(PANEL_COLS * max_group));
+                }
+                slot
+            })
             .collect()
     }
 
@@ -593,6 +806,7 @@ impl ColChunkScratch {
         self.skipped = 0;
         self.ub_checks = 0;
         self.ws_hits = 0;
+        self.tiles_built = 0;
     }
 
     /// Fold the per-column ψ staging into `psi` in ascending column
@@ -625,7 +839,16 @@ impl ColChunkScratch {
 /// kernel over each panel's full quads (lanes = columns, bit-identical
 /// per-lane chains, lane fold in ascending column order — see
 /// [`crate::simd`]) and the scalar kernel over the leftover columns, so
-/// the scalar and vector paths produce byte-equal results.
+/// the scalar and vector paths produce byte-equal results. On the
+/// factored backend the vector walk is fed from the slot's
+/// [`TileRing`] (synthesized tiles in the identical packed layout)
+/// instead of a resident pack — same kernels, same order, byte-equal.
+///
+/// `cancel` is polled once per chunk (one relaxed load, never inside
+/// the lane reduction): a cancelled chunk stays quiet (grads = 0, exact
+/// zeros), so the ordered reduction merges nothing from it and
+/// uncancelled evaluations are bitwise unaffected by the check.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn dense_chunk(
     prob: &OtProblem,
     consts: &KernelConsts,
@@ -635,14 +858,21 @@ pub(crate) fn dense_chunk(
     range: Range<usize>,
     slot: &mut ColChunkScratch,
     engine: &SimdEngine,
+    cancel: Option<&CancelToken>,
 ) {
     let cols = range.len();
     slot.reset(cols);
-    match &engine.pack {
-        None => dense_chunk_scalar(prob, consts, alpha, beta, range, slot),
-        Some(pack) => {
+    if cancel.is_some_and(|t| t.is_cancelled()) {
+        return;
+    }
+    match (&engine.pack, prob.cost_backend()) {
+        (Some(pack), _) => {
             dense_chunk_vector(prob, consts, alpha, beta, c, range, slot, engine.dispatch, pack)
         }
+        (None, CostMatrix::Factored(fac)) if engine.dispatch.is_vector() => {
+            dense_chunk_synth(prob, fac, consts, alpha, beta, range, slot, engine.dispatch)
+        }
+        _ => dense_chunk_scalar(prob, consts, alpha, beta, range, slot),
     }
     slot.fold_psi(cols);
 }
@@ -662,15 +892,34 @@ pub(crate) fn scalar_pair(
     group_range: Range<usize>,
     slot: &mut ColChunkScratch,
 ) {
-    let (psi, mass) = group_grad_contrib(
-        alpha,
-        beta[j],
-        prob.cost_t.row(j),
-        group_range,
-        consts,
-        &mut slot.grad_alpha,
-        &mut slot.group,
-    );
+    let g = group_range.len();
+    let (psi, mass) = match prob.cost_backend() {
+        CostMatrix::Dense(ct) => group_grad_contrib(
+            alpha,
+            beta[j],
+            &ct.row(j)[group_range.clone()],
+            group_range,
+            consts,
+            &mut slot.grad_alpha,
+            &mut slot.group,
+        ),
+        CostMatrix::Factored(fac) => {
+            // Synthesize exactly this (group, column) segment — never a
+            // full column — so screened callers only pay for what they
+            // actually evaluate.
+            fac.fill_seg(j, group_range.clone(), &mut slot.cost_seg[..g]);
+            slot.tiles_built += 1;
+            group_grad_contrib(
+                alpha,
+                beta[j],
+                &slot.cost_seg[..g],
+                group_range,
+                consts,
+                &mut slot.grad_alpha,
+                &mut slot.group,
+            )
+        }
+    };
     let col = j - cols0;
     slot.psi_col[col] += psi;
     slot.col_mass[col] += mass;
@@ -710,6 +959,63 @@ pub(crate) fn quad_pair(
         slot.col_mass[col0 + t] += mass4[t];
     }
     slot.grads += LANES as u64;
+}
+
+/// One vector (group, quad) unit on the **factored** backend: like
+/// [`quad_pair`], but the tile is synthesized into (or replayed from)
+/// the slot's [`TileRing`] — the screened walk's ring-fed quad unit.
+/// The ring entry covers *all* `quads` of the (panel, group), so a
+/// group that survives screening anywhere in a panel synthesizes its
+/// tile once and replays it for every surviving quad; a group screened
+/// out across the whole panel never reaches this function and never
+/// synthesizes anything.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn synth_quad_pair(
+    fac: &FactoredCost,
+    dispatch: Dispatch,
+    alpha: &[f64],
+    beta: &[f64],
+    j0: usize,
+    cols0: usize,
+    panel_start: usize,
+    quads: usize,
+    group_l: usize,
+    group_range: Range<usize>,
+    consts: &KernelConsts,
+    slot: &mut ColChunkScratch,
+) {
+    let g = group_range.len();
+    // Disjoint field borrows: the ring's tile slice must coexist with
+    // the mutable gradient/staging buffers.
+    let ColChunkScratch { grad_alpha, col_mass, psi_col, quad, ring, grads, tiles_built, .. } =
+        slot;
+    let ring = ring.as_mut().expect("factored slots carry a tile ring");
+    let (tile_all, built) = ring.entry((panel_start, group_l), quads * LANES * g, |buf| {
+        fac.fill_panel_group(panel_start, quads, group_range.clone(), buf)
+    });
+    if built {
+        *tiles_built += 1;
+    }
+    let q = (j0 - panel_start) / LANES;
+    let tile = &tile_all[q * LANES * g..(q + 1) * LANES * g];
+    let beta4 = [beta[j0], beta[j0 + 1], beta[j0 + 2], beta[j0 + 3]];
+    let (psi4, mass4) = crate::simd::group_quad_contrib(
+        dispatch,
+        alpha,
+        &beta4,
+        tile,
+        group_range,
+        consts,
+        grad_alpha,
+        quad,
+    );
+    let col0 = j0 - cols0;
+    for t in 0..LANES {
+        psi_col[col0 + t] += psi4[t];
+        col_mass[col0 + t] += mass4[t];
+    }
+    *grads += LANES as u64;
 }
 
 /// The scalar panel walk — the reference arithmetic every other path
@@ -778,26 +1084,129 @@ fn dense_chunk_vector(
     }
 }
 
+/// The factored vector walk: identical (panel, group, ascending column)
+/// order to [`dense_chunk_vector`], but the quad kernel reads tiles
+/// synthesized into the slot's [`TileRing`] instead of a resident pack
+/// — [`FactoredCost::fill_panel_group`] produces the exact packed
+/// `[i][lane]` layout with bitwise-identical values, so this path is
+/// byte-equal to the dense vector path (and hence to the scalar
+/// reference). Leftover columns synthesize per-group segments like the
+/// factored scalar path. Ring hits replay cached tiles at zero
+/// synthesis cost; only misses bump `tiles_built`.
+#[allow(clippy::too_many_arguments)]
+fn dense_chunk_synth(
+    prob: &OtProblem,
+    fac: &FactoredCost,
+    consts: &KernelConsts,
+    alpha: &[f64],
+    beta: &[f64],
+    range: Range<usize>,
+    slot: &mut ColChunkScratch,
+    dispatch: Dispatch,
+) {
+    let num_groups = prob.groups.num_groups();
+    let cols0 = range.start;
+    // Disjoint field borrows: the ring's returned tile slice must
+    // coexist with the mutable gradient/staging buffers.
+    let ColChunkScratch {
+        grad_alpha,
+        col_mass,
+        psi_col,
+        group,
+        quad,
+        cost_seg,
+        ring,
+        grads,
+        tiles_built,
+        ..
+    } = slot;
+    let ring = ring.as_mut().expect("factored slots carry a tile ring");
+    for panel in panel_ranges(range) {
+        let quads = panel.len() / LANES;
+        for l in 0..num_groups {
+            let group_range = prob.groups.range(l);
+            let g = group_range.len();
+            if quads > 0 {
+                let (tile_all, built) =
+                    ring.entry((panel.start, l), quads * LANES * g, |buf| {
+                        fac.fill_panel_group(panel.start, quads, group_range.clone(), buf)
+                    });
+                if built {
+                    *tiles_built += 1;
+                }
+                for q in 0..quads {
+                    let j0 = panel.start + q * LANES;
+                    let tile = &tile_all[q * LANES * g..(q + 1) * LANES * g];
+                    let beta4 = [beta[j0], beta[j0 + 1], beta[j0 + 2], beta[j0 + 3]];
+                    let (psi4, mass4) = crate::simd::group_quad_contrib(
+                        dispatch,
+                        alpha,
+                        &beta4,
+                        tile,
+                        group_range.clone(),
+                        consts,
+                        grad_alpha,
+                        quad,
+                    );
+                    let col0 = j0 - cols0;
+                    for t in 0..LANES {
+                        psi_col[col0 + t] += psi4[t];
+                        col_mass[col0 + t] += mass4[t];
+                    }
+                    *grads += LANES as u64;
+                }
+            }
+            for j in (panel.start + quads * LANES)..panel.end {
+                fac.fill_seg(j, group_range.clone(), &mut cost_seg[..g]);
+                *tiles_built += 1;
+                let (psi, mass) = group_grad_contrib(
+                    alpha,
+                    beta[j],
+                    &cost_seg[..g],
+                    group_range.clone(),
+                    consts,
+                    grad_alpha,
+                    group,
+                );
+                let col = j - cols0;
+                psi_col[col] += psi;
+                col_mass[col] += mass;
+                *grads += 1;
+            }
+        }
+    }
+}
+
+/// Per-eval counter totals folded out of the chunk slots by
+/// [`reduce_chunks`], mirroring the [`OracleStats`] counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct ChunkTotals {
+    pub(crate) psi: f64,
+    pub(crate) grads: u64,
+    pub(crate) skipped: u64,
+    pub(crate) ub_checks: u64,
+    pub(crate) ws_hits: u64,
+    pub(crate) tiles_built: u64,
+}
+
 /// Combine per-chunk partials into the shared gradient **in ascending
 /// chunk order** — the deterministic reduction: the association of every
 /// floating-point sum is fixed by the chunk boundaries (a function of n
-/// alone), never by which thread produced a partial. Returns
-/// `(psi_total, grads, skipped, ub_checks, ws_hits)`.
+/// alone), never by which thread produced a partial.
 pub(crate) fn reduce_chunks(
     ranges: &[Range<usize>],
     slots: &[ColChunkScratch],
     grad_alpha: &mut [f64],
     grad_beta: &mut [f64],
-) -> (f64, u64, u64, u64, u64) {
-    let mut psi_total = 0.0;
-    let (mut grads, mut skipped, mut ub_checks, mut ws_hits) = (0u64, 0u64, 0u64, 0u64);
+) -> ChunkTotals {
+    let mut t = ChunkTotals::default();
     for (range, slot) in ranges.iter().zip(slots) {
         // A chunk that computed nothing holds exact zeros everywhere:
         // merging it would only add +0.0 terms (values unchanged under
         // `==`; the decision itself is thread-count-independent), so the
         // screened sparse regime skips the O(m) merge per quiet chunk.
         if slot.grads > 0 {
-            psi_total += slot.psi;
+            t.psi += slot.psi;
             for (gi, &pi) in grad_alpha.iter_mut().zip(&slot.grad_alpha) {
                 *gi += pi;
             }
@@ -805,16 +1214,21 @@ pub(crate) fn reduce_chunks(
                 grad_beta[j] += slot.col_mass[k];
             }
         }
-        grads += slot.grads;
-        skipped += slot.skipped;
-        ub_checks += slot.ub_checks;
-        ws_hits += slot.ws_hits;
+        t.grads += slot.grads;
+        t.skipped += slot.skipped;
+        t.ub_checks += slot.ub_checks;
+        t.ws_hits += slot.ws_hits;
+        t.tiles_built += slot.tiles_built;
     }
-    (psi_total, grads, skipped, ub_checks, ws_hits)
+    t
 }
 
 /// Shared dense evaluation over caller-provided chunking/scratch — the
 /// zero-alloc entry used by [`crate::ot::origin::OriginOracle`].
+/// `cancel` is polled once per chunk; a mid-eval cancellation leaves
+/// the remaining chunks quiet (the result is then only used to carry
+/// `StopReason::Cancelled` out of the solver, never as a converged
+/// iterate).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn eval_dense_with(
     prob: &OtProblem,
@@ -825,11 +1239,12 @@ pub(crate) fn eval_dense_with(
     ranges: &[Range<usize>],
     slots: &mut [ColChunkScratch],
     engine: &SimdEngine,
-) -> (f64, u64) {
+    cancel: Option<&CancelToken>,
+) -> (f64, ChunkTotals) {
     let (alpha, beta) = dense_prolog(prob, x, grad);
     let (grad_alpha, grad_beta) = grad.split_at_mut(prob.m());
     ctx.map_chunks(ranges, slots, |c, range, slot| {
-        dense_chunk(prob, consts, alpha, beta, c, range, slot, engine);
+        dense_chunk(prob, consts, alpha, beta, c, range, slot, engine, cancel);
     });
     dense_epilog(prob, alpha, beta, ranges, slots, grad_alpha, grad_beta)
 }
@@ -859,10 +1274,10 @@ fn dense_epilog(
     slots: &[ColChunkScratch],
     grad_alpha: &mut [f64],
     grad_beta: &mut [f64],
-) -> (f64, u64) {
-    let (psi_total, grads, ..) = reduce_chunks(ranges, slots, grad_alpha, grad_beta);
-    let dual = linalg::dot(alpha, &prob.a) + linalg::dot(beta, &prob.b) - psi_total;
-    (-dual, grads)
+) -> (f64, ChunkTotals) {
+    let totals = reduce_chunks(ranges, slots, grad_alpha, grad_beta);
+    let dual = linalg::dot(alpha, &prob.a) + linalg::dot(beta, &prob.b) - totals.psi;
+    (-dual, totals)
 }
 
 /// Fully dense negated-dual evaluation — the reference implementation
@@ -941,7 +1356,7 @@ pub fn eval_dense_reusing(
     scratch: &mut DenseEvalScratch,
 ) -> (f64, u64) {
     let consts = KernelConsts::new(params);
-    eval_dense_with(
+    let (f, totals) = eval_dense_with(
         prob,
         &consts,
         x,
@@ -950,7 +1365,9 @@ pub fn eval_dense_reusing(
         &scratch.ranges,
         &mut scratch.slots,
         &scratch.engine,
-    )
+        None,
+    );
+    (f, totals.grads)
 }
 
 /// [`eval_dense_reusing`] dispatched through the one-shot scoped
@@ -976,10 +1393,12 @@ pub fn eval_dense_forkjoin(
         &scratch.ranges,
         &mut scratch.slots,
         |c, range, slot| {
-            dense_chunk(prob, &consts, alpha, beta, c, range, slot, engine);
+            dense_chunk(prob, &consts, alpha, beta, c, range, slot, engine, None);
         },
     );
-    dense_epilog(prob, alpha, beta, &scratch.ranges, &scratch.slots, grad_alpha, grad_beta)
+    let (f, totals) =
+        dense_epilog(prob, alpha, beta, &scratch.ranges, &scratch.slots, grad_alpha, grad_beta);
+    (f, totals.grads)
 }
 
 /// The (positive) dual objective at `x` (no gradient).
@@ -1034,7 +1453,7 @@ mod tests {
         assert_eq!(p.m(), 4);
         assert_eq!(p.n(), 3);
         assert_eq!(p.dim(), 7);
-        assert_eq!(p.cost_t.shape(), (3, 4));
+        assert_eq!(p.cost_t().shape(), (3, 4));
         assert_eq!(p.cost().shape(), (4, 3));
         assert_eq!(p.groups.num_groups(), 2);
     }
@@ -1366,9 +1785,119 @@ mod tests {
         let p = OtProblem::from_parts(vec![0.6, 0.4], vec![0.5, 0.5], &cost, &[1, 0]);
         // Sorted order: sample1 (label0) first.
         assert_eq!(p.a, vec![0.4, 0.6]);
-        assert_eq!(p.cost_t[(0, 0)], 3.0); // c(sample1, target0)
-        assert_eq!(p.cost_t[(0, 1)], 1.0);
-        assert_eq!(p.cost_t[(1, 0)], 4.0);
-        assert_eq!(p.cost_t[(1, 1)], 2.0);
+        assert_eq!(p.cost_t()[(0, 0)], 3.0); // c(sample1, target0)
+        assert_eq!(p.cost_t()[(0, 1)], 1.0);
+        assert_eq!(p.cost_t()[(1, 0)], 4.0);
+        assert_eq!(p.cost_t()[(1, 1)], 2.0);
+    }
+
+    fn points_pair(seed: u64, m: usize, n: usize, d: usize) -> (Mat, Vec<usize>, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let xs = Mat::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
+        let xt = Mat::from_fn(n, d, |_, _| rng.uniform(-1.0, 1.0));
+        let labels: Vec<usize> = (0..m).map(|i| i / 3).collect();
+        (xs, labels, xt)
+    }
+
+    /// The factored backend must expose bitwise-identical cost values
+    /// to the dense build of the same points, and factored evaluation
+    /// (scalar and vector, 1 and 2 threads) must be byte-equal to the
+    /// dense reference.
+    #[test]
+    fn factored_backend_matches_dense_bitwise() {
+        let (xs, labels, xt) = points_pair(0xFAC7, 9, 19, 3);
+        let dense =
+            OtProblem::try_from_points(&xs, &labels, &xt, CostMode::Dense).unwrap();
+        let fact =
+            OtProblem::try_from_points(&xs, &labels, &xt, CostMode::Factored).unwrap();
+        assert!(!dense.is_factored());
+        assert!(fact.is_factored());
+        assert_eq!(fact.cost_mode_name(), "factored");
+        // Cost values agree entry-for-entry…
+        let (cd, cf) = (dense.cost(), fact.cost());
+        assert_eq!(cd.shape(), cf.shape());
+        for (a, b) in cd.as_slice().iter().zip(cf.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // …and columns through the shared accessor.
+        let mut buf = Vec::new();
+        let col = fact.cost_col(5, &mut buf);
+        for (i, &v) in col.iter().enumerate() {
+            assert_eq!(v.to_bits(), cd[(i, 5)].to_bits());
+        }
+        // …and the factored footprint is the small one.
+        assert!(fact.cost_bytes() < dense.cost_bytes());
+        // Full evaluation: every dispatch × thread count byte-equal.
+        let params = DualParams::new(0.7, 0.3);
+        let mut rng = Pcg64::new(0xEE);
+        let x: Vec<f64> = (0..dense.dim()).map(|_| rng.uniform(-0.4, 0.6)).collect();
+        let mut g_ref = vec![0.0; dense.dim()];
+        let (f_ref, n_ref) = eval_dense(&dense, &params, &x, &mut g_ref);
+        for mode in [SimdMode::Scalar, SimdMode::Auto] {
+            for threads in [1usize, 2] {
+                let ctx = ParallelCtx::new(threads);
+                let mut scratch = DenseEvalScratch::with_simd(&fact, mode);
+                let mut g = vec![0.0; fact.dim()];
+                let (f, ng) = eval_dense_reusing(&fact, &params, &x, &mut g, &ctx, &mut scratch);
+                assert_eq!(f.to_bits(), f_ref.to_bits(), "{mode:?} threads={threads}");
+                assert_eq!(g, g_ref, "{mode:?} threads={threads}");
+                assert_eq!(ng, n_ref, "{mode:?} threads={threads}");
+                // Repeat on the warm ring: hits must replay identically.
+                let mut g2 = vec![0.0; fact.dim()];
+                let (f2, _) = eval_dense_reusing(&fact, &params, &x, &mut g2, &ctx, &mut scratch);
+                assert_eq!(f2.to_bits(), f_ref.to_bits());
+                assert_eq!(g2, g_ref);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "factored cost backend")]
+    fn cost_t_panics_on_factored() {
+        let (xs, labels, xt) = points_pair(0xD00D, 6, 5, 2);
+        let fact = OtProblem::try_from_points(&xs, &labels, &xt, CostMode::Factored).unwrap();
+        let _ = fact.cost_t();
+    }
+
+    /// A cancelled token quiets every chunk: the eval returns the
+    /// no-transport objective (only the −a/−b prolog survives) instead
+    /// of running the walk. Uncancelled armed tokens change nothing.
+    #[test]
+    fn cancelled_eval_stays_quiet_and_armed_token_is_transparent() {
+        let p = toy_problem();
+        let params = DualParams::new(0.7, 0.3);
+        let consts = KernelConsts::new(&params);
+        let mut rng = Pcg64::new(3);
+        let x: Vec<f64> = (0..p.dim()).map(|_| rng.uniform(0.3, 1.0)).collect();
+        let ctx = ParallelCtx::new(1);
+        let ranges = fixed_chunk_ranges(p.n());
+        let mut slots = ColChunkScratch::slots_for(&p, &ranges);
+        let engine = SimdEngine::new(&p, SimdMode::Scalar);
+        let mut g_ref = vec![0.0; p.dim()];
+        let (f_ref, totals_ref) =
+            eval_dense_with(&p, &consts, &x, &mut g_ref, &ctx, &ranges, &mut slots, &engine, None);
+        assert!(totals_ref.grads > 0, "x chosen to transport mass");
+        // Armed but uncancelled: byte-identical.
+        let armed = CancelToken::with_deadline(
+            std::time::Instant::now() + std::time::Duration::from_secs(3600),
+        );
+        let mut g = vec![0.0; p.dim()];
+        let (f, totals) = eval_dense_with(
+            &p, &consts, &x, &mut g, &ctx, &ranges, &mut slots, &engine, Some(&armed),
+        );
+        assert_eq!(f.to_bits(), f_ref.to_bits());
+        assert_eq!(g, g_ref);
+        assert_eq!(totals.grads, totals_ref.grads);
+        // Cancelled: every chunk quiet, zero gradients computed.
+        let dead = CancelToken::new();
+        dead.cancel();
+        let mut g = vec![0.0; p.dim()];
+        let (_, totals) = eval_dense_with(
+            &p, &consts, &x, &mut g, &ctx, &ranges, &mut slots, &engine, Some(&dead),
+        );
+        assert_eq!(totals.grads, 0);
+        for i in 0..p.m() {
+            assert_eq!(g[i], -p.a[i]);
+        }
     }
 }

@@ -6,6 +6,7 @@
 //! Theorem 2 (identical trajectory, objective and solution) is directly
 //! observable in tests and benchmarks.
 
+use super::cost::CostMode;
 use super::dual::{DualOracle, DualParams, OracleStats, OtProblem};
 use super::regularizer::{AnyRegularizer, DenseRegOracle, Regularizer};
 use super::screening::ScreeningOracle;
@@ -60,15 +61,26 @@ pub struct FastOtConfig {
     /// Request trace ID stamped on this solve's spans and report (0
     /// outside the serving path).
     pub trace_id: u64,
-    /// Cooperative cancellation token polled once per L-BFGS iteration.
-    /// `None` (the default) skips the check entirely; an armed but
-    /// uncancelled token costs one relaxed load per iteration and the
-    /// solve stays byte-identical to a token-free run. On cancellation
-    /// the driver stops at the next iteration boundary with
-    /// [`StopReason::Cancelled`] — the iterate is valid, merely
-    /// unconverged (Theorem 2 holds from any point, so partial results
-    /// are never wrong, just early).
+    /// Cooperative cancellation token polled once per L-BFGS iteration
+    /// **and** once per column chunk inside every oracle evaluation (one
+    /// relaxed load each — sub-eval granularity, so a cancelled huge
+    /// solve stops within one chunk, not one full O(mn) eval). `None`
+    /// (the default) skips the checks entirely; an armed but uncancelled
+    /// token is byte-identical to a token-free run. On cancellation the
+    /// driver stops at the next iteration boundary with
+    /// [`StopReason::Cancelled`] — a cancelled result is never treated
+    /// as converged (a mid-eval cancellation leaves the final partial
+    /// L-BFGS step meaningless, which is why `Cancelled` results are
+    /// never cached or warm-start seeds).
     pub cancel: Option<crate::fault::CancelToken>,
+    /// Cost-matrix backend selection. Consumed at *problem construction*
+    /// ([`OtProblem::from_dataset_mode`] /
+    /// [`OtProblem::try_from_points`]), not by the solve itself — the
+    /// problem already carries its backend by the time an oracle sees
+    /// it. Carried here so [`SolveOptions::fastot_config`] preserves the
+    /// full option surface for serving/sweep consumers that build
+    /// problems from one config struct.
+    pub cost: CostMode,
 }
 
 impl Default for FastOtConfig {
@@ -84,6 +96,7 @@ impl Default for FastOtConfig {
             observer: None,
             trace_id: 0,
             cancel: None,
+            cost: CostMode::Auto,
         }
     }
 }
@@ -231,6 +244,7 @@ pub fn drive_from(
             grads_skipped: stats.grads_skipped,
             ub_checks: stats.ub_checks,
             ws_hits: stats.ws_hits,
+            tiles_built: stats.tiles_built,
             // Same counters FastOtResult.stats carries — the report and
             // the result agree byte-for-byte by construction.
             skipped_group_fraction: skipped_fraction(stats.grads_computed, stats.grads_skipped),
@@ -270,6 +284,7 @@ fn solve_fast_ot_inner(
 ) -> FastOtResult {
     let mut oracle =
         ScreeningOracle::build(prob, cfg.params(), cfg.use_working_set, ctx.clone(), cfg.simd);
+    oracle.set_cancel(cfg.cancel.clone());
     let label = if cfg.use_working_set { "fast" } else { "fast-nows" };
     drive_from(prob, cfg, &mut oracle, label, x0)
 }
@@ -310,6 +325,7 @@ pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<FastOtResult> {
             let label =
                 format!("{}+{}", if cfg.use_working_set { "fast" } else { "fast-nows" }, other.name());
             let mut oracle = DenseRegOracle::new(prob, other, ctx);
+            oracle.set_cancel(cfg.cancel.clone());
             Ok(drive_from(prob, &cfg, &mut oracle, &label, x0))
         }
     }

@@ -15,12 +15,17 @@
 //! * [`semidual`] — the semi-dual formulation (extension).
 //! * [`pack`] — packed cost tiles for the SIMD column-lane kernels
 //!   ([`crate::simd`]).
+//! * [`cost`] — cost-matrix backends: the resident dense matrix and the
+//!   factored squared-ℓ2 form (coordinates + norms, O((m+n)·d) memory)
+//!   that synthesizes tiles on demand through a per-chunk
+//!   [`cost::TileRing`].
 //! * [`regularizer`] — the pluggable [`regularizer::Regularizer`] /
 //!   [`regularizer::ScreeningRule`] traits: group lasso (the paper's,
 //!   byte-identical behind the trait), squared ℓ2 and negative entropy.
 //! * [`solve`] — the unified [`solve::SolveOptions`] builder consumed
 //!   by one `solve(problem, &opts)` entry per solver family.
 
+pub mod cost;
 pub mod dual;
 pub mod emd;
 pub mod fastot;

@@ -31,6 +31,12 @@ pub struct OriginOracle<'a> {
     /// SIMD backend + packed cost tiles, resolved/packed once at
     /// construction and reused by every evaluation.
     engine: SimdEngine,
+    /// Cooperative cancellation, polled once per column chunk inside
+    /// [`eval_dense_with`] — sub-eval granularity on top of the
+    /// driver's per-iteration checkpoint. `None` (the default) skips
+    /// the poll entirely; an armed-but-uncancelled token is bitwise
+    /// transparent.
+    cancel: Option<crate::fault::CancelToken>,
 }
 
 impl<'a> OriginOracle<'a> {
@@ -105,7 +111,14 @@ impl<'a> OriginOracle<'a> {
             ranges,
             slots,
             engine,
+            cancel: None,
         }
+    }
+
+    /// Arm (or disarm) sub-eval cancellation: the token is polled once
+    /// per column chunk at one relaxed load.
+    pub(crate) fn set_cancel(&mut self, cancel: Option<crate::fault::CancelToken>) {
+        self.cancel = cancel;
     }
 
     pub fn params(&self) -> &DualParams {
@@ -124,7 +137,7 @@ impl DualOracle for OriginOracle<'_> {
     }
 
     fn eval(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
-        let (f, grads) = eval_dense_with(
+        let (f, totals) = eval_dense_with(
             self.prob,
             &self.consts,
             x,
@@ -133,9 +146,11 @@ impl DualOracle for OriginOracle<'_> {
             &self.ranges,
             &mut self.slots,
             &self.engine,
+            self.cancel.as_ref(),
         );
-        self.stats.grads_computed += grads;
-        self.stats.record_eval(grads);
+        self.stats.grads_computed += totals.grads;
+        self.stats.tiles_built += totals.tiles_built;
+        self.stats.record_eval(totals.grads);
         f
     }
 
@@ -162,6 +177,7 @@ fn solve_origin_inner(
 ) -> FastOtResult {
     let params = DualParams::new(cfg.gamma, cfg.rho);
     let mut oracle = OriginOracle::build(prob, params, ctx.clone(), cfg.simd);
+    oracle.set_cancel(cfg.cancel.clone());
     drive_from(prob, cfg, &mut oracle, "origin", x0)
 }
 
@@ -184,6 +200,7 @@ pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<FastOtResult> {
         other => {
             let label = format!("origin+{}", other.name());
             let mut oracle = DenseRegOracle::new(prob, other, ctx);
+            oracle.set_cancel(cfg.cancel.clone());
             Ok(drive_from(prob, &cfg, &mut oracle, &label, x0))
         }
     }

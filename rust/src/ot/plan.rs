@@ -25,8 +25,9 @@ pub fn recover_plan(prob: &OtProblem, params: &DualParams, x: &[f64]) -> Transpo
     let lq = params.lambda_quad();
     let num_groups = prob.groups.num_groups();
     let mut t = Mat::zeros(m, n);
+    let mut colbuf = Vec::new();
     for j in 0..n {
-        let c_j = prob.cost_t().row(j);
+        let c_j = prob.cost_col(j, &mut colbuf);
         let beta_j = beta[j];
         for l in 0..num_groups {
             let range = prob.groups.range(l);
@@ -57,8 +58,9 @@ impl TransportPlan {
     /// (the "OT distance" reported by applications).
     pub fn transport_cost(&self, prob: &OtProblem) -> f64 {
         let mut s = 0.0;
+        let mut colbuf = Vec::new();
         for j in 0..prob.n() {
-            let c_j = prob.cost_t().row(j);
+            let c_j = prob.cost_col(j, &mut colbuf);
             for i in 0..prob.m() {
                 s += self.t[(i, j)] * c_j[i];
             }

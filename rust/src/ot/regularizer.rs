@@ -502,6 +502,9 @@ struct RegChunk {
     col_mass: Vec<f64>,
     /// `α + β_j·1 − c_j` staging buffer (length m).
     fcol: Vec<f64>,
+    /// Cost-column staging for the factored backend (empty and unused
+    /// when the cost is dense — `cost_col` returns the resident row).
+    colbuf: Vec<f64>,
     /// Partial Σ_j ψ_j, folded in ascending column order.
     psi: f64,
     /// `grads_computed` units this chunk contributed.
@@ -524,6 +527,10 @@ pub struct DenseRegOracle<'a, R: Regularizer> {
     ranges: Vec<Range<usize>>,
     slots: Vec<RegChunk>,
     stats: OracleStats,
+    /// Cooperative cancellation, polled once per column chunk (one
+    /// relaxed load). `None` skips the poll; an armed-but-uncancelled
+    /// token is bitwise transparent.
+    cancel: Option<crate::fault::CancelToken>,
 }
 
 impl<'a, R: Regularizer> DenseRegOracle<'a, R> {
@@ -536,11 +543,18 @@ impl<'a, R: Regularizer> DenseRegOracle<'a, R> {
                 grad_alpha: vec![0.0; m],
                 col_mass: vec![0.0; r.len()],
                 fcol: vec![0.0; m],
+                colbuf: Vec::new(),
                 psi: 0.0,
                 grads: 0,
             })
             .collect();
-        DenseRegOracle { prob, reg, ctx, ranges, slots, stats: OracleStats::default() }
+        DenseRegOracle { prob, reg, ctx, ranges, slots, stats: OracleStats::default(), cancel: None }
+    }
+
+    /// Arm (or disarm) sub-eval cancellation: the token is polled once
+    /// per column chunk at one relaxed load.
+    pub(crate) fn set_cancel(&mut self, cancel: Option<crate::fault::CancelToken>) {
+        self.cancel = cancel;
     }
 
     pub fn regularizer(&self) -> &R {
@@ -570,22 +584,32 @@ impl<R: Regularizer> DualOracle for DenseRegOracle<'_, R> {
         let prob = self.prob;
         let reg = &self.reg;
         let units = reg.grad_units();
+        let cancel = self.cancel.as_ref();
         self.ctx.map_chunks(&self.ranges, &mut self.slots, |_, range, slot| {
-            slot.psi = 0.0;
-            slot.grads = 0;
-            for v in slot.grad_alpha.iter_mut() {
+            let RegChunk { grad_alpha, col_mass, fcol, colbuf, psi, grads } = slot;
+            *psi = 0.0;
+            *grads = 0;
+            for v in grad_alpha.iter_mut() {
                 *v = 0.0;
             }
+            for v in col_mass.iter_mut() {
+                *v = 0.0;
+            }
+            // Sub-eval cancellation checkpoint: one relaxed load per
+            // chunk; a cancelled chunk merges as zeros.
+            if cancel.is_some_and(|t| t.is_cancelled()) {
+                return;
+            }
             for (k, j) in range.enumerate() {
-                let c_j = prob.cost_t().row(j);
+                let c_j = prob.cost_col(j, colbuf);
                 let beta_j = beta[j];
-                for ((fi, &ai), &ci) in slot.fcol.iter_mut().zip(alpha).zip(c_j) {
+                for ((fi, &ai), &ci) in fcol.iter_mut().zip(alpha).zip(c_j) {
                     *fi = ai + beta_j - ci;
                 }
-                let (psi, mass) = reg.delta_omega(&slot.fcol, &mut slot.grad_alpha);
-                slot.psi += psi;
-                slot.col_mass[k] = mass;
-                slot.grads += units;
+                let (p, mass) = reg.delta_omega(fcol, grad_alpha);
+                *psi += p;
+                col_mass[k] = mass;
+                *grads += units;
             }
         });
 
@@ -633,8 +657,9 @@ pub fn recover_plan_reg(prob: &OtProblem, reg: &dyn Regularizer, x: &[f64]) -> M
     let mut plan = Mat::zeros(m, n);
     let mut fcol = vec![0.0; m];
     let mut tcol = vec![0.0; m];
+    let mut colbuf = Vec::new();
     for j in 0..n {
-        let c_j = prob.cost_t().row(j);
+        let c_j = prob.cost_col(j, &mut colbuf);
         for i in 0..m {
             fcol[i] = alpha[i] + beta[j] - c_j[i];
         }

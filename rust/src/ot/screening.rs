@@ -26,9 +26,11 @@
 //! field, so the screened walk compiles to the same code as the
 //! pre-trait inlined expressions and every decision stays byte-equal.
 
+use super::cost::CostMatrix;
 use super::dual::{
-    exact_z, panel_count, panel_ranges, quad_pair, reduce_chunks, scalar_pair, ColChunkScratch,
-    DualOracle, DualParams, KernelConsts, OracleStats, OtProblem, SimdEngine, PANEL_COLS,
+    exact_z, panel_count, panel_ranges, quad_pair, reduce_chunks, scalar_pair, synth_quad_pair,
+    ColChunkScratch, DualOracle, DualParams, KernelConsts, OracleStats, OtProblem, SimdEngine,
+    PANEL_COLS,
 };
 use super::regularizer::{GroupLassoRule, ScreeningRule};
 use super::solve::SolveOptions;
@@ -156,6 +158,10 @@ pub struct ScreeningOracle<'a> {
     /// shared by the eval walk and the snapshot refresh.
     engine: SimdEngine,
     stats: OracleStats,
+    /// Cooperative cancellation, polled once per column chunk (one
+    /// relaxed load). `None` skips the poll; an armed-but-uncancelled
+    /// token is bitwise transparent.
+    cancel: Option<crate::fault::CancelToken>,
 }
 
 impl<'a> ScreeningOracle<'a> {
@@ -266,9 +272,16 @@ impl<'a> ScreeningOracle<'a> {
             slots,
             engine,
             stats: OracleStats::default(),
+            cancel: None,
         };
         o.recompute_snapshots();
         o
+    }
+
+    /// Arm (or disarm) sub-eval cancellation: the token is polled once
+    /// per column chunk at one relaxed load.
+    pub(crate) fn set_cancel(&mut self, cancel: Option<crate::fault::CancelToken>) {
+        self.cancel = cancel;
     }
 
     /// Convenience: fresh ctx + explicit SIMD policy.
@@ -352,6 +365,11 @@ impl<'a> ScreeningOracle<'a> {
         let engine = &self.engine;
         self.ctx.map_chunks(ranges, &mut parts, |c, range, part| {
             let start = range.start;
+            // Cost-column staging for the factored backend (the dense
+            // backend returns the resident row at zero cost). Refresh
+            // runs once per r solver iterations, so the per-chunk
+            // allocation is off the eval hot path.
+            let mut colbuf = Vec::new();
             if let Some(pack) = &engine.pack {
                 // Vector path: full quads via the packed tiles (per-lane
                 // z̃/k̃/õ chains bit-identical to the scalar loop —
@@ -393,7 +411,7 @@ impl<'a> ScreeningOracle<'a> {
                             prob,
                             snap_alpha,
                             snap_beta[j],
-                            prob.cost_t().row(j),
+                            prob.cost_col(j, &mut colbuf),
                             use_ws,
                             (j - start) * num_groups,
                             part.z,
@@ -408,7 +426,7 @@ impl<'a> ScreeningOracle<'a> {
                         prob,
                         snap_alpha,
                         snap_beta[j],
-                        prob.cost_t().row(j),
+                        prob.cost_col(j, &mut colbuf),
                         use_ws,
                         col * num_groups,
                         part.z,
@@ -529,8 +547,9 @@ impl<'a> ScreeningOracle<'a> {
         let sqrt_g = &self.prob.groups.sqrt_sizes;
         let mut out = BoundErrors::default();
         let mut count = 0.0;
+        let mut colbuf = Vec::new();
         for j in 0..n {
-            let c_j = self.prob.cost_t().row(j);
+            let c_j = self.prob.cost_col(j, &mut colbuf);
             let beta_j = beta[j];
             let db = beta_j - self.snap_beta[j];
             let db_pos = db.max(0.0);
@@ -610,6 +629,7 @@ impl DualOracle for ScreeningOracle<'_> {
         let use_ws = self.use_ws;
         let ranges = &self.ranges;
         let engine = &self.engine;
+        let cancel = self.cancel.as_ref();
 
         // Column chunks evaluate concurrently; per-chunk partials are
         // combined in chunk order below, so the screened gradient is
@@ -637,6 +657,11 @@ impl DualOracle for ScreeningOracle<'_> {
             let cols0 = range.start;
             let cols = range.len();
             slot.reset(cols);
+            // Sub-eval cancellation checkpoint: one relaxed load per
+            // chunk; a cancelled chunk stays quiet and merges nothing.
+            if cancel.is_some_and(|t| t.is_cancelled()) {
+                return;
+            }
             let mut db_pos = [0.0f64; PANEL_COLS];
             let mut mask = [false; PANEL_COLS];
             for (p, panel) in panel_ranges(range).enumerate() {
@@ -726,6 +751,53 @@ impl DualOracle for ScreeningOracle<'_> {
                             }
                         }
                         from = quads * LANES;
+                    } else if engine.dispatch.is_vector() {
+                        // Factored backend under a vector dispatch (no
+                        // resident pack): full surviving quads run the
+                        // quad kernel against ring-synthesized tiles —
+                        // identical arithmetic and order to the packed
+                        // path, so screened solves stay byte-equal
+                        // across backends. A (panel, group) screened
+                        // out everywhere never synthesizes its tile.
+                        if let CostMatrix::Factored(fac) = prob.cost_backend() {
+                            let quads = plen / LANES;
+                            for q in 0..quads {
+                                let t0 = q * LANES;
+                                let j0 = panel.start + t0;
+                                if mask[t0..t0 + LANES].iter().all(|&v| v) {
+                                    synth_quad_pair(
+                                        fac,
+                                        engine.dispatch,
+                                        alpha,
+                                        beta,
+                                        j0,
+                                        cols0,
+                                        panel.start,
+                                        quads,
+                                        l,
+                                        group_range.clone(),
+                                        consts,
+                                        slot,
+                                    );
+                                } else {
+                                    for t in t0..t0 + LANES {
+                                        if mask[t] {
+                                            scalar_pair(
+                                                prob,
+                                                consts,
+                                                alpha,
+                                                beta,
+                                                panel.start + t,
+                                                cols0,
+                                                group_range.clone(),
+                                                slot,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            from = quads * LANES;
+                        }
                     }
                     for t in from..plen {
                         if mask[t] {
@@ -745,16 +817,16 @@ impl DualOracle for ScreeningOracle<'_> {
             }
             slot.fold_psi(cols);
         });
-        let (psi_total, grads_this_eval, skipped, ub_checks, ws_hits) =
-            reduce_chunks(&self.ranges, &self.slots, grad_alpha, grad_beta);
+        let totals = reduce_chunks(&self.ranges, &self.slots, grad_alpha, grad_beta);
 
-        self.stats.grads_computed += grads_this_eval;
-        self.stats.grads_skipped += skipped;
-        self.stats.ub_checks += ub_checks;
-        self.stats.ws_hits += ws_hits;
-        self.stats.record_eval(grads_this_eval);
+        self.stats.grads_computed += totals.grads;
+        self.stats.grads_skipped += totals.skipped;
+        self.stats.ub_checks += totals.ub_checks;
+        self.stats.ws_hits += totals.ws_hits;
+        self.stats.tiles_built += totals.tiles_built;
+        self.stats.record_eval(totals.grads);
 
-        let dual = linalg::dot(alpha, &self.prob.a) + linalg::dot(beta, &self.prob.b) - psi_total;
+        let dual = linalg::dot(alpha, &self.prob.a) + linalg::dot(beta, &self.prob.b) - totals.psi;
         -dual
     }
 

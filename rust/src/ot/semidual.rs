@@ -76,6 +76,9 @@ struct SemiChunk {
     grad: Vec<f64>,
     /// `α − c_j` staging buffer (length m).
     fcol: Vec<f64>,
+    /// Cost-column staging for the factored backend (unused — empty —
+    /// when the cost is dense).
+    colbuf: Vec<f64>,
     /// Partial `Σ_j val_j`.
     semid: f64,
 }
@@ -95,6 +98,8 @@ pub struct SemiDualOracle<'a> {
     /// sort-based water-filling itself stays scalar).
     dispatch: Dispatch,
     stats: OracleStats,
+    /// Cooperative cancellation, polled once per column chunk.
+    cancel: Option<crate::fault::CancelToken>,
 }
 
 impl<'a> SemiDualOracle<'a> {
@@ -139,7 +144,12 @@ impl<'a> SemiDualOracle<'a> {
         let m = prob.m();
         let ranges = fixed_chunk_ranges(prob.n());
         let slots = (0..ranges.len())
-            .map(|_| SemiChunk { grad: vec![0.0; m], fcol: vec![0.0; m], semid: 0.0 })
+            .map(|_| SemiChunk {
+                grad: vec![0.0; m],
+                fcol: vec![0.0; m],
+                colbuf: Vec::new(),
+                semid: 0.0,
+            })
             .collect();
         SemiDualOracle {
             prob,
@@ -149,7 +159,15 @@ impl<'a> SemiDualOracle<'a> {
             slots,
             dispatch: Dispatch::resolve(simd),
             stats: OracleStats::default(),
+            cancel: None,
         }
+    }
+
+    /// Arm (or disarm) sub-eval cancellation: the token is polled once
+    /// per column chunk at one relaxed load.
+    #[allow(dead_code)]
+    pub(crate) fn set_cancel(&mut self, cancel: Option<crate::fault::CancelToken>) {
+        self.cancel = cancel;
     }
 }
 
@@ -176,17 +194,24 @@ impl DualOracle for SemiDualOracle<'_> {
         let prob = self.prob;
         let gamma = self.gamma;
         let dispatch = self.dispatch;
+        let cancel = self.cancel.as_ref();
         self.ctx.map_chunks(&self.ranges, &mut self.slots, |_, range, slot| {
-            slot.semid = 0.0;
-            for v in slot.grad.iter_mut() {
+            let SemiChunk { grad, fcol, colbuf, semid } = slot;
+            *semid = 0.0;
+            for v in grad.iter_mut() {
                 *v = 0.0;
             }
+            // Sub-eval cancellation checkpoint (one relaxed load per
+            // chunk); a cancelled chunk merges as zeros.
+            if cancel.is_some_and(|t| t.is_cancelled()) {
+                return;
+            }
             for j in range {
-                let c_j = prob.cost_t().row(j);
-                sub_into(dispatch, &mut slot.fcol, alpha, c_j);
-                let (t, val) = waterfill(&slot.fcol, gamma, prob.b[j]);
-                slot.semid += val;
-                for (g, &ti) in slot.grad.iter_mut().zip(&t) {
+                let c_j = prob.cost_col(j, colbuf);
+                sub_into(dispatch, fcol, alpha, c_j);
+                let (t, val) = waterfill(fcol, gamma, prob.b[j]);
+                *semid += val;
+                for (g, &ti) in grad.iter_mut().zip(&t) {
                     *g += ti;
                 }
             }
@@ -223,6 +248,9 @@ struct SemiRegChunk {
     fcol: Vec<f64>,
     /// Inner-solution buffer for `max_omega` (length m).
     tbuf: Vec<f64>,
+    /// Cost-column staging for the factored backend (unused — empty —
+    /// when the cost is dense).
+    colbuf: Vec<f64>,
     /// Partial `Σ_j val_j`.
     semid: f64,
 }
@@ -242,6 +270,8 @@ pub struct SemiRegOracle<'a, R: Regularizer> {
     ranges: Vec<Range<usize>>,
     slots: Vec<SemiRegChunk>,
     stats: OracleStats,
+    /// Cooperative cancellation, polled once per column chunk.
+    cancel: Option<crate::fault::CancelToken>,
 }
 
 impl<'a, R: Regularizer> SemiRegOracle<'a, R> {
@@ -259,10 +289,17 @@ impl<'a, R: Regularizer> SemiRegOracle<'a, R> {
                 grad: vec![0.0; m],
                 fcol: vec![0.0; m],
                 tbuf: vec![0.0; m],
+                colbuf: Vec::new(),
                 semid: 0.0,
             })
             .collect();
-        SemiRegOracle { prob, reg, ctx, ranges, slots, stats: OracleStats::default() }
+        SemiRegOracle { prob, reg, ctx, ranges, slots, stats: OracleStats::default(), cancel: None }
+    }
+
+    /// Arm (or disarm) sub-eval cancellation: the token is polled once
+    /// per column chunk at one relaxed load.
+    pub(crate) fn set_cancel(&mut self, cancel: Option<crate::fault::CancelToken>) {
+        self.cancel = cancel;
     }
 
     pub fn regularizer(&self) -> &R {
@@ -284,21 +321,28 @@ impl<R: Regularizer> DualOracle for SemiRegOracle<'_, R> {
         }
         let prob = self.prob;
         let reg = &self.reg;
+        let cancel = self.cancel.as_ref();
         self.ctx.map_chunks(&self.ranges, &mut self.slots, |_, range, slot| {
-            slot.semid = 0.0;
-            for v in slot.grad.iter_mut() {
+            let SemiRegChunk { grad, fcol, tbuf, colbuf, semid } = slot;
+            *semid = 0.0;
+            for v in grad.iter_mut() {
                 *v = 0.0;
             }
+            // Sub-eval cancellation checkpoint (one relaxed load per
+            // chunk); a cancelled chunk merges as zeros.
+            if cancel.is_some_and(|t| t.is_cancelled()) {
+                return;
+            }
             for j in range {
-                let c_j = prob.cost_t().row(j);
-                for (fi, (&ai, &ci)) in slot.fcol.iter_mut().zip(alpha.iter().zip(c_j)) {
+                let c_j = prob.cost_col(j, colbuf);
+                for (fi, (&ai, &ci)) in fcol.iter_mut().zip(alpha.iter().zip(c_j)) {
                     *fi = ai - ci;
                 }
                 let val = reg
-                    .max_omega(&slot.fcol, prob.b[j], &mut slot.tbuf)
+                    .max_omega(fcol, prob.b[j], tbuf)
                     .expect("constructor checked semi-dual support");
-                slot.semid += val;
-                for (g, &ti) in slot.grad.iter_mut().zip(&slot.tbuf) {
+                *semid += val;
+                for (g, &ti) in grad.iter_mut().zip(tbuf.iter()) {
                     *g += ti;
                 }
             }
@@ -377,6 +421,7 @@ pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<SemiDualResult> {
         if opts.observer.is_some() { Some(ctx.pool_stats()) } else { None };
     let _solve_span = crate::obs::Span::start_full(crate::obs::names::SOLVE, opts.trace_id);
     let mut oracle = SemiRegOracle::new(prob, &reg, ctx.clone());
+    oracle.set_cancel(opts.cancel.clone());
     let mut solver = Lbfgs::new(x0, opts.lbfgs.clone(), &mut oracle);
     // Stepped (not `run`) so cancellation and failpoints get a
     // checkpoint between iterations; without a token this is the same
@@ -415,6 +460,7 @@ pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<SemiDualResult> {
             grads_skipped: stats.grads_skipped,
             ub_checks: stats.ub_checks,
             ws_hits: stats.ws_hits,
+            tiles_built: stats.tiles_built,
             skipped_group_fraction: crate::obs::report::skipped_fraction(
                 stats.grads_computed,
                 stats.grads_skipped,
@@ -431,8 +477,9 @@ pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<SemiDualResult> {
     let mut plan = crate::linalg::Mat::zeros(m, n);
     let mut fcol = vec![0.0; m];
     let mut t = vec![0.0; m];
+    let mut colbuf = Vec::new();
     for j in 0..n {
-        let c_j = prob.cost_t().row(j);
+        let c_j = prob.cost_col(j, &mut colbuf);
         for i in 0..m {
             fcol[i] = alpha[i] - c_j[i];
         }
@@ -519,8 +566,9 @@ fn solve_semidual_inner(
     let (alpha, f) = solver.into_solution();
     let mut plan = crate::linalg::Mat::zeros(m, n);
     let mut fcol = vec![0.0; m];
+    let mut colbuf = Vec::new();
     for j in 0..n {
-        let c_j = prob.cost_t().row(j);
+        let c_j = prob.cost_col(j, &mut colbuf);
         for i in 0..m {
             fcol[i] = alpha[i] - c_j[i];
         }

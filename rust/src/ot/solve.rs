@@ -25,6 +25,7 @@
 //! pin the group-lasso regularizer (so `GRPOT_REG` can never re-route
 //! them) and forward here.
 
+use super::cost::CostMode;
 use super::regularizer::RegKind;
 use crate::pool::ParallelCtx;
 use crate::simd::SimdMode;
@@ -74,11 +75,20 @@ pub struct SolveOptions {
     /// Request trace ID stamped on spans and the report (0 = not part
     /// of a traced request).
     pub trace_id: u64,
-    /// Cooperative cancellation token polled between solver iterations.
-    /// `None` (the default) removes the check entirely; an uncancelled
-    /// token costs one relaxed load per iteration and never changes
-    /// solver output.
+    /// Cooperative cancellation token polled between solver iterations
+    /// and once per column chunk inside oracle evaluations. `None` (the
+    /// default) removes the checks entirely; an uncancelled token costs
+    /// one relaxed load per checkpoint and never changes solver output.
     pub cancel: Option<crate::fault::CancelToken>,
+    /// Cost-matrix backend for problems *built from* this options
+    /// struct (the serving engine's dataset path, `try_from_points`).
+    /// `Auto` (the default) defers to `GRPOT_COST`, else dense;
+    /// `Factored` stores coordinates + norms (O((m+n)·d)) and
+    /// synthesizes cost tiles on demand — byte-identical solves at a
+    /// fraction of the memory for squared-ℓ2 costs. Solves over an
+    /// already-built [`super::dual::OtProblem`] ignore it (the problem
+    /// carries its own backend).
+    pub cost: CostMode,
 }
 
 impl Default for SolveOptions {
@@ -97,6 +107,7 @@ impl Default for SolveOptions {
             observer: None,
             trace_id: 0,
             cancel: None,
+            cost: CostMode::Auto,
         }
     }
 }
@@ -117,6 +128,7 @@ impl std::fmt::Debug for SolveOptions {
             .field("observer", &self.observer.is_some())
             .field("trace_id", &self.trace_id)
             .field("cancel", &self.cancel.is_some())
+            .field("cost", &self.cost)
             .finish()
     }
 }
@@ -203,6 +215,13 @@ impl SolveOptions {
         self
     }
 
+    /// Select the cost-matrix backend for problems built from these
+    /// options (dense resident matrix vs factored coordinates + norms).
+    pub fn cost(mut self, mode: CostMode) -> Self {
+        self.cost = mode;
+        self
+    }
+
     /// The effective regularizer kind: the explicit selection, else the
     /// `GRPOT_REG`/group-lasso default (a bad env value is an error).
     pub fn resolve_regularizer(&self) -> crate::error::Result<RegKind> {
@@ -235,6 +254,7 @@ impl SolveOptions {
             observer: self.observer.clone(),
             trace_id: self.trace_id,
             cancel: self.cancel.clone(),
+            cost: self.cost,
         }
     }
 }
@@ -255,7 +275,8 @@ mod tests {
             .regularizer(RegKind::SquaredL2)
             .warm_start(vec![0.0; 4])
             .working_set(false)
-            .cancel(crate::fault::CancelToken::new());
+            .cancel(crate::fault::CancelToken::new())
+            .cost(CostMode::Factored);
         assert_eq!(opts.gamma, 0.3);
         assert_eq!(opts.rho, 0.7);
         assert_eq!(opts.r, 5);
@@ -266,11 +287,13 @@ mod tests {
         assert_eq!(opts.warm_start.as_ref().map(Vec::len), Some(4));
         assert!(!opts.use_working_set);
         assert!(opts.cancel.is_some());
+        assert_eq!(opts.cost, CostMode::Factored);
         let cfg = opts.fastot_config();
         assert_eq!(cfg.gamma, 0.3);
         assert_eq!(cfg.lbfgs.max_iters, 42);
         assert!(!cfg.use_working_set);
         assert!(cfg.cancel.is_some());
+        assert_eq!(cfg.cost, CostMode::Factored);
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! | `serve.batches` | counter | micro-batches executed |
 //! | `serve.warm_hits` / `serve.warm_misses` | counter | dual-cache outcome per solve |
 //! | `serve.queue_depth` | gauge | queue depth after the last submit/batch |
+//! | `serve.problem_cache_bytes` | gauge | resident cost-backend bytes across cached problems |
 //! | `serve.warm_cache_bytes` | gauge | resident warm-cache bytes |
 //! | `serve.warm_cache_evictions` | gauge | cumulative warm-cache LRU evictions |
 //! | `serve.latency_seconds` | hist | end-to-end submit→response (+ fixed buckets) |
@@ -211,6 +212,15 @@ impl ProblemCache {
                 .expect("loop guard implies entries");
             self.entries.remove(&lru);
         }
+    }
+
+    /// Resident cost-backend bytes across all cached problems. Dense
+    /// entries account the full m×n matrix (plus SIMD pack); factored
+    /// entries only their coordinates + norms + tile-ring budget — the
+    /// number an operator watches to see the factored backend's memory
+    /// win.
+    fn cost_bytes(&self) -> usize {
+        self.entries.values().map(|(p, _)| p.prob.cost_bytes()).sum()
     }
 }
 
@@ -426,6 +436,7 @@ impl Engine {
             "service.cache_misses",
         ]);
         state.metrics.set_gauge("serve.queue_depth", 0.0);
+        state.metrics.set_gauge("serve.problem_cache_bytes", 0.0);
         state.metrics.set_gauge("serve.warm_cache_bytes", 0.0);
         state.metrics.set_gauge("serve.warm_cache_evictions", 0.0);
         // Fixed Prometheus-style buckets alongside the percentile
@@ -630,14 +641,19 @@ fn cached_problem(
             // Checked conversion: generated marginals/costs are audited
             // (finite costs, positive mass) instead of trusted, so a
             // buggy or adversarial generator yields a structured error
-            // the breaker can count, never a poisoned cache entry.
-            let prob = OtProblem::try_from_dataset(&pair)?;
+            // the breaker can count, never a poisoned cache entry. The
+            // configured cost backend decides whether the cache holds a
+            // resident m×n matrix or factored coordinates + norms.
+            let prob =
+                OtProblem::try_from_dataset_mode(&pair, spec.effective_cost(state.cfg.solve.cost))?;
             let cached = Arc::new(CachedProblem { pair, prob });
-            plock(&state.problems).insert(
-                key,
-                Arc::clone(&cached),
-                state.cfg.problem_cache_entries,
-            );
+            let mut problems = plock(&state.problems);
+            problems.insert(key, Arc::clone(&cached), state.cfg.problem_cache_entries);
+            let bytes = problems.cost_bytes();
+            drop(problems);
+            state
+                .metrics
+                .set_gauge("serve.problem_cache_bytes", bytes as f64);
             Ok(cached)
         });
     drop(build_guard);
@@ -1032,6 +1048,39 @@ mod tests {
         }
         assert_eq!(engine.metrics().get("serve.solves"), 2);
         engine.shutdown();
+    }
+
+    #[test]
+    fn factored_cost_backend_serves_byte_identical_results() {
+        use crate::ot::cost::CostMode;
+        let solve = |mode: CostMode| {
+            let engine = tiny_engine(ServeConfig {
+                workers: 1,
+                solve: crate::ot::solve::SolveOptions::new()
+                    .lbfgs(tight_lbfgs())
+                    .cost(mode),
+                ..Default::default()
+            });
+            let reply = engine.submit(request(7, 0.8, 0.4)).expect("solve");
+            let bytes = engine
+                .metrics()
+                .gauge("serve.problem_cache_bytes")
+                .expect("gauge registered at start");
+            let mode_name = reply.problem.prob.cost_mode_name();
+            let out = (reply.result.dual_objective, reply.result.x.clone(), bytes, mode_name);
+            engine.shutdown();
+            out
+        };
+        let (obj_d, x_d, bytes_d, name_d) = solve(CostMode::Dense);
+        let (obj_f, x_f, bytes_f, name_f) = solve(CostMode::Factored);
+        assert_eq!(name_d, "dense");
+        assert_eq!(name_f, "factored");
+        assert!(bytes_d > 0.0 && bytes_f > 0.0, "dense={bytes_d} factored={bytes_f}");
+        assert_eq!(obj_d.to_bits(), obj_f.to_bits());
+        assert_eq!(x_d.len(), x_f.len());
+        for (a, b) in x_d.iter().zip(&x_f) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

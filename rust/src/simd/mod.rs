@@ -228,7 +228,7 @@ mod tests {
                 let (psi, mass) = group_grad_contrib(
                     &alpha,
                     beta4[t],
-                    &cols[t],
+                    &cols[t][start..start + g],
                     start..start + g,
                     &consts,
                     &mut ga_ref,

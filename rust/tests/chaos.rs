@@ -8,10 +8,11 @@
 //! mid-solve — every submitted request receives exactly one structured
 //! response and the engine keeps serving afterwards.
 
-use grpot::coordinator::config::{DatasetSpec, Method};
+use grpot::coordinator::config::{DatasetSpec, Method, SweepConfig};
 use grpot::coordinator::metrics::Metrics;
 use grpot::coordinator::service::{serve_with, Client};
-use grpot::fault::{self, sites, Action};
+use grpot::coordinator::{registry, sweep};
+use grpot::fault::{self, sites, Action, CancelToken};
 use grpot::jsonlite::Value;
 use grpot::ot::regularizer::RegKind;
 use grpot::ot::solve::SolveOptions;
@@ -298,6 +299,69 @@ fn every_site_and_action_leaves_the_engine_answering() {
             engine.shutdown();
         }
     }
+}
+
+/// Sub-eval cancellation checkpoint: a token cancelled before the solve
+/// starts must stop it inside the *first* oracle evaluation's column
+/// chunks (one relaxed load per chunk), surfacing `Cancelled` after
+/// zero completed iterations — while an armed-but-never-fired token
+/// leaves every byte of the result untouched.
+#[test]
+fn sub_eval_cancellation_stops_first_eval_and_armed_token_is_byte_neutral() {
+    let _g = arm(&[]); // no faults; lock still serializes the suite
+    let pair = registry::build_pair(&tiny_spec(61)).expect("pair");
+    let prob = grpot::ot::dual::OtProblem::from_dataset(&pair);
+    let base = SolveOptions::new().gamma(0.7).rho(0.5).max_iters(200);
+
+    // Pre-cancelled: the per-chunk poll inside eval sees it immediately.
+    let dead = CancelToken::new();
+    dead.cancel();
+    let cancelled = grpot::ot::fastot::solve(&prob, &base.clone().cancel(dead))
+        .expect("cancellation is a stop reason, not an error");
+    assert_eq!(cancelled.stop, grpot::solvers::StopReason::Cancelled);
+    assert_eq!(cancelled.iterations, 0, "no iteration may complete after cancel");
+
+    // Armed but never fired: byte-identical to running with no token,
+    // across both oracle families (screened fast + dense origin).
+    let far = std::time::Instant::now() + Duration::from_secs(3600);
+    for method in [Method::Fast, Method::Origin] {
+        let plain = sweep::solve(&prob, method, &base).expect("plain solve");
+        let armed_opts = base.clone().cancel(CancelToken::with_deadline(far));
+        let armed = sweep::solve(&prob, method, &armed_opts).expect("armed solve");
+        assert_eq!(plain.dual_objective.to_bits(), armed.dual_objective.to_bits());
+        assert_eq!(plain.iterations, armed.iterations);
+        assert_eq!(plain.x.len(), armed.x.len());
+        for (a, b) in plain.x.iter().zip(&armed.x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{} iterate drifted", method.name());
+        }
+    }
+}
+
+/// The `sweep.job` failpoint makes the sweep coordinator surface a
+/// structured error — the grid stops cleanly in both the serial and the
+/// threaded scheduler instead of killing a worker or hanging the pool.
+#[test]
+fn sweep_job_failpoint_surfaces_structured_error() {
+    let _g = arm(&[(sites::SWEEP_JOB, Action::Err, 1)]);
+    let cfg = SweepConfig {
+        dataset: tiny_spec(67),
+        gammas: vec![0.5, 1.0],
+        rhos: vec![0.5],
+        methods: vec![Method::Fast],
+        threads: 1,
+        solve: SolveOptions::new().max_iters(50).regularizer(RegKind::GroupLasso),
+    };
+    let metrics = Metrics::new();
+    let err = sweep::run_sweep(&cfg, &metrics).expect_err("failpoint must surface");
+    assert!(err.to_string().contains("sweep.job"), "unexpected error: {err}");
+    let threaded = SweepConfig { threads: 2, ..cfg.clone() };
+    let err = sweep::run_sweep(&threaded, &metrics).expect_err("threaded failpoint");
+    assert!(err.to_string().contains("sweep.job"), "unexpected error: {err}");
+
+    // Registry healed: the identical grid runs to completion.
+    fault::clear();
+    let report = sweep::run_sweep(&cfg, &metrics).expect("post-chaos sweep");
+    assert_eq!(report.records.len(), 2);
 }
 
 /// Wire-level chaos: garbage bytes, malformed/hostile fields, and

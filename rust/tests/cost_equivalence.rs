@@ -1,0 +1,212 @@
+//! Dense/factored cost-backend byte-equality, end to end: for one point
+//! cloud, `CostMode::Dense` (the resident n×m matrix) and
+//! `CostMode::Factored` (coordinates + squared norms, tiles synthesized
+//! on demand) must return *byte-equal* solutions, objectives, iteration
+//! counts and `OracleStats` — for the screened, dense and semi-dual
+//! methods, cold and warm-started, under scalar and vector dispatch, at
+//! 1 and 4 oracle threads. The one deliberately excluded counter is
+//! `tiles_built`: it is how much cost synthesis each backend paid
+//! (always 0 for dense, dispatch-dependent for factored), a throughput
+//! diagnostic rather than solver output.
+//!
+//! The `GRPOT_COST=factored` CI shard re-runs this suite (plus the
+//! theorem2 and parallel-determinism suites) with the env default
+//! flipped; both sides of every comparison here force an explicit mode,
+//! so the assertions stay genuine dense-vs-factored crosses under any
+//! env.
+
+use grpot::linalg::Mat;
+use grpot::ot::cost::CostMode;
+use grpot::ot::dual::{OracleStats, OtProblem};
+use grpot::ot::fastot::{solve_fast_ot, solve_fast_ot_from, FastOtConfig, FastOtResult};
+use grpot::ot::origin::{solve_origin, solve_origin_from};
+use grpot::ot::semidual::solve_semidual_simd;
+use grpot::rng::Pcg64;
+use grpot::simd::SimdMode;
+use grpot::solvers::lbfgs::LbfgsOptions;
+
+/// One point cloud, two problem builds: byte-equal inputs, different
+/// cost representations. `l` groups of `g` source points each, `n`
+/// targets, dimension `d`.
+fn point_problems(seed: u64, l: usize, g: usize, n: usize, d: usize) -> (OtProblem, OtProblem) {
+    let mut rng = Pcg64::new(seed);
+    let m = l * g;
+    let xs = Mat::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
+    let xt = Mat::from_fn(n, d, |_, _| rng.uniform(-1.0, 1.0));
+    let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+    let dense = OtProblem::try_from_points(&xs, &labels, &xt, CostMode::Dense).expect("dense");
+    let fact = OtProblem::try_from_points(&xs, &labels, &xt, CostMode::Factored).expect("factored");
+    assert!(!dense.is_factored() && fact.is_factored());
+    (dense, fact)
+}
+
+/// Field-wise equality *except* `tiles_built` — the only stat allowed
+/// to differ across backends (see module doc).
+fn assert_stats_eq(a: &OracleStats, b: &OracleStats, what: &str) {
+    assert_eq!(a.evals, b.evals, "{what}: evals");
+    assert_eq!(a.grads_computed, b.grads_computed, "{what}: grads_computed");
+    assert_eq!(a.grads_skipped, b.grads_skipped, "{what}: grads_skipped");
+    assert_eq!(a.ub_checks, b.ub_checks, "{what}: ub_checks");
+    assert_eq!(a.ws_hits, b.ws_hits, "{what}: ws_hits");
+    assert_eq!(a.per_eval_grads, b.per_eval_grads, "{what}: per_eval_grads");
+}
+
+/// `dense` vs `factored` result: solver output must be byte-equal, and
+/// the synthesis counter must prove which backend did the synthesizing.
+fn assert_backends_identical(dense: &FastOtResult, fact: &FastOtResult, what: &str) {
+    assert_eq!(dense.x, fact.x, "{what}: solution bytes");
+    assert_eq!(dense.dual_objective, fact.dual_objective, "{what}: objective");
+    assert_eq!(dense.iterations, fact.iterations, "{what}: iterations");
+    assert_eq!(dense.outer_rounds, fact.outer_rounds, "{what}: outer rounds");
+    assert_stats_eq(&dense.stats, &fact.stats, what);
+    assert_eq!(dense.stats.tiles_built, 0, "{what}: dense never synthesizes");
+    assert!(fact.stats.tiles_built > 0, "{what}: factored must synthesize");
+}
+
+fn cfg(gamma: f64, rho: f64, threads: usize, simd: SimdMode) -> FastOtConfig {
+    FastOtConfig {
+        gamma,
+        rho,
+        threads,
+        simd,
+        lbfgs: LbfgsOptions { max_iters: 120, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The acceptance-criterion test: dense vs factored are byte-equal for
+/// `solve_fast_ot` and `solve_origin` across hyperparameters hitting
+/// both the skip-heavy and the dense regime, under scalar and
+/// runtime-dispatched vector kernels, at 1 and 4 threads, cold start.
+#[test]
+fn fast_and_origin_bit_identical_across_backends() {
+    // n = 37: multiple fixed chunks, ragged panels, a short final chunk
+    // (leftover columns exercise the factored per-segment fallback).
+    let (dense, fact) = point_problems(0xC057, 5, 4, 37, 3);
+    for (gamma, rho) in [(0.1, 0.3), (1.0, 0.5), (8.0, 0.8)] {
+        for threads in [1usize, 4] {
+            for simd in [SimdMode::Scalar, SimdMode::Auto] {
+                let what = format!("γ={gamma} ρ={rho} threads={threads} simd={simd:?}");
+                let fast_d = solve_fast_ot(&dense, &cfg(gamma, rho, threads, simd));
+                let fast_f = solve_fast_ot(&fact, &cfg(gamma, rho, threads, simd));
+                assert_backends_identical(&fast_d, &fast_f, &format!("fast {what}"));
+                let orig_d = solve_origin(&dense, &cfg(gamma, rho, threads, simd));
+                let orig_f = solve_origin(&fact, &cfg(gamma, rho, threads, simd));
+                assert_backends_identical(&orig_d, &orig_f, &format!("origin {what}"));
+                // Theorem 2 must keep holding across methods under
+                // either backend.
+                assert_eq!(fast_f.dual_objective, orig_f.dual_objective);
+                assert_eq!(fast_f.x, orig_f.x);
+            }
+        }
+    }
+}
+
+/// Warm starts compose with the backend: dense and factored solves
+/// seeded at the same arbitrary iterate stay byte-equal (snapshots
+/// start at the warm point, so the screened walk immediately exercises
+/// the mixed-activity tile-synthesis lanes).
+#[test]
+fn warm_started_solves_bit_identical_across_backends() {
+    let (dense, fact) = point_problems(0xC058, 4, 3, 33, 2);
+    let mut rng = Pcg64::new(99);
+    let x0: Vec<f64> = (0..dense.dim()).map(|_| rng.uniform(-0.2, 0.3)).collect();
+    for threads in [1usize, 4] {
+        for simd in [SimdMode::Scalar, SimdMode::Auto] {
+            let what = format!("warm threads={threads} simd={simd:?}");
+            let c = cfg(0.6, 0.55, threads, simd);
+            let fast_d = solve_fast_ot_from(&dense, &c, x0.clone());
+            let fast_f = solve_fast_ot_from(&fact, &c, x0.clone());
+            assert_backends_identical(&fast_d, &fast_f, &format!("fast {what}"));
+            let orig_d = solve_origin_from(&dense, &c, x0.clone());
+            let orig_f = solve_origin_from(&fact, &c, x0.clone());
+            assert_backends_identical(&orig_d, &orig_f, &format!("origin {what}"));
+        }
+    }
+}
+
+/// Semi-dual: the column staging reads whole cost columns, which the
+/// factored backend synthesizes per chunk — alpha, objective,
+/// iterations and the recovered plan must be byte-equal end to end.
+#[test]
+fn semidual_bit_identical_across_backends() {
+    let (dense, fact) = point_problems(0xC059, 3, 4, 41, 3);
+    let opts = LbfgsOptions { max_iters: 200, ..Default::default() };
+    for threads in [1usize, 4] {
+        for simd in [SimdMode::Scalar, SimdMode::Auto] {
+            let d = solve_semidual_simd(&dense, 0.2, &opts, threads, simd);
+            let f = solve_semidual_simd(&fact, 0.2, &opts, threads, simd);
+            let what = format!("threads={threads} simd={simd:?}");
+            assert_eq!(d.alpha, f.alpha, "{what}: alpha bytes");
+            assert_eq!(d.objective, f.objective, "{what}: objective");
+            assert_eq!(d.iterations, f.iterations, "{what}: iterations");
+            assert_eq!(d.plan, f.plan, "{what}: plan");
+        }
+    }
+}
+
+/// The second acceptance criterion: screened-out groups never pay cost
+/// synthesis. Under scalar dispatch the factored backend synthesizes
+/// exactly one segment per *computed* group gradient
+/// (`tiles_built == grads_computed` by construction of `scalar_pair`),
+/// so a skip-heavy screened solve proves the claim arithmetically:
+/// the skipped (group, column) pairs — a strictly positive count —
+/// contributed zero synthesis.
+#[test]
+fn screened_groups_never_synthesize_tiles() {
+    let (dense, fact) = point_problems(0xC05A, 5, 4, 37, 3);
+    // (0.1, 0.3) is the skip-heavy regime (same grid as above).
+    let c = cfg(0.1, 0.3, 1, SimdMode::Scalar);
+    let fast_f = solve_fast_ot(&fact, &c);
+    assert!(fast_f.stats.grads_skipped > 0, "config must exercise screening");
+    assert_eq!(
+        fast_f.stats.tiles_built, fast_f.stats.grads_computed,
+        "scalar factored synthesis is one segment per computed gradient"
+    );
+    // The unscreened baseline synthesizes for every pair it touches too
+    // — and touches strictly more of them per eval.
+    let orig_f = solve_origin(&fact, &c);
+    assert_eq!(orig_f.stats.grads_skipped, 0);
+    assert_eq!(orig_f.stats.tiles_built, orig_f.stats.grads_computed);
+    // Dense never synthesizes, whatever the method.
+    assert_eq!(solve_fast_ot(&dense, &c).stats.tiles_built, 0);
+    assert_eq!(solve_origin(&dense, &c).stats.tiles_built, 0);
+    // Vector dispatch amortizes synthesis across the tile ring: strictly
+    // positive, never more than one build per computed gradient.
+    let fast_v = solve_fast_ot(&fact, &cfg(0.1, 0.3, 1, SimdMode::Auto));
+    assert!(fast_v.stats.tiles_built > 0);
+    assert!(fast_v.stats.tiles_built <= fast_v.stats.grads_computed);
+}
+
+/// `try_from_points` rejects malformed inputs with structured errors
+/// instead of panicking deep inside the solver.
+#[test]
+fn try_from_points_validates_inputs() {
+    let xs = Mat::from_fn(4, 2, |i, c| (i * 2 + c) as f64);
+    let xt = Mat::from_fn(3, 2, |i, c| (i + c) as f64);
+    let labels = vec![0, 0, 1, 1];
+    let fail = |xs: &Mat, lb: &[usize], xt: &Mat, frag: &str| {
+        for mode in [CostMode::Dense, CostMode::Factored] {
+            let err = match OtProblem::try_from_points(xs, lb, xt, mode) {
+                Ok(_) => panic!("{frag}: must fail under {mode:?}"),
+                Err(e) => e.to_string(),
+            };
+            assert!(err.contains(frag), "{mode:?}: {err:?} should mention {frag:?}");
+        }
+    };
+    fail(&Mat::from_fn(0, 2, |_, _| 0.0), &[], &xt, "empty point set");
+    fail(&xs, &labels, &Mat::from_fn(0, 2, |_, _| 0.0), "empty point set");
+    fail(&Mat::from_fn(4, 0, |_, _| 0.0), &labels, &Mat::from_fn(3, 0, |_, _| 0.0), "dimension");
+    fail(&xs, &labels, &Mat::from_fn(3, 5, |_, _| 0.0), "dimension mismatch");
+    fail(&xs, &[0, 1], &xt, "labels");
+    fail(&Mat::from_fn(4, 2, |_, _| f64::NAN), &labels, &xt, "non-finite");
+    fail(&xs, &labels, &Mat::from_fn(3, 2, |_, _| f64::INFINITY), "non-finite");
+    // And the happy path reports its backend + memory footprint: the
+    // factored build must be resident-smaller than the dense matrix
+    // even at toy sizes (4·3 entries vs (4+3)·(2+1) scalars).
+    let d = OtProblem::try_from_points(&xs, &labels, &xt, CostMode::Dense).expect("dense");
+    let f = OtProblem::try_from_points(&xs, &labels, &xt, CostMode::Factored).expect("factored");
+    assert_eq!(d.cost_mode_name(), "dense");
+    assert_eq!(f.cost_mode_name(), "factored");
+    assert!(f.cost_bytes() < d.cost_bytes(), "{} !< {}", f.cost_bytes(), d.cost_bytes());
+}

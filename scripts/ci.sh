@@ -17,6 +17,11 @@
 #      entry point, plus simd_equivalence and parallel_determinism, so
 #      both dispatch paths (scalar and runtime-selected SIMD) are gated
 #      on every push — the default runs above exercise auto dispatch
+#   6b. GRPOT_COST=factored shard: cost_equivalence, theorem2_equivalence
+#      and parallel_determinism re-run with the factored cost backend as
+#      the env default, so every Auto-mode problem build streams
+#      synthesized tiles instead of the resident matrix — the dense
+#      default is exercised by every other run
 #   7. GRPOT_REG={squared_l2,negentropy} shards: the regularizer env
 #      default is pushed through the trait-dispatched solver path while
 #      theorem2_equivalence re-runs alongside to prove the pinned
@@ -35,9 +40,11 @@
 #  11. bench smoke pass: every bench binary once, GRPOT_BENCH_SMOKE=1
 #      (includes bench_parallel, which asserts thread-count determinism,
 #      the fork-join-vs-persistent dispatch equivalence and the
-#      scalar-vs-SIMD kernel equivalence, and hotpath_microbench, which
-#      now reports per-regularizer trait-oracle rows and the
-#      cancellation-token overhead pair)
+#      scalar-vs-SIMD kernel equivalence; hotpath_microbench, which
+#      reports per-regularizer trait-oracle rows and the
+#      cancellation-token overhead pair; and bench_scale, which asserts
+#      the factored cost backend fits a memory budget the dense
+#      representation exceeds — scaled down in smoke mode)
 #  12. GRPOT_BENCH_SMOKE=1 bash scripts/bench.sh — the perf benches again
 #      through the bench.sh wrapper, checking the machine-readable
 #      bench JSON emission end to end (written to a temp file so a
@@ -87,6 +94,12 @@ GRPOT_SIMD=scalar cargo test -q \
     --test simd_equivalence \
     --test parallel_determinism
 
+step "cargo test -q (GRPOT_COST=factored cost-backend shard)"
+GRPOT_COST=factored cargo test -q \
+    --test cost_equivalence \
+    --test theorem2_equivalence \
+    --test parallel_determinism
+
 for reg in squared_l2 negentropy; do
     step "cargo test -q (GRPOT_REG=$reg regularizer shard)"
     GRPOT_REG="$reg" cargo test -q \
@@ -132,6 +145,7 @@ BENCHES=(
     table1_objective
     hotpath_microbench
     bench_parallel
+    bench_scale
     xla_backend
     bench_serve
 )
