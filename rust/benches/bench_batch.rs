@@ -1,0 +1,91 @@
+//! Batched-vs-sequential solve benchmark (ISSUE 10's tentpole payoff):
+//! K (γ, ρ) problems over one dataset, solved K-times sequentially vs
+//! once through the fused `solve_batched` lockstep pass. The fused pass
+//! reads each surviving cost segment once per group instead of once per
+//! lane, so the win is data movement — results are *asserted*
+//! byte-equal before a single timing iteration runs, making the gain
+//! impossible to buy with drift.
+//!
+//! Honors the standard bench modes (`GRPOT_BENCH_SMOKE`,
+//! `GRPOT_BENCH_QUICK`); emits `reports/bench_batch.{md,csv}`.
+
+mod common;
+
+use common::*;
+use grpot::benchlib::{bench_fn, report_dir, BenchOptions, Table};
+use grpot::data::synthetic;
+use grpot::ot::batch::solve_batched;
+use grpot::ot::fastot;
+use grpot::ot::regularizer::RegKind;
+use grpot::ot::solve::SolveOptions;
+
+/// K heterogeneous lanes off a fixed (γ, ρ) grid, group-lasso (the
+/// batchable regularizer), serial oracle.
+fn lane_opts(k: usize, max_iters: usize) -> Vec<SolveOptions> {
+    const GAMMAS: [f64; 8] = [0.2, 0.7, 1.5, 4.0, 0.1, 9.0, 0.4, 2.5];
+    const RHOS: [f64; 8] = [0.3, 0.6, 0.8, 0.45, 0.2, 0.7, 0.55, 0.35];
+    (0..k)
+        .map(|i| {
+            SolveOptions::new()
+                .gamma(GAMMAS[i % 8])
+                .rho(RHOS[i % 8])
+                .max_iters(max_iters)
+                .regularizer(RegKind::GroupLasso)
+        })
+        .collect()
+}
+
+fn main() {
+    banner("batched solve");
+    let l = size3(6, 24, 80);
+    let pair = synthetic::controlled_classes(l, 10, 0xBA7C);
+    let prob = problem_of(&pair);
+    let mi = size3(15, 60, 200);
+    println!("problem: m=n={} |L|={} max_iters={mi}", prob.m(), l);
+    let opts = BenchOptions { warmup: 1, iters: size3(2, 6, 12), max_seconds: 180.0 };
+
+    let mut table = Table::new(
+        "batched vs sequential solves",
+        &["K", "t_seq[ms]", "t_batch[ms]", "speedup", "equal"],
+    );
+    for k in [2usize, 4, 8] {
+        let lanes = lane_opts(k, mi);
+        // The correctness gate: every batched lane must byte-equal its
+        // sequential solve *before* anything is timed.
+        let batched = solve_batched(&prob, &lanes).expect("batched solve");
+        for (i, o) in lanes.iter().enumerate() {
+            let seq = fastot::solve(&prob, o).expect("sequential solve");
+            assert_eq!(batched[i].x, seq.x, "K={k} lane {i}: solution bytes diverged");
+            assert_eq!(
+                batched[i].dual_objective, seq.dual_objective,
+                "K={k} lane {i}: objective diverged"
+            );
+            assert_eq!(
+                batched[i].iterations, seq.iterations,
+                "K={k} lane {i}: iteration count diverged"
+            );
+        }
+        let t_seq = bench_fn("sequential", &opts, || {
+            for o in &lanes {
+                let _ = fastot::solve(&prob, o).expect("sequential solve");
+            }
+        })
+        .seconds()
+            * 1e3;
+        let t_batch = bench_fn("batched", &opts, || {
+            let _ = solve_batched(&prob, &lanes).expect("batched solve");
+        })
+        .seconds()
+            * 1e3;
+        let speedup = t_seq / t_batch.max(1e-9);
+        println!("K={k:<2} sequential {t_seq:>9.2} ms  batched {t_batch:>9.2} ms  {speedup:.2}x");
+        table.row(vec![
+            format!("{k}"),
+            format!("{t_seq:.2}"),
+            format!("{t_batch:.2}"),
+            format!("{speedup:.2}x"),
+            "ok".into(), // the asserts above abort on any mismatch
+        ]);
+    }
+    table.emit(&report_dir(), "bench_batch");
+}

@@ -226,6 +226,14 @@ impl Metrics {
         self.gauges.lock().unwrap().get(name).copied()
     }
 
+    /// Remove a gauge series entirely (reads return None afterwards).
+    /// Used for per-key labeled gauges — e.g. the serving engine's
+    /// `serve.breaker_state{dataset="…"}` — so the exported series set
+    /// stays bounded by the live key set instead of growing forever.
+    pub fn remove_gauge(&self, name: &str) {
+        self.gauges.lock().unwrap().remove(name);
+    }
+
     /// Register a fixed-bucket histogram under `name` with the given
     /// ascending upper bounds (`+Inf` implicit). Subsequent
     /// `observe_hist(name, …)` calls feed both the percentile window

@@ -429,13 +429,64 @@ pub fn run_sweep(cfg: &SweepConfig, metrics: &Metrics) -> Result<SweepReport> {
         // One long-lived ctx (one parked worker set) reused across the
         // whole grid: the per-solve spawn cost disappears entirely.
         let ctx = ParallelCtx::new(solve_threads);
+        // With `--batch-k`/`GRPOT_BATCH_K` above 1, consecutive
+        // same-method group-lasso jobs — the (γ, ρ) grid's natural
+        // shape — coalesce into K-lane batched solves
+        // ([`crate::ot::batch::solve_batched`]). Records stay
+        // byte-identical to sequential ones (the batched oracle's hard
+        // contract); only the wall clock moves.
+        let batch_k = cfg.solve.resolve_batch_k()?;
+        let batchable = batch_k > 1 && cfg.solve.resolve_regularizer()? == RegKind::GroupLasso;
         let mut recs = Vec::with_capacity(jobs.len());
-        for &(m, g, r) in &jobs {
-            let opts = cfg.solve.clone().gamma(g).rho(r).ctx(ctx.clone());
-            let rec = run_job_opts(&prob, m, &opts)?;
-            metrics.incr("sweep.jobs_done", 1);
-            metrics.observe("sweep.job_seconds", rec.wall_time_s);
-            recs.push(rec);
+        let mut i = 0;
+        while i < jobs.len() {
+            let (m, g, r) = jobs[i];
+            let mut run = 1;
+            if batchable && matches!(m, Method::Fast | Method::FastNoWs) {
+                while run < batch_k && i + run < jobs.len() && jobs[i + run].0 == m {
+                    run += 1;
+                }
+            }
+            if run > 1 {
+                // Per-job failpoint parity with `run_job_opts`.
+                for _ in 0..run {
+                    crate::fault::check(crate::fault::sites::SWEEP_JOB)?;
+                }
+                let group: Vec<SolveOptions> = jobs[i..i + run]
+                    .iter()
+                    .map(|&(_, g, r)| {
+                        cfg.solve
+                            .clone()
+                            .gamma(g)
+                            .rho(r)
+                            .ctx(ctx.clone())
+                            .working_set(m != Method::FastNoWs)
+                    })
+                    .collect();
+                let results = crate::ot::batch::solve_batched(&prob, &group)?;
+                for (&(_, g, r), res) in jobs[i..i + run].iter().zip(results) {
+                    let rec = SweepRecord {
+                        method: m,
+                        gamma: g,
+                        rho: r,
+                        wall_time_s: res.wall_time_s,
+                        dual_objective: res.dual_objective,
+                        iterations: res.iterations,
+                        grads_computed: res.stats.grads_computed,
+                        grads_skipped: res.stats.grads_skipped,
+                    };
+                    metrics.incr("sweep.jobs_done", 1);
+                    metrics.observe("sweep.job_seconds", rec.wall_time_s);
+                    recs.push(rec);
+                }
+            } else {
+                let opts = cfg.solve.clone().gamma(g).rho(r).ctx(ctx.clone());
+                let rec = run_job_opts(&prob, m, &opts)?;
+                metrics.incr("sweep.jobs_done", 1);
+                metrics.observe("sweep.job_seconds", rec.wall_time_s);
+                recs.push(rec);
+            }
+            i += run;
         }
         recs
     } else {
@@ -590,6 +641,28 @@ mod tests {
         let fast_max = report.max_objective.iter().find(|(m, _)| *m == Method::Fast).unwrap().1;
         let orig_max = report.max_objective.iter().find(|(m, _)| *m == Method::Origin).unwrap().1;
         assert_eq!(fast_max, orig_max);
+    }
+
+    #[test]
+    fn batched_serial_sweep_matches_sequential_records() {
+        let metrics = Metrics::new();
+        let base = run_sweep(&tiny_cfg(1), &metrics).unwrap();
+        let mut cfg = tiny_cfg(1);
+        cfg.solve = cfg.solve.batch_k(4);
+        let batched = run_sweep(&cfg, &metrics).unwrap();
+        // The fast method's 4 grid jobs ride one 4-lane batched solve;
+        // origin stays sequential. Every record field except wall time
+        // must be byte-identical.
+        assert_eq!(base.records.len(), batched.records.len());
+        for (s, b) in base.records.iter().zip(&batched.records) {
+            assert_eq!(s.method, b.method);
+            assert_eq!(s.gamma, b.gamma);
+            assert_eq!(s.rho, b.rho);
+            assert_eq!(s.dual_objective.to_bits(), b.dual_objective.to_bits());
+            assert_eq!(s.iterations, b.iterations);
+            assert_eq!(s.grads_computed, b.grads_computed);
+            assert_eq!(s.grads_skipped, b.grads_skipped);
+        }
     }
 
     #[test]

@@ -98,6 +98,16 @@ fn app() -> App {
                 "default regularizer for requests that don't name one: \
                  group_lasso|squared_l2|negentropy (default: $GRPOT_REG or group_lasso)",
             ))
+            .arg(ArgSpec::opt(
+                "batch-k",
+                "coalesce up to K same-dataset group-lasso jobs into one fused \
+                 multi-lane solve (default: $GRPOT_BATCH_K or 1 = off)",
+            ))
+            .arg(ArgSpec::opt(
+                "tile-ring-kib",
+                "factored-cost tile-ring budget per chunk in KiB \
+                 (default: $GRPOT_TILE_RING_KIB or 1024)",
+            ))
     };
     App::new(
         "grpot",
@@ -121,6 +131,11 @@ fn app() -> App {
                 "reg",
                 "regularizer: group_lasso|squared_l2|negentropy (default: $GRPOT_REG or group_lasso)",
             ))
+            .arg(ArgSpec::opt(
+                "tile-ring-kib",
+                "factored-cost tile-ring budget per chunk in KiB \
+                 (default: $GRPOT_TILE_RING_KIB or 1024)",
+            ))
             .arg(ArgSpec::switch(
                 "plan-stats",
                 "also recover the plan and print its statistics",
@@ -140,6 +155,16 @@ fn app() -> App {
             .arg(ArgSpec::opt(
                 "reg",
                 "regularizer: group_lasso|squared_l2|negentropy (default: $GRPOT_REG or group_lasso)",
+            ))
+            .arg(ArgSpec::opt(
+                "batch-k",
+                "coalesce up to K consecutive same-method group-lasso grid jobs \
+                 into one fused multi-lane solve (default: $GRPOT_BATCH_K or 1 = off)",
+            ))
+            .arg(ArgSpec::opt(
+                "tile-ring-kib",
+                "factored-cost tile-ring budget per chunk in KiB \
+                 (default: $GRPOT_TILE_RING_KIB or 1024)",
             ))
             .arg(ArgSpec::opt("config", "JSON config file (overrides flags)"))
             .arg(ArgSpec::opt("out", "write the JSON report here")),
@@ -234,6 +259,11 @@ fn cmd_solve(m: &grpot::cli::Matches) -> Result<()> {
     if let Some(s) = m.get("reg") {
         opts = opts.regularizer(RegKind::parse(s).context("--reg")?);
     }
+    // An explicit --tile-ring-kib wins over GRPOT_TILE_RING_KIB (same
+    // explicit-beats-env policy as --simd / --reg / --cost).
+    if m.get("tile-ring-kib").is_some() {
+        opts = opts.tile_ring_kib(m.get_usize("tile-ring-kib")?);
+    }
     let kind = opts.resolve_regularizer()?;
     eprintln!("dataset: {}", registry::describe(&spec));
     let pair = registry::build_pair(&spec)?;
@@ -309,6 +339,14 @@ fn cmd_sweep(m: &grpot::cli::Matches) -> Result<()> {
         if let Some(s) = m.get("reg") {
             solve = solve.regularizer(RegKind::parse(s).context("--reg")?);
         }
+        // Explicit batching knobs win over their env defaults
+        // (GRPOT_BATCH_K / GRPOT_TILE_RING_KIB).
+        if m.get("batch-k").is_some() {
+            solve = solve.batch_k(m.get_usize("batch-k")?);
+        }
+        if m.get("tile-ring-kib").is_some() {
+            solve = solve.tile_ring_kib(m.get_usize("tile-ring-kib")?);
+        }
         SweepConfig {
             dataset: dataset_spec(m)?,
             gammas: m.get_f64_list("gammas")?,
@@ -374,6 +412,14 @@ fn engine_config(m: &grpot::cli::Matches) -> Result<ServeConfig, grpot::cli::Cli
             .map_err(|e| grpot::cli::CliError(format!("--reg: {e}")))?;
         solve = solve.regularizer(kind);
     }
+    // Explicit batching knobs win over their env defaults
+    // (GRPOT_BATCH_K / GRPOT_TILE_RING_KIB).
+    if m.get("batch-k").is_some() {
+        solve = solve.batch_k(m.get_usize("batch-k")?);
+    }
+    if m.get("tile-ring-kib").is_some() {
+        solve = solve.tile_ring_kib(m.get_usize("tile-ring-kib")?);
+    }
     solve = solve.cost(cost_mode(m)?);
     Ok(ServeConfig {
         workers: m.get_usize("workers")?,
@@ -411,8 +457,12 @@ fn cmd_serve(m: &grpot::cli::Matches) -> Result<()> {
              the trace file will be empty (set GRPOT_TRACE=spans or full)"
         );
     }
+    let batch_k = cfg.solve.resolve_batch_k().unwrap_or(1);
     let handle = service::serve_with(bind, cfg)?;
     eprintln!("grpot service listening on {}", handle.addr);
+    if batch_k > 1 {
+        eprintln!("batched solves: up to {batch_k} coalesced group-lasso jobs per fused pass");
+    }
     eprintln!("send {{\"op\":\"shutdown\"}} to stop");
     let addr = handle.addr;
     // Stay resident until the service stops accepting pings (shutdown).
@@ -497,14 +547,15 @@ fn cmd_bench_serve(m: &grpot::cli::Matches) -> Result<()> {
         },
     };
     eprintln!(
-        "bench-serve: {} | {} clients × {} cycles × {} grid points | {} workers × {} threads | reg={}",
+        "bench-serve: {} | {} clients × {} cycles × {} grid points | {} workers × {} threads | reg={} batch-k={}",
         registry::describe(&scenario.spec),
         scenario.clients,
         scenario.cycles,
         scenario.gammas.len() * scenario.rhos.len(),
         cfg.workers,
         cfg.solve.threads,
-        scenario.regularizer.name()
+        scenario.regularizer.name(),
+        cfg.solve.resolve_batch_k().unwrap_or(1)
     );
     let report = run_load(cfg, &scenario);
     report.print_summary();
@@ -614,6 +665,20 @@ fn cmd_info() -> Result<()> {
         std::env::var("GRPOT_COST").unwrap_or_else(|_| "unset".into())
     );
     println!(
+        "batch: K={} (GRPOT_BATCH_K={})",
+        SolveOptions::new()
+            .resolve_batch_k()
+            .map_or_else(|_| "invalid".to_string(), |k| k.to_string()),
+        std::env::var("GRPOT_BATCH_K").unwrap_or_else(|_| "unset".into())
+    );
+    println!(
+        "tile ring: {} KiB/chunk (GRPOT_TILE_RING_KIB={})",
+        SolveOptions::new()
+            .resolve_tile_ring_bytes()
+            .map_or_else(|_| "invalid".to_string(), |b| (b >> 10).to_string()),
+        std::env::var("GRPOT_TILE_RING_KIB").unwrap_or_else(|_| "unset".into())
+    );
+    println!(
         "trace: {} (GRPOT_TRACE={}, ring capacity {} spans/thread)",
         grpot::obs::trace_mode().name(),
         std::env::var("GRPOT_TRACE").unwrap_or_else(|_| "unset".into()),
@@ -653,6 +718,18 @@ fn main() {
             eprintln!("GRPOT_COST: {e}");
             std::process::exit(2);
         }
+    }
+    // And the batching knobs: a malformed GRPOT_BATCH_K or
+    // GRPOT_TILE_RING_KIB must fail at launch, not when the first
+    // coalesced batch is assembled inside an engine worker. The
+    // resolvers error only on bad env values (no flag set here).
+    if let Err(e) = SolveOptions::new().resolve_batch_k() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+    if let Err(e) = SolveOptions::new().resolve_tile_ring_bytes() {
+        eprintln!("{e}");
+        std::process::exit(2);
     }
     // And GRPOT_TRACE: validate + latch the tracing mode once at launch
     // (the hot paths read a single atomic thereafter).

@@ -27,6 +27,19 @@ fn prom_name(name: &str) -> String {
     out
 }
 
+/// Split a metric name into its sanitized base and a pass-through label
+/// block: `serve.breaker_state{dataset="k"}` →
+/// (`grpot_serve_breaker_state`, `{dataset="k"}`). Label blocks are
+/// composed by trusted in-process callers (values escaped at the call
+/// site), so they pass through verbatim instead of being mangled to
+/// underscores like ordinary name characters.
+fn prom_series(name: &str) -> (String, String) {
+    match name.split_once('{') {
+        Some((base, labels)) => (prom_name(base), format!("{{{labels}")),
+        None => (prom_name(name), String::new()),
+    }
+}
+
 /// Format a sample value: integers without a decimal point, +Inf as
 /// Prometheus spells it.
 fn prom_num(x: f64) -> String {
@@ -49,19 +62,30 @@ fn header(out: &mut String, name: &str, kind: &str, help: &str) {
 pub fn render(snapshot: &Value) -> String {
     let mut out = String::new();
 
+    // Labeled series under one base name (per-key gauges) share a
+    // single HELP/TYPE header: the BTreeMap's sorted iteration keeps
+    // them adjacent, so tracking the last header emitted suffices.
     if let Some(Value::Obj(counters)) = snapshot.get("counters") {
+        let mut last = String::new();
         for (name, v) in counters {
-            let n = prom_name(name);
-            header(&mut out, &n, "counter", "grpot counter");
-            let _ = writeln!(out, "{n} {}", prom_num(v.as_f64().unwrap_or(0.0)));
+            let (n, labels) = prom_series(name);
+            if n != last {
+                header(&mut out, &n, "counter", "grpot counter");
+                last = n.clone();
+            }
+            let _ = writeln!(out, "{n}{labels} {}", prom_num(v.as_f64().unwrap_or(0.0)));
         }
     }
 
     if let Some(Value::Obj(gauges)) = snapshot.get("gauges") {
+        let mut last = String::new();
         for (name, v) in gauges {
-            let n = prom_name(name);
-            header(&mut out, &n, "gauge", "grpot gauge");
-            let _ = writeln!(out, "{n} {}", prom_num(v.as_f64().unwrap_or(0.0)));
+            let (n, labels) = prom_series(name);
+            if n != last {
+                header(&mut out, &n, "gauge", "grpot gauge");
+                last = n.clone();
+            }
+            let _ = writeln!(out, "{n}{labels} {}", prom_num(v.as_f64().unwrap_or(0.0)));
         }
     }
 
@@ -130,6 +154,34 @@ mod tests {
     fn names_are_sanitized() {
         assert_eq!(prom_name("serve.solve_seconds"), "grpot_serve_solve_seconds");
         assert_eq!(prom_name("a-b c"), "grpot_a_b_c");
+    }
+
+    #[test]
+    fn labeled_series_keep_their_label_block() {
+        let (n, labels) = prom_series("serve.breaker_state{dataset=\"synthetic|3x4\"}");
+        assert_eq!(n, "grpot_serve_breaker_state");
+        assert_eq!(labels, "{dataset=\"synthetic|3x4\"}");
+        let (n, labels) = prom_series("serve.queue_depth");
+        assert_eq!(n, "grpot_serve_queue_depth");
+        assert_eq!(labels, "");
+    }
+
+    #[test]
+    fn labeled_gauges_render_under_one_header() {
+        let snap = Value::obj()
+            .set("counters", Value::obj())
+            .set(
+                "gauges",
+                Value::obj()
+                    .set("serve.breaker_state{dataset=\"a\"}", 1.0)
+                    .set("serve.breaker_state{dataset=\"b\"}", 2.0),
+            )
+            .set("timers", Value::obj())
+            .set("hists", Value::obj());
+        let text = render(&snap);
+        assert_eq!(text.matches("# TYPE grpot_serve_breaker_state gauge").count(), 1);
+        assert!(text.contains("grpot_serve_breaker_state{dataset=\"a\"} 1\n"), "{text}");
+        assert!(text.contains("grpot_serve_breaker_state{dataset=\"b\"} 2\n"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,415 @@
+//! Batched solve-many-at-once driver — K independent (γ, ρ,
+//! warm-start) problems over **one** [`OtProblem`], solved in lockstep
+//! through one fused oracle pass per evaluation round (ISSUE 10's
+//! tentpole).
+//!
+//! Each lane owns a full solver: its own deferred L-BFGS pump
+//! ([`crate::solvers::lbfgs::Lbfgs::deferred`]), screening snapshots,
+//! working set and counters. What is fused is only the oracle
+//! evaluation ([`crate::ot::screening::BatchedOracle::eval_many`]): the
+//! K lanes' pending trial points are evaluated in a single pass over
+//! the cost columns, reading each surviving cost segment once — the
+//! SIMD lanes carry the *same column under K different problems*
+//! instead of four columns of one problem. Stragglers retire as they
+//! converge; the remaining lanes keep batching.
+//!
+//! **Hard contract**: every lane's result — `x`, objective,
+//! iterations, stop reason and every [`OracleStats`] counter except
+//! `tiles_built` (staging is shared, so the factored backend
+//! synthesizes each segment once per K-group) — is byte-identical to
+//! its sequential [`crate::ot::fastot::solve`] at any K, thread count
+//! and SIMD backend. `tests/batch_equivalence.rs` pins this across the
+//! full matrix.
+
+use super::dual::{DualOracle, OracleStats, OtProblem};
+use super::fastot::{self, full_dual_x0, FastOtConfig, FastOtResult};
+use super::regularizer::RegKind;
+use super::screening::{BatchLaneSpec, BatchedOracle};
+use super::solve::SolveOptions;
+use crate::error::Result;
+use crate::obs::report::skipped_fraction;
+use crate::obs::{names, RoundTelemetry, Span};
+use crate::simd::LANES;
+use crate::solvers::lbfgs::{Lbfgs, LbfgsStatus};
+use crate::solvers::StopReason;
+use std::time::Instant;
+
+/// Solve every entry of `opts` against `prob`, batching group-lasso
+/// entries in lockstep groups of up to [`LANES`]; entries with other
+/// regularizers (no screening oracle, hence nothing to fuse) fall back
+/// to the sequential [`fastot::solve`]. Results come back in input
+/// order, each byte-identical to its sequential solve.
+pub fn solve_batched(prob: &OtProblem, opts: &[SolveOptions]) -> Result<Vec<FastOtResult>> {
+    let mut results: Vec<Option<FastOtResult>> = (0..opts.len()).map(|_| None).collect();
+    let mut lasso: Vec<usize> = Vec::new();
+    for (i, opt) in opts.iter().enumerate() {
+        match opt.resolve_regularizer()? {
+            RegKind::GroupLasso => lasso.push(i),
+            _ => results[i] = Some(fastot::solve(prob, opt)?),
+        }
+    }
+    for group in lasso.chunks(LANES) {
+        solve_lane_group(prob, opts, group, &mut results)?;
+    }
+    Ok(results.into_iter().map(|r| r.expect("every entry solved")).collect())
+}
+
+/// The per-round counter tuple the round telemetry diffs (same fields
+/// as the sequential driver's closure).
+fn counters(s: &OracleStats) -> (u64, u64, u64, u64) {
+    (s.grads_computed, s.grads_skipped, s.ub_checks, s.ws_hits)
+}
+
+/// Everything one lane carries besides its pump: config, telemetry
+/// accumulators and the open solve span.
+struct LaneState {
+    /// Index into the caller's `opts`/results.
+    idx: usize,
+    cfg: FastOtConfig,
+    start: Instant,
+    solve_span: Option<Span>,
+    iter_in_block: usize,
+    outer_rounds: usize,
+    observing: bool,
+    prev: (u64, u64, u64, u64),
+    rounds: Vec<RoundTelemetry>,
+    pool_at_start: Option<crate::obs::PoolUtilization>,
+}
+
+impl LaneState {
+    fn round_delta(&mut self, oracle: &dyn DualOracle) {
+        let cur = counters(oracle.stats());
+        self.rounds.push(RoundTelemetry {
+            round: self.rounds.len() as u32 + 1,
+            grads_computed: cur.0 - self.prev.0,
+            grads_skipped: cur.1 - self.prev.1,
+            ub_checks: cur.2 - self.prev.2,
+            ws_hits: cur.3 - self.prev.3,
+            ws_density: oracle.working_set_density(),
+        });
+        self.prev = cur;
+    }
+}
+
+/// The sequential driver's between-iterations checkpoint, in pump form:
+/// refresh after each full block of `r` iterations, then the
+/// cancellation poll, the fault-injection checkpoint, and the solver's
+/// own stop checks (`advance`). Returns `Some(reason)` when the lane is
+/// done, `None` when it has a pending evaluation for the next fused
+/// pass. The order matches [`fastot::drive_from`] exactly, so a lane
+/// stops at the same point — with the same iteration count — as its
+/// sequential solve.
+fn lane_boundary(
+    p: usize,
+    batch: &mut BatchedOracle<'_>,
+    pump: &mut Lbfgs,
+    st: &mut LaneState,
+) -> Option<StopReason> {
+    if st.iter_in_block == st.cfg.r {
+        let _round_span = Span::start_full(names::OUTER_ROUND, st.cfg.trace_id);
+        batch.lane_mut(p).refresh(pump.x());
+        st.outer_rounds += 1;
+        if st.observing {
+            st.round_delta(batch.lane(p));
+        }
+        st.iter_in_block = 0;
+    }
+    if st.cfg.cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+        return Some(StopReason::Cancelled);
+    }
+    // Same escalation as the sequential driver: the batched driver has
+    // no per-lane error channel, so an `err` failpoint panics and the
+    // serving engine's unwind guard structures the failure.
+    if let Err(e) = crate::fault::check(crate::fault::sites::ORACLE_EVAL) {
+        panic!("{e}");
+    }
+    match pump.advance() {
+        LbfgsStatus::NeedEval => None,
+        LbfgsStatus::Stopped(r) => Some(r),
+        LbfgsStatus::Seeded | LbfgsStatus::Iterated => {
+            unreachable!("advance never yields Seeded/Iterated")
+        }
+    }
+}
+
+/// Solve one lockstep group of ≤ [`LANES`] group-lasso entries.
+fn solve_lane_group(
+    prob: &OtProblem,
+    opts_all: &[SolveOptions],
+    idxs: &[usize],
+    results: &mut [Option<FastOtResult>],
+) -> Result<()> {
+    let k = idxs.len();
+    // One shared context for the group: the fused pass parallelizes
+    // over column chunks exactly like a sequential solve, so the first
+    // entry's ctx/threads choice governs (entries coalesced into one
+    // batch are expected to agree — the serving engine and sweep both
+    // pass one engine-wide ctx).
+    let ctx = opts_all[idxs[0]].make_ctx();
+    let mut specs = Vec::with_capacity(k);
+    let mut cfgs: Vec<FastOtConfig> = Vec::with_capacity(k);
+    let mut x0s: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for &i in idxs {
+        let opt = &opts_all[i];
+        let cfg = opt.fastot_config();
+        assert!(cfg.r >= 1, "snapshot interval must be >= 1");
+        specs.push(BatchLaneSpec {
+            params: cfg.params(),
+            use_working_set: cfg.use_working_set,
+            simd: cfg.simd,
+            cancel: cfg.cancel.clone(),
+            ring_budget_bytes: opt.resolve_tile_ring_bytes()?,
+        });
+        x0s.push(full_dual_x0(prob, opt)?);
+        cfgs.push(cfg);
+    }
+    let mut batch = BatchedOracle::new(prob, &specs, ctx);
+
+    let mut states: Vec<LaneState> = Vec::with_capacity(k);
+    let mut pumps: Vec<Lbfgs> = Vec::with_capacity(k);
+    let mut live = vec![true; k];
+    for (p, cfg) in cfgs.into_iter().enumerate() {
+        let observing = cfg.observer.is_some();
+        let pool_at_start = observing.then(|| batch.ctx().pool_stats());
+        let solve_span = Some(Span::start_full(names::SOLVE, cfg.trace_id));
+        // Warm starts refresh the lane's snapshots at x0 before the
+        // seed evaluation, exactly like the sequential driver.
+        if x0s[p].iter().any(|&v| v != 0.0) {
+            batch.lane_mut(p).refresh(&x0s[p]);
+        }
+        let prev = counters(batch.lane(p).stats());
+        let mut pump = Lbfgs::deferred(x0s[p].clone(), cfg.lbfgs.clone());
+        // A deferred pump's first advance always requests the seed
+        // evaluation (no checks precede it — the sequential driver's
+        // seed eval inside `Lbfgs::new` precedes its first checkpoint
+        // too).
+        let _seed_status = pump.advance();
+        debug_assert_eq!(_seed_status, LbfgsStatus::NeedEval);
+        states.push(LaneState {
+            idx: idxs[p],
+            cfg,
+            start: Instant::now(),
+            solve_span,
+            iter_in_block: 0,
+            outer_rounds: 0,
+            observing,
+            prev,
+            rounds: Vec::new(),
+            pool_at_start,
+        });
+        pumps.push(pump);
+    }
+
+    let mut fs = vec![0.0; k];
+    let mut grads: Vec<Vec<f64>> = (0..k).map(|_| vec![0.0; prob.dim()]).collect();
+    while live.iter().any(|&b| b) {
+        // One fused pass evaluates every live lane's pending trial.
+        let xs: Vec<&[f64]> = pumps.iter().map(|s| s.pending()).collect();
+        batch.eval_many(&xs, &live, &mut fs, &mut grads);
+        for p in 0..k {
+            if !live[p] {
+                continue;
+            }
+            let stop = match pumps[p].supply(fs[p], &grads[p]) {
+                // Mid-line-search: the lane's next trial is pending for
+                // the next fused pass, no checkpoint in between (the
+                // sequential pump has none there either).
+                LbfgsStatus::NeedEval => None,
+                LbfgsStatus::Seeded => lane_boundary(p, &mut batch, &mut pumps[p], &mut states[p]),
+                LbfgsStatus::Iterated => {
+                    states[p].iter_in_block += 1;
+                    lane_boundary(p, &mut batch, &mut pumps[p], &mut states[p])
+                }
+                LbfgsStatus::Stopped(r) => Some(r),
+            };
+            if let Some(reason) = stop {
+                finalize_lane(p, reason, &batch, &pumps[p], &mut states[p], results);
+                live[p] = false;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Assemble a retired lane's [`FastOtResult`] and [`SolveReport`] —
+/// the sequential driver's tail, per lane. The pump is read, not
+/// consumed, so the lockstep loop's `pending()` view over all lanes
+/// stays valid.
+///
+/// [`SolveReport`]: crate::obs::SolveReport
+fn finalize_lane(
+    p: usize,
+    stop: StopReason,
+    batch: &BatchedOracle<'_>,
+    pump: &Lbfgs,
+    st: &mut LaneState,
+    results: &mut [Option<FastOtResult>],
+) {
+    let iterations = pump.iterations();
+    let x = pump.x().to_vec();
+    let f = pump.f();
+    let stats = batch.lane(p).stats().clone();
+    let wall_time_s = st.start.elapsed().as_secs_f64();
+    let method = if st.cfg.use_working_set { "fast" } else { "fast-nows" };
+    if let Some(hook) = &st.cfg.observer {
+        if counters(&stats) != st.prev {
+            st.round_delta(batch.lane(p));
+        }
+        let report = crate::obs::SolveReport {
+            method: method.to_string(),
+            trace_id: st.cfg.trace_id,
+            stop: stop.name(),
+            iterations,
+            outer_rounds: st.outer_rounds,
+            evals: stats.evals,
+            line_search_evals: stats.evals.saturating_sub(iterations as u64 + 1),
+            grads_computed: stats.grads_computed,
+            grads_skipped: stats.grads_skipped,
+            ub_checks: stats.ub_checks,
+            ws_hits: stats.ws_hits,
+            tiles_built: stats.tiles_built,
+            skipped_group_fraction: skipped_fraction(stats.grads_computed, stats.grads_skipped),
+            simd_backend: batch.lane(p).dispatch().name(),
+            rounds: std::mem::take(&mut st.rounds),
+            pool: match &st.pool_at_start {
+                Some(at_start) => batch.ctx().pool_stats().since(at_start),
+                None => crate::obs::PoolUtilization::default(),
+            },
+            wall_time_s,
+        };
+        hook.emit(&report);
+    }
+    st.solve_span.take();
+    results[st.idx] = Some(FastOtResult {
+        x,
+        dual_objective: -f,
+        iterations,
+        outer_rounds: st.outer_rounds,
+        stop,
+        stats,
+        wall_time_s,
+        method: method.to_string(),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    fn random_problem(seed: u64, l: usize, g: usize, n: usize) -> OtProblem {
+        let mut rng = Pcg64::new(seed);
+        let m = l * g;
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform(0.0, 1.0));
+        let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+        OtProblem::from_parts(vec![1.0 / m as f64; m], vec![1.0 / n as f64; n], &cost, &labels)
+    }
+
+    fn assert_result_eq(batched: &FastOtResult, seq: &FastOtResult, what: &str) {
+        assert_eq!(batched.x, seq.x, "x {what}");
+        assert_eq!(batched.dual_objective, seq.dual_objective, "objective {what}");
+        assert_eq!(batched.iterations, seq.iterations, "iterations {what}");
+        assert_eq!(batched.outer_rounds, seq.outer_rounds, "outer_rounds {what}");
+        assert_eq!(batched.stop, seq.stop, "stop {what}");
+        assert_eq!(batched.method, seq.method, "method {what}");
+        let (a, b) = (&batched.stats, &seq.stats);
+        assert_eq!(a.evals, b.evals, "evals {what}");
+        assert_eq!(a.grads_computed, b.grads_computed, "grads_computed {what}");
+        assert_eq!(a.grads_skipped, b.grads_skipped, "grads_skipped {what}");
+        assert_eq!(a.ub_checks, b.ub_checks, "ub_checks {what}");
+        assert_eq!(a.ws_hits, b.ws_hits, "ws_hits {what}");
+        assert_eq!(a.per_eval_grads, b.per_eval_grads, "per_eval_grads {what}");
+    }
+
+    /// The module-level smoke of the hard contract (the full
+    /// K × dispatch × threads × backend matrix lives in
+    /// `tests/batch_equivalence.rs`): a heterogeneous 4-lane batch must
+    /// reproduce each sequential solve byte-for-byte.
+    #[test]
+    fn batched_group_matches_sequential_solves() {
+        let prob = random_problem(21, 4, 3, 9);
+        let gammas_rhos = [(0.5, 0.6), (1.5, 0.3), (0.2, 0.8), (5.0, 0.7)];
+        let opts: Vec<SolveOptions> = gammas_rhos
+            .iter()
+            .map(|&(gamma, rho)| {
+                SolveOptions::new().gamma(gamma).rho(rho).max_iters(60).regularizer(RegKind::GroupLasso)
+            })
+            .collect();
+        let batched = solve_batched(&prob, &opts).unwrap();
+        assert_eq!(batched.len(), opts.len());
+        for (i, opt) in opts.iter().enumerate() {
+            let seq = fastot::solve(&prob, opt).unwrap();
+            assert_result_eq(&batched[i], &seq, &format!("lane {i}"));
+        }
+    }
+
+    /// Non-group-lasso entries interleave with batched lanes and fall
+    /// back to the sequential solver, with input order preserved.
+    #[test]
+    fn mixed_regularizers_fall_back_per_entry() {
+        let prob = random_problem(9, 3, 3, 7);
+        let opts = vec![
+            SolveOptions::new().gamma(0.5).rho(0.5).max_iters(40).regularizer(RegKind::GroupLasso),
+            SolveOptions::new().gamma(0.5).max_iters(40).regularizer(RegKind::SquaredL2),
+            SolveOptions::new().gamma(1.2).rho(0.4).max_iters(40).regularizer(RegKind::GroupLasso),
+        ];
+        let batched = solve_batched(&prob, &opts).unwrap();
+        for (i, opt) in opts.iter().enumerate() {
+            let seq = fastot::solve(&prob, opt).unwrap();
+            assert_eq!(batched[i].x, seq.x, "entry {i}");
+            assert_eq!(batched[i].method, seq.method, "entry {i}");
+        }
+        assert_eq!(batched[1].method, "fast+squared_l2");
+    }
+
+    /// More entries than LANES: the driver forms consecutive lockstep
+    /// groups and every one still matches its sequential solve.
+    #[test]
+    fn groups_of_more_than_lanes_chunk_correctly() {
+        let prob = random_problem(33, 3, 4, 8);
+        let opts: Vec<SolveOptions> = (0..LANES + 3)
+            .map(|i| {
+                SolveOptions::new()
+                    .gamma(0.3 + 0.2 * i as f64)
+                    .rho(0.1 + 0.1 * (i % 5) as f64)
+                    .max_iters(40)
+                    .regularizer(RegKind::GroupLasso)
+            })
+            .collect();
+        let batched = solve_batched(&prob, &opts).unwrap();
+        for (i, opt) in opts.iter().enumerate() {
+            let seq = fastot::solve(&prob, opt).unwrap();
+            assert_result_eq(&batched[i], &seq, &format!("entry {i}"));
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let prob = random_problem(5, 3, 3, 5);
+        assert!(solve_batched(&prob, &[]).unwrap().is_empty());
+    }
+
+    /// A pre-cancelled lane retires at its first checkpoint with zero
+    /// iterations — without disturbing its batchmates.
+    #[test]
+    fn cancelled_lane_retires_without_disturbing_others() {
+        let prob = random_problem(5, 3, 3, 6);
+        let token = crate::fault::CancelToken::new();
+        token.cancel();
+        let opts = vec![
+            SolveOptions::new().gamma(0.5).rho(0.5).max_iters(40).regularizer(RegKind::GroupLasso),
+            SolveOptions::new()
+                .gamma(0.5)
+                .rho(0.5)
+                .max_iters(40)
+                .regularizer(RegKind::GroupLasso)
+                .cancel(token),
+        ];
+        let batched = solve_batched(&prob, &opts).unwrap();
+        assert_eq!(batched[1].stop, StopReason::Cancelled);
+        assert_eq!(batched[1].iterations, 0);
+        let seq = fastot::solve(&prob, &opts[0]).unwrap();
+        assert_result_eq(&batched[0], &seq, "uncancelled lane");
+    }
+}

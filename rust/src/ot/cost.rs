@@ -309,6 +309,26 @@ impl std::fmt::Debug for CostMatrix {
 /// the factored memory model stays O((m+n)·d + const).
 pub const TILE_RING_BUDGET_BYTES: usize = 1 << 20;
 
+/// Resolve the effective per-chunk tile-ring budget in bytes: the
+/// explicit KiB value when given, else `GRPOT_TILE_RING_KIB`, else
+/// [`TILE_RING_BUDGET_BYTES`]. A malformed or zero env value is an
+/// error (the CLI launch-validates it; library callers on infallible
+/// paths fall back to the default instead).
+pub fn resolve_tile_ring_bytes(explicit_kib: Option<usize>) -> Result<usize> {
+    if let Some(kib) = explicit_kib {
+        return Ok(kib.max(1) * 1024);
+    }
+    match std::env::var("GRPOT_TILE_RING_KIB") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(kib) if kib >= 1 => Ok(kib * 1024),
+            _ => Err(err!(
+                "GRPOT_TILE_RING_KIB must be a positive integer (KiB), got '{s}'"
+            )),
+        },
+        Err(_) => Ok(TILE_RING_BUDGET_BYTES),
+    }
+}
+
 /// A small FIFO cache of synthesized (panel, group) cost tiles, one per
 /// column-chunk scratch slot (so no sharing, no locks, and the
 /// deterministic chunk→slot assignment is untouched). Entries hold
@@ -343,8 +363,19 @@ impl TileRing {
     /// slots as [`TILE_RING_BUDGET_BYTES`] allows (at least 2, so an
     /// eviction can never thrash a single-entry ring within one panel).
     pub fn new(stride: usize) -> TileRing {
+        Self::with_budget(stride, TILE_RING_BUDGET_BYTES)
+    }
+
+    /// [`TileRing::new`] with an explicit per-slot byte budget (the
+    /// `--tile-ring-kib` / `GRPOT_TILE_RING_KIB` knob). Capacity stays
+    /// at least 2 regardless of how small the budget is, so eviction can
+    /// never thrash a single-entry ring within one panel. The budget
+    /// changes only *retention* — which tiles are resident when the walk
+    /// returns — never the synthesized values, so solves are byte-equal
+    /// at every budget (only `tiles_built` moves).
+    pub fn with_budget(stride: usize, budget_bytes: usize) -> TileRing {
         let stride = stride.max(1);
-        let capacity = (TILE_RING_BUDGET_BYTES / (stride * std::mem::size_of::<f64>())).max(2);
+        let capacity = (budget_bytes / (stride * std::mem::size_of::<f64>())).max(2);
         TileRing {
             stride,
             capacity,
@@ -483,6 +514,19 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn tile_ring_budget_controls_capacity() {
+        let stride = 8;
+        let big = TileRing::with_budget(stride, 1 << 20);
+        let small = TileRing::with_budget(stride, 4 * stride * std::mem::size_of::<f64>());
+        assert!(big.capacity() > small.capacity());
+        assert_eq!(small.capacity(), 4);
+        // Floor of 2 even for a degenerate budget.
+        assert_eq!(TileRing::with_budget(stride, 0).capacity(), 2);
+        // The default constructor is the fixed budget.
+        assert_eq!(TileRing::new(stride).capacity(), big.capacity());
     }
 
     #[test]

@@ -766,13 +766,26 @@ impl ColChunkScratch {
     /// the per-slot byte cap × [`crate::pool::MAX_FIXED_CHUNKS`] bounds
     /// total ring memory at a constant).
     pub(crate) fn slots_for(prob: &OtProblem, ranges: &[Range<usize>]) -> Vec<ColChunkScratch> {
+        Self::slots_for_budget(prob, ranges, super::cost::TILE_RING_BUDGET_BYTES)
+    }
+
+    /// [`ColChunkScratch::slots_for`] with an explicit per-slot tile-ring
+    /// byte budget (the `--tile-ring-kib` knob). The budget only changes
+    /// how many synthesized tiles stay resident between visits, never
+    /// their values, so every budget is byte-equal on the solve outputs.
+    pub(crate) fn slots_for_budget(
+        prob: &OtProblem,
+        ranges: &[Range<usize>],
+        ring_budget_bytes: usize,
+    ) -> Vec<ColChunkScratch> {
         let max_cols = ranges.iter().map(|r| r.len()).max().unwrap_or(0);
         let max_group = prob.groups.max_size();
         (0..ranges.len())
             .map(|_| {
                 let mut slot = ColChunkScratch::new(prob.m(), max_cols, max_group);
                 if prob.is_factored() {
-                    slot.ring = Some(TileRing::new(PANEL_COLS * max_group));
+                    slot.ring =
+                        Some(TileRing::with_budget(PANEL_COLS * max_group, ring_budget_bytes));
                 }
                 slot
             })

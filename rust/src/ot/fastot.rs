@@ -81,6 +81,10 @@ pub struct FastOtConfig {
     /// full option surface for serving/sweep consumers that build
     /// problems from one config struct.
     pub cost: CostMode,
+    /// Per-chunk factored-cost tile-ring budget in KiB (`None` defers
+    /// to `GRPOT_TILE_RING_KIB`, else the fixed ~1 MiB default). Moves
+    /// only tile retention/`tiles_built`, never solver output.
+    pub tile_ring_kib: Option<usize>,
 }
 
 impl Default for FastOtConfig {
@@ -97,6 +101,7 @@ impl Default for FastOtConfig {
             trace_id: 0,
             cancel: None,
             cost: CostMode::Auto,
+            tile_ring_kib: None,
         }
     }
 }
@@ -282,8 +287,19 @@ fn solve_fast_ot_inner(
     x0: Vec<f64>,
     ctx: &ParallelCtx,
 ) -> FastOtResult {
-    let mut oracle =
-        ScreeningOracle::build(prob, cfg.params(), cfg.use_working_set, ctx.clone(), cfg.simd);
+    // Infallible legacy entry points resolve the ring budget leniently
+    // (a bad env value falls back to the default); the fallible
+    // `fastot::solve` path has already validated it by this point.
+    let ring = super::cost::resolve_tile_ring_bytes(cfg.tile_ring_kib)
+        .unwrap_or(super::cost::TILE_RING_BUDGET_BYTES);
+    let mut oracle = ScreeningOracle::build_with_ring(
+        prob,
+        cfg.params(),
+        cfg.use_working_set,
+        ctx.clone(),
+        cfg.simd,
+        ring,
+    );
     oracle.set_cancel(cfg.cancel.clone());
     let label = if cfg.use_working_set { "fast" } else { "fast-nows" };
     drive_from(prob, cfg, &mut oracle, label, x0)
@@ -317,6 +333,10 @@ pub fn solve(prob: &OtProblem, opts: &SolveOptions) -> Result<FastOtResult> {
     let kind = opts.resolve_regularizer()?;
     let reg = AnyRegularizer::build(kind, opts.gamma, opts.rho, &prob.groups)?;
     let x0 = full_dual_x0(prob, opts)?;
+    // Validate the tile-ring knob strictly on this fallible entry (the
+    // inner driver falls back leniently for the infallible legacy
+    // paths).
+    opts.resolve_tile_ring_bytes()?;
     let cfg = opts.fastot_config();
     let ctx = opts.make_ctx();
     match reg {

@@ -24,7 +24,12 @@
 //!   byte-identical behind the trait), squared ℓ2 and negative entropy.
 //! * [`solve`] — the unified [`solve::SolveOptions`] builder consumed
 //!   by one `solve(problem, &opts)` entry per solver family.
+//! * [`batch`] — solve-many-at-once: K independent (γ, ρ, warm-start)
+//!   problems over one [`dual::OtProblem`] evaluated in lockstep
+//!   through a fused oracle pass ([`screening::BatchedOracle`]), each
+//!   lane byte-identical to its sequential solve.
 
+pub mod batch;
 pub mod cost;
 pub mod dual;
 pub mod emd;

@@ -28,9 +28,9 @@
 
 use super::cost::CostMatrix;
 use super::dual::{
-    exact_z, panel_count, panel_ranges, quad_pair, reduce_chunks, scalar_pair, synth_quad_pair,
-    ColChunkScratch, DualOracle, DualParams, KernelConsts, OracleStats, OtProblem, SimdEngine,
-    PANEL_COLS,
+    exact_z, group_grad_contrib, panel_count, panel_ranges, quad_pair, reduce_chunks, scalar_pair,
+    synth_quad_pair, ColChunkScratch, DualOracle, DualParams, KernelConsts, OracleStats, OtProblem,
+    SimdEngine, PANEL_COLS,
 };
 use super::regularizer::{GroupLassoRule, ScreeningRule};
 use super::solve::SolveOptions;
@@ -189,12 +189,14 @@ impl<'a> ScreeningOracle<'a> {
     /// group-lasso screened oracle (γ = `opts.gamma`, ρ = `opts.rho`);
     /// the regularizer-dispatched entry is [`crate::ot::fastot::solve`].
     pub fn with_options(prob: &'a OtProblem, opts: &SolveOptions) -> Self {
-        Self::build(
+        Self::build_with_ring(
             prob,
             DualParams::new(opts.gamma, opts.rho),
             opts.use_working_set,
             opts.make_ctx(),
             opts.simd,
+            opts.resolve_tile_ring_bytes()
+                .unwrap_or(super::cost::TILE_RING_BUDGET_BYTES),
         )
     }
 
@@ -235,12 +237,33 @@ impl<'a> ScreeningOracle<'a> {
         ctx: ParallelCtx,
         simd: SimdMode,
     ) -> Self {
+        Self::build_with_ring(
+            prob,
+            params,
+            use_working_set,
+            ctx,
+            simd,
+            super::cost::TILE_RING_BUDGET_BYTES,
+        )
+    }
+
+    /// [`ScreeningOracle::build`] with an explicit per-chunk tile-ring
+    /// byte budget (the `--tile-ring-kib` knob). The budget moves only
+    /// factored-tile retention (`tiles_built`), never solver output.
+    pub(crate) fn build_with_ring(
+        prob: &'a OtProblem,
+        params: DualParams,
+        use_working_set: bool,
+        ctx: ParallelCtx,
+        simd: SimdMode,
+        ring_budget_bytes: usize,
+    ) -> Self {
         params.validate();
         let m = prob.m();
         let n = prob.n();
         let num_groups = prob.groups.num_groups();
         let ranges = fixed_chunk_ranges(n);
-        let slots = ColChunkScratch::slots_for(prob, &ranges);
+        let slots = ColChunkScratch::slots_for_budget(prob, &ranges, ring_budget_bytes);
         let engine = SimdEngine::new(prob, simd);
         // Fixed panel layout: panel_off[c] is chunk c's first global
         // panel index; a function of the chunk grid (hence of n) alone.
@@ -859,6 +882,452 @@ impl DualOracle for ScreeningOracle<'_> {
     }
 }
 
+/// Per-lane configuration of a [`BatchedOracle`] — one independent
+/// (γ, ρ, working-set, cancel) problem sharing the batch's cost data.
+pub(crate) struct BatchLaneSpec {
+    pub(crate) params: DualParams,
+    pub(crate) use_working_set: bool,
+    pub(crate) simd: SimdMode,
+    pub(crate) cancel: Option<crate::fault::CancelToken>,
+    pub(crate) ring_budget_bytes: usize,
+}
+
+/// Per-chunk scratch shared across the batch's lanes: the staged cost
+/// segment (read once per surviving (group, column) for *all* lanes —
+/// the batching win) and the lane-interleaved gradient buffer the
+/// multi-problem quad kernel writes through. Owned by the batch, not by
+/// any lane's [`ColChunkScratch`], so the fused walk can borrow it
+/// alongside every lane's scratch without aliasing.
+struct BatchSharedScratch {
+    /// Staged cost segment for one (group, column), `max_group` values.
+    colbuf: Vec<f64>,
+    /// [`crate::simd::batch_quad_contrib`] scratch, `LANES·max_group`.
+    quad: Vec<f64>,
+}
+
+/// Shared per-lane view of one oracle's screening state — the read-only
+/// half the fused walk consults, split from the mutable chunk scratch so
+/// the closure can hold both.
+struct LaneView<'v> {
+    alpha: &'v [f64],
+    beta: &'v [f64],
+    consts: KernelConsts,
+    tau: f64,
+    rule: &'v GroupLassoRule,
+    use_ws: bool,
+    snap_beta: &'v [f64],
+    snap_z: &'v [f64],
+    snap_z_pmax: &'v [f64],
+    ws: &'v [bool],
+    da_pos: &'v [f64],
+    cancel: Option<&'v crate::fault::CancelToken>,
+}
+
+/// One chunk's mutable state in the fused walk: every live lane's
+/// [`ColChunkScratch`] plus the batch-owned shared scratch.
+struct BatchChunk<'s> {
+    per: Vec<&'s mut ColChunkScratch>,
+    shared: &'s mut BatchSharedScratch,
+}
+
+/// K ≤ [`LANES`] independent screened oracles over **one**
+/// [`OtProblem`], evaluated in a single fused pass over the cost
+/// columns — the ISSUE-10 batched oracle. Each lane keeps its own
+/// snapshots, working set, counters and chunk scratch (so its screening
+/// decisions, gradient and objective are *byte-identical* to a
+/// standalone [`ScreeningOracle`] at every iterate); what is shared is
+/// the walk itself: each surviving (group, column) cost segment is
+/// staged once and consumed by every lane that needs it, either through
+/// the lane-remapped quad kernel
+/// ([`crate::simd::batch_quad_contrib`], whose per-lane chains are
+/// bitwise equal to the scalar kernel's) or the scalar kernel per lane.
+/// The factored backend's `fill_seg` synthesis in particular runs once
+/// per K-group instead of K times.
+pub(crate) struct BatchedOracle<'a> {
+    prob: &'a OtProblem,
+    oracles: Vec<ScreeningOracle<'a>>,
+    shared: Vec<BatchSharedScratch>,
+    ranges: Vec<Range<usize>>,
+    panel_off: Vec<usize>,
+    ctx: ParallelCtx,
+    /// Vector dispatch for the multi-problem quad kernel when any lane
+    /// resolved one; `Scalar` otherwise. Per-lane results are bitwise
+    /// dispatch-independent (the crate invariant), so one shared choice
+    /// is safe.
+    dispatch: Dispatch,
+}
+
+impl<'a> BatchedOracle<'a> {
+    pub(crate) fn new(prob: &'a OtProblem, specs: &[BatchLaneSpec], ctx: ParallelCtx) -> Self {
+        assert!(
+            !specs.is_empty() && specs.len() <= LANES,
+            "batch width must be 1..={LANES}, got {}",
+            specs.len()
+        );
+        let oracles: Vec<ScreeningOracle<'a>> = specs
+            .iter()
+            .map(|s| {
+                let mut o = ScreeningOracle::build_with_ring(
+                    prob,
+                    s.params,
+                    s.use_working_set,
+                    ctx.clone(),
+                    s.simd,
+                    s.ring_budget_bytes,
+                );
+                o.set_cancel(s.cancel.clone());
+                o
+            })
+            .collect();
+        // The chunk grid and panel layout are functions of n alone, so
+        // every lane built the same ones; share lane 0's.
+        let ranges = oracles[0].ranges.clone();
+        let panel_off = oracles[0].panel_off.clone();
+        let dispatch = oracles
+            .iter()
+            .map(|o| o.engine.dispatch)
+            .find(|d| d.is_vector())
+            .unwrap_or(Dispatch::Scalar);
+        let max_group = prob.groups.max_size();
+        let shared = (0..ranges.len())
+            .map(|_| BatchSharedScratch {
+                colbuf: vec![0.0; max_group],
+                quad: vec![0.0; LANES * max_group],
+            })
+            .collect();
+        BatchedOracle { prob, oracles, shared, ranges, panel_off, ctx, dispatch }
+    }
+
+    pub(crate) fn lanes(&self) -> usize {
+        self.oracles.len()
+    }
+
+    pub(crate) fn lane(&self, p: usize) -> &ScreeningOracle<'a> {
+        &self.oracles[p]
+    }
+
+    pub(crate) fn lane_mut(&mut self, p: usize) -> &mut ScreeningOracle<'a> {
+        &mut self.oracles[p]
+    }
+
+    pub(crate) fn ctx(&self) -> &ParallelCtx {
+        &self.ctx
+    }
+
+    /// One fused evaluation: for every lane `p` with `live[p]`, compute
+    /// the negated dual objective and gradient of problem `p` at
+    /// `xs[p]`, writing `fs[p]`/`grads[p]` and advancing that lane's
+    /// [`OracleStats`] exactly as a standalone `eval` would. Lanes with
+    /// `live[p] == false` are untouched (their `xs[p]` only needs the
+    /// right length). All four slices must have `lanes()` entries.
+    ///
+    /// Byte-identity: each live lane walks the identical (panel, group,
+    /// column) order as the sequential screened eval, makes the
+    /// identical skip/ws decisions from its own state, and runs a
+    /// kernel whose per-lane chains are bitwise equal to the scalar
+    /// reference — so `fs`/`grads`/counters match the standalone oracle
+    /// bit for bit at any K, thread count and dispatch (`tiles_built`
+    /// excepted: staging is shared, so the factored backend charges one
+    /// synthesis per K-group).
+    pub(crate) fn eval_many(
+        &mut self,
+        xs: &[&[f64]],
+        live: &[bool],
+        fs: &mut [f64],
+        grads: &mut [Vec<f64>],
+    ) {
+        let lanes = self.oracles.len();
+        assert_eq!(xs.len(), lanes);
+        assert_eq!(live.len(), lanes);
+        assert_eq!(fs.len(), lanes);
+        assert_eq!(grads.len(), lanes);
+        let m = self.prob.m();
+        let n = self.prob.n();
+        let num_groups = self.prob.groups.num_groups();
+        let prob = self.prob;
+        let sqrt_g = &prob.groups.sqrt_sizes;
+
+        // Per-lane prolog (Algorithm 2, line 5): ‖[Δα_[l]]₊‖₂ against
+        // the lane's own snapshots, plus the −a/−b gradient init —
+        // exactly the sequential eval's prolog, per live lane.
+        for (p, o) in self.oracles.iter_mut().enumerate() {
+            if !live[p] {
+                continue;
+            }
+            debug_assert_eq!(xs[p].len(), m + n);
+            let (alpha, _beta) = xs[p].split_at(m);
+            for l in 0..num_groups {
+                let mut sp = 0.0;
+                for i in prob.groups.range(l) {
+                    let d = alpha[i] - o.snap_alpha[i];
+                    if d > 0.0 {
+                        sp += d * d;
+                    }
+                }
+                o.da_pos[l] = sp.sqrt();
+            }
+            let grad = &mut grads[p];
+            for (gi, &ai) in grad[..m].iter_mut().zip(&prob.a) {
+                *gi = -ai;
+            }
+            for (gj, &bj) in grad[m..].iter_mut().zip(&prob.b) {
+                *gj = -bj;
+            }
+        }
+
+        // Fused walk: shared-ref views of every lane's screening state
+        // plus disjoint mutable chunk scratch, transposed chunk-major.
+        {
+            let mut views: Vec<LaneView<'_>> = Vec::with_capacity(lanes);
+            let mut slot_iters = Vec::with_capacity(lanes);
+            for (p, o) in self.oracles.iter_mut().enumerate() {
+                let (alpha, beta) = xs[p].split_at(m);
+                let ScreeningOracle {
+                    consts,
+                    rule,
+                    use_ws,
+                    snap_beta,
+                    snap_z,
+                    snap_z_pmax,
+                    ws,
+                    da_pos,
+                    slots,
+                    cancel,
+                    ..
+                } = o;
+                views.push(LaneView {
+                    alpha,
+                    beta,
+                    consts: *consts,
+                    tau: rule.threshold(),
+                    rule: &*rule,
+                    use_ws: *use_ws,
+                    snap_beta: snap_beta.as_slice(),
+                    snap_z: snap_z.as_slice(),
+                    snap_z_pmax: snap_z_pmax.as_slice(),
+                    ws: ws.as_slice(),
+                    da_pos: da_pos.as_slice(),
+                    cancel: cancel.as_ref(),
+                });
+                slot_iters.push(slots.iter_mut());
+            }
+            let mut chunks: Vec<BatchChunk<'_>> = (0..self.ranges.len())
+                .map(|_| {
+                    slot_iters
+                        .iter_mut()
+                        .map(|it| it.next().expect("every lane has one slot per chunk"))
+                        .collect::<Vec<_>>()
+                })
+                .zip(self.shared.iter_mut())
+                .map(|(per, shared)| BatchChunk { per, shared })
+                .collect();
+
+            let views = &views;
+            let panel_off = &self.panel_off;
+            let dispatch = self.dispatch;
+            self.ctx.map_chunks(&self.ranges, &mut chunks, |c, range, chunk| {
+                let BatchChunk { per, shared } = chunk;
+                let BatchSharedScratch { colbuf, quad } = &mut **shared;
+                let cols0 = range.start;
+                let cols = range.len();
+                // Reset every live lane's scratch first (sequential
+                // semantics: reset precedes the cancel poll), then poll
+                // each lane's token once — a cancelled lane's chunk
+                // stays quiet while the others proceed.
+                let mut go = [false; LANES];
+                for (p, v) in views.iter().enumerate() {
+                    if !live[p] {
+                        continue;
+                    }
+                    per[p].reset(cols);
+                    go[p] = !v.cancel.is_some_and(|t| t.is_cancelled());
+                }
+                if !go[..views.len()].iter().any(|&b| b) {
+                    return;
+                }
+                let mut db_pos = [[0.0f64; PANEL_COLS]; LANES];
+                let mut db_max = [0.0f64; LANES];
+                let mut mask = [[false; PANEL_COLS]; LANES];
+                let mut lane_on = [false; LANES];
+                let mut comp: Vec<usize> = Vec::with_capacity(LANES);
+                for (pi, panel) in panel_ranges(range).enumerate() {
+                    let plen = panel.len();
+                    for (p, v) in views.iter().enumerate() {
+                        if !go[p] {
+                            continue;
+                        }
+                        db_max[p] = 0.0;
+                        for (t, j) in panel.clone().enumerate() {
+                            let w = (v.beta[j] - v.snap_beta[j]).max(0.0);
+                            db_pos[p][t] = w;
+                            db_max[p] = db_max[p].max(w);
+                        }
+                    }
+                    let pmax_base = (panel_off[c] + pi) * num_groups;
+                    for l in 0..num_groups {
+                        let group_range = prob.groups.range(l);
+                        let g = group_range.len();
+                        let start = group_range.start;
+                        // Decision phase per lane — identical tests and
+                        // counters to the sequential screened eval,
+                        // against each lane's own snapshots and ℕ.
+                        for (p, v) in views.iter().enumerate() {
+                            lane_on[p] = false;
+                            if !go[p] {
+                                continue;
+                            }
+                            let slot = &mut *per[p];
+                            if v.rule.upper_bound(
+                                v.snap_z_pmax[pmax_base + l],
+                                v.da_pos[l],
+                                sqrt_g[l],
+                                db_max[p],
+                            ) <= v.tau
+                            {
+                                slot.ub_checks += plen as u64;
+                                slot.skipped += plen as u64;
+                                continue;
+                            }
+                            let mut any = false;
+                            for (t, j) in panel.clone().enumerate() {
+                                let base = j * num_groups;
+                                mask[p][t] = if v.use_ws && v.ws[base + l] {
+                                    slot.ws_hits += 1;
+                                    true
+                                } else {
+                                    slot.ub_checks += 1;
+                                    let ub = v.rule.upper_bound(
+                                        v.snap_z[base + l],
+                                        v.da_pos[l],
+                                        sqrt_g[l],
+                                        db_pos[p][t],
+                                    );
+                                    if ub <= v.tau {
+                                        slot.skipped += 1;
+                                        false
+                                    } else {
+                                        true
+                                    }
+                                };
+                                any |= mask[p][t];
+                            }
+                            lane_on[p] = any;
+                        }
+                        if !lane_on[..views.len()].iter().any(|&b| b) {
+                            continue;
+                        }
+                        // Compute phase, ascending column order: stage
+                        // this (group, column) cost segment once, then
+                        // feed every surviving lane from it.
+                        for (t, j) in panel.clone().enumerate() {
+                            comp.clear();
+                            for p in 0..views.len() {
+                                if lane_on[p] && mask[p][t] {
+                                    comp.push(p);
+                                }
+                            }
+                            if comp.is_empty() {
+                                continue;
+                            }
+                            let c_seg: &[f64] = match prob.cost_backend() {
+                                CostMatrix::Dense(ct) => &ct.row(j)[group_range.clone()],
+                                CostMatrix::Factored(fac) => {
+                                    // Synthesized once for the whole
+                                    // K-group — the batching win. One
+                                    // build is charged (to the first
+                                    // consumer); `tiles_built` is the
+                                    // one batching-dependent counter.
+                                    fac.fill_seg(j, group_range.clone(), &mut colbuf[..g]);
+                                    per[comp[0]].tiles_built += 1;
+                                    &colbuf[..g]
+                                }
+                            };
+                            let col = j - cols0;
+                            if dispatch.is_vector() && comp.len() > 1 {
+                                // Lane-remapped quad kernel: unused SIMD
+                                // lanes are padded with a duplicate of
+                                // lane 0 and their results discarded.
+                                let pad = comp[0];
+                                let lane_of =
+                                    |i: usize| *comp.get(i).unwrap_or(&pad);
+                                let alphas: [&[f64]; LANES] =
+                                    std::array::from_fn(|i| views[lane_of(i)].alpha);
+                                let beta4: [f64; LANES] =
+                                    std::array::from_fn(|i| views[lane_of(i)].beta[j]);
+                                let consts4: [KernelConsts; LANES] =
+                                    std::array::from_fn(|i| views[lane_of(i)].consts);
+                                let (psi4, mass4, active) = crate::simd::batch_quad_contrib(
+                                    dispatch,
+                                    &alphas,
+                                    &beta4,
+                                    c_seg,
+                                    group_range.clone(),
+                                    &consts4,
+                                    &mut quad[..LANES * g],
+                                );
+                                for (i, &p) in comp.iter().enumerate() {
+                                    let slot = &mut *per[p];
+                                    if active[i] {
+                                        for k in 0..g {
+                                            slot.grad_alpha[start + k] += quad[LANES * k + i];
+                                        }
+                                    }
+                                    slot.psi_col[col] += psi4[i];
+                                    slot.col_mass[col] += mass4[i];
+                                    slot.grads += 1;
+                                }
+                            } else {
+                                for &p in comp.iter() {
+                                    let v = &views[p];
+                                    let slot = &mut *per[p];
+                                    let (psi, mass) = group_grad_contrib(
+                                        v.alpha,
+                                        v.beta[j],
+                                        c_seg,
+                                        group_range.clone(),
+                                        &v.consts,
+                                        &mut slot.grad_alpha,
+                                        &mut slot.group,
+                                    );
+                                    slot.psi_col[col] += psi;
+                                    slot.col_mass[col] += mass;
+                                    slot.grads += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                for p in 0..views.len() {
+                    if go[p] {
+                        per[p].fold_psi(cols);
+                    }
+                }
+            });
+        }
+
+        // Per-lane epilog: ordered chunk reduction into the lane's
+        // gradient, stats fold and objective — the sequential eval's
+        // tail, per live lane.
+        for (p, o) in self.oracles.iter_mut().enumerate() {
+            if !live[p] {
+                continue;
+            }
+            let (alpha, beta) = xs[p].split_at(m);
+            let (ga, gb) = grads[p].split_at_mut(m);
+            let totals = reduce_chunks(&self.ranges, &o.slots, ga, gb);
+            o.stats.grads_computed += totals.grads;
+            o.stats.grads_skipped += totals.skipped;
+            o.stats.ub_checks += totals.ub_checks;
+            o.stats.ws_hits += totals.ws_hits;
+            o.stats.tiles_built += totals.tiles_built;
+            o.stats.record_eval(totals.grads);
+            let dual =
+                linalg::dot(alpha, &prob.a) + linalg::dot(beta, &prob.b) - totals.psi;
+            fs[p] = -dual;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1011,5 +1480,122 @@ mod tests {
         oracle.refresh(&x);
         let errs = oracle.bound_errors(&x);
         assert!(errs.max_upper.abs() < 1e-12, "{errs:?}");
+    }
+
+    /// Every per-lane counter except `tiles_built` (batching shares
+    /// tile staging by design).
+    fn assert_stats_eq_mod_tiles(a: &OracleStats, b: &OracleStats, what: &str) {
+        assert_eq!(a.evals, b.evals, "evals {what}");
+        assert_eq!(a.grads_computed, b.grads_computed, "grads_computed {what}");
+        assert_eq!(a.grads_skipped, b.grads_skipped, "grads_skipped {what}");
+        assert_eq!(a.ub_checks, b.ub_checks, "ub_checks {what}");
+        assert_eq!(a.ws_hits, b.ws_hits, "ws_hits {what}");
+        assert_eq!(a.per_eval_grads, b.per_eval_grads, "per_eval_grads {what}");
+    }
+
+    /// The tentpole contract at the oracle level: a K-lane fused
+    /// evaluation must be byte-identical — objective, gradient and
+    /// every counter except `tiles_built` — to K standalone oracles,
+    /// for every K ∈ 1..=LANES, with heterogeneous (γ, ρ, working-set)
+    /// lanes, distinct per-lane iterate trajectories, interleaved
+    /// refreshes, and the batch running on a different thread count
+    /// than the references.
+    #[test]
+    fn batched_eval_matches_sequential_lanes_bitwise() {
+        let prob = random_problem(3, 4, 3, 23);
+        let lane_cfgs =
+            [(0.5, 0.6, true), (1.5, 0.3, false), (0.2, 0.8, true), (5.0, 0.7, true)];
+        for take in 1..=lane_cfgs.len() {
+            let cfgs = &lane_cfgs[..take];
+            let mut seq: Vec<ScreeningOracle> = cfgs
+                .iter()
+                .map(|&(gamma, rho, ws)| {
+                    ScreeningOracle::build(
+                        &prob,
+                        DualParams::new(gamma, rho),
+                        ws,
+                        ParallelCtx::new(1),
+                        SimdMode::Auto,
+                    )
+                })
+                .collect();
+            let specs: Vec<BatchLaneSpec> = cfgs
+                .iter()
+                .map(|&(gamma, rho, ws)| BatchLaneSpec {
+                    params: DualParams::new(gamma, rho),
+                    use_working_set: ws,
+                    simd: SimdMode::Auto,
+                    cancel: None,
+                    ring_budget_bytes: crate::ot::cost::TILE_RING_BUDGET_BYTES,
+                })
+                .collect();
+            let mut batch = BatchedOracle::new(&prob, &specs, ParallelCtx::new(2));
+            let mut rng = Pcg64::new(77);
+            let mut xs: Vec<Vec<f64>> = (0..take).map(|_| vec![0.0; prob.dim()]).collect();
+            let live = vec![true; take];
+            let mut fs = vec![0.0; take];
+            let mut grads: Vec<Vec<f64>> = (0..take).map(|_| vec![0.0; prob.dim()]).collect();
+            for step in 0..8 {
+                for x in xs.iter_mut() {
+                    for v in x.iter_mut() {
+                        *v += rng.uniform(-0.2, 0.25);
+                    }
+                }
+                if step % 3 == 2 {
+                    for (p, o) in seq.iter_mut().enumerate() {
+                        o.refresh(&xs[p]);
+                        batch.lane_mut(p).refresh(&xs[p]);
+                    }
+                }
+                let views: Vec<&[f64]> = xs.iter().map(Vec::as_slice).collect();
+                batch.eval_many(&views, &live, &mut fs, &mut grads);
+                for (p, o) in seq.iter_mut().enumerate() {
+                    let mut g = vec![0.0; prob.dim()];
+                    let f = o.eval(&xs[p], &mut g);
+                    assert_eq!(f, fs[p], "objective K={take} lane={p} step={step}");
+                    assert_eq!(g, grads[p], "gradient K={take} lane={p} step={step}");
+                }
+            }
+            for (p, o) in seq.iter().enumerate() {
+                assert_stats_eq_mod_tiles(
+                    o.stats(),
+                    batch.lane(p).stats(),
+                    &format!("K={take} lane={p}"),
+                );
+            }
+        }
+    }
+
+    /// Retired (non-live) lanes are untouched by a fused eval: their
+    /// outputs keep whatever the caller left there and their stats
+    /// don't move.
+    #[test]
+    fn retired_lanes_stay_untouched() {
+        let prob = random_problem(9, 3, 3, 11);
+        let specs: Vec<BatchLaneSpec> = [(0.5, 0.5), (1.0, 0.4), (0.3, 0.7)]
+            .iter()
+            .map(|&(gamma, rho)| BatchLaneSpec {
+                params: DualParams::new(gamma, rho),
+                use_working_set: true,
+                simd: SimdMode::Auto,
+                cancel: None,
+                ring_budget_bytes: crate::ot::cost::TILE_RING_BUDGET_BYTES,
+            })
+            .collect();
+        let mut batch = BatchedOracle::new(&prob, &specs, ParallelCtx::new(1));
+        let xs: Vec<Vec<f64>> = (0..3).map(|p| vec![0.1 * (p as f64 + 1.0); prob.dim()]).collect();
+        let views: Vec<&[f64]> = xs.iter().map(Vec::as_slice).collect();
+        let live = [true, false, true];
+        let mut fs = [0.0, -7.5, 0.0];
+        let mut grads: Vec<Vec<f64>> = (0..3).map(|_| vec![42.0; prob.dim()]).collect();
+        let before = batch.lane(1).stats().clone();
+        batch.eval_many(&views, &live, &mut fs, &mut grads);
+        assert_eq!(fs[1], -7.5, "retired lane's objective overwritten");
+        assert!(grads[1].iter().all(|&v| v == 42.0), "retired lane's gradient overwritten");
+        assert_eq!(&before, batch.lane(1).stats(), "retired lane's stats moved");
+        // Live lanes really did evaluate.
+        assert_eq!(batch.lane(0).stats().evals, 1);
+        assert_eq!(batch.lane(2).stats().evals, 1);
+        assert!(grads[0].iter().any(|&v| v != 42.0));
     }
 }

@@ -89,6 +89,21 @@ pub struct SolveOptions {
     /// already-built [`super::dual::OtProblem`] ignore it (the problem
     /// carries its own backend).
     pub cost: CostMode,
+    /// Batched-solve width K for the consumers that coalesce several
+    /// (γ, ρ) problems over one dataset into a fused
+    /// [`crate::ot::batch::solve_batched`] pass (the serving engine's
+    /// `--batch-k`, the sweep grid). `None` defers to `GRPOT_BATCH_K`
+    /// (else 1, batching off); an explicit value wins. Batching changes
+    /// data movement only — every problem's result stays byte-identical
+    /// to its sequential solve at any K.
+    pub batch_k: Option<usize>,
+    /// Per-chunk [`crate::ot::cost::TileRing`] budget in KiB for the
+    /// factored cost backend (`--tile-ring-kib`). `None` defers to
+    /// `GRPOT_TILE_RING_KIB`, else the fixed ~1 MiB default
+    /// ([`crate::ot::cost::TILE_RING_BUDGET_BYTES`]). The budget moves
+    /// only tile *retention* (and hence `tiles_built`), never solve
+    /// outputs.
+    pub tile_ring_kib: Option<usize>,
 }
 
 impl Default for SolveOptions {
@@ -108,6 +123,8 @@ impl Default for SolveOptions {
             trace_id: 0,
             cancel: None,
             cost: CostMode::Auto,
+            batch_k: None,
+            tile_ring_kib: None,
         }
     }
 }
@@ -129,6 +146,8 @@ impl std::fmt::Debug for SolveOptions {
             .field("trace_id", &self.trace_id)
             .field("cancel", &self.cancel.is_some())
             .field("cost", &self.cost)
+            .field("batch_k", &self.batch_k)
+            .field("tile_ring_kib", &self.tile_ring_kib)
             .finish()
     }
 }
@@ -222,6 +241,44 @@ impl SolveOptions {
         self
     }
 
+    /// Set the batched-solve width K for coalescing consumers (serving
+    /// engine, sweep grid). `1` disables batching.
+    pub fn batch_k(mut self, k: usize) -> Self {
+        self.batch_k = Some(k);
+        self
+    }
+
+    /// Set the per-chunk factored-cost tile-ring budget in KiB.
+    pub fn tile_ring_kib(mut self, kib: usize) -> Self {
+        self.tile_ring_kib = Some(kib);
+        self
+    }
+
+    /// The effective batch width: the explicit value (clamped to ≥ 1),
+    /// else `GRPOT_BATCH_K`, else 1 (batching off). A malformed or zero
+    /// env value is an error.
+    pub fn resolve_batch_k(&self) -> crate::error::Result<usize> {
+        if let Some(k) = self.batch_k {
+            return Ok(k.max(1));
+        }
+        match std::env::var("GRPOT_BATCH_K") {
+            Ok(s) => match s.trim().parse::<usize>() {
+                Ok(k) if k >= 1 => Ok(k),
+                _ => Err(crate::err!(
+                    "GRPOT_BATCH_K must be a positive integer, got '{s}'"
+                )),
+            },
+            Err(_) => Ok(1),
+        }
+    }
+
+    /// The effective tile-ring budget in bytes: the explicit KiB value,
+    /// else `GRPOT_TILE_RING_KIB`, else the fixed default. A malformed
+    /// or zero env value is an error.
+    pub fn resolve_tile_ring_bytes(&self) -> crate::error::Result<usize> {
+        super::cost::resolve_tile_ring_bytes(self.tile_ring_kib)
+    }
+
     /// The effective regularizer kind: the explicit selection, else the
     /// `GRPOT_REG`/group-lasso default (a bad env value is an error).
     pub fn resolve_regularizer(&self) -> crate::error::Result<RegKind> {
@@ -255,6 +312,7 @@ impl SolveOptions {
             trace_id: self.trace_id,
             cancel: self.cancel.clone(),
             cost: self.cost,
+            tile_ring_kib: self.tile_ring_kib,
         }
     }
 }
@@ -276,7 +334,9 @@ mod tests {
             .warm_start(vec![0.0; 4])
             .working_set(false)
             .cancel(crate::fault::CancelToken::new())
-            .cost(CostMode::Factored);
+            .cost(CostMode::Factored)
+            .batch_k(3)
+            .tile_ring_kib(256);
         assert_eq!(opts.gamma, 0.3);
         assert_eq!(opts.rho, 0.7);
         assert_eq!(opts.r, 5);
@@ -288,12 +348,28 @@ mod tests {
         assert!(!opts.use_working_set);
         assert!(opts.cancel.is_some());
         assert_eq!(opts.cost, CostMode::Factored);
+        assert_eq!(opts.batch_k, Some(3));
+        assert_eq!(opts.tile_ring_kib, Some(256));
+        assert_eq!(opts.resolve_batch_k().unwrap(), 3);
+        assert_eq!(opts.resolve_tile_ring_bytes().unwrap(), 256 * 1024);
         let cfg = opts.fastot_config();
         assert_eq!(cfg.gamma, 0.3);
         assert_eq!(cfg.lbfgs.max_iters, 42);
         assert!(!cfg.use_working_set);
         assert!(cfg.cancel.is_some());
         assert_eq!(cfg.cost, CostMode::Factored);
+        assert_eq!(cfg.tile_ring_kib, Some(256));
+    }
+
+    #[test]
+    fn batch_k_explicit_wins_and_defaults_to_one() {
+        assert_eq!(SolveOptions::new().batch_k(4).resolve_batch_k().unwrap(), 4);
+        // Explicit zero is clamped rather than erroring (builder misuse,
+        // not env misconfiguration).
+        assert_eq!(SolveOptions::new().batch_k(0).resolve_batch_k().unwrap(), 1);
+        if std::env::var("GRPOT_BATCH_K").is_err() {
+            assert_eq!(SolveOptions::new().resolve_batch_k().unwrap(), 1);
+        }
     }
 
     #[test]

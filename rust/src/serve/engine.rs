@@ -304,6 +304,12 @@ struct EngineState {
     /// Effective intra-solve thread count after clamping
     /// `workers × solve.threads` to the core budget.
     threads_per_solve: usize,
+    /// Solve-batching width: coalesce up to this many same-dataset
+    /// group-lasso jobs into one K-lane batched solve
+    /// ([`crate::ot::batch::solve_batched`]). 1 = sequential per-job
+    /// solves (the default). Resolved once at startup from
+    /// `ServeConfig::solve.batch_k` / `GRPOT_BATCH_K`.
+    batch_k: usize,
     queue: AdmissionQueue,
     problems: Mutex<ProblemCache>,
     /// Per-key build locks: concurrent cold builds of *one* dataset are
@@ -322,6 +328,24 @@ struct EngineState {
     metrics: Arc<Metrics>,
 }
 
+/// Gauge series name for one dataset key's breaker state. The key is
+/// escaped into a Prometheus label value; the renderer passes label
+/// blocks through verbatim ([`crate::obs::prom`]).
+fn breaker_gauge_name(key: &str) -> String {
+    let escaped = key.replace('\\', "\\\\").replace('"', "\\\"");
+    format!("serve.breaker_state{{dataset=\"{escaped}\"}}")
+}
+
+/// Numeric encoding of a breaker state for the per-key gauge:
+/// closed = 0, open = 1, half-open = 2.
+fn breaker_state_value(state: BState) -> f64 {
+    match state {
+        BState::Closed => 0.0,
+        BState::Open { .. } => 1.0,
+        BState::HalfOpen { .. } => 2.0,
+    }
+}
+
 /// Circuit-breaker admission check for `key`; `None` = admitted.
 fn breaker_check(state: &EngineState, key: &str) -> Option<RejectReason> {
     if state.cfg.breaker_threshold == 0 {
@@ -329,29 +353,44 @@ fn breaker_check(state: &EngineState, key: &str) -> Option<RejectReason> {
     }
     let mut map = plock(&state.breakers);
     let b = map.get_mut(key)?; // no failure history → closed
-    match b.admit(Instant::now(), state.cfg.breaker_cooldown) {
+    let verdict = b.admit(Instant::now(), state.cfg.breaker_cooldown);
+    // Publish the (possibly just-transitioned, e.g. open → half-open)
+    // state. The series set stays bounded: a gauge exists only while
+    // the key has a live breaker entry, which success prunes.
+    let gauge = breaker_state_value(b.state);
+    drop(map);
+    state.metrics.set_gauge(&breaker_gauge_name(key), gauge);
+    match verdict {
         Ok(()) => None,
         Err(retry_in_s) => Some(RejectReason::Quarantined { retry_in_s }),
     }
 }
 
 /// Record a solve/build outcome for `key`'s breaker. Success clears the
-/// key's history entirely (bounding the map); failure counts toward the
-/// threshold and may trip the breaker.
+/// key's history entirely (bounding the map) and drops its state gauge;
+/// failure counts toward the threshold and may trip the breaker.
 fn breaker_record(state: &EngineState, key: &str, ok: bool) {
     if state.cfg.breaker_threshold == 0 {
         return;
     }
     let mut map = plock(&state.breakers);
     if ok {
-        map.remove(key);
+        let removed = map.remove(key).is_some();
+        drop(map);
+        if removed {
+            state.metrics.remove_gauge(&breaker_gauge_name(key));
+        }
         return;
     }
-    let tripped = map.entry(key.to_string()).or_insert_with(Breaker::new).record_failure(
+    let b = map.entry(key.to_string()).or_insert_with(Breaker::new);
+    let tripped = b.record_failure(
         Instant::now(),
         state.cfg.breaker_threshold,
         state.cfg.breaker_cooldown,
     );
+    let gauge = breaker_state_value(b.state);
+    drop(map);
+    state.metrics.set_gauge(&breaker_gauge_name(key), gauge);
     if tripped {
         state.metrics.incr("serve.breaker_trips", 1);
     }
@@ -404,8 +443,13 @@ impl Engine {
             std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
         };
         let threads_per_solve = cfg.solve.threads.max(1).min((budget / workers).max(1));
+        // Lenient resolution like `default_regularizer`: launch
+        // validation already rejected a broken `GRPOT_BATCH_K` for the
+        // CLI; embedders fall back to sequential solves.
+        let batch_k = cfg.solve.resolve_batch_k().unwrap_or(1);
         let state = Arc::new(EngineState {
             threads_per_solve,
+            batch_k,
             queue: BoundedQueue::new(cfg.queue_capacity.max(1)),
             problems: Mutex::new(ProblemCache::default()),
             problem_build: Mutex::new(BTreeMap::new()),
@@ -470,6 +514,13 @@ impl Engine {
     /// (`workers × threads_per_solve ≤ core_budget`).
     pub fn threads_per_solve(&self) -> usize {
         self.state.threads_per_solve
+    }
+
+    /// Effective solve-batching width: how many coalesced same-dataset
+    /// group-lasso jobs one worker solves in a single K-lane batched
+    /// pass. 1 = per-job sequential solves.
+    pub fn batch_k(&self) -> usize {
+        self.state.batch_k
     }
 
     /// The regularizer applied to requests that don't name one: the
@@ -731,8 +782,230 @@ fn handle_batch(state: &EngineState, batch: &Batch, ctx: &ParallelCtx) {
     let batch_size = live.len();
 
     // Each distinct (γ, ρ, method, regularizer, warm) job solves once.
-    for (job, idxs) in unique_jobs(&live) {
-        solve_job(state, &batch.dataset_key, &problem, batch_size, &live, job, &idxs, ctx);
+    // With batching enabled, group-lasso fast-family jobs coalesce into
+    // K-lane batched solves (byte-identical per job — the batched
+    // oracle's hard contract); everything else keeps the sequential
+    // per-job path.
+    let jobs = unique_jobs(&live);
+    if state.batch_k > 1 {
+        let (batchable, rest): (Vec<_>, Vec<_>) = jobs.into_iter().partition(|(job, _)| {
+            job.regularizer == RegKind::GroupLasso
+                && matches!(job.method, Method::Fast | Method::FastNoWs)
+        });
+        for group in batchable.chunks(state.batch_k) {
+            solve_job_group(state, &batch.dataset_key, &problem, batch_size, &live, group, ctx);
+        }
+        for (job, idxs) in rest {
+            solve_job(state, &batch.dataset_key, &problem, batch_size, &live, job, &idxs, ctx);
+        }
+    } else {
+        for (job, idxs) in jobs {
+            solve_job(state, &batch.dataset_key, &problem, batch_size, &live, job, &idxs, ctx);
+        }
+    }
+}
+
+/// One lane's pre-solve state inside a batched K-lane group — what
+/// [`solve_job`] computes before its solver call, for one job.
+struct LaneJob<'t> {
+    job: JobKey,
+    targets: Vec<&'t Ticket>,
+    warm_key: String,
+    warm_started: bool,
+    report_cell: Arc<Mutex<Option<crate::obs::SolveReport>>>,
+    /// Triage instant; replies report queue wait relative to it, like
+    /// the sequential path.
+    triage_now: Instant,
+}
+
+/// Solve up to `batch_k` coalesced jobs as one K-lane batched solve
+/// ([`crate::ot::batch::solve_batched`]): the lanes share the batch's
+/// dataset/problem and differ only in (γ, ρ, working-set, warm-start),
+/// so one fused pass over the cost columns serves them all. Each job
+/// keeps its own deadline triage, warm-start lookup, observer hook,
+/// trace spans and cancel token, and its reply is byte-identical to the
+/// sequential [`solve_job`] path.
+fn solve_job_group(
+    state: &EngineState,
+    dataset_key: &str,
+    problem: &Arc<CachedProblem>,
+    batch_size: usize,
+    live: &[&Ticket],
+    group: &[(JobKey, Vec<usize>)],
+    ctx: &ParallelCtx,
+) {
+    let m = &state.metrics;
+    let mut lanes: Vec<LaneJob> = Vec::with_capacity(group.len());
+    let mut opts_vec: Vec<crate::ot::solve::SolveOptions> = Vec::with_capacity(group.len());
+    for (job, idxs) in group {
+        let job = *job;
+        // Second deadline triage, per job (same as the sequential path).
+        let now = Instant::now();
+        let mut targets: Vec<&Ticket> = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            let t = live[i];
+            if t.expired(now) {
+                m.incr("serve.rejected_deadline", 1);
+                t.respond(Err(RejectReason::DeadlineExceeded { waited_s: t.waited_s(now) }));
+            } else {
+                targets.push(t);
+            }
+        }
+        if targets.is_empty() {
+            continue;
+        }
+        // Per-job `engine.solve` failpoint: an injected error fails
+        // this job alone, leaving its batchmates to solve.
+        if let Err(e) = fault::check(sites::ENGINE_SOLVE) {
+            for t in targets {
+                t.respond(Err(RejectReason::Failed(e.clone())));
+            }
+            continue;
+        }
+        // Only group-lasso jobs reach this path, so the warm key is the
+        // bare dataset key (no regularizer suffix).
+        let warm_key = dataset_key.to_string();
+        let want_warm = job.warm_start && state.cfg.warm_start;
+        let seed = if want_warm {
+            state.duals.lookup(&warm_key, job.gamma, job.rho)
+        } else {
+            None
+        };
+        if want_warm {
+            if seed.is_some() {
+                m.incr("serve.warm_hits", 1);
+            } else {
+                m.incr("serve.warm_misses", 1);
+            }
+        }
+        let warm_started = seed.is_some();
+        let (hook, report_cell) = crate::obs::ObserverHook::capture();
+        let solve_trace_id = targets[0].trace_id;
+        let job_deadline = if targets.iter().all(|t| t.deadline.is_some()) {
+            targets.iter().filter_map(|t| t.deadline).max()
+        } else {
+            None
+        };
+        let cancel = state.shutdown.child(job_deadline);
+        let mut opts = state
+            .cfg
+            .solve
+            .clone()
+            .gamma(job.gamma)
+            .rho(job.rho)
+            .regularizer(RegKind::GroupLasso)
+            .working_set(job.method != Method::FastNoWs)
+            .ctx(ctx.clone())
+            .observer(hook)
+            .trace_id(solve_trace_id)
+            .cancel(cancel);
+        if let Some(s) = &seed {
+            opts = opts.warm_start(s.dual.clone());
+        }
+        lanes.push(LaneJob { job, targets, warm_key, warm_started, report_cell, triage_now: now });
+        opts_vec.push(opts);
+    }
+    if lanes.is_empty() {
+        return;
+    }
+
+    // One unwind guard around the whole K-lane solve: a panic inside
+    // the fused pass (injected `oracle.eval` fault or a real solver
+    // bug) has no per-lane boundary, so it fails every lane in the
+    // group — each job records its own breaker failure, exactly as K
+    // sequential panics would.
+    let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _solve_span =
+            crate::obs::Span::start(crate::obs::names::ENGINE_SOLVE, lanes[0].targets[0].trace_id);
+        crate::ot::batch::solve_batched(&problem.prob, &opts_vec)
+    }));
+    let results = match solved {
+        Ok(Ok(r)) => r,
+        Ok(Err(e)) => {
+            // Option validation failure: structured per-job error, no
+            // breaker event (it says nothing about the dataset).
+            for lane in lanes {
+                for t in lane.targets {
+                    t.respond(Err(RejectReason::Failed(e.clone())));
+                }
+            }
+            return;
+        }
+        Err(panic) => {
+            let what = panic_message(panic.as_ref());
+            for lane in lanes {
+                m.incr("serve.solve_panics", 1);
+                breaker_record(state, dataset_key, false);
+                for t in lane.targets {
+                    t.respond(Err(RejectReason::Failed(err!("solver panicked: {what}"))));
+                }
+            }
+            return;
+        }
+    };
+    for (lane, result) in lanes.into_iter().zip(results) {
+        finish_job(state, dataset_key, problem, batch_size, lane, result);
+    }
+}
+
+/// The sequential path's post-solve epilogue, per lane: cancellation
+/// triage, metrics, breaker/cache bookkeeping and reply fan-out —
+/// identical to the tail of [`solve_job`].
+fn finish_job(
+    state: &EngineState,
+    dataset_key: &str,
+    problem: &Arc<CachedProblem>,
+    batch_size: usize,
+    lane: LaneJob<'_>,
+    result: FastOtResult,
+) {
+    let m = &state.metrics;
+    let LaneJob { job, targets, warm_key, warm_started, report_cell, triage_now } = lane;
+    // The fused pass has no per-lane wall clock here; the solver's own
+    // per-lane wall time feeds the histogram load shedding reads.
+    m.observe_hist("serve.solve_seconds", result.wall_time_s);
+    if result.stop == StopReason::Cancelled {
+        m.incr("serve.cancelled_midsolve", 1);
+        let now = Instant::now();
+        for t in targets {
+            let reason = if state.shutdown.is_cancelled() {
+                RejectReason::Shutdown
+            } else {
+                RejectReason::DeadlineExceeded { waited_s: t.waited_s(now) }
+            };
+            t.respond(Err(reason));
+        }
+        return;
+    }
+    m.incr("serve.solves", 1);
+    breaker_record(state, dataset_key, true);
+    if state.cfg.warm_start && result.stop.converged() {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if fault::check(sites::CACHE_INSERT).is_ok() {
+                state
+                    .duals
+                    .insert(&warm_key, job.gamma, job.rho, result.x.clone());
+                m.set_gauge("serve.warm_cache_bytes", state.duals.bytes() as f64);
+                m.set_gauge("serve.warm_cache_evictions", state.duals.evictions() as f64);
+            }
+        }));
+    }
+    let telemetry: Option<Arc<crate::obs::SolveReport>> = report_cell
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .take()
+        .map(Arc::new);
+    let result = Arc::new(result);
+    for t in targets {
+        t.respond(Ok(EngineReply {
+            result: Arc::clone(&result),
+            problem: Arc::clone(problem),
+            warm_started,
+            batch_size,
+            queue_wait_s: t.waited_s(triage_now),
+            trace_id: t.trace_id,
+            telemetry: telemetry.clone(),
+        }));
     }
 }
 
@@ -1200,6 +1473,132 @@ mod tests {
         assert_eq!(engine.submit(req.clone()).unwrap_err().kind(), "failed");
         assert_eq!(engine.submit(req.clone()).unwrap_err().kind(), "quarantined");
         assert_eq!(engine.metrics().get("serve.breaker_trips"), 2);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn batched_engine_matches_sequential_engine() {
+        let run = |k: usize| {
+            let engine = tiny_engine(ServeConfig {
+                workers: 1,
+                solve: crate::ot::solve::SolveOptions::new().lbfgs(tight_lbfgs()).batch_k(k),
+                ..Default::default()
+            });
+            assert_eq!(engine.batch_k(), k);
+            let mut outs = Vec::new();
+            for (g, r) in [(0.5, 0.2), (0.8, 0.4), (1.2, 0.6)] {
+                let reply = engine.submit(request(13, g, r)).expect("solve");
+                outs.push((
+                    reply.result.x.clone(),
+                    reply.result.dual_objective.to_bits(),
+                    reply.result.iterations,
+                ));
+            }
+            engine.shutdown();
+            outs
+        };
+        // Replies (including warm-started later ones) must be
+        // byte-identical whether the engine batches or not.
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn batched_group_answers_every_coalesced_job() {
+        let engine = tiny_engine(ServeConfig {
+            workers: 1,
+            solve: crate::ot::solve::SolveOptions::new().lbfgs(tight_lbfgs()).batch_k(4),
+            ..Default::default()
+        });
+        // Drive the K-lane group path directly with three coalesced
+        // jobs — deterministic, no reliance on queue timing.
+        let reqs = [(0.5, 0.2), (0.9, 0.4), (1.3, 0.6)];
+        let mut tickets = Vec::new();
+        let mut slots = Vec::new();
+        for &(g, r) in &reqs {
+            let mut req = request(17, g, r);
+            req.warm_start = false; // cold lanes compare against cold sequential solves
+            let (t, slot) = Ticket::new(req, None);
+            tickets.push(t);
+            slots.push(slot);
+        }
+        let live: Vec<&Ticket> = tickets.iter().collect();
+        let key = tickets[0].dataset_key.clone();
+        let problem = cached_problem(&engine.state, &key, &live[0].request.spec).unwrap();
+        let jobs = unique_jobs(&live);
+        assert_eq!(jobs.len(), reqs.len());
+        let ctx = ParallelCtx::new(1);
+        solve_job_group(&engine.state, &key, &problem, live.len(), &live, &jobs, &ctx);
+        for (slot, &(g, r)) in slots.into_iter().zip(&reqs) {
+            let reply = slot.wait().expect("every lane answered");
+            assert_eq!(reply.batch_size, reqs.len());
+            let seq = sweep::solve(
+                &problem.prob,
+                Method::Fast,
+                &engine
+                    .state
+                    .cfg
+                    .solve
+                    .clone()
+                    .gamma(g)
+                    .rho(r)
+                    .regularizer(RegKind::GroupLasso),
+            )
+            .unwrap();
+            assert_eq!(reply.result.x, seq.x, "gamma={g} rho={r}");
+            assert_eq!(reply.result.dual_objective.to_bits(), seq.dual_objective.to_bits());
+            assert!(reply.telemetry.is_some(), "per-lane SolveReport captured");
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn breaker_state_gauge_tracks_key_lifecycle() {
+        let engine = tiny_engine(ServeConfig {
+            workers: 1,
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_secs(60),
+            ..Default::default()
+        });
+        let mut req = request(19, 1.0, 0.5);
+        req.spec.family = "nope".into();
+        let gauge_name = breaker_gauge_name(&req.spec.cache_key());
+        assert_eq!(engine.metrics().gauge(&gauge_name), None);
+        // First failure: entry exists, breaker still closed.
+        assert_eq!(engine.submit(req.clone()).unwrap_err().kind(), "failed");
+        assert_eq!(engine.metrics().gauge(&gauge_name), Some(0.0));
+        // Second failure trips it open.
+        assert_eq!(engine.submit(req.clone()).unwrap_err().kind(), "failed");
+        assert_eq!(engine.metrics().gauge(&gauge_name), Some(1.0));
+        // A healthy key never publishes a series.
+        let ok = request(19, 1.0, 0.5);
+        let ok_gauge = breaker_gauge_name(&ok.spec.cache_key());
+        assert!(engine.submit(ok).is_ok());
+        assert_eq!(engine.metrics().gauge(&ok_gauge), None);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn breaker_gauge_reports_half_open_probe_and_prunes_on_success() {
+        let engine = tiny_engine(ServeConfig {
+            workers: 1,
+            breaker_threshold: 1,
+            breaker_cooldown: Duration::from_millis(20),
+            ..Default::default()
+        });
+        let mut req = request(23, 1.0, 0.5);
+        req.spec.family = "nope".into();
+        let key = req.spec.cache_key();
+        let gauge_name = breaker_gauge_name(&key);
+        assert_eq!(engine.submit(req).unwrap_err().kind(), "failed"); // trips
+        assert_eq!(engine.metrics().gauge(&gauge_name), Some(1.0));
+        std::thread::sleep(Duration::from_millis(40));
+        // Cooldown over: the admission check converts the key to a
+        // half-open probe and publishes state 2.
+        assert!(breaker_check(&engine.state, &key).is_none());
+        assert_eq!(engine.metrics().gauge(&gauge_name), Some(2.0));
+        // The probe's success closes the breaker and prunes the series.
+        breaker_record(&engine.state, &key, true);
+        assert_eq!(engine.metrics().gauge(&gauge_name), None);
         engine.shutdown();
     }
 

@@ -68,6 +68,54 @@ pub fn group_quad_contrib(
     }
 }
 
+/// ψ and ∇ψ of one group of **one shared column** under [`LANES`]
+/// independent problems — the lane-remapped form of
+/// [`crate::ot::dual::group_grad_contrib`] used by the batched
+/// multi-problem oracle ([`crate::ot::batch`]): instead of four columns
+/// of one problem, the lanes carry the *same* column `j` under four
+/// (γ, ρ, dual-iterate) triples, so the cost segment `c_seg` is read
+/// once for all four.
+///
+/// `alphas[t]`/`beta4[t]`/`consts4[t]` are problem `t`'s dual iterate
+/// and kernel constants; `c_seg` is the shared unit-stride cost segment
+/// for this (column, group) (`g` values). `quad` is caller scratch of
+/// at least `4·g` values; on return, for every lane `t` with
+/// `active[t]`, `quad[4·k + t]` holds the gradient contribution
+/// `t_{ij}` for row `range.start + k` of problem `t` — the caller
+/// applies `grad_alpha_t[range.start + k] += quad[4·k + t]` itself
+/// (each element receives exactly one add, the same single add the
+/// scalar kernel performs), because the four problems' gradients live
+/// in four different vectors. Inactive lanes (zero groups) get no
+/// defined `quad` contents and must receive no gradient adds, exactly
+/// like the scalar kernel's early return.
+///
+/// Returns per-lane `(ψ, col_mass, active)`; lane `t`'s values are
+/// bit-identical to a scalar `group_grad_contrib` call for problem `t`
+/// on column `j` — each lane's `zsq`/`t`/`col_mass` chains advance over
+/// ascending `i` exactly like the scalar kernel's, and there is no
+/// cross-lane fold at all (the lanes belong to different problems).
+///
+/// Must not be called with `Dispatch::Scalar`.
+pub fn batch_quad_contrib(
+    dispatch: Dispatch,
+    alphas: &[&[f64]; LANES],
+    beta4: &[f64; LANES],
+    c_seg: &[f64],
+    range: Range<usize>,
+    consts4: &[KernelConsts; LANES],
+    quad: &mut [f64],
+) -> ([f64; LANES], [f64; LANES], [bool; LANES]) {
+    match dispatch {
+        Dispatch::Scalar => unreachable!("scalar dispatch never reaches the quad kernel"),
+        Dispatch::Portable => {
+            batch_quad_generic::<Portable4>(alphas, beta4, c_seg, range, consts4, quad)
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `group_quad_contrib`.
+        Dispatch::Avx2 => unsafe { batch_quad_avx2(alphas, beta4, c_seg, range, consts4, quad) },
+    }
+}
+
 /// Snapshot norms of one group over a quad of [`LANES`] columns — the
 /// vector form of the `recompute_snapshots` inner loop: per-lane
 /// `(Σ[f]₊², Σf², Σ[f]₋²)` chains over ascending `i`, bit-identical to
@@ -121,6 +169,19 @@ unsafe fn group_quad_avx2(
     quad: &mut [f64],
 ) -> ([f64; LANES], [f64; LANES]) {
     group_quad_generic::<super::lane::Avx2>(alpha, beta4, tile, range, consts, grad_alpha, quad)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn batch_quad_avx2(
+    alphas: &[&[f64]; LANES],
+    beta4: &[f64; LANES],
+    c_seg: &[f64],
+    range: Range<usize>,
+    consts4: &[KernelConsts; LANES],
+    quad: &mut [f64],
+) -> ([f64; LANES], [f64; LANES], [bool; LANES]) {
+    batch_quad_generic::<super::lane::Avx2>(alphas, beta4, c_seg, range, consts4, quad)
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -227,6 +288,91 @@ fn group_quad_generic<V: Lanes>(
         mass4[t] = mass;
     }
     (psi4, mass4)
+}
+
+/// The generic batched-problem kernel body. Lane `t` runs problem `t`'s
+/// scalar arithmetic; the cost element is splatted across lanes (one
+/// read per element for all four problems — the whole point of the
+/// batched oracle), and there is no cross-lane fold.
+#[inline(always)]
+fn batch_quad_generic<V: Lanes>(
+    alphas: &[&[f64]; LANES],
+    beta4: &[f64; LANES],
+    c_seg: &[f64],
+    range: Range<usize>,
+    consts4: &[KernelConsts; LANES],
+    quad: &mut [f64],
+) -> ([f64; LANES], [f64; LANES], [bool; LANES]) {
+    let start = range.start;
+    let g = range.len();
+    debug_assert_eq!(c_seg.len(), g);
+    debug_assert!(quad.len() >= LANES * g);
+    for a in alphas {
+        debug_assert!(a.len() >= start + g);
+    }
+    let beta_v = V::from_array(*beta4);
+    let zero = V::splat(0.0);
+    // Pass 1: per-lane f = α_i + β_j − c_ij over the shared column, [f]₊
+    // into `quad`, per-lane zsq chains over ascending i.
+    let mut zsq_v = zero;
+    for k in 0..g {
+        let a4 = V::from_array(std::array::from_fn(|t| alphas[t][start + k]));
+        let f = a4.add(beta_v).sub(V::splat(c_seg[k]));
+        let fp = f.max(zero);
+        fp.store(&mut quad[LANES * k..]);
+        zsq_v = zsq_v.add(fp.mul(fp));
+    }
+    let zsq = zsq_v.to_array();
+    let active: [bool; LANES] = std::array::from_fn(|t| zsq[t] > consts4[t].tau_sq);
+    let n_active = active.iter().filter(|&&a| a).count();
+    let mut psi4 = [0.0; LANES];
+    let mut mass4 = [0.0; LANES];
+    if n_active == 0 {
+        return (psi4, mass4, active);
+    }
+    if n_active == LANES {
+        // Pass 2, all lanes active: t = scale·[f]₊ per lane (per-lane
+        // scale from each problem's own constants), written back into
+        // `quad` for the caller's per-problem gradient adds; col_mass
+        // chains per lane over ascending i.
+        let mut scale4 = [0.0; LANES];
+        for t in 0..LANES {
+            let z = zsq[t].sqrt();
+            let slack = z - consts4[t].tau;
+            scale4[t] = slack * consts4[t].inv_lq / z;
+            psi4[t] = slack * slack * consts4[t].half_inv_lq;
+        }
+        let scale_v = V::from_array(scale4);
+        let mut mass_v = zero;
+        for k in 0..g {
+            let tv = scale_v.mul(V::load(&quad[LANES * k..]));
+            mass_v = mass_v.add(tv);
+            tv.store(&mut quad[LANES * k..]);
+        }
+        mass4 = mass_v.to_array();
+        return (psi4, mass4, active);
+    }
+    // Mixed activity: scalar pass 2 per active lane (inactive lanes
+    // contribute nothing, exactly like the scalar kernel's early
+    // return — their `quad` entries are left as [f]₊ and must not be
+    // read by the caller).
+    for t in 0..LANES {
+        if !active[t] {
+            continue;
+        }
+        let z = zsq[t].sqrt();
+        let slack = z - consts4[t].tau;
+        let scale = slack * consts4[t].inv_lq / z;
+        psi4[t] = slack * slack * consts4[t].half_inv_lq;
+        let mut mass = 0.0;
+        for k in 0..g {
+            let tv = scale * quad[LANES * k + t];
+            quad[LANES * k + t] = tv;
+            mass += tv;
+        }
+        mass4[t] = mass;
+    }
+    (psi4, mass4, active)
 }
 
 #[inline(always)]

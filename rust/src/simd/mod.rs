@@ -55,7 +55,7 @@
 mod kernel;
 mod lane;
 
-pub use kernel::{group_quad_contrib, snapshot_quad, sub_into};
+pub use kernel::{batch_quad_contrib, group_quad_contrib, snapshot_quad, sub_into};
 
 /// Columns processed per vector kernel call (one lane per column).
 pub const LANES: usize = 4;
@@ -271,6 +271,114 @@ mod tests {
                         "grad_alpha[{i}] case {case} ({})",
                         dispatch.name()
                     );
+                }
+            }
+        }
+    }
+
+    /// The batched-problem kernel (lanes = problems, one shared column)
+    /// must reproduce per-problem scalar calls bitwise: same ψ, same
+    /// column masses, same gradient contributions — for fully active,
+    /// fully inactive and mixed-activity lane patterns under *different*
+    /// per-lane (γ, ρ) constants.
+    #[test]
+    fn batch_kernel_matches_scalar_bitwise() {
+        let params =
+            [(1.0, 0.5), (0.3, 0.2), (2.5, 0.9), (1.0, 0.05)].map(|(g, r)| DualParams::new(g, r));
+        let consts4: [KernelConsts; LANES] = std::array::from_fn(|t| KernelConsts::new(&params[t]));
+        let mut rng = Pcg64::new(0xBA7C);
+        let g = 6usize;
+        let start = 2usize;
+        let m = start + g + 3;
+        let backends: Vec<Dispatch> = {
+            let mut b = vec![Dispatch::Portable];
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2") {
+                b.push(Dispatch::Avx2);
+            }
+            b
+        };
+        for case in 0..64 {
+            // Four independent dual iterates over ONE shared column.
+            let alphas: Vec<Vec<f64>> = (0..LANES)
+                .map(|_| (0..m).map(|_| rng.uniform(-0.4, 0.6)).collect())
+                .collect();
+            let bias = [-1.5, 0.0, 1.0, rng.uniform(-1.0, 1.0)][case % 4];
+            let beta4: [f64; 4] = std::array::from_fn(|_| bias + rng.uniform(-0.6, 0.8));
+            let col: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let c_seg = &col[start..start + g];
+            // Scalar reference: one group_grad_contrib per problem.
+            let mut ga_ref: Vec<Vec<f64>> = vec![vec![0.0; m]; LANES];
+            let mut scratch = vec![0.0; g];
+            let mut psi_ref = [0.0; LANES];
+            let mut mass_ref = [0.0; LANES];
+            for t in 0..LANES {
+                let (psi, mass) = group_grad_contrib(
+                    &alphas[t],
+                    beta4[t],
+                    c_seg,
+                    start..start + g,
+                    &consts4[t],
+                    &mut ga_ref[t],
+                    &mut scratch,
+                );
+                psi_ref[t] = psi;
+                mass_ref[t] = mass;
+            }
+            for &dispatch in &backends {
+                let mut quad = vec![0.0; LANES * g];
+                let alpha_refs: [&[f64]; LANES] = std::array::from_fn(|t| alphas[t].as_slice());
+                let (psi, mass, active) = batch_quad_contrib(
+                    dispatch,
+                    &alpha_refs,
+                    &beta4,
+                    c_seg,
+                    start..start + g,
+                    &consts4,
+                    &mut quad,
+                );
+                // Apply the caller-side gradient adds.
+                let mut ga: Vec<Vec<f64>> = vec![vec![0.0; m]; LANES];
+                for t in 0..LANES {
+                    if !active[t] {
+                        continue;
+                    }
+                    for k in 0..g {
+                        ga[t][start + k] += quad[LANES * k + t];
+                    }
+                }
+                for t in 0..LANES {
+                    assert_eq!(
+                        psi[t].to_bits(),
+                        psi_ref[t].to_bits(),
+                        "psi lane {t} case {case} ({})",
+                        dispatch.name()
+                    );
+                    assert_eq!(
+                        mass[t].to_bits(),
+                        mass_ref[t].to_bits(),
+                        "mass lane {t} case {case} ({})",
+                        dispatch.name()
+                    );
+                    assert_eq!(active[t], psi_ref[t] != 0.0 || mass_ref[t] != 0.0 || {
+                        // A lane is active iff the scalar kernel passed the
+                        // zero-group gate; reconstruct it from the inputs.
+                        let mut zsq = 0.0;
+                        for k in 0..g {
+                            let f = alphas[t][start + k] + beta4[t] - c_seg[k];
+                            let fp = if f > 0.0 { f } else { 0.0 };
+                            zsq += fp * fp;
+                        }
+                        zsq > consts4[t].tau_sq
+                    });
+                    for i in 0..m {
+                        assert_eq!(
+                            ga[t][i].to_bits(),
+                            ga_ref[t][i].to_bits(),
+                            "grad_alpha[{i}] lane {t} case {case} ({})",
+                            dispatch.name()
+                        );
+                    }
                 }
             }
         }

@@ -19,7 +19,7 @@
 //! every `step`/`run` call drives the same worker set through the
 //! oracle it is handed.
 
-use super::linesearch::{strong_wolfe, WolfeOptions};
+use super::linesearch::{WolfeMachine, WolfeOptions, WolfePoll};
 use super::{StepStatus, StopReason};
 use crate::linalg;
 use crate::ot::dual::DualOracle;
@@ -53,7 +53,43 @@ impl Default for LbfgsOptions {
     }
 }
 
+/// What the caller must do next while driving an [`Lbfgs`] pump.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LbfgsStatus {
+    /// Evaluate `f`/`∇f` at [`Lbfgs::pending`] and feed the pair back
+    /// through [`Lbfgs::supply`].
+    NeedEval,
+    /// The initial iterate's value and gradient are now in place
+    /// (returned by the first `supply` of a [`Lbfgs::deferred`] solver;
+    /// no iteration has run yet).
+    Seeded,
+    /// One full L-BFGS iteration completed.
+    Iterated,
+    /// A stop condition fired; no further evaluations are needed.
+    Stopped(StopReason),
+}
+
+/// Solver phase for the poll-driven evaluation pump.
+enum Phase {
+    /// Waiting for `f`/`∇f` at the initial iterate.
+    Seed,
+    /// Between iterations: the next `advance` runs the iteration head
+    /// (stop checks, search direction) and starts a line search.
+    Ready,
+    /// Inside a line search along `dir`.
+    Searching { dir: Vec<f64>, machine: WolfeMachine },
+}
+
 /// Resumable L-BFGS state.
+///
+/// Two driving modes share one implementation of the math:
+/// [`Lbfgs::step`]/[`Lbfgs::run`] pull evaluations from an oracle the
+/// caller hands in (the sequential path), while
+/// [`Lbfgs::advance`]/[`Lbfgs::supply`] invert control so an external
+/// driver can fuse the oracle evaluations of several independent
+/// solvers into one pass (the batched path, [`crate::ot::batch`]).
+/// `step` is itself a pump over `advance`/`supply`, so the two modes
+/// perform bit-identical arithmetic by construction.
 pub struct Lbfgs {
     opts: LbfgsOptions,
     x: Vec<f64>,
@@ -64,6 +100,9 @@ pub struct Lbfgs {
     rho_mem: VecDeque<f64>,
     iter: usize,
     stopped: Option<StopReason>,
+    phase: Phase,
+    /// The point whose `f`/`∇f` the next `supply` call expects.
+    x_trial: Vec<f64>,
 }
 
 impl Lbfgs {
@@ -76,20 +115,39 @@ impl Lbfgs {
     /// heuristic, so a warm start close to the optimum converges in a
     /// handful of iterations.
     pub fn new(x0: Vec<f64>, opts: LbfgsOptions, oracle: &mut dyn DualOracle) -> Self {
+        let mut solver = Lbfgs::deferred(x0, opts);
+        let mut g = vec![0.0; solver.x.len()];
+        let f = oracle.eval(&solver.x_trial, &mut g);
+        solver.supply(f, &g);
+        solver
+    }
+
+    /// Initialize at `x0` *without* evaluating: the solver starts in the
+    /// seed phase and the first [`Self::supply`] must carry `f`/`∇f` at
+    /// `x0` (evaluated at [`Self::pending`]). Used by the batched driver
+    /// to fold the K initial evaluations into one fused pass.
+    pub fn deferred(x0: Vec<f64>, opts: LbfgsOptions) -> Self {
         debug_assert!(x0.iter().all(|v| v.is_finite()), "non-finite warm-start iterate");
-        let mut g = vec![0.0; x0.len()];
-        let f = oracle.eval(&x0, &mut g);
+        let n = x0.len();
         Lbfgs {
             opts,
+            x_trial: x0.clone(),
             x: x0,
-            f,
-            g,
+            f: f64::NAN,
+            g: vec![0.0; n],
             s_mem: VecDeque::new(),
             y_mem: VecDeque::new(),
             rho_mem: VecDeque::new(),
             iter: 0,
             stopped: None,
+            phase: Phase::Seed,
         }
+    }
+
+    /// The iterate whose `f`/`∇f` the next [`Self::supply`] call expects
+    /// (only meaningful after `advance` returned [`LbfgsStatus::NeedEval`]).
+    pub fn pending(&self) -> &[f64] {
+        &self.x_trial
     }
 
     /// Current iterate.
@@ -154,18 +212,26 @@ impl Lbfgs {
         q
     }
 
-    /// One L-BFGS iteration. Returns `Continue` or a terminal status.
-    pub fn step(&mut self, oracle: &mut dyn DualOracle) -> StepStatus {
+    /// Drive the pump forward without evaluating: returns `NeedEval`
+    /// when an oracle evaluation at [`Self::pending`] is required, or a
+    /// terminal `Stopped`. Running the iteration head (stop checks +
+    /// search direction) happens here; finishing an iteration happens in
+    /// [`Self::supply`].
+    pub fn advance(&mut self) -> LbfgsStatus {
         if let Some(r) = self.stopped {
-            return StepStatus::Stopped(r);
+            return LbfgsStatus::Stopped(r);
+        }
+        match self.phase {
+            Phase::Seed | Phase::Searching { .. } => return LbfgsStatus::NeedEval,
+            Phase::Ready => {}
         }
         if linalg::nrm_inf(&self.g) <= self.opts.gtol {
             self.stopped = Some(StopReason::GradTol);
-            return StepStatus::Stopped(StopReason::GradTol);
+            return LbfgsStatus::Stopped(StopReason::GradTol);
         }
         if self.iter >= self.opts.max_iters {
             self.stopped = Some(StopReason::MaxIters);
-            return StepStatus::Stopped(StopReason::MaxIters);
+            return LbfgsStatus::Stopped(StopReason::MaxIters);
         }
 
         let mut dir = self.search_direction();
@@ -180,7 +246,7 @@ impl Lbfgs {
             dphi0 = linalg::dot(&self.g, &dir);
             if dphi0 >= 0.0 {
                 self.stopped = Some(StopReason::GradTol);
-                return StepStatus::Stopped(StopReason::GradTol);
+                return LbfgsStatus::Stopped(StopReason::GradTol);
             }
         }
 
@@ -191,27 +257,64 @@ impl Lbfgs {
             1.0
         };
 
-        let ls = strong_wolfe(
-            oracle,
-            &self.x,
-            self.f,
-            &self.g,
-            &dir,
-            init_step,
-            &self.opts.wolfe,
-        );
-        let ls = match ls {
-            Some(r) => r,
+        let machine = match WolfeMachine::new(self.f, dphi0, init_step, &self.opts.wolfe) {
+            Some(m) => m,
             None => {
                 self.stopped = Some(StopReason::LineSearchFailed);
-                return StepStatus::Stopped(StopReason::LineSearchFailed);
+                return LbfgsStatus::Stopped(StopReason::LineSearchFailed);
             }
         };
+        self.set_trial(machine.pending_step(), &dir);
+        self.phase = Phase::Searching { dir, machine };
+        LbfgsStatus::NeedEval
+    }
 
+    /// `x_trial = x + t·dir` (same update as the line search's `φ`).
+    fn set_trial(&mut self, t: f64, dir: &[f64]) {
+        for ((xi, &x0i), &di) in self.x_trial.iter_mut().zip(&self.x).zip(dir) {
+            *xi = x0i + t * di;
+        }
+    }
+
+    /// Feed the `f`/`∇f` pair evaluated at [`Self::pending`] into the
+    /// pump. Returns `Seeded` after the initial evaluation, `NeedEval`
+    /// when the line search wants another point, `Iterated` when one
+    /// full iteration just completed, or a terminal `Stopped`.
+    pub fn supply(&mut self, f: f64, grad: &[f64]) -> LbfgsStatus {
+        debug_assert_eq!(grad.len(), self.x.len());
+        match std::mem::replace(&mut self.phase, Phase::Ready) {
+            Phase::Seed => {
+                self.f = f;
+                self.g.copy_from_slice(grad);
+                LbfgsStatus::Seeded
+            }
+            Phase::Ready => panic!("Lbfgs::supply called without a pending evaluation"),
+            Phase::Searching { dir, mut machine } => {
+                let step = machine.pending_step();
+                let dphit = linalg::dot(grad, &dir);
+                match machine.advance(f, dphit) {
+                    WolfePoll::Eval(t) => {
+                        self.set_trial(t, &dir);
+                        self.phase = Phase::Searching { dir, machine };
+                        LbfgsStatus::NeedEval
+                    }
+                    WolfePoll::Accept { step: _, f: ft } => self.finish_iteration(dir, step, ft, grad),
+                    WolfePoll::Fail => {
+                        self.stopped = Some(StopReason::LineSearchFailed);
+                        LbfgsStatus::Stopped(StopReason::LineSearchFailed)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Accepted line-search point: update curvature memory, iterate, and
+    /// run the ftol check. `grad` is `∇f` at the accepted point.
+    fn finish_iteration(&mut self, dir: Vec<f64>, step: f64, ft: f64, grad: &[f64]) -> LbfgsStatus {
         // Update memory with s = t·d, y = g_new − g_old.
         let mut s = dir;
-        linalg::scal(ls.step, &mut s);
-        let y = linalg::sub(&ls.grad, &self.g);
+        linalg::scal(step, &mut s);
+        let y: Vec<f64> = grad.iter().zip(&self.g).map(|(&a, &b)| a - b).collect();
         let sy = linalg::dot(&s, &y);
         if sy > 1e-12 * linalg::nrm2(&s) * linalg::nrm2(&y) {
             if self.s_mem.len() == self.opts.memory {
@@ -228,16 +331,38 @@ impl Lbfgs {
         for (xi, &si) in self.x.iter_mut().zip(&s) {
             *xi += si;
         }
-        self.f = ls.f;
-        self.g = ls.grad;
+        self.f = ft;
+        self.g.copy_from_slice(grad);
         self.iter += 1;
 
         let fscale = self.f.abs().max(f_prev.abs()).max(1.0);
         if f_prev - self.f <= self.opts.ftol * fscale {
             self.stopped = Some(StopReason::FTol);
-            return StepStatus::Stopped(StopReason::FTol);
+            return LbfgsStatus::Stopped(StopReason::FTol);
         }
-        StepStatus::Continue
+        LbfgsStatus::Iterated
+    }
+
+    /// One L-BFGS iteration. Returns `Continue` or a terminal status.
+    /// Pump loop over [`Self::advance`]/[`Self::supply`].
+    pub fn step(&mut self, oracle: &mut dyn DualOracle) -> StepStatus {
+        let mut gbuf = vec![0.0; self.x.len()];
+        loop {
+            match self.advance() {
+                LbfgsStatus::NeedEval => {
+                    let f = oracle.eval(&self.x_trial, &mut gbuf);
+                    match self.supply(f, &gbuf) {
+                        LbfgsStatus::Iterated => return StepStatus::Continue,
+                        LbfgsStatus::Stopped(r) => return StepStatus::Stopped(r),
+                        LbfgsStatus::Seeded | LbfgsStatus::NeedEval => {}
+                    }
+                }
+                LbfgsStatus::Stopped(r) => return StepStatus::Stopped(r),
+                LbfgsStatus::Seeded | LbfgsStatus::Iterated => {
+                    unreachable!("advance never yields Seeded/Iterated")
+                }
+            }
+        }
     }
 
     /// Run until a stop condition fires; returns the reason.
@@ -394,5 +519,49 @@ mod tests {
         // Non-smooth kink: either hits the cap or stalls in line search.
         assert!(matches!(reason, StopReason::MaxIters | StopReason::LineSearchFailed));
         assert!(solver.iterations() <= 3);
+    }
+
+    #[test]
+    fn deferred_pump_matches_eager_run_bitwise() {
+        // Driving the solver externally through advance/supply must
+        // reproduce the oracle-pulling path bit-for-bit: same iterates,
+        // same objective, same evaluation count.
+        let mk = || FnOracle {
+            dim: 2,
+            stats: OracleStats::default(),
+            f: |x: &[f64], g: &mut [f64]| {
+                let (a, b) = (x[0], x[1]);
+                g[0] = -2.0 * (1.0 - a) - 400.0 * a * (b - a * a);
+                g[1] = 200.0 * (b - a * a);
+                (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2)
+            },
+        };
+        let opts = LbfgsOptions { max_iters: 200, ftol: 1e-14, ..Default::default() };
+
+        let mut o1 = mk();
+        let mut s1 = Lbfgs::new(vec![-1.2, 1.0], opts.clone(), &mut o1);
+        let r1 = s1.run(&mut o1);
+
+        let mut o2 = mk();
+        let mut s2 = Lbfgs::deferred(vec![-1.2, 1.0], opts);
+        let mut g = vec![0.0; 2];
+        let r2 = loop {
+            match s2.advance() {
+                LbfgsStatus::NeedEval => {
+                    let x = s2.pending().to_vec();
+                    let f = o2.eval(&x, &mut g);
+                    if let LbfgsStatus::Stopped(r) = s2.supply(f, &g) {
+                        break r;
+                    }
+                }
+                LbfgsStatus::Stopped(r) => break r,
+                LbfgsStatus::Seeded | LbfgsStatus::Iterated => unreachable!(),
+            }
+        };
+        assert_eq!(r1, r2);
+        assert_eq!(s1.x(), s2.x());
+        assert_eq!(s1.f().to_bits(), s2.f().to_bits());
+        assert_eq!(s1.iterations(), s2.iterations());
+        assert_eq!(o1.stats.evals, o2.stats.evals);
     }
 }

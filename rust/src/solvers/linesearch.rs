@@ -52,10 +52,168 @@ impl Phi<'_, '_> {
     }
 }
 
+/// What the caller must do next while driving a [`WolfeMachine`].
+#[derive(Clone, Copy, Debug)]
+pub enum WolfePoll {
+    /// Evaluate `φ(t)`/`φ'(t)` at this trial step and feed the pair back
+    /// through [`WolfeMachine::advance`].
+    Eval(f64),
+    /// The point just evaluated satisfies the strong Wolfe conditions;
+    /// the caller's last gradient buffer holds `∇f` at the accepted
+    /// iterate.
+    Accept { step: f64, f: f64 },
+    /// No acceptable step within the evaluation budget.
+    Fail,
+}
+
+#[derive(Clone, Copy)]
+enum WState {
+    /// Bracketing phase (Algorithm 3.5): expanding trial steps until a
+    /// bracket is found or a step is accepted.
+    Bracket { iter: usize, t_prev: f64, f_prev: f64, dphi_prev: f64 },
+    /// Zoom phase (Algorithm 3.6): shrinking `[lo, hi]`.
+    Zoom { remaining: usize, t_lo: f64, f_lo: f64, dphi_lo: f64, t_hi: f64, f_hi: f64 },
+    Done,
+}
+
+/// Poll-driven strong-Wolfe search: the *caller* owns `φ` evaluation, so
+/// several searches over independent problems can share one fused oracle
+/// pass (the batched multi-problem driver in [`crate::ot::batch`]). The
+/// transition logic is the single implementation of the Wolfe conditions
+/// in this crate — [`strong_wolfe`] is a synchronous pump over it, so the
+/// sequential and batched paths cannot drift apart.
+pub struct WolfeMachine {
+    opts: WolfeOptions,
+    f0: f64,
+    dphi0: f64,
+    pending: f64,
+    state: WState,
+}
+
+impl WolfeMachine {
+    /// Start a search from `φ(0) = f0`, `φ'(0) = dphi0`. Returns `None`
+    /// when `dphi0` is not a descent slope (or the budget is zero) —
+    /// exactly the cases where [`strong_wolfe`] returns `None` without
+    /// evaluating the oracle.
+    pub fn new(f0: f64, dphi0: f64, init_step: f64, opts: &WolfeOptions) -> Option<Self> {
+        if dphi0 >= 0.0 || opts.max_evals == 0 {
+            return None;
+        }
+        Some(WolfeMachine {
+            opts: *opts,
+            f0,
+            dphi0,
+            pending: init_step.min(opts.step_max),
+            state: WState::Bracket { iter: 0, t_prev: 0.0, f_prev: f0, dphi_prev: dphi0 },
+        })
+    }
+
+    /// The trial step whose `φ`/`φ'` values the next [`Self::advance`]
+    /// call expects.
+    pub fn pending_step(&self) -> f64 {
+        self.pending
+    }
+
+    /// Consume the evaluation at [`Self::pending_step`] and return the
+    /// next action.
+    pub fn advance(&mut self, ft: f64, dphit: f64) -> WolfePoll {
+        let t = self.pending;
+        match self.state {
+            WState::Bracket { iter, t_prev, f_prev, dphi_prev } => {
+                let armijo_ok = ft <= self.f0 + self.opts.c1 * t * self.dphi0;
+                if !armijo_ok || (iter > 0 && ft >= f_prev) {
+                    self.state = WState::Zoom {
+                        remaining: self.opts.max_evals,
+                        t_lo: t_prev,
+                        f_lo: f_prev,
+                        dphi_lo: dphi_prev,
+                        t_hi: t,
+                        f_hi: ft,
+                    };
+                    return self.zoom_trial();
+                }
+                if dphit.abs() <= -self.opts.c2 * self.dphi0 {
+                    self.state = WState::Done;
+                    return WolfePoll::Accept { step: t, f: ft };
+                }
+                if dphit >= 0.0 {
+                    self.state = WState::Zoom {
+                        remaining: self.opts.max_evals,
+                        t_lo: t,
+                        f_lo: ft,
+                        dphi_lo: dphit,
+                        t_hi: t_prev,
+                        f_hi: f_prev,
+                    };
+                    return self.zoom_trial();
+                }
+                let t_next = (2.0 * t).min(self.opts.step_max);
+                if (t_next >= self.opts.step_max && iter > 3) || iter + 1 >= self.opts.max_evals {
+                    self.state = WState::Done;
+                    return WolfePoll::Fail;
+                }
+                self.state =
+                    WState::Bracket { iter: iter + 1, t_prev: t, f_prev: ft, dphi_prev: dphit };
+                self.pending = t_next;
+                WolfePoll::Eval(t_next)
+            }
+            WState::Zoom { remaining, t_lo, f_lo, dphi_lo, t_hi, f_hi } => {
+                if ft > self.f0 + self.opts.c1 * t * self.dphi0 || ft >= f_lo {
+                    self.state = WState::Zoom { remaining, t_lo, f_lo, dphi_lo, t_hi: t, f_hi: ft };
+                } else {
+                    if dphit.abs() <= -self.opts.c2 * self.dphi0 {
+                        self.state = WState::Done;
+                        return WolfePoll::Accept { step: t, f: ft };
+                    }
+                    let (nt_hi, nf_hi) = if dphit * (t_hi - t_lo) >= 0.0 {
+                        (t_lo, f_lo)
+                    } else {
+                        (t_hi, f_hi)
+                    };
+                    self.state = WState::Zoom {
+                        remaining,
+                        t_lo: t,
+                        f_lo: ft,
+                        dphi_lo: dphit,
+                        t_hi: nt_hi,
+                        f_hi: nf_hi,
+                    };
+                }
+                self.zoom_trial()
+            }
+            WState::Done => WolfePoll::Fail,
+        }
+    }
+
+    /// Pick the next zoom trial point from the current bracket:
+    /// quadratic interpolation of `(f_lo, dphi_lo, f_hi)` safeguarded
+    /// into the middle 80% of the bracket, falling back to bisection.
+    fn zoom_trial(&mut self) -> WolfePoll {
+        let WState::Zoom { remaining, t_lo, f_lo, dphi_lo, t_hi, f_hi } = self.state else {
+            return WolfePoll::Fail;
+        };
+        if remaining == 0 || (t_hi - t_lo).abs() < 1e-16 * t_lo.abs().max(1.0) {
+            self.state = WState::Done;
+            return WolfePoll::Fail;
+        }
+        let mut t = quadratic_min(t_lo, f_lo, dphi_lo, t_hi, f_hi);
+        let lo = t_lo.min(t_hi);
+        let hi = t_lo.max(t_hi);
+        let margin = 0.1 * (hi - lo);
+        if !t.is_finite() || t < lo + margin || t > hi - margin {
+            t = 0.5 * (lo + hi);
+        }
+        self.state = WState::Zoom { remaining: remaining - 1, t_lo, f_lo, dphi_lo, t_hi, f_hi };
+        self.pending = t;
+        WolfePoll::Eval(t)
+    }
+}
+
 /// Find a step satisfying the strong Wolfe conditions along `dir` from
 /// `x0`. `f0`/`dphi0` are the value and directional derivative at 0
 /// (`dphi0` must be negative). Returns `None` when no acceptable step is
-/// found within the evaluation budget.
+/// found within the evaluation budget. Synchronous pump over
+/// [`WolfeMachine`].
 pub fn strong_wolfe(
     oracle: &mut dyn DualOracle,
     x0: &[f64],
@@ -66,9 +224,7 @@ pub fn strong_wolfe(
     opts: &WolfeOptions,
 ) -> Option<LineSearchResult> {
     let dphi0 = crate::linalg::dot(grad0, dir);
-    if dphi0 >= 0.0 {
-        return None; // not a descent direction
-    }
+    let mut machine = WolfeMachine::new(f0, dphi0, init_step, opts)?;
     let n = x0.len();
     let mut phi = Phi {
         oracle,
@@ -78,85 +234,18 @@ pub fn strong_wolfe(
         gt: vec![0.0; n],
         evals: 0,
     };
-
-    let mut t_prev = 0.0;
-    let mut f_prev = f0;
-    let mut dphi_prev = dphi0;
-    let mut t = init_step.min(opts.step_max);
-
-    for iter in 0..opts.max_evals {
+    let mut t = machine.pending_step();
+    loop {
         let (ft, dphit) = phi.eval(t);
-        let armijo_ok = ft <= f0 + opts.c1 * t * dphi0;
-        if !armijo_ok || (iter > 0 && ft >= f_prev) {
-            return zoom(&mut phi, f0, dphi0, t_prev, f_prev, dphi_prev, t, ft, dphit, opts);
-        }
-        if dphit.abs() <= -opts.c2 * dphi0 {
-            let evals = phi.evals;
-            return Some(LineSearchResult { step: t, f: ft, grad: phi.gt, evals });
-        }
-        if dphit >= 0.0 {
-            return zoom(&mut phi, f0, dphi0, t, ft, dphit, t_prev, f_prev, dphi_prev, opts);
-        }
-        t_prev = t;
-        f_prev = ft;
-        dphi_prev = dphit;
-        t = (2.0 * t).min(opts.step_max);
-        if t >= opts.step_max && iter > 3 {
-            break;
-        }
-    }
-    None
-}
-
-/// Zoom phase: maintain a bracket `[lo, hi]` containing an acceptable
-/// step; interpolate (bisection with a cubic first guess).
-#[allow(clippy::too_many_arguments)]
-fn zoom(
-    phi: &mut Phi,
-    f0: f64,
-    dphi0: f64,
-    mut t_lo: f64,
-    mut f_lo: f64,
-    mut dphi_lo: f64,
-    mut t_hi: f64,
-    mut f_hi: f64,
-    mut _dphi_hi: f64,
-    opts: &WolfeOptions,
-) -> Option<LineSearchResult> {
-    for _ in 0..opts.max_evals {
-        if (t_hi - t_lo).abs() < 1e-16 * t_lo.abs().max(1.0) {
-            break;
-        }
-        // Cubic-ish guess via quadratic interpolation of (f_lo, dphi_lo, f_hi),
-        // safeguarded into the middle 80% of the bracket.
-        let mut t = quadratic_min(t_lo, f_lo, dphi_lo, t_hi, f_hi);
-        let lo = t_lo.min(t_hi);
-        let hi = t_lo.max(t_hi);
-        let margin = 0.1 * (hi - lo);
-        if !t.is_finite() || t < lo + margin || t > hi - margin {
-            t = 0.5 * (lo + hi);
-        }
-        let (ft, dphit) = phi.eval(t);
-        if ft > f0 + opts.c1 * t * dphi0 || ft >= f_lo {
-            t_hi = t;
-            f_hi = ft;
-            _dphi_hi = dphit;
-        } else {
-            if dphit.abs() <= -opts.c2 * dphi0 {
+        match machine.advance(ft, dphit) {
+            WolfePoll::Eval(next) => t = next,
+            WolfePoll::Accept { step, f } => {
                 let evals = phi.evals;
-                return Some(LineSearchResult { step: t, f: ft, grad: phi.gt.clone(), evals });
+                return Some(LineSearchResult { step, f, grad: phi.gt, evals });
             }
-            if dphit * (t_hi - t_lo) >= 0.0 {
-                t_hi = t_lo;
-                f_hi = f_lo;
-                _dphi_hi = dphi_lo;
-            }
-            t_lo = t;
-            f_lo = ft;
-            dphi_lo = dphit;
+            WolfePoll::Fail => return None,
         }
     }
-    None
 }
 
 /// Minimizer of the quadratic through `(a, fa)` with slope `dfa` and `(b, fb)`.

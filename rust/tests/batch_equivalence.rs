@@ -1,0 +1,186 @@
+//! Batched-solve byte-equality, end to end: `solve_batched` over K
+//! independent (γ, ρ) problems on one dataset must reproduce each
+//! problem's sequential `fastot::solve` *byte-for-byte* — solution,
+//! objective, iteration count, stop reason and every `OracleStats`
+//! counter — across the full matrix of K ∈ {1, 3, 4, 7} (one lane, a
+//! partial group, a full SIMD group, full + remainder), scalar and
+//! runtime-dispatched vector kernels, 1 and 4 oracle threads, dense and
+//! factored cost backends, cold and warm starts. The one deliberately
+//! excluded counter is `tiles_built`: the fused pass shares tile
+//! staging across lanes, so the factored backend synthesizes each
+//! surviving segment once per group instead of once per lane — the
+//! whole point of batching, and a throughput diagnostic rather than
+//! solver output.
+//!
+//! The `GRPOT_BATCH_K=4` CI shard re-runs this suite (plus the serving
+//! engine suite) with env-defaulted batching on; every comparison here
+//! drives `solve_batched` explicitly, so the assertions stay genuine
+//! batched-vs-sequential crosses under any env.
+
+use grpot::linalg::Mat;
+use grpot::ot::batch::solve_batched;
+use grpot::ot::cost::CostMode;
+use grpot::ot::dual::OtProblem;
+use grpot::ot::fastot::{self, FastOtResult};
+use grpot::ot::regularizer::RegKind;
+use grpot::ot::solve::SolveOptions;
+use grpot::rng::Pcg64;
+use grpot::simd::SimdMode;
+use grpot::solvers::StopReason;
+
+/// One point cloud built on the requested cost backend: `l` groups of
+/// `g` source points, `n` targets, dimension `d`.
+fn point_problem(seed: u64, l: usize, g: usize, n: usize, d: usize, mode: CostMode) -> OtProblem {
+    let mut rng = Pcg64::new(seed);
+    let m = l * g;
+    let xs = Mat::from_fn(m, d, |_, _| rng.uniform(-1.0, 1.0));
+    let xt = Mat::from_fn(n, d, |_, _| rng.uniform(-1.0, 1.0));
+    let labels: Vec<usize> = (0..m).map(|i| i / g).collect();
+    OtProblem::try_from_points(&xs, &labels, &xt, mode).expect("problem build")
+}
+
+/// K heterogeneous lanes: every lane gets its own (γ, ρ) off a grid
+/// spanning the skip-heavy and dense regimes.
+fn grid_opts(k: usize, threads: usize, simd: SimdMode, warm: Option<&[f64]>) -> Vec<SolveOptions> {
+    const GAMMAS: [f64; 7] = [0.2, 0.7, 1.5, 4.0, 0.05, 9.0, 0.4];
+    const RHOS: [f64; 7] = [0.3, 0.6, 0.8, 0.45, 0.2, 0.7, 0.55];
+    (0..k)
+        .map(|i| {
+            let mut o = SolveOptions::new()
+                .gamma(GAMMAS[i % 7])
+                .rho(RHOS[i % 7])
+                .max_iters(60)
+                .threads(threads)
+                .simd(simd)
+                .regularizer(RegKind::GroupLasso);
+            if let Some(x0) = warm {
+                o = o.warm_start(x0.to_vec());
+            }
+            o
+        })
+        .collect()
+}
+
+/// Field-wise byte equality *except* `tiles_built` (see module doc).
+fn assert_lane_eq(batched: &FastOtResult, seq: &FastOtResult, what: &str) {
+    assert_eq!(batched.x, seq.x, "{what}: solution bytes");
+    assert_eq!(batched.dual_objective, seq.dual_objective, "{what}: objective");
+    assert_eq!(batched.iterations, seq.iterations, "{what}: iterations");
+    assert_eq!(batched.outer_rounds, seq.outer_rounds, "{what}: outer rounds");
+    assert_eq!(batched.stop, seq.stop, "{what}: stop reason");
+    assert_eq!(batched.method, seq.method, "{what}: method label");
+    let (a, b) = (&batched.stats, &seq.stats);
+    assert_eq!(a.evals, b.evals, "{what}: evals");
+    assert_eq!(a.grads_computed, b.grads_computed, "{what}: grads_computed");
+    assert_eq!(a.grads_skipped, b.grads_skipped, "{what}: grads_skipped");
+    assert_eq!(a.ub_checks, b.ub_checks, "{what}: ub_checks");
+    assert_eq!(a.ws_hits, b.ws_hits, "{what}: ws_hits");
+    assert_eq!(a.per_eval_grads, b.per_eval_grads, "{what}: per_eval_grads");
+}
+
+/// The acceptance-criterion matrix: every batched lane byte-equals its
+/// sequential solve at any K, dispatch, thread count, backend and
+/// start point.
+#[test]
+fn batched_matches_sequential_across_full_matrix() {
+    for mode in [CostMode::Dense, CostMode::Factored] {
+        let prob = point_problem(0xBA7C, 4, 3, 21, 3, mode);
+        let mut rng = Pcg64::new(7);
+        let x0: Vec<f64> = (0..prob.dim()).map(|_| rng.uniform(-0.2, 0.3)).collect();
+        for k in [1usize, 3, 4, 7] {
+            for threads in [1usize, 4] {
+                for simd in [SimdMode::Scalar, SimdMode::Auto] {
+                    for warm in [None, Some(&x0[..])] {
+                        let opts = grid_opts(k, threads, simd, warm);
+                        let batched = solve_batched(&prob, &opts).expect("batched solve");
+                        assert_eq!(batched.len(), k);
+                        for (i, opt) in opts.iter().enumerate() {
+                            let seq = fastot::solve(&prob, opt).expect("sequential solve");
+                            let what = format!(
+                                "{mode:?} K={k} lane={i} threads={threads} simd={simd:?} warm={}",
+                                warm.is_some()
+                            );
+                            assert_lane_eq(&batched[i], &seq, &what);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Mixed convergence: lanes with wildly different iteration caps retire
+/// at different rounds, and the stragglers keep solving — every lane
+/// still byte-equals its sequential solve, early retirees included.
+#[test]
+fn straggler_lanes_survive_early_retirees() {
+    let prob = point_problem(0xBA7D, 3, 4, 17, 2, CostMode::Dense);
+    let caps = [3usize, 80, 9, 80];
+    let opts: Vec<SolveOptions> = caps
+        .iter()
+        .enumerate()
+        .map(|(i, &cap)| {
+            SolveOptions::new()
+                .gamma(0.4 + 0.3 * i as f64)
+                .rho(0.25 + 0.15 * i as f64)
+                .max_iters(cap)
+                .regularizer(RegKind::GroupLasso)
+        })
+        .collect();
+    let batched = solve_batched(&prob, &opts).expect("batched solve");
+    let mut stops = Vec::new();
+    for (i, opt) in opts.iter().enumerate() {
+        let seq = fastot::solve(&prob, opt).expect("sequential solve");
+        assert_lane_eq(&batched[i], &seq, &format!("straggler lane {i}"));
+        stops.push(batched[i].stop);
+    }
+    // The matrix is only meaningful if retirement really was staggered.
+    assert!(
+        stops.contains(&StopReason::MaxIters),
+        "at least one lane must hit its tiny cap: {stops:?}"
+    );
+    assert!(
+        stops.iter().any(|s| *s != StopReason::MaxIters),
+        "at least one lane must outlive the capped ones: {stops:?}"
+    );
+}
+
+/// Mid-batch cancellation: a cancelled lane retires at its first
+/// checkpoint exactly like its sequential solve would, and its
+/// batchmates are entirely undisturbed.
+#[test]
+fn cancelled_lane_matches_sequential_cancellation() {
+    let prob = point_problem(0xBA7E, 3, 3, 13, 2, CostMode::Factored);
+    let token = grpot::fault::CancelToken::new();
+    token.cancel();
+    let mut opts = grid_opts(4, 1, SimdMode::Auto, None);
+    opts[2] = opts[2].clone().cancel(token.clone());
+    let batched = solve_batched(&prob, &opts).expect("batched solve");
+    for (i, opt) in opts.iter().enumerate() {
+        let seq = fastot::solve(&prob, opt).expect("sequential solve");
+        assert_lane_eq(&batched[i], &seq, &format!("cancel lane {i}"));
+    }
+    assert_eq!(batched[2].stop, StopReason::Cancelled);
+    assert_eq!(batched[2].iterations, 0);
+}
+
+/// The `--tile-ring-kib` knob moves only tile *retention*: a factored
+/// batch squeezed through a deliberately tiny ring budget stays
+/// byte-equal to the default-budget batch — only `tiles_built` may
+/// grow (re-synthesis after eviction).
+#[test]
+fn tile_ring_budget_never_changes_solver_output() {
+    let prob = point_problem(0xBA7F, 4, 3, 19, 3, CostMode::Factored);
+    let base = grid_opts(4, 1, SimdMode::Auto, None);
+    let squeezed: Vec<SolveOptions> =
+        base.iter().map(|o| o.clone().tile_ring_kib(4)).collect();
+    let full = solve_batched(&prob, &base).expect("default budget");
+    let tiny = solve_batched(&prob, &squeezed).expect("tiny budget");
+    for i in 0..base.len() {
+        assert_lane_eq(&tiny[i], &full[i], &format!("ring lane {i}"));
+        assert!(
+            tiny[i].stats.tiles_built >= full[i].stats.tiles_built,
+            "lane {i}: a smaller ring can only re-synthesize more"
+        );
+    }
+}

@@ -15,12 +15,14 @@
 #   * bench_scale        — dense vs factored cost-backend memory sweep;
 #                          asserts the factored build solves under a
 #                          budget the dense matrix exceeds
+#   * bench_batch        — K-lane fused solve_batched vs K sequential
+#                          solves; asserts byte-equality before timing
 #
 # plus fig2_synthetic_classes for the paper's gain-vs-classes table,
 # whose rows now carry the skipped-group-fraction telemetry column,
 #
 # then collects every CSV the benches emitted into one machine-readable
-# JSON file (default: BENCH_PR9.json at the repo root; override with
+# JSON file (default: BENCH_PR10.json at the repo root; override with
 # GRPOT_BENCH_JSON). The JSON records the mode, so a smoke-mode CI run
 # is never mistaken for a real measurement.
 #
@@ -32,7 +34,7 @@ set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
 
-OUT="${GRPOT_BENCH_JSON:-$ROOT/BENCH_PR9.json}"
+OUT="${GRPOT_BENCH_JSON:-$ROOT/BENCH_PR10.json}"
 REPORT_DIR="${GRPOT_REPORT_DIR:-$ROOT/rust/reports}"
 export GRPOT_REPORT_DIR="$REPORT_DIR"
 
@@ -45,7 +47,7 @@ else
     MODE=full
 fi
 
-BENCHES=(bench_parallel bench_serve hotpath_microbench bench_scale fig2_synthetic_classes)
+BENCHES=(bench_parallel bench_serve hotpath_microbench bench_scale bench_batch fig2_synthetic_classes)
 for b in "${BENCHES[@]}"; do
     echo
     echo "==> bench ($MODE mode): $b"
@@ -56,7 +58,8 @@ done
 # every image this repo targets; if it is ever missing, fall back to a
 # stub JSON that still records mode + the CSV paths.
 CSVS=(bench_parallel bench_parallel_dispatch bench_parallel_simd bench_serve
-      hotpath_microbench hotpath_simd_speedup bench_scale fig2_synthetic_classes)
+      hotpath_microbench hotpath_simd_speedup bench_scale bench_batch
+      fig2_synthetic_classes)
 if command -v python3 >/dev/null 2>&1; then
     MODE="$MODE" OUT="$OUT" REPORT_DIR="$REPORT_DIR" CSVS="${CSVS[*]}" python3 - <<'PY'
 import csv, json, os

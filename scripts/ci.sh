@@ -22,6 +22,12 @@
 #      the env default, so every Auto-mode problem build streams
 #      synthesized tiles instead of the resident matrix — the dense
 #      default is exercised by every other run
+#   6c. GRPOT_BATCH_K=4 shard: the batch_equivalence matrix and the
+#      serving engine suite re-run with env-defaulted batching on, so
+#      the fused multi-lane solve path (and its byte-identity contract
+#      against sequential solves) is gated on every push; malformed
+#      GRPOT_BATCH_K / GRPOT_TILE_RING_KIB values must fail `grpot
+#      info` at launch (exit 2)
 #   7. GRPOT_REG={squared_l2,negentropy} shards: the regularizer env
 #      default is pushed through the trait-dispatched solver path while
 #      theorem2_equivalence re-runs alongside to prove the pinned
@@ -114,6 +120,23 @@ GRPOT_TRACE=full cargo test -q \
     --test simd_equivalence \
     --test observability
 
+step "cargo test -q (GRPOT_BATCH_K=4 batched-solve shard)"
+# The batched-equivalence matrix plus the serving engine re-run with
+# env-defaulted batching on: every coalescible engine job goes through
+# the fused multi-lane path, and each result must stay byte-identical
+# to its sequential solve. A malformed GRPOT_BATCH_K is a launch error.
+GRPOT_BATCH_K=4 cargo test -q \
+    --test batch_equivalence \
+    --test serve_engine
+if GRPOT_BATCH_K="zero-ish" ./target/release/grpot info >/dev/null 2>&1; then
+    echo "GRPOT_BATCH_K grammar gate failed: malformed value was accepted"
+    exit 1
+fi
+if GRPOT_TILE_RING_KIB="0" ./target/release/grpot info >/dev/null 2>&1; then
+    echo "GRPOT_TILE_RING_KIB grammar gate failed: zero budget was accepted"
+    exit 1
+fi
+
 step "cargo test -q (chaos shard: fault injection + cancellation + breaker)"
 cargo test -q --test chaos
 # Bit-exactness with the fault registry explicitly disarmed: the
@@ -146,6 +169,7 @@ BENCHES=(
     hotpath_microbench
     bench_parallel
     bench_scale
+    bench_batch
     xla_backend
     bench_serve
 )
